@@ -1,0 +1,113 @@
+//! Ablation driver — the paper's Table 5, Figure 4, and Tables 6/7 at a
+//! user-chosen scale (the `benches/` targets run the same studies at the
+//! fixed bench scale).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example ablations -- --study all
+//! ```
+//!
+//! Studies:
+//!
+//! * `n`       — candidate-count sweep (Table 5, top block)
+//! * `parts`   — drop L_t / L_kd / L_r / PNC (Table 5, middle block)
+//! * `index`   — optimal-assignment index histogram (Table 5, bottom)
+//! * `alpha`   — PNC threshold sweep (Figure 4)
+//! * `codebook`— KDE source-combination study (Table 6)
+//! * `init`    — assignment-init study: random/cosine/euclid/+ratio (Table 7)
+//! * `all`     — everything above
+
+use std::path::PathBuf;
+
+use vq4all::coordinator::Campaign;
+use vq4all::exp::{fig4, table5, table6_7};
+use vq4all::util::cli::Cli;
+use vq4all::util::config::CampaignConfig;
+
+fn main() -> anyhow::Result<()> {
+    vq4all::util::logging::init_from_env();
+    let args = Cli::new("ablations", "VQ4ALL ablation studies (Table 5, Fig 4, Tables 6/7)")
+        .opt("study", "all", "n | parts | index | alpha | codebook | init | all")
+        .opt("net", "mini_resnet18", "network under ablation")
+        .opt("steps", "100", "construction steps per run")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .parse()?;
+
+    let cfg = CampaignConfig {
+        steps: args.usize_or("steps", 100)?,
+        eval_interval: 0,
+        ..CampaignConfig::default()
+    };
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let campaign = Campaign::load(&dir, cfg)?;
+    let net = args.get_or("net", "mini_resnet18").to_string();
+    let study = args.get_or("study", "all").to_string();
+    let run = |s: &str| study == "all" || study == s;
+
+    if run("n") {
+        let n_max = campaign.manifest.config.n;
+        let mut ns = vec![1usize, 2, 4, 8];
+        ns.retain(|&v| v <= n_max);
+        if !ns.contains(&n_max) {
+            ns.push(n_max);
+        }
+        println!("== candidate-count sweep (Table 5 'n' block, net={net}) ==");
+        for r in table5::candidate_count(&campaign, &net, &ns)? {
+            println!("  {:<8} metric {:.4}", r.label, r.metric);
+        }
+    }
+
+    if run("parts") {
+        println!("\n== pipeline-part ablation (Table 5 'Part' block, net={net}) ==");
+        for r in table5::components(&campaign, &net)? {
+            if r.converged {
+                println!("  {:<8} metric {:.4}", r.label, r.metric);
+            } else {
+                println!("  {:<8} nc (diverged)", r.label);
+            }
+        }
+    }
+
+    if run("index") {
+        println!("\n== optimal-assignment index distribution (Table 5 'Index' block) ==");
+        let mass = table5::index_distribution(&campaign, &net)?;
+        for (i, m) in mass.iter().enumerate() {
+            println!("  bucket {i}: {:>5.1}%", m * 100.0);
+        }
+    }
+
+    if run("alpha") {
+        println!("\n== PNC threshold sweep (Figure 4, net={net}) ==");
+        let pts = fig4::sweep(&campaign, &net, &[0.9, 0.95, 0.99, 0.995, 0.999])?;
+        print!("{}", fig4::render(&net, &pts));
+    }
+
+    if run("codebook") {
+        println!("\n== codebook source-combination study (Table 6) ==");
+        let all: Vec<String> = campaign
+            .manifest
+            .networks
+            .iter()
+            .map(|n| n.name.clone())
+            .collect();
+        let combos: Vec<Vec<&str>> = (1..=all.len())
+            .map(|k| all[..k].iter().map(|s| s.as_str()).collect())
+            .collect();
+        let rows = table6_7::codebook_sources(&campaign, &net, &combos)?;
+        table6_7::render(&format!("Table 6 — codebook sources ({net})"), &rows).print();
+    }
+
+    if run("init") {
+        println!("\n== assignment-initialization study (Table 7) ==");
+        use vq4all::vq::assign::AssignInit;
+        let variants = [
+            (AssignInit::Random, false, "random"),
+            (AssignInit::Cosine, true, "cosine"),
+            (AssignInit::Euclid, false, "euclid (equal ratios)"),
+            (AssignInit::Euclid, true, "euclid + ratio init (Eq. 7)"),
+        ];
+        let rows = table6_7::assign_init(&campaign, &net, &variants)?;
+        table6_7::render(&format!("Table 7 — assignment init ({net})"), &rows).print();
+    }
+
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Load + compile every HLO artifact in the manifest — the fastest way
+//! to catch ops the xla_extension 0.5.1 text parser rejects (e.g. the
+//! `topk` attribute newer jax emits) before a campaign trips over them.
+//!
+//! ```bash
+//! cargo run --release --example check_artifacts
+//! ```
+
+use vq4all::runtime::{Manifest, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let dir = Manifest::default_dir();
+    let manifest = Manifest::load(&dir)?;
+    let rt = Runtime::cpu()?;
+    let mut ok = 0usize;
+    let mut failed = Vec::new();
+    for net in &manifest.networks {
+        for (name, spec) in &net.executables {
+            let path = manifest.path(&spec.hlo);
+            match rt.load(&path, spec) {
+                Ok(_) => {
+                    println!("OK   {}::{name}  ({} in / {} out)", net.name, spec.inputs.len(), spec.outputs.len());
+                    ok += 1;
+                }
+                Err(e) => {
+                    let msg = format!("{e}");
+                    let first = msg.lines().take(3).collect::<Vec<_>>().join(" | ");
+                    println!("FAIL {}::{name}: {first}", net.name);
+                    failed.push(format!("{}::{name}", net.name));
+                }
+            }
+        }
+    }
+    println!("\n{ok} artifacts compiled, {} failed", failed.len());
+    if !failed.is_empty() {
+        anyhow::bail!("failed artifacts: {failed:?}");
+    }
+    Ok(())
+}

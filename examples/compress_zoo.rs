@@ -1,0 +1,169 @@
+//! End-to-end driver (DESIGN.md §7): the full VQ4ALL system on the whole
+//! zoo — the run recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example compress_zoo
+//! ```
+//!
+//! Stages, all on the Rust/PJRT request path (python never runs here):
+//!
+//! 1. **Universal codebook** — rebuilt natively from the float zoo's
+//!    sub-vectors (KDE sample, §4.1) and cross-checked against the
+//!    python-exported codebook shipped in the artifacts.
+//! 2. **Campaign** — for every network: device-side candidate init
+//!    (Pallas distance kernel inside `init_assign`), the differentiable
+//!    construction loop (`train_step`, hundreds of AOT executions), the
+//!    PNC scheduler freezing assignments past alpha (Eq. 14), the hard
+//!    collapse, and `eval_hard`.
+//! 3. **Packing** — `log2 k`-bit codes to disk, whole-model size
+//!    accounting with the codebook amortized into ROM.
+//! 4. **Hardware story** — codebook I/O for this zoo under per-layer
+//!    DRAM vs universal ROM placement (Table 1's I/O column).
+
+use std::path::{Path, PathBuf};
+
+use vq4all::coordinator::{report, Campaign};
+use vq4all::rom::memsim::{switch_storm, CodebookPlacement, MemSim, NetCodebooks};
+use vq4all::tensor::io;
+use vq4all::util::cli::Cli;
+use vq4all::util::config::CampaignConfig;
+
+fn main() -> anyhow::Result<()> {
+    vq4all::util::logging::init_from_env();
+    let args = Cli::new("compress_zoo", "construct the whole zoo from one universal codebook")
+        .opt("steps", "200", "construction steps per network")
+        .opt("alpha", "0.99", "PNC freeze threshold (schedule-scaled; paper 0.9999)")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("out", "", "optional output directory for packed codes + report")
+        .opt("seed", "2024", "codebook sampling seed")
+        .flag("rust-codebook", "rebuild the codebook natively instead of using the python export")
+        .parse()?;
+
+    let cfg = CampaignConfig {
+        steps: args.usize_or("steps", 200)?,
+        alpha: args.f64_or("alpha", 0.99)?,
+        eval_interval: 0,
+        ..CampaignConfig::default()
+    };
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let mut campaign = Campaign::load(&dir, cfg)?;
+    let nets: Vec<String> = campaign
+        .manifest
+        .networks
+        .iter()
+        .map(|n| n.name.clone())
+        .collect();
+
+    println!(
+        "platform: {} | zoo: {:?}",
+        campaign.rt.platform(),
+        nets
+    );
+    println!(
+        "universal codebook: {}x{} = {} KiB, frozen (ROM-resident)",
+        campaign.manifest.config.k,
+        campaign.manifest.config.d,
+        campaign.manifest.config.k * campaign.manifest.config.d * 4 / 1024
+    );
+
+    // Stage 1 — the codebook. Default: the python-exported sample (so the
+    // artifacts' candidate tables match). `--rust-codebook` rebuilds it
+    // natively and reports the distribution shift vs the export.
+    let refs: Vec<&str> = nets.iter().map(|s| s.as_str()).collect();
+    let native = Campaign::build_codebook_from(&campaign.manifest, &refs, args.usize_or("seed", 2024)? as u64)?;
+    {
+        let a = campaign.codebook.as_f32()?;
+        let b = native.as_f32()?;
+        let (ma, mb) = (mean(a), mean(b));
+        let (sa, sb) = (std_dev(a, ma), std_dev(b, mb));
+        println!(
+            "codebook cross-check: python-export mean/std {ma:.4}/{sa:.4} vs rust-KDE {mb:.4}/{sb:.4}"
+        );
+    }
+    if args.has("rust-codebook") {
+        println!("using the natively rebuilt codebook for construction");
+        campaign.codebook = native;
+    }
+
+    // Stage 2+3 — the campaign.
+    let result = campaign.run(&refs)?;
+    report::table(&result).print();
+
+    let mut total_float = 0usize;
+    let mut total_packed = 0usize;
+    for n in &result.nets {
+        total_float += n.sizes.float_bytes + n.sizes.other_bytes;
+        total_packed += n.sizes.assign_bytes + n.sizes.other_bytes;
+    }
+    // The single ROM codebook is charged once for the whole zoo.
+    let zoo_ratio =
+        total_float as f64 / (total_packed + result.codebook_bytes) as f64;
+    println!(
+        "\nzoo totals: float {:.2} MiB -> packed {:.2} MiB + one {:.2} MiB ROM codebook = {:.1}x whole-zoo compression",
+        total_float as f64 / (1 << 20) as f64,
+        total_packed as f64 / (1 << 20) as f64,
+        result.codebook_bytes as f64 / (1 << 20) as f64,
+        zoo_ratio
+    );
+
+    // Stage 4 — codebook I/O under a task-switch storm for THIS zoo's
+    // geometry (what Table 1's I/O column abstracts).
+    let zoo_books: Vec<NetCodebooks> = result
+        .nets
+        .iter()
+        .map(|n| NetCodebooks {
+            name: n.name.clone(),
+            // per-layer VQ would need one codebook per compressed layer;
+            // approximate layers from group count (one book / 4096 groups).
+            layer_codebooks: vec![
+                campaign.manifest.config.k.min(256) * campaign.manifest.config.d * 4;
+                (n.codes.len() / 4096).max(2)
+            ],
+        })
+        .collect();
+    let sram = zoo_books
+        .iter()
+        .map(|b| b.layer_codebooks.iter().sum::<usize>())
+        .max()
+        .unwrap_or(0)
+        * 3
+        / 2;
+    let mut per_layer = MemSim::new(CodebookPlacement::PerLayerDram { sram_bytes: sram }, zoo_books.clone());
+    switch_storm(&mut per_layer, zoo_books.len(), 10, 5);
+    let mut rom = MemSim::new(CodebookPlacement::UniversalRom, zoo_books);
+    switch_storm(&mut rom, result.nets.len(), 10, 5);
+    println!(
+        "task-switch storm (10 rounds x 5 inferences): per-layer codebook loads {} ({:.1} MiB moved) vs universal-ROM loads {} — {}x vs 1x",
+        per_layer.report.codebook_loads,
+        per_layer.report.codebook_bytes_loaded as f64 / (1 << 20) as f64,
+        rom.report.codebook_loads,
+        per_layer.report.codebook_loads.max(1)
+    );
+
+    // Persist the deliverables.
+    let out = args.get_or("out", "");
+    if !out.is_empty() {
+        let out = Path::new(out);
+        std::fs::create_dir_all(out)?;
+        std::fs::write(out.join("report.json"), report::to_json(&result).to_string())?;
+        for n in &result.nets {
+            io::write_tensor(
+                &out.join(format!("{}.codes.vqt", n.name)),
+                &vq4all::tensor::Tensor::from_i32(
+                    &[n.codes.len()],
+                    n.codes.iter().map(|&c| c as i32).collect(),
+                ),
+            )?;
+        }
+        println!("report + packed codes written to {}", out.display());
+    }
+    Ok(())
+}
+
+fn mean(v: &[f32]) -> f64 {
+    v.iter().map(|&x| x as f64).sum::<f64>() / v.len().max(1) as f64
+}
+
+fn std_dev(v: &[f32], m: f64) -> f64 {
+    (v.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / v.len().max(1) as f64).sqrt()
+}

@@ -1,0 +1,56 @@
+//! Quickstart: construct one low-bit network (mini_mlp) from the frozen
+//! universal codebook and report accuracy + compression.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! This runs the full VQ4ALL pipeline end to end: device-side candidate
+//! initialization (Pallas distance kernel inside the `init_assign`
+//! artifact), the differentiable construction loop (`train_step`), the
+//! PNC scheduler freezing assignments past alpha, the hard collapse, and
+//! the packed-size accounting.
+
+use vq4all::coordinator::{report, Campaign};
+use vq4all::util::cli::Cli;
+use vq4all::util::config::CampaignConfig;
+
+fn main() -> anyhow::Result<()> {
+    vq4all::util::logging::init_from_env();
+    let args = Cli::new("quickstart", "construct mini_mlp with the universal codebook")
+        .opt("steps", "120", "construction steps")
+        .opt("alpha", "0.99", "PNC freeze threshold (schedule-scaled; paper 0.9999)")
+        .opt("net", "mini_mlp", "zoo network to construct")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .parse()?;
+
+    let cfg = CampaignConfig {
+        steps: args.usize_or("steps", 120)?,
+        alpha: args.f64_or("alpha", 0.99)?,
+        ..CampaignConfig::default()
+    };
+    let campaign = Campaign::load(std::path::Path::new(args.get_or("artifacts", "artifacts")), cfg)?;
+    println!(
+        "platform: {} | codebook: {}x{} ({} bytes, ROM-resident)",
+        campaign.rt.platform(),
+        campaign.manifest.config.k,
+        campaign.manifest.config.d,
+        campaign.manifest.config.k * campaign.manifest.config.d * 4
+    );
+
+    let net = args.get_or("net", "mini_mlp").to_string();
+    let result = campaign.run(&[&net])?;
+    report::table(&result).print();
+
+    let n = &result.nets[0];
+    println!(
+        "\n{}: float {:.3} -> VQ4ALL {:.3} at {:.1}x whole-model compression \
+         ({} packed assignment bytes, codebook amortized in ROM)",
+        n.name,
+        n.float_metric,
+        n.hard_metric,
+        n.sizes.ratio(),
+        n.sizes.assign_bytes
+    );
+    Ok(())
+}

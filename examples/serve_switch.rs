@@ -1,0 +1,145 @@
+//! Multi-network serving with zero-reload task switching (§3.2).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_switch
+//! ```
+//!
+//! Constructs several networks from the one universal codebook, then
+//! serves an interleaved request stream against their `infer_hard`
+//! artifacts through the router + dynamic batcher.  Because every
+//! network decodes from the same ROM-resident codebook, switching the
+//! active network costs zero codebook I/O — the storm at the end
+//! quantifies what per-layer codebooks would have paid instead.
+
+use std::path::PathBuf;
+
+use vq4all::coordinator::{Campaign, NetSession};
+use vq4all::serving::batcher::BatcherConfig;
+use vq4all::serving::server::Server;
+use vq4all::serving::switchsim::{compare, SwitchWorkload};
+use vq4all::util::cli::Cli;
+use vq4all::util::config::CampaignConfig;
+use vq4all::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    vq4all::util::logging::init_from_env();
+    let args = Cli::new("serve_switch", "serve many compressed nets from one ROM codebook")
+        .opt("steps", "80", "construction steps per network")
+        .opt("requests", "400", "total requests in the stream")
+        .opt("nets", "mini_mlp,mini_resnet18,mini_mobilenet", "networks to serve")
+        .opt("max-batch", "8", "batcher max batch")
+        .opt("linger-us", "200", "batcher max linger (virtual microseconds)")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .parse()?;
+
+    let cfg = CampaignConfig {
+        steps: args.usize_or("steps", 80)?,
+        eval_interval: 0,
+        ..CampaignConfig::default()
+    };
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let campaign = Campaign::load(&dir, cfg)?;
+    let nets: Vec<String> = args
+        .get_or("nets", "mini_mlp,mini_resnet18,mini_mobilenet")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+
+    // Phase 1 — construct each network (once, offline) and keep the
+    // packed codes + a live session for serving.
+    println!("constructing {} networks from the universal codebook...", nets.len());
+    let mut sessions: Vec<(NetSession, vq4all::tensor::Tensor)> = Vec::new();
+    for name in &nets {
+        let res = campaign.construct(name)?;
+        let mut sess = NetSession::new(&campaign.rt, &campaign.manifest, name, &campaign.codebook)?;
+        sess.set_others(&res.final_others)?; // codes pair with trained norms
+        let codes = sess.codes_tensor(&res.codes);
+        println!(
+            "  {name}: float {:.3} -> hard {:.3} at {:.1}x",
+            res.float_metric,
+            res.hard_metric,
+            res.sizes.ratio()
+        );
+        sessions.push((sess, codes));
+    }
+
+    // Phase 2 — serve an interleaved stream (bursty per-network arrivals
+    // force constant task switching).
+    let bc = BatcherConfig {
+        max_batch: args.usize_or("max-batch", 8)?,
+        max_linger_ns: args.usize_or("linger-us", 200)? as u64 * 1_000,
+    };
+    let sess_refs: Vec<(&mut NetSession, vq4all::tensor::Tensor)> = sessions
+        .iter_mut()
+        .map(|(s, c)| (s, c.clone()))
+        .collect();
+    let mut server = Server::new(sess_refs, bc);
+
+    let total = args.usize_or("requests", 400)?;
+    let mut rng = Rng::new(7);
+    let mut submitted = 0usize;
+    while submitted < total {
+        // bursts of 1..=6 requests to one network, then switch
+        let net = &nets[rng.below(nets.len())];
+        let burst = 1 + rng.below(6);
+        for _ in 0..burst.min(total - submitted) {
+            let row = rng.below(64);
+            server.submit(net, row)?;
+            submitted += 1;
+        }
+        server.tick(20_000); // 20us virtual inter-burst gap
+        while server.dispatch_one()? > 0 {}
+    }
+    let drained = server.drain_all()?;
+    println!(
+        "\nserved {} requests ({} drained at shutdown) across {} networks",
+        submitted, drained, nets.len()
+    );
+
+    println!("\n  network            served  batches  avg-batch  p50 lat(us)  p99 lat(us)");
+    for (name, st) in &server.stats {
+        let mut lat: Vec<f64> = st.latency_ns.clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| -> f64 {
+            if lat.is_empty() {
+                return 0.0;
+            }
+            lat[((lat.len() - 1) as f64 * p) as usize] / 1_000.0
+        };
+        println!(
+            "  {:<18} {:>6}  {:>7}  {:>9.2}  {:>11.1}  {:>11.1}",
+            name,
+            st.served,
+            st.batches,
+            st.served as f64 / st.batches.max(1) as f64,
+            pct(0.50),
+            pct(0.99),
+        );
+    }
+    println!(
+        "  mean device execute: {:.1} us over {} batches (virtual clock driven by measured execs)",
+        server.exec_ns.mean() / 1_000.0,
+        server.exec_ns.count()
+    );
+
+    // Phase 3 — what the same switch pattern costs with per-layer
+    // codebooks in DRAM vs the universal codebook in ROM.
+    let w = SwitchWorkload {
+        nets: nets.len(),
+        layers_per_net: 12,
+        codebook_bytes_per_layer: 64 * 1024,
+        rounds: 10,
+        inferences_per_activation: 5,
+        sram_bytes: 18 * 64 * 1024,
+    };
+    let (pl, rom) = compare(&w);
+    println!(
+        "\ntask-switch storm: per-layer DRAM {} codebook loads ({:.1} MiB) vs universal ROM {} loads — {}x vs 1x (Table 1 I/O column)",
+        pl.codebook_loads,
+        pl.codebook_bytes_loaded as f64 / (1 << 20) as f64,
+        rom.codebook_loads,
+        pl.codebook_loads.max(1)
+    );
+    Ok(())
+}

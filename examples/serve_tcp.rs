@@ -1,0 +1,149 @@
+//! TCP serving demo: construct networks from the universal codebook,
+//! expose them over a newline-JSON TCP endpoint, and (in `--client`
+//! mode) fire a request storm against it.
+//!
+//! ```bash
+//! # terminal 1 — server on :7878
+//! cargo run --release --example serve_tcp -- --listen 127.0.0.1:7878
+//! # terminal 2 — client storm
+//! cargo run --release --example serve_tcp -- --client 127.0.0.1:7878 --requests 50
+//! # or self-contained (spawns the server in-process, then the storm):
+//! cargo run --release --example serve_tcp -- --self-test
+//! ```
+
+use std::net::{TcpListener, TcpStream};
+
+use vq4all::coordinator::{Campaign, NetSession};
+use vq4all::serving::batcher::BatcherConfig;
+use vq4all::serving::tcp::{client_request, Shutdown, TcpServer};
+use vq4all::util::cli::Cli;
+use vq4all::util::config::CampaignConfig;
+use vq4all::util::rng::Rng;
+
+fn build_server(args: &vq4all::util::cli::Args) -> anyhow::Result<TcpServer> {
+    let cfg = CampaignConfig {
+        steps: args.usize_or("steps", 60)?,
+        eval_interval: 0,
+        ..CampaignConfig::default()
+    };
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let campaign = Campaign::load(&dir, cfg)?;
+    let nets: Vec<String> = args
+        .get_or("nets", "mini_mlp,mini_resnet18")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let mut sessions = Vec::new();
+    for name in &nets {
+        let res = campaign.construct(name)?;
+        let mut sess = NetSession::new(&campaign.rt, &campaign.manifest, name, &campaign.codebook)?;
+        sess.set_others(&res.final_others)?; // codes pair with trained norms
+        let codes = sess.codes_tensor(&res.codes);
+        println!(
+            "  {name}: float {:.3} -> hard {:.3} at {:.1}x",
+            res.float_metric,
+            res.hard_metric,
+            res.sizes.ratio()
+        );
+        sessions.push((sess, codes));
+    }
+    Ok(TcpServer::new(
+        sessions,
+        BatcherConfig {
+            max_batch: args.usize_or("max-batch", 16)?,
+            max_linger_ns: args.usize_or("linger-us", 500)? as u64 * 1_000,
+        },
+    ))
+}
+
+fn storm(addr: &str, nets: &[&str], n: usize) -> anyhow::Result<()> {
+    let mut rng = Rng::new(23);
+    let mut conn = TcpStream::connect(addr)?;
+    let mut ok = 0usize;
+    let mut lat = Vec::new();
+    for _ in 0..n {
+        let net = nets[rng.below(nets.len())];
+        let resp = client_request(&mut conn, net, rng.below(64))?;
+        if resp.req_bool("ok").unwrap_or(false) {
+            ok += 1;
+            if let Ok(l) = resp.req_f64("latency_us") {
+                lat.push(l);
+            }
+        }
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| lat.get(((lat.len() - 1) as f64 * p) as usize).copied().unwrap_or(0.0);
+    println!(
+        "client: {ok}/{n} ok | latency p50 {:.0}us p99 {:.0}us",
+        pct(0.5),
+        pct(0.99)
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    vq4all::util::logging::init_from_env();
+    let args = Cli::new("serve_tcp", "TCP front-end over the compressed zoo")
+        .opt("listen", "", "serve on this address (e.g. 127.0.0.1:7878)")
+        .opt("client", "", "run a client storm against this address")
+        .opt("requests", "50", "requests in client/self-test mode")
+        .opt("nets", "mini_mlp,mini_resnet18", "networks to host")
+        .opt("steps", "60", "construction steps per network")
+        .opt("max-batch", "16", "batcher max batch")
+        .opt("linger-us", "500", "batcher linger (us)")
+        .opt("artifacts", "artifacts", "artifacts directory")
+        .flag("self-test", "spawn server in-process and storm it")
+        .parse()?;
+
+    let nets: Vec<String> = args
+        .get_or("nets", "mini_mlp,mini_resnet18")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let net_refs: Vec<&str> = nets.iter().map(|s| s.as_str()).collect();
+    let requests = args.usize_or("requests", 50)?;
+
+    if let Some(addr) = args.get("client").filter(|s| !s.is_empty()) {
+        return storm(addr, &net_refs, requests);
+    }
+
+    if args.has("self-test") {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        println!("self-test: constructing {} nets, serving on {addr}", nets.len());
+        let mut server = build_server(&args)?;
+        let shutdown = Shutdown::new();
+        let sd = shutdown.clone();
+        let addr2 = addr.clone();
+        let nets2: Vec<String> = nets.clone();
+        let client = std::thread::spawn(move || {
+            let refs: Vec<&str> = nets2.iter().map(|s| s.as_str()).collect();
+            let r = storm(&addr2, &refs, requests);
+            sd.trigger();
+            // Poke the acceptor so the dispatch loop notices shutdown.
+            let _ = TcpStream::connect(&addr2);
+            r
+        });
+        let served = server.serve(listener, shutdown, 0)?;
+        client.join().unwrap()?;
+        println!("server: {served} requests served");
+        for (name, st) in &server.stats {
+            println!(
+                "  {name}: served {} in {} batches (avg {:.2}/batch)",
+                st.served,
+                st.batches,
+                st.served as f64 / st.batches.max(1) as f64
+            );
+        }
+        return Ok(());
+    }
+
+    let addr = args.get_or("listen", "127.0.0.1:7878").to_string();
+    let listener = TcpListener::bind(&addr)?;
+    println!("constructing {} networks...", nets.len());
+    let mut server = build_server(&args)?;
+    println!("serving on {addr} (newline JSON: {{\"net\": ..., \"row\": ...}}; ctrl-c to stop)");
+    server.serve(listener, Shutdown::new(), 0)?;
+    Ok(())
+}

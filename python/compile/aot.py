@@ -1,0 +1,293 @@
+"""AOT build driver: pretrain the float zoo, build datasets, lower every
+VQ4ALL step function to HLO text, and emit ``artifacts/manifest.json``.
+
+This is the only python entry point in the system and it runs exactly
+once (``make artifacts``); the Rust coordinator is self-contained
+afterwards.  See DESIGN.md §5 for the interchange contract.
+
+HLO **text** is the interchange format — the image's xla_extension 0.5.1
+rejects jax>=0.5 serialized protos (64-bit instruction ids), while the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts            # full zoo
+    python -m compile.aot --out-dir ../artifacts --nets mini_mlp
+    VQ4ALL_PROFILE=large python -m compile.aot ...          # paper-ish scale
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax._src.lib import xla_client as xc
+
+from . import codebook as cb_mod
+from . import data as data_mod
+from . import tensorio, train, vqlayers
+from .zoo import ZOO, VqConfig, get_net, vq_config, zoo_names
+
+_DT = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_fn(fn, in_specs) -> tuple[str, list[dict]]:
+    """Lower ``fn(*args)`` at the given (name, shape, dtype) specs.
+
+    Returns (hlo_text, output_specs).
+    """
+    shaped = [jax.ShapeDtypeStruct(shape, _DT[dt]) for _, shape, dt in in_specs]
+    out_shapes = jax.eval_shape(fn, *shaped)
+    if not isinstance(out_shapes, (tuple, list)):
+        out_shapes = (out_shapes,)
+    out_specs = [
+        {
+            "name": f"out{i}",
+            "shape": list(o.shape),
+            "dtype": "i32" if np.issubdtype(o.dtype, np.integer) else "f32",
+        }
+        for i, o in enumerate(out_shapes)
+    ]
+    # keep_unused=True: the Rust caller feeds every manifest input, so the
+    # compiled parameter list must match the signature even if a tensor is
+    # unused in some configuration (jit would otherwise DCE it).
+    text = to_hlo_text(jax.jit(fn, keep_unused=True).lower(*shaped))
+    return text, out_specs
+
+
+def specs_json(specs) -> list[dict]:
+    return [{"name": nm, "shape": list(sh), "dtype": dt} for nm, sh, dt in specs]
+
+
+def build_network(spec, cfg: VqConfig, out: Path, manifest: dict) -> np.ndarray:
+    """Pretrain + export one zoo member.  Returns its float sub-vectors
+    (for the universal-codebook pool)."""
+    t0 = time.time()
+    fns = train.make_step_fns(spec, cfg)
+    net = fns.net
+    print(f"[{spec.name}] pretraining ({spec.pretrain_steps} steps)...", flush=True)
+
+    cx, cy = data_mod.make_dataset(spec, 0, spec.calib_size)
+    tx, ty = data_mod.make_dataset(spec, 1, spec.test_size)
+    # Pretrain on a dedicated, larger split (seed offset 2) — the paper's
+    # float checkpoints are trained on the full dataset, not the small
+    # calibration set VQ4ALL later streams.
+    px, py = data_mod.make_dataset(spec, 2, max(8 * spec.calib_size, 4000))
+    params, last_loss = train.pretrain(net, spec, px, py)
+    fl, fm = train.eval_float(net, spec, params, tx, ty)
+    print(f"[{spec.name}] float: loss={fl:.4f} metric={fm:.4f} ({time.time()-t0:.1f}s)")
+
+    flat = np.asarray(vqlayers.extract_subvectors(params, fns.layout))
+
+    # ---- data + teacher tensors
+    files: dict[str, str] = {}
+
+    def save(tag: str, arr: np.ndarray):
+        fname = f"{spec.name}__{tag}.vqt"
+        tensorio.write_tensor(out / fname, arr)
+        files[tag] = fname
+
+    save("calib_x", cx)
+    save("calib_y", cy if cy.dtype != np.float32 else cy.astype(np.float32))
+    save("test_x", tx)
+    save("test_y", ty if ty.dtype != np.float32 else ty.astype(np.float32))
+    save("teacher_flat", flat.astype(np.float32))
+    for i, nm in enumerate(fns.other_names):
+        save(f"teacher_other_{i}", np.asarray(params[nm], np.float32))
+
+    # ---- executables
+    execs: dict[str, dict] = {}
+
+    def lower(tag: str, fn, in_specs):
+        t1 = time.time()
+        text, out_specs = lower_fn(fn, in_specs)
+        fname = f"{spec.name}__{tag}.hlo.txt"
+        (out / fname).write_text(text)
+        execs[tag] = {
+            "hlo": fname,
+            "inputs": specs_json(in_specs),
+            "outputs": out_specs,
+        }
+        print(f"[{spec.name}] lowered {tag}: {len(in_specs)} in, "
+              f"{len(out_specs)} out, {len(text)//1024} KiB ({time.time()-t1:.1f}s)")
+
+    s, n, k, d = fns.s_total, cfg.n, cfg.k, cfg.d
+    lower(
+        "init_assign",
+        fns.init_assign,
+        [("wsub", (s, d), "f32"), ("codebook", (k, d), "f32")],
+    )
+    lower(
+        "train_step",
+        fns.train_step,
+        fns.state_specs() + fns.static_specs() + train.batch_specs(spec),
+    )
+    eval_soft_specs = (
+        [("z", (s, n), "f32")]
+        + [(f"other:{nm}", tuple(net.params[nm].shape), "f32") for nm in fns.other_names]
+        + [
+            ("assign", (s, n), "i32"),
+            ("frozen", (s,), "f32"),
+            ("frozen_idx", (s,), "i32"),
+            ("codebook", (k, d), "f32"),
+        ]
+        + train.eval_batch_specs(spec)
+    )
+    lower("eval_soft", fns.eval_soft, eval_soft_specs)
+    hard_prefix = (
+        [("codes", (s,), "i32")]
+        + [(f"other:{nm}", tuple(net.params[nm].shape), "f32") for nm in fns.other_names]
+        + [("codebook", (k, d), "f32")]
+    )
+    lower("eval_hard", fns.eval_hard, hard_prefix + train.eval_batch_specs(spec))
+    infer_x = train.eval_batch_specs(spec)[0]
+    lower("infer_hard", fns.infer_hard, hard_prefix + [infer_x])
+    if spec.task == "denoise":
+        b = spec.eval_batch
+        lower(
+            "sample_step",
+            fns.sample_step,
+            hard_prefix
+            + [("xt", (b, 2), "f32"), ("tdiff", (b,), "i32"), ("eps", (b, 2), "f32")],
+        )
+        # Pure eps forward — the Rust coordinator owns the DDPM posterior
+        # loop (see train.StepFns.denoise_eps).
+        lower(
+            "denoise_eps",
+            fns.denoise_eps,
+            hard_prefix + [("xt", (b, 2), "f32"), ("tdiff", (b,), "i32")],
+        )
+
+    manifest["networks"].append(
+        {
+            "name": spec.name,
+            "task": spec.task,
+            "arch": spec.arch,
+            "input_shape": list(spec.input_shape),
+            "num_classes": spec.num_classes,
+            "batch": spec.batch,
+            "eval_batch": spec.eval_batch,
+            "calib_size": spec.calib_size,
+            "test_size": spec.test_size,
+            "s_total": s,
+            "float_loss": fl,
+            "float_metric": fm,
+            "pretrain_final_loss": last_loss,
+            "layers": [
+                {
+                    "name": sl.layer.name,
+                    "kind": sl.layer.kind,
+                    "shape": list(sl.layer.shape),
+                    "offset": sl.offset,
+                    "groups": sl.groups,
+                }
+                for sl in fns.layout.slices
+            ],
+            "excluded_layers": [
+                {"name": l.name, "kind": l.kind, "shape": list(l.shape)}
+                for l in net.weight_layers
+                if not l.compress
+            ],
+            "others": [
+                {"name": nm, "shape": list(net.params[nm].shape)} for nm in fns.other_names
+            ],
+            "state_specs": specs_json(fns.state_specs()),
+            "static_specs": specs_json(fns.static_specs()),
+            "batch_specs": specs_json(train.batch_specs(spec)),
+            "eval_batch_specs": specs_json(train.eval_batch_specs(spec)),
+            "executables": execs,
+            "data": files,
+        }
+    )
+    return flat
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(legacy) ignored, use --out-dir")
+    ap.add_argument("--nets", default=None, help="comma-separated zoo subset")
+    ap.add_argument(
+        "--merge",
+        action="store_true",
+        help="update only --nets inside an existing manifest (keeps the "
+        "other networks and the existing universal codebook untouched)",
+    )
+    args = ap.parse_args()
+
+    out = Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    cfg = vq_config()
+    names = zoo_names(args.nets.split(",") if args.nets else None)
+
+    prior: dict | None = None
+    if args.merge:
+        prior = json.loads((out / "manifest.json").read_text())
+        assert prior["config"]["k"] == cfg.k and prior["config"]["d"] == cfg.d, (
+            "merge requires the same VQ profile as the existing manifest"
+        )
+
+    manifest: dict = {
+        "version": 1,
+        "config": {
+            "k": cfg.k,
+            "d": cfg.d,
+            "n": cfg.n,
+            "alpha": cfg.alpha,
+            "bandwidth": cfg.bandwidth,
+            "lr_ratios": cfg.lr_ratios,
+            "lr_other": cfg.lr_other,
+            "samples_per_net": cfg.samples_per_net,
+            "effective_bit": cfg.effective_bit,
+        },
+        "networks": [],
+    }
+
+    flats = []
+    for name in names:
+        flats.append(build_network(get_net(name), cfg, out, manifest))
+
+    if prior is not None:
+        # Splice the rebuilt networks into the prior manifest, preserving
+        # order and the existing codebook (the codebook must stay frozen —
+        # §4.1 — or every other network's candidate tables go stale).
+        rebuilt = {n["name"]: n for n in manifest["networks"]}
+        merged = [rebuilt.pop(n["name"], n) for n in prior["networks"]]
+        merged.extend(rebuilt.values())
+        prior["networks"] = merged
+        (out / "manifest.json").write_text(json.dumps(prior, indent=1))
+        print(f"merged {len(names)} network(s) into {out}/manifest.json")
+        return
+
+    # Universal codebook (§4.1): equal-count pool over the zoo, KDE sample.
+    print("building universal codebook...")
+    ucb, pool = cb_mod.build_universal_codebook(
+        flats, cfg.k, cfg.d, cfg.bandwidth, cfg.samples_per_net, seed=2024
+    )
+    tensorio.write_tensor(out / "zoo__codebook.vqt", ucb)
+    tensorio.write_tensor(out / "zoo__kde_pool.vqt", pool)
+    manifest["codebook"] = "zoo__codebook.vqt"
+    manifest["kde_pool"] = "zoo__kde_pool.vqt"
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {out}/manifest.json ({len(manifest['networks'])} networks)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Universal-codebook initialization (§4.1, Eq. 3-4) — python side.
+
+The production sampler lives in Rust (``rust/src/vq/kde.rs``, the
+coordinator owns codebook creation); this module provides the same
+algorithm for (a) the default codebook shipped in ``artifacts/`` so the
+Rust side can cross-check its sampler, and (b) the python test-suite.
+
+KDE sampling for a Gaussian kernel is exact and cheap: drawing from
+``f(w) = 1/n sum_i N(w; w_i, h^2 I)`` is "pick a data sub-vector
+uniformly, add N(0, h^2 I) noise" — no density grid needed.  The paper
+samples ``10 * k * d`` sub-vectors per network, concatenates them
+(equal count per network so the codebook is unbiased), and draws ``k``
+codewords.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def sample_subvectors(
+    flats: list[np.ndarray], per_net: int, seed: int = 0
+) -> np.ndarray:
+    """Equal-count sub-vector sample across networks (unbiased, §4.1).
+
+    Args:
+      flats: per-network ``(S_i, d)`` float sub-vector arrays.
+      per_net: how many sub-vectors to draw from each network.
+
+    Returns:
+      ``(len(flats) * per_net, d)`` concatenated sample.
+    """
+    rng = np.random.default_rng(seed)
+    parts = []
+    for f in flats:
+        if f.shape[0] >= per_net:
+            idx = rng.choice(f.shape[0], size=per_net, replace=False)
+        else:  # small net: sample with replacement to keep counts equal
+            idx = rng.choice(f.shape[0], size=per_net, replace=True)
+        parts.append(f[idx])
+    return np.concatenate(parts, axis=0).astype(np.float32)
+
+
+def kde_sample_codebook(
+    samples: np.ndarray, k: int, bandwidth: float, seed: int = 0
+) -> np.ndarray:
+    """Draw ``k`` codewords from the Gaussian KDE of ``samples`` (Eq. 4)."""
+    rng = np.random.default_rng(seed)
+    n, d = samples.shape
+    picks = rng.integers(0, n, size=k)
+    noise = rng.normal(0.0, bandwidth, size=(k, d)).astype(np.float32)
+    return samples[picks] + noise
+
+
+def build_universal_codebook(
+    flats: list[np.ndarray], k: int, d: int, bandwidth: float, per_net: int, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """Full §4.1 pipeline; returns ``(codebook (k, d), sample pool)``."""
+    pool = sample_subvectors(flats, per_net, seed=seed)
+    assert pool.shape[1] == d, f"sub-vector dim {pool.shape[1]} != d={d}"
+    cb = kde_sample_codebook(pool, k, bandwidth, seed=seed + 1)
+    return cb, pool

@@ -1,0 +1,157 @@
+"""Synthetic datasets substituting the paper's gated data (DESIGN.md §2).
+
+Three generators, one per task family in the zoo:
+
+* :func:`synth_imagenet`  — substitutes ImageNet for the classification
+  nets.  Ten classes, each a fixed random spatial template; samples are
+  the class template under a random circular shift, per-pixel Gaussian
+  noise, and a random brightness scale.  The task is learnable to >90%
+  Top-1 by the mini networks yet not linearly trivial (shift invariance
+  is required), so compression-induced accuracy drops are visible —
+  which is all VQ4ALL's losses ever see of a dataset.
+* :func:`synth_shapes`    — substitutes COCO detection.  Each image holds
+  one shape (square / circle / cross) at a random position and scale on a
+  textured background; targets are a per-cell objectness grid plus a box
+  and a class, Mask-RCNN's loss structure in miniature.
+* :func:`gmm2d`           — substitutes the diffusion training corpus: an
+  8-mode 2-D Gaussian mixture on a circle, the standard toy target for
+  denoising-diffusion models.
+
+All generators are deterministic in ``seed`` and return float32 numpy
+arrays; ``aot.py`` writes them into ``artifacts/`` as ``.vqt`` tensors so
+the Rust coordinator streams the *identical* bytes at run time.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+NUM_CLASSES = 10
+
+
+def synth_imagenet(
+    n: int, hw: int = 16, num_classes: int = NUM_CLASSES, seed: int = 0,
+    template_seed: int = 7, share: float = 0.5, noise: float = 0.5,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Procedural image classification set.
+
+    ``template_seed`` fixes the class templates *independently* of the
+    sample seed, so train/calibration/test splits (different ``seed``)
+    share one class structure — the train/test relationship of a real
+    dataset.
+
+    Difficulty calibration (tools/tune_probe.py): class templates blend a
+    **shared** component (weight ``share``) with a class-unique one, so
+    classes differ in fine detail that weight-quantization noise can
+    destroy, and per-pixel noise is high enough that the mini networks
+    land at ~0.92-0.96 float Top-1 instead of saturating at 1.0 —
+    without this every compression method ties at 100% and none of the
+    paper's accuracy orderings (Tables 3/5, Figures 2/3) is visible.
+
+    Returns:
+      ``(x, y)`` with ``x`` of shape ``(n, hw, hw, 3)`` in roughly
+      ``[-1, 1]`` and int32 labels ``y`` of shape ``(n,)``.
+    """
+    trng = np.random.default_rng(template_seed)
+    common = trng.normal(0.0, 1.0, size=(1, hw, hw, 3)).astype(np.float32)
+    uniq = trng.normal(0.0, 1.0, size=(num_classes, hw, hw, 3)).astype(np.float32)
+    templates = share * common + (1.0 - share) * uniq
+    rng = np.random.default_rng(seed)
+    # Low-pass the templates a little so shifts stay recognizable.
+    for _ in range(2):
+        templates = 0.5 * templates + 0.25 * (
+            np.roll(templates, 1, axis=1) + np.roll(templates, 1, axis=2)
+        )
+    y = rng.integers(0, num_classes, size=n).astype(np.int32)
+    max_shift = max(hw // 8, 1)  # small jitter: learnable from ~500 samples
+    sx = rng.integers(-max_shift, max_shift + 1, size=n)
+    sy = rng.integers(-max_shift, max_shift + 1, size=n)
+    scale = rng.uniform(0.7, 1.3, size=n).astype(np.float32)
+    nz = rng.normal(0.0, noise, size=(n, hw, hw, 3)).astype(np.float32)
+    x = np.empty((n, hw, hw, 3), np.float32)
+    for i in range(n):
+        img = np.roll(templates[y[i]], (sx[i], sy[i]), axis=(0, 1))
+        x[i] = img * scale[i] + nz[i]
+    return x, y
+
+
+def synth_shapes(
+    n: int, hw: int = 24, grid: int = 4, seed: int = 0
+) -> tuple[np.ndarray, np.ndarray]:
+    """Procedural single-object detection set.
+
+    Targets pack, per grid cell, ``[objectness, cx, cy, size, class]``
+    (cx/cy are offsets within the cell in [0,1], size is the half-width
+    relative to the image).  Output shape ``(n, grid, grid, 5)``.
+    """
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0.0, 0.15, size=(n, hw, hw, 3)).astype(np.float32)
+    t = np.zeros((n, grid, grid, 5), np.float32)
+    cell = hw // grid
+    yy, xx = np.mgrid[0:hw, 0:hw]
+    for i in range(n):
+        cls = rng.integers(0, 3)
+        half = rng.uniform(2.0, 4.5)
+        cx = rng.uniform(half, hw - half)
+        cy = rng.uniform(half, hw - half)
+        color = rng.uniform(0.6, 1.4, size=3).astype(np.float32)
+        if cls == 0:  # square
+            mask = (np.abs(xx - cx) <= half) & (np.abs(yy - cy) <= half)
+        elif cls == 1:  # circle
+            mask = (xx - cx) ** 2 + (yy - cy) ** 2 <= half**2
+        else:  # cross
+            mask = (np.abs(xx - cx) <= half / 2.5) | (np.abs(yy - cy) <= half / 2.5)
+            mask &= (np.abs(xx - cx) <= half) & (np.abs(yy - cy) <= half)
+        x[i][mask] += color
+        gx = min(int(cx / cell), grid - 1)
+        gy = min(int(cy / cell), grid - 1)
+        t[i, gy, gx] = [
+            1.0,
+            (cx - gx * cell) / cell,
+            (cy - gy * cell) / cell,
+            half / hw,
+            float(cls),
+        ]
+    return x, t
+
+
+def gmm2d(n: int, modes: int = 8, radius: float = 2.0, std: float = 0.15, seed: int = 0) -> np.ndarray:
+    """8-mode Gaussian mixture on a circle — the diffusion toy target."""
+    rng = np.random.default_rng(seed)
+    which = rng.integers(0, modes, size=n)
+    angles = 2.0 * np.pi * which / modes
+    centers = np.stack([radius * np.cos(angles), radius * np.sin(angles)], axis=1)
+    return (centers + rng.normal(0.0, std, size=(n, 2))).astype(np.float32)
+
+
+def diffusion_schedule(timesteps: int = 50) -> dict[str, np.ndarray]:
+    """Linear-beta DDPM schedule; returns the constants the denoiser needs."""
+    betas = np.linspace(1e-4, 0.25, timesteps, dtype=np.float32)
+    alphas = 1.0 - betas
+    abar = np.cumprod(alphas).astype(np.float32)
+    return {
+        "betas": betas,
+        "alphas": alphas,
+        "alpha_bars": abar,
+        "sqrt_abar": np.sqrt(abar).astype(np.float32),
+        "sqrt_1m_abar": np.sqrt(1.0 - abar).astype(np.float32),
+    }
+
+
+def make_dataset(spec, split_seed_offset: int, size: int):
+    """Dispatch on a zoo :class:`~compile.zoo.NetSpec`'s task.
+
+    For ``denoise`` the "labels" are unused (zeros) — the diffusion loss
+    draws its own noise inside the train step from a counter-seeded PRNG.
+    """
+    seed = spec.seed + split_seed_offset
+    if spec.task == "classify":
+        hw = spec.input_shape[0]
+        return synth_imagenet(size, hw=hw, num_classes=spec.num_classes, seed=seed)
+    if spec.task == "detect":
+        hw = spec.input_shape[0]
+        return synth_shapes(size, hw=hw, grid=6, seed=seed)
+    if spec.task == "denoise":
+        x = gmm2d(size, seed=seed)
+        return x, np.zeros((size,), np.int32)
+    raise ValueError(f"unknown task {spec.task!r}")

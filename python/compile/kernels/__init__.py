@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels for VQ4ALL.
+
+Four kernels cover the system's compute hot-spots (see DESIGN.md section 3/4):
+
+* distance     -- pairwise ||w - c||^2 + top-n candidates (Eq. 5)
+* reconstruct  -- differentiable decode W_hat = R * C[A_c] (Eq. 8)
+* vq_matmul    -- fused codebook-decode + matmul (serving hot path)
+* kde          -- Gaussian KDE evaluation (Eq. 3)
+
+``ref`` holds the pure-jnp oracles each kernel is tested against.
+All kernels run under ``interpret=True`` (see ``pallas_util``).
+"""
+
+from . import distance, kde, pallas_util, reconstruct, ref, vq_matmul  # noqa: F401
+
+__all__ = ["distance", "kde", "pallas_util", "reconstruct", "ref", "vq_matmul"]

@@ -1,0 +1,133 @@
+"""Pallas kernel: tiled pairwise squared-Euclidean distance (Eq. 5).
+
+Computes ``D[s, k] = ||w_s - c_k||^2`` for ``S`` weight sub-vectors
+against ``K`` codewords using the expanded form
+
+    D = ||w||^2 - 2 w @ c^T + ||c||^2
+
+so the dominant cost is a single ``(S_tile, d) @ (d, K_tile)`` matmul per
+grid step — on a real TPU that is an MXU op; the two norm terms are VPU
+reductions.
+
+HBM <-> VMEM schedule (BlockSpec):
+
+* grid = ``(S / bs, K / bk)`` with the codeword axis **innermost**, so a
+  sub-vector tile ``w[i]`` is loaded into VMEM once and reused across all
+  codeword tiles (codebook tiles stream).
+* VMEM footprint per step: ``bs*d + bk*d + bs*bk`` floats.  With the
+  defaults (bs=128, bk=512, d<=32) that is < 0.5 MB — far under the
+  ~16 MB VMEM budget, leaving room for double buffering.
+
+This kernel runs twice in the system: once per network at campaign start
+(candidate-assignment initialization, the ``init_assign`` artifact) and
+inside Table-1/Table-7 style analyses.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import pallas_util as pu
+
+
+def _distance_kernel(w_ref, c_ref, out_ref):
+    """One (S_tile, K_tile) block of the distance matrix."""
+    w = w_ref[...].astype(jnp.float32)  # (bs, d)
+    c = c_ref[...].astype(jnp.float32)  # (bk, d)
+    w2 = jnp.sum(w * w, axis=1, keepdims=True)  # (bs, 1)
+    c2 = jnp.sum(c * c, axis=1)[None, :]  # (1, bk)
+    # MXU: (bs, d) @ (d, bk). preferred_element_type pins f32 accumulation.
+    cross = jax.lax.dot_general(
+        w,
+        c,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    out_ref[...] = jnp.maximum(w2 - 2.0 * cross + c2, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_k"))
+def pairwise_sq_dist(
+    w: jax.Array,
+    c: jax.Array,
+    *,
+    block_s: int = 128,
+    block_k: int = 512,
+) -> jax.Array:
+    """Tiled pairwise squared distances; drop-in for ``ref.pairwise_sq_dist``.
+
+    Args:
+      w: ``(S, d)`` sub-vectors (any float dtype; accumulates in f32).
+      c: ``(K, d)`` codebook.
+      block_s / block_k: tile sizes along the sub-vector / codeword axes.
+
+    Returns:
+      ``(S, K)`` float32 squared distances.
+    """
+    pu.static_check(w.ndim == 2 and c.ndim == 2, "w and c must be rank-2")
+    pu.static_check(w.shape[1] == c.shape[1], f"dim mismatch {w.shape} vs {c.shape}")
+    s, d = w.shape
+    k, _ = c.shape
+
+    bs = pu.pick_tile(s, block_s)
+    bk = pu.pick_tile(k, block_k)
+    sp = pu.round_up(s, bs)
+    kp = pu.round_up(k, bk)
+    # Zero padding is safe: padded rows/cols produce distances that are
+    # sliced away below and can never affect real entries.
+    wp = pu.pad_axis(pu.as_f32(w), 0, sp)
+    cp = pu.pad_axis(pu.as_f32(c), 0, kp)
+
+    out = pl.pallas_call(
+        _distance_kernel,
+        grid=(sp // bs, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bs, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((sp, kp), jnp.float32),
+        interpret=pu.INTERPRET,
+    )(wp, cp)
+    return out[:s, :k]
+
+
+def topn_candidates(
+    w: jax.Array,
+    c: jax.Array,
+    n: int,
+    *,
+    block_s: int = 128,
+    block_k: int = 512,
+) -> tuple[jax.Array, jax.Array]:
+    """Candidate assignments (Eq. 5) on top of the Pallas distance kernel.
+
+    The top-n selection is an **iterative argmin scan** (n rounds of
+    argmin + mask-out) rather than ``jax.lax.top_k``: the xla_extension
+    0.5.1 HLO-text parser used by the Rust runtime predates the ``topk``
+    custom attribute jax emits, while argmin/scatter lower to classic
+    reduce/scatter HLO that round-trips cleanly (DESIGN.md §5).  For
+    n <= 64 the scan costs n vectorized passes over the (S, K) distance
+    matrix — negligible next to the distance matmul itself.
+
+    Returns:
+      ``(assignments, sq_dists)`` — ``(S, n)`` int32 indices and their
+      squared distances, nearest first.
+    """
+    pu.static_check(0 < n <= c.shape[0], f"n={n} out of range for K={c.shape[0]}")
+    dist = pairwise_sq_dist(w, c, block_s=block_s, block_k=block_k)
+    s = dist.shape[0]
+    rows = jnp.arange(s)
+
+    def body(d, _):
+        idx = jnp.argmin(d, axis=1).astype(jnp.int32)  # (S,)
+        dd = jnp.take_along_axis(d, idx[:, None], axis=1)[:, 0]
+        d = d.at[rows, idx].set(jnp.inf)
+        return d, (idx, dd)
+
+    _, (idxs, dds) = jax.lax.scan(body, dist, None, length=n)
+    return jnp.transpose(idxs).astype(jnp.int32), jnp.transpose(dds)

@@ -1,0 +1,72 @@
+"""Shared helpers for the VQ4ALL Pallas kernels.
+
+All kernels in this package follow the same conventions:
+
+* **interpret mode** — the CPU PJRT plugin cannot execute Mosaic
+  custom-calls, so every ``pallas_call`` here is built with
+  ``interpret=True``.  Interpret mode lowers the kernel body to plain HLO
+  ops, which means the kernels run (and AOT-export) on any backend while
+  keeping the BlockSpec structure that a real TPU build would use.
+* **padding** — wrappers pad inputs up to tile multiples, run the tiled
+  kernel, and slice the result back.  Padding values are chosen so padded
+  lanes can never contaminate real outputs (zeros for matmul operands,
+  ``+inf``-style large distances for codeword padding).
+* **tile sizes** — default tiles are multiples of (8, 128) where the
+  axis semantics allow, matching the TPU VREG layout; on small problems
+  the wrappers clamp tiles to the array size.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+# Flip to False to compile kernels for a real TPU (Mosaic). Everything in
+# this repository assumes the CPU interpret path; see DESIGN.md §4.
+INTERPRET = True
+
+
+def cdiv(a: int, b: int) -> int:
+    """Ceiling division."""
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    """Round ``a`` up to the next multiple of ``b``."""
+    return cdiv(a, b) * b
+
+
+def pad_axis(x, axis: int, target: int, value=0.0):
+    """Pad ``x`` with ``value`` along ``axis`` until its size is ``target``."""
+    cur = x.shape[axis]
+    if cur == target:
+        return x
+    if cur > target:
+        raise ValueError(f"pad_axis: axis {axis} already {cur} > {target}")
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, target - cur)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def pick_tile(size: int, preferred: int) -> int:
+    """Choose a tile size: the preferred tile, clamped to the array size.
+
+    Guarantees the returned tile is >= 1.  When ``size`` is smaller than
+    ``preferred`` the whole axis becomes a single block (the wrapper pads
+    the axis up to the tile).
+    """
+    if size <= 0:
+        raise ValueError(f"pick_tile: non-positive size {size}")
+    return min(preferred, max(1, size))
+
+
+def as_f32(x):
+    """Promote to float32 (kernels accumulate in f32 regardless of input)."""
+    return x.astype(jnp.float32)
+
+
+def static_check(cond: bool, msg: str) -> None:
+    """Shape/static-argument validation with a uniform error type."""
+    if not cond:
+        raise ValueError(msg)

@@ -1,0 +1,157 @@
+"""Pure-jnp reference oracles for the VQ4ALL Pallas kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written with plain ``jax.numpy`` ops and no tiling, padding, or kernel
+machinery.  The pytest suite (``python/tests/test_kernels.py``) asserts
+``assert_allclose(kernel(...), ref(...))`` over randomized shape/dtype
+sweeps; these functions are the single source of truth for kernel
+numerics.
+
+The functions mirror the paper's equations:
+
+* :func:`pairwise_sq_dist`  — Eq. 5's distance computation,
+  ``D[s, k] = ||w_s - c_k||^2``.
+* :func:`topn_candidates`   — Eq. 5's ``argmin^n`` candidate selection.
+* :func:`init_ratio_logits` — Eq. 7's inverse-distance logit init.
+* :func:`reconstruct`       — Eq. 8's ratio-weighted decode
+  ``W_hat = R * C[A_c]``.
+* :func:`vq_matmul`         — the serving hot path ``y = x @ W_hat^T``
+  with ``W_hat`` decoded from (codes, codebook) — i.e. hard one-hot
+  assignments, the post-PNC inference form.
+* :func:`kde_density`       — Eq. 3's Gaussian kernel density estimate.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sq_dist(w: jax.Array, c: jax.Array) -> jax.Array:
+    """Squared Euclidean distance between every sub-vector and codeword.
+
+    Args:
+      w: ``(S, d)`` weight sub-vectors.
+      c: ``(K, d)`` codebook.
+
+    Returns:
+      ``(S, K)`` matrix with ``out[s, k] = ||w[s] - c[k]||_2^2``.
+
+    Computed in the numerically expanded form
+    ``||w||^2 - 2 w c^T + ||c||^2`` to match the MXU-friendly kernel;
+    clamped at zero because the expansion can go slightly negative in
+    float32.
+    """
+    w = w.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    w2 = jnp.sum(w * w, axis=1, keepdims=True)  # (S, 1)
+    c2 = jnp.sum(c * c, axis=1)[None, :]  # (1, K)
+    cross = w @ c.T  # (S, K)
+    return jnp.maximum(w2 - 2.0 * cross + c2, 0.0)
+
+
+def topn_candidates(w: jax.Array, c: jax.Array, n: int) -> tuple[jax.Array, jax.Array]:
+    """Top-``n`` nearest codewords per sub-vector (Eq. 5).
+
+    Returns:
+      ``(assignments, sq_dists)`` of shapes ``(S, n)``; column 0 is the
+      nearest codeword, column ``n-1`` the farthest of the candidates.
+    """
+    d = pairwise_sq_dist(w, c)
+    neg, idx = jax.lax.top_k(-d, n)
+    return idx.astype(jnp.int32), -neg
+
+
+def init_ratio_logits(sq_dists: jax.Array, eps: float = 1e-12) -> jax.Array:
+    """Inverse-distance logit initialization (Eq. 7).
+
+    ``z_m = ln( d_{n-1} / d_m )`` where ``d_m`` is the squared distance of
+    candidate ``m`` and ``d_{n-1}`` the *last* (farthest) candidate, so the
+    nearest candidate receives the largest logit and the farthest gets 0.
+    After softmax the ratios are proportional to ``1 / d_m``.
+    """
+    sq = jnp.maximum(sq_dists.astype(jnp.float32), eps)
+    last = sq[..., -1:]
+    return jnp.log(last / sq)
+
+
+def ratios_from_logits(z: jax.Array) -> jax.Array:
+    """Softmax over the candidate axis (Eq. 6)."""
+    return jax.nn.softmax(z.astype(jnp.float32), axis=-1)
+
+
+def reconstruct(codebook: jax.Array, assign: jax.Array, ratios: jax.Array) -> jax.Array:
+    """Differentiable weighted decode ``W_hat = R * C[A_c]`` (Eq. 8).
+
+    Args:
+      codebook: ``(K, d)`` frozen universal codebook.
+      assign: ``(S, n)`` int32 candidate codeword indices.
+      ratios: ``(S, n)`` softmax ratios (rows sum to 1).
+
+    Returns:
+      ``(S, d)`` reconstructed sub-vectors
+      ``out[s] = sum_m ratios[s, m] * codebook[assign[s, m]]``.
+    """
+    gathered = codebook.astype(jnp.float32)[assign]  # (S, n, d)
+    return jnp.einsum("sn,snd->sd", ratios.astype(jnp.float32), gathered)
+
+
+def hard_reconstruct(codebook: jax.Array, codes: jax.Array) -> jax.Array:
+    """Hard decode ``W_hat = C[A]`` (Eq. 2) — post-PNC inference form."""
+    return codebook.astype(jnp.float32)[codes]
+
+
+def vq_matmul(x: jax.Array, codes: jax.Array, codebook: jax.Array) -> jax.Array:
+    """Serving hot path: ``y = x @ W_hat^T`` with VQ-encoded weights.
+
+    Args:
+      x: ``(B, I)`` activations.
+      codes: ``(O, I // d)`` int32 codeword indices; row ``o`` encodes
+        output neuron ``o``'s weight vector as ``I // d`` codewords.
+      codebook: ``(K, d)`` universal codebook.
+
+    Returns:
+      ``(B, O)`` output ``y = x @ decode(codes)^T``.
+    """
+    o, g = codes.shape
+    k, d = codebook.shape
+    w = codebook.astype(jnp.float32)[codes].reshape(o, g * d)  # (O, I)
+    return x.astype(jnp.float32) @ w.T
+
+
+def kde_density(queries: jax.Array, samples: jax.Array, bandwidth: float) -> jax.Array:
+    """Gaussian kernel density estimate (Eq. 3), product kernel over dims.
+
+    ``f(q) = 1 / (N h^d (2 pi)^{d/2}) * sum_i exp(-||q - s_i||^2 / (2 h^2))``
+
+    Args:
+      queries: ``(Q, d)`` evaluation points.
+      samples: ``(N, d)`` data points the KDE is fit to.
+      bandwidth: scalar ``h`` (paper uses 0.01).
+
+    Returns:
+      ``(Q,)`` density estimates.
+    """
+    q = queries.astype(jnp.float32)
+    s = samples.astype(jnp.float32)
+    n, d = s.shape
+    sq = pairwise_sq_dist(q, s)  # (Q, N)
+    h2 = jnp.float32(bandwidth) ** 2
+    log_norm = -0.5 * d * jnp.log(2.0 * jnp.pi * h2)
+    kernels = jnp.exp(-0.5 * sq / h2 + log_norm)
+    return jnp.sum(kernels, axis=1) / jnp.float32(n)
+
+
+def ratio_regularizer(ratios: jax.Array, unset_mask: jax.Array | None = None) -> jax.Array:
+    """Eq. 11's regularizer pushing ratios towards {0, 1}.
+
+    ``L_r = n * sum_{s,m} r_{s,m} (1 - r_{s,m}) / S`` computed only over
+    groups where ``unset_mask`` is 1 (PNC-frozen groups are excluded,
+    §4.3).
+    """
+    r = ratios.astype(jnp.float32)
+    s, n = r.shape
+    per_group = jnp.sum(r * (1.0 - r), axis=-1)  # (S,)
+    if unset_mask is not None:
+        per_group = per_group * unset_mask.astype(jnp.float32)
+    return jnp.float32(n) * jnp.sum(per_group) / jnp.float32(s)

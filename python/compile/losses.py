@@ -1,0 +1,92 @@
+"""Objective functions (§4.2): task loss, block-wise KD, ratio regularizer.
+
+``L = L_t + L_kd + L_r`` (Eq. 12).  The task loss dispatches on the zoo
+task; the KD loss compares the student's main-block features against the
+float teacher's (Eq. 10); the regularizer pushes unfrozen ratios towards
+one-hot (Eq. 11).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .nets import DETECT_CLASSES
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy (classification task loss)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=1)
+    return -jnp.mean(picked)
+
+
+def classify_correct(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Top-1 correct count (summed, not averaged — Rust aggregates)."""
+    return jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+def detect_loss(pred: jnp.ndarray, target: jnp.ndarray) -> jnp.ndarray:
+    """Mini Mask-RCNN-style multi-task loss.
+
+    ``pred``: (B, G, G, 4+C) = [obj_logit, cx, cy, size, class_logits].
+    ``target``: (B, G, G, 5) = [objectness, cx, cy, size, class_id].
+    Objectness BCE everywhere; box L2 and class CE only on object cells.
+    """
+    obj_t = target[..., 0]
+    obj_l = pred[..., 0]
+    bce = jnp.mean(
+        jnp.maximum(obj_l, 0.0) - obj_l * obj_t + jnp.log1p(jnp.exp(-jnp.abs(obj_l)))
+    )
+    box_err = jnp.sum((pred[..., 1:4] - target[..., 1:4]) ** 2, axis=-1)
+    box = jnp.sum(box_err * obj_t) / jnp.maximum(jnp.sum(obj_t), 1.0)
+    cls_logits = pred[..., 4:]
+    cls_t = target[..., 4].astype(jnp.int32)
+    logp = jax.nn.log_softmax(cls_logits, axis=-1)
+    picked = jnp.take_along_axis(logp, cls_t[..., None], axis=-1)[..., 0]
+    ce = -jnp.sum(picked * obj_t) / jnp.maximum(jnp.sum(obj_t), 1.0)
+    return bce + box + ce
+
+
+def detect_hits(pred: jnp.ndarray, target: jnp.ndarray, tol: float = 0.35) -> jnp.ndarray:
+    """mAP@0.5 proxy: count images whose argmax-objectness cell matches
+    the ground-truth cell, with the right class and box error under
+    ``tol`` (see DESIGN.md §2 — Mask-RCNN AP substitution)."""
+    b, g, _, _ = pred.shape
+    obj = pred[..., 0].reshape(b, -1)
+    pred_cell = jnp.argmax(obj, axis=-1)
+    true_cell = jnp.argmax(target[..., 0].reshape(b, -1), axis=-1)
+    cell_ok = pred_cell == true_cell
+
+    idx = true_cell  # evaluate box/class at the true cell
+    flat_pred = pred.reshape(b, g * g, -1)
+    flat_t = target.reshape(b, g * g, -1)
+    at_p = jnp.take_along_axis(flat_pred, idx[:, None, None], axis=1)[:, 0]
+    at_t = jnp.take_along_axis(flat_t, idx[:, None, None], axis=1)[:, 0]
+    cls_ok = jnp.argmax(at_p[:, 4:], axis=-1) == at_t[:, 4].astype(jnp.int32)
+    box_ok = jnp.sum(jnp.abs(at_p[:, 1:4] - at_t[:, 1:4]), axis=-1) < tol
+    return jnp.sum((cell_ok & cls_ok & box_ok).astype(jnp.float32))
+
+
+def denoise_loss(pred_eps: jnp.ndarray, eps: jnp.ndarray) -> jnp.ndarray:
+    """DDPM epsilon-prediction MSE (Eq. 9 with y = true noise)."""
+    return jnp.mean(jnp.sum((pred_eps - eps) ** 2, axis=-1))
+
+
+def kd_loss(student_feats, teacher_feats) -> jnp.ndarray:
+    """Block-wise KD (Eq. 10): sum over main blocks of feature MSE."""
+    total = jnp.float32(0.0)
+    for s, t in zip(student_feats, teacher_feats):
+        total = total + jnp.mean((s - t) ** 2)
+    return total
+
+
+def ratio_regularizer(
+    ratios: jnp.ndarray, unset_mask: jnp.ndarray | None = None
+) -> jnp.ndarray:
+    """Eq. 11 over unfrozen groups only (§4.3)."""
+    s, n = ratios.shape
+    per_group = jnp.sum(ratios * (1.0 - ratios), axis=-1)
+    if unset_mask is not None:
+        per_group = per_group * unset_mask
+    return jnp.float32(n) * jnp.sum(per_group) / jnp.float32(s)

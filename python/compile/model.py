@@ -1,0 +1,20 @@
+"""Layer-2 public surface (compat shim).
+
+The model code is organized across :mod:`compile.nets` (architectures),
+:mod:`compile.vqlayers` (VQ reconstruction), :mod:`compile.losses`,
+:mod:`compile.optim`, and :mod:`compile.train` (step factory).  This
+module re-exports the main entry points under the path the repo scaffold
+documents (``python/compile/model.py``).
+"""
+
+from .nets import BUILDERS, Net, WeightLayer, build_net  # noqa: F401
+from .train import StepFns, make_step_fns, pretrain  # noqa: F401
+from .vqlayers import (  # noqa: F401
+    Layout,
+    effective_ratios,
+    extract_subvectors,
+    hard_codes,
+    make_layout,
+    student_params,
+    weights_from_flat,
+)

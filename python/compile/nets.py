@@ -1,0 +1,399 @@
+"""The functional network zoo (Layer 2).
+
+Every architecture is expressed as a pure function over an explicit,
+ordered parameter dict — no framework modules — so the same forward code
+runs with float weights (teacher / pretraining) and with VQ-reconstructed
+weights (the differentiable construction path), and so the full parameter
+list can be flattened into a stable calling convention for the AOT
+artifacts.
+
+Zoo members (substitutes per DESIGN.md §2):
+
+* ``mlp``        — quickstart target.
+* ``resnet18`` / ``resnet50`` — basic-block / bottleneck residual CNNs
+  (the paper's ResNet-18/50 stand-ins).
+* ``mobilenet``  — depthwise-separable inverted-residual CNN
+  (MobileNet-V2 stand-in; depthwise kernels are excluded from VQ just
+  like the paper excludes layers whose geometry fights the sub-vector
+  grid — documented in DESIGN.md).
+* ``detector``   — conv backbone + dense detection head over a cell grid
+  (Mask-RCNN stand-in).
+* ``denoiser``   — conditional MLP epsilon-predictor for a 2-D DDPM
+  (Stable-Diffusion stand-in).
+
+Normalization is running-stat-free channel normalization (per-sample,
+per-channel standardization over spatial positions with learned
+scale/shift).  This keeps the AOT state machine free of BN running-stat
+plumbing while still giving VQ4ALL its "other parameters" (§4.2) to
+fine-tune — the substitution is recorded in DESIGN.md §2.
+
+Block features: every ``forward`` returns ``(output, feats)`` where
+``feats`` is the list of main-block outputs used by the block-wise
+knowledge-distillation loss (Eq. 10); block boundaries follow the paper's
+supplementary §11 (residual blocks / inverted residuals / backbone stages
+/ hidden blocks).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DETECT_GRID = 6
+DETECT_CLASSES = 3
+TIME_EMBED = 14  # denoiser time-embedding dims (x:2 + emb:14 = 16, d | 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightLayer:
+    """One VQ-compressible (or explicitly excluded) weight tensor."""
+
+    name: str  # param key
+    kind: str  # dense | conv | depthwise
+    shape: tuple[int, ...]  # stored param shape (dense: (I, O); conv: HWIO)
+    compress: bool  # False for input/output/depthwise exclusions
+
+    @property
+    def row_major_out_first(self) -> tuple[int, int]:
+        """(O, fan_in) of the (O, I') matrix the paper sub-divides (Eq. 1)."""
+        if self.kind == "dense":
+            i, o = self.shape
+            return o, i
+        if self.kind in ("conv", "depthwise"):
+            h, w, i, o = self.shape
+            return o, h * w * i
+        raise ValueError(f"unknown kind {self.kind}")
+
+
+@dataclasses.dataclass
+class Net:
+    """A zoo member: init params + forward + layer table."""
+
+    name: str
+    forward: Callable  # (params: dict[str, Array], x) -> (out, feats)
+    params: dict[str, jnp.ndarray]
+    weight_layers: list[WeightLayer]
+
+    def param_names(self) -> list[str]:
+        return list(self.params.keys())
+
+    def compressed_layers(self) -> list[WeightLayer]:
+        return [l for l in self.weight_layers if l.compress]
+
+    def other_names(self) -> list[str]:
+        comp = {l.name for l in self.compressed_layers()}
+        return [k for k in self.params if k not in comp]
+
+
+# --------------------------------------------------------------- helpers
+
+
+def _split_key(key, num):
+    return jax.random.split(key, num)
+
+
+def _he_conv(key, h, w, i, o):
+    std = float(np.sqrt(2.0 / (h * w * i)))
+    return jax.random.normal(key, (h, w, i, o), jnp.float32) * std
+
+
+def _he_dense(key, i, o):
+    std = float(np.sqrt(2.0 / i))
+    return jax.random.normal(key, (i, o), jnp.float32) * std
+
+
+def conv2d(x, w, stride: int = 1, groups: int = 1):
+    """NHWC x HWIO convolution with SAME padding."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+
+
+def channel_norm(x, gamma, beta, eps: float = 1e-5):
+    """Per-sample, per-channel standardization over spatial dims."""
+    if x.ndim == 4:
+        mean = jnp.mean(x, axis=(1, 2), keepdims=True)
+        var = jnp.var(x, axis=(1, 2), keepdims=True)
+    else:  # dense activations: normalize over features
+        mean = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    return y * gamma + beta
+
+
+def time_embedding(t, dims: int = TIME_EMBED, max_t: float = 50.0):
+    """Sinusoidal timestep embedding for the denoiser."""
+    half = dims // 2
+    freqs = jnp.exp(jnp.linspace(0.0, 4.0, half))
+    ang = (t.astype(jnp.float32) / max_t)[:, None] * freqs[None, :] * 2.0 * jnp.pi
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+class _Builder:
+    """Accumulates params + layer table in deterministic order."""
+
+    def __init__(self, key):
+        self.params: dict[str, jnp.ndarray] = {}
+        self.layers: list[WeightLayer] = []
+        self._key = key
+
+    def key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def conv(self, name, h, w, i, o, compress=True, kind="conv"):
+        self.params[f"{name}.w"] = _he_conv(self.key(), h, w, i, o)
+        self.layers.append(WeightLayer(f"{name}.w", kind, (h, w, i, o), compress))
+        self.params[f"{name}.g"] = jnp.ones((o,), jnp.float32)
+        self.params[f"{name}.b"] = jnp.zeros((o,), jnp.float32)
+
+    def dense(self, name, i, o, compress=True, norm=True):
+        self.params[f"{name}.w"] = _he_dense(self.key(), i, o)
+        self.layers.append(WeightLayer(f"{name}.w", "dense", (i, o), compress))
+        self.params[f"{name}.b"] = jnp.zeros((o,), jnp.float32)
+        if norm:
+            self.params[f"{name}.g"] = jnp.ones((o,), jnp.float32)
+            self.params[f"{name}.nb"] = jnp.zeros((o,), jnp.float32)
+
+
+def _conv_block(p, name, x, stride=1, groups=1, relu=True):
+    y = conv2d(x, p[f"{name}.w"], stride=stride, groups=groups)
+    y = channel_norm(y, p[f"{name}.g"], p[f"{name}.b"])
+    return jax.nn.relu(y) if relu else y
+
+
+def _dense_block(p, name, x, relu=True, norm=True):
+    y = x @ p[f"{name}.w"] + p[f"{name}.b"]
+    if norm:
+        y = channel_norm(y, p[f"{name}.g"], p[f"{name}.nb"])
+    return jax.nn.relu(y) if relu else y
+
+
+# ------------------------------------------------------------------- MLP
+
+
+def build_mlp(key, input_shape=(16, 16, 3), num_classes=10) -> Net:
+    b = _Builder(key)
+    in_dim = int(np.prod(input_shape))
+    b.dense("fc1", in_dim, 256)
+    b.dense("fc2", 256, 128)
+    b.dense("out", 128, num_classes, compress=False, norm=False)
+
+    def forward(p, x):
+        h = x.reshape(x.shape[0], -1)
+        feats = []
+        h = _dense_block(p, "fc1", h)
+        feats.append(h)
+        h = _dense_block(p, "fc2", h)
+        feats.append(h)
+        return h @ p["out.w"] + p["out.b"], feats
+
+    return Net("mini_mlp", forward, b.params, b.layers)
+
+
+# ---------------------------------------------------------------- ResNets
+
+
+def _basic_block(p, name, x, cin, cout, stride):
+    y = _conv_block(p, f"{name}.c1", x, stride=stride)
+    y = _conv_block(p, f"{name}.c2", y, relu=False)
+    if stride != 1 or cin != cout:
+        x = conv2d(x, p[f"{name}.proj.w"], stride=stride)
+        x = channel_norm(x, p[f"{name}.proj.g"], p[f"{name}.proj.b"])
+    return jax.nn.relu(x + y)
+
+
+def _bottleneck(p, name, x, cin, cmid, cout, stride):
+    y = _conv_block(p, f"{name}.c1", x)
+    y = _conv_block(p, f"{name}.c2", y, stride=stride)
+    y = _conv_block(p, f"{name}.c3", y, relu=False)
+    if stride != 1 or cin != cout:
+        x = conv2d(x, p[f"{name}.proj.w"], stride=stride)
+        x = channel_norm(x, p[f"{name}.proj.g"], p[f"{name}.proj.b"])
+    return jax.nn.relu(x + y)
+
+
+def build_resnet18(key, input_shape=(16, 16, 3), num_classes=10) -> Net:
+    """2-stage basic-block residual net (ResNet-18 stand-in)."""
+    b = _Builder(key)
+    b.conv("stem", 3, 3, 3, 16, compress=False)  # input layer: excluded (§5.1)
+    cfg = [("s1b1", 16, 16, 1), ("s1b2", 16, 16, 1), ("s2b1", 16, 32, 2), ("s2b2", 32, 32, 1)]
+    for name, cin, cout, stride in cfg:
+        b.conv(f"{name}.c1", 3, 3, cin, cout)
+        b.conv(f"{name}.c2", 3, 3, cout, cout)
+        if stride != 1 or cin != cout:
+            b.conv(f"{name}.proj", 1, 1, cin, cout)
+    b.dense("head", 32, num_classes, compress=False, norm=False)  # output layer: excluded
+
+    def forward(p, x):
+        h = _conv_block(p, "stem", x)
+        feats = []
+        for name, cin, cout, stride in cfg:
+            h = _basic_block(p, name, h, cin, cout, stride)
+            feats.append(h)
+        h = jnp.mean(h, axis=(1, 2))
+        return h @ p["head.w"] + p["head.b"], feats
+
+    return Net("mini_resnet18", forward, b.params, b.layers)
+
+
+def build_resnet50(key, input_shape=(16, 16, 3), num_classes=10) -> Net:
+    """2-stage bottleneck residual net (ResNet-50 stand-in)."""
+    b = _Builder(key)
+    b.conv("stem", 3, 3, 3, 32, compress=False)
+    cfg = [
+        ("s1b1", 32, 16, 64, 1),
+        ("s1b2", 64, 16, 64, 1),
+        ("s2b1", 64, 32, 128, 2),
+        ("s2b2", 128, 32, 128, 1),
+    ]
+    for name, cin, cmid, cout, stride in cfg:
+        b.conv(f"{name}.c1", 1, 1, cin, cmid)
+        b.conv(f"{name}.c2", 3, 3, cmid, cmid)
+        b.conv(f"{name}.c3", 1, 1, cmid, cout)
+        if stride != 1 or cin != cout:
+            b.conv(f"{name}.proj", 1, 1, cin, cout)
+    b.dense("head", 128, num_classes, compress=False, norm=False)
+
+    def forward(p, x):
+        h = _conv_block(p, "stem", x)
+        feats = []
+        for name, cin, cmid, cout, stride in cfg:
+            h = _bottleneck(p, name, h, cin, cmid, cout, stride)
+            feats.append(h)
+        h = jnp.mean(h, axis=(1, 2))
+        return h @ p["head.w"] + p["head.b"], feats
+
+    return Net("mini_resnet50", forward, b.params, b.layers)
+
+
+# -------------------------------------------------------------- MobileNet
+
+
+def build_mobilenet(key, input_shape=(16, 16, 3), num_classes=10) -> Net:
+    """Inverted-residual depthwise-separable net (MobileNet-V2 stand-in).
+
+    Depthwise kernels have fan-in 9 per output channel, which does not
+    divide the paper's d ∈ {4, 8, ...}; like the paper's special-case
+    layers they are left uncompressed (DESIGN.md §2).
+    """
+    b = _Builder(key)
+    b.conv("stem", 3, 3, 3, 16, compress=False)
+    cfg = [("ir1", 16, 48, 24, 1), ("ir2", 24, 72, 32, 2), ("ir3", 32, 96, 32, 1)]
+    for name, cin, cexp, cout, stride in cfg:
+        b.conv(f"{name}.expand", 1, 1, cin, cexp)
+        b.conv(f"{name}.dw", 3, 3, 1, cexp, compress=False, kind="depthwise")
+        b.conv(f"{name}.project", 1, 1, cexp, cout)
+    b.dense("head", 32, num_classes, compress=False, norm=False)
+
+    def forward(p, x):
+        h = _conv_block(p, "stem", x)
+        feats = []
+        for name, cin, cexp, cout, stride in cfg:
+            y = _conv_block(p, f"{name}.expand", h)
+            y = conv2d(y, p[f"{name}.dw.w"], stride=stride, groups=cexp)
+            y = channel_norm(y, p[f"{name}.dw.g"], p[f"{name}.dw.b"])
+            y = jax.nn.relu(y)
+            y = _conv_block(p, f"{name}.project", y, relu=False)
+            if stride == 1 and cin == cout:
+                y = y + h
+            h = y
+            feats.append(h)
+        # channel_norm makes each channel zero-mean over space, which a
+        # plain GAP would collapse to ~0; ReLU first keeps the pooled
+        # representation informative (MobileNet-V2 ends with a ReLU6 conv
+        # before pooling for the same reason).
+        h = jnp.mean(jax.nn.relu(h), axis=(1, 2))
+        return h @ p["head.w"] + p["head.b"], feats
+
+    return Net("mini_mobilenet", forward, b.params, b.layers)
+
+
+# --------------------------------------------------------------- Detector
+
+
+def build_detector(key, input_shape=(24, 24, 3), num_classes=DETECT_CLASSES) -> Net:
+    """Conv backbone + per-cell detection head (Mask-RCNN stand-in).
+
+    Head output per cell: [obj_logit, cx, cy, size, class_logits...].
+    """
+    b = _Builder(key)
+    b.conv("stem", 3, 3, 3, 16, compress=False)
+    b.conv("c1", 3, 3, 16, 32)
+    b.conv("c2", 3, 3, 32, 32)
+    b.conv("c3", 3, 3, 32, 48)
+    out_ch = 4 + num_classes
+    b.conv("head", 1, 1, 48, out_ch, compress=False)
+
+    def forward(p, x):
+        h = _conv_block(p, "stem", x)  # 24x24x16
+        feats = []
+        h = _conv_block(p, "c1", h, stride=2)  # 12x12x32
+        feats.append(h)
+        h = _conv_block(p, "c2", h)  # 12x12x32
+        feats.append(h)
+        h = _conv_block(p, "c3", h, stride=2)  # 6x6x48
+        feats.append(h)
+        out = conv2d(h, p["head.w"]) + p["head.b"]  # 6x6x(4+C)
+        return out, feats
+
+    return Net("mini_detector", forward, b.params, b.layers)
+
+
+# --------------------------------------------------------------- Denoiser
+
+
+def build_denoiser(key, input_shape=(2,), num_classes=0) -> Net:
+    """Conditional epsilon-predictor for 2-D DDPM (Stable-Diffusion stand-in).
+
+    Input is ``concat(x_t, time_embedding(t))``; output is predicted noise.
+    """
+    b = _Builder(key)
+    in_dim = 2 + TIME_EMBED  # 16
+    b.dense("fc1", in_dim, 128)
+    b.dense("fc2", 128, 128)
+    b.dense("fc3", 128, 128)
+    b.dense("out", 128, 2, compress=False, norm=False)
+
+    def forward(p, xt):
+        # xt packs (x_t, t) as (B, 3): columns 0..1 = x, column 2 = t.
+        x = xt[:, :2]
+        t = xt[:, 2]
+        h = jnp.concatenate([x, time_embedding(t)], axis=1)
+        feats = []
+        h = _dense_block(p, "fc1", h)
+        feats.append(h)
+        h = _dense_block(p, "fc2", h)
+        feats.append(h)
+        h = _dense_block(p, "fc3", h)
+        feats.append(h)
+        return h @ p["out.w"] + p["out.b"], feats
+
+    return Net("mini_denoiser", forward, b.params, b.layers)
+
+
+BUILDERS = {
+    "mlp": build_mlp,
+    "resnet18": build_resnet18,
+    "resnet50": build_resnet50,
+    "mobilenet": build_mobilenet,
+    "detector": build_detector,
+    "denoiser": build_denoiser,
+}
+
+
+def build_net(spec) -> Net:
+    """Construct a zoo member from its :class:`~compile.zoo.NetSpec`."""
+    key = jax.random.PRNGKey(spec.seed)
+    net = BUILDERS[spec.arch](key, input_shape=spec.input_shape, num_classes=max(spec.num_classes, 1))
+    net.name = spec.name
+    return net

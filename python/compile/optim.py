@@ -1,0 +1,57 @@
+"""Hand-rolled optimizers (optax is not part of the build image).
+
+Two optimizers, matching §5's hyper-parameters:
+
+* :func:`adamax_update` — Adamax for the ratio logits ``z``
+  (lr 3e-1; infinity-norm second moment, as in Kingma & Ba §7.1).
+* :func:`adam_update`   — Adam for the other parameters (bias / norm),
+  lr 1e-3.
+
+State is carried as explicit tensors so the whole optimizer threads
+through the AOT artifact interface: the Rust coordinator owns the state
+buffers and feeds them back every step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+B1 = 0.9
+B2 = 0.999
+EPS = 1e-8
+
+
+def adamax_update(p, g, m, u, t, lr):
+    """One Adamax step.  ``t`` is the 1-based step count (f32 scalar).
+
+    Returns ``(p_new, m_new, u_new)``.
+    """
+    m_new = B1 * m + (1.0 - B1) * g
+    u_new = jnp.maximum(B2 * u, jnp.abs(g))
+    # Bias correction only on the first moment (Adamax has none on u).
+    m_hat = m_new / (1.0 - B1**t)
+    return p - lr * m_hat / (u_new + EPS), m_new, u_new
+
+
+def adam_update(p, g, m, v, t, lr):
+    """One Adam step.  Returns ``(p_new, m_new, v_new)``."""
+    m_new = B1 * m + (1.0 - B1) * g
+    v_new = B2 * v + (1.0 - B2) * g * g
+    m_hat = m_new / (1.0 - B1**t)
+    v_hat = v_new / (1.0 - B2**t)
+    return p - lr * m_hat / (jnp.sqrt(v_hat) + EPS), m_new, v_new
+
+
+def adam_update_tree(params, grads, ms, vs, t, lr):
+    """Adam over a dict of tensors; returns (params, ms, vs) dicts."""
+    out_p, out_m, out_v = {}, {}, {}
+    for k in params:
+        out_p[k], out_m[k], out_v[k] = adam_update(params[k], grads[k], ms[k], vs[k], t, lr)
+    return out_p, out_m, out_v
+
+
+def cosine_lr(base_lr: float, step, total_steps: int):
+    """Cosine annealing (§5.1 uses a cosine scheduler for 'other' params)."""
+    frac = jnp.clip(step / float(max(total_steps, 1)), 0.0, 1.0)
+    return base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))

@@ -1,0 +1,67 @@
+"""``.vqt`` tensor-file codec — the python half of the interchange format.
+
+Layout (little-endian throughout), mirrored by ``rust/src/tensor/io.rs``:
+
+    magic   4 bytes   b"VQT1"
+    dtype   u32       0 = f32, 1 = i32, 2 = u32, 3 = f64, 4 = i64, 5 = u8
+    ndim    u32
+    dims    ndim * u64
+    data    raw row-major payload
+
+Kept deliberately trivial: no compression, no alignment games — the Rust
+reader memory-maps nothing and simply reads the stream, so the format is
+portable and diff-able.
+"""
+
+from __future__ import annotations
+
+import struct
+from pathlib import Path
+
+import numpy as np
+
+MAGIC = b"VQT1"
+
+_DTYPES: list[tuple[int, np.dtype]] = [
+    (0, np.dtype("<f4")),
+    (1, np.dtype("<i4")),
+    (2, np.dtype("<u4")),
+    (3, np.dtype("<f8")),
+    (4, np.dtype("<i8")),
+    (5, np.dtype("u1")),
+]
+_TO_TAG = {dt: tag for tag, dt in _DTYPES}
+_FROM_TAG = {tag: dt for tag, dt in _DTYPES}
+
+
+def write_tensor(path: str | Path, arr: np.ndarray) -> None:
+    """Write ``arr`` as a .vqt file (canonicalizing to LE, C-order)."""
+    arr = np.ascontiguousarray(arr)
+    dt = arr.dtype.newbyteorder("<")
+    if dt not in _TO_TAG:
+        raise TypeError(f"unsupported dtype {arr.dtype}")
+    arr = arr.astype(dt, copy=False)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", _TO_TAG[dt], arr.ndim))
+        f.write(struct.pack(f"<{arr.ndim}Q", *arr.shape))
+        f.write(arr.tobytes())
+
+
+def read_tensor(path: str | Path) -> np.ndarray:
+    """Read a .vqt file back into a numpy array."""
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        if magic != MAGIC:
+            raise ValueError(f"{path}: bad magic {magic!r}")
+        tag, ndim = struct.unpack("<II", f.read(8))
+        if tag not in _FROM_TAG:
+            raise ValueError(f"{path}: unknown dtype tag {tag}")
+        dims = struct.unpack(f"<{ndim}Q", f.read(8 * ndim)) if ndim else ()
+        dt = _FROM_TAG[tag]
+        count = int(np.prod(dims)) if ndim else 1
+        payload = f.read(count * dt.itemsize)
+        if len(payload) != count * dt.itemsize:
+            raise ValueError(f"{path}: truncated payload")
+        arr = np.frombuffer(payload, dtype=dt, count=count)
+        return arr.reshape(dims).copy()

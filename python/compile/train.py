@@ -1,0 +1,444 @@
+"""Step-function factory (Layer 2): pretraining + the VQ4ALL construction
+steps that get AOT-lowered for the Rust coordinator.
+
+Calling convention (mirrored in artifacts/manifest.json, consumed by
+``rust/src/runtime/artifact.rs``):
+
+``train_step`` inputs, in order::
+
+    z (S,n) f32 | m_z (S,n) | u_z (S,n)          ratio logits + Adamax state
+    other_0..other_{P-1}                          trainable bias/norm/excluded
+    m_0..m_{P-1} | v_0..v_{P-1}                   Adam state for the others
+    t (1,) f32                                    1-based step counter
+    assign (S,n) i32                              candidate table (static)
+    frozen (S,) f32 | frozen_idx (S,) i32         PNC state (Rust-owned)
+    codebook (K,d) f32                            frozen universal codebook
+    teacher_flat (S,d) f32                        float sub-vectors (L_kd)
+    teacher_other_0..teacher_other_{P-1}          float other params (L_kd)
+    <batch>                                       task-specific, see below
+
+outputs, in order::
+
+    z | m_z | u_z | other_* | m_* | v_* | t      updated state (same order)
+    metrics (4,) f32                              [L, L_t, L_kd, L_r]
+
+Batch per task: ``classify`` -> ``x (B,H,W,C) f32, y (B,) i32``;
+``detect`` -> ``x (B,H,W,C) f32, y (B,G,G,5) f32``; ``denoise`` ->
+``x0 (B,2) f32, tdiff (B,) i32, eps (B,2) f32`` (Rust draws tdiff/eps).
+
+The PNC freeze decision itself lives in Rust (`coordinator/pnc.rs`): the
+step only *consumes* ``frozen``/``frozen_idx``.  That split is the paper's
+Algorithm 1 — line 10 (gradient update) is this module, lines 11-14
+(threshold & freeze) are the coordinator.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import losses, optim, vqlayers
+from .kernels import distance as pk_distance
+from .kernels import ref as pk_ref
+from .kernels import vq_matmul as pk_vq_matmul
+from .nets import DETECT_GRID, Net, build_net
+from .zoo import NetSpec, VqConfig
+
+TOTAL_VQ_STEPS = 400  # cosine-anneal horizon for the 'other' lr (§5.1)
+
+
+# ------------------------------------------------------------ task batches
+
+
+def batch_specs(spec: NetSpec) -> list[tuple[str, tuple[int, ...], str]]:
+    """(name, shape, dtype) of the train batch inputs for one network."""
+    b = spec.batch
+    if spec.task == "classify":
+        return [("x", (b, *spec.input_shape), "f32"), ("y", (b,), "i32")]
+    if spec.task == "detect":
+        g = DETECT_GRID
+        return [("x", (b, *spec.input_shape), "f32"), ("y", (b, g, g, 5), "f32")]
+    if spec.task == "denoise":
+        return [
+            ("x0", (b, 2), "f32"),
+            ("tdiff", (b,), "i32"),
+            ("eps", (b, 2), "f32"),
+        ]
+    raise ValueError(spec.task)
+
+
+def eval_batch_specs(spec: NetSpec) -> list[tuple[str, tuple[int, ...], str]]:
+    out = []
+    for name, shape, dt in batch_specs(spec):
+        out.append((name, (spec.eval_batch, *shape[1:]), dt))
+    return out
+
+
+def _task_forward_loss(spec: NetSpec, net: Net, params, batch, schedule):
+    """Forward + task loss; returns (loss_t, feats, aux_for_metric)."""
+    if spec.task == "classify":
+        x, y = batch
+        logits, feats = net.forward(params, x)
+        return losses.cross_entropy(logits, y), feats, logits
+    if spec.task == "detect":
+        x, y = batch
+        pred, feats = net.forward(params, x)
+        return losses.detect_loss(pred, y), feats, pred
+    if spec.task == "denoise":
+        x0, tdiff, eps = batch
+        sa = jnp.take(schedule["sqrt_abar"], tdiff)[:, None]
+        sb = jnp.take(schedule["sqrt_1m_abar"], tdiff)[:, None]
+        xt = sa * x0 + sb * eps
+        pack = jnp.concatenate([xt, tdiff.astype(jnp.float32)[:, None]], axis=1)
+        pred, feats = net.forward(params, pack)
+        return losses.denoise_loss(pred, eps), feats, pred
+    raise ValueError(spec.task)
+
+
+def _task_metrics(spec: NetSpec, aux, batch) -> jnp.ndarray:
+    """(2,) f32 = [loss-like sum, hit count] — Rust aggregates over batches."""
+    if spec.task == "classify":
+        _, y = batch
+        ce = losses.cross_entropy(aux, y) * aux.shape[0]
+        return jnp.stack([ce, losses.classify_correct(aux, y)])
+    if spec.task == "detect":
+        _, y = batch
+        ls = losses.detect_loss(aux, y) * aux.shape[0]
+        return jnp.stack([ls, losses.detect_hits(aux, y)])
+    if spec.task == "denoise":
+        x0, tdiff, eps = batch
+        mse = losses.denoise_loss(aux, eps) * aux.shape[0]
+        return jnp.stack([mse, jnp.float32(0.0)])
+    raise ValueError(spec.task)
+
+
+# ------------------------------------------------------------- pretraining
+
+
+def pretrain(net: Net, spec: NetSpec, x: np.ndarray, y: np.ndarray) -> tuple[dict, float]:
+    """Float pretraining (build-time substitute for the paper's official
+    pretrained checkpoints — DESIGN.md §2).  Plain Adam + task loss."""
+    schedule = {k: jnp.asarray(v) for k, v in data_mod.diffusion_schedule().items()}
+    params = dict(net.params)
+    ms = {k: jnp.zeros_like(v) for k, v in params.items()}
+    vs = {k: jnp.zeros_like(v) for k, v in params.items()}
+    key = jax.random.PRNGKey(spec.seed + 77)
+
+    def loss_fn(p, batch):
+        l, _, aux = _task_forward_loss(spec, net, p, batch, schedule)
+        return l, aux
+
+    @jax.jit
+    def step(params, ms, vs, t, batch):
+        (l, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        params, ms, vs = optim.adam_update_tree(params, grads, ms, vs, t, spec.pretrain_lr)
+        return params, ms, vs, l
+
+    n = x.shape[0]
+    for i in range(spec.pretrain_steps):
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        idx = jax.random.randint(k1, (spec.batch,), 0, n)
+        if spec.task == "denoise":
+            batch = (
+                jnp.asarray(x)[idx],
+                jax.random.randint(k2, (spec.batch,), 0, len(data_mod.diffusion_schedule()["betas"])),
+                jax.random.normal(k3, (spec.batch, 2)),
+            )
+        else:
+            batch = (jnp.asarray(x)[idx], jnp.asarray(y)[idx])
+        params, ms, vs, l = step(params, ms, vs, jnp.float32(i + 1), batch)
+    return params, float(l)
+
+
+def eval_float(net: Net, spec: NetSpec, params, x, y, seed: int = 0) -> tuple[float, float]:
+    """Float metric over a full split: (mean loss, accuracy-or-hit-rate)."""
+    schedule = {k: jnp.asarray(v) for k, v in data_mod.diffusion_schedule().items()}
+    key = jax.random.PRNGKey(seed)
+    bs = spec.eval_batch
+    total = np.zeros(2)
+    count = 0
+    for off in range(0, (x.shape[0] // bs) * bs, bs):
+        if spec.task == "denoise":
+            key, k1, k2 = jax.random.split(key, 3)
+            batch = (
+                jnp.asarray(x[off : off + bs]),
+                jax.random.randint(k1, (bs,), 0, 50),
+                jax.random.normal(k2, (bs, 2)),
+            )
+        else:
+            batch = (jnp.asarray(x[off : off + bs]), jnp.asarray(y[off : off + bs]))
+        _, _, aux = _task_forward_loss(spec, net, params, batch, schedule)
+        m = np.asarray(_task_metrics(spec, aux, batch))
+        total += m
+        count += bs
+    return float(total[0] / count), float(total[1] / count)
+
+
+# --------------------------------------------------------- VQ step factory
+
+
+class StepFns:
+    """Bundle of lowering-ready functions + their input specs for one net."""
+
+    def __init__(self, net: Net, spec: NetSpec, cfg: VqConfig):
+        self.net = net
+        self.spec = spec
+        self.cfg = cfg
+        self.layout = vqlayers.make_layout(net, cfg.d)
+        self.other_names = net.other_names()
+        self.schedule = {
+            k: jnp.asarray(v) for k, v in data_mod.diffusion_schedule().items()
+        }
+
+    # -- signature helpers -------------------------------------------------
+
+    @property
+    def s_total(self) -> int:
+        return self.layout.s_total
+
+    def state_specs(self) -> list[tuple[str, tuple[int, ...], str]]:
+        s, n = self.s_total, self.cfg.n
+        specs = [("z", (s, n), "f32"), ("m_z", (s, n), "f32"), ("u_z", (s, n), "f32")]
+        for prefix in ("other", "m_other", "v_other"):
+            for name in self.other_names:
+                shape = tuple(self.net.params[name].shape)
+                specs.append((f"{prefix}:{name}", shape, "f32"))
+        specs.append(("t", (1,), "f32"))
+        return specs
+
+    def static_specs(self) -> list[tuple[str, tuple[int, ...], str]]:
+        s, n = self.s_total, self.cfg.n
+        k, d = self.cfg.k, self.cfg.d
+        specs = [
+            ("assign", (s, n), "i32"),
+            ("frozen", (s,), "f32"),
+            ("frozen_idx", (s,), "i32"),
+            ("codebook", (k, d), "f32"),
+            ("teacher_flat", (s, d), "f32"),
+            # Per-term loss weights [w_t, w_kd, w_r] — 1.0 in the paper's
+            # Eq. 12; zeroing a term is Table 5's component ablation.
+            ("loss_w", (3,), "f32"),
+        ]
+        for name in self.other_names:
+            specs.append((f"teacher:{name}", tuple(self.net.params[name].shape), "f32"))
+        return specs
+
+    def _unpack(self, args, specs):
+        assert len(args) == len(specs), f"{len(args)} args vs {len(specs)} specs"
+        return {name: a for a, (name, _, _) in zip(args, specs)}
+
+    def _others_from(self, st, prefix="other") -> dict:
+        return {name: st[f"{prefix}:{name}"] for name in self.other_names}
+
+    # -- the functions to lower ---------------------------------------------
+
+    def init_assign(self, wsub, codebook):
+        """Candidate table + initial logits (Eq. 5 + Eq. 7).
+
+        Runs the Pallas distance kernel over the network's sub-vectors.
+        """
+        a, sq = pk_distance.topn_candidates(wsub, codebook, self.cfg.n)
+        z0 = pk_ref.init_ratio_logits(sq)
+        return a, z0
+
+    def train_step(self, *args):
+        sspecs = self.state_specs()
+        tspecs = self.static_specs()
+        bspecs = batch_specs(self.spec)
+        ns, nt = len(sspecs), len(tspecs)
+        st = self._unpack(args[:ns], sspecs)
+        static = self._unpack(args[ns : ns + nt], tspecs)
+        batch = args[ns + nt :]
+        assert len(batch) == len(bspecs)
+
+        teacher_params = dict(self._teacher_params(static))
+        t_now = st["t"][0] + 1.0
+
+        def loss_fn(z, others):
+            params = vqlayers.student_params(
+                z,
+                static["frozen"],
+                static["frozen_idx"],
+                static["assign"],
+                static["codebook"],
+                others,
+                self.layout,
+            )
+            l_t, feats, _aux = _task_forward_loss(self.spec, self.net, params, batch, self.schedule)
+            _, t_feats, _ = _task_forward_loss(
+                self.spec, self.net, teacher_params, batch, self.schedule
+            )
+            l_kd = losses.kd_loss(feats, t_feats)
+            r = vqlayers.effective_ratios(z, static["frozen"], static["frozen_idx"])
+            l_r = losses.ratio_regularizer(r, 1.0 - static["frozen"])
+            w = static["loss_w"]
+            total = w[0] * l_t + w[1] * l_kd + w[2] * l_r
+            return total, (l_t, l_kd, l_r)
+
+        others = self._others_from(st)
+        (l, (l_t, l_kd, l_r)), grads = jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)(
+            st["z"], others
+        )
+        gz, gothers = grads
+
+        z_new, mz, uz = optim.adamax_update(
+            st["z"], gz, st["m_z"], st["u_z"], t_now, self.cfg.lr_ratios
+        )
+        lr_o = optim.cosine_lr(self.cfg.lr_other, t_now, TOTAL_VQ_STEPS)
+        o_new, m_new, v_new = optim.adam_update_tree(
+            others,
+            gothers,
+            self._others_from(st, "m_other"),
+            self._others_from(st, "v_other"),
+            t_now,
+            lr_o,
+        )
+
+        outs = [z_new, mz, uz]
+        outs += [o_new[nm] for nm in self.other_names]
+        outs += [m_new[nm] for nm in self.other_names]
+        outs += [v_new[nm] for nm in self.other_names]
+        outs.append(st["t"] + 1.0)
+        outs.append(jnp.stack([l, l_t, l_kd, l_r]))
+        return tuple(outs)
+
+    def _teacher_params(self, static) -> dict:
+        params = {n2: static[f"teacher:{n2}"] for n2 in self.other_names}
+        params.update(vqlayers.weights_from_flat(static["teacher_flat"], self.layout))
+        return params
+
+    def eval_soft(self, *args):
+        """Eval with soft (ratio-weighted) weights — the construction-time
+        accuracy curve of Figure 3 (no PNC collapse applied)."""
+        s, n = self.s_total, self.cfg.n
+        specs = (
+            [("z", (s, n), "f32")]
+            + [(f"other:{nm}", tuple(self.net.params[nm].shape), "f32") for nm in self.other_names]
+            + [
+                ("assign", (s, n), "i32"),
+                ("frozen", (s,), "f32"),
+                ("frozen_idx", (s,), "i32"),
+                ("codebook", (self.cfg.k, self.cfg.d), "f32"),
+            ]
+        )
+        nb = len(eval_batch_specs(self.spec))
+        st = self._unpack(args[: len(specs)], specs)
+        batch = args[len(specs) :]
+        assert len(batch) == nb
+        params = vqlayers.student_params(
+            st["z"], st["frozen"], st["frozen_idx"], st["assign"], st["codebook"],
+            self._others_from(st), self.layout,
+        )
+        _, _, aux = _task_forward_loss(self.spec, self.net, params, batch, self.schedule)
+        return _task_metrics(self.spec, aux, batch)
+
+    def eval_hard(self, *args):
+        """Eval with final hard codes (Eq. 2) — the deliverable network."""
+        s = self.s_total
+        specs = (
+            [("codes", (s,), "i32")]
+            + [(f"other:{nm}", tuple(self.net.params[nm].shape), "f32") for nm in self.other_names]
+            + [("codebook", (self.cfg.k, self.cfg.d), "f32")]
+        )
+        st = self._unpack(args[: len(specs)], specs)
+        batch = args[len(specs) :]
+        params = vqlayers.hard_params(st["codes"], st["codebook"], self._others_from(st), self.layout)
+        _, _, aux = _task_forward_loss(self.spec, self.net, params, batch, self.schedule)
+        return _task_metrics(self.spec, aux, batch)
+
+    def infer_hard(self, *args):
+        """Serving forward with hard codes.
+
+        ``mini_mlp`` demonstrates the fused Pallas ``vq_matmul`` path
+        (decode-inside-the-kernel, DESIGN.md §4); the conv nets decode
+        with the reconstruct kernel then run their normal forward.
+        """
+        s = self.s_total
+        specs = (
+            [("codes", (s,), "i32")]
+            + [(f"other:{nm}", tuple(self.net.params[nm].shape), "f32") for nm in self.other_names]
+            + [("codebook", (self.cfg.k, self.cfg.d), "f32")]
+        )
+        st = self._unpack(args[: len(specs)], specs)
+        x = args[len(specs)]
+        if self.spec.arch == "mlp":
+            return self._mlp_fused_logits(st, x)
+        params = vqlayers.hard_params(st["codes"], st["codebook"], self._others_from(st), self.layout)
+        if self.spec.task == "denoise":
+            out, _ = self.net.forward(params, x)
+            return out
+        out, _ = self.net.forward(params, x)
+        return out
+
+    def _mlp_fused_logits(self, st, x):
+        """MLP forward where each compressed dense layer is a single fused
+        decode+matmul Pallas kernel call (the ROM-codebook hot path)."""
+        from .nets import channel_norm
+
+        others = self._others_from(st)
+        cb = st["codebook"]
+        h = x.reshape(x.shape[0], -1)
+        for lname in ("fc1", "fc2"):
+            sl = self.layout.slice_for(f"{lname}.w")
+            o, fan_in = sl.layer.row_major_out_first
+            codes = st["codes"][sl.offset : sl.offset + sl.groups].reshape(
+                o, fan_in // self.cfg.d
+            )
+            h = pk_vq_matmul.vq_matmul(h, codes, cb) + others[f"{lname}.b"]
+            h = channel_norm(h, others[f"{lname}.g"], others[f"{lname}.nb"])
+            h = jax.nn.relu(h)
+        return h @ others["out.w"] + others["out.b"]
+
+    def denoise_eps(self, *args):
+        """Epsilon prediction only (denoiser): the network forward on
+        ``(xt, t)`` with hard-coded VQ weights.  The DDPM posterior
+        arithmetic (Eq. mean/noise update) runs host-side in the Rust
+        coordinator — the sampler *loop* is L3's job, and the pure
+        forward reuses the exact graph family of ``eval_hard`` /
+        ``infer_hard`` that the xla_extension 0.5.1 HLO-text round-trip
+        is known to execute correctly."""
+        assert self.spec.task == "denoise"
+        s = self.s_total
+        specs = (
+            [("codes", (s,), "i32")]
+            + [(f"other:{nm}", tuple(self.net.params[nm].shape), "f32") for nm in self.other_names]
+            + [("codebook", (self.cfg.k, self.cfg.d), "f32")]
+        )
+        st = self._unpack(args[: len(specs)], specs)
+        xt, tdiff = args[len(specs) :]
+        params = vqlayers.hard_params(st["codes"], st["codebook"], self._others_from(st), self.layout)
+        pack = jnp.concatenate([xt, tdiff.astype(jnp.float32)[:, None]], axis=1)
+        eps_pred, _ = self.net.forward(params, pack)
+        return eps_pred
+
+    def sample_step(self, *args):
+        """One reverse-diffusion step (denoiser only): DDPM posterior mean
+        + noise, with epsilon predicted by the hard-coded network."""
+        assert self.spec.task == "denoise"
+        s = self.s_total
+        specs = (
+            [("codes", (s,), "i32")]
+            + [(f"other:{nm}", tuple(self.net.params[nm].shape), "f32") for nm in self.other_names]
+            + [("codebook", (self.cfg.k, self.cfg.d), "f32")]
+        )
+        st = self._unpack(args[: len(specs)], specs)
+        xt, tdiff, noise = args[len(specs) :]
+        params = vqlayers.hard_params(st["codes"], st["codebook"], self._others_from(st), self.layout)
+        pack = jnp.concatenate([xt, tdiff.astype(jnp.float32)[:, None]], axis=1)
+        eps_pred, _ = self.net.forward(params, pack)
+        beta = jnp.take(self.schedule["betas"], tdiff)[:, None]
+        alpha = jnp.take(self.schedule["alphas"], tdiff)[:, None]
+        s1m = jnp.take(self.schedule["sqrt_1m_abar"], tdiff)[:, None]
+        mean = (xt - beta / s1m * eps_pred) / jnp.sqrt(alpha)
+        not_last = (tdiff > 0).astype(jnp.float32)[:, None]
+        return mean + jnp.sqrt(beta) * noise * not_last
+
+
+def make_step_fns(spec: NetSpec, cfg: VqConfig) -> StepFns:
+    """Build a zoo member + its lowering-ready VQ4ALL step functions."""
+    return StepFns(build_net(spec), spec, cfg)

@@ -1,0 +1,170 @@
+"""Sub-vector layout and differentiable VQ weight reconstruction (Layer 2).
+
+The paper flattens every compressed weight matrix ``W in R^{o x i'}``
+(conv kernels are viewed as ``(O, H*W*I)``) and splits each row into
+``d``-dimensional sub-vectors (Eq. 1).  VQ4ALL then keeps, network-wide:
+
+* one static candidate table ``A_c (S_total, n)`` — top-n codeword
+  indices per sub-vector (Eq. 5);
+* one trainable logit tensor ``z (S_total, n)`` whose softmax gives the
+  ratios ``R`` (Eq. 6);
+* one PNC freeze state — ``frozen (S_total,)`` in {0,1} and
+  ``frozen_idx (S_total,)`` selecting which *candidate slot* was locked
+  to one-hot (Eq. 14).
+
+All compressed layers of one network are **concatenated** into a single
+``(S_total, d)`` sub-vector space; :class:`Layout` records where each
+layer's groups live, so there is exactly one logit tensor / one PNC state
+per network (this is what lets the Rust coordinator treat construction
+as a single flat schedule).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import reconstruct as pk_reconstruct
+from .nets import Net, WeightLayer
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSlice:
+    """Where one compressed layer lives in the flat sub-vector space."""
+
+    layer: WeightLayer
+    offset: int  # first group index
+    groups: int  # number of d-dim groups
+
+
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    """Flat sub-vector layout for one network at sub-vector length d."""
+
+    d: int
+    slices: tuple[LayerSlice, ...]
+
+    @property
+    def s_total(self) -> int:
+        return sum(s.groups for s in self.slices)
+
+    def slice_for(self, name: str) -> LayerSlice:
+        for s in self.slices:
+            if s.layer.name == name:
+                return s
+        raise KeyError(name)
+
+
+def make_layout(net: Net, d: int) -> Layout:
+    """Build the flat layout; raises if a compressed layer's fan-in does
+    not divide ``d`` (those layers must be marked ``compress=False``)."""
+    slices = []
+    offset = 0
+    for layer in net.compressed_layers():
+        o, fan_in = layer.row_major_out_first
+        if fan_in % d != 0:
+            raise ValueError(
+                f"{net.name}:{layer.name} fan_in {fan_in} not divisible by d={d}; "
+                "mark the layer compress=False"
+            )
+        groups = o * (fan_in // d)
+        slices.append(LayerSlice(layer, offset, groups))
+        offset += groups
+    return Layout(d=d, slices=tuple(slices))
+
+
+def _to_out_first(w: jnp.ndarray, layer: WeightLayer) -> jnp.ndarray:
+    """Stored param -> (O, fan_in) row-major matrix (Eq. 1's W)."""
+    if layer.kind == "dense":
+        return w.T  # stored (I, O)
+    # conv stored HWIO -> (O, H, W, I) -> (O, HWI)
+    return jnp.transpose(w, (3, 0, 1, 2)).reshape(w.shape[3], -1)
+
+
+def _from_out_first(m: jnp.ndarray, layer: WeightLayer) -> jnp.ndarray:
+    """(O, fan_in) -> stored param shape."""
+    if layer.kind == "dense":
+        return m.T
+    h, w, i, o = layer.shape
+    return jnp.transpose(m.reshape(o, h, w, i), (1, 2, 3, 0))
+
+
+def extract_subvectors(params: dict, layout: Layout) -> jnp.ndarray:
+    """Flatten all compressed layers into the ``(S_total, d)`` space."""
+    parts = []
+    for s in layout.slices:
+        m = _to_out_first(params[s.layer.name], s.layer)
+        parts.append(m.reshape(-1, layout.d))
+    return jnp.concatenate(parts, axis=0)
+
+
+def weights_from_flat(flat: jnp.ndarray, layout: Layout) -> dict:
+    """Inverse of :func:`extract_subvectors` — per-layer stored params."""
+    out = {}
+    for s in layout.slices:
+        o, fan_in = s.layer.row_major_out_first
+        m = flat[s.offset : s.offset + s.groups].reshape(o, fan_in)
+        out[s.layer.name] = _from_out_first(m, s.layer)
+    return out
+
+
+def effective_ratios(
+    z: jnp.ndarray, frozen: jnp.ndarray, frozen_idx: jnp.ndarray
+) -> jnp.ndarray:
+    """Eq. 6 softmax ratios with Eq. 14's PNC one-hot override.
+
+    For frozen groups the ratio is the frozen one-hot (stop-gradient by
+    construction: the one-hot does not depend on ``z``); unfrozen groups
+    use ``softmax(z)``.
+    """
+    n = z.shape[-1]
+    soft = jax.nn.softmax(z, axis=-1)
+    hot = jax.nn.one_hot(frozen_idx, n, dtype=jnp.float32)
+    f = frozen.astype(jnp.float32)[:, None]
+    return soft * (1.0 - f) + hot * f
+
+
+def student_params(
+    z: jnp.ndarray,
+    frozen: jnp.ndarray,
+    frozen_idx: jnp.ndarray,
+    assign: jnp.ndarray,
+    codebook: jnp.ndarray,
+    other: dict,
+    layout: Layout,
+) -> dict:
+    """Full parameter dict with compressed weights VQ-reconstructed.
+
+    The decode runs through the Pallas reconstruct kernel (Eq. 8) and is
+    differentiable w.r.t. ``z`` and pass-through for ``other``.
+    """
+    r = effective_ratios(z, frozen, frozen_idx)
+    flat = pk_reconstruct.reconstruct(codebook, assign, r)
+    params = dict(other)
+    params.update(weights_from_flat(flat, layout))
+    return params
+
+
+def hard_codes(
+    z: jnp.ndarray, frozen: jnp.ndarray, frozen_idx: jnp.ndarray, assign: jnp.ndarray
+) -> jnp.ndarray:
+    """Collapse to final codeword ids: frozen slot if set, else argmax(z).
+
+    This is the construction output (Algorithm 1's optimal assignments A):
+    ``codes[s] = assign[s, frozen_idx[s]]`` if frozen else
+    ``assign[s, argmax_m z[s, m]]``.
+    """
+    slot = jnp.where(frozen > 0.5, frozen_idx, jnp.argmax(z, axis=-1)).astype(jnp.int32)
+    return jnp.take_along_axis(assign, slot[:, None], axis=1)[:, 0]
+
+
+def hard_params(
+    codes: jnp.ndarray, codebook: jnp.ndarray, other: dict, layout: Layout
+) -> dict:
+    """Parameter dict decoded from final codes (Eq. 2) — inference form."""
+    flat = pk_reconstruct.hard_reconstruct(codebook, codes)
+    params = dict(other)
+    params.update(weights_from_flat(flat, layout))
+    return params

@@ -1,0 +1,200 @@
+"""The network zoo and VQ4ALL configuration — single source of truth.
+
+Everything the Rust coordinator needs to know about the compression
+campaign (which networks exist, their layer tables, the universal-codebook
+geometry ``(k, d)``, candidate count ``n``, the PNC threshold ``alpha``)
+originates here and is exported into ``artifacts/manifest.json`` by
+``aot.py``.  Rust never re-derives any of it.
+
+Paper-scale vs container-scale
+------------------------------
+The paper runs ResNet-18/50, MobileNet-V2, Mask-RCNN and Stable Diffusion
+with codebooks up to ``2^16 x 32``; this container is CPU-only with Pallas
+in interpret mode, so the default profile scales every axis down while
+keeping the *structure* identical (see DESIGN.md §2).  The paper-exact
+codebook arithmetic (Table 1) is computed closed-form in Rust and does not
+need these networks.  Profiles:
+
+* ``default`` — the CI/bench profile: five mini networks, k=256, d=4, n=8.
+* ``large``   — closer to paper dynamics: k=4096, d=4, n=64 (slower).
+
+Select with ``VQ4ALL_PROFILE=large python -m compile.aot``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class VqConfig:
+    """Universal-codebook and construction hyper-parameters (§5)."""
+
+    k: int  # number of codewords
+    d: int  # sub-vector length
+    n: int  # candidate assignments per sub-vector
+    alpha: float = 0.9999  # PNC freeze threshold (Eq. 14)
+    bandwidth: float = 0.01  # KDE bandwidth h (Eq. 3)
+    lr_ratios: float = 3e-1  # Adamax lr on ratio logits (§5)
+    lr_other: float = 1e-3  # Adam lr on bias / norm parameters (§5.1)
+    samples_per_net: int = 2560  # sub-vectors sampled per net for the KDE
+    # = 10 * k * d in the paper; scaled with k here.
+
+    @property
+    def bits_per_group(self) -> float:
+        """Assignment storage cost: log2(k) bits per d weights (§3.1)."""
+        import math
+
+        return math.log2(self.k)
+
+    @property
+    def effective_bit(self) -> float:
+        """Ideal per-weight bit width log2(k)/d (Table 1's 'Bit')."""
+        return self.bits_per_group / self.d
+
+
+@dataclasses.dataclass(frozen=True)
+class NetSpec:
+    """One member of the zoo."""
+
+    name: str
+    task: str  # classify | detect | denoise
+    arch: str  # constructor key in nets.py
+    input_shape: tuple[int, ...]  # per-sample, e.g. (16, 16, 3)
+    num_classes: int
+    pretrain_steps: int
+    pretrain_lr: float
+    calib_size: int
+    test_size: int
+    batch: int  # calibration batch size (static in the AOT step)
+    eval_batch: int  # eval batch size (static)
+    seed: int
+
+
+def _profile() -> str:
+    return os.environ.get("VQ4ALL_PROFILE", "default")
+
+
+def vq_config(profile: str | None = None) -> VqConfig:
+    p = profile or _profile()
+    if p == "default":
+        return VqConfig(k=256, d=4, n=8)
+    if p == "large":
+        return VqConfig(k=4096, d=4, n=64)
+    raise ValueError(f"unknown VQ4ALL_PROFILE {p!r}")
+
+
+# The five-network zoo mirrors the paper's §5 line-up:
+#   ResNet-18 / ResNet-50 / MobileNet-V2  -> mini_resnet18/50, mini_mobilenet
+#   Mask-RCNN R-50 FPN                    -> mini_detector
+#   Stable Diffusion v1-4                 -> mini_denoiser
+# plus mini_mlp as the quickstart / smoke target.
+ZOO: tuple[NetSpec, ...] = (
+    NetSpec(
+        name="mini_mlp",
+        task="classify",
+        arch="mlp",
+        input_shape=(16, 16, 3),
+        num_classes=10,
+        pretrain_steps=800,
+        pretrain_lr=1e-3,
+        calib_size=512,
+        test_size=1000,
+        batch=32,
+        eval_batch=100,
+        seed=101,
+    ),
+    NetSpec(
+        name="mini_resnet18",
+        task="classify",
+        arch="resnet18",
+        input_shape=(16, 16, 3),
+        num_classes=10,
+        pretrain_steps=1000,
+        pretrain_lr=2e-3,
+        calib_size=512,
+        test_size=1000,
+        batch=32,
+        eval_batch=100,
+        seed=102,
+    ),
+    NetSpec(
+        name="mini_resnet50",
+        task="classify",
+        arch="resnet50",
+        input_shape=(16, 16, 3),
+        num_classes=10,
+        pretrain_steps=1500,
+        pretrain_lr=1e-3,
+        calib_size=512,
+        test_size=1000,
+        batch=32,
+        eval_batch=100,
+        seed=103,
+    ),
+    NetSpec(
+        name="mini_mobilenet",
+        task="classify",
+        arch="mobilenet",
+        input_shape=(16, 16, 3),
+        num_classes=10,
+        pretrain_steps=1500,
+        pretrain_lr=1e-3,
+        calib_size=512,
+        test_size=1000,
+        batch=32,
+        eval_batch=100,
+        seed=104,
+    ),
+    NetSpec(
+        name="mini_detector",
+        task="detect",
+        arch="detector",
+        input_shape=(24, 24, 3),
+        num_classes=3,  # shape classes: square / circle / cross
+        pretrain_steps=1200,
+        pretrain_lr=2e-3,
+        calib_size=1500,
+        test_size=500,
+        batch=16,
+        eval_batch=50,
+        seed=105,
+    ),
+    NetSpec(
+        name="mini_denoiser",
+        task="denoise",
+        arch="denoiser",
+        input_shape=(2,),  # 2-D diffusion on an 8-mode Gaussian mixture
+        num_classes=0,
+        pretrain_steps=800,
+        pretrain_lr=2e-3,
+        calib_size=2048,
+        test_size=2048,
+        batch=128,
+        eval_batch=256,
+        seed=106,
+    ),
+)
+
+
+def zoo_by_name() -> dict[str, NetSpec]:
+    return {s.name: s for s in ZOO}
+
+
+def get_net(name: str) -> NetSpec:
+    try:
+        return zoo_by_name()[name]
+    except KeyError as e:
+        raise KeyError(f"unknown network {name!r}; zoo = {[s.name for s in ZOO]}") from e
+
+
+def zoo_names(subset: Sequence[str] | None = None) -> list[str]:
+    names = [s.name for s in ZOO]
+    if subset is None:
+        return names
+    for s in subset:
+        if s not in names:
+            raise KeyError(f"unknown network {s!r}; zoo = {names}")
+    return list(subset)

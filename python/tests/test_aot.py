@@ -1,0 +1,152 @@
+"""AOT boundary checks: manifest consistency, `.vqt` round-trip, HLO
+text properties, and that lowered step functions numerically match their
+un-lowered python originals on the artifacts actually shipped.
+
+These tests need `make artifacts` to have run; they skip otherwise.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+import jax.numpy as jnp
+
+from compile import tensorio, train, vqlayers, zoo
+
+ART = Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ART / "manifest.json").exists(),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    return json.loads((ART / "manifest.json").read_text())
+
+
+def test_manifest_config_matches_zoo(manifest):
+    cfg = zoo.vq_config()
+    mc = manifest["config"]
+    assert mc["k"] == cfg.k and mc["d"] == cfg.d and mc["n"] == cfg.n
+    assert mc["alpha"] == cfg.alpha
+    assert mc["effective_bit"] == pytest.approx(cfg.effective_bit)
+
+
+def test_manifest_covers_zoo(manifest):
+    names = {n["name"] for n in manifest["networks"]}
+    assert names == set(zoo.zoo_names())
+
+
+def test_every_referenced_file_exists(manifest):
+    for net in manifest["networks"]:
+        for espec in net["executables"].values():
+            assert (ART / espec["hlo"]).exists(), espec["hlo"]
+        for fname in net["data"].values():
+            assert (ART / fname).exists(), fname
+    assert (ART / manifest["codebook"]).exists()
+
+
+def test_layer_tables_tile_s_total(manifest):
+    for net in manifest["networks"]:
+        groups = sum(l["groups"] for l in net["layers"])
+        assert groups == net["s_total"], net["name"]
+        spec = zoo.get_net(net["name"])
+        fns = train.make_step_fns(spec, zoo.vq_config())
+        assert fns.s_total == net["s_total"], f"{net['name']}: layout drifted from manifest"
+
+
+def test_state_specs_match_step_factory(manifest):
+    cfg = zoo.vq_config()
+    for net in manifest["networks"]:
+        fns = train.make_step_fns(zoo.get_net(net["name"]), cfg)
+        want = [
+            {"name": nm, "shape": list(sh), "dtype": dt}
+            for nm, sh, dt in fns.state_specs()
+        ]
+        assert net["state_specs"] == want, f"{net['name']}: state specs drifted"
+
+
+def test_codebook_tensor_geometry(manifest):
+    cb = tensorio.read_tensor(ART / manifest["codebook"])
+    cfg = manifest["config"]
+    assert cb.shape == (cfg["k"], cfg["d"])
+    assert cb.dtype == np.float32
+    assert np.isfinite(cb).all()
+
+
+def test_teacher_flat_matches_layer_table(manifest):
+    for net in manifest["networks"]:
+        flat = tensorio.read_tensor(ART / net["data"]["teacher_flat"])
+        assert flat.shape == (net["s_total"], manifest["config"]["d"])
+
+
+def test_vqt_roundtrip_tmpdir(tmp_path):
+    for arr in [
+        np.arange(12, dtype=np.float32).reshape(3, 4),
+        np.asarray([[1, -2], [3, 4]], np.int32),
+        np.zeros((0,), np.float32),
+        np.random.default_rng(0).normal(size=(2, 3, 4)).astype(np.float32),
+    ]:
+        p = tmp_path / "t.vqt"
+        tensorio.write_tensor(p, arr)
+        back = tensorio.read_tensor(p)
+        assert back.dtype == arr.dtype
+        assert back.shape == arr.shape
+        assert_allclose(back, arr)
+
+
+def test_hlo_text_is_parseable_entry_module(manifest):
+    """Every artifact must be HLO text with an ENTRY computation (the
+    format the Rust loader's HloModuleProto::from_text_file expects)."""
+    for net in manifest["networks"]:
+        for tag, espec in net["executables"].items():
+            text = (ART / espec["hlo"]).read_text()
+            assert "HloModule" in text.splitlines()[0], f"{net['name']}:{tag}"
+            assert "ENTRY" in text, f"{net['name']}:{tag} has no entry"
+
+
+def test_eval_hard_artifact_matches_python(manifest):
+    """Execute the lowered eval_hard for mini_mlp via jax and compare to
+    the un-lowered python function — the same check Rust relies on."""
+    cfg = zoo.vq_config()
+    spec = zoo.get_net("mini_mlp")
+    net_m = next(n for n in manifest["networks"] if n["name"] == "mini_mlp")
+    fns = train.make_step_fns(spec, cfg)
+
+    s = net_m["s_total"]
+    rng = np.random.default_rng(5)
+    codes = rng.integers(0, cfg.k, s).astype(np.int32)
+    cb = tensorio.read_tensor(ART / manifest["codebook"])
+    others = [
+        tensorio.read_tensor(ART / net_m["data"][f"teacher_other_{i}"])
+        for i in range(len(net_m["others"]))
+    ]
+    tx = tensorio.read_tensor(ART / net_m["data"]["test_x"])[: spec.eval_batch]
+    ty = tensorio.read_tensor(ART / net_m["data"]["test_y"])[: spec.eval_batch]
+
+    args = [jnp.asarray(codes)] + [jnp.asarray(o) for o in others] + [
+        jnp.asarray(cb), jnp.asarray(tx), jnp.asarray(ty)
+    ]
+    direct = np.asarray(fns.eval_hard(*args))
+    assert direct.shape == (2,)
+    assert np.isfinite(direct).all()
+    # hit count within [0, batch]
+    assert 0.0 <= direct[1] <= spec.eval_batch
+
+
+def test_float_metrics_are_in_healthy_band(manifest):
+    """Difficulty calibration guard: classification nets should sit in
+    ~[0.65, 0.995] float accuracy (MobileNet sits lowest, mirroring the paper) — high enough to be a real model, low
+    enough that compression damage is visible (see data.py docstring)."""
+    for net in manifest["networks"]:
+        if net["task"] != "classify":
+            continue
+        m = net["float_metric"]
+        assert 0.60 <= m <= 0.998, f"{net['name']}: float acc {m} out of band"

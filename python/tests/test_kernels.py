@@ -1,0 +1,301 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps randomized shapes/dtypes/tile sizes so the padding and
+BlockSpec logic is exercised off the happy path (non-divisible sizes,
+single-row inputs, tiles larger than the array, bf16 inputs).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+from numpy.testing import assert_allclose
+
+import jax
+import jax.numpy as jnp
+
+from compile import kernels as K
+
+SETTINGS = dict(
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+FLOAT_DTYPES = st.sampled_from([np.float32, np.float16])
+
+
+def rng_for(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- distance
+
+
+@given(
+    s=st.integers(1, 300),
+    k=st.integers(1, 200),
+    d=st.sampled_from([1, 2, 3, 4, 8, 16]),
+    bs=st.sampled_from([1, 7, 64, 128]),
+    bk=st.sampled_from([1, 13, 256, 512]),
+    dtype=FLOAT_DTYPES,
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_distance_matches_ref(s, k, d, bs, bk, dtype, seed):
+    rng = rng_for(seed)
+    w = rng.normal(size=(s, d)).astype(dtype)
+    c = rng.normal(size=(k, d)).astype(dtype)
+    got = K.distance.pairwise_sq_dist(w, c, block_s=bs, block_k=bk)
+    want = K.ref.pairwise_sq_dist(jnp.asarray(w), jnp.asarray(c))
+    assert got.shape == (s, k)
+    assert got.dtype == jnp.float32
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_distance_zero_for_identical_vectors():
+    w = np.tile(np.arange(6, dtype=np.float32).reshape(1, 6), (4, 1))
+    d = np.asarray(K.distance.pairwise_sq_dist(w, w))
+    assert_allclose(np.diag(d), 0.0, atol=1e-5)
+    assert (d >= 0).all(), "squared distances must be non-negative"
+
+
+@given(
+    s=st.integers(1, 120),
+    k=st.integers(2, 100),
+    n=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_topn_matches_ref(s, k, n, seed):
+    n = min(n, k)
+    rng = rng_for(seed)
+    w = rng.normal(size=(s, 4)).astype(np.float32)
+    c = rng.normal(size=(k, 4)).astype(np.float32)
+    a, sq = K.distance.topn_candidates(w, c, n)
+    a2, sq2 = K.ref.topn_candidates(jnp.asarray(w), jnp.asarray(c), n)
+    # Distances must agree exactly in ordering terms; indices can differ
+    # only where distances tie.
+    assert_allclose(np.asarray(sq), np.asarray(sq2), rtol=1e-5, atol=1e-5)
+    sq_np = np.asarray(sq)
+    assert (np.diff(sq_np, axis=1) >= -1e-6).all(), "candidates must be sorted by distance"
+    # Candidate 0 must be the true argmin.
+    full = np.asarray(K.ref.pairwise_sq_dist(jnp.asarray(w), jnp.asarray(c)))
+    assert_allclose(sq_np[:, 0], full.min(axis=1), rtol=1e-5, atol=1e-5)
+
+
+def test_topn_rejects_bad_n():
+    w = np.zeros((3, 2), np.float32)
+    c = np.zeros((4, 2), np.float32)
+    with pytest.raises(ValueError):
+        K.distance.topn_candidates(w, c, 5)
+    with pytest.raises(ValueError):
+        K.distance.topn_candidates(w, c, 0)
+
+
+# ------------------------------------------------------------- reconstruct
+
+
+@given(
+    s=st.integers(1, 400),
+    k=st.integers(1, 80),
+    d=st.sampled_from([1, 2, 4, 8]),
+    n=st.integers(1, 16),
+    bs=st.sampled_from([1, 5, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_reconstruct_matches_ref(s, k, d, n, bs, seed):
+    rng = rng_for(seed)
+    cb = rng.normal(size=(k, d)).astype(np.float32)
+    a = rng.integers(0, k, size=(s, n)).astype(np.int32)
+    z = rng.normal(size=(s, n)).astype(np.float32)
+    r = np.asarray(jax.nn.softmax(jnp.asarray(z), axis=-1))
+    got = K.reconstruct.reconstruct(cb, a, r, block_s=bs)
+    want = K.ref.reconstruct(jnp.asarray(cb), jnp.asarray(a), jnp.asarray(r))
+    assert got.shape == (s, d)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_reconstruct_one_hot_equals_hard_decode():
+    """reconstruct with one-hot ratios == plain codebook lookup (Eq. 14)."""
+    rng = rng_for(7)
+    cb = rng.normal(size=(19, 4)).astype(np.float32)
+    a = rng.integers(0, 19, size=(33, 6)).astype(np.int32)
+    hot = rng.integers(0, 6, size=(33,))
+    r = np.zeros((33, 6), np.float32)
+    r[np.arange(33), hot] = 1.0
+    got = np.asarray(K.reconstruct.reconstruct(cb, a, r))
+    want = cb[a[np.arange(33), hot]]
+    assert_allclose(got, want, rtol=0, atol=0)
+
+
+def test_reconstruct_grad_matches_ref():
+    """Autodiff through the interpret-mode kernel == autodiff through ref."""
+    rng = rng_for(3)
+    cb = jnp.asarray(rng.normal(size=(11, 4)).astype(np.float32))
+    a = jnp.asarray(rng.integers(0, 11, size=(40, 5)).astype(np.int32))
+    z = jnp.asarray(rng.normal(size=(40, 5)).astype(np.float32))
+
+    def loss_kernel(z):
+        r = jax.nn.softmax(z, axis=-1)
+        return jnp.sum(K.reconstruct.reconstruct(cb, a, r) ** 2)
+
+    def loss_ref(z):
+        r = jax.nn.softmax(z, axis=-1)
+        return jnp.sum(K.ref.reconstruct(cb, a, r) ** 2)
+
+    g1 = jax.grad(loss_kernel)(z)
+    g2 = jax.grad(loss_ref)(z)
+    assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4, atol=1e-5)
+
+
+def test_hard_reconstruct_matches_ref():
+    rng = rng_for(11)
+    cb = rng.normal(size=(23, 8)).astype(np.float32)
+    codes = rng.integers(0, 23, size=(77,)).astype(np.int32)
+    got = np.asarray(K.reconstruct.hard_reconstruct(cb, codes))
+    want = np.asarray(K.ref.hard_reconstruct(jnp.asarray(cb), jnp.asarray(codes)))
+    assert_allclose(got, want, rtol=0, atol=0)
+
+
+# -------------------------------------------------------------- vq_matmul
+
+
+@given(
+    b=st.integers(1, 70),
+    o=st.integers(1, 150),
+    g=st.integers(1, 32),
+    d=st.sampled_from([1, 2, 4, 8]),
+    k=st.integers(1, 64),
+    bb=st.sampled_from([1, 8, 64]),
+    bo=st.sampled_from([1, 16, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_vq_matmul_matches_ref(b, o, g, d, k, bb, bo, seed):
+    rng = rng_for(seed)
+    x = rng.normal(size=(b, g * d)).astype(np.float32)
+    codes = rng.integers(0, k, size=(o, g)).astype(np.int32)
+    cb = rng.normal(size=(k, d)).astype(np.float32)
+    got = K.vq_matmul.vq_matmul(x, codes, cb, block_b=bb, block_o=bo)
+    want = K.ref.vq_matmul(jnp.asarray(x), jnp.asarray(codes), jnp.asarray(cb))
+    assert got.shape == (b, o)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_vq_matmul_equals_dense_matmul_on_decoded_weights():
+    """Fused kernel == decode-then-dense-matmul (the bandwidth story only
+    changes *where* the decode happens, never the numbers)."""
+    rng = rng_for(5)
+    cb = rng.normal(size=(32, 4)).astype(np.float32)
+    codes = rng.integers(0, 32, size=(24, 16)).astype(np.int32)
+    x = rng.normal(size=(10, 64)).astype(np.float32)
+    w = cb[codes].reshape(24, 64)
+    want = x @ w.T
+    got = np.asarray(K.vq_matmul.vq_matmul(x, codes, cb))
+    assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_vq_matmul_rejects_shape_mismatch():
+    x = np.zeros((2, 9), np.float32)  # 9 not divisible into g*d=8
+    codes = np.zeros((3, 2), np.int32)
+    cb = np.zeros((4, 4), np.float32)
+    with pytest.raises(ValueError):
+        K.vq_matmul.vq_matmul(x, codes, cb)
+
+
+# -------------------------------------------------------------------- kde
+
+
+@given(
+    q=st.integers(1, 150),
+    n=st.integers(1, 400),
+    d=st.sampled_from([1, 2, 4, 8]),
+    h=st.sampled_from([0.01, 0.1, 0.5, 1.0]),
+    bq=st.sampled_from([1, 32, 256]),
+    bn=st.sampled_from([1, 50, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_kde_matches_ref(q, n, d, h, bq, bn, seed):
+    rng = rng_for(seed)
+    queries = rng.normal(size=(q, d)).astype(np.float32)
+    samples = rng.normal(size=(n, d)).astype(np.float32)
+    got = K.kde.kde_density(queries, samples, h, block_q=bq, block_n=bn)
+    want = K.ref.kde_density(jnp.asarray(queries), jnp.asarray(samples), h)
+    assert got.shape == (q,)
+    # The kernel's MXU form ||q||^2 - 2 q.s + ||s||^2 rounds the squared
+    # distance at ~1e-7 absolute (fp32 cancellation when q ~ s); the
+    # exponent amplifies that by 1/(2h^2), so the density's relative error
+    # scales like eps_sq / (2 h^2).  Tolerance follows that model (h=0.01
+    # -> ~2.5e-3) with the generic fp32 floor at 1e-4.
+    rtol = max(1e-4, 5e-7 / (2.0 * h * h))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=1e-6)
+
+
+def test_kde_density_is_nonnegative_and_peaks_at_data():
+    rng = rng_for(9)
+    samples = rng.normal(size=(200, 2)).astype(np.float32) * 0.1
+    on_data = np.asarray(K.kde.kde_density(samples[:10], samples, 0.1))
+    far = np.asarray(K.kde.kde_density(np.full((10, 2), 50.0, np.float32), samples, 0.1))
+    assert (on_data >= 0).all() and (far >= 0).all()
+    assert on_data.mean() > far.mean() * 1e3, "density must concentrate near data"
+
+
+def test_kde_integrates_to_one_1d():
+    """1-D sanity: trapezoid integral of the density ~ 1."""
+    rng = rng_for(13)
+    samples = rng.normal(size=(500, 1)).astype(np.float32)
+    grid = np.linspace(-6, 6, 2001, dtype=np.float32)[:, None]
+    dens = np.asarray(K.kde.kde_density(grid, samples, 0.3))
+    integral = np.trapezoid(dens, grid[:, 0])
+    assert abs(integral - 1.0) < 1e-2
+
+
+def test_kde_rejects_bad_bandwidth():
+    q = np.zeros((2, 2), np.float32)
+    s = np.zeros((3, 2), np.float32)
+    with pytest.raises(ValueError):
+        K.kde.kde_density(q, s, 0.0)
+
+
+# ------------------------------------------------------------- ratio math
+
+
+@given(
+    s=st.integers(1, 100),
+    n=st.integers(2, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_ratio_logit_init_orders_by_distance(s, n, seed):
+    """Eq. 7: softmax of the init logits must be ~ proportional to 1/d^2
+    and put the largest ratio on the nearest candidate."""
+    rng = rng_for(seed)
+    sq = np.sort(rng.uniform(0.01, 4.0, size=(s, n)).astype(np.float32), axis=1)
+    z = np.asarray(K.ref.init_ratio_logits(jnp.asarray(sq)))
+    r = np.asarray(K.ref.ratios_from_logits(jnp.asarray(z)))
+    assert_allclose(r.sum(axis=1), 1.0, rtol=1e-5)
+    assert (np.argmax(r, axis=1) == 0).all(), "nearest candidate must dominate"
+    # r_m proportional to 1/sq_m:  r_m * sq_m constant per row.
+    prod = r * sq
+    assert_allclose(prod, np.broadcast_to(prod[:, :1], prod.shape), rtol=1e-3)
+
+
+def test_ratio_regularizer_zero_iff_one_hot():
+    r = np.zeros((5, 4), np.float32)
+    r[:, 2] = 1.0
+    assert float(K.ref.ratio_regularizer(jnp.asarray(r))) == 0.0
+    r_soft = np.full((5, 4), 0.25, np.float32)
+    assert float(K.ref.ratio_regularizer(jnp.asarray(r_soft))) > 0.0
+
+
+def test_ratio_regularizer_respects_unset_mask():
+    r = np.full((4, 2), 0.5, np.float32)
+    mask = np.array([1, 0, 0, 0], np.float32)
+    full = float(K.ref.ratio_regularizer(jnp.asarray(r)))
+    partial = float(K.ref.ratio_regularizer(jnp.asarray(r), jnp.asarray(mask)))
+    assert_allclose(partial, full / 4.0, rtol=1e-6)

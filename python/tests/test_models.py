@@ -1,0 +1,332 @@
+"""L2 correctness: zoo models, sub-vector layout, losses, optimizers,
+codebook sampling, datasets — everything below the AOT boundary that
+does not need built artifacts."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+from numpy.testing import assert_allclose
+
+import jax
+import jax.numpy as jnp
+
+from compile import codebook as cb_mod
+from compile import data, losses, optim, vqlayers, zoo
+from compile.nets import build_net, channel_norm
+
+SETTINGS = dict(
+    max_examples=20,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+# ------------------------------------------------------------------ models
+
+
+@pytest.mark.parametrize("spec", zoo.ZOO, ids=[s.name for s in zoo.ZOO])
+def test_zoo_forward_shapes(spec):
+    net = build_net(spec)
+    b = 2
+    if spec.task == "denoise":
+        x = jnp.zeros((b, 3), jnp.float32)  # (x, y, t)
+        out, feats = net.forward(net.params, x)
+        assert out.shape == (b, 2)
+    elif spec.task == "detect":
+        x = jnp.zeros((b, *spec.input_shape), jnp.float32)
+        out, feats = net.forward(net.params, x)
+        assert out.ndim == 4 and out.shape[0] == b
+        assert out.shape[-1] >= 4 + spec.num_classes
+    else:
+        x = jnp.zeros((b, *spec.input_shape), jnp.float32)
+        out, feats = net.forward(net.params, x)
+        assert out.shape == (b, spec.num_classes)
+    assert len(feats) >= 1, "block features required for L_kd"
+    for f in feats:
+        assert f.shape[0] == b
+
+
+@pytest.mark.parametrize("spec", zoo.ZOO, ids=[s.name for s in zoo.ZOO])
+def test_zoo_param_partition(spec):
+    """Compressed layers + 'others' partition the parameter dict."""
+    net = build_net(spec)
+    compressed = {l.name for l in net.compressed_layers()}
+    others = set(net.other_names())
+    assert compressed.isdisjoint(others)
+    assert compressed | others == set(net.params.keys())
+    assert compressed, f"{spec.name}: nothing to compress"
+
+
+@pytest.mark.parametrize("spec", zoo.ZOO, ids=[s.name for s in zoo.ZOO])
+def test_layout_tiles_all_compressed_weights(spec):
+    net = build_net(spec)
+    cfg = zoo.vq_config()
+    layout = vqlayers.make_layout(net, cfg.d)
+    total = sum(np.prod(net.params[l.name].shape) for l in net.compressed_layers())
+    assert layout.s_total * cfg.d == total
+    # Slices are contiguous and non-overlapping.
+    off = 0
+    for s in layout.slices:
+        assert s.offset == off
+        off += s.groups
+
+
+@pytest.mark.parametrize("spec", zoo.ZOO, ids=[s.name for s in zoo.ZOO])
+def test_extract_then_rebuild_is_identity(spec):
+    net = build_net(spec)
+    cfg = zoo.vq_config()
+    layout = vqlayers.make_layout(net, cfg.d)
+    flat = vqlayers.extract_subvectors(net.params, layout)
+    assert flat.shape == (layout.s_total, cfg.d)
+    rebuilt = vqlayers.weights_from_flat(flat, layout)
+    for name, w in rebuilt.items():
+        assert_allclose(np.asarray(w), np.asarray(net.params[name]), rtol=0, atol=0)
+
+
+def test_channel_norm_normalizes():
+    x = jnp.asarray(np.random.default_rng(0).normal(3.0, 2.0, (8, 16)).astype(np.float32))
+    y = channel_norm(x, jnp.ones((16,)), jnp.zeros((16,)))
+    assert abs(float(y.mean())) < 1e-3
+    assert abs(float(y.std()) - 1.0) < 5e-2
+
+
+# ----------------------------------------------------------------- vqlayers
+
+
+@given(
+    s=st.integers(1, 40),
+    n=st.integers(2, 8),
+    k=st.integers(8, 64),
+    d=st.sampled_from([2, 4]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_effective_ratios_onehot_when_frozen(s, n, k, d, seed):
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=(s, n)).astype(np.float32))
+    frozen = jnp.asarray((rng.random(s) < 0.5).astype(np.float32))
+    frozen_idx = jnp.asarray(rng.integers(0, n, s).astype(np.int32))
+    r = np.asarray(vqlayers.effective_ratios(z, frozen, frozen_idx))
+    soft = np.asarray(jax.nn.softmax(z, -1))
+    for g in range(s):
+        assert_allclose(r[g].sum(), 1.0, rtol=1e-5)
+        if frozen[g] > 0.5:
+            expect = np.zeros(n, np.float32)
+            expect[int(frozen_idx[g])] = 1.0
+            assert_allclose(r[g], expect, atol=0)
+        else:
+            assert_allclose(r[g], soft[g], rtol=1e-6)
+
+
+@given(
+    s=st.integers(1, 40),
+    n=st.integers(2, 8),
+    k=st.integers(8, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_hard_codes_frozen_slot_wins(s, n, k, seed):
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=(s, n)).astype(np.float32))
+    assign = jnp.asarray(rng.integers(0, k, (s, n)).astype(np.int32))
+    frozen = jnp.asarray((rng.random(s) < 0.5).astype(np.float32))
+    frozen_idx = jnp.asarray(rng.integers(0, n, s).astype(np.int32))
+    codes = np.asarray(vqlayers.hard_codes(z, frozen, frozen_idx, assign))
+    a = np.asarray(assign)
+    for g in range(s):
+        slot = int(frozen_idx[g]) if frozen[g] > 0.5 else int(np.argmax(np.asarray(z)[g]))
+        assert codes[g] == a[g, slot]
+
+
+def test_frozen_groups_get_no_gradient():
+    """PNC stop-gradient: dL/dz must vanish on frozen groups (Eq. 14)."""
+    rng = np.random.default_rng(1)
+    s, n, k, d = 6, 4, 16, 2
+    z = jnp.asarray(rng.normal(size=(s, n)).astype(np.float32))
+    assign = jnp.asarray(rng.integers(0, k, (s, n)).astype(np.int32))
+    cb = jnp.asarray(rng.normal(size=(k, d)).astype(np.float32))
+    frozen = jnp.asarray(np.array([1, 0, 1, 0, 0, 1], np.float32))
+    frozen_idx = jnp.zeros((s,), jnp.int32)
+
+    def loss(z):
+        r = vqlayers.effective_ratios(z, frozen, frozen_idx)
+        from compile.kernels import ref as pk_ref
+
+        w = pk_ref.reconstruct(cb, assign, r)
+        return jnp.sum(w**2)
+
+    g = np.asarray(jax.grad(loss)(z))
+    for gi in range(s):
+        if frozen[gi] > 0.5:
+            assert_allclose(g[gi], 0.0, atol=0)
+        else:
+            assert np.abs(g[gi]).sum() > 0
+
+
+# ------------------------------------------------------------------- losses
+
+
+def test_ratio_regularizer_zero_iff_onehot():
+    one_hot = jnp.asarray(np.eye(4, dtype=np.float32)[[0, 1, 3]])
+    assert float(losses.ratio_regularizer(one_hot)) == 0.0
+    soft = jnp.full((3, 4), 0.25, jnp.float32)
+    assert float(losses.ratio_regularizer(soft)) > 0.1
+
+
+def test_ratio_regularizer_respects_unset_mask():
+    soft = jnp.full((2, 4), 0.25, jnp.float32)
+    full = float(losses.ratio_regularizer(soft))
+    half = float(losses.ratio_regularizer(soft, jnp.asarray([1.0, 0.0])))
+    assert_allclose(half, full / 2.0, rtol=1e-6)
+
+
+def test_cross_entropy_matches_manual():
+    logits = jnp.asarray([[2.0, 0.0, -1.0], [0.0, 3.0, 0.0]])
+    labels = jnp.asarray([0, 1])
+    got = float(losses.cross_entropy(logits, labels))
+    want = float(-np.mean(np.log([
+        np.exp(2.0) / (np.exp(2.0) + 1 + np.exp(-1.0)),
+        np.exp(3.0) / (np.exp(3.0) + 2),
+    ])))
+    assert_allclose(got, want, rtol=1e-6)
+
+
+def test_kd_loss_zero_for_identical_features():
+    feats = [jnp.ones((2, 8)), jnp.zeros((2, 4))]
+    assert float(losses.kd_loss(feats, feats)) == 0.0
+    other = [f + 1.0 for f in feats]
+    assert float(losses.kd_loss(feats, other)) > 0.5
+
+
+def test_detect_loss_perfect_prediction_is_small():
+    g = 4
+    t = np.zeros((2, g, g, 5), np.float32)
+    t[0, 1, 2] = [1.0, 0.5, 0.5, 0.1, 1.0]
+    t[1, 0, 0] = [1.0, 0.2, 0.8, 0.2, 2.0]
+    pred = np.zeros((2, g, g, 4 + 3), np.float32)
+    pred[..., 0] = -20.0  # no object anywhere...
+    for b, (gy, gx) in enumerate([(1, 2), (0, 0)]):
+        pred[b, gy, gx, 0] = 20.0
+        pred[b, gy, gx, 1:4] = t[b, gy, gx, 1:4]
+        pred[b, gy, gx, 4 + int(t[b, gy, gx, 4])] = 20.0
+    l = float(losses.detect_loss(jnp.asarray(pred), jnp.asarray(t)))
+    assert l < 1e-3, f"perfect prediction should have ~0 loss, got {l}"
+    hits = float(losses.detect_hits(jnp.asarray(pred), jnp.asarray(t)))
+    assert hits == 2.0
+
+
+# ---------------------------------------------------------------- optimizers
+
+
+def test_adamax_converges_on_quadratic():
+    p = jnp.asarray([5.0, -3.0])
+    m = jnp.zeros(2)
+    u = jnp.zeros(2)
+    for t in range(1, 200):
+        g = 2.0 * p
+        p, m, u = optim.adamax_update(p, g, m, u, jnp.float32(t), 0.1)
+    assert float(jnp.abs(p).max()) < 0.05
+
+
+def test_adam_converges_on_quadratic():
+    p = jnp.asarray([4.0])
+    m = jnp.zeros(1)
+    v = jnp.zeros(1)
+    for t in range(1, 300):
+        p, m, v = optim.adam_update(p, 2.0 * p, m, v, jnp.float32(t), 0.05)
+    assert float(jnp.abs(p).max()) < 0.05
+
+
+def test_cosine_lr_endpoints():
+    assert float(optim.cosine_lr(1.0, jnp.float32(0), 100)) == 1.0
+    assert float(optim.cosine_lr(1.0, jnp.float32(100), 100)) < 1e-6
+    mid = float(optim.cosine_lr(1.0, jnp.float32(50), 100))
+    assert_allclose(mid, 0.5, atol=1e-6)
+
+
+# ------------------------------------------------------------------ codebook
+
+
+def test_kde_codebook_stats_follow_pool():
+    rng = np.random.default_rng(0)
+    flats = [rng.normal(0.0, 0.1, (5000, 4)).astype(np.float32)]
+    cb, pool = cb_mod.build_universal_codebook(flats, k=512, d=4, bandwidth=0.01, per_net=2000)
+    assert cb.shape == (512, 4)
+    assert pool.shape == (2000, 4)
+    # KDE sample mean/std must track the pool within sampling error.
+    assert abs(cb.mean() - pool.mean()) < 0.02
+    assert abs(cb.std() / pool.std() - 1.0) < 0.2
+
+
+def test_sample_subvectors_equal_counts_and_small_net_replacement():
+    rng = np.random.default_rng(1)
+    big = rng.normal(size=(1000, 4)).astype(np.float32)
+    small = rng.normal(size=(10, 4)).astype(np.float32)
+    pool = cb_mod.sample_subvectors([big, small], per_net=64)
+    assert pool.shape == (128, 4)
+    # Second half comes from the small net (with replacement).
+    small_rows = {tuple(r) for r in small}
+    assert all(tuple(r) in small_rows for r in pool[64:])
+
+
+# ------------------------------------------------------------------ datasets
+
+
+def test_synth_imagenet_split_discipline():
+    """Same template seed + different sample seed = same classes, new
+    samples (the train/test relationship)."""
+    x1, y1 = data.synth_imagenet(64, seed=0)
+    x2, y2 = data.synth_imagenet(64, seed=1)
+    assert x1.shape == (64, 16, 16, 3)
+    assert not np.allclose(x1, x2)
+    assert set(np.unique(y1)) <= set(range(10))
+    # Determinism.
+    x1b, y1b = data.synth_imagenet(64, seed=0)
+    assert_allclose(x1, x1b)
+    assert (y1 == y1b).all()
+
+
+def test_synth_imagenet_is_not_saturating_easy():
+    """The class templates share a common component — nearest-template
+    classification on raw pixels must NOT be perfect (difficulty
+    calibration; see data.py docstring)."""
+    x, y = data.synth_imagenet(400, seed=3)
+    # Build per-class means from an independent split and classify.
+    xt, yt = data.synth_imagenet(2000, seed=4)
+    means = np.stack([xt[yt == c].mean(0) for c in range(10)])
+    pred = np.argmin(
+        ((x[:, None] - means[None]) ** 2).sum((2, 3, 4)), axis=1
+    )
+    acc = (pred == y).mean()
+    assert 0.3 < acc < 0.995, f"template-matching acc {acc}: dataset difficulty drifted"
+
+
+def test_synth_shapes_targets_consistent():
+    x, t = data.synth_shapes(32, hw=24, grid=4, seed=0)
+    assert x.shape == (32, 24, 24, 3)
+    assert t.shape == (32, 4, 4, 5)
+    obj = t[..., 0]
+    assert (obj.sum(axis=(1, 2)) == 1.0).all(), "exactly one object per image"
+    on = t[obj > 0.5]
+    assert ((on[:, 1:3] >= 0.0) & (on[:, 1:3] <= 1.0)).all(), "cell offsets in [0,1]"
+    assert set(np.unique(on[:, 4])) <= {0.0, 1.0, 2.0}
+
+
+def test_gmm2d_modes_on_circle():
+    pts = data.gmm2d(4000, seed=0)
+    r = np.linalg.norm(pts, axis=1)
+    assert abs(r.mean() - 2.0) < 0.1, "modes sit on the radius-2 circle"
+    # All 8 sectors populated.
+    ang = np.arctan2(pts[:, 1], pts[:, 0])
+    sectors = np.unique((np.round(ang / (2 * np.pi / 8)) % 8).astype(int))
+    assert len(sectors) == 8
+
+
+def test_diffusion_schedule_monotone():
+    s = data.diffusion_schedule()
+    assert (np.diff(s["betas"]) > 0).all()
+    assert (np.diff(s["alpha_bars"]) < 0).all()
+    assert_allclose(s["sqrt_abar"] ** 2 + s["sqrt_1m_abar"] ** 2, 1.0, rtol=1e-5)

@@ -1,0 +1,148 @@
+"""Offline tuning probe (not part of the build): measures (a) synthetic
+dataset difficulty, (b) ratio-polarization speed, (c) hard-collapse
+damage, under candidate dataset/loss-weight settings — the knobs that
+decide whether the scaled-down tables reproduce the paper's *shape*.
+
+Run:  python -m tools.tune_probe --net mini_resnet18 --steps 300 \
+          --share 0.6 --noise 0.6 --wr 1.0
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import codebook as cb_mod
+from compile import data, losses, optim, train, vqlayers, zoo
+from compile.kernels import ref as pk_ref
+from compile.nets import build_net
+
+
+def harder_synth_imagenet(n, hw=16, num_classes=10, seed=0, template_seed=7,
+                          share=0.6, noise=0.6):
+    """synth_imagenet variant: class templates share a common component
+    (fine class distinctions that weight quantization can destroy) and
+    carry more pixel noise."""
+    trng = np.random.default_rng(template_seed)
+    common = trng.normal(0.0, 1.0, size=(1, hw, hw, 3)).astype(np.float32)
+    uniq = trng.normal(0.0, 1.0, size=(num_classes, hw, hw, 3)).astype(np.float32)
+    templates = share * common + (1.0 - share) * uniq
+    for _ in range(2):
+        templates = 0.5 * templates + 0.25 * (
+            np.roll(templates, 1, axis=1) + np.roll(templates, 1, axis=2))
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, num_classes, size=n).astype(np.int32)
+    max_shift = max(hw // 8, 1)
+    sx = rng.integers(-max_shift, max_shift + 1, size=n)
+    sy = rng.integers(-max_shift, max_shift + 1, size=n)
+    scale = rng.uniform(0.7, 1.3, size=n).astype(np.float32)
+    nz = rng.normal(0.0, noise, size=(n, hw, hw, 3)).astype(np.float32)
+    x = np.empty((n, hw, hw, 3), np.float32)
+    for i in range(n):
+        img = np.roll(templates[y[i]], (sx[i], sy[i]), axis=(0, 1))
+        x[i] = img * scale[i] + nz[i]
+    return x, y
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--net", default="mini_resnet18")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--share", type=float, default=0.6)
+    ap.add_argument("--noise", type=float, default=0.6)
+    ap.add_argument("--wr", type=float, default=1.0)
+    ap.add_argument("--lr-ratios", type=float, default=0.3)
+    ap.add_argument("--pretrain-mult", type=float, default=1.0)
+    args = ap.parse_args()
+
+    spec = zoo.get_net(args.net)
+    if args.pretrain_mult != 1.0:
+        import dataclasses
+        spec = dataclasses.replace(spec, pretrain_steps=int(spec.pretrain_steps * args.pretrain_mult))
+    cfg = zoo.vq_config()
+
+    gen = functools.partial(harder_synth_imagenet, share=args.share, noise=args.noise)
+    x, y = gen(2000, hw=spec.input_shape[0], seed=spec.seed)
+    cx, cy = gen(spec.calib_size, hw=spec.input_shape[0], seed=spec.seed + 1)
+    tx, ty = gen(1000, hw=spec.input_shape[0], seed=spec.seed + 2)
+
+    net = build_net(spec)
+    params, _ = train.pretrain(net, spec, x, y)
+    _, float_acc = train.eval_float(net, spec, params, tx, ty)
+    print(f"float acc: {float_acc:.4f}")
+
+    layout = vqlayers.make_layout(net, cfg.d)
+    wsub = np.asarray(vqlayers.extract_subvectors(params, layout))
+    cb, _ = cb_mod.build_universal_codebook([wsub], cfg.k, cfg.d, cfg.bandwidth, cfg.samples_per_net)
+    cb = jnp.asarray(cb)
+
+    sq = jnp.sum((jnp.asarray(wsub)[:, None, :] - cb[None]) ** 2, -1)
+    order = jnp.argsort(sq, axis=1)[:, : cfg.n]
+    assign = order.astype(jnp.int32)
+    dists = jnp.take_along_axis(sq, order, axis=1)
+    z = jnp.log(dists[:, -1:] / jnp.maximum(dists, 1e-12))
+
+    other_names = net.other_names()
+    others = {k: params[k] for k in other_names}
+    teacher_others = dict(others)
+    s_total = layout.s_total
+    frozen = jnp.zeros((s_total,), jnp.float32)
+    frozen_idx = jnp.zeros((s_total,), jnp.int32)
+    schedule = {k: jnp.asarray(v) for k, v in data.diffusion_schedule().items()}
+
+    # nearest-codeword (n=1) accuracy — the paper's n=1 row.
+    hard0 = vqlayers.hard_codes(z, frozen, frozen_idx, assign)
+    p0 = vqlayers.hard_params(hard0, cb, others, layout)
+    _, near_acc = train.eval_float(net, spec, p0, tx, ty)
+    print(f"nearest-VQ (n=1) acc: {near_acc:.4f}")
+
+    wr = args.wr
+
+    def loss_fn(z, oth, batch):
+        p = vqlayers.student_params(z, frozen, frozen_idx, assign, cb, oth, layout)
+        l_t, feats, _ = train._task_forward_loss(spec, net, p, batch, schedule)
+        tparams = dict(teacher_others)
+        tparams.update(vqlayers.weights_from_flat(jnp.asarray(wsub), layout))
+        _, tfeats, _ = train._task_forward_loss(spec, net, tparams, batch, schedule)
+        l_kd = losses.kd_loss(feats, tfeats)
+        r = vqlayers.effective_ratios(z, frozen, frozen_idx)
+        l_r = losses.ratio_regularizer(r)
+        return l_t + l_kd + wr * l_r, (l_t, l_kd, l_r)
+
+    @jax.jit
+    def step(z, mz, uz, oth, mo, vo, t, batch):
+        (l, parts), (gz, go) = jax.value_and_grad(loss_fn, argnums=(0, 1), has_aux=True)(z, oth, batch)
+        z, mz, uz = optim.adamax_update(z, gz, mz, uz, t, args.lr_ratios)
+        oth, mo, vo = optim.adam_update_tree(oth, go, mo, vo, t, 1e-3)
+        return z, mz, uz, oth, mo, vo, l, parts
+
+    mz = jnp.zeros_like(z); uz = jnp.zeros_like(z)
+    mo = {k: jnp.zeros_like(v) for k, v in others.items()}
+    vo = {k: jnp.zeros_like(v) for k, v in others.items()}
+    rng = np.random.default_rng(3)
+    for i in range(args.steps):
+        idx = rng.integers(0, cx.shape[0], spec.batch)
+        batch = (jnp.asarray(cx[idx]), jnp.asarray(cy[idx]))
+        z, mz, uz, others, mo, vo, l, parts = step(z, mz, uz, others, mo, vo, jnp.float32(i + 1), batch)
+        if (i + 1) % 50 == 0:
+            rmax = np.asarray(jax.nn.softmax(z, -1).max(-1))
+            print(f"step {i+1}: L={float(l):.4f} (t={float(parts[0]):.4f} kd={float(parts[1]):.4f} "
+                  f"r={float(parts[2]):.4f}) rmax q50={np.quantile(rmax,0.5):.4f} "
+                  f"q10={np.quantile(rmax,0.1):.4f} "
+                  f">0.99: {(rmax>0.99).mean():.3f} >0.9999: {(rmax>0.9999).mean():.3f}")
+
+    # soft vs hard-collapse (no PNC) accuracy
+    p_soft = vqlayers.student_params(z, frozen, frozen_idx, assign, cb, others, layout)
+    _, soft_acc = train.eval_float(net, spec, p_soft, tx, ty)
+    hard = vqlayers.hard_codes(z, frozen, frozen_idx, assign)
+    p_hard = vqlayers.hard_params(hard, cb, others, layout)
+    _, hard_acc = train.eval_float(net, spec, p_hard, tx, ty)
+    print(f"soft acc: {soft_acc:.4f}  hard-collapse acc: {hard_acc:.4f}")
+
+
+if __name__ == "__main__":
+    main()

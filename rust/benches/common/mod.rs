@@ -1,0 +1,41 @@
+//! Shared setup for the paper-reproduction bench targets.
+//!
+//! Every bench is a `harness = false` binary: it regenerates one paper
+//! table/figure at a scaled workload (CPU interpret mode) and prints the
+//! same rows the paper reports.  Environment knobs:
+//!
+//! * `VQ4ALL_ARTIFACTS`    — artifacts dir (default `artifacts`)
+//! * `VQ4ALL_BENCH_STEPS`  — construction steps per campaign (default 60)
+//! * `VQ4ALL_BENCH_FULL=1` — paper-scale steps (slow; for EXPERIMENTS.md)
+
+use std::path::PathBuf;
+
+use vq4all::coordinator::Campaign;
+use vq4all::runtime::Manifest;
+use vq4all::util::config::CampaignConfig;
+
+#[allow(dead_code)]
+pub fn artifacts_dir() -> PathBuf {
+    Manifest::default_dir()
+}
+
+#[allow(dead_code)]
+pub fn bench_steps() -> usize {
+    if std::env::var("VQ4ALL_BENCH_FULL").is_ok() {
+        return 400;
+    }
+    std::env::var("VQ4ALL_BENCH_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(60)
+}
+
+#[allow(dead_code)]
+pub fn campaign() -> anyhow::Result<Campaign> {
+    vq4all::util::logging::init_from_env();
+    let cfg = CampaignConfig {
+        steps: bench_steps(),
+        ..CampaignConfig::default()
+    };
+    Campaign::load(&artifacts_dir(), cfg)
+}

@@ -1,0 +1,47 @@
+//! E2 — regenerate **Figure 2** (accuracy vs compression ratio).
+mod common;
+
+use vq4all::bench::Table;
+use vq4all::exp::fig2;
+
+fn main() -> anyhow::Result<()> {
+    let campaign = common::campaign()?;
+    let mut t = Table::new(
+        "Figure 2 — accuracy vs compression ratio",
+        &["network", "method", "ratio", "metric", "weight MSE", "measured"],
+    );
+    for net in ["mini_resnet18", "mini_resnet50"] {
+        let (vq, _res) = fig2::vq4all_point(&campaign, net)?;
+        let pvq = fig2::kmeans_baseline_point(&campaign, net, campaign.manifest.config.k)?;
+        let pvq_small = fig2::kmeans_baseline_point(&campaign, net, 16)?;
+        let mut anchors = vec![
+            (vq.weight_mse, vq.metric),
+            (pvq.weight_mse, pvq.metric),
+            (pvq_small.weight_mse, pvq_small.metric),
+            (1e-7, campaign.manifest.network(net)?.float_metric),
+        ];
+        for p in [&vq, &pvq, &pvq_small] {
+            t.row(vec![
+                net.into(),
+                p.method.clone(),
+                format!("{:.1}x", p.ratio),
+                format!("{:.4}", p.metric),
+                format!("{:.2e}", p.weight_mse),
+                "device".into(),
+            ]);
+        }
+        for (m, ratio, mse) in fig2::distortion_baselines(&campaign, net)? {
+            let est = fig2::mse_to_metric(&mut anchors, mse);
+            t.row(vec![
+                net.into(),
+                m,
+                format!("{ratio:.1}x"),
+                format!("{est:.4}"),
+                format!("{mse:.2e}"),
+                "proxy".into(),
+            ]);
+        }
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,12 @@
+//! E7 — regenerate **Figure 3** (PNC vs no-PNC trajectories).
+mod common;
+
+use vq4all::exp::fig3;
+
+fn main() -> anyhow::Result<()> {
+    let campaign = common::campaign()?;
+    let pnc = fig3::run_one(&campaign, "mini_resnet18", false)?;
+    let nopnc = fig3::run_one(&campaign, "mini_resnet18", true)?;
+    print!("{}", fig3::render(&pnc, &nopnc));
+    Ok(())
+}

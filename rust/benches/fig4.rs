@@ -1,0 +1,13 @@
+//! E8 — regenerate **Figure 4** (alpha threshold sweep).
+mod common;
+
+use vq4all::exp::fig4;
+
+fn main() -> anyhow::Result<()> {
+    let campaign = common::campaign()?;
+    for net in ["mini_resnet18", "mini_resnet50"] {
+        let pts = fig4::sweep(&campaign, net, &[0.9, 0.95, 0.99, 0.995, 0.999])?;
+        print!("{}", fig4::render(net, &pts));
+    }
+    Ok(())
+}

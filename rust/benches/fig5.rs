@@ -1,0 +1,15 @@
+//! E11 — regenerate **Figure 5** (codeword-usage distributions).
+mod common;
+
+use vq4all::exp::fig5;
+
+fn main() -> anyhow::Result<()> {
+    let campaign = common::campaign()?;
+    let mut usages = Vec::new();
+    for net in ["mini_mlp", "mini_resnet18", "mini_resnet50", "mini_mobilenet"] {
+        let res = campaign.construct(net)?;
+        usages.push(fig5::usage(&res, campaign.manifest.config.k, 8));
+    }
+    print!("{}", fig5::render(&usages));
+    Ok(())
+}

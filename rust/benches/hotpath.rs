@@ -1,0 +1,123 @@
+//! E13 — hot-path microbenchmarks (the §Perf substrate):
+//!
+//! * host k-means assignment sweep (the Table-1/Fig-2 analysis loop)
+//! * packed-code decode (the serving weight-stream path)
+//! * host weighted reconstruct (checkpoint validation path)
+//! * PNC scan (the per-interval coordinator cost)
+//! * PJRT step latency: `train_step` / `eval_hard` / `infer_hard` on
+//!   mini_mlp (the campaign's per-step floor)
+//! * router submit/dispatch throughput
+
+mod common;
+
+use vq4all::bench::Bencher;
+use vq4all::coordinator::calib::CalibStream;
+use vq4all::coordinator::{NetSession, PncScheduler};
+use vq4all::serving::Router;
+use vq4all::util::rng::Rng;
+use vq4all::vq::pack::{pack_codes, unpack_codes};
+use vq4all::vq::ratios::max_ratios;
+use vq4all::vq::{kmeans::KmeansOpts, Codebook};
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new();
+    let mut rng = Rng::new(0xB3);
+
+    // --- pure-host paths ---------------------------------------------------
+    let mut flat = vec![0.0f32; 4 * 20_000];
+    rng.fill_normal(&mut flat);
+    b.bench("kmeans k=64 d=4 s=20k (full run)", || {
+        let _ = vq4all::vq::kmeans::kmeans(&flat, 4, 64, &KmeansOpts { max_iters: 5, ..Default::default() });
+    });
+
+    let codes: Vec<u32> = (0..100_000).map(|_| rng.below(256) as u32).collect();
+    let packed = pack_codes(&codes, 8);
+    b.bench("unpack 100k codes @8b", || {
+        let v = unpack_codes(&packed);
+        std::hint::black_box(v.len());
+    });
+
+    let cb = {
+        let mut words = vec![0.0f32; 256 * 4];
+        rng.fill_normal(&mut words);
+        Codebook::new(256, 4, words)
+    };
+    let mut out = vec![0.0f32; codes.len() * 4];
+    b.bench("hard decode 100k codes (400k weights)", || {
+        cb.decode(&codes, &mut out);
+    });
+
+    let n = 8;
+    let mut z = vec![0.0f32; 57_344 * n];
+    rng.fill_normal(&mut z);
+    b.bench("PNC scan S=57k n=8 (softmax+argmax)", || {
+        let mut pnc = PncScheduler::new(57_344, 0.9999);
+        std::hint::black_box(pnc.scan(&z, n));
+    });
+    b.bench("max_ratios S=57k n=8", || {
+        std::hint::black_box(max_ratios(&z, n).len());
+    });
+
+    // --- router -------------------------------------------------------------
+    b.bench("router submit+drain 1k reqs / 4 nets", || {
+        let mut r = Router::new(&["a", "b", "c", "d"]);
+        for i in 0..1000 {
+            r.submit(["a", "b", "c", "d"][i % 4], i, i as u64).unwrap();
+        }
+        while let Some(q) = r.pick() {
+            std::hint::black_box(r.drain(q, 32).len());
+        }
+    });
+
+    // --- PJRT paths (need artifacts) ----------------------------------------
+    match common::campaign() {
+        Ok(campaign) => {
+            let mut sess =
+                NetSession::new(&campaign.rt, &campaign.manifest, "mini_mlp", &campaign.codebook)?;
+
+            // What the static-literal cache saves: encoding the static
+            // inputs (candidate table, teacher, codebook, ...) to XLA
+            // literals, which the naive path would redo every step.
+            let statics = sess.statics.clone();
+            b.bench("literal-encode statics mini_mlp (cache saves this/step)", || {
+                for t in &statics {
+                    let l = vq4all::runtime::client::tensor_to_literal(t).unwrap();
+                    std::hint::black_box(&l);
+                }
+            });
+            let mut stream = CalibStream::new(
+                sess.calib_x.clone(),
+                sess.calib_y.clone(),
+                "classify",
+                sess.net.batch,
+                1,
+            );
+            let batch = stream.next_batch()?;
+            b.bench("PJRT train_step mini_mlp (S=57k n=8)", || {
+                sess.train_step(&batch).unwrap();
+            });
+            let codes = sess.hard_codes(&vq4all::vq::ratios::FreezeState::new(sess.net.s_total));
+            let codes_t = sess.codes_tensor(&codes);
+            let eb: Vec<_> = vq4all::coordinator::calib::EvalBatches::new(
+                &sess.test_x.clone(),
+                &sess.test_y.clone(),
+                "classify",
+                sess.net.eval_batch,
+                3,
+            )
+            .take(1)
+            .collect::<anyhow::Result<_>>()?;
+            b.bench("PJRT eval_hard batch=100 mini_mlp", || {
+                sess.eval_batch("eval_hard", Some(&codes_t), &eb[0]).unwrap();
+            });
+            let x = eb[0][0].clone();
+            b.bench("PJRT infer_hard (fused vq_matmul) batch=100", || {
+                sess.eval_infer(&codes_t, std::slice::from_ref(&x)).unwrap();
+            });
+        }
+        Err(e) => println!("skipping PJRT benches (no artifacts): {e}"),
+    }
+
+    b.report();
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! E12 — task-switch I/O: per-layer DRAM codebooks vs universal ROM
+//! (§3.2 / Table 1's I/O column), plus the silicon-area comparison.
+mod common;
+
+use vq4all::bench::Table;
+use vq4all::rom::AreaModel;
+use vq4all::serving::switchsim::{compare, SwitchWorkload};
+
+fn main() -> anyhow::Result<()> {
+    let mut t = Table::new(
+        "Task switching — codebook traffic (per-layer DRAM vs universal ROM)",
+        &["nets", "layers", "cb KB", "P-VQ loads", "P-VQ MB moved", "ROM loads", "I/O multiple"],
+    );
+    for (nets, layers, kb) in [(2, 8, 64), (5, 20, 64), (5, 20, 256), (8, 30, 256)] {
+        let w = SwitchWorkload {
+            nets,
+            layers_per_net: layers,
+            codebook_bytes_per_layer: kb * 1024,
+            rounds: 10,
+            inferences_per_activation: 5,
+            sram_bytes: layers * kb * 1024 * 3 / 2,
+        };
+        let (pl, rom) = compare(&w);
+        t.row(vec![
+            nets.to_string(),
+            layers.to_string(),
+            kb.to_string(),
+            pl.codebook_loads.to_string(),
+            format!("{:.1}", pl.codebook_bytes_loaded as f64 / 1e6),
+            rom.codebook_loads.to_string(),
+            format!("{}x vs 1x", pl.codebook_loads.max(1)),
+        ]);
+    }
+    t.print();
+
+    let area = AreaModel::default();
+    let (sram, rom_mm2) = area.compare(5 * 20 * 256 * 1024, 2 << 20);
+    println!(
+        "\nsilicon area (7nm): per-layer SRAM-resident {:.3} mm^2 vs universal ROM {:.4} mm^2 ({:.0}x)",
+        sram,
+        rom_mm2,
+        sram / rom_mm2
+    );
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! E1 — regenerate **Table 1** (UQ vs P-VQ vs U-VQ).
+mod common;
+
+use vq4all::exp::table1;
+use vq4all::runtime::Manifest;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&common::artifacts_dir())?;
+    let rows = table1::run(&manifest, &table1::default_configs())?;
+    table1::render(&rows).print();
+    table1::check_shape(&rows)?;
+    println!("shape check: P-VQ/U-VQ < UQ on MSE, U-VQ I/O = 1x — OK");
+    Ok(())
+}

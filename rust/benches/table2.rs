@@ -1,0 +1,11 @@
+//! E3 — regenerate **Table 2** (detection under compression).
+mod common;
+
+use vq4all::exp::table2;
+
+fn main() -> anyhow::Result<()> {
+    let campaign = common::campaign()?;
+    let rows = table2::run(&campaign, "mini_detector")?;
+    table2::render(&rows).print();
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! E4 — regenerate **Table 3** (classification Top-1 / ratio).
+mod common;
+
+use vq4all::exp::table3;
+
+fn main() -> anyhow::Result<()> {
+    let campaign = common::campaign()?;
+    let rows = table3::run(
+        &campaign,
+        &["mini_resnet18", "mini_resnet50", "mini_mobilenet"],
+    )?;
+    table3::render(&rows).print();
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! E5 — regenerate **Table 4** (generative quality, mini diffusion).
+mod common;
+
+use vq4all::exp::table4;
+
+fn main() -> anyhow::Result<()> {
+    let campaign = common::campaign()?;
+    let rows = table4::run(&campaign, "mini_denoiser")?;
+    table4::render(&rows).print();
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! E6 — regenerate **Table 5** (ablations on 2-bit mini_resnet18).
+mod common;
+
+use vq4all::exp::table5;
+
+fn main() -> anyhow::Result<()> {
+    let campaign = common::campaign()?;
+    let net = "mini_resnet18";
+    let n_rows = table5::candidate_count(&campaign, net, &[1, 2, 4, 8])?;
+    let part_rows = table5::components(&campaign, net)?;
+    let index = table5::index_distribution(&campaign, net)?;
+    print!("{}", table5::render(&n_rows, &part_rows, &index));
+    Ok(())
+}

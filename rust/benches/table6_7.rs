@@ -1,0 +1,29 @@
+//! E9/E10 — regenerate **Table 6** (codebook sources) and **Table 7**
+//! (assignment-init strategies).
+mod common;
+
+use vq4all::exp::table6_7;
+use vq4all::vq::assign::AssignInit;
+
+fn main() -> anyhow::Result<()> {
+    let campaign = common::campaign()?;
+    let target = "mini_resnet18";
+    let subsets: Vec<Vec<&str>> = vec![
+        vec!["mini_resnet18"],
+        vec!["mini_resnet18", "mini_resnet50"],
+        vec!["mini_resnet18", "mini_resnet50", "mini_detector"],
+        vec!["mini_resnet18", "mini_resnet50", "mini_detector", "mini_denoiser"],
+    ];
+    let t6 = table6_7::codebook_sources(&campaign, target, &subsets)?;
+    table6_7::render("Table 6 — codebook weight-source combinations", &t6).print();
+
+    let variants = [
+        (AssignInit::Random, true, "random"),
+        (AssignInit::Cosine, true, "cosine"),
+        (AssignInit::Euclid, false, "euclid (equal init)"),
+        (AssignInit::Euclid, true, "euclid + Eq.7 init"),
+    ];
+    let t7 = table6_7::assign_init(&campaign, target, &variants)?;
+    table6_7::render("Table 7 — candidate-assignment initialization", &t7).print();
+    Ok(())
+}

@@ -1,0 +1,238 @@
+//! Calibration-data streaming: deterministic shuffled batches over the
+//! `.vqt` datasets, with the task-specific extras (diffusion timesteps
+//! and noise for the denoiser — the graph consumes them as inputs so the
+//! coordinator owns the randomness).
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Batch iterator over a calibration split.
+pub struct CalibStream {
+    x: Tensor,
+    y: Tensor,
+    task: String,
+    batch: usize,
+    timesteps: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+}
+
+impl CalibStream {
+    pub fn new(x: Tensor, y: Tensor, task: &str, batch: usize, seed: u64) -> Self {
+        let n = x.shape[0];
+        assert!(batch <= n, "batch {batch} > dataset {n}");
+        let mut rng = Rng::new(seed);
+        let order = rng.permutation(n);
+        CalibStream {
+            x,
+            y,
+            task: task.to_string(),
+            batch,
+            timesteps: 50,
+            order,
+            cursor: 0,
+            rng,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.x.shape[0]
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Next batch as the train-step's batch inputs (manifest order).
+    pub fn next_batch(&mut self) -> anyhow::Result<Vec<Tensor>> {
+        let n = self.len();
+        if self.cursor + self.batch > n {
+            // Epoch boundary: reshuffle.
+            self.order = self.rng.permutation(n);
+            self.cursor = 0;
+        }
+        let idx = &self.order[self.cursor..self.cursor + self.batch];
+        self.cursor += self.batch;
+
+        let xb = gather_rows(&self.x, idx)?;
+        match self.task.as_str() {
+            "classify" | "detect" => {
+                let yb = gather_rows(&self.y, idx)?;
+                Ok(vec![xb, yb])
+            }
+            "denoise" => {
+                // x0 + random timesteps + random noise (graph builds x_t).
+                let t: Vec<i32> = (0..self.batch)
+                    .map(|_| self.rng.below(self.timesteps) as i32)
+                    .collect();
+                let mut eps = vec![0.0f32; self.batch * 2];
+                self.rng.fill_normal(&mut eps);
+                Ok(vec![
+                    xb,
+                    Tensor::from_i32(&[self.batch], t),
+                    Tensor::from_f32(&[self.batch, 2], eps),
+                ])
+            }
+            other => anyhow::bail!("unknown task {other:?}"),
+        }
+    }
+}
+
+/// Row-gather along axis 0 (f32 or i32).
+pub fn gather_rows(t: &Tensor, idx: &[usize]) -> anyhow::Result<Tensor> {
+    let row: usize = t.shape[1..].iter().product();
+    let mut shape = t.shape.clone();
+    shape[0] = idx.len();
+    match &t.data {
+        crate::tensor::Storage::F32(v) => {
+            let mut out = Vec::with_capacity(idx.len() * row);
+            for &i in idx {
+                out.extend_from_slice(&v[i * row..(i + 1) * row]);
+            }
+            Ok(Tensor::from_f32(&shape, out))
+        }
+        crate::tensor::Storage::I32(v) => {
+            let mut out = Vec::with_capacity(idx.len() * row);
+            for &i in idx {
+                out.extend_from_slice(&v[i * row..(i + 1) * row]);
+            }
+            Ok(Tensor::from_i32(&shape, out))
+        }
+        other => anyhow::bail!("gather_rows: unsupported dtype {:?}", other.dtype()),
+    }
+}
+
+/// Sequential eval batches (no shuffle, truncating the tail).
+pub struct EvalBatches<'a> {
+    x: &'a Tensor,
+    y: &'a Tensor,
+    task: &'a str,
+    batch: usize,
+    cursor: usize,
+    timesteps: usize,
+    rng: Rng,
+}
+
+impl<'a> EvalBatches<'a> {
+    pub fn new(x: &'a Tensor, y: &'a Tensor, task: &'a str, batch: usize, seed: u64) -> Self {
+        EvalBatches {
+            x,
+            y,
+            task,
+            batch,
+            cursor: 0,
+            timesteps: 50,
+            rng: Rng::new(seed),
+        }
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.x.shape[0] / self.batch
+    }
+}
+
+impl<'a> Iterator for EvalBatches<'a> {
+    type Item = anyhow::Result<Vec<Tensor>>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.cursor + self.batch > self.x.shape[0] {
+            return None;
+        }
+        let idx: Vec<usize> = (self.cursor..self.cursor + self.batch).collect();
+        self.cursor += self.batch;
+        let xb = match gather_rows(self.x, &idx) {
+            Ok(t) => t,
+            Err(e) => return Some(Err(e)),
+        };
+        let out = match self.task {
+            "classify" | "detect" => match gather_rows(self.y, &idx) {
+                Ok(yb) => Ok(vec![xb, yb]),
+                Err(e) => Err(e),
+            },
+            "denoise" => {
+                let b = self.batch;
+                let t: Vec<i32> = (0..b).map(|_| self.rng.below(self.timesteps) as i32).collect();
+                let mut eps = vec![0.0f32; b * 2];
+                self.rng.fill_normal(&mut eps);
+                Ok(vec![
+                    xb,
+                    Tensor::from_i32(&[b], t),
+                    Tensor::from_f32(&[b, 2], eps),
+                ])
+            }
+            other => Err(anyhow::anyhow!("unknown task {other:?}")),
+        };
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xy(n: usize) -> (Tensor, Tensor) {
+        let x = Tensor::from_f32(&[n, 2], (0..n * 2).map(|i| i as f32).collect());
+        let y = Tensor::from_i32(&[n], (0..n as i32).collect());
+        (x, y)
+    }
+
+    #[test]
+    fn batches_have_right_shapes() {
+        let (x, y) = xy(10);
+        let mut s = CalibStream::new(x, y, "classify", 4, 1);
+        let b = s.next_batch().unwrap();
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0].shape, vec![4, 2]);
+        assert_eq!(b[1].shape, vec![4]);
+    }
+
+    #[test]
+    fn epoch_covers_all_samples() {
+        let (x, y) = xy(8);
+        let mut s = CalibStream::new(x, y, "classify", 4, 2);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..2 {
+            let b = s.next_batch().unwrap();
+            for &v in b[1].as_i32().unwrap() {
+                seen.insert(v);
+            }
+        }
+        assert_eq!(seen.len(), 8, "one epoch covers every sample exactly once");
+    }
+
+    #[test]
+    fn denoise_batches_carry_t_and_eps() {
+        let x = Tensor::from_f32(&[16, 2], vec![0.0; 32]);
+        let y = Tensor::from_i32(&[16], vec![0; 16]);
+        let mut s = CalibStream::new(x, y, "denoise", 8, 3);
+        let b = s.next_batch().unwrap();
+        assert_eq!(b.len(), 3);
+        assert_eq!(b[1].shape, vec![8]);
+        assert!(b[1].as_i32().unwrap().iter().all(|&t| (0..50).contains(&t)));
+        assert_eq!(b[2].shape, vec![8, 2]);
+    }
+
+    #[test]
+    fn eval_batches_sequential_and_truncated() {
+        let (x, y) = xy(10);
+        let ev = EvalBatches::new(&x, &y, "classify", 4, 0);
+        let batches: Vec<_> = ev.map(|b| b.unwrap()).collect();
+        assert_eq!(batches.len(), 2, "10/4 -> 2 full batches");
+        assert_eq!(batches[0][1].as_i32().unwrap(), &[0, 1, 2, 3]);
+        assert_eq!(batches[1][1].as_i32().unwrap(), &[4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, y) = xy(10);
+        let mut a = CalibStream::new(x.clone(), y.clone(), "classify", 4, 7);
+        let mut b = CalibStream::new(x, y, "classify", 4, 7);
+        for _ in 0..5 {
+            assert_eq!(
+                a.next_batch().unwrap()[1].as_i32().unwrap(),
+                b.next_batch().unwrap()[1].as_i32().unwrap()
+            );
+        }
+    }
+}

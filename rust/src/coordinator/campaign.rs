@@ -1,0 +1,306 @@
+//! The multi-network construction campaign — VQ4ALL's Algorithm 1 over
+//! the whole zoo with one frozen universal codebook.
+//!
+//! Flow per network (the paper's pipeline, Figure 1):
+//!
+//! 1. `init_assign` (device): top-n candidates + Eq. 7 logits.
+//! 2. loop: stream a calibration batch → `train_step` (device) →
+//!    every `pnc_interval` steps the PNC scheduler scans the logits and
+//!    freezes groups past `alpha` (Eq. 14), feeding the one-hot masks
+//!    back as inputs.
+//! 3. stop at `steps` or when fully constructed; collapse the remainder
+//!    to argmax codes; `eval_hard` (device) for the deliverable metric.
+//! 4. pack the codes (`log2 k` bits/group) and account sizes — the
+//!    universal codebook contributes **zero** per-network bytes (ROM).
+
+use std::path::Path;
+
+use crate::runtime::artifact::Manifest;
+use crate::runtime::client::Runtime;
+use crate::tensor::{io, Tensor};
+use crate::util::config::CampaignConfig;
+use crate::util::rng::Rng;
+use crate::vq::pack::{pack_codes, PackedCodes, SizeReport};
+use crate::vq::KdeSampler;
+
+use super::calib::CalibStream;
+use super::pnc::PncScheduler;
+use super::session::NetSession;
+
+/// Per-network campaign outcome.
+#[derive(Clone, Debug)]
+pub struct NetResult {
+    pub name: String,
+    pub task: String,
+    pub float_metric: f64,
+    pub soft_metric: f64,
+    pub hard_metric: f64,
+    pub hard_loss: f64,
+    pub steps: usize,
+    pub frozen_fraction: f64,
+    pub loss_curve: Vec<[f32; 4]>,
+    /// (step, soft metric) samples when `eval_interval > 0`.
+    pub metric_curve: Vec<(usize, f64)>,
+    pub packed: PackedCodes,
+    pub sizes: SizeReport,
+    pub codes: Vec<u32>,
+    /// Final ratio logits (S*n) — feeds the Figure-3 ratio histogram.
+    pub final_z: Vec<f32>,
+    /// Final trained "other" params (bias/norm/head), in `net.others`
+    /// order.  Deploying the codes requires *these*, not the teacher's —
+    /// they were co-trained with the soft reconstruction (§4.2); pairing
+    /// the codes with teacher others measurably degrades the network
+    /// (most visibly the denoiser, Table 4).
+    pub final_others: Vec<crate::tensor::Tensor>,
+}
+
+impl NetResult {
+    pub fn accuracy_drop(&self) -> f64 {
+        self.float_metric - self.hard_metric
+    }
+}
+
+/// Whole-campaign outcome.
+#[derive(Clone, Debug)]
+pub struct CampaignResult {
+    pub nets: Vec<NetResult>,
+    pub codebook_bytes: usize,
+    pub effective_bit: f64,
+}
+
+/// Campaign driver.
+pub struct Campaign {
+    pub rt: Runtime,
+    pub manifest: Manifest,
+    pub cfg: CampaignConfig,
+    pub codebook: Tensor,
+}
+
+impl Campaign {
+    /// Load the manifest + the default (python-exported) universal
+    /// codebook from `dir`.
+    pub fn load(dir: &Path, cfg: CampaignConfig) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let codebook = io::read_tensor(&manifest.path(&manifest.codebook_file))?;
+        anyhow::ensure!(
+            codebook.shape == vec![manifest.config.k, manifest.config.d],
+            "codebook shape {:?} != ({}, {})",
+            codebook.shape,
+            manifest.config.k,
+            manifest.config.d
+        );
+        Ok(Campaign {
+            rt: Runtime::cpu()?,
+            manifest,
+            cfg,
+            codebook,
+        })
+    }
+
+    /// Rebuild the universal codebook in Rust from the zoo's float
+    /// sub-vectors (§4.1 done natively — used by Table 6's combination
+    /// study and to cross-check the python sampler).
+    pub fn build_codebook_from(
+        manifest: &Manifest,
+        nets: &[&str],
+        seed: u64,
+    ) -> anyhow::Result<Tensor> {
+        let cfg = &manifest.config;
+        let mut flats = Vec::new();
+        for name in nets {
+            let nm = manifest.network(name)?;
+            let t = io::read_tensor(&manifest.path(nm.data_file("teacher_flat")?))?;
+            flats.push(t.as_f32()?.to_vec());
+        }
+        let refs: Vec<&[f32]> = flats.iter().map(|v| v.as_slice()).collect();
+        let mut rng = Rng::new(seed);
+        let per_net = 10 * cfg.k; // sub-vectors per net, paper's 10*k*d weights
+        let pool = KdeSampler::pool_from_networks(&refs, cfg.d, per_net, &mut rng);
+        let kde = KdeSampler::new(pool, cfg.d, cfg.bandwidth as f32);
+        let cb = kde.sample_codebook(cfg.k, &mut rng);
+        Ok(Tensor::from_f32(&[cfg.k, cfg.d], cb.words))
+    }
+
+    /// Default loss weights per task, modulated by the Table-5 toggles.
+    /// Classification/detection follow Eq. 12 (all ones).  The denoiser
+    /// uses a KD-dominant weighting: at the scaled schedule the eps-MSE
+    /// gradient is batch-noise-dominated and drifts assignments toward
+    /// codes that match eps-MSE but bias the 50-step sampling chain
+    /// (FID 500 vs 7 — measured in EXPERIMENTS.md E5); block-wise KD
+    /// against the float teacher is the signal that preserves
+    /// generation, mirroring the paper's 100x-smaller lr for SD (§5.3).
+    pub fn task_loss_weights(task: &str, use_t: bool, use_kd: bool, use_r: bool) -> [f32; 3] {
+        let base = if task == "denoise" {
+            [0.05, 1.0, 1.0]
+        } else {
+            [1.0, 1.0, 1.0]
+        };
+        [
+            if use_t { base[0] } else { 0.0 },
+            if use_kd { base[1] } else { 0.0 },
+            if use_r { base[2] } else { 0.0 },
+        ]
+    }
+
+    /// Construct one network; the core loop.
+    pub fn construct(&self, name: &str) -> anyhow::Result<NetResult> {
+        let sess = NetSession::new(&self.rt, &self.manifest, name, &self.codebook)?;
+        self.construct_with_session(sess)
+    }
+
+    /// Run the construction loop on a prepared session (the Table-6/7
+    /// harnesses override the codebook or candidate table first).
+    pub fn construct_with_session(&self, mut sess: NetSession) -> anyhow::Result<NetResult> {
+        let name = sess.net.name.clone();
+        let name = name.as_str();
+        let w = self.cfg.loss_weights.unwrap_or_else(|| {
+            Self::task_loss_weights(
+                &sess.net.task,
+                self.cfg.use_task_loss,
+                self.cfg.use_kd_loss,
+                self.cfg.use_ratio_reg,
+            )
+        });
+        sess.set_loss_weights(w);
+        if let Some(n_eff) = self.cfg.candidate_mask {
+            sess.mask_candidates(n_eff)?;
+        }
+        let mut pnc = if self.cfg.disable_pnc {
+            PncScheduler::disabled(sess.net.s_total)
+        } else {
+            PncScheduler::new(sess.net.s_total, self.cfg.alpha)
+        };
+
+        let mut stream = CalibStream::new(
+            sess.calib_x.clone(),
+            sess.calib_y.clone(),
+            &sess.net.task,
+            sess.net.batch,
+            self.cfg.seed ^ sess.net.s_total as u64,
+        );
+
+        let mut loss_curve = Vec::with_capacity(self.cfg.steps);
+        let mut metric_curve = Vec::new();
+        crate::log_info!(
+            "campaign",
+            "[{name}] constructing: S={} steps={} alpha={}",
+            sess.net.s_total,
+            self.cfg.steps,
+            if self.cfg.disable_pnc { f64::NAN } else { self.cfg.alpha }
+        );
+
+        for step in 0..self.cfg.steps {
+            let batch = stream.next_batch()?;
+            let m = sess.train_step(&batch)?;
+            loss_curve.push(m);
+
+            if self.cfg.pnc_interval > 0 && (step + 1) % self.cfg.pnc_interval == 0 {
+                let newly = pnc.scan(sess.z(), sess.n);
+                if newly > 0 {
+                    sess.set_freeze(pnc.frozen_tensor(), pnc.frozen_idx_tensor());
+                }
+                crate::log_debug!(
+                    "campaign",
+                    "[{name}] step {} L={:.4} frozen {}/{}",
+                    step + 1,
+                    m[0],
+                    pnc.num_frozen(),
+                    pnc.total()
+                );
+                if pnc.all_frozen() {
+                    crate::log_info!("campaign", "[{name}] fully constructed at step {}", step + 1);
+                    break;
+                }
+            }
+            if self.cfg.eval_interval > 0 && (step + 1) % self.cfg.eval_interval == 0 {
+                let (_, acc) = sess.evaluate("eval_soft", None)?;
+                metric_curve.push((step + 1, acc));
+            }
+        }
+
+        // Soft (construction-time) metric, then the hard collapse.
+        let (_, soft_metric) = sess.evaluate("eval_soft", None)?;
+        let codes = sess.hard_codes(&pnc.state);
+        let codes_t = sess.codes_tensor(&codes);
+
+        // §5.1 special-layer pass: quantize the output head with a small
+        // private codebook before the final eval, so `hard_metric`
+        // measures the fully compressed network.
+        let mut other_bytes: usize = sess.net.others.iter().map(|o| o.elems() * 4).sum();
+        let mut special_codebook_bytes = 0usize;
+        if let Some((ks, ds)) = self.cfg.output_codebook {
+            for sl in crate::quant::special::compress_output_layers(&mut sess, ks, ds)? {
+                crate::log_info!(
+                    "campaign",
+                    "[{name}] special layer {}: {} -> {} bytes ({:.1}x, mse {:.2e})",
+                    sl.name,
+                    sl.float_bytes,
+                    sl.compressed_bytes,
+                    sl.ratio(),
+                    sl.mse
+                );
+                other_bytes = other_bytes - sl.float_bytes + sl.compressed_bytes;
+                special_codebook_bytes += sl.codebook_bytes;
+            }
+        }
+        let (hard_loss, hard_metric) = sess.evaluate("eval_hard", Some(&codes_t))?;
+
+        let bits = (usize::BITS - (sess.k - 1).leading_zeros()).max(1);
+        let packed = pack_codes(&codes, bits);
+        let sizes = SizeReport {
+            float_bytes: sess.net.s_total * sess.d * 4,
+            assign_bytes: packed.bytes(),
+            // The universal codebook amortizes into ROM; only private
+            // special-layer codebooks are charged to the network.
+            codebook_bytes: special_codebook_bytes,
+            other_bytes,
+        };
+
+        crate::log_info!(
+            "campaign",
+            "[{name}] done: float={:.4} soft={:.4} hard={:.4} ratio={:.1}x frozen={:.1}%",
+            sess.net.float_metric,
+            soft_metric,
+            hard_metric,
+            sizes.ratio(),
+            100.0 * pnc.progress()
+        );
+
+        Ok(NetResult {
+            name: name.to_string(),
+            task: sess.net.task.clone(),
+            float_metric: sess.net.float_metric,
+            soft_metric,
+            hard_metric,
+            hard_loss,
+            steps: sess.steps_run,
+            frozen_fraction: pnc.progress(),
+            loss_curve,
+            metric_curve,
+            packed,
+            sizes,
+            codes,
+            final_z: sess.z().to_vec(),
+            final_others: sess.others().to_vec(),
+        })
+    }
+
+    /// Final ratio logits of a construction run (Figure 3's histogram).
+    pub fn construct_final_z(&self, name: &str) -> anyhow::Result<(Vec<f32>, usize)> {
+        let res = self.construct(name)?;
+        Ok((res.final_z, self.manifest.config.n))
+    }
+
+    /// Construct every requested network with the shared codebook.
+    pub fn run(&self, names: &[&str]) -> anyhow::Result<CampaignResult> {
+        let mut nets = Vec::new();
+        for name in names {
+            nets.push(self.construct(name)?);
+        }
+        Ok(CampaignResult {
+            nets,
+            codebook_bytes: self.manifest.config.k * self.manifest.config.d * 4,
+            effective_bit: self.manifest.config.effective_bit,
+        })
+    }
+}

@@ -1,0 +1,31 @@
+//! The VQ4ALL coordinator — the paper's Algorithm 1 as a Rust system.
+//!
+//! The split with the AOT graphs (DESIGN.md §3): the device executes
+//! *one gradient step at a time* (`train_step` artifact, Algorithm 1
+//! line 10); everything stateful and schedule-shaped lives here —
+//!
+//! * [`session`]  — per-network state machine over the manifest's
+//!   calling convention (state/static/batch tensor vectors, literal
+//!   caching for the hot loop).
+//! * [`pnc`]      — the Progressive-Network-Construction scheduler
+//!   (Eq. 14): scans ratio logits, freezes groups past `alpha`, never
+//!   unfreezes, reports construction progress.
+//! * [`calib`]    — calibration batch streaming (deterministic shuffles;
+//!   diffusion timestep/noise sampling for the denoiser).
+//! * [`campaign`] — the multi-network construction campaign: one frozen
+//!   universal codebook, N networks, shared schedule, final packing and
+//!   accuracy accounting.
+//! * [`checkpoint`] — resumable campaign state (z, Adamax moments,
+//!   freeze state) on disk.
+//! * [`report`]   — human- and machine-readable campaign reports.
+
+pub mod calib;
+pub mod campaign;
+pub mod checkpoint;
+pub mod pnc;
+pub mod report;
+pub mod session;
+
+pub use campaign::{Campaign, CampaignResult, NetResult};
+pub use pnc::PncScheduler;
+pub use session::NetSession;

@@ -1,0 +1,131 @@
+//! Progressive-Network-Construction scheduler (§4.3, Eq. 14).
+//!
+//! Every `interval` steps the coordinator reads the ratio logits `z`
+//! back from the device and this scheduler:
+//!
+//! 1. computes `softmax(z)` per group,
+//! 2. freezes every *unfrozen* group whose max ratio exceeds `alpha`
+//!    (one-hot mask, ratio pinned at 1 — Eq. 14),
+//! 3. never unfreezes (the monotonicity invariant, property-tested in
+//!    `rust/tests/prop_coordinator.rs`).
+//!
+//! The paper's DKM ablation ("no PNC") is `alpha > 1`: nothing freezes
+//! during training and the final hard collapse happens in one shot.
+
+use crate::vq::ratios::{max_ratios, FreezeState};
+
+/// Scheduler state + policy for one network.
+#[derive(Clone, Debug)]
+pub struct PncScheduler {
+    pub alpha: f64,
+    pub state: FreezeState,
+    /// Freeze counts per scan (the Figure-3 construction trajectory).
+    pub history: Vec<usize>,
+}
+
+impl PncScheduler {
+    pub fn new(s_total: usize, alpha: f64) -> Self {
+        PncScheduler {
+            alpha,
+            state: FreezeState::new(s_total),
+            history: Vec::new(),
+        }
+    }
+
+    /// "Disable PNC" configuration (DKM-style, Table 5 / Figure 3).
+    pub fn disabled(s_total: usize) -> Self {
+        Self::new(s_total, 2.0) // unreachable threshold
+    }
+
+    /// Scan logits `z (s, n)` and freeze qualifying groups.
+    /// Returns how many *new* groups were frozen in this scan.
+    pub fn scan(&mut self, z: &[f32], n: usize) -> usize {
+        let before = self.state.num_frozen();
+        for (g, (r, m)) in max_ratios(z, n).into_iter().enumerate() {
+            if !self.state.is_frozen(g) && (r as f64) > self.alpha {
+                self.state.freeze(g, m);
+            }
+        }
+        let now = self.state.num_frozen();
+        self.history.push(now);
+        now - before
+    }
+
+    pub fn num_frozen(&self) -> usize {
+        self.state.num_frozen()
+    }
+
+    pub fn total(&self) -> usize {
+        self.state.frozen.len()
+    }
+
+    pub fn all_frozen(&self) -> bool {
+        self.state.all_frozen()
+    }
+
+    /// Fraction constructed (the campaign progress metric).
+    pub fn progress(&self) -> f64 {
+        self.num_frozen() as f64 / self.total().max(1) as f64
+    }
+
+    /// Device-facing tensors for the next train step.
+    pub fn frozen_tensor(&self) -> Vec<f32> {
+        self.state.frozen.clone()
+    }
+
+    pub fn frozen_idx_tensor(&self) -> Vec<i32> {
+        self.state.frozen_idx.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn z_rows(rows: &[[f32; 4]]) -> Vec<f32> {
+        rows.iter().flatten().copied().collect()
+    }
+
+    #[test]
+    fn freezes_only_past_alpha() {
+        let mut s = PncScheduler::new(2, 0.99);
+        // Row 0: dominated logit -> max ratio ~ 1. Row 1: flat -> 0.25.
+        let z = z_rows(&[[20.0, 0.0, 0.0, 0.0], [0.0, 0.0, 0.0, 0.0]]);
+        let newly = s.scan(&z, 4);
+        assert_eq!(newly, 1);
+        assert!(s.state.is_frozen(0));
+        assert!(!s.state.is_frozen(1));
+        assert_eq!(s.state.frozen_idx[0], 0);
+    }
+
+    #[test]
+    fn monotone_never_unfreezes() {
+        let mut s = PncScheduler::new(1, 0.9);
+        let hot = z_rows(&[[10.0, 0.0, 0.0, 0.0]]);
+        let cold = z_rows(&[[0.0, 0.0, 0.0, 0.0]]);
+        s.scan(&hot, 4);
+        assert_eq!(s.num_frozen(), 1);
+        s.scan(&cold, 4); // ratios collapsed back — freeze must persist
+        assert_eq!(s.num_frozen(), 1);
+        assert_eq!(s.state.frozen_idx[0], 0);
+    }
+
+    #[test]
+    fn disabled_never_freezes() {
+        let mut s = PncScheduler::disabled(3);
+        let z = z_rows(&[[50.0, 0., 0., 0.], [50.0, 0., 0., 0.], [50.0, 0., 0., 0.]]);
+        assert_eq!(s.scan(&z, 4), 0);
+        assert_eq!(s.num_frozen(), 0);
+    }
+
+    #[test]
+    fn history_tracks_progress() {
+        let mut s = PncScheduler::new(2, 0.9);
+        s.scan(&z_rows(&[[10., 0., 0., 0.], [0., 0., 0., 0.]]), 4);
+        s.scan(&z_rows(&[[10., 0., 0., 0.], [0., 10., 0., 0.]]), 4);
+        assert_eq!(s.history, vec![1, 2]);
+        assert!(s.all_frozen());
+        assert_eq!(s.progress(), 1.0);
+        assert_eq!(s.state.frozen_idx[1], 1, "second group froze to slot 1");
+    }
+}

@@ -1,0 +1,116 @@
+//! Campaign reports: the human table plus a machine-readable JSON dump
+//! (consumed by EXPERIMENTS.md bookkeeping and the bench harnesses).
+
+use crate::bench::Table;
+use crate::util::json::Json;
+
+use super::campaign::CampaignResult;
+
+/// Render the campaign summary table.
+pub fn table(res: &CampaignResult) -> Table {
+    let mut t = Table::new(
+        "VQ4ALL campaign — universal codebook, hard-constructed networks",
+        &[
+            "network", "task", "float", "soft", "hard", "drop", "ratio", "scope", "steps",
+            "frozen%",
+        ],
+    );
+    for n in &res.nets {
+        t.row(vec![
+            n.name.clone(),
+            n.task.clone(),
+            format!("{:.4}", n.float_metric),
+            format!("{:.4}", n.soft_metric),
+            format!("{:.4}", n.hard_metric),
+            format!("{:+.4}", -n.accuracy_drop()),
+            format!("{:.1}x", n.sizes.ratio()),
+            format!("{:.1}x", n.sizes.scope_ratio()),
+            n.steps.to_string(),
+            format!("{:.1}", 100.0 * n.frozen_fraction),
+        ]);
+    }
+    t
+}
+
+/// JSON dump for downstream tooling.
+pub fn to_json(res: &CampaignResult) -> Json {
+    Json::obj(vec![
+        ("codebook_bytes", Json::num(res.codebook_bytes as f64)),
+        ("effective_bit", Json::num(res.effective_bit)),
+        (
+            "networks",
+            Json::Arr(
+                res.nets
+                    .iter()
+                    .map(|n| {
+                        Json::obj(vec![
+                            ("name", Json::str(n.name.clone())),
+                            ("task", Json::str(n.task.clone())),
+                            ("float_metric", Json::num(n.float_metric)),
+                            ("soft_metric", Json::num(n.soft_metric)),
+                            ("hard_metric", Json::num(n.hard_metric)),
+                            ("steps", Json::num(n.steps as f64)),
+                            ("frozen_fraction", Json::num(n.frozen_fraction)),
+                            ("ratio", Json::num(n.sizes.ratio())),
+                            ("scope_ratio", Json::num(n.sizes.scope_ratio())),
+                            ("assign_bytes", Json::num(n.sizes.assign_bytes as f64)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::campaign::NetResult;
+    use crate::vq::pack::{pack_codes, SizeReport};
+
+    fn fake_result() -> CampaignResult {
+        CampaignResult {
+            nets: vec![NetResult {
+                name: "mini_mlp".into(),
+                task: "classify".into(),
+                float_metric: 0.99,
+                soft_metric: 0.97,
+                hard_metric: 0.96,
+                hard_loss: 0.1,
+                steps: 100,
+                frozen_fraction: 1.0,
+                loss_curve: vec![],
+                metric_curve: vec![],
+                packed: pack_codes(&[1, 2, 3], 8),
+                sizes: SizeReport {
+                    float_bytes: 1000,
+                    assign_bytes: 62,
+                    codebook_bytes: 0,
+                    other_bytes: 10,
+                },
+                codes: vec![1, 2, 3],
+                final_z: vec![],
+                final_others: vec![],
+            }],
+            codebook_bytes: 4096,
+            effective_bit: 2.0,
+        }
+    }
+
+    #[test]
+    fn table_and_json_render() {
+        let res = fake_result();
+        let t = table(&res);
+        let s = t.render();
+        assert!(s.contains("mini_mlp"));
+        assert!(s.contains("0.9600"));
+        let j = to_json(&res);
+        let parsed = crate::util::json::parse(&j.to_string()).unwrap();
+        assert_eq!(
+            parsed.req_arr("networks").unwrap()[0]
+                .req_str("name")
+                .unwrap(),
+            "mini_mlp"
+        );
+    }
+}

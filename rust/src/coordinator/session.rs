@@ -1,0 +1,432 @@
+//! Per-network construction session: owns the compiled executables, the
+//! state/static tensor vectors (manifest calling convention), and the
+//! name-based input assembly for every artifact.
+//!
+//! Hot-loop note: static inputs (candidate table, codebook, teacher
+//! weights) are encoded to XLA literals **once** and cached; per-step
+//! inputs (state, batch) are encoded per call.  `set_freeze` is the only
+//! operation that invalidates static cache entries.
+
+use std::collections::BTreeMap;
+
+use crate::runtime::artifact::{Manifest, NetworkManifest};
+use crate::runtime::client::{tensor_to_literal, Executable, Runtime};
+use crate::tensor::{io, Tensor};
+
+/// A network under construction.
+pub struct NetSession {
+    pub net: NetworkManifest,
+    pub k: usize,
+    pub d: usize,
+    pub n: usize,
+    execs: BTreeMap<String, Executable>,
+    /// State tensors, aligned with `net.state_specs`.
+    pub state: Vec<Tensor>,
+    /// Static tensors, aligned with `net.static_specs`.
+    pub statics: Vec<Tensor>,
+    static_lits: Vec<Option<xla::Literal>>,
+    state_idx: BTreeMap<String, usize>,
+    static_idx: BTreeMap<String, usize>,
+    /// Datasets (loaded once).
+    pub calib_x: Tensor,
+    pub calib_y: Tensor,
+    pub test_x: Tensor,
+    pub test_y: Tensor,
+    /// Float sub-vectors (teacher) — also the KDE pool contribution.
+    pub teacher_flat: Tensor,
+    pub steps_run: usize,
+}
+
+impl NetSession {
+    /// Build a session: load executables + data, run `init_assign` on the
+    /// device (Pallas distance kernel), initialize state per §4.1/§4.2.
+    pub fn new(
+        rt: &Runtime,
+        manifest: &Manifest,
+        name: &str,
+        codebook: &Tensor,
+    ) -> anyhow::Result<Self> {
+        let net = manifest.network(name)?.clone();
+        let cfg = &manifest.config;
+
+        let mut execs = BTreeMap::new();
+        for (ename, espec) in &net.executables {
+            execs.insert(
+                ename.clone(),
+                rt.load(&manifest.path(&espec.hlo), espec)?,
+            );
+        }
+
+        let load = |tag: &str| -> anyhow::Result<Tensor> {
+            io::read_tensor(&manifest.path(net.data_file(tag)?))
+        };
+        let calib_x = load("calib_x")?;
+        let calib_y = load("calib_y")?;
+        let test_x = load("test_x")?;
+        let test_y = load("test_y")?;
+        let teacher_flat = load("teacher_flat")?;
+        anyhow::ensure!(
+            teacher_flat.shape == vec![net.s_total, cfg.d],
+            "teacher_flat shape {:?} != ({}, {})",
+            teacher_flat.shape,
+            net.s_total,
+            cfg.d
+        );
+
+        // ---- init_assign on the device (Eq. 5 + Eq. 7).
+        let init = execs
+            .get("init_assign")
+            .ok_or_else(|| anyhow::anyhow!("{name}: missing init_assign artifact"))?;
+        let out = init.run(&[teacher_flat.clone(), codebook.clone()])?;
+        let (assign, z0) = (out[0].clone(), out[1].clone());
+
+        // ---- teacher "other" params, in manifest order.
+        let mut teacher_others = Vec::new();
+        for i in 0..net.others.len() {
+            teacher_others.push(load(&format!("teacher_other_{i}"))?);
+        }
+
+        // ---- state vector per state_specs.
+        let mut state = Vec::new();
+        let mut state_idx = BTreeMap::new();
+        for spec in &net.state_specs {
+            state_idx.insert(spec.name.clone(), state.len());
+            let t = match spec.name.as_str() {
+                "z" => z0.clone(),
+                nm if nm.starts_with("other:") => {
+                    let base = &nm["other:".len()..];
+                    let oi = net
+                        .others
+                        .iter()
+                        .position(|o| o.name == base)
+                        .ok_or_else(|| anyhow::anyhow!("unknown other param {base:?}"))?;
+                    teacher_others[oi].clone()
+                }
+                // m_z, u_z, m_other:*, v_other:*, t -> zeros
+                _ => match spec.dtype {
+                    crate::tensor::DType::I32 => Tensor::zeros_i32(&spec.shape),
+                    _ => Tensor::zeros_f32(&spec.shape),
+                },
+            };
+            anyhow::ensure!(
+                t.shape == spec.shape,
+                "{name}: state {:?} shape {:?} != {:?}",
+                spec.name,
+                t.shape,
+                spec.shape
+            );
+            state.push(t);
+        }
+
+        // ---- static vector per static_specs.
+        let mut statics = Vec::new();
+        let mut static_idx = BTreeMap::new();
+        let mut teacher_iter = teacher_others.iter();
+        for spec in &net.static_specs {
+            static_idx.insert(spec.name.clone(), statics.len());
+            let t = match spec.name.as_str() {
+                "assign" => assign.clone(),
+                "frozen" => Tensor::zeros_f32(&spec.shape),
+                "frozen_idx" => Tensor::zeros_i32(&spec.shape),
+                "codebook" => codebook.clone(),
+                "teacher_flat" => teacher_flat.clone(),
+                "loss_w" => Tensor::from_f32(&[3], vec![1.0, 1.0, 1.0]),
+                nm if nm.starts_with("teacher:") => teacher_iter
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("teacher param underflow at {nm}"))?
+                    .clone(),
+                other => anyhow::bail!("unknown static {other:?}"),
+            };
+            anyhow::ensure!(
+                t.shape == spec.shape,
+                "{name}: static {:?} shape {:?} != {:?}",
+                spec.name,
+                t.shape,
+                spec.shape
+            );
+            statics.push(t);
+        }
+        let static_lits = vec![None; statics.len()];
+
+        Ok(NetSession {
+            net,
+            k: cfg.k,
+            d: cfg.d,
+            n: cfg.n,
+            execs,
+            state,
+            statics,
+            static_lits,
+            state_idx,
+            static_idx,
+            calib_x,
+            calib_y,
+            test_x,
+            test_y,
+            teacher_flat,
+            steps_run: 0,
+        })
+    }
+
+    pub fn exec(&self, name: &str) -> anyhow::Result<&Executable> {
+        self.execs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("{}: no executable {name:?}", self.net.name))
+    }
+
+    // ---- state/static access ----------------------------------------------
+
+    pub fn state_by_name(&self, name: &str) -> &Tensor {
+        &self.state[self.state_idx[name]]
+    }
+
+    pub fn static_by_name(&self, name: &str) -> &Tensor {
+        &self.statics[self.static_idx[name]]
+    }
+
+    /// Ratio logits `z` (S*n, row-major).
+    pub fn z(&self) -> &[f32] {
+        self.state_by_name("z").as_f32().expect("z is f32")
+    }
+
+    /// Candidate table (S*n).
+    pub fn assign_u32(&self) -> Vec<u32> {
+        self.static_by_name("assign")
+            .as_i32()
+            .expect("assign is i32")
+            .iter()
+            .map(|&x| x as u32)
+            .collect()
+    }
+
+    /// The current "other" params (bias/norm/head), in `net.others`
+    /// order.
+    pub fn others(&self) -> Vec<Tensor> {
+        self.net
+            .others
+            .iter()
+            .map(|o| self.state_by_name(&format!("other:{}", o.name)).clone())
+            .collect()
+    }
+
+    /// Install trained "other" params (from a finished campaign's
+    /// `NetResult::final_others`) into this session, in `net.others`
+    /// order.  Serving/generation sessions must do this before pairing
+    /// the campaign's codes with `eval_hard` / `infer_hard`.
+    pub fn set_others(&mut self, others: &[Tensor]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            others.len() == self.net.others.len(),
+            "{}: got {} other params, net has {}",
+            self.net.name,
+            others.len(),
+            self.net.others.len()
+        );
+        let names: Vec<String> = self.net.others.iter().map(|o| o.name.clone()).collect();
+        for (name, t) in names.iter().zip(others) {
+            self.set_state(&format!("other:{name}"), t.clone())?;
+        }
+        Ok(())
+    }
+
+    /// Replace one state tensor by name (shape-checked).  Used by the
+    /// §5.1 special-layer pass to feed per-layer-VQ-reconstructed head
+    /// weights back through the `other:` inputs.
+    pub fn set_state(&mut self, name: &str, t: Tensor) -> anyhow::Result<()> {
+        let i = *self
+            .state_idx
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("{}: no state tensor {name:?}", self.net.name))?;
+        anyhow::ensure!(
+            t.shape == self.state[i].shape,
+            "{name}: shape {:?} != {:?}",
+            t.shape,
+            self.state[i].shape
+        );
+        self.state[i] = t;
+        Ok(())
+    }
+
+    fn set_static(&mut self, name: &str, t: Tensor) {
+        let i = self.static_idx[name];
+        self.statics[i] = t;
+        self.static_lits[i] = None; // invalidate cache
+    }
+
+    /// Push a new PNC freeze mask to the device inputs.
+    pub fn set_freeze(&mut self, frozen: Vec<f32>, frozen_idx: Vec<i32>) {
+        let s = self.net.s_total;
+        self.set_static("frozen", Tensor::from_f32(&[s], frozen));
+        self.set_static("frozen_idx", Tensor::from_i32(&[s], frozen_idx));
+    }
+
+    /// Per-term loss weights `[w_t, w_kd, w_r]` (Table 5 ablations).
+    pub fn set_loss_weights(&mut self, w: [f32; 3]) {
+        self.set_static("loss_w", Tensor::from_f32(&[3], w.to_vec()));
+    }
+
+    /// Replace the candidate table + initial logits (Table 7's
+    /// initialization-strategy ablation builds these host-side).
+    pub fn override_candidates(&mut self, assign: Tensor, z0: Tensor) {
+        let zi = self.state_idx["z"];
+        assert_eq!(z0.shape, self.state[zi].shape, "z0 shape mismatch");
+        self.state[zi] = z0;
+        assert_eq!(
+            assign.shape,
+            self.static_by_name("assign").shape,
+            "assign shape mismatch"
+        );
+        self.set_static("assign", assign);
+    }
+
+    /// Emulate a candidate count `n_eff < n` by pinning the logits of
+    /// slots >= n_eff to -inf-like values: those candidates get ~0 ratio
+    /// and can never become optimal (Table 5's n ablation).  At
+    /// `n_eff = 1` this degenerates to plain nearest-codeword VQ.
+    pub fn mask_candidates(&mut self, n_eff: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            n_eff >= 1 && n_eff <= self.n,
+            "candidate mask {n_eff} out of range 1..={}",
+            self.n
+        );
+        let n = self.n;
+        let zi = self.state_idx["z"];
+        let z = self.state[zi].as_f32_mut()?;
+        for g in 0..z.len() / n {
+            for m in n_eff..n {
+                z[g * n + m] = -1e9;
+            }
+        }
+        Ok(())
+    }
+
+    fn static_literal(&mut self, i: usize) -> anyhow::Result<&xla::Literal> {
+        if self.static_lits[i].is_none() {
+            self.static_lits[i] = Some(tensor_to_literal(&self.statics[i])?);
+        }
+        Ok(self.static_lits[i].as_ref().unwrap())
+    }
+
+    // ---- execution ---------------------------------------------------------
+
+    /// One construction step (Algorithm 1 line 10).  Returns
+    /// `[L, L_t, L_kd, L_r]`.
+    pub fn train_step(&mut self, batch: &[Tensor]) -> anyhow::Result<[f32; 4]> {
+        let nstate = self.state.len();
+        let nstatic = self.statics.len();
+        let mut lits = Vec::with_capacity(nstate + nstatic + batch.len());
+        for t in &self.state {
+            lits.push(tensor_to_literal(t)?);
+        }
+        for i in 0..nstatic {
+            lits.push(self.static_literal(i)?.clone());
+        }
+        for t in batch {
+            lits.push(tensor_to_literal(t)?);
+        }
+        let exec = self
+            .execs
+            .get("train_step")
+            .ok_or_else(|| anyhow::anyhow!("missing train_step"))?;
+        let mut outs = exec.run_literals(&lits)?;
+        let metrics_t = outs.pop().ok_or_else(|| anyhow::anyhow!("no metrics output"))?;
+        anyhow::ensure!(
+            outs.len() == nstate,
+            "train_step returned {} state tensors, expected {nstate}",
+            outs.len()
+        );
+        self.state = outs;
+        self.steps_run += 1;
+        let m = metrics_t.as_f32()?;
+        Ok([m[0], m[1], m[2], m[3]])
+    }
+
+    /// Assemble inputs for an eval/infer executable by spec name:
+    /// `codes` from the argument, `z`/`other:*` from state, statics by
+    /// name, and remaining (batch) inputs consumed in order.
+    fn assemble(
+        &mut self,
+        exec_name: &str,
+        codes: Option<&Tensor>,
+        batch: &[Tensor],
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let specs = self.exec(exec_name)?.spec.inputs.clone();
+        let mut lits = Vec::with_capacity(specs.len());
+        let mut batch_iter = batch.iter();
+        for spec in &specs {
+            let name = spec.name.as_str();
+            if name == "codes" {
+                let c = codes.ok_or_else(|| anyhow::anyhow!("{exec_name} needs codes"))?;
+                lits.push(tensor_to_literal(c)?);
+            } else if let Some(&i) = self.state_idx.get(name) {
+                lits.push(tensor_to_literal(&self.state[i])?);
+            } else if let Some(&i) = self.static_idx.get(name) {
+                lits.push(self.static_literal(i)?.clone());
+            } else {
+                let t = batch_iter
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("{exec_name}: batch underflow at {name:?}"))?;
+                lits.push(tensor_to_literal(t)?);
+            }
+        }
+        Ok(lits)
+    }
+
+    /// Public input assembly (used by the serving layer).
+    pub fn assemble_public(
+        &mut self,
+        exec_name: &str,
+        codes: Option<&Tensor>,
+        batch: &[Tensor],
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        self.assemble(exec_name, codes, batch)
+    }
+
+    /// Run an eval executable over one batch; returns `(loss_sum, hits)`.
+    pub fn eval_batch(
+        &mut self,
+        exec_name: &str,
+        codes: Option<&Tensor>,
+        batch: &[Tensor],
+    ) -> anyhow::Result<(f64, f64)> {
+        let lits = self.assemble(exec_name, codes, batch)?;
+        let outs = self.exec(exec_name)?.run_literals(&lits)?;
+        let m = outs[0].as_f32()?;
+        Ok((m[0] as f64, m[1] as f64))
+    }
+
+    /// Full test-set eval; returns `(mean loss, metric)` where metric is
+    /// accuracy / hit-rate per sample.
+    pub fn evaluate(&mut self, exec_name: &str, codes: Option<&Tensor>) -> anyhow::Result<(f64, f64)> {
+        let eb = self.net.eval_batch;
+        let test_x = self.test_x.clone();
+        let test_y = self.test_y.clone();
+        let task = self.net.task.clone();
+        let batches: Vec<Vec<Tensor>> =
+            super::calib::EvalBatches::new(&test_x, &test_y, &task, eb, 17)
+                .collect::<anyhow::Result<_>>()?;
+        let mut loss = 0.0;
+        let mut hits = 0.0;
+        let mut count = 0usize;
+        for b in &batches {
+            let (l, h) = self.eval_batch(exec_name, codes, b)?;
+            loss += l;
+            hits += h;
+            count += eb;
+        }
+        anyhow::ensure!(count > 0, "empty test set");
+        Ok((loss / count as f64, hits / count as f64))
+    }
+
+    /// Collapse to final hard codes (frozen slot or argmax — Eq. 2 form).
+    pub fn hard_codes(&self, fs: &crate::vq::ratios::FreezeState) -> Vec<u32> {
+        crate::vq::ratios::hard_codes(self.z(), &self.assign_u32(), self.n, fs)
+    }
+
+    /// Hard codes as an i32 tensor for the eval/infer artifacts.
+    pub fn codes_tensor(&self, codes: &[u32]) -> Tensor {
+        Tensor::from_i32(
+            &[self.net.s_total],
+            codes.iter().map(|&c| c as i32).collect(),
+        )
+    }
+}

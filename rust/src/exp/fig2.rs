@@ -1,0 +1,142 @@
+//! E2 — **Figure 2**: accuracy vs compression ratio for the ResNet
+//! stand-ins, VQ4ALL against the baseline families.
+//!
+//! Curves produced:
+//! * **VQ4ALL** — the real campaign: constructed codes evaluated through
+//!   the device `eval_hard` path, ratio from the packed-size accounting
+//!   (universal codebook amortized to ROM).
+//! * **P-VQ (k-means)** — the per-layer baseline evaluated through the
+//!   *same device path*: the network's own sub-vectors are k-means'd and
+//!   the baseline codebook is substituted for the universal one
+//!   (`eval_hard` accepts any (codes, codebook) pair); the codebook
+//!   bytes count against the network, which is exactly what separates
+//!   the curves at high ratios in the paper.
+//! * **UQ / ternary** — post-training distortion baselines: exact
+//!   storage ratio + weight-space MSE, mapped to an estimated metric by
+//!   monotone interpolation against the device-measured anchors.
+//!   (The AOT graphs only accept weights via (codes, codebook), so
+//!   arbitrary-valued UQ weights cannot ride the device path; the
+//!   monotone map preserves the orderings Figure 2 asserts.  Recorded
+//!   in DESIGN.md §2.)
+
+use crate::coordinator::{Campaign, NetResult};
+use crate::quant::{ternary, uniform};
+use crate::tensor::{io, Tensor};
+use crate::vq::kmeans::{kmeans, KmeansOpts};
+
+/// One point on a Figure-2 curve.
+#[derive(Clone, Debug)]
+pub struct Point {
+    pub method: String,
+    pub ratio: f64,
+    pub metric: f64,
+    pub weight_mse: f64,
+}
+
+/// Run the true VQ4ALL campaign point for `net`.
+pub fn vq4all_point(campaign: &Campaign, net: &str) -> anyhow::Result<(Point, NetResult)> {
+    let res = campaign.construct(net)?;
+    let nm = campaign.manifest.network(net)?;
+    let flat_t = io::read_tensor(&campaign.manifest.path(nm.data_file("teacher_flat")?))?;
+    let flat = flat_t.as_f32()?;
+    let cb = crate::vq::Codebook::new(
+        campaign.manifest.config.k,
+        campaign.manifest.config.d,
+        campaign.codebook.as_f32()?.to_vec(),
+    );
+    let decoded = cb.decode_vec(&res.codes);
+    let mse = crate::util::stats::mse(flat, &decoded);
+    Ok((
+        Point {
+            method: "VQ4ALL".into(),
+            ratio: res.sizes.scope_ratio(),
+            metric: res.hard_metric,
+            weight_mse: mse,
+        },
+        res,
+    ))
+}
+
+/// Per-layer k-means baseline through the real device eval path.
+pub fn kmeans_baseline_point(campaign: &Campaign, net: &str, k: usize) -> anyhow::Result<Point> {
+    let cfg = &campaign.manifest.config;
+    let nm = campaign.manifest.network(net)?;
+    let flat_t = io::read_tensor(&campaign.manifest.path(nm.data_file("teacher_flat")?))?;
+    let flat = flat_t.as_f32()?;
+    let res = kmeans(flat, cfg.d, k, &KmeansOpts::default());
+
+    // The eval_hard artifact's codebook input has fixed shape (K, d) —
+    // embed the (possibly smaller) baseline codebook in the first k rows.
+    let mut words = res.codebook.words.clone();
+    words.resize(cfg.k * cfg.d, 0.0);
+    let cb_tensor = Tensor::from_f32(&[cfg.k, cfg.d], words);
+    let mut sess =
+        crate::coordinator::NetSession::new(&campaign.rt, &campaign.manifest, net, &cb_tensor)?;
+    let codes_t = sess.codes_tensor(&res.codes);
+    let (_, metric) = sess.evaluate("eval_hard", Some(&codes_t))?;
+
+    // Per-layer accounting: the private codebook counts against the net.
+    let bits = (k as f64).log2().max(1.0);
+    let assign_bytes = (flat.len() / cfg.d) as f64 * bits / 8.0;
+    let scope_bytes = flat.len() as f64 * 4.0;
+    let ratio = scope_bytes / (assign_bytes + res.codebook.storage_bytes() as f64);
+    Ok(Point {
+        method: format!("P-VQ k={k}"),
+        ratio,
+        metric,
+        weight_mse: res.mse,
+    })
+}
+
+/// Distortion-proxy baselines: (method, ratio, weight MSE).
+pub fn distortion_baselines(campaign: &Campaign, net: &str) -> anyhow::Result<Vec<(String, f64, f64)>> {
+    let nm = campaign.manifest.network(net)?;
+    let flat_t = io::read_tensor(&campaign.manifest.path(nm.data_file("teacher_flat")?))?;
+    let flat = flat_t.as_f32()?;
+    let mut out = Vec::new();
+    for bits in [1u32, 2, 3, 4] {
+        let mse = uniform::quant_mse(flat, bits, uniform::Granularity::PerTensor);
+        out.push((format!("UQ-{bits}bit"), 32.0 / bits as f64, mse));
+    }
+    let t = ternary::ternary_mse(flat, 0.05);
+    out.push(("TTQ-style".into(), 16.0, t));
+    Ok(out)
+}
+
+/// Map a weight-MSE to an estimated metric given measured anchors
+/// (monotone linear interpolation in log-MSE; clamped at the ends).
+pub fn mse_to_metric(anchors: &mut Vec<(f64, f64)>, mse: f64) -> f64 {
+    anchors.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    if anchors.is_empty() {
+        return f64::NAN;
+    }
+    let x = mse.max(1e-12).ln();
+    if x <= anchors[0].0.max(1e-12).ln() {
+        return anchors[0].1;
+    }
+    for w in anchors.windows(2) {
+        let (m0, a0) = (w[0].0.max(1e-12).ln(), w[0].1);
+        let (m1, a1) = (w[1].0.max(1e-12).ln(), w[1].1);
+        if x <= m1 {
+            let t = (x - m0) / (m1 - m0).max(1e-12);
+            return a0 + t * (a1 - a0);
+        }
+    }
+    anchors.last().unwrap().1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interpolation_is_monotone_and_clamped() {
+        let mut anchors = vec![(1e-4, 0.95), (1e-2, 0.60), (1e-3, 0.85)];
+        let hi = mse_to_metric(&mut anchors, 1e-5);
+        let mid = mse_to_metric(&mut anchors, 3e-3);
+        let lo = mse_to_metric(&mut anchors, 1.0);
+        assert_eq!(hi, 0.95, "below-range clamps to best");
+        assert_eq!(lo, 0.60, "above-range clamps to worst");
+        assert!(mid < 0.85 && mid > 0.60, "interpolates: {mid}");
+    }
+}

@@ -1,0 +1,79 @@
+//! E7 — **Figure 3**: PNC vs no-PNC.
+//!
+//! *Up*: soft accuracy per eval interval for both configurations, plus
+//! the end-of-training hard collapse — without PNC the collapse drops
+//! accuracy sharply (Eq. 13's gap), with PNC the hard and soft curves
+//! meet.
+//!
+//! *Down*: the distribution of each group's largest ratio at the end of
+//! training (no-PNC run) — the paper's "15% outliers far from 1".
+
+use crate::coordinator::Campaign;
+use crate::util::stats::Histogram;
+use crate::vq::ratios::max_ratios;
+
+/// One configuration's trajectory.
+#[derive(Clone, Debug)]
+pub struct Trajectory {
+    pub label: String,
+    pub metric_curve: Vec<(usize, f64)>,
+    pub soft_final: f64,
+    pub hard_final: f64,
+    /// Largest-ratio histogram at end of training (16 bins over [0, 1]).
+    pub ratio_hist: Vec<f64>,
+}
+
+/// Run one configuration and collect the Figure-3 signals.
+pub fn run_one(campaign: &Campaign, net: &str, disable_pnc: bool) -> anyhow::Result<Trajectory> {
+    let mut cfg = campaign.cfg.clone();
+    cfg.disable_pnc = disable_pnc;
+    if cfg.eval_interval == 0 {
+        cfg.eval_interval = (cfg.steps / 5).max(1);
+    }
+    let c2 = Campaign {
+        rt: crate::runtime::Runtime::cpu()?,
+        manifest: campaign.manifest.clone(),
+        cfg,
+        codebook: campaign.codebook.clone(),
+    };
+    let res = c2.construct(net)?;
+
+    // Final largest-ratio distribution (the paper's lower panel).
+    let n = c2.manifest.config.n;
+    let mut hist = Histogram::new(0.0, 1.0000001, 16);
+    for (r, _) in max_ratios(&res.final_z, n) {
+        hist.push(r as f64);
+    }
+    Ok(Trajectory {
+        label: if disable_pnc { "no PNC (DKM-style)" } else { "PNC" }.to_string(),
+        metric_curve: res.metric_curve.clone(),
+        soft_final: res.soft_metric,
+        hard_final: res.hard_metric,
+        ratio_hist: hist.normalized(),
+    })
+}
+
+/// Render both trajectories.
+pub fn render(pnc: &Trajectory, nopnc: &Trajectory) -> String {
+    let mut s = String::from("\n=== Figure 3 — PNC vs no-PNC (soft curve; hard collapse) ===\n");
+    for t in [pnc, nopnc] {
+        s.push_str(&format!("{:<22} curve:", t.label));
+        for (step, m) in &t.metric_curve {
+            s.push_str(&format!(" {step}:{m:.3}"));
+        }
+        s.push_str(&format!(
+            "  | soft {:.4} -> hard {:.4} (collapse {:+.4})\n",
+            t.soft_final,
+            t.hard_final,
+            t.hard_final - t.soft_final
+        ));
+    }
+    s.push_str("largest-ratio histogram (no PNC), 16 bins over [0,1]:\n  ");
+    for (i, m) in nopnc.ratio_hist.iter().enumerate() {
+        if *m > 0.0005 {
+            s.push_str(&format!("[{:.2}]{:.1}% ", (i as f64 + 0.5) / 16.0, m * 100.0));
+        }
+    }
+    s.push('\n');
+    s
+}

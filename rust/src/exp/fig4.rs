@@ -1,0 +1,52 @@
+//! E8 — **Figure 4** (supplementary §7): the ratio-threshold `alpha`
+//! sweep for the PNC scheduler on 2-bit mini_resnet18/50.
+//!
+//! The paper's finding: smaller alpha freezes too eagerly and hurts
+//! accuracy; alpha = 0.9999 is the sweet spot, and ResNet-50 is more
+//! sensitive below 0.95.
+
+use crate::coordinator::Campaign;
+
+#[derive(Clone, Debug)]
+pub struct Point {
+    pub alpha: f64,
+    pub metric: f64,
+    pub frozen_fraction: f64,
+    pub steps: usize,
+}
+
+pub fn sweep(campaign: &Campaign, net: &str, alphas: &[f64]) -> anyhow::Result<Vec<Point>> {
+    let mut out = Vec::new();
+    for &alpha in alphas {
+        let mut cfg = campaign.cfg.clone();
+        cfg.alpha = alpha;
+        let c2 = Campaign {
+            rt: crate::runtime::Runtime::cpu()?,
+            manifest: campaign.manifest.clone(),
+            cfg,
+            codebook: campaign.codebook.clone(),
+        };
+        let res = c2.construct(net)?;
+        out.push(Point {
+            alpha,
+            metric: res.hard_metric,
+            frozen_fraction: res.frozen_fraction,
+            steps: res.steps,
+        });
+    }
+    Ok(out)
+}
+
+pub fn render(net: &str, points: &[Point]) -> String {
+    let mut s = format!("\n=== Figure 4 — alpha sweep ({net}) ===\n");
+    for p in points {
+        s.push_str(&format!(
+            "alpha={:<8} hard={:.4} frozen={:>5.1}% steps={}\n",
+            p.alpha,
+            p.metric,
+            p.frozen_fraction * 100.0,
+            p.steps
+        ));
+    }
+    s
+}

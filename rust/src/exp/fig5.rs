@@ -1,0 +1,116 @@
+//! E11 — **Figure 5** (supplementary §8): optimal-assignment
+//! distribution over the universal codebook's codewords, per network.
+//!
+//! The paper's point: every low-bit network uses the codewords of the
+//! shared codebook *evenly* — no codeword starvation, so the universal
+//! table's information capacity is fully exercised.  We report the
+//! usage histogram plus summary statistics (fraction of codewords used,
+//! normalized entropy).
+
+use crate::coordinator::campaign::NetResult;
+
+#[derive(Clone, Debug)]
+pub struct Usage {
+    pub net: String,
+    /// Histogram of code usage over codeword-index buckets.
+    pub buckets: Vec<f64>,
+    /// Fraction of the k codewords referenced at least once.
+    pub coverage: f64,
+    /// Shannon entropy of the usage distribution / log2(k) — 1.0 = uniform.
+    pub normalized_entropy: f64,
+}
+
+pub fn usage(res: &NetResult, k: usize, nbuckets: usize) -> Usage {
+    let mut counts = vec![0u64; k];
+    for &c in &res.codes {
+        counts[c as usize] += 1;
+    }
+    let used = counts.iter().filter(|&&c| c > 0).count();
+    let total: u64 = counts.iter().sum();
+    let mut entropy = 0.0f64;
+    for &c in &counts {
+        if c > 0 {
+            let p = c as f64 / total as f64;
+            entropy -= p * p.log2();
+        }
+    }
+    // Fold counts into index buckets (usage mass per codebook region).
+    let mut buckets = vec![0.0f64; nbuckets.min(k)];
+    let per = (k as f64) / buckets.len() as f64;
+    for (i, &c) in counts.iter().enumerate() {
+        let b = ((i as f64 / per) as usize).min(buckets.len() - 1);
+        buckets[b] += c as f64;
+    }
+    let sum: f64 = buckets.iter().sum::<f64>().max(1.0);
+    for b in buckets.iter_mut() {
+        *b /= sum;
+    }
+    Usage {
+        net: res.name.clone(),
+        buckets,
+        coverage: used as f64 / k as f64,
+        normalized_entropy: entropy / (k as f64).log2(),
+    }
+}
+
+pub fn render(usages: &[Usage]) -> String {
+    let mut s = String::from("\n=== Figure 5 — codeword usage per network (universal codebook) ===\n");
+    for u in usages {
+        s.push_str(&format!(
+            "{:<16} coverage {:>5.1}%  norm-entropy {:.3}  buckets:",
+            u.net,
+            u.coverage * 100.0,
+            u.normalized_entropy
+        ));
+        for b in &u.buckets {
+            s.push_str(&format!(" {:.1}", b * 100.0));
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vq::pack::{pack_codes, SizeReport};
+
+    fn fake(codes: Vec<u32>) -> NetResult {
+        NetResult {
+            name: "t".into(),
+            task: "classify".into(),
+            float_metric: 0.0,
+            soft_metric: 0.0,
+            hard_metric: 0.0,
+            hard_loss: 0.0,
+            steps: 0,
+            frozen_fraction: 0.0,
+            loss_curve: vec![],
+            metric_curve: vec![],
+            packed: pack_codes(&codes, 8),
+            sizes: SizeReport::default(),
+            codes,
+            final_z: vec![],
+            final_others: vec![],
+        }
+    }
+
+    #[test]
+    fn uniform_usage_has_high_entropy() {
+        let codes: Vec<u32> = (0..1024).map(|i| i % 64).collect();
+        let u = usage(&fake(codes), 64, 8);
+        assert!((u.coverage - 1.0).abs() < 1e-9);
+        assert!(u.normalized_entropy > 0.99, "entropy {}", u.normalized_entropy);
+        for b in &u.buckets {
+            assert!((b - 0.125).abs() < 0.01, "bucket {b}");
+        }
+    }
+
+    #[test]
+    fn skewed_usage_has_low_entropy_and_coverage() {
+        let codes = vec![3u32; 1000];
+        let u = usage(&fake(codes), 64, 8);
+        assert!(u.coverage < 0.02);
+        assert!(u.normalized_entropy < 0.01);
+    }
+}

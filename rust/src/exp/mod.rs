@@ -1,0 +1,15 @@
+//! Paper-experiment harnesses — one module per table/figure
+//! (the E1..E13 index in DESIGN.md §6).  Each module exposes a
+//! `run(...)` returning renderable rows; the `benches/` targets and the
+//! examples are thin drivers over these.
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod table6_7;

@@ -1,0 +1,283 @@
+//! E1 — **Table 1**: UQ vs per-layer VQ vs universal VQ across the zoo.
+//!
+//! Columns reproduced: ideal bit width, (k, d), codebook memory `C`,
+//! weight MSE, compression rate, codebook I/O multiple.
+//!
+//! Method: the float sub-vectors of every zoo network are loaded from
+//! the artifacts; for each bit config we (a) uniform-quantize per layer,
+//! (b) k-means a per-layer codebook, (c) sample one universal KDE
+//! codebook shared by all networks — then measure reconstruction MSE
+//! and account storage exactly as §3.1 prescribes.  The I/O column comes
+//! from the `rom::memsim` switch storm.
+//!
+//! The paper's (k, d) pairs are used for the *accounting*; the measured
+//! MSE uses scaled-down k (CPU k-means at 2^16 is impractical here) with
+//! the (k, d) relationship preserved — the orderings UQ ≫ U-VQ ≈ P-VQ
+//! are what the experiment asserts.
+
+use crate::quant::uniform::{self, Granularity};
+use crate::rom::memsim::TrafficReport;
+use crate::runtime::artifact::Manifest;
+use crate::serving::switchsim::{compare, SwitchWorkload};
+use crate::tensor::io;
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::vq::kmeans::{kmeans, KmeansOpts};
+use crate::vq::KdeSampler;
+
+/// One row of Table 1.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub bit: f64,
+    pub k: usize,
+    pub d: usize,
+    pub kind: &'static str, // UQ | P-VQ | U-VQ
+    pub codebook_bytes: usize,
+    pub mse: f64,
+    pub rate: f64,
+    pub io_multiple: f64,
+}
+
+/// Per-bit configuration mirroring the paper's Table 1 geometry
+/// (k grows with d so bits/weight stays constant).
+#[derive(Clone, Copy, Debug)]
+pub struct BitConfig {
+    pub bit: u32,
+    /// per-layer VQ (k, d)
+    pub pvq: (usize, usize),
+    /// universal VQ (k, d)
+    pub uvq: (usize, usize),
+}
+
+/// Scaled-down analogues of the paper's configs (same bit widths, same
+/// d-doubling structure; k capped for CPU k-means).
+pub fn default_configs() -> Vec<BitConfig> {
+    vec![
+        BitConfig {
+            bit: 3,
+            pvq: (64, 2),
+            uvq: (4096, 4),
+        },
+        BitConfig {
+            bit: 2,
+            pvq: (256, 4),
+            uvq: (4096, 6),
+        },
+        BitConfig {
+            bit: 1,
+            pvq: (256, 8),
+            uvq: (4096, 12),
+        },
+    ]
+}
+
+/// Load every network's float sub-vectors re-grouped at dimension `d`.
+fn zoo_flats(manifest: &Manifest, d: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+    let mut out = Vec::new();
+    for net in &manifest.networks {
+        let t = io::read_tensor(&manifest.path(net.data_file("teacher_flat")?))?;
+        let v = t.as_f32()?.to_vec();
+        // Regroup: the artifact stores (S, d0); we reinterpret the same
+        // weight stream at sub-vector length d (truncating the tail).
+        let usable = (v.len() / d) * d;
+        out.push(v[..usable].to_vec());
+    }
+    Ok(out)
+}
+
+fn switch_report(nets: usize, layers: usize, cb_bytes: usize) -> (TrafficReport, TrafficReport) {
+    compare(&SwitchWorkload {
+        nets,
+        layers_per_net: layers,
+        codebook_bytes_per_layer: cb_bytes,
+        rounds: 10,
+        inferences_per_activation: 5,
+        sram_bytes: (layers * cb_bytes) * 3 / 2, // fits 1.5 networks
+    })
+}
+
+/// Run E1.  Returns rows grouped by bit width: UQ, P-VQ, U-VQ.
+pub fn run(manifest: &Manifest, configs: &[BitConfig]) -> anyhow::Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    let layers_per_net = 8; // representative per-layer codebook count
+    for cfg in configs {
+        // ---------------- UQ
+        let flats = zoo_flats(manifest, 4)?;
+        let mut mse_acc = 0.0;
+        let mut weights = 0usize;
+        for f in &flats {
+            mse_acc += uniform::quant_mse(f, cfg.bit, Granularity::PerTensor) * f.len() as f64;
+            weights += f.len();
+        }
+        rows.push(Row {
+            bit: cfg.bit as f64,
+            k: 0,
+            d: 0,
+            kind: "UQ",
+            codebook_bytes: 0,
+            mse: mse_acc / weights as f64,
+            rate: 32.0 / cfg.bit as f64,
+            io_multiple: 0.0,
+        });
+
+        // ---------------- P-VQ: per-network k-means codebooks
+        let (kp, dp) = cfg.pvq;
+        let flats = zoo_flats(manifest, dp)?;
+        let mut mse_acc = 0.0;
+        let mut weights = 0usize;
+        let mut cb_bytes = 0usize;
+        let mut assign_bits = 0f64;
+        for f in &flats {
+            let res = kmeans(f, dp, kp, &KmeansOpts::default());
+            mse_acc += res.mse * f.len() as f64;
+            weights += f.len();
+            // per-layer: each of `layers_per_net` layers holds its own
+            // codebook of the same geometry
+            cb_bytes += layers_per_net * res.codebook.storage_bytes();
+            assign_bits += (f.len() / dp) as f64 * (kp as f64).log2();
+        }
+        let (pl_traffic, _) = switch_report(flats.len(), layers_per_net, kp * dp * 4);
+        rows.push(Row {
+            bit: cfg.bit as f64,
+            k: kp,
+            d: dp,
+            kind: "P-VQ",
+            codebook_bytes: cb_bytes,
+            mse: mse_acc / weights as f64,
+            rate: (weights as f64 * 32.0) / (assign_bits + cb_bytes as f64 * 8.0),
+            // The paper's I/O column counts total codebook loads over the
+            // task-switch benchmark, normalized to the universal codebook's
+            // single (tape-out) load — its "514x vs 1x".
+            io_multiple: pl_traffic.codebook_loads.max(1) as f64,
+        });
+
+        // ---------------- U-VQ: one KDE codebook for the whole zoo
+        let (ku, du) = cfg.uvq;
+        let flats = zoo_flats(manifest, du)?;
+        let refs: Vec<&[f32]> = flats.iter().map(|v| v.as_slice()).collect();
+        let mut rng = Rng::new(0xE1 + cfg.bit as u64);
+        let pool = KdeSampler::pool_from_networks(&refs, du, 10 * ku.min(2000), &mut rng);
+        let kde = KdeSampler::new(pool, du, manifest.config.bandwidth as f32);
+        let ucb = kde.sample_codebook(ku, &mut rng);
+        let mut mse_acc = 0.0;
+        let mut weights = 0usize;
+        let mut assign_bits = 0f64;
+        for f in &flats {
+            let (m, _) = ucb.encode_nearest(f);
+            mse_acc += m * f.len() as f64;
+            weights += f.len();
+            assign_bits += (f.len() / du) as f64 * (ku as f64).log2();
+        }
+        rows.push(Row {
+            bit: cfg.bit as f64,
+            k: ku,
+            d: du,
+            kind: "U-VQ",
+            codebook_bytes: ucb.storage_bytes(),
+            // universal codebook sits in ROM: amortized to zero per-model
+            rate: (weights as f64 * 32.0) / assign_bits,
+            mse: mse_acc / weights as f64,
+            io_multiple: 1.0, // normalized: loaded once at tape-out
+        });
+    }
+    Ok(rows)
+}
+
+/// Render as the paper's table.
+pub fn render(rows: &[Row]) -> crate::bench::Table {
+    let mut t = crate::bench::Table::new(
+        "Table 1 — UQ vs P-VQ vs U-VQ (zoo-wide)",
+        &["Bit", "k,d", "Type", "C", "MSE", "Rate", "I/O"],
+    );
+    for r in rows {
+        t.row(vec![
+            format!("{}", r.bit),
+            if r.k == 0 {
+                "-".into()
+            } else {
+                format!("2^{}, {}", (r.k as f64).log2() as u32, r.d)
+            },
+            r.kind.into(),
+            if r.codebook_bytes == 0 {
+                "-".into()
+            } else {
+                format!("{}K", r.codebook_bytes / 1024)
+            },
+            format!("{:.2e}", r.mse),
+            if r.kind == "UQ" {
+                format!("{:.0}x", r.rate)
+            } else {
+                format!("{:.1}x", r.rate)
+            },
+            match r.kind {
+                "UQ" => "-".into(),
+                "U-VQ" => "1x".into(),
+                _ => format!("{:.0}x", r.io_multiple),
+            },
+        ]);
+    }
+    t
+}
+
+/// The claims the paper's Table 1 makes, as assertions (used by the
+/// integration test and recorded in EXPERIMENTS.md):
+/// at every bit width, P-VQ and U-VQ beat UQ on MSE, and U-VQ's I/O is
+/// 1 while P-VQ's is orders of magnitude higher.
+pub fn check_shape(rows: &[Row]) -> anyhow::Result<()> {
+    for chunk in rows.chunks(3) {
+        let (uq, pvq, uvq) = (&chunk[0], &chunk[1], &chunk[2]);
+        anyhow::ensure!(
+            pvq.mse < uq.mse,
+            "bit {}: P-VQ mse {} !< UQ {}",
+            uq.bit,
+            pvq.mse,
+            uq.mse
+        );
+        anyhow::ensure!(
+            uvq.mse < uq.mse,
+            "bit {}: U-VQ mse {} !< UQ {}",
+            uq.bit,
+            uvq.mse,
+            uq.mse
+        );
+        anyhow::ensure!(
+            uvq.io_multiple <= 1.0 && pvq.io_multiple > 100.0,
+            "I/O ordering broken: U-VQ {} vs P-VQ {} (expected orders of magnitude)",
+            uvq.io_multiple,
+            pvq.io_multiple
+        );
+    }
+    Ok(())
+}
+
+/// Self-contained MSE comparison on synthetic weights (unit-test scale).
+pub fn synthetic_mse_ordering(seed: u64) -> (f64, f64, f64) {
+    let mut rng = Rng::new(seed);
+    let mut w = vec![0.0f32; 4 * 4000];
+    rng.fill_normal(&mut w);
+    for v in w.iter_mut() {
+        *v *= 0.05; // weight-scale values
+    }
+    let uq = uniform::quant_mse(&w, 2, Granularity::PerTensor);
+    let pv = kmeans(&w, 4, 256, &KmeansOpts::default()).mse;
+    let pool = w.clone();
+    let kde = KdeSampler::new(pool, 4, 0.01);
+    let ucb = kde.sample_codebook(256, &mut rng);
+    let (uv, _) = ucb.encode_nearest(&w);
+    let _ = stats::mean(&[uq, pv, uv]);
+    (uq, pv, uv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_ordering_matches_paper() {
+        let (uq, pvq, uvq) = synthetic_mse_ordering(11);
+        assert!(pvq < uq, "P-VQ {pvq} must beat UQ {uq}");
+        assert!(uvq < uq, "U-VQ {uvq} must beat UQ {uq}");
+        // Paper: U-VQ error on par with P-VQ (within a small factor).
+        assert!(uvq < pvq * 4.0, "U-VQ {uvq} should be near P-VQ {pvq}");
+    }
+}

@@ -1,0 +1,76 @@
+//! E3 — **Table 2**: detection under compression (mini_detector, the
+//! Mask-RCNN stand-in on the synthetic shapes task).
+//!
+//! Rows: uncompressed float, P-VQ (k-means, device-evaluated), VQ4ALL.
+//! Columns: model size, compression ratio, AP proxy (mAP@0.5-style hit
+//! rate — DESIGN.md §2 records the metric substitution).
+
+use crate::coordinator::Campaign;
+use crate::vq::kmeans::{kmeans, KmeansOpts};
+use crate::tensor::{io, Tensor};
+
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub method: String,
+    pub size_bytes: usize,
+    pub ratio: f64,
+    pub ap: f64,
+}
+
+pub fn run(campaign: &Campaign, net: &str) -> anyhow::Result<Vec<Row>> {
+    let nm = campaign.manifest.network(net)?;
+    let cfg = &campaign.manifest.config;
+    let scope_bytes = nm.s_total * cfg.d * 4;
+    let other_bytes: usize = nm.others.iter().map(|o| o.elems() * 4).sum();
+    let float_total = scope_bytes + other_bytes;
+    let mut rows = vec![Row {
+        method: "float (uncompressed)".into(),
+        size_bytes: float_total,
+        ratio: 1.0,
+        ap: nm.float_metric,
+    }];
+
+    // P-VQ baseline through the device eval.
+    let flat_t = io::read_tensor(&campaign.manifest.path(nm.data_file("teacher_flat")?))?;
+    let flat = flat_t.as_f32()?;
+    let km = kmeans(flat, cfg.d, cfg.k, &KmeansOpts::default());
+    let cb_tensor = Tensor::from_f32(&[cfg.k, cfg.d], km.codebook.words.clone());
+    let mut sess = crate::coordinator::NetSession::new(&campaign.rt, &campaign.manifest, net, &cb_tensor)?;
+    let codes_t = sess.codes_tensor(&km.codes);
+    let (_, pvq_ap) = sess.evaluate("eval_hard", Some(&codes_t))?;
+    let pvq_assign = nm.s_total * cfg.k.next_power_of_two().trailing_zeros() as usize / 8;
+    let pvq_size = pvq_assign + km.codebook.storage_bytes() + other_bytes;
+    rows.push(Row {
+        method: "P-VQ (k-means, per-net codebook)".into(),
+        size_bytes: pvq_size,
+        ratio: float_total as f64 / pvq_size as f64,
+        ap: pvq_ap,
+    });
+
+    // VQ4ALL.
+    let vq = campaign.construct(net)?;
+    let vq_size = vq.sizes.compressed_total();
+    rows.push(Row {
+        method: "VQ4ALL (universal codebook)".into(),
+        size_bytes: vq_size,
+        ratio: vq.sizes.ratio(),
+        ap: vq.hard_metric,
+    });
+    Ok(rows)
+}
+
+pub fn render(rows: &[Row]) -> crate::bench::Table {
+    let mut t = crate::bench::Table::new(
+        "Table 2 — detection under compression (mini_detector / synthetic shapes)",
+        &["method", "size", "ratio", "AP@0.5-proxy"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.method.clone(),
+            format!("{:.2} KB", r.size_bytes as f64 / 1024.0),
+            format!("{:.1}x", r.ratio),
+            format!("{:.3}", r.ap),
+        ]);
+    }
+    t
+}

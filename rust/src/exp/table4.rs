@@ -1,0 +1,232 @@
+//! E5 — **Table 4**: generative quality of the compressed denoiser
+//! (mini_denoiser, the Stable-Diffusion stand-in).
+//!
+//! The Rust coordinator runs the full reverse-diffusion loop through the
+//! `sample_step` artifact (hard-coded VQ weights decoded from the
+//! codebook inside the graph), then scores the samples:
+//!
+//! * **FID-proxy** — exact 2-D Fréchet distance between generated and
+//!   real data (same formula as FID with identity features; DESIGN.md
+//!   §2).  Lower is better.
+//! * **IS-proxy** — mode coverage/entropy over the 8 GMM modes: the
+//!   exponential of the entropy of the mode-assignment histogram
+//!   (max 8.0 = all modes covered evenly).  Higher is better.
+//!
+//! Rows: data floor (split-half Fréchet), VQ4ALL, per-layer k-means at
+//! the same k, and a crushed-k baseline standing in for the
+//! Q-diffusion/PCR failure mode at 2 bits.
+
+use crate::coordinator::{Campaign, NetSession};
+use crate::tensor::ops::{frechet_distance_2d, mean_cov_2d};
+use crate::tensor::{io, Tensor};
+use crate::util::rng::Rng;
+use crate::vq::kmeans::{kmeans, KmeansOpts};
+
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub method: String,
+    pub fid: f64,
+    pub is_proxy: f64,
+}
+
+/// Linear-beta DDPM schedule constants — must match
+/// `python/compile/data.diffusion_schedule` (verified by the
+/// `schedule_matches_python` test below).
+pub fn diffusion_schedule(timesteps: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut betas = Vec::with_capacity(timesteps);
+    for i in 0..timesteps {
+        let frac = i as f32 / (timesteps - 1) as f32;
+        betas.push(1e-4 + frac * (0.25 - 1e-4));
+    }
+    let alphas: Vec<f32> = betas.iter().map(|b| 1.0 - b).collect();
+    let mut abar = Vec::with_capacity(timesteps);
+    let mut acc = 1.0f32;
+    for &a in &alphas {
+        acc *= a;
+        abar.push(acc);
+    }
+    (betas, alphas, abar)
+}
+
+/// Run the reverse-diffusion chain for `rounds` batches; returns
+/// generated x0 samples (flattened (n, 2)).
+///
+/// The network's epsilon prediction runs on device (`denoise_eps`
+/// artifact, hard VQ weights decoded from the universal codebook); the
+/// DDPM posterior update runs here in the coordinator — the sampler
+/// *loop* is L3 state, and the pure forward reuses the graph family the
+/// xla_extension HLO-text round-trip executes correctly (the fused
+/// `sample_step` form hits a mis-executed gather/select on this runtime
+/// — see DESIGN.md §10).
+pub fn generate(sess: &mut NetSession, codes: &Tensor, rounds: usize, seed: u64) -> anyhow::Result<Vec<f32>> {
+    let b = sess.net.eval_batch;
+    let timesteps = 50usize;
+    let (betas, alphas, abar) = diffusion_schedule(timesteps);
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(rounds * b * 2);
+    for _ in 0..rounds {
+        let mut xt = vec![0.0f32; b * 2];
+        rng.fill_normal(&mut xt);
+        for t in (0..timesteps).rev() {
+            let tdiff = Tensor::from_i32(&[b], vec![t as i32; b]);
+            let xt_t = Tensor::from_f32(&[b, 2], xt.clone());
+            let lits = sess.assemble_public("denoise_eps", Some(codes), &[xt_t, tdiff])?;
+            let outs = sess.exec("denoise_eps")?.run_literals(&lits)?;
+            let eps_pred = outs[0].as_f32()?;
+
+            let beta = betas[t];
+            let s1m = (1.0 - abar[t]).sqrt().max(1e-12);
+            let inv_sqrt_alpha = 1.0 / alphas[t].sqrt();
+            let sqrt_beta = beta.sqrt();
+            let last = t == 0;
+            for i in 0..b * 2 {
+                let mean = inv_sqrt_alpha * (xt[i] - beta / s1m * eps_pred[i]);
+                let z = if last { 0.0 } else { rng.normal() as f32 };
+                xt[i] = mean + sqrt_beta * z;
+            }
+        }
+        out.extend_from_slice(&xt);
+    }
+    Ok(out)
+}
+
+/// FID-proxy: exact 2-D Fréchet distance.
+pub fn fid_proxy(gen: &[f32], real: &[f32]) -> f64 {
+    let (mg, cg) = mean_cov_2d(gen);
+    let (mr, cr) = mean_cov_2d(real);
+    frechet_distance_2d(mg, cg, mr, cr)
+}
+
+/// IS-proxy: exp(entropy) of the 8-mode assignment histogram.
+pub fn is_proxy(gen: &[f32], modes: usize, radius: f32) -> f64 {
+    let n = gen.len() / 2;
+    let mut counts = vec![0u64; modes];
+    for i in 0..n {
+        let (x, y) = (gen[2 * i], gen[2 * i + 1]);
+        let ang = (y.atan2(x) + 2.0 * std::f32::consts::PI) % (2.0 * std::f32::consts::PI);
+        let m = ((ang / (2.0 * std::f32::consts::PI) * modes as f32).round() as usize) % modes;
+        // Only count samples near the ring (real modes live at r=radius).
+        let r = (x * x + y * y).sqrt();
+        if (r - radius).abs() < radius * 0.5 {
+            counts[m] += 1;
+        }
+    }
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let mut h = 0.0f64;
+    for &c in &counts {
+        if c > 0 {
+            let p = c as f64 / total as f64;
+            h -= p * p.ln();
+        }
+    }
+    h.exp()
+}
+
+pub fn run(campaign: &Campaign, net: &str) -> anyhow::Result<Vec<Row>> {
+    let nm = campaign.manifest.network(net)?;
+    anyhow::ensure!(nm.task == "denoise", "table4 needs the denoiser");
+    let cfg = &campaign.manifest.config;
+    let test = io::read_tensor(&campaign.manifest.path(nm.data_file("test_x")?))?;
+    let real = test.as_f32()?;
+    let half = real.len() / 4 * 2;
+    let rounds = 4;
+
+    let mut rows = vec![Row {
+        method: "data floor (split-half)".into(),
+        fid: fid_proxy(&real[..half], &real[half..]),
+        is_proxy: is_proxy(real, 8, 2.0),
+    }];
+
+    // VQ4ALL.
+    let vq = campaign.construct(net)?;
+    let mut sess = NetSession::new(&campaign.rt, &campaign.manifest, net, &campaign.codebook)?;
+    sess.set_others(&vq.final_others)?; // codes pair with the trained norms
+    let codes_t = sess.codes_tensor(&vq.codes);
+    let gen = generate(&mut sess, &codes_t, rounds, 0xD1FF)?;
+    rows.push(Row {
+        method: "VQ4ALL (universal)".into(),
+        fid: fid_proxy(&gen, real),
+        is_proxy: is_proxy(&gen, 8, 2.0),
+    });
+
+    // Per-layer k-means at the same k.
+    let flat_t = io::read_tensor(&campaign.manifest.path(nm.data_file("teacher_flat")?))?;
+    let flat = flat_t.as_f32()?;
+    for (label, k) in [("P-VQ (k-means, same k)", cfg.k), ("crushed P-VQ (k=8)", 8)] {
+        let km = kmeans(flat, cfg.d, k, &KmeansOpts::default());
+        let mut words = km.codebook.words.clone();
+        words.resize(cfg.k * cfg.d, 0.0);
+        let cb = Tensor::from_f32(&[cfg.k, cfg.d], words);
+        let mut s2 = NetSession::new(&campaign.rt, &campaign.manifest, net, &cb)?;
+        let codes_t = s2.codes_tensor(&km.codes);
+        let gen = generate(&mut s2, &codes_t, rounds, 0xD1FF + k as u64)?;
+        rows.push(Row {
+            method: label.into(),
+            fid: fid_proxy(&gen, real),
+            is_proxy: is_proxy(&gen, 8, 2.0),
+        });
+    }
+    Ok(rows)
+}
+
+pub fn render(rows: &[Row]) -> crate::bench::Table {
+    let mut t = crate::bench::Table::new(
+        "Table 4 — generative quality (mini_denoiser, 2-D DDPM)",
+        &["method", "FID-proxy (down)", "IS-proxy (up, max 8)"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.method.clone(),
+            format!("{:.4}", r.fid),
+            format!("{:.2}", r.is_proxy),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_matches_python() {
+        // data.diffusion_schedule(50): betas = linspace(1e-4, 0.25, 50).
+        let (betas, alphas, abar) = diffusion_schedule(50);
+        assert!((betas[0] - 1e-4).abs() < 1e-9);
+        assert!((betas[49] - 0.25).abs() < 1e-7);
+        assert!((alphas[0] - (1.0 - 1e-4)).abs() < 1e-7);
+        // abar is the running product and strictly decreasing.
+        let mut acc = 1.0f32;
+        for (i, (&a, &ab)) in alphas.iter().zip(&abar).enumerate() {
+            acc *= a;
+            assert!((acc - ab).abs() < 1e-6, "abar[{i}]");
+        }
+        assert!(abar.windows(2).all(|w| w[1] < w[0]));
+    }
+
+    #[test]
+    fn fid_proxy_zero_on_identical() {
+        let mut rng = Rng::new(1);
+        let mut pts = vec![0.0f32; 2000];
+        rng.fill_normal(&mut pts);
+        assert!(fid_proxy(&pts, &pts) < 1e-9);
+    }
+
+    #[test]
+    fn is_proxy_full_ring_vs_single_mode() {
+        // Points evenly on the 8-mode ring.
+        let mut ring = Vec::new();
+        for i in 0..800 {
+            let ang = 2.0 * std::f32::consts::PI * (i % 8) as f32 / 8.0;
+            ring.push(2.0 * ang.cos());
+            ring.push(2.0 * ang.sin());
+        }
+        assert!(is_proxy(&ring, 8, 2.0) > 7.5);
+        // Collapsed to one mode.
+        let one: Vec<f32> = (0..800).flat_map(|_| [2.0f32, 0.0]).collect();
+        assert!(is_proxy(&one, 8, 2.0) < 1.2);
+    }
+}

@@ -1,0 +1,93 @@
+//! E9/E10 — **Table 6** (codebook source combinations) and **Table 7**
+//! (candidate-assignment initialization methods).
+//!
+//! Table 6: the universal codebook is KDE-sampled from growing subsets
+//! of the zoo's weights (net1, net1+2, ...) and each codebook is used to
+//! construct the target network — the paper's finding is near-flat
+//! accuracy, i.e. VQ4ALL does not depend on distribution match.
+//!
+//! Table 7: candidate tables built with random / cosine / Euclidean
+//! selection, with and without Eq. 7's inverse-distance ratio init —
+//! random collapses, Euclid+init wins (host-side `vq::assign` provides
+//! the variants; the session's candidate table and z0 are overridden).
+
+use crate::coordinator::{Campaign, NetSession};
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+use crate::vq::assign::{candidates, equal_ratio_logits, init_ratio_logits, AssignInit};
+use crate::vq::Codebook;
+
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub label: String,
+    pub metric: f64,
+}
+
+/// Table 6: construct `target` with codebooks sampled from subsets.
+pub fn codebook_sources(
+    campaign: &Campaign,
+    target: &str,
+    subsets: &[Vec<&str>],
+) -> anyhow::Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for (i, subset) in subsets.iter().enumerate() {
+        let cb = Campaign::build_codebook_from(&campaign.manifest, subset, 0x7AB6 + i as u64)?;
+        let c2 = Campaign {
+            rt: crate::runtime::Runtime::cpu()?,
+            manifest: campaign.manifest.clone(),
+            cfg: campaign.cfg.clone(),
+            codebook: cb,
+        };
+        let res = c2.construct(target)?;
+        rows.push(Row {
+            label: subset.join("+"),
+            metric: res.hard_metric,
+        });
+    }
+    Ok(rows)
+}
+
+/// Table 7: construct `target` with each candidate-init strategy.
+/// `with_ratio_init = false` uses equal logits (supplementary §10).
+pub fn assign_init(
+    campaign: &Campaign,
+    target: &str,
+    variants: &[(AssignInit, bool, &str)],
+) -> anyhow::Result<Vec<Row>> {
+    let cfg = &campaign.manifest.config;
+    let cb = Codebook::new(cfg.k, cfg.d, campaign.codebook.as_f32()?.to_vec());
+    let mut rows = Vec::new();
+    for (init, ratio_init, label) in variants {
+        // Build the candidate table host-side.
+        let mut sess = NetSession::new(&campaign.rt, &campaign.manifest, target, &campaign.codebook)?;
+        let flat = sess.teacher_flat.as_f32()?.to_vec();
+        let mut rng = Rng::new(0x7AB7);
+        let cand = candidates(&flat, &cb, cfg.n, *init, &mut rng);
+        let z0 = if *ratio_init {
+            init_ratio_logits(&cand)
+        } else {
+            equal_ratio_logits(sess.net.s_total, cfg.n)
+        };
+        sess.override_candidates(
+            Tensor::from_i32(
+                &[sess.net.s_total, cfg.n],
+                cand.assign.iter().map(|&c| c as i32).collect(),
+            ),
+            Tensor::from_f32(&[sess.net.s_total, cfg.n], z0),
+        );
+        let res = campaign.construct_with_session(sess)?;
+        rows.push(Row {
+            label: label.to_string(),
+            metric: res.hard_metric,
+        });
+    }
+    Ok(rows)
+}
+
+pub fn render(title: &str, rows: &[Row]) -> crate::bench::Table {
+    let mut t = crate::bench::Table::new(title, &["variant", "metric"]);
+    for r in rows {
+        t.row(vec![r.label.clone(), format!("{:.4}", r.metric)]);
+    }
+    t
+}

@@ -1,0 +1,44 @@
+//! # VQ4ALL — Efficient Neural Network Representation via a Universal Codebook
+//!
+//! Production-quality reproduction of Deng et al., *VQ4ALL* (2024) as a
+//! three-layer Rust + JAX + Pallas system (see `DESIGN.md`):
+//!
+//! * **Layer 1/2** (build time, python): Pallas kernels + JAX step
+//!   functions, AOT-lowered to HLO text under `artifacts/`.
+//! * **Layer 3** (this crate): the coordinator that constructs many
+//!   low-bit networks from one frozen universal codebook — candidate
+//!   initialization, the Progressive-Network-Construction scheduler,
+//!   multi-network campaigns, the ROM/memory simulator behind the
+//!   paper's hardware claims, and a serving router demonstrating
+//!   zero-reload task switching.
+//!
+//! Module map:
+//!
+//! | module        | role |
+//! |---------------|------|
+//! | [`util`]      | in-house substrates: PRNG, JSON, CLI, config, logging, thread pool, stats |
+//! | [`tensor`]    | host tensors, `.vqt` I/O, host math (matmul/softmax/top-k) |
+//! | [`vq`]        | vector-quantization substrate: k-means, KDE sampling, candidate assignment, bit-packing, codebook formats |
+//! | [`quant`]     | baselines: uniform quantization, ternary, per-layer VQ, PQF-style permutation, DKM-style hard transition |
+//! | [`rom`]       | memory-hierarchy + silicon-area model (Table 1 I/O column, task-switch cost) |
+//! | [`runtime`]   | PJRT wrapper: manifest-driven artifact loading & execution |
+//! | [`coordinator`] | the VQ4ALL campaign: PNC scheduler, calibration streaming, checkpoints, reports |
+//! | [`serving`]   | multi-network router / batcher / task-switch simulator |
+//! | [`exp`]       | one module per paper table & figure (E1..E13 in DESIGN.md) |
+//! | [`bench`]     | micro-benchmark harness (criterion is unavailable offline) |
+//! | [`testing`]   | property-testing mini-framework |
+
+pub mod bench;
+pub mod coordinator;
+pub mod exp;
+pub mod quant;
+pub mod rom;
+pub mod runtime;
+pub mod serving;
+pub mod tensor;
+pub mod testing;
+pub mod util;
+pub mod vq;
+
+/// Crate version, surfaced by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,175 @@
+//! `vq4all` — the launcher.
+//!
+//! Subcommands:
+//!
+//! * `codebook`  — build a universal codebook in Rust (KDE over zoo
+//!   sub-vectors; §4.1) and write it as `.vqt`.
+//! * `compress`  — run the construction campaign over the zoo (or a
+//!   subset) and print the summary table.  `--config configs/x.toml`
+//!   sets the schedule; CLI flags override.
+//! * `eval`      — evaluate previously saved codes against the test set.
+//! * `check`     — load + compile every artifact (CI gate).
+//! * `report`    — dump the last campaign result JSON.
+//!
+//! Examples live in `examples/` (quickstart, compress_zoo, serve_switch)
+//! and the paper harnesses in `benches/`.
+
+use std::path::{Path, PathBuf};
+
+use vq4all::coordinator::{report, Campaign};
+use vq4all::runtime::{Manifest, Runtime};
+use vq4all::tensor::io;
+use vq4all::util::cli::Cli;
+use vq4all::util::config::{CampaignConfig, RawConfig};
+
+fn main() -> anyhow::Result<()> {
+    vq4all::util::logging::init_from_env();
+    let cli = Cli::new(
+        "vq4all",
+        "universal-codebook network construction (VQ4ALL reproduction)",
+    )
+    .opt("artifacts", "artifacts", "artifacts directory (make artifacts)")
+    .opt("config", "", "campaign config TOML")
+    .opt("nets", "", "comma-separated zoo subset (default: all)")
+    .opt("steps", "", "construction steps override")
+    .opt("alpha", "", "PNC threshold override")
+    .opt("seed", "", "campaign seed override")
+    .opt("out", "", "output path (codebook/report subcommands)")
+    .opt("codes", "", "codes .vqt path (eval subcommand)")
+    .flag("no-pnc", "disable PNC (DKM-style ablation)")
+    .flag("version", "print version");
+
+    let args = cli.parse()?;
+    if args.has("version") {
+        println!("vq4all {}", vq4all::VERSION);
+        return Ok(());
+    }
+    let cmd = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("compress");
+    let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+
+    // Config: file -> CLI overrides -> defaults.
+    let mut cfg = match args.get("config") {
+        Some(p) if !p.is_empty() => CampaignConfig::from_raw(&RawConfig::load(Path::new(p))?)?,
+        _ => CampaignConfig::default(),
+    };
+    if let Some(s) = args.get("steps") {
+        if !s.is_empty() {
+            cfg.steps = s.parse()?;
+        }
+    }
+    if let Some(a) = args.get("alpha") {
+        if !a.is_empty() {
+            cfg.alpha = a.parse()?;
+        }
+    }
+    if let Some(s) = args.get("seed") {
+        if !s.is_empty() {
+            cfg.seed = s.parse()?;
+        }
+    }
+    if args.has("no-pnc") {
+        cfg.disable_pnc = true;
+    }
+
+    match cmd {
+        "check" => check(&dir),
+        "codebook" => codebook(&dir, &args),
+        "compress" => compress(&dir, cfg, &args),
+        "eval" => eval(&dir, cfg, &args),
+        other => anyhow::bail!(
+            "unknown subcommand {other:?} (expected check | codebook | compress | eval)"
+        ),
+    }
+}
+
+fn check(dir: &Path) -> anyhow::Result<()> {
+    let manifest = Manifest::load(dir)?;
+    let rt = Runtime::cpu()?;
+    let mut n = 0;
+    for net in &manifest.networks {
+        for (name, spec) in &net.executables {
+            rt.load(&manifest.path(&spec.hlo), spec)
+                .map_err(|e| anyhow::anyhow!("{}::{name}: {e}", net.name))?;
+            n += 1;
+        }
+    }
+    println!("all {n} artifacts load + compile on {}", rt.platform());
+    Ok(())
+}
+
+fn codebook(dir: &Path, args: &vq4all::util::cli::Args) -> anyhow::Result<()> {
+    let manifest = Manifest::load(dir)?;
+    let nets: Vec<String> = match args.list("nets") {
+        Some(v) if !v.is_empty() && !v[0].is_empty() => v,
+        _ => manifest.networks.iter().map(|n| n.name.clone()).collect(),
+    };
+    let refs: Vec<&str> = nets.iter().map(|s| s.as_str()).collect();
+    let cb = Campaign::build_codebook_from(&manifest, &refs, 2024)?;
+    let out = PathBuf::from(args.get_or("out", "codebook.vqt"));
+    io::write_tensor(&out, &cb)?;
+    println!(
+        "wrote {}x{} universal codebook from {:?} to {:?}",
+        manifest.config.k, manifest.config.d, nets, out
+    );
+    Ok(())
+}
+
+fn compress(dir: &Path, cfg: CampaignConfig, args: &vq4all::util::cli::Args) -> anyhow::Result<()> {
+    let campaign = Campaign::load(dir, cfg)?;
+    let nets: Vec<String> = match args.list("nets") {
+        Some(v) if !v.is_empty() && !v[0].is_empty() => v,
+        _ => campaign
+            .manifest
+            .networks
+            .iter()
+            .map(|n| n.name.clone())
+            .collect(),
+    };
+    let refs: Vec<&str> = nets.iter().map(|s| s.as_str()).collect();
+    let result = campaign.run(&refs)?;
+    report::table(&result).print();
+    if let Some(out) = args.get("out") {
+        if !out.is_empty() {
+            std::fs::write(out, report::to_json(&result).to_string())?;
+            println!("report written to {out}");
+            // Also persist each network's packed codes next to the report.
+            for n in &result.nets {
+                let codes_path = format!("{out}.{}.codes.vqt", n.name);
+                io::write_tensor(
+                    Path::new(&codes_path),
+                    &vq4all::tensor::Tensor::from_i32(
+                        &[n.codes.len()],
+                        n.codes.iter().map(|&c| c as i32).collect(),
+                    ),
+                )?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn eval(dir: &Path, cfg: CampaignConfig, args: &vq4all::util::cli::Args) -> anyhow::Result<()> {
+    let campaign = Campaign::load(dir, cfg)?;
+    let nets = args
+        .list("nets")
+        .filter(|v| !v.is_empty() && !v[0].is_empty())
+        .ok_or_else(|| anyhow::anyhow!("eval needs --nets <name>"))?;
+    let codes_path = args
+        .get("codes")
+        .filter(|s| !s.is_empty())
+        .ok_or_else(|| anyhow::anyhow!("eval needs --codes <file.vqt>"))?;
+    let codes = io::read_tensor(Path::new(codes_path))?;
+    let mut sess = vq4all::coordinator::NetSession::new(
+        &campaign.rt,
+        &campaign.manifest,
+        &nets[0],
+        &campaign.codebook,
+    )?;
+    let (loss, metric) = sess.evaluate("eval_hard", Some(&codes))?;
+    println!("{}: loss {loss:.4} metric {metric:.4}", nets[0]);
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! Quantization baselines the paper compares against.
+//!
+//! * [`uniform`] — symmetric uniform quantization (the UQ rows of
+//!   Table 1; EWGS-style post-training variant for Table 3).
+//! * [`ternary`] — TTQ-style ternary weights (Figure 2's low-ratio
+//!   competitor).
+//! * [`pvq`]     — per-layer vector quantization (DeepCompression / BGD /
+//!   DKM family): one k-means codebook per layer, including PQF's
+//!   permutation preprocessing as an option.
+//!
+//! The *trained* baselines (DKM's differentiable k-means with a forced
+//! hard transition) reuse the VQ4ALL campaign with `disable_pnc = true`
+//! (Table 5 / Figure 3 ablation) — the paper itself frames DKM that way.
+
+//! * [`special`] — §5.1's special-layer pass: the output head gets a
+//!   small *private* per-layer codebook (the one place the paper mixes
+//!   per-layer VQ into the universal-codebook construction).
+
+pub mod pvq;
+pub mod special;
+pub mod ternary;
+pub mod uniform;

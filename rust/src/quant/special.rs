@@ -1,0 +1,129 @@
+//! Special-layer per-layer VQ (§5.1): the paper constructs the *output
+//! layer* of classification networks with a **small per-layer codebook**
+//! (2⁸×4 at 2-bit, 2⁸×8 at 1-bit) derived from clustering its own
+//! weights, while every other layer uses the universal codebook.
+//!
+//! The campaign applies this post-construction: the head weights (stored
+//! in the "others" float inputs because the universal-codebook layout
+//! excludes them) are k-means-quantized host-side, the reconstructed
+//! weights are fed back through the same `other:` inputs of `eval_hard`
+//! / `infer_hard`, and the size accounting charges the packed codes plus
+//! the private codebook instead of float bytes.
+
+use crate::coordinator::session::NetSession;
+use crate::tensor::Tensor;
+use crate::vq::kmeans::{kmeans, KmeansOpts};
+use crate::vq::pack::{pack_codes, PackedCodes};
+
+/// Per-layer VQ result for one special layer.
+#[derive(Clone, Debug)]
+pub struct SpecialLayer {
+    pub name: String,
+    /// Original float byte count.
+    pub float_bytes: usize,
+    /// Packed assignment bytes + private codebook bytes.
+    pub compressed_bytes: usize,
+    pub mse: f64,
+    pub packed: PackedCodes,
+    pub codebook_bytes: usize,
+}
+
+impl SpecialLayer {
+    pub fn ratio(&self) -> f64 {
+        self.float_bytes as f64 / self.compressed_bytes.max(1) as f64
+    }
+}
+
+/// Heuristic for which "other" params are the §5.1 special layers:
+/// the output head's weight matrices (large 2-D tensors named like the
+/// zoo's heads).  Bias/norm vectors stay float, exactly as the paper
+/// keeps biases and BN uncompressed.
+pub fn special_candidates(sess: &NetSession) -> Vec<String> {
+    sess.net
+        .others
+        .iter()
+        .filter(|o| {
+            let is_weight = o.name.ends_with(".w") || o.name.ends_with("head.w");
+            // 2-D (dense) or 4-D (1x1-conv head) weights above a size floor.
+            is_weight && o.shape.len() >= 2 && o.elems() >= 256
+        })
+        .map(|o| o.name.clone())
+        .collect()
+}
+
+/// Quantize one special layer in place: cluster its sub-vectors with a
+/// private (k, d) codebook, replace the session's float tensor with the
+/// reconstruction, and return the accounting.
+pub fn compress_special_layer(
+    sess: &mut NetSession,
+    name: &str,
+    k: usize,
+    d: usize,
+) -> anyhow::Result<SpecialLayer> {
+    let state_name = format!("other:{name}");
+    let t = sess.state_by_name(&state_name).clone();
+    let w = t.as_f32()?;
+    let usable = (w.len() / d) * d;
+    anyhow::ensure!(usable > 0, "{name}: too small for d={d}");
+
+    let res = kmeans(&w[..usable], d, k.min(usable / d), &KmeansOpts::default());
+    let mut recon = w.to_vec();
+    let decoded = res.codebook.decode_vec(&res.codes);
+    recon[..usable].copy_from_slice(&decoded);
+
+    let bits = (usize::BITS - (res.codebook.k - 1).leading_zeros()).max(1);
+    let packed = pack_codes(&res.codes, bits);
+    let cb_bytes = res.codebook.storage_bytes();
+    // The unquantized tail (len % d) stays float and is charged as such.
+    let tail_bytes = (w.len() - usable) * 4;
+
+    sess.set_state(&state_name, Tensor::from_f32(&t.shape, recon))?;
+
+    Ok(SpecialLayer {
+        name: name.to_string(),
+        float_bytes: w.len() * 4,
+        compressed_bytes: packed.bytes() + cb_bytes + tail_bytes,
+        mse: res.mse,
+        packed,
+        codebook_bytes: cb_bytes,
+    })
+}
+
+/// Compress every special candidate of a session (the §5.1 pass).
+/// Returns per-layer reports; the session's float inputs now hold the
+/// reconstructed weights, so subsequent `eval_hard` / `infer_hard` runs
+/// measure the fully compressed network.
+pub fn compress_output_layers(
+    sess: &mut NetSession,
+    k: usize,
+    d: usize,
+) -> anyhow::Result<Vec<SpecialLayer>> {
+    let mut out = Vec::new();
+    for name in special_candidates(sess) {
+        out.push(compress_special_layer(sess, &name, k, d)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vq::kmeans::kmeans;
+
+    #[test]
+    fn kmeans_special_accounting_is_consistent() {
+        // Pure accounting check (session-level behaviour is covered by
+        // the integration test): compressed bytes < float bytes for a
+        // realistic head, and the ratio matches the formula.
+        let mut rng = crate::util::rng::Rng::new(3);
+        let mut w = vec![0.0f32; 128 * 10];
+        rng.fill_normal(&mut w);
+        let res = kmeans(&w, 4, 64, &KmeansOpts::default());
+        let bits = (usize::BITS - (res.codebook.k - 1).leading_zeros()).max(1);
+        let packed = pack_codes(&res.codes, bits);
+        let compressed = packed.bytes() + res.codebook.storage_bytes();
+        assert!(compressed < w.len() * 4, "{compressed} !< {}", w.len() * 4);
+        // 6-bit codes on 320 groups = 240 bytes; codebook 64*4*4 = 1024.
+        assert_eq!(packed.bytes(), (320 * 6usize).div_ceil(8));
+    }
+}

@@ -1,0 +1,107 @@
+//! TTQ-style ternary quantization (Figure 2 baseline).
+//!
+//! Weights map to `{-w_n, 0, +w_p}` with a sparsity threshold
+//! `t * max|w|`; the positive/negative magnitudes are the means of the
+//! surviving weights (the post-training analogue of Trained Ternary
+//! Quantization — we ablate only the representation, not TTQ's training
+//! loop, which the paper also sources from the original numbers).
+
+/// Ternarization result.
+#[derive(Clone, Debug)]
+pub struct Ternary {
+    pub w_pos: f32,
+    pub w_neg: f32,
+    pub threshold: f32,
+    /// -1 / 0 / +1 per weight.
+    pub signs: Vec<i8>,
+}
+
+/// Ternarize with threshold fraction `t` (TTQ uses ~0.05).
+pub fn ternarize(w: &[f32], t: f32) -> Ternary {
+    let absmax = w.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+    let thr = t * absmax;
+    let mut signs = Vec::with_capacity(w.len());
+    let (mut sp, mut np_, mut cp, mut cn) = (0.0f64, 0.0f64, 0usize, 0usize);
+    for &x in w {
+        if x > thr {
+            signs.push(1);
+            sp += x as f64;
+            cp += 1;
+        } else if x < -thr {
+            signs.push(-1);
+            np_ += (-x) as f64;
+            cn += 1;
+        } else {
+            signs.push(0);
+        }
+    }
+    Ternary {
+        w_pos: if cp > 0 { (sp / cp as f64) as f32 } else { 0.0 },
+        w_neg: if cn > 0 { (np_ / cn as f64) as f32 } else { 0.0 },
+        threshold: thr,
+        signs,
+    }
+}
+
+/// Dequantize.
+pub fn dequantize(t: &Ternary, out: &mut [f32]) {
+    assert_eq!(out.len(), t.signs.len());
+    for (o, &s) in out.iter_mut().zip(&t.signs) {
+        *o = match s {
+            1 => t.w_pos,
+            -1 => -t.w_neg,
+            _ => 0.0,
+        };
+    }
+}
+
+/// Quantize-dequantize MSE per weight.
+pub fn ternary_mse(w: &[f32], t: f32) -> f64 {
+    let q = ternarize(w, t);
+    let mut deq = vec![0.0f32; w.len()];
+    dequantize(&q, &mut deq);
+    crate::util::stats::mse(w, &deq)
+}
+
+/// Storage: 2 bits per weight (trit packed at 2b) + two f32 magnitudes.
+pub fn storage_bytes(num_weights: usize) -> usize {
+    (num_weights * 2 + 7) / 8 + 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn signs_and_magnitudes() {
+        let w = [1.0f32, -1.0, 0.01, 0.8, -0.6];
+        let t = ternarize(&w, 0.1);
+        assert_eq!(t.signs, vec![1, -1, 0, 1, -1]);
+        assert!((t.w_pos - 0.9).abs() < 1e-6);
+        assert!((t.w_neg - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn better_than_nothing_worse_than_8bit() {
+        let mut rng = Rng::new(2);
+        let mut w = vec![0.0f32; 2000];
+        rng.fill_normal(&mut w);
+        let mt = ternary_mse(&w, 0.05);
+        let zero_mse = crate::util::stats::mse(&w, &vec![0.0; 2000]);
+        let m8 = crate::quant::uniform::quant_mse(
+            &w,
+            8,
+            crate::quant::uniform::Granularity::PerTensor,
+        );
+        assert!(mt < zero_mse, "ternary beats the zero model");
+        assert!(mt > m8, "ternary is coarser than 8-bit");
+    }
+
+    #[test]
+    fn all_zero_input() {
+        let t = ternarize(&[0.0; 10], 0.05);
+        assert!(t.signs.iter().all(|&s| s == 0));
+        assert_eq!(t.w_pos, 0.0);
+    }
+}

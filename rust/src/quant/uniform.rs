@@ -1,0 +1,147 @@
+//! Symmetric uniform quantization (§3.1's UQ).
+//!
+//! `W ≈ s * W_int` with a shared scale per tensor (or per channel), the
+//! classic b-bit PTQ.  Provides quantize/dequantize, the MSE accounting
+//! for Table 1, and size accounting for the Figure-2 baselines.
+
+/// Quantization granularity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    PerTensor,
+    /// Rows of a `(rows, cols)` matrix get independent scales
+    /// (channel-wise for out-first weight matrices).
+    PerRow { rows: usize },
+}
+
+/// Result of uniform quantization.
+#[derive(Clone, Debug)]
+pub struct UniformQuant {
+    pub bits: u32,
+    pub qmax: i32,
+    /// One scale (PerTensor) or `rows` scales (PerRow).
+    pub scales: Vec<f32>,
+    pub values: Vec<i32>,
+}
+
+/// Symmetric b-bit quantization: levels in `[-qmax, qmax]`,
+/// `qmax = 2^(b-1) - 1` (b >= 2), or {-1, +1} at b = 1 (sign quant).
+pub fn quantize(w: &[f32], bits: u32, gran: Granularity) -> UniformQuant {
+    assert!((1..=16).contains(&bits));
+    let qmax: i32 = if bits == 1 { 1 } else { (1 << (bits - 1)) - 1 };
+    let (rows, cols) = match gran {
+        Granularity::PerTensor => (1, w.len()),
+        Granularity::PerRow { rows } => {
+            assert!(rows > 0 && w.len() % rows == 0, "rows must divide len");
+            (rows, w.len() / rows)
+        }
+    };
+    let mut scales = vec![0.0f32; rows];
+    let mut values = vec![0i32; w.len()];
+    for r in 0..rows {
+        let seg = &w[r * cols..(r + 1) * cols];
+        let absmax = seg.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        let scale = if absmax == 0.0 { 1.0 } else { absmax / qmax as f32 };
+        scales[r] = scale;
+        for (i, &x) in seg.iter().enumerate() {
+            let q = (x / scale).round() as i32;
+            values[r * cols + i] = q.clamp(-qmax, qmax).max(if bits == 1 { -1 } else { -qmax });
+            if bits == 1 && values[r * cols + i] == 0 {
+                // sign quantization: no zero level
+                values[r * cols + i] = if x >= 0.0 { 1 } else { -1 };
+            }
+        }
+    }
+    UniformQuant {
+        bits,
+        qmax,
+        scales,
+        values,
+    }
+}
+
+/// Dequantize back to f32.
+pub fn dequantize(q: &UniformQuant, gran: Granularity, out: &mut [f32]) {
+    assert_eq!(out.len(), q.values.len());
+    let (rows, cols) = match gran {
+        Granularity::PerTensor => (1, out.len()),
+        Granularity::PerRow { rows } => (rows, out.len() / rows),
+    };
+    assert_eq!(q.scales.len(), rows);
+    for r in 0..rows {
+        let s = q.scales[r];
+        for i in 0..cols {
+            out[r * cols + i] = q.values[r * cols + i] as f32 * s;
+        }
+    }
+}
+
+/// Quantize-dequantize MSE per weight (Table 1's UQ MSE column).
+pub fn quant_mse(w: &[f32], bits: u32, gran: Granularity) -> f64 {
+    let q = quantize(w, bits, gran);
+    let mut deq = vec![0.0f32; w.len()];
+    dequantize(&q, gran, &mut deq);
+    crate::util::stats::mse(w, &deq)
+}
+
+/// Storage bytes: packed integer values + f32 scales.
+pub fn storage_bytes(num_weights: usize, bits: u32, num_scales: usize) -> usize {
+    (num_weights * bits as usize + 7) / 8 + num_scales * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_high_bits_is_accurate() {
+        let mut rng = Rng::new(1);
+        let mut w = vec![0.0f32; 1000];
+        rng.fill_normal(&mut w);
+        let mse8 = quant_mse(&w, 8, Granularity::PerTensor);
+        let mse2 = quant_mse(&w, 2, Granularity::PerTensor);
+        assert!(mse8 < 1e-3, "8-bit mse {mse8}");
+        assert!(mse2 > mse8 * 10.0, "error grows as bits shrink");
+    }
+
+    #[test]
+    fn per_row_beats_per_tensor_on_heterogeneous_rows() {
+        // Both rows are exactly representable under their own scale
+        // (3-bit, qmax = 3), but under the shared scale (10.0) row 0
+        // collapses to zero. Per-row must therefore be exact while
+        // per-tensor keeps row 0's full energy as error.
+        let mut w = vec![0.0f32; 200];
+        for i in 0..100 {
+            w[i] = 0.01 * ((i % 7) as f32 - 3.0); // multiples of 0.01, |.| <= 0.03
+            w[100 + i] = 10.0 * ((i % 7) as f32 - 3.0); // multiples of 10, |.| <= 30
+        }
+        let mt = quant_mse(&w, 3, Granularity::PerTensor);
+        let mr = quant_mse(&w, 3, Granularity::PerRow { rows: 2 });
+        assert!(mr < 1e-12, "per-row is exact here, got {mr}");
+        assert!(mt > 1e-6, "per-tensor zeroes row 0, got {mt}");
+    }
+
+    #[test]
+    fn one_bit_is_sign_times_scale() {
+        let w = [0.5f32, -0.25, 0.1, -0.9];
+        let q = quantize(&w, 1, Granularity::PerTensor);
+        assert!(q.values.iter().all(|&v| v == 1 || v == -1));
+        let mut deq = vec![0.0; 4];
+        dequantize(&q, Granularity::PerTensor, &mut deq);
+        for (d, w) in deq.iter().zip(&w) {
+            assert_eq!(d.signum(), w.signum());
+        }
+    }
+
+    #[test]
+    fn zero_tensor_safe() {
+        let w = [0.0f32; 8];
+        assert_eq!(quant_mse(&w, 4, Granularity::PerTensor), 0.0);
+    }
+
+    #[test]
+    fn storage_accounting() {
+        assert_eq!(storage_bytes(1000, 3, 1), 375 + 4);
+        assert_eq!(storage_bytes(8, 8, 2), 8 + 8);
+    }
+}

@@ -1,0 +1,90 @@
+//! First-order silicon-area model for codebook storage (§3.2's
+//! "reduces the silicon area" claim, quantified).
+//!
+//! Bit-cell areas are process-normalized (units of F², the square of the
+//! feature size), standard digital-VLSI rules of thumb:
+//!
+//! * mask ROM bit  ≈ 0.3 F² (diffusion-programmed NOR ROM)
+//! * SRAM 6T bit   ≈ 150 F²  (logic-process 6T cell)
+//! * DRAM on-chip (eDRAM) ≈ 30 F²
+//!
+//! The point of the model is the *ratio* — a ROM-resident universal
+//! codebook costs ~500× less area per bit than keeping per-layer
+//! codebooks hot in SRAM, which is the paper's architectural argument.
+
+/// Technology constants in F² per bit.
+#[derive(Clone, Copy, Debug)]
+pub struct AreaModel {
+    pub rom_f2_per_bit: f64,
+    pub sram_f2_per_bit: f64,
+    pub edram_f2_per_bit: f64,
+    /// Feature size in nm (for absolute mm² figures).
+    pub feature_nm: f64,
+}
+
+impl Default for AreaModel {
+    fn default() -> Self {
+        AreaModel {
+            rom_f2_per_bit: 0.3,
+            sram_f2_per_bit: 150.0,
+            edram_f2_per_bit: 30.0,
+            feature_nm: 7.0,
+        }
+    }
+}
+
+impl AreaModel {
+    fn f2_to_mm2(&self, f2: f64) -> f64 {
+        let f_m = self.feature_nm * 1e-9;
+        f2 * f_m * f_m * 1e6 // m² -> mm²
+    }
+
+    /// Area (mm²) of `bytes` of mask ROM.
+    pub fn rom_mm2(&self, bytes: usize) -> f64 {
+        self.f2_to_mm2(bytes as f64 * 8.0 * self.rom_f2_per_bit)
+    }
+
+    /// Area (mm²) of `bytes` of SRAM.
+    pub fn sram_mm2(&self, bytes: usize) -> f64 {
+        self.f2_to_mm2(bytes as f64 * 8.0 * self.sram_f2_per_bit)
+    }
+
+    /// Area comparison for a deployment:
+    /// per-layer VQ needs `sum(per_layer_bytes)` hot in SRAM (or a
+    /// working set `sram_working_set` if given); universal VQ needs one
+    /// ROM table.  Returns (per_layer_mm2, universal_mm2).
+    pub fn compare(&self, per_layer_total_bytes: usize, universal_bytes: usize) -> (f64, f64) {
+        (
+            self.sram_mm2(per_layer_total_bytes),
+            self.rom_mm2(universal_bytes),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rom_is_hundreds_of_times_denser_than_sram() {
+        let m = AreaModel::default();
+        let (sram, rom) = m.compare(1 << 20, 1 << 20);
+        assert!(sram / rom > 100.0, "sram {sram} rom {rom}");
+    }
+
+    #[test]
+    fn absolute_scale_sane() {
+        // 2 MB universal codebook in 7nm ROM should be well under 0.01 mm².
+        let m = AreaModel::default();
+        let mm2 = m.rom_mm2(2 << 20);
+        assert!(mm2 < 0.01, "2MB ROM = {mm2} mm²");
+        // 2 MB of SRAM is macroscopic (~0.1-1 mm² at 7nm).
+        assert!(m.sram_mm2(2 << 20) > 0.05);
+    }
+
+    #[test]
+    fn monotone_in_bytes() {
+        let m = AreaModel::default();
+        assert!(m.rom_mm2(2048) > m.rom_mm2(1024));
+    }
+}

@@ -1,0 +1,210 @@
+//! Codebook-traffic simulator (Table 1 `I/O`, §3.2 task switching).
+//!
+//! Model: a serving platform hosts `N` networks and continuously
+//! switches between tasks.  Every inference of a network with *per-layer*
+//! codebooks must have each layer's codebook resident; with a small
+//! on-chip buffer the codebooks of other layers/networks evict each
+//! other, so task switches (and layer walks, when the buffer is smaller
+//! than the per-network total) re-load codebooks from DRAM.  The
+//! *universal* codebook is a static table: it is burned into ROM and
+//! never transferred.
+//!
+//! Table 1's `514x` is the paper's measured per-layer-VQ I/O multiple
+//! across its five-network zoo; our simulator reproduces the *structure*
+//! (hundreds-to-one) — the exact constant depends on layer counts.
+
+use std::collections::VecDeque;
+
+/// Where codebooks live.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodebookPlacement {
+    /// One codebook per layer, staged through an SRAM buffer of
+    /// `sram_bytes`; misses stream from DRAM.
+    PerLayerDram { sram_bytes: usize },
+    /// Single universal codebook in on-chip ROM (never transferred).
+    UniversalRom,
+}
+
+/// Static description of one network's codebook demand.
+#[derive(Clone, Debug)]
+pub struct NetCodebooks {
+    pub name: String,
+    /// Bytes of each per-layer codebook (empty under UniversalRom).
+    pub layer_codebooks: Vec<usize>,
+}
+
+/// Traffic accounting.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TrafficReport {
+    /// Bytes moved DRAM -> SRAM for codebooks.
+    pub codebook_bytes_loaded: u64,
+    /// Number of codebook load events (the `I/O` count of Table 1).
+    pub codebook_loads: u64,
+    /// Inferences served.
+    pub inferences: u64,
+    /// Task switches performed.
+    pub switches: u64,
+}
+
+impl TrafficReport {
+    /// Loads per inference — the normalized `I/O` column.
+    pub fn loads_per_inference(&self) -> f64 {
+        self.codebook_loads as f64 / self.inferences.max(1) as f64
+    }
+}
+
+/// LRU-cached codebook buffer simulator.
+pub struct MemSim {
+    placement: CodebookPlacement,
+    nets: Vec<NetCodebooks>,
+    /// LRU of (net, layer) keys currently resident, with sizes.
+    resident: VecDeque<(usize, usize)>,
+    resident_bytes: usize,
+    pub report: TrafficReport,
+}
+
+impl MemSim {
+    pub fn new(placement: CodebookPlacement, nets: Vec<NetCodebooks>) -> Self {
+        MemSim {
+            placement,
+            nets,
+            resident: VecDeque::new(),
+            resident_bytes: 0,
+            report: TrafficReport::default(),
+        }
+    }
+
+    /// Serve one inference on network `net`: every layer's codebook must
+    /// be touched in order.
+    pub fn infer(&mut self, net: usize) {
+        self.report.inferences += 1;
+        match self.placement {
+            CodebookPlacement::UniversalRom => {
+                // ROM: zero codebook traffic, ever.
+            }
+            CodebookPlacement::PerLayerDram { sram_bytes } => {
+                let layers = self.nets[net].layer_codebooks.clone();
+                for (li, bytes) in layers.iter().enumerate() {
+                    self.touch(net, li, *bytes, sram_bytes);
+                }
+            }
+        }
+    }
+
+    /// Record a task switch (bookkeeping only; the eviction pressure is
+    /// what actually causes reloads).
+    pub fn switch_task(&mut self) {
+        self.report.switches += 1;
+    }
+
+    fn touch(&mut self, net: usize, layer: usize, bytes: usize, cap: usize) {
+        let key = (net, layer);
+        if let Some(pos) = self.resident.iter().position(|&k| k == key) {
+            // Hit: refresh LRU position.
+            self.resident.remove(pos);
+            self.resident.push_back(key);
+            return;
+        }
+        // Miss: load from DRAM, evicting LRU entries as needed.
+        self.report.codebook_loads += 1;
+        self.report.codebook_bytes_loaded += bytes as u64;
+        while self.resident_bytes + bytes > cap && !self.resident.is_empty() {
+            let (en, el) = self.resident.pop_front().unwrap();
+            self.resident_bytes -= self.nets[en].layer_codebooks[el];
+        }
+        if self.resident_bytes + bytes <= cap {
+            self.resident.push_back(key);
+            self.resident_bytes += bytes;
+        }
+        // else: codebook larger than the whole buffer — streamed, never resident.
+    }
+}
+
+/// Round-robin task-switch workload: `rounds` passes over `nets`,
+/// `per_task` inferences each, switching between tasks.
+pub fn switch_storm(sim: &mut MemSim, nets: usize, rounds: usize, per_task: usize) {
+    for _ in 0..rounds {
+        for n in 0..nets {
+            sim.switch_task();
+            for _ in 0..per_task {
+                sim.infer(n);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn zoo(nets: usize, layers: usize, bytes: usize) -> Vec<NetCodebooks> {
+        (0..nets)
+            .map(|i| NetCodebooks {
+                name: format!("net{i}"),
+                layer_codebooks: vec![bytes; layers],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn rom_placement_never_loads() {
+        let mut sim = MemSim::new(CodebookPlacement::UniversalRom, zoo(3, 10, 1 << 20));
+        switch_storm(&mut sim, 3, 5, 4);
+        assert_eq!(sim.report.codebook_loads, 0);
+        assert_eq!(sim.report.codebook_bytes_loaded, 0);
+        assert_eq!(sim.report.inferences, 60);
+    }
+
+    #[test]
+    fn tiny_sram_reloads_every_layer() {
+        // Buffer fits one codebook: every layer touch is a miss.
+        let mut sim = MemSim::new(
+            CodebookPlacement::PerLayerDram { sram_bytes: 1024 },
+            zoo(2, 8, 1024),
+        );
+        switch_storm(&mut sim, 2, 3, 2);
+        // 2 nets * 3 rounds * 2 inf * 8 layers = 96 touches, all misses
+        // except consecutive hits on the same layer? Layers cycle, so all miss.
+        assert_eq!(sim.report.codebook_loads, 96);
+        assert!((sim.report.loads_per_inference() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn big_sram_loads_once_per_codebook() {
+        // Buffer fits everything: first pass loads, rest hit.
+        let mut sim = MemSim::new(
+            CodebookPlacement::PerLayerDram { sram_bytes: 1 << 30 },
+            zoo(3, 5, 4096),
+        );
+        switch_storm(&mut sim, 3, 10, 10);
+        assert_eq!(sim.report.codebook_loads, 15, "one load per (net, layer)");
+    }
+
+    #[test]
+    fn eviction_pressure_causes_thrash_on_switch() {
+        // Buffer fits exactly one network's codebooks: switching between
+        // two networks evicts, so each round reloads.
+        let nets = zoo(2, 4, 1024);
+        let mut sim = MemSim::new(
+            CodebookPlacement::PerLayerDram { sram_bytes: 4 * 1024 },
+            nets,
+        );
+        switch_storm(&mut sim, 2, 5, 3);
+        // Each task activation reloads its 4 codebooks once (then hits).
+        // 2 nets * 5 rounds = 10 activations * 4 layers = 40 loads.
+        assert_eq!(sim.report.codebook_loads, 40);
+        assert_eq!(sim.report.switches, 10);
+    }
+
+    #[test]
+    fn oversized_codebook_streams() {
+        let mut sim = MemSim::new(
+            CodebookPlacement::PerLayerDram { sram_bytes: 512 },
+            zoo(1, 2, 1024),
+        );
+        sim.infer(0);
+        sim.infer(0);
+        // never resident -> 2 layers * 2 inferences = 4 loads
+        assert_eq!(sim.report.codebook_loads, 4);
+    }
+}

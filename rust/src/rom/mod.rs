@@ -1,0 +1,15 @@
+//! ROM / memory-hierarchy simulator — the hardware model behind §3.2 and
+//! Table 1's `I/O` column.
+//!
+//! * [`memsim`] — counts codebook traffic for serving workloads under
+//!   three placements: per-layer codebooks in DRAM (reloaded per layer
+//!   per inference), per-layer codebooks cached in SRAM, and the single
+//!   universal codebook in ROM (loaded zero times after tape-out).
+//! * [`area`]   — a first-order silicon-area model (bit-cell areas for
+//!   ROM/SRAM) quantifying the paper's "reduces silicon area" claim.
+
+pub mod area;
+pub mod memsim;
+
+pub use area::AreaModel;
+pub use memsim::{CodebookPlacement, MemSim, TrafficReport};

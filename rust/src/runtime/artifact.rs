@@ -1,0 +1,315 @@
+//! `artifacts/manifest.json` parsing — the single contract between the
+//! python build path and the Rust run path (DESIGN.md §5).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::tensor::DType;
+use crate::util::json::{self, Json};
+
+/// One tensor in an executable signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let shape = j
+            .req_arr("shape")?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        // `others` entries omit dtype in the manifest — they are always
+        // f32 parameters (bias/norm/excluded weights).
+        let dtype = match j.get("dtype").and_then(|d| d.as_str()) {
+            Some(s) => DType::from_str_name(s)?,
+            None => DType::F32,
+        };
+        Ok(TensorSpec {
+            name: j.req_str("name")?.to_string(),
+            shape,
+            dtype,
+        })
+    }
+}
+
+/// One AOT executable: HLO file + signature.
+#[derive(Clone, Debug)]
+pub struct ExecSpec {
+    pub hlo: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One compressed layer's slice in the flat sub-vector space.
+#[derive(Clone, Debug)]
+pub struct LayerSlice {
+    pub name: String,
+    pub kind: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub groups: usize,
+}
+
+/// Everything the manifest records about one zoo network.
+#[derive(Clone, Debug)]
+pub struct NetworkManifest {
+    pub name: String,
+    pub task: String,
+    pub arch: String,
+    pub input_shape: Vec<usize>,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub calib_size: usize,
+    pub test_size: usize,
+    pub s_total: usize,
+    pub float_loss: f64,
+    pub float_metric: f64,
+    pub layers: Vec<LayerSlice>,
+    pub others: Vec<TensorSpec>,
+    pub state_specs: Vec<TensorSpec>,
+    pub static_specs: Vec<TensorSpec>,
+    pub batch_specs: Vec<TensorSpec>,
+    pub eval_batch_specs: Vec<TensorSpec>,
+    pub executables: BTreeMap<String, ExecSpec>,
+    pub data: BTreeMap<String, String>,
+}
+
+impl NetworkManifest {
+    pub fn exec(&self, name: &str) -> anyhow::Result<&ExecSpec> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("network {} has no executable {name:?}", self.name))
+    }
+
+    pub fn data_file(&self, tag: &str) -> anyhow::Result<&str> {
+        self.data
+            .get(tag)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow::anyhow!("network {} has no data file {tag:?}", self.name))
+    }
+
+    /// Total f32 weights in the compressed scope.
+    pub fn compressed_weights(&self, d: usize) -> usize {
+        self.s_total * d
+    }
+}
+
+/// VQ configuration as exported by `compile/zoo.py`.
+#[derive(Clone, Debug)]
+pub struct VqConfig {
+    pub k: usize,
+    pub d: usize,
+    pub n: usize,
+    pub alpha: f64,
+    pub bandwidth: f64,
+    pub effective_bit: f64,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub config: VqConfig,
+    pub networks: Vec<NetworkManifest>,
+    pub codebook_file: String,
+    pub kde_pool_file: String,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e} — run `make artifacts` first"))?;
+        let root = json::parse(&text)?;
+        let cfg = root.req("config")?;
+        let config = VqConfig {
+            k: cfg.req_usize("k")?,
+            d: cfg.req_usize("d")?,
+            n: cfg.req_usize("n")?,
+            alpha: cfg.req_f64("alpha")?,
+            bandwidth: cfg.req_f64("bandwidth")?,
+            effective_bit: cfg.req_f64("effective_bit")?,
+        };
+        let mut networks = Vec::new();
+        for nj in root.req_arr("networks")? {
+            networks.push(parse_network(nj)?);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            config,
+            networks,
+            codebook_file: root.req_str("codebook")?.to_string(),
+            kde_pool_file: root.req_str("kde_pool")?.to_string(),
+        })
+    }
+
+    pub fn network(&self, name: &str) -> anyhow::Result<&NetworkManifest> {
+        self.networks
+            .iter()
+            .find(|n| n.name == name)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "no network {name:?} in manifest (have: {:?})",
+                    self.networks.iter().map(|n| &n.name).collect::<Vec<_>>()
+                )
+            })
+    }
+
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    /// Default artifacts dir: `$VQ4ALL_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("VQ4ALL_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+fn parse_specs(j: &Json) -> anyhow::Result<Vec<TensorSpec>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("expected spec array"))?
+        .iter()
+        .map(TensorSpec::from_json)
+        .collect()
+}
+
+fn parse_network(nj: &Json) -> anyhow::Result<NetworkManifest> {
+    let mut layers = Vec::new();
+    for lj in nj.req_arr("layers")? {
+        layers.push(LayerSlice {
+            name: lj.req_str("name")?.to_string(),
+            kind: lj.req_str("kind")?.to_string(),
+            shape: lj
+                .req_arr("shape")?
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect(),
+            offset: lj.req_usize("offset")?,
+            groups: lj.req_usize("groups")?,
+        });
+    }
+    let mut executables = BTreeMap::new();
+    for (name, ej) in nj
+        .req("executables")?
+        .as_obj()
+        .ok_or_else(|| anyhow::anyhow!("executables must be an object"))?
+    {
+        executables.insert(
+            name.clone(),
+            ExecSpec {
+                hlo: ej.req_str("hlo")?.to_string(),
+                inputs: parse_specs(ej.req("inputs")?)?,
+                outputs: parse_specs(ej.req("outputs")?)?,
+            },
+        );
+    }
+    let mut data = BTreeMap::new();
+    for (tag, f) in nj
+        .req("data")?
+        .as_obj()
+        .ok_or_else(|| anyhow::anyhow!("data must be an object"))?
+    {
+        data.insert(
+            tag.clone(),
+            f.as_str()
+                .ok_or_else(|| anyhow::anyhow!("data file must be a string"))?
+                .to_string(),
+        );
+    }
+    Ok(NetworkManifest {
+        name: nj.req_str("name")?.to_string(),
+        task: nj.req_str("task")?.to_string(),
+        arch: nj.req_str("arch")?.to_string(),
+        input_shape: nj
+            .req_arr("input_shape")?
+            .iter()
+            .map(|v| v.as_usize().unwrap_or(0))
+            .collect(),
+        batch: nj.req_usize("batch")?,
+        eval_batch: nj.req_usize("eval_batch")?,
+        calib_size: nj.req_usize("calib_size")?,
+        test_size: nj.req_usize("test_size")?,
+        s_total: nj.req_usize("s_total")?,
+        float_loss: nj.req_f64("float_loss")?,
+        float_metric: nj.req_f64("float_metric")?,
+        layers,
+        others: parse_specs(nj.req("others")?)?,
+        state_specs: parse_specs(nj.req("state_specs")?)?,
+        static_specs: parse_specs(nj.req("static_specs")?)?,
+        batch_specs: parse_specs(nj.req("batch_specs")?)?,
+        eval_batch_specs: parse_specs(nj.req("eval_batch_specs")?)?,
+        executables,
+        data,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "config": {"k": 256, "d": 4, "n": 8, "alpha": 0.9999,
+                 "bandwidth": 0.01, "lr_ratios": 0.3, "lr_other": 0.001,
+                 "samples_per_net": 2560, "effective_bit": 2.0},
+      "codebook": "zoo__codebook.vqt",
+      "kde_pool": "zoo__kde_pool.vqt",
+      "networks": [{
+        "name": "tiny", "task": "classify", "arch": "mlp",
+        "input_shape": [4, 4, 3], "num_classes": 10,
+        "batch": 8, "eval_batch": 16, "calib_size": 64, "test_size": 64,
+        "s_total": 100, "float_loss": 0.1, "float_metric": 0.99,
+        "pretrain_final_loss": 0.01,
+        "layers": [{"name": "fc1.w", "kind": "dense", "shape": [48, 16],
+                     "offset": 0, "groups": 100}],
+        "excluded_layers": [],
+        "others": [{"name": "fc1.b", "shape": [16], "dtype": "f32"}],
+        "state_specs": [{"name": "z", "shape": [100, 8], "dtype": "f32"}],
+        "static_specs": [{"name": "assign", "shape": [100, 8], "dtype": "i32"}],
+        "batch_specs": [{"name": "x", "shape": [8, 4, 4, 3], "dtype": "f32"}],
+        "eval_batch_specs": [{"name": "x", "shape": [16, 4, 4, 3], "dtype": "f32"}],
+        "executables": {
+          "train_step": {"hlo": "tiny__train_step.hlo.txt",
+            "inputs": [{"name": "z", "shape": [100, 8], "dtype": "f32"}],
+            "outputs": [{"name": "out0", "shape": [100, 8], "dtype": "f32"}]}
+        },
+        "data": {"calib_x": "tiny__calib_x.vqt"}
+      }]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let dir = std::env::temp_dir().join("vq4all_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.config.k, 256);
+        assert_eq!(m.config.d, 4);
+        let net = m.network("tiny").unwrap();
+        assert_eq!(net.s_total, 100);
+        assert_eq!(net.layers[0].groups, 100);
+        let ex = net.exec("train_step").unwrap();
+        assert_eq!(ex.inputs[0].shape, vec![100, 8]);
+        assert_eq!(ex.inputs[0].dtype, DType::F32);
+        assert!(net.exec("nope").is_err());
+        assert!(m.network("ghost").is_err());
+        assert_eq!(net.data_file("calib_x").unwrap(), "tiny__calib_x.vqt");
+    }
+
+    #[test]
+    fn missing_manifest_is_actionable() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,200 @@
+//! PJRT client wrapper: HLO-text loading, literal marshalling, named
+//! executables with signature validation.
+//!
+//! The interchange rules (DESIGN.md §5, /opt/xla-example/README.md):
+//!
+//! * artifacts are HLO **text**; `HloModuleProto::from_text_file`
+//!   reassigns instruction ids so jax ≥ 0.5 output loads on
+//!   xla_extension 0.5.1;
+//! * every lowered function returns a **tuple** (python lowers with
+//!   `return_tuple=True`), so results are decomposed on the host;
+//! * execution is synchronous on the CPU PJRT client.
+
+use std::path::Path;
+
+use crate::tensor::{DType, Storage, Tensor};
+
+use super::artifact::{ExecSpec, TensorSpec};
+
+/// Shared PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> anyhow::Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact with its manifest signature.
+    pub fn load(&self, hlo_path: &Path, spec: &ExecSpec) -> anyhow::Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(hlo_path)
+            .map_err(|e| anyhow::anyhow!("parsing HLO text {hlo_path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {hlo_path:?}: {e:?}"))?;
+        Ok(Executable {
+            exe,
+            spec: spec.clone(),
+            name: hlo_path
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// A compiled artifact + its signature.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ExecSpec,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with host tensors; validates shapes/dtypes against the
+    /// manifest signature and returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        self.check_inputs(inputs)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(tensor_to_literal)
+            .collect::<anyhow::Result<_>>()?;
+        self.run_literals(&literals)
+    }
+
+    /// Execute with pre-built literals (the hot path keeps static inputs
+    /// as literals across steps to skip re-encoding).
+    pub fn run_literals(&self, literals: &[xla::Literal]) -> anyhow::Result<Vec<Tensor>> {
+        if literals.len() != self.spec.inputs.len() {
+            anyhow::bail!(
+                "{}: got {} inputs, signature has {}",
+                self.name,
+                literals.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(literals)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", self.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of {}: {e:?}", self.name))?;
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling result of {}: {e:?}", self.name))?;
+        if parts.len() != self.spec.outputs.len() {
+            anyhow::bail!(
+                "{}: got {} outputs, signature has {}",
+                self.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(&self.spec.outputs)
+            .map(|(l, s)| literal_to_tensor(l, s))
+            .collect()
+    }
+
+    fn check_inputs(&self, inputs: &[Tensor]) -> anyhow::Result<()> {
+        if inputs.len() != self.spec.inputs.len() {
+            anyhow::bail!(
+                "{}: got {} inputs, signature has {} ({:?})",
+                self.name,
+                inputs.len(),
+                self.spec.inputs.len(),
+                self.spec.inputs.iter().map(|s| &s.name).collect::<Vec<_>>()
+            );
+        }
+        for (t, s) in inputs.iter().zip(&self.spec.inputs) {
+            if t.shape != s.shape {
+                anyhow::bail!(
+                    "{}: input {:?} shape {:?} != manifest {:?}",
+                    self.name,
+                    s.name,
+                    t.shape,
+                    s.shape
+                );
+            }
+            if t.dtype() != s.dtype {
+                anyhow::bail!(
+                    "{}: input {:?} dtype {:?} != manifest {:?}",
+                    self.name,
+                    s.name,
+                    t.dtype(),
+                    s.dtype
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Host tensor -> XLA literal.
+pub fn tensor_to_literal(t: &Tensor) -> anyhow::Result<xla::Literal> {
+    let (ty, bytes): (xla::ElementType, Vec<u8>) = match &t.data {
+        Storage::F32(v) => (
+            xla::ElementType::F32,
+            v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        ),
+        Storage::I32(v) => (
+            xla::ElementType::S32,
+            v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        ),
+        Storage::U32(v) => (
+            xla::ElementType::U32,
+            v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        ),
+        Storage::F64(v) => (
+            xla::ElementType::F64,
+            v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        ),
+        Storage::I64(v) => (
+            xla::ElementType::S64,
+            v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        ),
+        Storage::U8(v) => (xla::ElementType::U8, v.clone()),
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, &bytes)
+        .map_err(|e| anyhow::anyhow!("building literal {:?}: {e:?}", t.shape))
+}
+
+/// XLA literal -> host tensor, validated against the manifest spec.
+pub fn literal_to_tensor(l: &xla::Literal, spec: &TensorSpec) -> anyhow::Result<Tensor> {
+    let data = match spec.dtype {
+        DType::F32 => Storage::F32(
+            l.to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("reading f32 output {:?}: {e:?}", spec.name))?,
+        ),
+        DType::I32 => Storage::I32(
+            l.to_vec::<i32>()
+                .map_err(|e| anyhow::anyhow!("reading i32 output {:?}: {e:?}", spec.name))?,
+        ),
+        other => anyhow::bail!("unsupported output dtype {other:?}"),
+    };
+    if data.len() != spec.elems() {
+        anyhow::bail!(
+            "output {:?}: got {} elements, expected {} {:?}",
+            spec.name,
+            data.len(),
+            spec.elems(),
+            spec.shape
+        );
+    }
+    Ok(Tensor {
+        shape: spec.shape.clone(),
+        data,
+    })
+}

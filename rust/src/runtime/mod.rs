@@ -1,0 +1,15 @@
+//! PJRT runtime: load the AOT artifacts python produced and execute them
+//! from the Rust hot path.  Python never runs at request time.
+//!
+//! * [`artifact`] — `manifest.json` parsing: networks, layer tables,
+//!   executable signatures, data files.
+//! * [`client`]   — the `xla` crate wrapper: CPU PJRT client, HLO-text
+//!   loading (`HloModuleProto::from_text_file` — serialized protos from
+//!   jax >= 0.5 are rejected by xla_extension 0.5.1, see DESIGN.md §5),
+//!   literal marshalling to/from host [`Tensor`]s, named executables.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ExecSpec, Manifest, NetworkManifest, TensorSpec};
+pub use client::{Executable, Runtime};

@@ -1,0 +1,111 @@
+//! Dynamic batcher: coalesce queued requests into device-sized batches.
+//!
+//! Policy: fire when `max_batch` requests are waiting, or when the
+//! oldest waiting request has lingered past `max_linger_ns`.  The AOT
+//! `infer_hard` artifacts have a *fixed* batch dimension, so short
+//! batches are padded (rows repeat) and the padding is dropped on the
+//! way out — the padded fraction is tracked as a utilization metric.
+
+use super::router::Request;
+
+/// Batcher policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    pub max_batch: usize,
+    pub max_linger_ns: u64,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 32,
+            max_linger_ns: 2_000_000, // 2ms
+        }
+    }
+}
+
+/// A formed batch (possibly padded to the artifact's fixed batch size).
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub net: String,
+    pub requests: Vec<Request>,
+    /// Row indices padded up to the device batch size.
+    pub rows: Vec<usize>,
+    pub padded: usize,
+}
+
+impl Batch {
+    /// Build from drained requests, padding to `device_batch` rows.
+    pub fn form(net: &str, requests: Vec<Request>, device_batch: usize) -> Self {
+        assert!(!requests.is_empty(), "empty batch");
+        assert!(requests.len() <= device_batch, "batch overflow");
+        let mut rows: Vec<usize> = requests.iter().map(|r| r.row).collect();
+        let padded = device_batch - rows.len();
+        for i in 0..padded {
+            rows.push(rows[i % requests.len()]); // repeat real rows
+        }
+        Batch {
+            net: net.to_string(),
+            requests,
+            rows,
+            padded,
+        }
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.requests.len() as f64 / self.rows.len() as f64
+    }
+}
+
+/// Decide whether a queue should fire now.
+pub fn should_fire(cfg: &BatcherConfig, depth: usize, oldest_arrival_ns: u64, now_ns: u64) -> bool {
+    depth >= cfg.max_batch
+        || (depth > 0 && now_ns.saturating_sub(oldest_arrival_ns) >= cfg.max_linger_ns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, row: usize, t: u64) -> Request {
+        Request {
+            id,
+            net: "a".into(),
+            row,
+            arrived_ns: t,
+        }
+    }
+
+    #[test]
+    fn fires_on_size_or_linger() {
+        let cfg = BatcherConfig {
+            max_batch: 4,
+            max_linger_ns: 100,
+        };
+        assert!(should_fire(&cfg, 4, 0, 0), "full batch fires");
+        assert!(!should_fire(&cfg, 2, 1000, 1050), "young partial waits");
+        assert!(should_fire(&cfg, 2, 1000, 1101), "lingered partial fires");
+        assert!(!should_fire(&cfg, 0, 0, u64::MAX), "empty never fires");
+    }
+
+    #[test]
+    fn padding_repeats_real_rows() {
+        let b = Batch::form("a", vec![req(0, 7, 0), req(1, 9, 0)], 5);
+        assert_eq!(b.rows, vec![7, 9, 7, 9, 7]);
+        assert_eq!(b.padded, 3);
+        assert!((b.utilization() - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn full_batch_no_padding() {
+        let b = Batch::form("a", (0..4).map(|i| req(i, i as usize, 0)).collect(), 4);
+        assert_eq!(b.padded, 0);
+        assert_eq!(b.utilization(), 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch overflow")]
+    fn overflow_checked() {
+        Batch::form("a", (0..5).map(|i| req(i, 0, 0)).collect(), 4);
+    }
+}

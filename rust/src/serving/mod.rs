@@ -1,0 +1,24 @@
+//! Multi-network serving layer — the deployment story of §3.2: many
+//! compressed networks resident on one platform, fast task switching
+//! because the universal codebook never reloads.
+//!
+//! * [`batcher`]   — dynamic batcher: coalesces requests per network up
+//!   to a batch size / linger deadline.
+//! * [`router`]    — routes requests to per-network queues, tracks
+//!   fairness and queue depths.
+//! * [`server`]    — thread-driven serving loop gluing router + batcher
+//!   to the `infer_hard` artifacts.
+//! * [`switchsim`] — task-switch cost simulator on top of `rom::memsim`
+//!   (Table 1's I/O column at serving granularity).
+
+//! * [`tcp`]       — newline-JSON TCP front-end (std::net; single PJRT
+//!   dispatch thread + reader threads per connection).
+
+pub mod batcher;
+pub mod router;
+pub mod server;
+pub mod switchsim;
+pub mod tcp;
+
+pub use batcher::{Batch, BatcherConfig};
+pub use router::{Request, Router};

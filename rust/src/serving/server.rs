@@ -1,0 +1,147 @@
+//! Serving loop: drives router + batcher against the `infer_hard`
+//! artifacts for a set of constructed networks.
+//!
+//! Single dispatch thread (the CPU PJRT client serializes execution
+//! anyway); the interesting concurrency — request arrival vs dispatch —
+//! is modeled with a virtual clock so the serving benches are
+//! deterministic.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::calib::gather_rows;
+use crate::coordinator::session::NetSession;
+use crate::tensor::Tensor;
+use crate::util::stats::Running;
+
+use super::batcher::{should_fire, Batch, BatcherConfig};
+use super::router::Router;
+
+/// Latency/throughput accounting per network.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub served: u64,
+    pub batches: u64,
+    pub padded_rows: u64,
+    pub latency_ns: Vec<f64>,
+}
+
+/// The multi-network server.
+pub struct Server<'a> {
+    pub sessions: BTreeMap<String, (&'a mut NetSession, Tensor)>, // (session, codes tensor)
+    pub router: Router,
+    pub cfg: BatcherConfig,
+    pub stats: BTreeMap<String, ServeStats>,
+    /// Virtual time (ns).
+    pub now_ns: u64,
+    /// Measured execute time per batch (feeds the virtual clock).
+    pub exec_ns: Running,
+}
+
+impl<'a> Server<'a> {
+    pub fn new(
+        sessions: Vec<(&'a mut NetSession, Tensor)>,
+        cfg: BatcherConfig,
+    ) -> Self {
+        let names: Vec<String> = sessions.iter().map(|(s, _)| s.net.name.clone()).collect();
+        let router = Router::new(&names.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        let mut map = BTreeMap::new();
+        let mut stats = BTreeMap::new();
+        for (s, codes) in sessions {
+            stats.insert(s.net.name.clone(), ServeStats::default());
+            map.insert(s.net.name.clone(), (s, codes));
+        }
+        Server {
+            sessions: map,
+            router,
+            cfg,
+            stats,
+            now_ns: 0,
+            exec_ns: Running::new(),
+        }
+    }
+
+    /// Submit a request at the current virtual time.
+    pub fn submit(&mut self, net: &str, row: usize) -> anyhow::Result<u64> {
+        self.router.submit(net, row, self.now_ns)
+    }
+
+    /// Advance virtual time.
+    pub fn tick(&mut self, ns: u64) {
+        self.now_ns += ns;
+    }
+
+    /// Dispatch at most one batch if any queue should fire.
+    /// Returns the served batch size (0 if nothing fired).
+    pub fn dispatch_one(&mut self) -> anyhow::Result<usize> {
+        let names: Vec<String> = self.router.networks().iter().map(|s| s.to_string()).collect();
+        // Find a fireable queue (deepest-first via router.pick semantics).
+        let mut fire: Option<String> = None;
+        for name in &names {
+            let depth = self.router.depth(name);
+            if depth == 0 {
+                continue;
+            }
+            let oldest = self.router.oldest_arrival(name).unwrap_or(self.now_ns);
+            if should_fire(&self.cfg, depth, oldest, self.now_ns) {
+                fire = Some(name.clone());
+                break;
+            }
+        }
+        let Some(name) = fire else { return Ok(0) };
+        let qi = names.iter().position(|n| n == &name).unwrap();
+        let reqs = self.router.drain(qi, self.cfg.max_batch);
+        let (sess, codes) = self
+            .sessions
+            .get_mut(&name)
+            .ok_or_else(|| anyhow::anyhow!("no session for {name:?}"))?;
+        let device_batch = sess.net.eval_batch;
+        let take = reqs.len().min(device_batch);
+        let batch = Batch::form(&name, reqs[..take].to_vec(), device_batch);
+
+        // Gather input rows from the network's test pool and run infer.
+        let x = gather_rows(&sess.test_x, &batch.rows)?;
+        let codes_t = codes.clone();
+        let t0 = std::time::Instant::now();
+        // infer_hard signature: codes, other:*, codebook, x
+        let _out = sess.eval_infer(&codes_t, &[x])?;
+        let dt = t0.elapsed().as_nanos() as u64;
+        self.exec_ns.push(dt as f64);
+        self.now_ns += dt;
+
+        let st = self.stats.get_mut(&name).unwrap();
+        st.served += batch.requests.len() as u64;
+        st.batches += 1;
+        st.padded_rows += batch.padded as u64;
+        for r in &batch.requests {
+            st.latency_ns.push((self.now_ns - r.arrived_ns) as f64);
+        }
+        Ok(batch.requests.len())
+    }
+
+    /// Drain everything.
+    pub fn drain_all(&mut self) -> anyhow::Result<u64> {
+        let mut total = 0u64;
+        loop {
+            // Force-fire partial batches once queues stop growing.
+            let before = self.router.total_pending();
+            if before == 0 {
+                break;
+            }
+            self.tick(self.cfg.max_linger_ns + 1);
+            let served = self.dispatch_one()?;
+            total += served as u64;
+            if served == 0 && self.router.total_pending() == before {
+                anyhow::bail!("server wedged with {before} pending requests");
+            }
+        }
+        Ok(total)
+    }
+}
+
+impl NetSession {
+    /// Serving-path forward: `infer_hard` with explicit codes + inputs.
+    pub fn eval_infer(&mut self, codes: &Tensor, batch: &[Tensor]) -> anyhow::Result<Vec<Tensor>> {
+        let lits = self.assemble_public("infer_hard", Some(codes), batch)?;
+        self.exec("infer_hard")?.run_literals(&lits)
+    }
+}

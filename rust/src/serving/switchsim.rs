@@ -1,0 +1,84 @@
+//! Task-switch cost simulation at serving granularity — §3.2's claim
+//! ("eliminates the need for repeated codebook loading during rapid task
+//! switching") made measurable, on top of `rom::memsim`.
+
+use crate::rom::memsim::{switch_storm, CodebookPlacement, MemSim, NetCodebooks, TrafficReport};
+
+/// Workload description.
+#[derive(Clone, Copy, Debug)]
+pub struct SwitchWorkload {
+    pub nets: usize,
+    pub layers_per_net: usize,
+    pub codebook_bytes_per_layer: usize,
+    pub rounds: usize,
+    pub inferences_per_activation: usize,
+    pub sram_bytes: usize,
+}
+
+/// Compare per-layer-DRAM vs universal-ROM codebook traffic.
+pub fn compare(w: &SwitchWorkload) -> (TrafficReport, TrafficReport) {
+    let zoo: Vec<NetCodebooks> = (0..w.nets)
+        .map(|i| NetCodebooks {
+            name: format!("net{i}"),
+            layer_codebooks: vec![w.codebook_bytes_per_layer; w.layers_per_net],
+        })
+        .collect();
+    let mut per_layer = MemSim::new(
+        CodebookPlacement::PerLayerDram {
+            sram_bytes: w.sram_bytes,
+        },
+        zoo.clone(),
+    );
+    switch_storm(&mut per_layer, w.nets, w.rounds, w.inferences_per_activation);
+    let mut rom = MemSim::new(CodebookPlacement::UniversalRom, zoo);
+    switch_storm(&mut rom, w.nets, w.rounds, w.inferences_per_activation);
+    (per_layer.report.clone(), rom.report.clone())
+}
+
+/// The I/O multiple (per-layer loads : ROM loads, with ROM clamped to 1
+/// load representing the one-time tape-out — Table 1 normalizes the
+/// universal column to 1x).
+pub fn io_multiple(per_layer: &TrafficReport, _rom: &TrafficReport) -> f64 {
+    per_layer.codebook_loads.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rom_wins_by_orders_of_magnitude() {
+        let w = SwitchWorkload {
+            nets: 5,
+            layers_per_net: 20,
+            codebook_bytes_per_layer: 64 * 1024,
+            rounds: 10,
+            inferences_per_activation: 5,
+            // SRAM fits ~1.5 networks -> heavy thrash on switches
+            sram_bytes: 30 * 64 * 1024,
+        };
+        let (pl, rom) = compare(&w);
+        assert_eq!(rom.codebook_loads, 0);
+        assert!(
+            pl.codebook_loads > 500,
+            "per-layer should thrash hundreds of loads, got {}",
+            pl.codebook_loads
+        );
+        assert_eq!(pl.inferences, rom.inferences);
+    }
+
+    #[test]
+    fn generous_sram_still_pays_cold_loads() {
+        let w = SwitchWorkload {
+            nets: 3,
+            layers_per_net: 10,
+            codebook_bytes_per_layer: 4096,
+            rounds: 4,
+            inferences_per_activation: 8,
+            sram_bytes: 1 << 30,
+        };
+        let (pl, rom) = compare(&w);
+        assert_eq!(pl.codebook_loads, 30, "one cold load per codebook");
+        assert_eq!(rom.codebook_loads, 0);
+    }
+}

@@ -1,0 +1,328 @@
+//! TCP serving front-end: newline-delimited JSON over `std::net`.
+//!
+//! Protocol (one JSON object per line):
+//!
+//! ```text
+//! -> {"net": "mini_mlp", "row": 5}
+//! <- {"ok": true, "net": "mini_mlp", "row": 5, "argmax": 3,
+//!     "batch": 4, "latency_us": 812.0}
+//! <- {"ok": false, "error": "router: unknown network \"ghost\""}
+//! ```
+//!
+//! Threading model: PJRT executables are not thread-safe to share, so
+//! **one dispatch thread owns every session** and runs the dynamic
+//! batcher against a real clock; each connection gets a reader thread
+//! that parses lines into an mpsc queue and a writer handle the
+//! dispatcher answers through.  This is the same router/batcher policy
+//! as [`super::server`], with wall-clock linger instead of virtual time.
+//! (`tokio` is not vendored in this build environment; the std::net +
+//! channel design keeps the same structure an async runtime would.)
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::calib::gather_rows;
+use crate::coordinator::session::NetSession;
+use crate::tensor::Tensor;
+use crate::util::json::{self, Json};
+
+use super::batcher::BatcherConfig;
+
+/// One parsed in-flight request.
+struct InFlight {
+    conn: u64,
+    net: String,
+    row: usize,
+    arrived: Instant,
+}
+
+/// Per-network serving statistics (mirrors `server::ServeStats`).
+#[derive(Clone, Debug, Default)]
+pub struct TcpStats {
+    pub served: u64,
+    pub batches: u64,
+    pub errors: u64,
+}
+
+/// Shared handle for shutting the server down from another thread.
+#[derive(Clone)]
+pub struct Shutdown(Arc<AtomicBool>);
+
+impl Default for Shutdown {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Shutdown {
+    pub fn new() -> Self {
+        Shutdown(Arc::new(AtomicBool::new(false)))
+    }
+    pub fn trigger(&self) {
+        self.0.store(true, Ordering::SeqCst);
+    }
+    pub fn is_set(&self) -> bool {
+        self.0.load(Ordering::SeqCst)
+    }
+}
+
+/// Parse one request line. Returns (net, row).
+pub fn parse_request(line: &str) -> anyhow::Result<(String, usize)> {
+    let v = json::parse(line)?;
+    let net = v.req_str("net")?.to_string();
+    let row = v.req_usize("row")?;
+    Ok((net, row))
+}
+
+/// Render a success response.
+pub fn ok_response(net: &str, row: usize, argmax: usize, batch: usize, latency_us: f64) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("net", Json::str(net.to_string())),
+        ("row", Json::num(row as f64)),
+        ("argmax", Json::num(argmax as f64)),
+        ("batch", Json::num(batch as f64)),
+        ("latency_us", Json::num(latency_us)),
+    ])
+    .to_string()
+}
+
+/// Render an error response.
+pub fn err_response(msg: &str) -> String {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(msg.to_string())),
+    ])
+    .to_string()
+}
+
+/// The TCP server. Owns the constructed sessions + their hard codes.
+pub struct TcpServer {
+    sessions: BTreeMap<String, (NetSession, Tensor)>,
+    pub cfg: BatcherConfig,
+    pub stats: BTreeMap<String, TcpStats>,
+}
+
+impl TcpServer {
+    pub fn new(sessions: Vec<(NetSession, Tensor)>, cfg: BatcherConfig) -> Self {
+        let mut map = BTreeMap::new();
+        let mut stats = BTreeMap::new();
+        for (s, codes) in sessions {
+            stats.insert(s.net.name.clone(), TcpStats::default());
+            map.insert(s.net.name.clone(), (s, codes));
+        }
+        TcpServer {
+            sessions: map,
+            cfg,
+            stats,
+        }
+    }
+
+    /// Serve until `shutdown` triggers.  Blocks the calling thread (it
+    /// becomes the dispatch thread).  `max_requests` (if nonzero) stops
+    /// the server after that many served requests — used by tests and
+    /// the example's `--requests` bound.
+    pub fn serve(
+        &mut self,
+        listener: TcpListener,
+        shutdown: Shutdown,
+        max_requests: u64,
+    ) -> anyhow::Result<u64> {
+        listener.set_nonblocking(true)?;
+        let (tx, rx): (Sender<InFlight>, Receiver<InFlight>) = channel();
+        let conn_seq = Arc::new(AtomicU64::new(0));
+        // Writers: dispatch thread sends rendered lines per connection.
+        let writers: Arc<std::sync::Mutex<BTreeMap<u64, TcpStream>>> =
+            Arc::new(std::sync::Mutex::new(BTreeMap::new()));
+
+        // Accept loop on a helper thread.
+        let accept_shutdown = shutdown.clone();
+        let accept_writers = writers.clone();
+        let accept_tx = tx.clone();
+        let acceptor = std::thread::spawn(move || {
+            while !accept_shutdown.is_set() {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let id = conn_seq.fetch_add(1, Ordering::SeqCst);
+                        let ws = stream.try_clone().expect("clone stream");
+                        accept_writers.lock().unwrap().insert(id, ws);
+                        let tx2 = accept_tx.clone();
+                        let wmap = accept_writers.clone();
+                        std::thread::spawn(move || {
+                            let reader = BufReader::new(stream);
+                            for line in reader.lines() {
+                                let Ok(line) = line else { break };
+                                if line.trim().is_empty() {
+                                    continue;
+                                }
+                                match parse_request(&line) {
+                                    Ok((net, row)) => {
+                                        if tx2
+                                            .send(InFlight {
+                                                conn: id,
+                                                net,
+                                                row,
+                                                arrived: Instant::now(),
+                                            })
+                                            .is_err()
+                                        {
+                                            break;
+                                        }
+                                    }
+                                    Err(e) => {
+                                        if let Some(w) = wmap.lock().unwrap().get_mut(&id) {
+                                            let _ = writeln!(w, "{}", err_response(&e.to_string()));
+                                        }
+                                    }
+                                }
+                            }
+                            wmap.lock().unwrap().remove(&id);
+                        });
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+
+        // Dispatch loop (this thread): batch per network with linger.
+        let mut pending: BTreeMap<String, Vec<InFlight>> = BTreeMap::new();
+        let mut served = 0u64;
+        let linger = Duration::from_nanos(self.cfg.max_linger_ns);
+        while !shutdown.is_set() {
+            match rx.recv_timeout(linger.max(Duration::from_millis(1))) {
+                Ok(req) => pending.entry(req.net.clone()).or_default().push(req),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+            // Fire every queue that is full or has lingered.
+            let names: Vec<String> = pending.keys().cloned().collect();
+            for name in names {
+                let q = pending.get_mut(&name).unwrap();
+                if q.is_empty() {
+                    continue;
+                }
+                let full = q.len() >= self.cfg.max_batch;
+                let lingered = q[0].arrived.elapsed() >= linger;
+                if !(full || lingered) {
+                    continue;
+                }
+                let reqs: Vec<InFlight> = q.drain(..q.len().min(self.cfg.max_batch)).collect();
+                served += self.dispatch(&name, reqs, &writers)?;
+            }
+            if max_requests > 0 && served >= max_requests {
+                shutdown.trigger();
+            }
+        }
+        drop(tx);
+        let _ = acceptor.join();
+        Ok(served)
+    }
+
+    /// Execute one batch and answer every requester.
+    fn dispatch(
+        &mut self,
+        name: &str,
+        reqs: Vec<InFlight>,
+        writers: &Arc<std::sync::Mutex<BTreeMap<u64, TcpStream>>>,
+    ) -> anyhow::Result<u64> {
+        let Some((sess, codes)) = self.sessions.get_mut(name) else {
+            let msg = err_response(&format!("unknown network {name:?}"));
+            let mut w = writers.lock().unwrap();
+            for r in &reqs {
+                if let Some(ws) = w.get_mut(&r.conn) {
+                    let _ = writeln!(ws, "{msg}");
+                }
+            }
+            let st = self.stats.entry(name.to_string()).or_default();
+            st.errors += reqs.len() as u64;
+            return Ok(0);
+        };
+        let device_batch = sess.net.eval_batch;
+        let pool_rows = sess.test_x.shape[0];
+        let mut rows: Vec<usize> = reqs.iter().map(|r| r.row % pool_rows).collect();
+        let real = rows.len();
+        for i in 0..device_batch.saturating_sub(real) {
+            rows.push(rows[i % real]); // pad with real rows
+        }
+        let x = gather_rows(&sess.test_x, &rows)?;
+        let codes_t = codes.clone();
+        let out = sess.eval_infer(&codes_t, &[x])?;
+        let logits = out[0].as_f32()?;
+        let classes = out[0].shape.get(1).copied().unwrap_or(1);
+
+        let mut w = writers.lock().unwrap();
+        for (i, r) in reqs.iter().enumerate() {
+            let seg = &logits[i * classes..(i + 1) * classes];
+            let argmax = seg
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap_or(0);
+            let latency = r.arrived.elapsed().as_micros() as f64;
+            if let Some(ws) = w.get_mut(&r.conn) {
+                let _ = writeln!(ws, "{}", ok_response(name, r.row, argmax, real, latency));
+            }
+        }
+        let st = self.stats.entry(name.to_string()).or_default();
+        st.served += real as u64;
+        st.batches += 1;
+        Ok(real as u64)
+    }
+}
+
+/// Blocking client helper (examples + tests): send one request, read
+/// one response line.
+pub fn client_request(stream: &mut TcpStream, net: &str, row: usize) -> anyhow::Result<Json> {
+    let req = Json::obj(vec![
+        ("net", Json::str(net.to_string())),
+        ("row", Json::num(row as f64)),
+    ]);
+    writeln!(stream, "{req}")?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    json::parse(&line)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip_parses() {
+        let (net, row) = parse_request(r#"{"net": "mini_mlp", "row": 7}"#).unwrap();
+        assert_eq!(net, "mini_mlp");
+        assert_eq!(row, 7);
+        assert!(parse_request(r#"{"row": 7}"#).is_err());
+        assert!(parse_request("not json").is_err());
+    }
+
+    #[test]
+    fn responses_are_valid_json() {
+        let ok = ok_response("a", 3, 9, 4, 120.5);
+        let v = json::parse(&ok).unwrap();
+        assert_eq!(v.req_str("net").unwrap(), "a");
+        assert_eq!(v.req_usize("argmax").unwrap(), 9);
+        let err = err_response("boom");
+        let v = json::parse(&err).unwrap();
+        assert_eq!(v.req_str("error").unwrap(), "boom");
+    }
+
+    #[test]
+    fn shutdown_flag_is_shared() {
+        let s = Shutdown::new();
+        let s2 = s.clone();
+        assert!(!s.is_set());
+        s2.trigger();
+        assert!(s.is_set());
+    }
+}

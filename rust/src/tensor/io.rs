@@ -1,0 +1,188 @@
+//! `.vqt` tensor-file codec — the Rust half of the interchange format.
+//!
+//! Mirrors `python/compile/tensorio.py` byte for byte:
+//!
+//! ```text
+//! magic  4B   b"VQT1"
+//! dtype  u32  0=f32 1=i32 2=u32 3=f64 4=i64 5=u8
+//! ndim   u32
+//! dims   ndim * u64
+//! data   raw little-endian row-major payload
+//! ```
+
+use super::{DType, Storage, Tensor};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"VQT1";
+
+/// Read a `.vqt` file into a host [`Tensor`].
+pub fn read_tensor(path: &Path) -> anyhow::Result<Tensor> {
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("open {path:?}: {e}"))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        anyhow::bail!("{path:?}: bad magic {magic:?}");
+    }
+    let tag = read_u32(&mut f)?;
+    let ndim = read_u32(&mut f)? as usize;
+    if ndim > 16 {
+        anyhow::bail!("{path:?}: implausible ndim {ndim}");
+    }
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        shape.push(read_u64(&mut f)? as usize);
+    }
+    let dtype = DType::from_tag(tag)?;
+    let count: usize = shape.iter().product();
+    let mut payload = vec![0u8; count * dtype.size_bytes()];
+    f.read_exact(&mut payload)
+        .map_err(|e| anyhow::anyhow!("{path:?}: truncated payload: {e}"))?;
+    let data = decode(dtype, &payload);
+    Ok(Tensor { shape, data })
+}
+
+/// Write a host [`Tensor`] as a `.vqt` file.
+pub fn write_tensor(path: &Path, t: &Tensor) -> anyhow::Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).map_err(|e| anyhow::anyhow!("create {path:?}: {e}"))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&t.dtype().tag().to_le_bytes())?;
+    f.write_all(&(t.rank() as u32).to_le_bytes())?;
+    for &d in &t.shape {
+        f.write_all(&(d as u64).to_le_bytes())?;
+    }
+    match &t.data {
+        Storage::F32(v) => write_slice(&mut f, v, |x| x.to_le_bytes())?,
+        Storage::I32(v) => write_slice(&mut f, v, |x| x.to_le_bytes())?,
+        Storage::U32(v) => write_slice(&mut f, v, |x| x.to_le_bytes())?,
+        Storage::F64(v) => write_slice(&mut f, v, |x| x.to_le_bytes())?,
+        Storage::I64(v) => write_slice(&mut f, v, |x| x.to_le_bytes())?,
+        Storage::U8(v) => f.write_all(v)?,
+    }
+    Ok(())
+}
+
+fn read_u32(f: &mut impl Read) -> anyhow::Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(f: &mut impl Read) -> anyhow::Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn write_slice<T: Copy, const N: usize>(
+    f: &mut impl Write,
+    v: &[T],
+    enc: impl Fn(T) -> [u8; N],
+) -> anyhow::Result<()> {
+    // Chunked to keep the buffer bounded on multi-MB tensors.
+    let mut buf = Vec::with_capacity(8192 * N);
+    for chunk in v.chunks(8192) {
+        buf.clear();
+        for &x in chunk {
+            buf.extend_from_slice(&enc(x));
+        }
+        f.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+fn decode(dtype: DType, payload: &[u8]) -> Storage {
+    macro_rules! dec {
+        ($ty:ty, $variant:ident, $w:expr) => {{
+            let v: Vec<$ty> = payload
+                .chunks_exact($w)
+                .map(|c| <$ty>::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            Storage::$variant(v)
+        }};
+    }
+    match dtype {
+        DType::F32 => dec!(f32, F32, 4),
+        DType::I32 => dec!(i32, I32, 4),
+        DType::U32 => dec!(u32, U32, 4),
+        DType::F64 => dec!(f64, F64, 8),
+        DType::I64 => dec!(i64, I64, 8),
+        DType::U8 => Storage::U8(payload.to_vec()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("vq4all_io_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_f32() {
+        let t = Tensor::from_f32(&[2, 3], vec![1.5, -2.0, 0.0, 3.25, f32::MIN, f32::MAX]);
+        let p = tmp("a.vqt");
+        write_tensor(&p, &t).unwrap();
+        assert_eq!(read_tensor(&p).unwrap(), t);
+    }
+
+    #[test]
+    fn roundtrip_i32_and_scalar() {
+        let t = Tensor::from_i32(&[4], vec![i32::MIN, -1, 0, i32::MAX]);
+        let p = tmp("b.vqt");
+        write_tensor(&p, &t).unwrap();
+        assert_eq!(read_tensor(&p).unwrap(), t);
+
+        // 0-dim scalar
+        let s = Tensor {
+            shape: vec![],
+            data: Storage::F32(vec![42.0]),
+        };
+        let p = tmp("c.vqt");
+        write_tensor(&p, &s).unwrap();
+        let back = read_tensor(&p).unwrap();
+        assert_eq!(back.shape, Vec::<usize>::new());
+        assert_eq!(back.as_f32().unwrap(), &[42.0]);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        let p = tmp("bad.vqt");
+        std::fs::write(&p, b"NOPE").unwrap();
+        assert!(read_tensor(&p).is_err());
+
+        let t = Tensor::from_f32(&[10], vec![0.0; 10]);
+        let p2 = tmp("trunc.vqt");
+        write_tensor(&p2, &t).unwrap();
+        let bytes = std::fs::read(&p2).unwrap();
+        std::fs::write(&p2, &bytes[..bytes.len() - 4]).unwrap();
+        assert!(read_tensor(&p2).is_err());
+    }
+
+    /// Cross-language fixture: python writes, rust must read identically.
+    /// (The reverse direction is covered by python/tests/test_aot.py.)
+    #[test]
+    fn python_compatible_layout() {
+        // Hand-assembled file equal to python's write_tensor output for
+        // np.array([[1.0, 2.0]], np.float32).
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"VQT1");
+        bytes.extend_from_slice(&0u32.to_le_bytes()); // f32
+        bytes.extend_from_slice(&2u32.to_le_bytes()); // ndim
+        bytes.extend_from_slice(&1u64.to_le_bytes());
+        bytes.extend_from_slice(&2u64.to_le_bytes());
+        bytes.extend_from_slice(&1.0f32.to_le_bytes());
+        bytes.extend_from_slice(&2.0f32.to_le_bytes());
+        let p = tmp("pyfix.vqt");
+        std::fs::write(&p, &bytes).unwrap();
+        let t = read_tensor(&p).unwrap();
+        assert_eq!(t.shape, vec![1, 2]);
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 2.0]);
+    }
+}

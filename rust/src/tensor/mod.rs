@@ -1,0 +1,297 @@
+//! Host tensors: a small dense ndarray, the `.vqt` file codec, and the
+//! host math the substrates need (matmul, softmax, argmax/top-k).
+//!
+//! This is deliberately *not* a general tensor library — it covers
+//! exactly what the L3 coordinator touches on the host side: marshalling
+//! buffers in and out of PJRT literals, decoding VQ weights, computing
+//! MSE/top-k for the analyses, and reading the artifacts python wrote.
+
+pub mod io;
+pub mod ops;
+
+use std::fmt;
+
+/// Element type of a [`Tensor`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+    F64,
+    I64,
+    U8,
+}
+
+impl DType {
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 | DType::U32 => 4,
+            DType::F64 | DType::I64 => 8,
+            DType::U8 => 1,
+        }
+    }
+
+    pub fn tag(self) -> u32 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+            DType::U32 => 2,
+            DType::F64 => 3,
+            DType::I64 => 4,
+            DType::U8 => 5,
+        }
+    }
+
+    pub fn from_tag(tag: u32) -> anyhow::Result<Self> {
+        Ok(match tag {
+            0 => DType::F32,
+            1 => DType::I32,
+            2 => DType::U32,
+            3 => DType::F64,
+            4 => DType::I64,
+            5 => DType::U8,
+            _ => anyhow::bail!("unknown dtype tag {tag}"),
+        })
+    }
+
+    /// Parse the manifest's dtype strings.
+    pub fn from_str_name(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "f32" => DType::F32,
+            "i32" => DType::I32,
+            "u32" => DType::U32,
+            "f64" => DType::F64,
+            "i64" => DType::I64,
+            "u8" => DType::U8,
+            _ => anyhow::bail!("unknown dtype {s:?}"),
+        })
+    }
+}
+
+/// Typed storage.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+    F64(Vec<f64>),
+    I64(Vec<i64>),
+    U8(Vec<u8>),
+}
+
+impl Storage {
+    pub fn len(&self) -> usize {
+        match self {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::U32(v) => v.len(),
+            Storage::F64(v) => v.len(),
+            Storage::I64(v) => v.len(),
+            Storage::U8(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Storage::F32(_) => DType::F32,
+            Storage::I32(_) => DType::I32,
+            Storage::U32(_) => DType::U32,
+            Storage::F64(_) => DType::F64,
+            Storage::I64(_) => DType::I64,
+            Storage::U8(_) => DType::U8,
+        }
+    }
+}
+
+/// Dense row-major host tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Storage,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "Tensor<{:?}>{:?} ({} elems)",
+            self.data.dtype(),
+            self.shape,
+            self.len()
+        )
+    }
+}
+
+impl Tensor {
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor {
+            shape: shape.to_vec(),
+            data: Storage::F32(data),
+        }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor {
+            shape: shape.to_vec(),
+            data: Storage::I32(data),
+        }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Self {
+        Tensor::from_f32(shape, vec![0.0; shape.iter().product()])
+    }
+
+    pub fn zeros_i32(shape: &[usize]) -> Self {
+        Tensor::from_i32(shape, vec![0; shape.iter().product()])
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.data.dtype()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Borrow as f32 slice (error if not f32).
+    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
+        match &self.data {
+            Storage::F32(v) => Ok(v),
+            other => anyhow::bail!("expected f32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> anyhow::Result<&mut [f32]> {
+        match &mut self.data {
+            Storage::F32(v) => Ok(v),
+            other => anyhow::bail!("expected f32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> anyhow::Result<&[i32]> {
+        match &self.data {
+            Storage::I32(v) => Ok(v),
+            other => anyhow::bail!("expected i32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    pub fn as_i32_mut(&mut self) -> anyhow::Result<&mut [i32]> {
+        match &mut self.data {
+            Storage::I32(v) => Ok(v),
+            other => anyhow::bail!("expected i32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    /// Convert any numeric storage to f32 (labels, codes, ...).
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        match &self.data {
+            Storage::F32(v) => v.clone(),
+            Storage::I32(v) => v.iter().map(|&x| x as f32).collect(),
+            Storage::U32(v) => v.iter().map(|&x| x as f32).collect(),
+            Storage::F64(v) => v.iter().map(|&x| x as f32).collect(),
+            Storage::I64(v) => v.iter().map(|&x| x as f32).collect(),
+            Storage::U8(v) => v.iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    pub fn to_i32_vec(&self) -> Vec<i32> {
+        match &self.data {
+            Storage::F32(v) => v.iter().map(|&x| x as i32).collect(),
+            Storage::I32(v) => v.clone(),
+            Storage::U32(v) => v.iter().map(|&x| x as i32).collect(),
+            Storage::F64(v) => v.iter().map(|&x| x as i32).collect(),
+            Storage::I64(v) => v.iter().map(|&x| x as i32).collect(),
+            Storage::U8(v) => v.iter().map(|&x| x as i32).collect(),
+        }
+    }
+
+    /// Reshape in place (must preserve element count).
+    pub fn reshape(mut self, shape: &[usize]) -> anyhow::Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.len() {
+            anyhow::bail!("reshape {:?} -> {:?}: element count mismatch", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Rows `[start, end)` of a rank-2 tensor.
+    pub fn slice_rows(&self, start: usize, end: usize) -> anyhow::Result<Tensor> {
+        if self.rank() < 1 || start > end || end > self.shape[0] {
+            anyhow::bail!("slice_rows({start}, {end}) on shape {:?}", self.shape);
+        }
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = end - start;
+        let data = match &self.data {
+            Storage::F32(v) => Storage::F32(v[start * row..end * row].to_vec()),
+            Storage::I32(v) => Storage::I32(v[start * row..end * row].to_vec()),
+            Storage::U32(v) => Storage::U32(v[start * row..end * row].to_vec()),
+            Storage::F64(v) => Storage::F64(v[start * row..end * row].to_vec()),
+            Storage::I64(v) => Storage::I64(v[start * row..end * row].to_vec()),
+            Storage::U8(v) => Storage::U8(v[start * row..end * row].to_vec()),
+        };
+        Ok(Tensor { shape, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_access() {
+        let t = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.rank(), 2);
+        assert_eq!(t.as_f32().unwrap()[4], 5.0);
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn shape_mismatch_panics() {
+        Tensor::from_f32(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let t = Tensor::zeros_f32(&[4, 2]);
+        assert!(t.clone().reshape(&[2, 4]).is_ok());
+        assert!(t.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn slice_rows_rank2() {
+        let t = Tensor::from_f32(&[3, 2], vec![0., 1., 10., 11., 20., 21.]);
+        let s = t.slice_rows(1, 3).unwrap();
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.as_f32().unwrap(), &[10., 11., 20., 21.]);
+        assert!(t.slice_rows(2, 4).is_err());
+    }
+
+    #[test]
+    fn dtype_conversions() {
+        let t = Tensor::from_i32(&[3], vec![1, 2, 3]);
+        assert_eq!(t.to_f32_vec(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(DType::from_str_name("i32").unwrap(), DType::I32);
+        assert!(DType::from_str_name("bf16").is_err());
+        for d in [DType::F32, DType::I32, DType::U32, DType::F64, DType::I64, DType::U8] {
+            assert_eq!(DType::from_tag(d.tag()).unwrap(), d);
+        }
+    }
+}

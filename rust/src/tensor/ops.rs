@@ -1,0 +1,240 @@
+//! Host math: the small set of numeric ops the coordinator and the
+//! pure-Rust substrates need (no PJRT round-trip for these).
+//!
+//! Everything operates on plain slices; shapes are passed explicitly.
+//! The k-means/Table-1 hot loops live in `vq::` and call into these.
+
+/// `c[m, n] = sum_k a[m, k] * b[k, n]` — naive blocked matmul, f32.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    assert_eq!(a.len(), m * k, "a shape");
+    assert_eq!(b.len(), k * n, "b shape");
+    assert_eq!(out.len(), m * n, "out shape");
+    out.fill(0.0);
+    // i-k-j loop order: streams b rows, vectorizes the j loop.
+    for i in 0..m {
+        for kk in 0..k {
+            let aik = a[i * k + kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += aik * brow[j];
+            }
+        }
+    }
+}
+
+/// Row-wise softmax in place over a `(rows, cols)` buffer.
+pub fn softmax_rows(x: &mut [f32], rows: usize, cols: usize) {
+    assert_eq!(x.len(), rows * cols);
+    for r in 0..rows {
+        let row = &mut x[r * cols..(r + 1) * cols];
+        let max = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Index of the maximum element (first on ties).
+pub fn argmax(xs: &[f32]) -> usize {
+    assert!(!xs.is_empty());
+    let mut best = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Indices of the `n` smallest values, ascending (partial selection).
+pub fn argmin_n(xs: &[f32], n: usize) -> Vec<usize> {
+    assert!(n <= xs.len(), "argmin_n: n {} > len {}", n, xs.len());
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.select_nth_unstable_by(n.saturating_sub(1), |&a, &b| {
+        xs[a].partial_cmp(&xs[b]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut head = idx[..n].to_vec();
+    head.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap_or(std::cmp::Ordering::Equal));
+    head
+}
+
+/// Squared Euclidean distance between two equal-length slices.
+#[inline]
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        acc += d * d;
+    }
+    acc
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// L2 norm.
+#[inline]
+pub fn norm(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// Cosine similarity (0 when either vector is ~zero).
+pub fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let na = norm(a);
+    let nb = norm(b);
+    if na < 1e-20 || nb < 1e-20 {
+        return 0.0;
+    }
+    dot(a, b) / (na * nb)
+}
+
+/// 2x2 symmetric-matrix sqrt trace term for the 2-D Fréchet distance:
+/// `tr((S1 S2)^{1/2})` via the closed form for 2x2 PSD products.
+/// Used by the Table-4 "FID-like" metric on the diffusion samples.
+pub fn frechet_distance_2d(
+    mu1: [f32; 2],
+    cov1: [[f32; 2]; 2],
+    mu2: [f32; 2],
+    cov2: [[f32; 2]; 2],
+) -> f64 {
+    let dm0 = (mu1[0] - mu2[0]) as f64;
+    let dm1 = (mu1[1] - mu2[1]) as f64;
+    let mean_term = dm0 * dm0 + dm1 * dm1;
+    // product P = cov1 * cov2
+    let p = [
+        [
+            cov1[0][0] as f64 * cov2[0][0] as f64 + cov1[0][1] as f64 * cov2[1][0] as f64,
+            cov1[0][0] as f64 * cov2[0][1] as f64 + cov1[0][1] as f64 * cov2[1][1] as f64,
+        ],
+        [
+            cov1[1][0] as f64 * cov2[0][0] as f64 + cov1[1][1] as f64 * cov2[1][0] as f64,
+            cov1[1][0] as f64 * cov2[0][1] as f64 + cov1[1][1] as f64 * cov2[1][1] as f64,
+        ],
+    ];
+    // For a 2x2 matrix M with trace t and det d, tr(sqrt(M)) = sqrt(t + 2 sqrt(d)).
+    let t = p[0][0] + p[1][1];
+    let d = (p[0][0] * p[1][1] - p[0][1] * p[1][0]).max(0.0);
+    let tr_sqrt = (t + 2.0 * d.sqrt()).max(0.0).sqrt();
+    let tr1 = (cov1[0][0] + cov1[1][1]) as f64;
+    let tr2 = (cov2[0][0] + cov2[1][1]) as f64;
+    (mean_term + tr1 + tr2 - 2.0 * tr_sqrt).max(0.0)
+}
+
+/// Sample mean and covariance of `(n, 2)` points.
+pub fn mean_cov_2d(pts: &[f32]) -> ([f32; 2], [[f32; 2]; 2]) {
+    let n = pts.len() / 2;
+    assert!(n > 1, "need >= 2 points");
+    let mut mu = [0.0f64; 2];
+    for i in 0..n {
+        mu[0] += pts[2 * i] as f64;
+        mu[1] += pts[2 * i + 1] as f64;
+    }
+    mu[0] /= n as f64;
+    mu[1] /= n as f64;
+    let mut c = [[0.0f64; 2]; 2];
+    for i in 0..n {
+        let dx = pts[2 * i] as f64 - mu[0];
+        let dy = pts[2 * i + 1] as f64 - mu[1];
+        c[0][0] += dx * dx;
+        c[0][1] += dx * dy;
+        c[1][0] += dy * dx;
+        c[1][1] += dy * dy;
+    }
+    let denom = (n - 1) as f64;
+    (
+        [mu[0] as f32, mu[1] as f32],
+        [
+            [(c[0][0] / denom) as f32, (c[0][1] / denom) as f32],
+            [(c[1][0] / denom) as f32, (c[1][1] / denom) as f32],
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        // [[1,2],[3,4]] @ [[1,0],[0,1]] = same
+        let a = [1., 2., 3., 4.];
+        let b = [1., 0., 0., 1.];
+        let mut out = [0.0f32; 4];
+        matmul(&a, &b, 2, 2, 2, &mut out);
+        assert_eq!(out, a);
+        // known product
+        let b2 = [1., 1., 1., 1.];
+        matmul(&a, &b2, 2, 2, 2, &mut out);
+        assert_eq!(out, [3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn softmax_rows_normalizes() {
+        let mut x = vec![0.0, 1.0, 2.0, -5.0, 0.0, 5.0];
+        softmax_rows(&mut x, 2, 3);
+        for r in 0..2 {
+            let s: f32 = x[r * 3..(r + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!(x[5] > 0.99, "dominant logit wins");
+    }
+
+    #[test]
+    fn argmin_n_sorted_and_correct() {
+        let xs = [5.0, 1.0, 4.0, 0.5, 3.0];
+        assert_eq!(argmin_n(&xs, 3), vec![3, 1, 4]);
+        assert_eq!(argmin_n(&xs, 5), vec![3, 1, 4, 2, 0]);
+        assert_eq!(argmax(&xs), 0);
+    }
+
+    #[test]
+    fn frechet_identical_is_zero() {
+        let mu = [0.3, -0.2];
+        let cov = [[1.0, 0.2], [0.2, 0.5]];
+        assert!(frechet_distance_2d(mu, cov, mu, cov) < 1e-9);
+    }
+
+    #[test]
+    fn frechet_mean_shift() {
+        let cov = [[1.0, 0.0], [0.0, 1.0]];
+        let d = frechet_distance_2d([0.0, 0.0], cov, [3.0, 4.0], cov);
+        assert!((d - 25.0).abs() < 1e-6, "pure mean term = |dmu|^2, got {d}");
+    }
+
+    #[test]
+    fn mean_cov_of_known_points() {
+        // points: (0,0), (2,0), (0,2), (2,2) -> mean (1,1), cov diag 4/3
+        let pts = [0., 0., 2., 0., 0., 2., 2., 2.];
+        let (mu, cov) = mean_cov_2d(&pts);
+        assert_eq!(mu, [1.0, 1.0]);
+        assert!((cov[0][0] - 4.0 / 3.0).abs() < 1e-6);
+        assert!((cov[1][1] - 4.0 / 3.0).abs() < 1e-6);
+        assert!(cov[0][1].abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_basics() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-6);
+        assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-6);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 0.0]), 0.0);
+    }
+}

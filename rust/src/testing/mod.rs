@@ -1,0 +1,163 @@
+//! Property-testing mini-framework (proptest is unavailable offline).
+//!
+//! A deterministic, seed-sweeping property runner with typed generators.
+//! No shrinking — instead every failure reports the seed and iteration,
+//! which reproduces the exact case (generators are pure functions of the
+//! RNG stream).
+//!
+//! ```ignore
+//! proptest(|g| {
+//!     let codes = g.vec_u32(1..=500, 0..8);
+//!     let p = pack_codes(&codes, 3);
+//!     prop_assert_eq!(unpack_codes(&p), codes);
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Generator context handed to each property iteration.
+pub struct Gen {
+    pub rng: Rng,
+    pub iteration: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi_incl: usize) -> usize {
+        assert!(hi_incl >= lo);
+        lo + self.rng.below(hi_incl - lo + 1)
+    }
+
+    pub fn u32_below(&mut self, n: u32) -> u32 {
+        self.rng.below(n as usize) as u32
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform_range(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vector of u32 codes with length in `len` and values below `below`.
+    pub fn vec_u32(&mut self, len: std::ops::RangeInclusive<usize>, below: u32) -> Vec<u32> {
+        let n = self.usize_in(*len.start(), *len.end());
+        (0..n).map(|_| self.u32_below(below.max(1))).collect()
+    }
+
+    /// Vector of standard-normal f32s.
+    pub fn vec_normal(&mut self, len: std::ops::RangeInclusive<usize>) -> Vec<f32> {
+        let n = self.usize_in(*len.start(), *len.end());
+        let mut v = vec![0.0f32; n];
+        self.rng.fill_normal(&mut v);
+        v
+    }
+
+    /// Vector of uniform f32s in [lo, hi).
+    pub fn vec_uniform(
+        &mut self,
+        len: std::ops::RangeInclusive<usize>,
+        lo: f32,
+        hi: f32,
+    ) -> Vec<f32> {
+        let n = self.usize_in(*len.start(), *len.end());
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+}
+
+/// Number of iterations per property (override with `VQ4ALL_PROP_ITERS`).
+pub fn prop_iters() -> usize {
+    std::env::var("VQ4ALL_PROP_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run a property across seeded iterations.  The closure returns
+/// `Err(msg)` (or panics) to fail; failures report the reproducing seed.
+pub fn proptest<F>(mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base_seed: u64 = std::env::var("VQ4ALL_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xBADC0FFE);
+    for it in 0..prop_iters() {
+        let seed = base_seed.wrapping_add(it as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            iteration: it,
+        };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed at iteration {it} (reproduce with VQ4ALL_PROP_SEED={base_seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assertion helpers that produce `Result<(), String>` for [`proptest`].
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($msg:tt)+) => {
+        if !$cond {
+            return Err(format!($($msg)+));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn properties_run_and_pass() {
+        let mut count = 0;
+        proptest(|g| {
+            count += 1;
+            let v = g.vec_u32(0..=10, 5);
+            prop_assert!(v.iter().all(|&x| x < 5), "range respected");
+            Ok(())
+        });
+        assert_eq!(count, prop_iters());
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failures_panic_with_seed() {
+        proptest(|g| {
+            let x = g.usize_in(0, 100);
+            prop_assert!(x < 1000, "sanity");
+            prop_assert!(g.iteration != 10, "deterministic failure at iter 10 (x={x})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn generators_cover_ranges() {
+        proptest(|g| {
+            let a = g.usize_in(3, 7);
+            prop_assert!((3..=7).contains(&a), "usize_in out of range: {a}");
+            let f = g.f32_in(-1.0, 1.0);
+            prop_assert!((-1.0..1.0).contains(&f), "f32_in out of range: {f}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,224 @@
+//! Tiny declarative CLI parser (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value`, typed
+//! accessors with defaults, and auto-generated `--help`.  Used by the
+//! `vq4all` binary and every example/bench driver.
+
+use std::collections::BTreeMap;
+
+/// Declared option for help text + validation.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.values.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name}={v:?} is not an integer: {e}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name}={v:?} is not a number: {e}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name}={v:?} is not an integer: {e}")),
+        }
+    }
+
+    /// Comma-separated list option.
+    pub fn list(&self, name: &str) -> Option<Vec<String>> {
+        self.get(name)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+    }
+}
+
+/// A subcommand-aware parser.
+pub struct Cli {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Cli {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Cli {
+            program,
+            about,
+            opts: Vec::new(),
+        }
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default: Some(default),
+        });
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for o in &self.opts {
+            let v = if o.takes_value { " <value>" } else { "" };
+            let d = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{}{v}\n      {}{d}\n", o.name, o.help));
+        }
+        s
+    }
+
+    /// Parse an iterator of arguments (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(&self, argv: I) -> anyhow::Result<Args> {
+        let mut out = Args::default();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                out.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                println!("{}", self.help_text());
+                std::process::exit(0);
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{name}\n{}", self.help_text()))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?,
+                    };
+                    out.values.insert(name, v);
+                } else {
+                    if inline.is_some() {
+                        anyhow::bail!("--{name} does not take a value");
+                    }
+                    out.flags.push(name);
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn parse(&self) -> anyhow::Result<Args> {
+        self.parse_from(std::env::args().skip(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("alpha", "0.9999", "freeze threshold")
+            .opt("nets", "", "subset")
+            .flag("verbose", "chatty")
+    }
+
+    fn args(v: &[&str]) -> Args {
+        cli()
+            .parse_from(v.iter().map(|s| s.to_string()))
+            .unwrap()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = args(&[]);
+        assert_eq!(a.get("alpha"), Some("0.9999"));
+        let a = args(&["--alpha", "0.9"]);
+        assert_eq!(a.f64_or("alpha", 0.0).unwrap(), 0.9);
+        let a = args(&["--alpha=0.95"]);
+        assert_eq!(a.f64_or("alpha", 0.0).unwrap(), 0.95);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = args(&["run", "--verbose", "thing"]);
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["run", "thing"]);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = args(&["--nets", "a, b,c"]);
+        assert_eq!(a.list("nets").unwrap(), vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cli()
+            .parse_from(vec!["--bogus".to_string()])
+            .is_err());
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = args(&["--alpha", "zzz"]);
+        assert!(a.f64_or("alpha", 0.0).is_err());
+    }
+}

@@ -1,0 +1,101 @@
+//! Structured logging with levels and elapsed-time stamps.
+//!
+//! The coordinator runs multi-minute campaigns; the log format is
+//! `[  12.345s INFO  campaign] message` so progress is scannable and
+//! the experiment harnesses can keep stdout for their table rows.
+//! Level is process-global, settable via `VQ4ALL_LOG` (error..trace) or
+//! the CLI's `-v` flags.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+/// Process start, for elapsed stamps.
+fn start() -> Instant {
+    use std::sync::OnceLock;
+    static START: OnceLock<Instant> = OnceLock::new();
+    *START.get_or_init(Instant::now)
+}
+
+/// Initialize from the environment (`VQ4ALL_LOG=debug` etc.).
+pub fn init_from_env() {
+    let _ = start();
+    if let Ok(v) = std::env::var("VQ4ALL_LOG") {
+        set_level(match v.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => Level::Info,
+        });
+    }
+}
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+/// Core emit; use via the `log!`-style macros below.
+pub fn emit(l: Level, target: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(l) {
+        return;
+    }
+    let tag = match l {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    let elapsed = start().elapsed().as_secs_f64();
+    eprintln!("[{elapsed:9.3}s {tag} {target}] {msg}");
+}
+
+#[macro_export]
+macro_rules! log_error { ($t:expr, $($a:tt)*) => { $crate::util::logging::emit($crate::util::logging::Level::Error, $t, format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_warn { ($t:expr, $($a:tt)*) => { $crate::util::logging::emit($crate::util::logging::Level::Warn, $t, format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_info { ($t:expr, $($a:tt)*) => { $crate::util::logging::emit($crate::util::logging::Level::Info, $t, format_args!($($a)*)) } }
+#[macro_export]
+macro_rules! log_debug { ($t:expr, $($a:tt)*) => { $crate::util::logging::emit($crate::util::logging::Level::Debug, $t, format_args!($($a)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Trace);
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info); // restore default for other tests
+    }
+}

@@ -1,0 +1,15 @@
+//! In-house substrates.
+//!
+//! Only `xla` and `anyhow` resolve in the build image (vendored, offline),
+//! so everything a framework normally pulls from crates.io is implemented
+//! here: a deterministic PRNG, a JSON codec, a CLI parser, a TOML-subset
+//! config reader, a scoped thread pool, structured logging, and running
+//! statistics.  Each module is small, tested, and dependency-free.
+
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;

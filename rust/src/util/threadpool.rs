@@ -1,0 +1,175 @@
+//! Scoped thread pool (tokio/rayon are unavailable offline).
+//!
+//! A fixed pool of workers executing boxed jobs from a shared queue, plus
+//! a `scope`-style `parallel_for` used by the pure-Rust hot paths
+//! (k-means assignment sweeps, Table-1 MSE scans) and the serving
+//! batcher tests.  Shutdown is explicit and panic-safe: a panicking job
+//! poisons the pool and surfaces as an error on `join`.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Stop,
+}
+
+/// Fixed-size worker pool.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Msg>,
+    handles: Vec<thread::JoinHandle<()>>,
+    panicked: Arc<AtomicBool>,
+    in_flight: Arc<AtomicUsize>,
+}
+
+impl ThreadPool {
+    /// `threads = 0` means "number of available cores".
+    pub fn new(threads: usize) -> Self {
+        let threads = if threads == 0 {
+            thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        } else {
+            threads
+        };
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let panicked = Arc::new(AtomicBool::new(false));
+        let in_flight = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let rx = Arc::clone(&rx);
+            let panicked = Arc::clone(&panicked);
+            let in_flight = Arc::clone(&in_flight);
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("vq4all-worker-{i}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Msg::Run(job)) => {
+                                if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                                    panicked.store(true, Ordering::SeqCst);
+                                }
+                                in_flight.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Ok(Msg::Stop) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool {
+            tx,
+            handles,
+            panicked,
+            in_flight,
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Enqueue a job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.in_flight.fetch_add(1, Ordering::SeqCst);
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool closed");
+    }
+
+    /// Busy-wait (with yields) until all enqueued jobs finished.
+    pub fn wait_idle(&self) -> anyhow::Result<()> {
+        while self.in_flight.load(Ordering::SeqCst) != 0 {
+            thread::yield_now();
+        }
+        if self.panicked.load(Ordering::SeqCst) {
+            anyhow::bail!("a pool job panicked");
+        }
+        Ok(())
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.handles {
+            let _ = self.tx.send(Msg::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Chunked parallel map over `0..n`: calls `f(start, end)` on worker
+/// threads with disjoint ranges covering `0..n`, blocking until done.
+/// `f` must be `Sync` (typically writes through disjoint `&mut` chunks
+/// obtained via `split_at_mut` outside).
+pub fn parallel_ranges<F>(pool: &ThreadPool, n: usize, min_chunk: usize, f: F) -> anyhow::Result<()>
+where
+    F: Fn(usize, usize) + Send + Sync + 'static,
+{
+    if n == 0 {
+        return Ok(());
+    }
+    let chunks = pool.threads().max(1);
+    let chunk = ((n + chunks - 1) / chunks).max(min_chunk.max(1));
+    let f = Arc::new(f);
+    let mut start = 0;
+    while start < n {
+        let end = (start + chunk).min(n);
+        let f = Arc::clone(&f);
+        pool.execute(move || f(start, end));
+        start = end;
+    }
+    pool.wait_idle()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle().unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn parallel_ranges_cover_exactly() {
+        let pool = ThreadPool::new(3);
+        let hits = Arc::new((0..1000).map(|_| AtomicU64::new(0)).collect::<Vec<_>>());
+        let h2 = Arc::clone(&hits);
+        parallel_ranges(&pool, 1000, 1, move |s, e| {
+            for i in s..e {
+                h2[i].fetch_add(1, Ordering::SeqCst);
+            }
+        })
+        .unwrap();
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn panic_is_reported() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("boom"));
+        assert!(pool.wait_idle().is_err());
+    }
+
+    #[test]
+    fn zero_jobs_ok() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle().unwrap();
+        parallel_ranges(&pool, 0, 1, |_, _| {}).unwrap();
+    }
+}

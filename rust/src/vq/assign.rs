@@ -1,0 +1,164 @@
+//! Candidate-assignment search (Eq. 5) and ratio-logit init (Eq. 7).
+//!
+//! The AOT `init_assign` artifact does this on the device path (Pallas
+//! distance kernel); this host implementation backs the pure-Rust
+//! baselines, the Table-7 initialization ablation (random / cosine /
+//! Euclidean), and the coordinator's unit tests.
+
+use crate::tensor::ops;
+use crate::util::rng::Rng;
+
+use super::codebook::Codebook;
+
+/// Candidate-initialization strategy (Table 7).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AssignInit {
+    /// Uniformly random codewords (Table 7 col 1 — the failure mode).
+    Random,
+    /// Top-n by cosine similarity (Table 7 col 2).
+    Cosine,
+    /// Top-n by Euclidean distance (Table 7 col 3 — the paper's choice).
+    Euclid,
+}
+
+/// Candidate table + distances for `(s, d)` sub-vectors.
+#[derive(Clone, Debug)]
+pub struct Candidates {
+    pub n: usize,
+    /// `(s, n)` codeword indices, best first.
+    pub assign: Vec<u32>,
+    /// `(s, n)` squared distances (Euclid) or 1-cos (Cosine); random
+    /// init stores Euclidean distances of the random picks.
+    pub dist: Vec<f32>,
+}
+
+/// Build the candidate table (Eq. 5 generalized per Table 7).
+pub fn candidates(
+    flat: &[f32],
+    cb: &Codebook,
+    n: usize,
+    init: AssignInit,
+    rng: &mut Rng,
+) -> Candidates {
+    assert_eq!(flat.len() % cb.d, 0);
+    let s = flat.len() / cb.d;
+    assert!(n >= 1 && n <= cb.k, "n={n} out of range for k={}", cb.k);
+    let mut assign = vec![0u32; s * n];
+    let mut dist = vec![0.0f32; s * n];
+    let mut scratch = vec![0.0f32; cb.k];
+
+    for g in 0..s {
+        let sub = &flat[g * cb.d..(g + 1) * cb.d];
+        match init {
+            AssignInit::Random => {
+                for m in 0..n {
+                    let c = rng.below(cb.k);
+                    assign[g * n + m] = c as u32;
+                    dist[g * n + m] = ops::sq_dist(sub, cb.word(c));
+                }
+            }
+            AssignInit::Euclid | AssignInit::Cosine => {
+                for c in 0..cb.k {
+                    scratch[c] = match init {
+                        AssignInit::Euclid => ops::sq_dist(sub, cb.word(c)),
+                        AssignInit::Cosine => 1.0 - ops::cosine(sub, cb.word(c)),
+                        AssignInit::Random => unreachable!(),
+                    };
+                }
+                for (m, &c) in ops::argmin_n(&scratch, n).iter().enumerate() {
+                    assign[g * n + m] = c as u32;
+                    dist[g * n + m] = scratch[c];
+                }
+            }
+        }
+    }
+    Candidates { n, assign, dist }
+}
+
+/// Eq. 7: logits `z_m = ln(d_last / d_m)` so softmax(z) ∝ 1/d.
+pub fn init_ratio_logits(cand: &Candidates) -> Vec<f32> {
+    let n = cand.n;
+    let s = cand.dist.len() / n;
+    let mut z = vec![0.0f32; s * n];
+    for g in 0..s {
+        let row = &cand.dist[g * n..(g + 1) * n];
+        let last = row[n - 1].max(1e-12);
+        for m in 0..n {
+            z[g * n + m] = (last / row[m].max(1e-12)).ln();
+        }
+    }
+    z
+}
+
+/// Equal-initialization alternative (supplementary §10's comparison):
+/// all logits zero -> uniform ratios.
+pub fn equal_ratio_logits(s: usize, n: usize) -> Vec<f32> {
+    vec![0.0; s * n]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cb() -> Codebook {
+        Codebook::new(4, 2, vec![0., 0., 1., 0., 0., 1., 5., 5.])
+    }
+
+    #[test]
+    fn euclid_orders_by_distance() {
+        let mut rng = Rng::new(1);
+        let flat = [0.9f32, 0.1]; // nearest (1,0), then (0,0), then (0,1)
+        let c = candidates(&flat, &cb(), 3, AssignInit::Euclid, &mut rng);
+        assert_eq!(c.assign[0], 1);
+        assert_eq!(c.assign[1], 0);
+        assert_eq!(c.assign[2], 2);
+        assert!(c.dist[0] <= c.dist[1] && c.dist[1] <= c.dist[2]);
+    }
+
+    #[test]
+    fn cosine_differs_from_euclid_on_scaled_words() {
+        // (5,5) has perfect cosine with (0.1,0.1) but large distance.
+        let mut rng = Rng::new(2);
+        let flat = [0.1f32, 0.1];
+        let e = candidates(&flat, &cb(), 1, AssignInit::Euclid, &mut rng);
+        let c = candidates(&flat, &cb(), 1, AssignInit::Cosine, &mut rng);
+        assert_eq!(e.assign[0], 0, "euclid picks the origin");
+        assert_eq!(c.assign[0], 3, "cosine picks the aligned word");
+    }
+
+    #[test]
+    fn random_within_range_and_deterministic() {
+        let mut rng = Rng::new(3);
+        let flat = [0.0f32; 20];
+        let a = candidates(&flat, &cb(), 4, AssignInit::Random, &mut rng);
+        assert!(a.assign.iter().all(|&c| (c as usize) < 4));
+        let mut rng2 = Rng::new(3);
+        let b = candidates(&flat, &cb(), 4, AssignInit::Random, &mut rng2);
+        assert_eq!(a.assign, b.assign);
+    }
+
+    #[test]
+    fn ratio_logits_inverse_proportional() {
+        let cand = Candidates {
+            n: 3,
+            assign: vec![0, 1, 2],
+            dist: vec![0.5, 1.0, 2.0],
+        };
+        let z = init_ratio_logits(&cand);
+        // softmax(z) proportional to 1/d: check r0/r1 = d1/d0 = 2.
+        let e: Vec<f64> = z.iter().map(|&x| (x as f64).exp()).collect();
+        assert!((e[0] / e[1] - 2.0).abs() < 1e-6);
+        assert!((e[1] / e[2] - 2.0).abs() < 1e-6);
+        assert!((z[2]).abs() < 1e-7, "last logit is 0 by construction");
+    }
+
+    #[test]
+    fn n_bounds_checked() {
+        let mut rng = Rng::new(4);
+        let flat = [0.0f32, 0.0];
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            candidates(&flat, &cb(), 5, AssignInit::Euclid, &mut rng)
+        }));
+        assert!(res.is_err());
+    }
+}

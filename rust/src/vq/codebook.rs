@@ -1,0 +1,171 @@
+//! Codebook type + storage accounting (§3.1, Table 1's `C` column).
+
+use crate::tensor::ops;
+
+/// A `(k, d)` codebook of f32 codewords (row-major).
+///
+/// For the *universal* codebook this is frozen after KDE sampling (§4.1)
+/// and conceptually lives in on-chip ROM; per-layer baselines create one
+/// per layer (the `P-VQ` rows of Table 1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Codebook {
+    pub k: usize,
+    pub d: usize,
+    pub words: Vec<f32>, // len = k * d
+}
+
+impl Codebook {
+    pub fn new(k: usize, d: usize, words: Vec<f32>) -> Self {
+        assert_eq!(words.len(), k * d, "codebook size mismatch");
+        assert!(k > 0 && d > 0);
+        Codebook { k, d, words }
+    }
+
+    pub fn word(&self, i: usize) -> &[f32] {
+        &self.words[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Storage cost in bytes at f32 (Table 1's `C` column).
+    pub fn storage_bytes(&self) -> usize {
+        self.k * self.d * 4
+    }
+
+    /// Assignment bits per weight: `log2(k) / d` (§3.1, the "ideal bit").
+    pub fn bits_per_weight(&self) -> f64 {
+        (self.k as f64).log2() / self.d as f64
+    }
+
+    /// Bits needed to store one assignment index.
+    pub fn index_bits(&self) -> u32 {
+        (usize::BITS - (self.k - 1).leading_zeros()).max(1)
+    }
+
+    /// Hard decode: `out[s] = words[codes[s]]` (Eq. 2).
+    pub fn decode(&self, codes: &[u32], out: &mut [f32]) {
+        assert_eq!(out.len(), codes.len() * self.d, "decode output size");
+        for (s, &c) in codes.iter().enumerate() {
+            let w = self.word(c as usize);
+            out[s * self.d..(s + 1) * self.d].copy_from_slice(w);
+        }
+    }
+
+    /// Decode into a fresh buffer.
+    pub fn decode_vec(&self, codes: &[u32]) -> Vec<f32> {
+        let mut out = vec![0.0; codes.len() * self.d];
+        self.decode(codes, &mut out);
+        out
+    }
+
+    /// Weighted decode `out[s] = sum_m r[s,m] * words[assign[s,m]]`
+    /// (Eq. 8) — host-side mirror of the Pallas reconstruct kernel,
+    /// used by the coordinator's checkpoint validation.
+    pub fn decode_weighted(&self, assign: &[u32], ratios: &[f32], n: usize, out: &mut [f32]) {
+        let s = assign.len() / n;
+        assert_eq!(assign.len(), s * n);
+        assert_eq!(ratios.len(), s * n);
+        assert_eq!(out.len(), s * self.d);
+        out.fill(0.0);
+        for g in 0..s {
+            let orow = &mut out[g * self.d..(g + 1) * self.d];
+            for m in 0..n {
+                let r = ratios[g * n + m];
+                if r == 0.0 {
+                    continue;
+                }
+                let w = self.word(assign[g * n + m] as usize);
+                for j in 0..self.d {
+                    orow[j] += r * w[j];
+                }
+            }
+        }
+    }
+
+    /// Quantization MSE of encoding `flat` (S*d) with nearest codewords.
+    /// Returns (mse, codes).  This is Table 1's `MSE` column.
+    pub fn encode_nearest(&self, flat: &[f32]) -> (f64, Vec<u32>) {
+        assert_eq!(flat.len() % self.d, 0);
+        let s = flat.len() / self.d;
+        let mut codes = vec![0u32; s];
+        let mut err = 0.0f64;
+        for g in 0..s {
+            let sub = &flat[g * self.d..(g + 1) * self.d];
+            let mut best = 0usize;
+            let mut best_d = f32::INFINITY;
+            for c in 0..self.k {
+                let dist = ops::sq_dist(sub, self.word(c));
+                if dist < best_d {
+                    best_d = dist;
+                    best = c;
+                }
+            }
+            codes[g] = best as u32;
+            err += best_d as f64;
+        }
+        (err / flat.len() as f64, codes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cb() -> Codebook {
+        Codebook::new(4, 2, vec![0., 0., 1., 0., 0., 1., 1., 1.])
+    }
+
+    #[test]
+    fn decode_roundtrip() {
+        let c = cb();
+        let codes = [3u32, 0, 1];
+        let out = c.decode_vec(&codes);
+        assert_eq!(out, vec![1., 1., 0., 0., 1., 0.]);
+    }
+
+    #[test]
+    fn encode_nearest_exact_on_codewords() {
+        let c = cb();
+        let flat = [1.0f32, 1.0, 0.0, 1.0];
+        let (mse, codes) = c.encode_nearest(&flat);
+        assert_eq!(codes, vec![3, 2]);
+        assert_eq!(mse, 0.0);
+    }
+
+    #[test]
+    fn encode_nearest_error_value() {
+        let c = cb();
+        // (0.5, 0.0) is 0.25 away (sq) from both (0,0) and (1,0).
+        let (mse, _) = c.encode_nearest(&[0.5, 0.0]);
+        assert!((mse - 0.125).abs() < 1e-7, "0.25 sq err over 2 weights");
+    }
+
+    #[test]
+    fn weighted_decode_matches_hard_at_onehot() {
+        let c = cb();
+        let assign = [0u32, 3, 1, 2]; // 2 groups, n=2
+        let ratios = [1.0f32, 0.0, 0.0, 1.0];
+        let mut out = vec![0.0; 4];
+        c.decode_weighted(&assign, &ratios, 2, &mut out);
+        assert_eq!(out, vec![0., 0., 0., 1.]);
+    }
+
+    #[test]
+    fn weighted_decode_mixes() {
+        let c = cb();
+        let assign = [1u32, 2]; // one group, n=2: (1,0) and (0,1)
+        let ratios = [0.5f32, 0.5];
+        let mut out = vec![0.0; 2];
+        c.decode_weighted(&assign, &ratios, 2, &mut out);
+        assert_eq!(out, vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn storage_and_bits() {
+        let c = Codebook::new(256, 4, vec![0.0; 1024]);
+        assert_eq!(c.storage_bytes(), 4096);
+        assert_eq!(c.bits_per_weight(), 2.0);
+        assert_eq!(c.index_bits(), 8);
+        let c2 = Codebook::new(65536, 8, vec![0.0; 65536 * 8]);
+        assert_eq!(c2.bits_per_weight(), 2.0);
+        assert_eq!(c2.index_bits(), 16);
+    }
+}

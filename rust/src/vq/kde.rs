@@ -1,0 +1,161 @@
+//! Kernel-density-estimation codebook sampler (§4.1, Eq. 3–4).
+//!
+//! The universal codebook is drawn from the Gaussian KDE of an
+//! equal-count sub-vector pool across all zoo networks.  For a Gaussian
+//! kernel, sampling the KDE is exact: pick a pool vector uniformly, add
+//! `N(0, h^2 I)` noise — no density grid required.  Density *evaluation*
+//! (for the Table-6 analyses and cross-checking the python artifact) is
+//! also provided.
+
+use crate::tensor::ops;
+use crate::util::rng::Rng;
+
+use super::codebook::Codebook;
+
+/// KDE over a `(n, d)` sample pool with bandwidth `h`.
+#[derive(Clone, Debug)]
+pub struct KdeSampler {
+    pub d: usize,
+    pub bandwidth: f32,
+    pool: Vec<f32>, // (n, d) row-major
+}
+
+impl KdeSampler {
+    pub fn new(pool: Vec<f32>, d: usize, bandwidth: f32) -> Self {
+        assert!(d > 0 && bandwidth > 0.0);
+        assert!(!pool.is_empty() && pool.len() % d == 0, "pool must be (n, d)");
+        KdeSampler { d, bandwidth, pool }
+    }
+
+    /// Equal-count pool construction (§4.1: "randomly sample an equal
+    /// number of weight sub-vectors from each network ... ensuring that
+    /// the codebook remains unbiased").
+    pub fn pool_from_networks(flats: &[&[f32]], d: usize, per_net: usize, rng: &mut Rng) -> Vec<f32> {
+        let mut pool = Vec::with_capacity(flats.len() * per_net * d);
+        for flat in flats {
+            assert_eq!(flat.len() % d, 0);
+            let s = flat.len() / d;
+            if s >= per_net {
+                for idx in rng.sample_without_replacement(s, per_net) {
+                    pool.extend_from_slice(&flat[idx * d..(idx + 1) * d]);
+                }
+            } else {
+                for _ in 0..per_net {
+                    let idx = rng.below(s);
+                    pool.extend_from_slice(&flat[idx * d..(idx + 1) * d]);
+                }
+            }
+        }
+        pool
+    }
+
+    pub fn n(&self) -> usize {
+        self.pool.len() / self.d
+    }
+
+    /// Draw one sample from the KDE.
+    pub fn sample(&self, rng: &mut Rng) -> Vec<f32> {
+        let i = rng.below(self.n());
+        let base = &self.pool[i * self.d..(i + 1) * self.d];
+        base.iter()
+            .map(|&x| x + rng.normal_f32(0.0, self.bandwidth))
+            .collect()
+    }
+
+    /// Draw a `(k, d)` frozen universal codebook (Eq. 4).
+    pub fn sample_codebook(&self, k: usize, rng: &mut Rng) -> Codebook {
+        let mut words = Vec::with_capacity(k * self.d);
+        for _ in 0..k {
+            words.extend(self.sample(rng));
+        }
+        Codebook::new(k, self.d, words)
+    }
+
+    /// Evaluate the KDE density at `q` (Eq. 3, product Gaussian kernel).
+    pub fn density(&self, q: &[f32]) -> f64 {
+        assert_eq!(q.len(), self.d);
+        let h2 = (self.bandwidth as f64) * (self.bandwidth as f64);
+        let log_norm = -0.5 * self.d as f64 * (2.0 * std::f64::consts::PI * h2).ln();
+        let mut acc = 0.0f64;
+        for i in 0..self.n() {
+            let s = &self.pool[i * self.d..(i + 1) * self.d];
+            let sq = ops::sq_dist(q, s) as f64;
+            acc += (-0.5 * sq / h2 + log_norm).exp();
+        }
+        acc / self.n() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_stay_near_pool() {
+        // Pool concentrated at (5, 5); bandwidth small -> samples near it.
+        let pool = vec![5.0f32; 2 * 100];
+        let kde = KdeSampler::new(pool, 2, 0.01);
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let s = kde.sample(&mut rng);
+            assert!((s[0] - 5.0).abs() < 0.1 && (s[1] - 5.0).abs() < 0.1);
+        }
+    }
+
+    #[test]
+    fn codebook_moments_match_pool() {
+        // Pool ~ N(0, 1): sampled codebook mean ~ 0, var ~ 1 + h^2.
+        let mut rng = Rng::new(2);
+        let mut pool = vec![0.0f32; 4 * 5000];
+        rng.fill_normal(&mut pool);
+        let kde = KdeSampler::new(pool, 4, 0.1);
+        let cb = kde.sample_codebook(2000, &mut rng);
+        let mean: f32 = cb.words.iter().sum::<f32>() / cb.words.len() as f32;
+        let var: f32 =
+            cb.words.iter().map(|&x| (x - mean) * (x - mean)).sum::<f32>() / cb.words.len() as f32;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.01).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn density_peaks_on_data() {
+        let pool = vec![0.0f32; 2 * 50];
+        let kde = KdeSampler::new(pool, 2, 0.5);
+        assert!(kde.density(&[0.0, 0.0]) > kde.density(&[3.0, 3.0]) * 10.0);
+    }
+
+    #[test]
+    fn density_integrates_1d() {
+        // 1-d KDE over {0}: integral over fine grid ~ 1.
+        let kde = KdeSampler::new(vec![0.0f32], 1, 0.3);
+        let mut acc = 0.0;
+        let step = 0.01;
+        let mut x = -3.0f32;
+        while x < 3.0 {
+            acc += kde.density(&[x]) * step as f64;
+            x += step;
+        }
+        assert!((acc - 1.0).abs() < 0.01, "integral {acc}");
+    }
+
+    #[test]
+    fn equal_count_pool() {
+        let mut rng = Rng::new(3);
+        let a = vec![1.0f32; 10 * 2]; // 10 subvectors of d=2, all ones
+        let b = vec![2.0f32; 50 * 2];
+        let pool = KdeSampler::pool_from_networks(&[&a, &b], 2, 8, &mut rng);
+        assert_eq!(pool.len(), 2 * 8 * 2);
+        let ones = pool.iter().filter(|&&x| x == 1.0).count();
+        let twos = pool.iter().filter(|&&x| x == 2.0).count();
+        assert_eq!(ones, 16, "equal count from each network");
+        assert_eq!(twos, 16);
+    }
+
+    #[test]
+    fn small_net_sampled_with_replacement() {
+        let mut rng = Rng::new(4);
+        let tiny = vec![3.0f32; 2 * 2]; // only 2 sub-vectors
+        let pool = KdeSampler::pool_from_networks(&[&tiny], 2, 10, &mut rng);
+        assert_eq!(pool.len(), 10 * 2);
+    }
+}

@@ -1,0 +1,233 @@
+//! k-means (k-means++ init, Lloyd iterations) — the per-layer VQ
+//! baseline (DeepCompression / BGD / PQF / DKM all start here) and the
+//! paper's "special layer" per-layer codebooks (§5).
+//!
+//! Multi-threaded assignment sweeps via the in-house pool; deterministic
+//! given the seed.
+
+use crate::tensor::ops;
+use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
+
+use super::codebook::Codebook;
+
+/// Result of a k-means run.
+#[derive(Clone, Debug)]
+pub struct KmeansResult {
+    pub codebook: Codebook,
+    pub codes: Vec<u32>,
+    /// Mean squared error per weight (not per sub-vector).
+    pub mse: f64,
+    pub iterations: usize,
+}
+
+/// Options for [`kmeans`].
+#[derive(Clone, Debug)]
+pub struct KmeansOpts {
+    pub max_iters: usize,
+    /// Stop when relative MSE improvement drops below this.
+    pub tol: f64,
+    pub seed: u64,
+    /// Worker threads for the assignment sweep (0 = all cores).
+    pub threads: usize,
+}
+
+impl Default for KmeansOpts {
+    fn default() -> Self {
+        KmeansOpts {
+            max_iters: 25,
+            tol: 1e-4,
+            seed: 0,
+            threads: 0,
+        }
+    }
+}
+
+/// Cluster `(s, d)` sub-vectors into `k` codewords.
+pub fn kmeans(flat: &[f32], d: usize, k: usize, opts: &KmeansOpts) -> KmeansResult {
+    assert!(d > 0 && flat.len() % d == 0, "flat must be (s, d)");
+    let s = flat.len() / d;
+    assert!(s > 0, "empty input");
+    let k = k.min(s); // cannot have more clusters than points
+    let mut rng = Rng::new(opts.seed);
+
+    let mut centers = kmeanspp_init(flat, s, d, k, &mut rng);
+    let mut codes = vec![0u32; s];
+    let pool = ThreadPool::new(opts.threads.min(8));
+    #[allow(unused_assignments)]
+    let mut prev_mse = f64::INFINITY;
+    let mut iters = 0;
+
+    for it in 0..opts.max_iters {
+        iters = it + 1;
+        // Assignment sweep (parallel over sub-vector ranges).
+        let mse = assign_sweep(flat, &centers, d, k, &mut codes, &pool);
+
+        // Update step.
+        let mut sums = vec![0.0f64; k * d];
+        let mut counts = vec![0usize; k];
+        for g in 0..s {
+            let c = codes[g] as usize;
+            counts[c] += 1;
+            for j in 0..d {
+                sums[c * d + j] += flat[g * d + j] as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Re-seed empty cluster at a random point (standard fix).
+                let g = rng.below(s);
+                centers[c * d..(c + 1) * d].copy_from_slice(&flat[g * d..(g + 1) * d]);
+            } else {
+                for j in 0..d {
+                    centers[c * d + j] = (sums[c * d + j] / counts[c] as f64) as f32;
+                }
+            }
+        }
+
+        if prev_mse.is_finite() && (prev_mse - mse) / prev_mse.max(1e-30) < opts.tol {
+            break;
+        }
+        prev_mse = mse;
+    }
+
+    // Final assignment against the final centers.
+    let mse = assign_sweep(flat, &centers, d, k, &mut codes, &pool);
+    KmeansResult {
+        codebook: Codebook::new(k, d, centers),
+        codes,
+        mse,
+        iterations: iters,
+    }
+}
+
+fn assign_sweep(
+    flat: &[f32],
+    centers: &[f32],
+    d: usize,
+    k: usize,
+    codes: &mut [u32],
+    pool: &ThreadPool,
+) -> f64 {
+    let s = codes.len();
+    // Parallel over chunks; each worker writes a disjoint codes range and
+    // returns its partial error via an atomic-free per-chunk buffer.
+    let nchunks = pool.threads().max(1);
+    let chunk = (s + nchunks - 1) / nchunks;
+    let errs = std::sync::Mutex::new(vec![0.0f64; nchunks]);
+    std::thread::scope(|scope| {
+        for (ci, codes_chunk) in codes.chunks_mut(chunk).enumerate() {
+            let start = ci * chunk;
+            let errs = &errs;
+            scope.spawn(move || {
+                let mut local = 0.0f64;
+                for (off, code) in codes_chunk.iter_mut().enumerate() {
+                    let g = start + off;
+                    let sub = &flat[g * d..(g + 1) * d];
+                    let mut best = 0usize;
+                    let mut best_d = f32::INFINITY;
+                    for c in 0..k {
+                        let dist = ops::sq_dist(sub, &centers[c * d..(c + 1) * d]);
+                        if dist < best_d {
+                            best_d = dist;
+                            best = c;
+                        }
+                    }
+                    *code = best as u32;
+                    local += best_d as f64;
+                }
+                errs.lock().unwrap()[ci] = local;
+            });
+        }
+    });
+    let total: f64 = errs.into_inner().unwrap().iter().sum();
+    total / flat.len() as f64
+}
+
+/// k-means++ seeding: D^2-weighted center selection.
+fn kmeanspp_init(flat: &[f32], s: usize, d: usize, k: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut centers = Vec::with_capacity(k * d);
+    let first = rng.below(s);
+    centers.extend_from_slice(&flat[first * d..(first + 1) * d]);
+    let mut dist2 = vec![f32::INFINITY; s];
+    for c in 1..k {
+        let last = &centers[(c - 1) * d..c * d];
+        let mut total = 0.0f64;
+        for g in 0..s {
+            let dd = ops::sq_dist(&flat[g * d..(g + 1) * d], last);
+            if dd < dist2[g] {
+                dist2[g] = dd;
+            }
+            total += dist2[g] as f64;
+        }
+        let pick = if total <= 0.0 {
+            rng.below(s)
+        } else {
+            let mut target = rng.uniform() * total;
+            let mut chosen = s - 1;
+            for g in 0..s {
+                target -= dist2[g] as f64;
+                if target <= 0.0 {
+                    chosen = g;
+                    break;
+                }
+            }
+            chosen
+        };
+        centers.extend_from_slice(&flat[pick * d..(pick + 1) * d]);
+    }
+    centers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Three tight clusters -> k-means with k=3 must hit ~0 error.
+    #[test]
+    fn recovers_separated_clusters() {
+        let mut rng = Rng::new(5);
+        let centers = [[0.0f32, 0.0], [10.0, 0.0], [0.0, 10.0]];
+        let mut flat = Vec::new();
+        for i in 0..300 {
+            let c = centers[i % 3];
+            flat.push(c[0] + rng.normal_f32(0.0, 0.05));
+            flat.push(c[1] + rng.normal_f32(0.0, 0.05));
+        }
+        let res = kmeans(&flat, 2, 3, &KmeansOpts::default());
+        assert!(res.mse < 0.01, "mse {}", res.mse);
+        // All three clusters used.
+        let used: std::collections::HashSet<_> = res.codes.iter().collect();
+        assert_eq!(used.len(), 3);
+    }
+
+    #[test]
+    fn mse_decreases_with_k() {
+        let mut rng = Rng::new(6);
+        let mut flat = vec![0.0f32; 2 * 500];
+        rng.fill_normal(&mut flat);
+        let m2 = kmeans(&flat, 2, 2, &KmeansOpts::default()).mse;
+        let m16 = kmeans(&flat, 2, 16, &KmeansOpts::default()).mse;
+        let m64 = kmeans(&flat, 2, 64, &KmeansOpts::default()).mse;
+        assert!(m2 > m16 && m16 > m64, "{m2} > {m16} > {m64}");
+    }
+
+    #[test]
+    fn k_clamped_to_points() {
+        let flat = [1.0f32, 2.0, 3.0, 4.0]; // 2 points, d=2
+        let res = kmeans(&flat, 2, 100, &KmeansOpts::default());
+        assert_eq!(res.codebook.k, 2);
+        assert!(res.mse < 1e-12);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Rng::new(7);
+        let mut flat = vec![0.0f32; 4 * 200];
+        rng.fill_normal(&mut flat);
+        let a = kmeans(&flat, 4, 8, &KmeansOpts::default());
+        let b = kmeans(&flat, 4, 8, &KmeansOpts::default());
+        assert_eq!(a.codes, b.codes);
+        assert_eq!(a.codebook.words, b.codebook.words);
+    }
+}

@@ -1,0 +1,30 @@
+//! Vector-quantization substrate (pure Rust, host-side).
+//!
+//! Everything the universal-codebook story needs outside the AOT graphs:
+//!
+//! * [`codebook`] — the codebook type, storage accounting (Table 1's `C`
+//!   column) and hard decode.
+//! * [`kde`]      — §4.1's kernel-density-estimation sampler that creates
+//!   the universal codebook from multi-network weight pools.
+//! * [`kmeans`]   — k-means (Lloyd + k-means++ init), the per-layer-VQ
+//!   baseline (DeepCompression/DKM family) and the special-layer
+//!   codebooks of §5.
+//! * [`assign`]   — Eq. 5 candidate search (Euclidean / cosine / random —
+//!   Table 7) and Eq. 7 ratio-logit initialization.
+//! * [`ratios`]   — softmax-ratio math + PNC freeze bookkeeping shared
+//!   with the coordinator.
+//! * [`pack`]     — bit-packing of assignment streams into the compressed
+//!   on-disk/ROM format, with the compression-rate arithmetic of §3.1.
+
+pub mod assign;
+pub mod codebook;
+pub mod kde;
+pub mod kmeans;
+pub mod pack;
+pub mod ratios;
+
+pub use assign::{candidates, AssignInit};
+pub use codebook::Codebook;
+pub use kde::KdeSampler;
+pub use kmeans::kmeans;
+pub use pack::{pack_codes, unpack_codes, PackedCodes};

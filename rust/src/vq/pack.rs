@@ -1,0 +1,176 @@
+//! Bit-packing of assignment streams — the compressed network format.
+//!
+//! §3.1: assignments cost `(o*i/d) * log2(k)` bits.  This module packs a
+//! `u32` code stream at an arbitrary bit width (1..=32) into a dense
+//! little-endian bit stream, unpacks it, and provides the compression
+//! accounting used by every table (model bytes, ratio vs f32).
+//!
+//! The pack format is also what the serving path decodes on the fly
+//! (`serving::switchsim`), so unpack speed is a §Perf hot path.
+
+/// A packed code stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedCodes {
+    pub bits: u32,
+    pub count: usize,
+    pub data: Vec<u8>,
+}
+
+/// Pack `codes` at `bits` per entry (LSB-first within the stream).
+pub fn pack_codes(codes: &[u32], bits: u32) -> PackedCodes {
+    assert!((1..=32).contains(&bits), "bits must be 1..=32");
+    let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+    for (i, &c) in codes.iter().enumerate() {
+        assert!(c <= mask, "code {c} at {i} exceeds {bits} bits");
+    }
+    let total_bits = codes.len() * bits as usize;
+    let mut data = vec![0u8; (total_bits + 7) / 8];
+    let mut bitpos = 0usize;
+    for &c in codes {
+        let mut v = c as u64;
+        let mut remaining = bits as usize;
+        while remaining > 0 {
+            let byte = bitpos / 8;
+            let off = bitpos % 8;
+            let take = (8 - off).min(remaining);
+            data[byte] |= (((v & ((1u64 << take) - 1)) as u8) << off) as u8;
+            v >>= take;
+            bitpos += take;
+            remaining -= take;
+        }
+    }
+    PackedCodes {
+        bits,
+        count: codes.len(),
+        data,
+    }
+}
+
+/// Unpack back into `u32` codes.
+pub fn unpack_codes(p: &PackedCodes) -> Vec<u32> {
+    let mut out = Vec::with_capacity(p.count);
+    let mut bitpos = 0usize;
+    for _ in 0..p.count {
+        let mut v = 0u64;
+        let mut got = 0usize;
+        while got < p.bits as usize {
+            let byte = bitpos / 8;
+            let off = bitpos % 8;
+            let take = (8 - off).min(p.bits as usize - got);
+            let chunk = ((p.data[byte] >> off) as u64) & ((1u64 << take) - 1);
+            v |= chunk << got;
+            got += take;
+            bitpos += take;
+        }
+        out.push(v as u32);
+    }
+    out
+}
+
+/// Unpack a single code at index `i` without touching the rest — the
+/// serving random-access path.
+pub fn unpack_one(p: &PackedCodes, i: usize) -> u32 {
+    assert!(i < p.count);
+    let bits = p.bits as usize;
+    let mut bitpos = i * bits;
+    let mut v = 0u64;
+    let mut got = 0usize;
+    while got < bits {
+        let byte = bitpos / 8;
+        let off = bitpos % 8;
+        let take = (8 - off).min(bits - got);
+        let chunk = ((p.data[byte] >> off) as u64) & ((1u64 << take) - 1);
+        v |= chunk << got;
+        got += take;
+        bitpos += take;
+    }
+    v as u32
+}
+
+impl PackedCodes {
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Compression accounting for one network (§3.1 / Table 1 "Rate").
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SizeReport {
+    /// f32 bytes of the original compressed-scope weights.
+    pub float_bytes: usize,
+    /// Packed assignment bytes.
+    pub assign_bytes: usize,
+    /// Codebook bytes *attributed to this network* (0 for the universal
+    /// codebook amortized into ROM; k*d*4 for per-layer baselines).
+    pub codebook_bytes: usize,
+    /// Uncompressed (excluded-layer + bias/norm) bytes kept at f32.
+    pub other_bytes: usize,
+}
+
+impl SizeReport {
+    pub fn compressed_total(&self) -> usize {
+        self.assign_bytes + self.codebook_bytes + self.other_bytes
+    }
+
+    pub fn original_total(&self) -> usize {
+        self.float_bytes + self.other_bytes
+    }
+
+    /// Whole-model compression ratio.
+    pub fn ratio(&self) -> f64 {
+        self.original_total() as f64 / self.compressed_total().max(1) as f64
+    }
+
+    /// Ratio over the compressed scope only (Table 3's per-layer rate).
+    pub fn scope_ratio(&self) -> f64 {
+        self.float_bytes as f64 / (self.assign_bytes + self.codebook_bytes).max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_all_bitwidths() {
+        let mut rng = Rng::new(1);
+        for bits in 1..=32u32 {
+            let mask = if bits == 32 { u32::MAX } else { (1 << bits) - 1 };
+            let codes: Vec<u32> = (0..257).map(|_| (rng.next_u64() as u32) & mask).collect();
+            let p = pack_codes(&codes, bits);
+            assert_eq!(unpack_codes(&p), codes, "bits={bits}");
+            // Random access agrees with bulk unpack.
+            for &i in &[0usize, 1, 100, 256] {
+                assert_eq!(unpack_one(&p, i), codes[i], "bits={bits} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_size_is_tight() {
+        let codes = vec![1u32; 100];
+        let p = pack_codes(&codes, 3);
+        assert_eq!(p.bytes(), (100 * 3 + 7) / 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn rejects_out_of_range_codes() {
+        pack_codes(&[8], 3);
+    }
+
+    #[test]
+    fn size_report_ratios() {
+        // 1M weights at f32 = 4MB scope; 2-bit codes = 250KB; universal
+        // codebook -> 0 attributed bytes; 40KB others.
+        let r = SizeReport {
+            float_bytes: 4_000_000,
+            assign_bytes: 250_000,
+            codebook_bytes: 0,
+            other_bytes: 40_000,
+        };
+        assert!((r.ratio() - (4_040_000.0 / 290_000.0)).abs() < 1e-9);
+        assert!((r.scope_ratio() - 16.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,179 @@
+//! Softmax-ratio math + PNC freeze bookkeeping (Eq. 6 / Eq. 14),
+//! host-side mirror of `vqlayers.effective_ratios`.
+//!
+//! The coordinator reads the logits `z` back from the device every
+//! `pnc_interval` steps and uses these helpers to decide freezes; the
+//! same code backs the Figure-3 largest-ratio histogram and the Table-5
+//! optimal-assignment-index analysis.
+
+use crate::tensor::ops;
+
+/// Per-group PNC state: 0 = free, 1 = frozen to `frozen_idx`.
+#[derive(Clone, Debug, Default)]
+pub struct FreezeState {
+    pub frozen: Vec<f32>,     // (s,) in {0.0, 1.0}
+    pub frozen_idx: Vec<i32>, // (s,) candidate slot
+}
+
+impl FreezeState {
+    pub fn new(s: usize) -> Self {
+        FreezeState {
+            frozen: vec![0.0; s],
+            frozen_idx: vec![0; s],
+        }
+    }
+
+    pub fn num_frozen(&self) -> usize {
+        self.frozen.iter().filter(|&&f| f > 0.5).count()
+    }
+
+    pub fn is_frozen(&self, g: usize) -> bool {
+        self.frozen[g] > 0.5
+    }
+
+    pub fn all_frozen(&self) -> bool {
+        self.num_frozen() == self.frozen.len()
+    }
+
+    /// Freeze group `g` to candidate slot `m`.  Idempotent; never
+    /// *unfreezes* (the PNC invariant — property-tested).
+    pub fn freeze(&mut self, g: usize, m: usize) {
+        if !self.is_frozen(g) {
+            self.frozen[g] = 1.0;
+            self.frozen_idx[g] = m as i32;
+        }
+    }
+}
+
+/// Effective ratios (Eq. 6 + Eq. 14): softmax rows for free groups,
+/// one-hot rows for frozen groups.  `z` is `(s, n)`.
+pub fn effective_ratios(z: &[f32], n: usize, fs: &FreezeState) -> Vec<f32> {
+    let s = z.len() / n;
+    assert_eq!(z.len(), s * n);
+    assert_eq!(fs.frozen.len(), s);
+    let mut r = z.to_vec();
+    ops::softmax_rows(&mut r, s, n);
+    for g in 0..s {
+        if fs.is_frozen(g) {
+            let row = &mut r[g * n..(g + 1) * n];
+            row.fill(0.0);
+            row[fs.frozen_idx[g] as usize] = 1.0;
+        }
+    }
+    r
+}
+
+/// Max ratio + its slot per group (the PNC scan input).
+pub fn max_ratios(z: &[f32], n: usize) -> Vec<(f32, usize)> {
+    let s = z.len() / n;
+    let mut soft = z.to_vec();
+    ops::softmax_rows(&mut soft, s, n);
+    (0..s)
+        .map(|g| {
+            let row = &soft[g * n..(g + 1) * n];
+            let m = ops::argmax(row);
+            (row[m], m)
+        })
+        .collect()
+}
+
+/// Final hard codes (Algorithm 1 output): frozen slot or argmax slot,
+/// mapped through the candidate table.  `assign` is `(s, n)` codeword ids.
+pub fn hard_codes(z: &[f32], assign: &[u32], n: usize, fs: &FreezeState) -> Vec<u32> {
+    let s = z.len() / n;
+    assert_eq!(assign.len(), s * n);
+    let mr = max_ratios(z, n);
+    (0..s)
+        .map(|g| {
+            let slot = if fs.is_frozen(g) {
+                fs.frozen_idx[g] as usize
+            } else {
+                mr[g].1
+            };
+            assign[g * n + slot]
+        })
+        .collect()
+}
+
+/// Eq. 13's construction-gap: `sum ||R C[A] - C[A[argmax R]]||^2` between
+/// the soft reconstruction and the hard collapse — the quantity PNC keeps
+/// small.  Returns the summed squared error.
+pub fn collapse_gap(
+    z: &[f32],
+    assign: &[u32],
+    n: usize,
+    fs: &FreezeState,
+    cb: &super::codebook::Codebook,
+) -> f64 {
+    let s = z.len() / n;
+    let r = effective_ratios(z, n, fs);
+    let mut soft = vec![0.0f32; s * cb.d];
+    cb.decode_weighted(assign, &r, n, &mut soft);
+    let codes = hard_codes(z, assign, n, fs);
+    let hard = cb.decode_vec(&codes);
+    soft.iter()
+        .zip(&hard)
+        .map(|(&a, &b)| {
+            let d = (a - b) as f64;
+            d * d
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vq::codebook::Codebook;
+
+    #[test]
+    fn freeze_is_sticky() {
+        let mut fs = FreezeState::new(3);
+        fs.freeze(1, 2);
+        assert!(fs.is_frozen(1));
+        assert_eq!(fs.frozen_idx[1], 2);
+        fs.freeze(1, 0); // second freeze must not change the slot
+        assert_eq!(fs.frozen_idx[1], 2);
+        assert_eq!(fs.num_frozen(), 1);
+    }
+
+    #[test]
+    fn effective_ratios_mixes_soft_and_onehot() {
+        let z = vec![0.0, 0.0, 5.0, 0.0]; // 2 groups, n=2
+        let mut fs = FreezeState::new(2);
+        fs.freeze(0, 1);
+        let r = effective_ratios(&z, 2, &fs);
+        assert_eq!(&r[0..2], &[0.0, 1.0], "frozen row is one-hot");
+        assert!(r[2] > 0.99, "free row is softmax");
+        assert!((r[2] + r[3] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn hard_codes_respects_freeze_and_argmax() {
+        let z = vec![3.0, 0.0, 0.0, 3.0];
+        let assign = vec![10u32, 11, 20, 21];
+        let mut fs = FreezeState::new(2);
+        fs.freeze(0, 1); // frozen to slot 1 even though argmax is slot 0
+        let codes = hard_codes(&z, &assign, 2, &fs);
+        assert_eq!(codes, vec![11, 21]);
+    }
+
+    #[test]
+    fn collapse_gap_zero_when_onehot() {
+        let cb = Codebook::new(2, 2, vec![0., 0., 1., 1.]);
+        let z = vec![20.0, -20.0]; // softmax ~ one-hot on slot 0
+        let assign = vec![1u32, 0];
+        let fs = FreezeState::new(1);
+        let gap = collapse_gap(&z, &assign, 2, &fs, &cb);
+        assert!(gap < 1e-9, "gap {gap}");
+    }
+
+    #[test]
+    fn collapse_gap_positive_when_soft() {
+        let cb = Codebook::new(2, 2, vec![0., 0., 1., 1.]);
+        let z = vec![0.0, 0.0]; // 50/50 mix -> soft = (0.5, 0.5), hard = (0,0)
+        let assign = vec![1u32, 0];
+        let fs = FreezeState::new(1);
+        let gap = collapse_gap(&z, &assign, 2, &fs, &cb);
+        assert!((gap - 0.5).abs() < 1e-6, "(0.5)^2 * 2 dims = 0.5, got {gap}");
+    }
+}

@@ -1,0 +1,251 @@
+//! Integration: the PJRT runtime over the real AOT artifacts.
+//!
+//! Needs `make artifacts` to have run (the Makefile's `test-rs` target
+//! guarantees it).  Everything here uses `mini_mlp`, the smallest zoo
+//! member, to keep the suite fast.
+
+use std::path::PathBuf;
+
+use vq4all::coordinator::checkpoint;
+use vq4all::coordinator::{Campaign, NetSession, PncScheduler};
+use vq4all::runtime::{Manifest, Runtime};
+use vq4all::util::config::CampaignConfig;
+
+fn artifacts() -> PathBuf {
+    Manifest::default_dir()
+}
+
+fn campaign(steps: usize) -> Campaign {
+    let cfg = CampaignConfig {
+        steps,
+        eval_interval: 0,
+        ..CampaignConfig::default()
+    };
+    Campaign::load(&artifacts(), cfg).expect("artifacts missing — run `make artifacts`")
+}
+
+#[test]
+fn manifest_loads_and_is_consistent() {
+    let m = Manifest::load(&artifacts()).unwrap();
+    assert!(!m.networks.is_empty(), "zoo must not be empty");
+    assert!(m.config.k.is_power_of_two(), "k must be a power of two");
+    for net in &m.networks {
+        assert!(net.s_total > 0, "{}: no sub-vector groups", net.name);
+        // Every executable's HLO file must exist.
+        for (ename, espec) in &net.executables {
+            let p = m.path(&espec.hlo);
+            assert!(p.exists(), "{}::{} HLO missing at {p:?}", net.name, ename);
+            assert!(
+                !espec.inputs.is_empty() && !espec.outputs.is_empty(),
+                "{}::{} has an empty signature",
+                net.name,
+                ename
+            );
+        }
+        // Layer table must tile s_total exactly.
+        let groups: usize = net.layers.iter().map(|l| l.groups).sum();
+        assert_eq!(groups, net.s_total, "{}: layer slices don't tile S", net.name);
+    }
+}
+
+#[test]
+fn every_artifact_loads_and_compiles() {
+    let m = Manifest::load(&artifacts()).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    for net in &m.networks {
+        for (ename, espec) in &net.executables {
+            rt.load(&m.path(&espec.hlo), espec)
+                .unwrap_or_else(|e| panic!("{}::{ename}: {e}", net.name));
+        }
+    }
+}
+
+#[test]
+fn train_step_decreases_loss_on_mini_mlp() {
+    let c = campaign(12);
+    let mut sess = NetSession::new(&c.rt, &c.manifest, "mini_mlp", &c.codebook).unwrap();
+    let mut stream = vq4all::coordinator::calib::CalibStream::new(
+        sess.calib_x.clone(),
+        sess.calib_y.clone(),
+        &sess.net.task,
+        sess.net.batch,
+        7,
+    );
+    let mut first = None;
+    let mut last = None;
+    for _ in 0..12 {
+        let batch = stream.next_batch().unwrap();
+        let m = sess.train_step(&batch).unwrap();
+        assert!(m.iter().all(|x| x.is_finite()), "non-finite loss: {m:?}");
+        first.get_or_insert(m[0]);
+        last = Some(m[0]);
+    }
+    // The total loss includes L_r which is driven to 0; over a dozen
+    // steps the total must move down.
+    assert!(
+        last.unwrap() < first.unwrap(),
+        "loss did not decrease: {first:?} -> {last:?}"
+    );
+}
+
+#[test]
+fn eval_soft_and_hard_are_close_after_construction() {
+    let c = campaign(40);
+    let res = c.construct("mini_mlp").unwrap();
+    assert!(res.float_metric > 0.8, "float net should be accurate");
+    assert!(
+        (res.soft_metric - res.hard_metric).abs() < 0.2,
+        "soft {:.3} vs hard {:.3} diverged",
+        res.soft_metric,
+        res.hard_metric
+    );
+    assert!(
+        res.hard_metric > res.float_metric - 0.2,
+        "hard collapse destroyed the network: {:.3} vs float {:.3}",
+        res.hard_metric,
+        res.float_metric
+    );
+    // All codes must index the codebook.
+    assert!(res.codes.iter().all(|&c2| (c2 as usize) < c.manifest.config.k));
+    assert_eq!(res.codes.len(), c.manifest.network("mini_mlp").unwrap().s_total);
+}
+
+#[test]
+fn hard_codes_always_come_from_candidate_rows() {
+    let c = campaign(8);
+    let res = c.construct("mini_mlp").unwrap();
+    let sess = NetSession::new(&c.rt, &c.manifest, "mini_mlp", &c.codebook).unwrap();
+    let assign = sess.assign_u32();
+    let n = c.manifest.config.n;
+    for (g, &code) in res.codes.iter().enumerate() {
+        let row = &assign[g * n..(g + 1) * n];
+        assert!(
+            row.contains(&code),
+            "group {g}: code {code} not among its candidates {row:?}"
+        );
+    }
+}
+
+#[test]
+fn checkpoint_resume_is_byte_identical() {
+    let c = campaign(0);
+    let dir = std::env::temp_dir().join("vq4all_resume_test_ckpt");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Run A: 4 steps, checkpoint, 4 more steps.
+    let mut a = NetSession::new(&c.rt, &c.manifest, "mini_mlp", &c.codebook).unwrap();
+    let mut pnc_a = PncScheduler::new(a.net.s_total, 0.9999);
+    let mut stream = vq4all::coordinator::calib::CalibStream::new(
+        a.calib_x.clone(),
+        a.calib_y.clone(),
+        &a.net.task,
+        a.net.batch,
+        99,
+    );
+    let mut batches = Vec::new();
+    for _ in 0..8 {
+        batches.push(stream.next_batch().unwrap());
+    }
+    for b in &batches[..4] {
+        a.train_step(b).unwrap();
+    }
+    pnc_a.scan(a.z(), a.n);
+    checkpoint::save(&dir, &a, &pnc_a, 4).unwrap();
+    for b in &batches[4..] {
+        a.train_step(b).unwrap();
+    }
+
+    // Run B: restore at step 4, replay the same last 4 batches.
+    let mut b = NetSession::new(&c.rt, &c.manifest, "mini_mlp", &c.codebook).unwrap();
+    let mut pnc_b = PncScheduler::new(b.net.s_total, 0.9999);
+    let step = checkpoint::load(&dir, &mut b, &mut pnc_b).unwrap();
+    assert_eq!(step, 4);
+    for batch in &batches[4..] {
+        b.train_step(batch).unwrap();
+    }
+
+    assert_eq!(a.z(), b.z(), "resumed z diverged from continuous run");
+    assert_eq!(
+        pnc_a.frozen_tensor(),
+        pnc_b.frozen_tensor(),
+        "freeze state diverged"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn infer_hard_serves_correct_shapes() {
+    let c = campaign(6);
+    let res = c.construct("mini_mlp").unwrap();
+    let mut sess = NetSession::new(&c.rt, &c.manifest, "mini_mlp", &c.codebook).unwrap();
+    let codes = sess.codes_tensor(&res.codes);
+    let eb = sess.net.eval_batch;
+    let rows: Vec<usize> = (0..eb).collect();
+    let x = vq4all::coordinator::calib::gather_rows(&sess.test_x, &rows).unwrap();
+    let out = sess.eval_infer(&codes, &[x]).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].shape[0], eb, "batch dim preserved");
+    assert!(out[0].as_f32().unwrap().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn rust_codebook_matches_python_export_distribution() {
+    // §4.1 cross-check: the native KDE sampler must produce a codebook
+    // whose first two moments match the python-exported one (they sample
+    // the same KDE pool family).
+    let m = Manifest::load(&artifacts()).unwrap();
+    let nets: Vec<String> = m.networks.iter().map(|n| n.name.clone()).collect();
+    let refs: Vec<&str> = nets.iter().map(|s| s.as_str()).collect();
+    let native = Campaign::build_codebook_from(&m, &refs, 7).unwrap();
+    let exported =
+        vq4all::tensor::io::read_tensor(&m.path(&m.codebook_file)).unwrap();
+    let stats = |t: &vq4all::tensor::Tensor| {
+        let v = t.as_f32().unwrap();
+        let mean = v.iter().map(|&x| x as f64).sum::<f64>() / v.len() as f64;
+        let var = v.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / v.len() as f64;
+        (mean, var.sqrt())
+    };
+    let (m1, s1) = stats(&native);
+    let (m2, s2) = stats(&exported);
+    assert!((m1 - m2).abs() < 0.05, "means diverged: {m1} vs {m2}");
+    assert!(
+        (s1 / s2 - 1.0).abs() < 0.35,
+        "stds diverged: {s1} vs {s2}"
+    );
+}
+
+#[test]
+fn special_layer_pass_compresses_head_without_collapse() {
+    // §5.1: the output head gets a private per-layer codebook; accuracy
+    // must survive and the size accounting must shrink.
+    let mut cfg = CampaignConfig {
+        steps: 12,
+        eval_interval: 0,
+        ..CampaignConfig::default()
+    };
+    cfg.output_codebook = Some((64, 4));
+    let with = Campaign::load(&artifacts(), cfg.clone()).unwrap();
+    let res_special = with.construct("mini_mlp").unwrap();
+
+    cfg.output_codebook = None;
+    let without = Campaign::load(&artifacts(), cfg).unwrap();
+    let res_plain = without.construct("mini_mlp").unwrap();
+
+    assert!(
+        res_special.sizes.other_bytes < res_plain.sizes.other_bytes,
+        "special pass did not shrink the head: {} !< {}",
+        res_special.sizes.other_bytes,
+        res_plain.sizes.other_bytes
+    );
+    assert!(
+        res_special.sizes.codebook_bytes > 0,
+        "private codebook must be charged"
+    );
+    assert!(
+        res_special.hard_metric > res_plain.hard_metric - 0.15,
+        "head quantization collapsed accuracy: {} vs {}",
+        res_special.hard_metric,
+        res_plain.hard_metric
+    );
+    assert!(res_special.sizes.ratio() > res_plain.sizes.ratio());
+}

@@ -1,0 +1,142 @@
+//! Integration: the serving stack (router + batcher + server) over the
+//! real `infer_hard` artifact for mini_mlp.
+
+use vq4all::coordinator::{Campaign, NetSession};
+use vq4all::serving::batcher::BatcherConfig;
+use vq4all::serving::server::Server;
+use vq4all::util::config::CampaignConfig;
+use vq4all::util::rng::Rng;
+
+fn campaign(steps: usize) -> Campaign {
+    let cfg = CampaignConfig {
+        steps,
+        eval_interval: 0,
+        ..CampaignConfig::default()
+    };
+    Campaign::load(
+        &vq4all::runtime::Manifest::default_dir(),
+        cfg,
+    )
+    .expect("artifacts missing — run `make artifacts`")
+}
+
+#[test]
+fn server_serves_every_request_exactly_once() {
+    let c = campaign(6);
+    let res = c.construct("mini_mlp").unwrap();
+    let mut sess = NetSession::new(&c.rt, &c.manifest, "mini_mlp", &c.codebook).unwrap();
+    let codes = sess.codes_tensor(&res.codes);
+
+    let mut server = Server::new(
+        vec![(&mut sess, codes)],
+        BatcherConfig {
+            max_batch: 16,
+            max_linger_ns: 50_000,
+        },
+    );
+    let mut rng = Rng::new(11);
+    let total = 75usize;
+    for i in 0..total {
+        server.submit("mini_mlp", rng.below(64)).unwrap();
+        if i % 7 == 0 {
+            server.tick(60_000);
+            while server.dispatch_one().unwrap() > 0 {}
+        }
+    }
+    server.drain_all().unwrap();
+
+    let st = &server.stats["mini_mlp"];
+    assert_eq!(st.served as usize, total, "requests lost or duplicated");
+    assert_eq!(st.latency_ns.len(), total, "latency sample per request");
+    assert!(st.batches > 0 && st.batches as usize <= total);
+    // Latencies are nonnegative and finite.
+    assert!(st.latency_ns.iter().all(|&l| l >= 0.0 && l.is_finite()));
+    let (acc, disp) = server.router.counters();
+    assert_eq!(acc, disp, "router conservation violated");
+}
+
+#[test]
+fn multi_net_server_interleaves_without_cross_talk() {
+    let c = campaign(4);
+    let nets = ["mini_mlp", "mini_resnet18"];
+    let mut pairs = Vec::new();
+    for n in nets {
+        let res = c.construct(n).unwrap();
+        let sess = NetSession::new(&c.rt, &c.manifest, n, &c.codebook).unwrap();
+        let codes = sess.codes_tensor(&res.codes);
+        pairs.push((sess, codes));
+    }
+    let refs: Vec<(&mut NetSession, vq4all::tensor::Tensor)> = pairs
+        .iter_mut()
+        .map(|(s, c2)| (s, c2.clone()))
+        .collect();
+    let mut server = Server::new(
+        refs,
+        BatcherConfig {
+            max_batch: 8,
+            max_linger_ns: 10_000,
+        },
+    );
+    let mut rng = Rng::new(3);
+    let mut per_net = std::collections::BTreeMap::new();
+    for _ in 0..60 {
+        let n = nets[rng.below(2)];
+        *per_net.entry(n.to_string()).or_insert(0u64) += 1;
+        server.submit(n, rng.below(32)).unwrap();
+    }
+    server.drain_all().unwrap();
+    for n in nets {
+        assert_eq!(
+            server.stats[n].served,
+            per_net.get(n).copied().unwrap_or(0),
+            "{n}: served count mismatch"
+        );
+    }
+}
+
+#[test]
+fn tcp_server_answers_over_loopback() {
+    use std::net::{TcpListener, TcpStream};
+    use vq4all::serving::tcp::{client_request, Shutdown, TcpServer};
+
+    let c = campaign(4);
+    let res = c.construct("mini_mlp").unwrap();
+    let sess = NetSession::new(&c.rt, &c.manifest, "mini_mlp", &c.codebook).unwrap();
+    let codes = sess.codes_tensor(&res.codes);
+    let mut server = TcpServer::new(
+        vec![(sess, codes)],
+        BatcherConfig {
+            max_batch: 4,
+            max_linger_ns: 1_000_000, // 1ms
+        },
+    );
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let shutdown = Shutdown::new();
+    let sd = shutdown.clone();
+    let addr2 = addr.clone();
+    let client = std::thread::spawn(move || {
+        let mut conn = TcpStream::connect(&addr2).unwrap();
+        let mut oks = 0;
+        for row in 0..10usize {
+            let resp = client_request(&mut conn, "mini_mlp", row).unwrap();
+            assert!(resp.req_bool("ok").unwrap(), "request {row} failed: {resp}");
+            assert_eq!(resp.req_usize("row").unwrap(), row);
+            let cls = resp.req_usize("argmax").unwrap();
+            assert!(cls < 10, "argmax {cls} out of class range");
+            oks += 1;
+        }
+        // Unknown network -> structured error, connection stays usable.
+        let resp = client_request(&mut conn, "ghost", 0).unwrap();
+        assert!(!resp.req_bool("ok").unwrap());
+        sd.trigger();
+        let _ = TcpStream::connect(&addr2); // wake the acceptor
+        oks
+    });
+    let served = server.serve(listener, shutdown, 0).unwrap();
+    let oks = client.join().unwrap();
+    assert_eq!(oks, 10);
+    assert_eq!(served, 10);
+    assert_eq!(server.stats["mini_mlp"].served, 10);
+    assert_eq!(server.stats["ghost"].errors, 1);
+}

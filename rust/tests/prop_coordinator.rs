@@ -1,0 +1,294 @@
+//! Property tests over the coordinator's pure invariants (DESIGN.md §8):
+//! PNC freeze monotonicity, router conservation, batcher conservation,
+//! ratio/collapse identities, pack/unpack, and KDE sampling support.
+//!
+//! No artifacts needed — everything here is host-side logic.
+
+use vq4all::coordinator::PncScheduler;
+use vq4all::serving::batcher::{should_fire, Batch, BatcherConfig};
+use vq4all::serving::Router;
+use vq4all::testing::{proptest, Gen};
+use vq4all::util::rng::Rng;
+use vq4all::vq::pack::{pack_codes, unpack_codes};
+use vq4all::vq::ratios::{effective_ratios, hard_codes, max_ratios, FreezeState};
+use vq4all::vq::KdeSampler;
+use vq4all::{prop_assert, prop_assert_eq};
+
+fn gen_z(g: &mut Gen, s: usize, n: usize) -> Vec<f32> {
+    g.vec_uniform((s * n)..=(s * n), -12.0, 12.0)
+}
+
+#[test]
+fn pnc_freeze_is_monotone_and_sticky() {
+    proptest(|g| {
+        let s = g.usize_in(1, 40);
+        let n = g.usize_in(2, 8);
+        let alpha = g.f32_in(0.5, 0.99999) as f64;
+        let mut pnc = PncScheduler::new(s, alpha);
+        let mut prev: Vec<f32> = vec![0.0; s];
+        let mut prev_idx: Vec<i32> = vec![0; s];
+        for _ in 0..6 {
+            let z = gen_z(g, s, n);
+            pnc.scan(&z, n);
+            let now = pnc.frozen_tensor();
+            let idx = pnc.frozen_idx_tensor();
+            for gi in 0..s {
+                prop_assert!(
+                    now[gi] >= prev[gi],
+                    "group {gi} unfroze: {} -> {}",
+                    prev[gi],
+                    now[gi]
+                );
+                if prev[gi] > 0.5 {
+                    prop_assert_eq!(idx[gi], prev_idx[gi]);
+                }
+            }
+            prev = now;
+            prev_idx = idx;
+        }
+        // History is monotone nondecreasing.
+        for w in pnc.history.windows(2) {
+            prop_assert!(w[0] <= w[1], "history decreased: {:?}", pnc.history);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pnc_scan_freezes_exactly_the_groups_past_alpha() {
+    proptest(|g| {
+        let s = g.usize_in(1, 30);
+        let n = g.usize_in(2, 6);
+        let alpha = 0.99;
+        let z = gen_z(g, s, n);
+        let mut pnc = PncScheduler::new(s, alpha);
+        pnc.scan(&z, n);
+        for (gi, (r, m)) in max_ratios(&z, n).into_iter().enumerate() {
+            let frozen = pnc.state.is_frozen(gi);
+            prop_assert_eq!(frozen, (r as f64) > alpha);
+            if frozen {
+                prop_assert_eq!(pnc.state.frozen_idx[gi] as usize, m);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hard_codes_equal_argmax_when_unfrozen_and_frozen_slot_otherwise() {
+    proptest(|g| {
+        let s = g.usize_in(1, 30);
+        let n = g.usize_in(2, 6);
+        let k = 64u32;
+        let z = gen_z(g, s, n);
+        let assign = g.vec_u32((s * n)..=(s * n), k);
+        let mut fs = FreezeState::new(s);
+        for gi in 0..s {
+            if g.bool() {
+                fs.freeze(gi, g.usize_in(0, n - 1));
+            }
+        }
+        let codes = hard_codes(&z, &assign, n, &fs);
+        for gi in 0..s {
+            let row_z = &z[gi * n..(gi + 1) * n];
+            let slot = if fs.is_frozen(gi) {
+                fs.frozen_idx[gi] as usize
+            } else {
+                row_z
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0
+            };
+            prop_assert_eq!(codes[gi], assign[gi * n + slot]);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn softmax_rows_sum_to_one_and_are_positive() {
+    proptest(|g| {
+        let s = g.usize_in(1, 50);
+        let n = g.usize_in(1, 8);
+        let z = gen_z(g, s, n);
+        // No frozen groups -> effective_ratios is a plain row softmax.
+        let r = effective_ratios(&z, n, &FreezeState::new(s));
+        for gi in 0..s {
+            let row = &r[gi * n..(gi + 1) * n];
+            let sum: f32 = row.iter().sum();
+            prop_assert!((sum - 1.0).abs() < 1e-4, "row {gi} sums to {sum}");
+            prop_assert!(row.iter().all(|&x| x >= 0.0), "negative ratio");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn router_conserves_every_request_exactly_once() {
+    proptest(|g| {
+        let nnets = g.usize_in(1, 5);
+        let names: Vec<String> = (0..nnets).map(|i| format!("net{i}")).collect();
+        let refs: Vec<&str> = names.iter().map(|s| s.as_str()).collect();
+        let mut r = Router::new(&refs);
+        let total = g.usize_in(0, 200);
+        let mut ids = Vec::new();
+        for t in 0..total {
+            let net = &names[g.usize_in(0, nnets - 1)];
+            ids.push(r.submit(net, g.usize_in(0, 63), t as u64).unwrap());
+        }
+        // ids are unique
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        prop_assert_eq!(sorted.len(), ids.len());
+
+        let mut served = Vec::new();
+        while let Some(i) = r.pick() {
+            for req in r.drain(i, g.usize_in(1, 16)) {
+                served.push(req.id);
+            }
+        }
+        served.sort_unstable();
+        prop_assert_eq!(served, sorted);
+        let (acc, disp) = r.counters();
+        prop_assert_eq!(acc, disp);
+        prop_assert_eq!(r.total_pending(), 0usize);
+        Ok(())
+    });
+}
+
+#[test]
+fn router_pick_never_starves_a_nonempty_queue() {
+    proptest(|g| {
+        let names = ["a", "b", "c"];
+        let mut r = Router::new(&names);
+        // Heavy load on one queue, trickle on the others.
+        for t in 0..60 {
+            r.submit("a", t, t as u64).unwrap();
+        }
+        r.submit("b", 0, 0).unwrap();
+        r.submit("c", 0, 0).unwrap();
+        let mut served_nets = std::collections::BTreeSet::new();
+        // Drain with small batches; every queue must be picked eventually.
+        for _ in 0..100 {
+            match r.pick() {
+                Some(i) => {
+                    served_nets.insert(r.net_name(i).to_string());
+                    r.drain(i, g.usize_in(1, 4));
+                }
+                None => break,
+            }
+        }
+        prop_assert_eq!(served_nets.len(), 3usize);
+        Ok(())
+    });
+}
+
+#[test]
+fn batch_form_preserves_requests_and_pads_with_real_rows() {
+    proptest(|g| {
+        let device_batch = g.usize_in(1, 32);
+        let nreq = g.usize_in(1, device_batch);
+        let reqs: Vec<vq4all::serving::Request> = (0..nreq)
+            .map(|i| vq4all::serving::Request {
+                id: i as u64,
+                net: "x".into(),
+                row: g.usize_in(0, 99),
+                arrived_ns: i as u64,
+            })
+            .collect();
+        let rows: Vec<usize> = reqs.iter().map(|r| r.row).collect();
+        let b = Batch::form("x", reqs, device_batch);
+        prop_assert_eq!(b.rows.len(), device_batch);
+        prop_assert_eq!(b.padded, device_batch - nreq);
+        prop_assert_eq!(&b.rows[..nreq], &rows[..]);
+        // Padding repeats real rows only.
+        for &row in &b.rows[nreq..] {
+            prop_assert!(rows.contains(&row), "padding invented row {row}");
+        }
+        let u = b.utilization();
+        prop_assert!(u > 0.0 && u <= 1.0, "utilization {u} out of range");
+        Ok(())
+    });
+}
+
+#[test]
+fn should_fire_is_monotone_in_depth_and_age() {
+    proptest(|g| {
+        let cfg = BatcherConfig {
+            max_batch: g.usize_in(1, 64),
+            max_linger_ns: g.usize_in(0, 1_000_000) as u64,
+        };
+        let depth = g.usize_in(1, 128);
+        let arrival = g.usize_in(0, 1_000_000) as u64;
+        let now = arrival + g.usize_in(0, 2_000_000) as u64;
+        let fired = should_fire(&cfg, depth, arrival, now);
+        // More depth never un-fires.
+        if fired {
+            prop_assert!(should_fire(&cfg, depth + 1, arrival, now), "deeper un-fired");
+            prop_assert!(should_fire(&cfg, depth, arrival, now + 1), "older un-fired");
+        }
+        // Full batch always fires; empty never does.
+        prop_assert!(should_fire(&cfg, cfg.max_batch, now, now), "full batch must fire");
+        prop_assert!(!should_fire(&cfg, 0, 0, u64::MAX), "empty fired");
+        Ok(())
+    });
+}
+
+#[test]
+fn pack_unpack_identity_all_bitwidths() {
+    proptest(|g| {
+        let bits = g.usize_in(1, 24) as u32;
+        let max = if bits >= 24 { 1 << 24 } else { 1u32 << bits };
+        let codes = g.vec_u32(0..=300, max);
+        let p = pack_codes(&codes, bits);
+        prop_assert_eq!(unpack_codes(&p), codes);
+        // Tightness: byte count is ceil(len*bits/8).
+        prop_assert_eq!(p.bytes(), (codes.len() * bits as usize).div_ceil(8));
+        Ok(())
+    });
+}
+
+#[test]
+fn kde_samples_stay_within_plausible_support() {
+    proptest(|g| {
+        let d = [1usize, 2, 4][g.usize_in(0, 2)];
+        let npts = g.usize_in(8, 200) / d * d;
+        let pool = g.vec_uniform(npts..=npts, -1.0, 1.0);
+        let h = 0.01f32;
+        let kde = KdeSampler::new(pool.clone(), d, h);
+        let mut rng = Rng::new(g.rng.next_u64());
+        let cb = kde.sample_codebook(32, &mut rng);
+        // Every codeword = some pool point + N(0, h): must lie within
+        // pool range +- 6h.
+        let (lo, hi) = (-1.0 - 6.0 * h, 1.0 + 6.0 * h);
+        for (i, w) in cb.words.iter().enumerate() {
+            prop_assert!(
+                (lo..=hi).contains(w),
+                "codeword elem {i} = {w} outside KDE support"
+            );
+        }
+        prop_assert_eq!(cb.words.len(), 32 * d);
+        Ok(())
+    });
+}
+
+#[test]
+fn freeze_state_progress_counts_match() {
+    proptest(|g| {
+        let s = g.usize_in(1, 64);
+        let mut fs = FreezeState::new(s);
+        let mut expected = 0usize;
+        for gi in 0..s {
+            if g.bool() {
+                fs.freeze(gi, 0);
+                expected += 1;
+            }
+        }
+        prop_assert_eq!(fs.num_frozen(), expected);
+        prop_assert_eq!(fs.all_frozen(), expected == s);
+        Ok(())
+    });
+}

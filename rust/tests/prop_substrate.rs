@@ -1,0 +1,251 @@
+//! Property tests over the substrate layers: quantization baselines
+//! (uniform / ternary / PQF-style permutation), host tensor ops, k-means,
+//! and the ROM/area model — the pieces every experiment harness rests on.
+
+use vq4all::quant::pvq::{
+    apply_col_permutation, random_permutation, undo_col_permutation,
+    variance_balancing_permutation,
+};
+use vq4all::quant::ternary::{dequantize as tern_dequant, ternarize, ternary_mse};
+use vq4all::quant::uniform::{self, Granularity};
+use vq4all::rom::AreaModel;
+use vq4all::tensor::ops;
+use vq4all::testing::{proptest, Gen};
+use vq4all::vq::kmeans::{kmeans, KmeansOpts};
+use vq4all::{prop_assert, prop_assert_eq};
+
+fn weights(g: &mut Gen, len: usize) -> Vec<f32> {
+    let mut w = g.vec_normal(len..=len);
+    for v in w.iter_mut() {
+        *v *= 0.05; // realistic weight scale
+    }
+    w
+}
+
+#[test]
+fn uniform_quant_error_bounded_by_half_step() {
+    proptest(|g| {
+        let bits = g.usize_in(2, 8) as u32;
+        let len = g.usize_in(1, 400);
+        let w = weights(g, len);
+        let q = uniform::quantize(&w, bits, Granularity::PerTensor);
+        let mut back = vec![0.0; w.len()];
+        uniform::dequantize(&q, Granularity::PerTensor, &mut back);
+        let step = q.scales[0];
+        for (i, (&a, &b)) in w.iter().zip(&back).enumerate() {
+            prop_assert!(
+                (a - b).abs() <= step * 0.5 + 1e-6,
+                "elem {i}: |{a} - {b}| > step/2 = {}",
+                step * 0.5
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn uniform_quant_mse_decreases_with_bits() {
+    proptest(|g| {
+        let len = g.usize_in(64, 400);
+        let w = weights(g, len);
+        let mut prev = f64::INFINITY;
+        for bits in [1u32, 2, 3, 4, 6, 8] {
+            let mse = uniform::quant_mse(&w, bits, Granularity::PerTensor);
+            prop_assert!(
+                mse <= prev + 1e-12,
+                "mse rose from {prev} to {mse} at {bits} bits"
+            );
+            prev = mse;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn per_row_uniform_never_worse_than_per_tensor() {
+    proptest(|g| {
+        let rows = g.usize_in(2, 8);
+        let cols = g.usize_in(4, 32);
+        // Rows at very different scales — the per-channel motivation.
+        let mut w = Vec::new();
+        for r in 0..rows {
+            let scale = 0.01 * (r + 1) as f32 * (r + 1) as f32;
+            for v in g.vec_normal(cols..=cols) {
+                w.push(v * scale);
+            }
+        }
+        let bits = g.usize_in(2, 6) as u32;
+        let pt = uniform::quant_mse(&w, bits, Granularity::PerTensor);
+        let pr = uniform::quant_mse(&w, bits, Granularity::PerRow { rows });
+        prop_assert!(pr <= pt * 1.0001, "per-row {pr} worse than per-tensor {pt}");
+        Ok(())
+    });
+}
+
+#[test]
+fn ternary_roundtrip_uses_three_levels_and_optimal_scale_beats_naive() {
+    proptest(|g| {
+        let len = g.usize_in(8, 300);
+        let w = weights(g, len);
+        let t = ternarize(&w, 0.7);
+        let mut back = vec![0.0; w.len()];
+        tern_dequant(&t, &mut back);
+        let uniq: std::collections::BTreeSet<i64> = back
+            .iter()
+            .map(|&x| (x * 1e4).round() as i64)
+            .collect();
+        prop_assert!(uniq.len() <= 3, "more than 3 levels: {uniq:?}");
+        let mse = ternary_mse(&w, 0.7);
+        let zero_mse: f64 =
+            w.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / w.len() as f64;
+        prop_assert!(mse <= zero_mse + 1e-12, "ternary worse than all-zeros");
+        Ok(())
+    });
+}
+
+#[test]
+fn pqf_permutation_roundtrips_and_reduces_bucket_variance_spread() {
+    proptest(|g| {
+        let rows = g.usize_in(2, 10);
+        let d = [2usize, 4][g.usize_in(0, 1)];
+        let cols = d * g.usize_in(2, 8);
+        let w = weights(g, rows * cols);
+
+        // Round-trip identity for any permutation.
+        let perm = random_permutation(cols, &mut g.rng);
+        let p = apply_col_permutation(&w, rows, cols, &perm);
+        let back = undo_col_permutation(&p, rows, cols, &perm);
+        prop_assert_eq!(back, w.clone());
+
+        // The variance-balancing permutation is a valid permutation.
+        let vb = variance_balancing_permutation(&w, rows, cols, d);
+        let mut sorted = vb.clone();
+        sorted.sort_unstable();
+        prop_assert_eq!(sorted, (0..cols).collect::<Vec<_>>());
+        Ok(())
+    });
+}
+
+#[test]
+fn kmeans_mse_never_increases_with_k_and_beats_random_codebook() {
+    proptest(|g| {
+        let d = 2usize;
+        let n = g.usize_in(40, 200);
+        let w = weights(g, n * d);
+        let opts = KmeansOpts::default();
+        let m2 = kmeans(&w, d, 2, &opts).mse;
+        let m8 = kmeans(&w, d, 8, &opts).mse;
+        let m32 = kmeans(&w, d, 32.min(n), &opts).mse;
+        prop_assert!(m8 <= m2 * 1.05, "k=8 ({m8}) worse than k=2 ({m2})");
+        prop_assert!(m32 <= m8 * 1.05, "k=32 ({m32}) worse than k=8 ({m8})");
+        Ok(())
+    });
+}
+
+#[test]
+fn host_matmul_matches_naive_and_softmax_normalizes() {
+    proptest(|g| {
+        let (m, k, n) = (g.usize_in(1, 6), g.usize_in(1, 6), g.usize_in(1, 6));
+        let a = g.vec_normal((m * k)..=(m * k));
+        let b = g.vec_normal((k * n)..=(k * n));
+        let mut out = vec![0.0; m * n];
+        ops::matmul(&a, &b, m, k, n, &mut out);
+        for i in 0..m {
+            for j in 0..n {
+                let mut want = 0.0f32;
+                for l in 0..k {
+                    want += a[i * k + l] * b[l * n + j];
+                }
+                prop_assert!(
+                    (out[i * n + j] - want).abs() < 1e-3,
+                    "({i},{j}): {} vs {want}",
+                    out[i * n + j]
+                );
+            }
+        }
+        let mut x = g.vec_normal((m * n)..=(m * n));
+        ops::softmax_rows(&mut x, m, n);
+        for i in 0..m {
+            let s: f32 = x[i * n..(i + 1) * n].iter().sum();
+            prop_assert!((s - 1.0).abs() < 1e-4, "row {i} sums to {s}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn argmin_n_returns_sorted_by_distance_prefix() {
+    proptest(|g| {
+        let len = g.usize_in(1, 50);
+        let xs = g.vec_normal(len..=len);
+        let n = g.usize_in(1, len);
+        let idx = ops::argmin_n(&xs, n);
+        prop_assert_eq!(idx.len(), n);
+        // Values at returned indices are nondecreasing and are the n smallest.
+        for w in idx.windows(2) {
+            prop_assert!(xs[w[0]] <= xs[w[1]], "not sorted");
+        }
+        let mut all: Vec<f32> = xs.clone();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        prop_assert!(
+            (xs[idx[n - 1]] - all[n - 1]).abs() < 1e-7,
+            "n-th smallest mismatch"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn cosine_and_norm_identities() {
+    proptest(|g| {
+        let len = g.usize_in(1, 32);
+        let a = g.vec_normal(len..=len);
+        let c = ops::cosine(&a, &a);
+        if ops::norm(&a) > 1e-3 {
+            prop_assert!((c - 1.0).abs() < 1e-4, "cos(a,a) = {c}");
+            let neg: Vec<f32> = a.iter().map(|x| -x).collect();
+            let cn = ops::cosine(&a, &neg);
+            prop_assert!((cn + 1.0).abs() < 1e-4, "cos(a,-a) = {cn}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn frechet_distance_zero_for_identical_clouds_and_grows_with_shift() {
+    proptest(|g| {
+        let n = g.usize_in(20, 200);
+        let pts = g.vec_normal((n * 2)..=(n * 2));
+        let (mu, cov) = ops::mean_cov_2d(&pts);
+        let d0 = ops::frechet_distance_2d(mu, cov, mu, cov);
+        prop_assert!(d0.abs() < 1e-3, "FD(x,x) = {d0}");
+        let shift = 1.0 + g.f32_in(0.0, 2.0);
+        let moved: Vec<f32> = pts.iter().map(|&x| x + shift).collect();
+        let (mu2, cov2) = ops::mean_cov_2d(&moved);
+        let d1 = ops::frechet_distance_2d(mu, cov, mu2, cov2);
+        // Mean shift of `shift` in both dims contributes 2*shift^2.
+        prop_assert!(
+        d1 >= (2.0 * shift * shift) as f64 * 0.8,
+            "FD {d1} too small for shift {shift}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn area_model_rom_always_denser_than_sram() {
+    proptest(|g| {
+        let bytes = g.usize_in(1024, 64 << 20);
+        let m = AreaModel::default();
+        prop_assert!(
+            m.rom_mm2(bytes) < m.sram_mm2(bytes),
+            "ROM must be denser: {} vs {}",
+            m.rom_mm2(bytes),
+            m.sram_mm2(bytes)
+        );
+        // Monotone in bytes.
+        prop_assert!(m.rom_mm2(bytes * 2) > m.rom_mm2(bytes), "ROM not monotone");
+        prop_assert!(m.sram_mm2(bytes * 2) > m.sram_mm2(bytes), "SRAM not monotone");
+        Ok(())
+    });
+}
