@@ -36,6 +36,7 @@ fn main() -> anyhow::Result<()> {
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("out", "", "optional output directory for packed codes + report")
         .opt("seed", "2024", "codebook sampling seed")
+        .threads_opt()
         .flag("rust-codebook", "rebuild the codebook natively instead of using the python export")
         .parse()?;
 
@@ -43,6 +44,7 @@ fn main() -> anyhow::Result<()> {
         steps: args.usize_or("steps", 200)?,
         alpha: args.f64_or("alpha", 0.99)?,
         eval_interval: 0,
+        threads: args.parallelism()?.threads,
         ..CampaignConfig::default()
     };
     let dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
@@ -70,7 +72,13 @@ fn main() -> anyhow::Result<()> {
     // artifacts' candidate tables match). `--rust-codebook` rebuilds it
     // natively and reports the distribution shift vs the export.
     let refs: Vec<&str> = nets.iter().map(|s| s.as_str()).collect();
-    let native = Campaign::build_codebook_from(&campaign.manifest, &refs, args.usize_or("seed", 2024)? as u64)?;
+    let pool = args.parallelism()?.pool();
+    let native = Campaign::build_codebook_from_with(
+        &campaign.manifest,
+        &refs,
+        args.usize_or("seed", 2024)? as u64,
+        pool.as_ref(),
+    )?;
     {
         let a = campaign.codebook.as_f32()?;
         let b = native.as_f32()?;

@@ -22,11 +22,13 @@ fn main() -> anyhow::Result<()> {
         .opt("alpha", "0.99", "PNC freeze threshold (schedule-scaled; paper 0.9999)")
         .opt("net", "mini_mlp", "zoo network to construct")
         .opt("artifacts", "artifacts", "artifacts directory")
+        .threads_opt()
         .parse()?;
 
     let cfg = CampaignConfig {
         steps: args.usize_or("steps", 120)?,
         alpha: args.f64_or("alpha", 0.99)?,
+        threads: args.parallelism()?.threads,
         ..CampaignConfig::default()
     };
     let campaign = Campaign::load(std::path::Path::new(args.get_or("artifacts", "artifacts")), cfg)?;

@@ -1,35 +1,106 @@
 //! E13 — hot-path microbenchmarks (the §Perf substrate):
 //!
-//! * host k-means assignment sweep (the Table-1/Fig-2 analysis loop)
+//! * **serial vs parallel** candidate assignment (Eq. 5 distance sweep),
+//!   k-means, KDE density, and the PNC scan — the in-house-pool hot
+//!   paths; the comparison lands in `BENCH_hotpath.json` so later PRs
+//!   have a perf trajectory (`VQ4ALL_BENCH_JSON` overrides the path)
 //! * packed-code decode (the serving weight-stream path)
 //! * host weighted reconstruct (checkpoint validation path)
-//! * PNC scan (the per-interval coordinator cost)
 //! * PJRT step latency: `train_step` / `eval_hard` / `infer_hard` on
-//!   mini_mlp (the campaign's per-step floor)
+//!   mini_mlp (the campaign's per-step floor; skipped without artifacts)
 //! * router submit/dispatch throughput
 
 mod common;
 
-use vq4all::bench::Bencher;
+use vq4all::bench::{Bencher, Comparison};
 use vq4all::coordinator::calib::CalibStream;
 use vq4all::coordinator::{NetSession, PncScheduler};
 use vq4all::serving::Router;
 use vq4all::util::rng::Rng;
+use vq4all::util::threadpool::ThreadPool;
+use vq4all::vq::assign::{candidates_with, AssignInit};
+use vq4all::vq::kde::KdeSampler;
+use vq4all::vq::kmeans::{kmeans_with, KmeansOpts};
 use vq4all::vq::pack::{pack_codes, unpack_codes};
-use vq4all::vq::ratios::max_ratios;
-use vq4all::vq::{kmeans::KmeansOpts, Codebook};
+use vq4all::vq::ratios::max_ratios_with;
+use vq4all::vq::Codebook;
 
 fn main() -> anyhow::Result<()> {
     let mut b = Bencher::new();
     let mut rng = Rng::new(0xB3);
+    let pool = ThreadPool::new(0); // all cores
+    let threads = pool.threads();
+    let mut comparisons: Vec<Comparison> = Vec::new();
+    println!("hotpath: {threads} worker threads available");
 
-    // --- pure-host paths ---------------------------------------------------
+    // --- serial vs parallel: candidate assignment (Eq. 5) ------------------
     let mut flat = vec![0.0f32; 4 * 20_000];
     rng.fill_normal(&mut flat);
-    b.bench("kmeans k=64 d=4 s=20k (full run)", || {
-        let _ = vq4all::vq::kmeans::kmeans(&flat, 4, 64, &KmeansOpts { max_iters: 5, ..Default::default() });
+    let cb = {
+        let mut words = vec![0.0f32; 256 * 4];
+        rng.fill_normal(&mut words);
+        Codebook::new(256, 4, words)
+    };
+    let cand_serial = b.bench("candidates s=20k k=256 n=8 [serial]", || {
+        let mut r = Rng::new(1);
+        let c = candidates_with(&flat, &cb, 8, AssignInit::Euclid, &mut r, None);
+        std::hint::black_box(c.assign.len());
+    });
+    let cand_par = b.bench("candidates s=20k k=256 n=8 [parallel]", || {
+        let mut r = Rng::new(1);
+        let c = candidates_with(&flat, &cb, 8, AssignInit::Euclid, &mut r, Some(&pool));
+        std::hint::black_box(c.assign.len());
+    });
+    comparisons.push(Comparison::new(
+        "candidate_assignment",
+        &cand_serial,
+        &cand_par,
+        threads,
+    ));
+
+    // --- serial vs parallel: k-means (pool pre-created, so the timed
+    // region measures the sweeps, not thread spawn/teardown) ----------------
+    let km_opts = KmeansOpts {
+        max_iters: 10,
+        ..Default::default()
+    };
+    let km_serial = b.bench("kmeans k=64 d=4 s=20k [serial]", || {
+        std::hint::black_box(kmeans_with(&flat, 4, 64, &km_opts, None).mse);
+    });
+    let km_par = b.bench("kmeans k=64 d=4 s=20k [parallel]", || {
+        std::hint::black_box(kmeans_with(&flat, 4, 64, &km_opts, Some(&pool)).mse);
+    });
+    comparisons.push(Comparison::new("kmeans", &km_serial, &km_par, threads));
+
+    // --- serial vs parallel: KDE density -----------------------------------
+    let kde = KdeSampler::new(flat[..4 * 20_000].to_vec(), 4, 0.05);
+    let q = [0.1f32, -0.3, 0.2, 0.05];
+    let kde_serial = b.bench("kde density n=20k d=4 [serial]", || {
+        std::hint::black_box(kde.density_with(&q, None));
+    });
+    let kde_par = b.bench("kde density n=20k d=4 [parallel]", || {
+        std::hint::black_box(kde.density_with(&q, Some(&pool)));
+    });
+    comparisons.push(Comparison::new("kde_density", &kde_serial, &kde_par, threads));
+
+    // --- serial vs parallel: PNC scan --------------------------------------
+    let n = 8;
+    let mut z = vec![0.0f32; 57_344 * n];
+    rng.fill_normal(&mut z);
+    let scan_serial = b.bench("PNC scan S=57k n=8 [serial]", || {
+        let mut pnc = PncScheduler::new(57_344, 0.9999);
+        std::hint::black_box(pnc.scan_with(&z, n, None));
+    });
+    let scan_par = b.bench("PNC scan S=57k n=8 [parallel]", || {
+        let mut pnc = PncScheduler::new(57_344, 0.9999);
+        std::hint::black_box(pnc.scan_with(&z, n, Some(&pool)));
+    });
+    comparisons.push(Comparison::new("pnc_scan", &scan_serial, &scan_par, threads));
+    b.bench("max_ratios S=57k n=8 [parallel]", || {
+        std::hint::black_box(max_ratios_with(&z, n, Some(&pool)).len());
     });
 
+    // --- pure-host serving paths -------------------------------------------
     let codes: Vec<u32> = (0..100_000).map(|_| rng.below(256) as u32).collect();
     let packed = pack_codes(&codes, 8);
     b.bench("unpack 100k codes @8b", || {
@@ -37,25 +108,9 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(v.len());
     });
 
-    let cb = {
-        let mut words = vec![0.0f32; 256 * 4];
-        rng.fill_normal(&mut words);
-        Codebook::new(256, 4, words)
-    };
     let mut out = vec![0.0f32; codes.len() * 4];
     b.bench("hard decode 100k codes (400k weights)", || {
         cb.decode(&codes, &mut out);
-    });
-
-    let n = 8;
-    let mut z = vec![0.0f32; 57_344 * n];
-    rng.fill_normal(&mut z);
-    b.bench("PNC scan S=57k n=8 (softmax+argmax)", || {
-        let mut pnc = PncScheduler::new(57_344, 0.9999);
-        std::hint::black_box(pnc.scan(&z, n));
-    });
-    b.bench("max_ratios S=57k n=8", || {
-        std::hint::black_box(max_ratios(&z, n).len());
     });
 
     // --- router -------------------------------------------------------------
@@ -119,5 +174,19 @@ fn main() -> anyhow::Result<()> {
     }
 
     b.report();
+    println!("\n== serial vs parallel ({threads} threads) ==");
+    for c in &comparisons {
+        println!(
+            "  {:<22} serial {:>12.0}ns  parallel {:>12.0}ns  speedup {:.2}x",
+            c.name,
+            c.serial_ns,
+            c.parallel_ns,
+            c.speedup()
+        );
+    }
+    let json_path = std::env::var("VQ4ALL_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    b.write_json(std::path::Path::new(&json_path), &comparisons)?;
+    println!("bench report written to {json_path}");
     Ok(())
 }

@@ -5,8 +5,10 @@
 //! mean/p50/p99 reporting, plus a table renderer shared by the paper
 //! experiment harnesses.
 
+use std::path::Path;
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::stats;
 
 /// One measured benchmark.
@@ -95,11 +97,79 @@ impl Bencher {
         &self.results
     }
 
+    /// Dump every recorded result (plus optional serial-vs-parallel
+    /// comparisons) as a JSON report, so later PRs get a perf trajectory
+    /// (`BENCH_hotpath.json` is the first consumer).
+    pub fn write_json(&self, path: &Path, comparisons: &[Comparison]) -> anyhow::Result<()> {
+        let benchmarks = Json::Arr(
+            self.results
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("name", Json::str(r.name.clone())),
+                        ("iters", Json::num(r.iters as f64)),
+                        ("mean_ns", Json::num(r.mean_ns)),
+                        ("p50_ns", Json::num(r.p50_ns)),
+                        ("p99_ns", Json::num(r.p99_ns)),
+                        ("min_ns", Json::num(r.min_ns)),
+                    ])
+                })
+                .collect(),
+        );
+        let comps = Json::Arr(
+            comparisons
+                .iter()
+                .map(|c| {
+                    Json::obj(vec![
+                        ("name", Json::str(c.name.clone())),
+                        ("serial_ns", Json::num(c.serial_ns)),
+                        ("parallel_ns", Json::num(c.parallel_ns)),
+                        ("threads", Json::num(c.threads as f64)),
+                        ("speedup", Json::num(c.speedup())),
+                    ])
+                })
+                .collect(),
+        );
+        let doc = Json::obj(vec![
+            ("target_ms", Json::num(self.target_ms)),
+            ("benchmarks", benchmarks),
+            ("comparisons", comps),
+        ]);
+        std::fs::write(path, doc.to_string())
+            .map_err(|e| anyhow::anyhow!("writing bench report {path:?}: {e}"))?;
+        Ok(())
+    }
+
     pub fn report(&self) {
         println!("\n== bench summary ({} benchmarks) ==", self.results.len());
         for r in &self.results {
             println!("  {:<40} mean {}", r.name, fmt_ns(r.mean_ns));
         }
+    }
+}
+
+/// One serial-vs-parallel measurement pair (mean ns per iteration).
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    pub name: String,
+    pub serial_ns: f64,
+    pub parallel_ns: f64,
+    /// Worker threads the parallel run used.
+    pub threads: usize,
+}
+
+impl Comparison {
+    pub fn new(name: &str, serial: &BenchResult, parallel: &BenchResult, threads: usize) -> Self {
+        Comparison {
+            name: name.to_string(),
+            serial_ns: serial.mean_ns,
+            parallel_ns: parallel.mean_ns,
+            threads,
+        }
+    }
+
+    pub fn speedup(&self) -> f64 {
+        self.serial_ns / self.parallel_ns.max(1e-9)
     }
 }
 
@@ -149,7 +219,7 @@ impl Table {
             cells
                 .iter()
                 .zip(widths)
-                .map(|(c, w)| format!("{c:>w$}"))
+                .map(|(c, &w)| format!("{c:>w$}"))
                 .collect::<Vec<_>>()
                 .join("  ")
         };
@@ -201,6 +271,28 @@ mod tests {
     fn table_checks_columns() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        std::env::set_var("VQ4ALL_BENCH_MS", "5");
+        let mut b = Bencher::new();
+        let serial = b.bench("kernel [serial]", || {
+            std::hint::black_box(0u64);
+        });
+        let parallel = b.bench("kernel [parallel]", || {
+            std::hint::black_box(0u64);
+        });
+        let comp = Comparison::new("kernel", &serial, &parallel, 4);
+        assert!(comp.speedup() > 0.0);
+        let path = std::env::temp_dir().join("vq4all_bench_report_test.json");
+        b.write_json(&path, &[comp]).unwrap();
+        let doc = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.req_arr("benchmarks").unwrap().len(), 2);
+        let c = &doc.req_arr("comparisons").unwrap()[0];
+        assert_eq!(c.req_str("name").unwrap(), "kernel");
+        assert_eq!(c.req_usize("threads").unwrap(), 4);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

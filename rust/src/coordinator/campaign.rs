@@ -20,6 +20,7 @@ use crate::runtime::client::Runtime;
 use crate::tensor::{io, Tensor};
 use crate::util::config::CampaignConfig;
 use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
 use crate::vq::pack::{pack_codes, PackedCodes, SizeReport};
 use crate::vq::KdeSampler;
 
@@ -99,11 +100,24 @@ impl Campaign {
 
     /// Rebuild the universal codebook in Rust from the zoo's float
     /// sub-vectors (§4.1 done natively — used by Table 6's combination
-    /// study and to cross-check the python sampler).
+    /// study and to cross-check the python sampler).  Serial entry point;
+    /// output is identical to [`Campaign::build_codebook_from_with`] at
+    /// any thread count.
     pub fn build_codebook_from(
         manifest: &Manifest,
         nets: &[&str],
         seed: u64,
+    ) -> anyhow::Result<Tensor> {
+        Self::build_codebook_from_with(manifest, nets, seed, None)
+    }
+
+    /// Native KDE codebook build with the sample-pool construction and
+    /// codebook draw spread over a worker pool.
+    pub fn build_codebook_from_with(
+        manifest: &Manifest,
+        nets: &[&str],
+        seed: u64,
+        pool: Option<&ThreadPool>,
     ) -> anyhow::Result<Tensor> {
         let cfg = &manifest.config;
         let mut flats = Vec::new();
@@ -115,9 +129,9 @@ impl Campaign {
         let refs: Vec<&[f32]> = flats.iter().map(|v| v.as_slice()).collect();
         let mut rng = Rng::new(seed);
         let per_net = 10 * cfg.k; // sub-vectors per net, paper's 10*k*d weights
-        let pool = KdeSampler::pool_from_networks(&refs, cfg.d, per_net, &mut rng);
-        let kde = KdeSampler::new(pool, cfg.d, cfg.bandwidth as f32);
-        let cb = kde.sample_codebook(cfg.k, &mut rng);
+        let kde_pool = KdeSampler::pool_from_networks_with(&refs, cfg.d, per_net, &mut rng, pool);
+        let kde = KdeSampler::new(kde_pool, cfg.d, cfg.bandwidth as f32);
+        let cb = kde.sample_codebook_with(cfg.k, &mut rng, pool);
         Ok(Tensor::from_f32(&[cfg.k, cfg.d], cb.words))
     }
 
@@ -153,6 +167,10 @@ impl Campaign {
     pub fn construct_with_session(&self, mut sess: NetSession) -> anyhow::Result<NetResult> {
         let name = sess.net.name.clone();
         let name = name.as_str();
+        // One worker pool for the whole construction run: the PNC scans
+        // and the §5.1 special-layer k-means below share it.
+        let pool = self.cfg.parallelism().pool();
+        let pool = pool.as_ref();
         let w = self.cfg.loss_weights.unwrap_or_else(|| {
             Self::task_loss_weights(
                 &sess.net.task,
@@ -195,7 +213,7 @@ impl Campaign {
             loss_curve.push(m);
 
             if self.cfg.pnc_interval > 0 && (step + 1) % self.cfg.pnc_interval == 0 {
-                let newly = pnc.scan(sess.z(), sess.n);
+                let newly = pnc.scan_with(sess.z(), sess.n, pool);
                 if newly > 0 {
                     sess.set_freeze(pnc.frozen_tensor(), pnc.frozen_idx_tensor());
                 }
@@ -229,7 +247,7 @@ impl Campaign {
         let mut other_bytes: usize = sess.net.others.iter().map(|o| o.elems() * 4).sum();
         let mut special_codebook_bytes = 0usize;
         if let Some((ks, ds)) = self.cfg.output_codebook {
-            for sl in crate::quant::special::compress_output_layers(&mut sess, ks, ds)? {
+            for sl in crate::quant::special::compress_output_layers(&mut sess, ks, ds, pool)? {
                 crate::log_info!(
                     "campaign",
                     "[{name}] special layer {}: {} -> {} bytes ({:.1}x, mse {:.2e})",

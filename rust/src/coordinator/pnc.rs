@@ -12,7 +12,8 @@
 //! The paper's DKM ablation ("no PNC") is `alpha > 1`: nothing freezes
 //! during training and the final hard collapse happens in one shot.
 
-use crate::vq::ratios::{max_ratios, FreezeState};
+use crate::util::threadpool::ThreadPool;
+use crate::vq::ratios::{max_ratios_with, FreezeState};
 
 /// Scheduler state + policy for one network.
 #[derive(Clone, Debug)]
@@ -40,8 +41,18 @@ impl PncScheduler {
     /// Scan logits `z (s, n)` and freeze qualifying groups.
     /// Returns how many *new* groups were frozen in this scan.
     pub fn scan(&mut self, z: &[f32], n: usize) -> usize {
+        self.scan_with(z, n, None)
+    }
+
+    /// [`PncScheduler::scan`] with the softmax/argmax sweep spread over a
+    /// worker pool (the construction-sweep hot path: the coordinator
+    /// reads `z` back every `pnc_interval` steps and scans all `s`
+    /// groups).  Freeze decisions are identical to the serial path — the
+    /// ratio sweep is row-independent and the freeze loop itself stays
+    /// sequential.
+    pub fn scan_with(&mut self, z: &[f32], n: usize, pool: Option<&ThreadPool>) -> usize {
         let before = self.state.num_frozen();
-        for (g, (r, m)) in max_ratios(z, n).into_iter().enumerate() {
+        for (g, (r, m)) in max_ratios_with(z, n, pool).into_iter().enumerate() {
             if !self.state.is_frozen(g) && (r as f64) > self.alpha {
                 self.state.freeze(g, m);
             }
@@ -116,6 +127,24 @@ mod tests {
         let z = z_rows(&[[50.0, 0., 0., 0.], [50.0, 0., 0., 0.], [50.0, 0., 0., 0.]]);
         assert_eq!(s.scan(&z, 4), 0);
         assert_eq!(s.num_frozen(), 0);
+    }
+
+    #[test]
+    fn pooled_scan_matches_serial() {
+        let mut rng = crate::util::rng::Rng::new(21);
+        let (s, n) = (2000, 4);
+        let mut z = vec![0.0f32; s * n];
+        rng.fill_normal(&mut z);
+        for v in z.iter_mut() {
+            *v *= 8.0; // push some rows past alpha
+        }
+        let mut serial = PncScheduler::new(s, 0.9);
+        let mut pooled = PncScheduler::new(s, 0.9);
+        let pool = ThreadPool::new(4);
+        assert_eq!(serial.scan(&z, n), pooled.scan_with(&z, n, Some(&pool)));
+        assert_eq!(serial.state.frozen, pooled.state.frozen);
+        assert_eq!(serial.state.frozen_idx, pooled.state.frozen_idx);
+        assert!(serial.num_frozen() > 0, "workload should freeze something");
     }
 
     #[test]

@@ -36,6 +36,7 @@ fn main() -> anyhow::Result<()> {
     .opt("seed", "", "campaign seed override")
     .opt("out", "", "output path (codebook/report subcommands)")
     .opt("codes", "", "codes .vqt path (eval subcommand)")
+    .threads_opt()
     .flag("no-pnc", "disable PNC (DKM-style ablation)")
     .flag("version", "print version");
 
@@ -74,6 +75,11 @@ fn main() -> anyhow::Result<()> {
     if args.has("no-pnc") {
         cfg.disable_pnc = true;
     }
+    if let Some(t) = args.get("threads") {
+        if !t.is_empty() {
+            cfg.threads = args.parallelism()?.threads;
+        }
+    }
 
     match cmd {
         "check" => check(&dir),
@@ -108,7 +114,8 @@ fn codebook(dir: &Path, args: &vq4all::util::cli::Args) -> anyhow::Result<()> {
         _ => manifest.networks.iter().map(|n| n.name.clone()).collect(),
     };
     let refs: Vec<&str> = nets.iter().map(|s| s.as_str()).collect();
-    let cb = Campaign::build_codebook_from(&manifest, &refs, 2024)?;
+    let pool = args.parallelism()?.pool();
+    let cb = Campaign::build_codebook_from_with(&manifest, &refs, 2024, pool.as_ref())?;
     let out = PathBuf::from(args.get_or("out", "codebook.vqt"));
     io::write_tensor(&out, &cb)?;
     println!(

@@ -12,7 +12,8 @@
 
 use crate::coordinator::session::NetSession;
 use crate::tensor::Tensor;
-use crate::vq::kmeans::{kmeans, KmeansOpts};
+use crate::util::threadpool::ThreadPool;
+use crate::vq::kmeans::{kmeans_with, KmeansOpts};
 use crate::vq::pack::{pack_codes, PackedCodes};
 
 /// Per-layer VQ result for one special layer.
@@ -59,6 +60,7 @@ pub fn compress_special_layer(
     name: &str,
     k: usize,
     d: usize,
+    pool: Option<&ThreadPool>,
 ) -> anyhow::Result<SpecialLayer> {
     let state_name = format!("other:{name}");
     let t = sess.state_by_name(&state_name).clone();
@@ -66,7 +68,13 @@ pub fn compress_special_layer(
     let usable = (w.len() / d) * d;
     anyhow::ensure!(usable > 0, "{name}: too small for d={d}");
 
-    let res = kmeans(&w[..usable], d, k.min(usable / d), &KmeansOpts::default());
+    let res = kmeans_with(
+        &w[..usable],
+        d,
+        k.min(usable / d),
+        &KmeansOpts::default(),
+        pool,
+    );
     let mut recon = w.to_vec();
     let decoded = res.codebook.decode_vec(&res.codes);
     recon[..usable].copy_from_slice(&decoded);
@@ -97,10 +105,11 @@ pub fn compress_output_layers(
     sess: &mut NetSession,
     k: usize,
     d: usize,
+    pool: Option<&ThreadPool>,
 ) -> anyhow::Result<Vec<SpecialLayer>> {
     let mut out = Vec::new();
     for name in special_candidates(sess) {
-        out.push(compress_special_layer(sess, &name, k, d)?);
+        out.push(compress_special_layer(sess, &name, k, d, pool)?);
     }
     Ok(out)
 }

@@ -68,6 +68,19 @@ impl Args {
         self.get(name)
             .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
     }
+
+    /// Parallelism selection from the conventional `--threads` option
+    /// (0 = all cores, 1 = serial; unset = 0).  Drivers declare the
+    /// option with [`Cli::threads_opt`] and read it here.
+    pub fn parallelism(&self) -> anyhow::Result<crate::util::config::Parallelism> {
+        let threads = match self.get("threads") {
+            None | Some("") => 0,
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--threads={v:?} is not an integer: {e}"))?,
+        };
+        Ok(crate::util::config::Parallelism::new(threads))
+    }
 }
 
 /// A subcommand-aware parser.
@@ -104,6 +117,17 @@ impl Cli {
             default: Some(default),
         });
         self
+    }
+
+    /// The conventional `--threads` option every hot-path driver exposes.
+    /// The default is empty (not "0") so drivers can distinguish "unset"
+    /// from an explicit request and let config-file values win.
+    pub fn threads_opt(self) -> Self {
+        self.opt(
+            "threads",
+            "",
+            "worker threads for host hot paths (0 = all cores, 1 = serial)",
+        )
     }
 
     pub fn help_text(&self) -> String {
@@ -220,5 +244,20 @@ mod tests {
     fn typed_errors() {
         let a = args(&["--alpha", "zzz"]);
         assert!(a.f64_or("alpha", 0.0).is_err());
+    }
+
+    #[test]
+    fn threads_opt_parses_parallelism() {
+        let cli = Cli::new("t", "test").threads_opt();
+        let a = cli.parse_from(Vec::<String>::new()).unwrap();
+        assert_eq!(a.parallelism().unwrap().threads, 0, "unset means all cores");
+        let a = cli
+            .parse_from(vec!["--threads".to_string(), "1".to_string()])
+            .unwrap();
+        assert!(a.parallelism().unwrap().pool().is_none(), "1 = serial");
+        let a = cli.parse_from(vec!["--threads=2".to_string()]).unwrap();
+        assert_eq!(a.parallelism().unwrap().threads, 2);
+        let a = cli.parse_from(vec!["--threads=zzz".to_string()]).unwrap();
+        assert!(a.parallelism().is_err());
     }
 }

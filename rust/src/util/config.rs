@@ -7,6 +7,58 @@
 
 use std::collections::BTreeMap;
 
+use crate::util::threadpool::ThreadPool;
+
+/// Worker-thread selection for the pure-Rust hot paths (k-means sweeps,
+/// candidate assignment, KDE sampling, PNC scans).
+///
+/// `0` means "all available cores", `1` is the fully serial path, any
+/// other value is an explicit worker count.  Results are bit-identical
+/// at every setting: the chunked schedules derive all per-chunk state
+/// from chunk indices, never from thread interleaving (see
+/// `util::threadpool::ThreadPool::parallel_for`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Parallelism {
+    pub threads: usize,
+}
+
+impl Default for Parallelism {
+    fn default() -> Self {
+        Parallelism { threads: 0 }
+    }
+}
+
+impl Parallelism {
+    pub fn new(threads: usize) -> Self {
+        Parallelism { threads }
+    }
+
+    pub fn serial() -> Self {
+        Parallelism { threads: 1 }
+    }
+
+    /// Resolved worker count (`0` -> available cores).
+    pub fn effective_threads(self) -> usize {
+        if self.threads == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        } else {
+            self.threads
+        }
+    }
+
+    /// Spin up a pool, or `None` for the serial path — callers pass the
+    /// result straight to the `*_with(..., pool)` hot-path entry points.
+    pub fn pool(self) -> Option<ThreadPool> {
+        if self.effective_threads() <= 1 {
+            None
+        } else {
+            Some(ThreadPool::new(self.threads))
+        }
+    }
+}
+
 /// Parsed flat config: `section.key -> raw string value`.
 #[derive(Clone, Debug, Default)]
 pub struct RawConfig {
@@ -143,6 +195,8 @@ pub struct CampaignConfig {
     pub output_codebook: Option<(usize, usize)>,
     /// RNG seed for batching.
     pub seed: u64,
+    /// Worker threads for the host hot paths (0 = all cores, 1 = serial).
+    pub threads: usize,
 }
 
 impl Default for CampaignConfig {
@@ -160,6 +214,7 @@ impl Default for CampaignConfig {
             candidate_mask: None,
             output_codebook: None,
             seed: 0xC0DE,
+            threads: 0,
         }
     }
 }
@@ -203,7 +258,13 @@ impl CampaignConfig {
                 (k, dd) => Some((k, dd)),
             },
             seed: raw.usize("campaign.seed", d.seed as usize)? as u64,
+            threads: raw.usize("campaign.threads", d.threads)?,
         })
+    }
+
+    /// The campaign's parallelism selection.
+    pub fn parallelism(&self) -> Parallelism {
+        Parallelism::new(self.threads)
     }
 }
 
@@ -233,11 +294,22 @@ mod tests {
 
     #[test]
     fn campaign_overlay() {
-        let raw = RawConfig::parse("[campaign]\nalpha = 0.9\nsteps = 7\n").unwrap();
+        let raw = RawConfig::parse("[campaign]\nalpha = 0.9\nsteps = 7\nthreads = 3\n").unwrap();
         let c = CampaignConfig::from_raw(&raw).unwrap();
         assert_eq!(c.alpha, 0.9);
         assert_eq!(c.steps, 7);
+        assert_eq!(c.threads, 3);
         assert!(c.use_kd_loss, "untouched fields keep defaults");
+    }
+
+    #[test]
+    fn parallelism_resolves_and_pools() {
+        assert!(Parallelism::serial().pool().is_none(), "threads=1 is serial");
+        assert_eq!(Parallelism::new(1).effective_threads(), 1);
+        assert!(Parallelism::new(0).effective_threads() >= 1);
+        let p = Parallelism::new(3).pool().expect("explicit 3 threads pools");
+        assert_eq!(p.threads(), 3);
+        assert_eq!(CampaignConfig::default().parallelism(), Parallelism::new(0));
     }
 
     #[test]

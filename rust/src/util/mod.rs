@@ -1,7 +1,8 @@
 //! In-house substrates.
 //!
-//! Only `xla` and `anyhow` resolve in the build image (vendored, offline),
-//! so everything a framework normally pulls from crates.io is implemented
+//! The build is fully offline: the only dependencies are the in-tree
+//! `vendor/anyhow` shim and the host-only `vendor/xla` stub, so
+//! everything a framework normally pulls from crates.io is implemented
 //! here: a deterministic PRNG, a JSON codec, a CLI parser, a TOML-subset
 //! config reader, a scoped thread pool, structured logging, and running
 //! statistics.  Each module is small, tested, and dependency-free.

@@ -40,6 +40,15 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
     }
 
+    /// Chunk-indexed stream derivation for the chunked parallel schedules
+    /// (`ThreadPool::parallel_for`): per-chunk randomness depends only on
+    /// `(base, chunk_idx)` — never on thread interleaving — which is what
+    /// makes the parallel hot paths bit-identical to the serial path.
+    /// The splitmix-style spread keeps nearby chunk streams unrelated.
+    pub fn chunk_stream(base: u64, chunk_idx: usize) -> Rng {
+        Rng::new(base ^ ((chunk_idx as u64).wrapping_add(1)).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
@@ -220,5 +229,15 @@ mod tests {
         let mut f1 = base.fork(1);
         let mut f2 = base.fork(2);
         assert_ne!(f1.next_u64(), f2.next_u64());
+    }
+
+    #[test]
+    fn chunk_streams_deterministic_and_distinct() {
+        let mut a = Rng::chunk_stream(42, 0);
+        let mut b = Rng::chunk_stream(42, 0);
+        let mut c = Rng::chunk_stream(42, 1);
+        let x = a.next_u64();
+        assert_eq!(x, b.next_u64(), "same (base, idx) -> same stream");
+        assert_ne!(x, c.next_u64(), "adjacent chunks get unrelated streams");
     }
 }

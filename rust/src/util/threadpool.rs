@@ -102,6 +102,82 @@ impl Drop for ThreadPool {
     }
 }
 
+impl ThreadPool {
+    /// Scoped chunked parallel-for over `0..n`: calls `f(start, end)` for
+    /// every fixed-size chunk `[i*chunk, min((i+1)*chunk, n))`, blocking
+    /// until all chunks completed.  Unlike [`parallel_ranges`] the closure
+    /// may borrow from the caller's stack (no `'static` bound).
+    ///
+    /// **Determinism contract:** the chunk decomposition depends only on
+    /// `(n, chunk)` — never on the worker count or scheduling — so any
+    /// per-chunk state (RNG streams seeded by chunk index, per-chunk
+    /// float accumulators reduced in chunk order) produces bit-identical
+    /// results at every thread count, including the serial `threads = 1`
+    /// path.  Every parallelized hot path in `vq::` relies on this.
+    ///
+    /// A panicking chunk poisons the pool and surfaces as `Err` from the
+    /// final join instead of hanging (the worker's `catch_unwind` always
+    /// decrements the in-flight count).
+    pub fn parallel_for<F>(&self, n: usize, chunk: usize, f: F) -> anyhow::Result<()>
+    where
+        F: Fn(usize, usize) + Send + Sync,
+    {
+        let chunk = chunk.max(1);
+        if n == 0 {
+            return self.wait_idle();
+        }
+        if self.threads() <= 1 || n <= chunk {
+            // Inline path: same decomposition, no cross-thread dispatch.
+            let mut start = 0;
+            while start < n {
+                let end = (start + chunk).min(n);
+                f(start, end);
+                start = end;
+            }
+            return self.wait_idle();
+        }
+        // SAFETY: every job enqueued below decrements `in_flight` exactly
+        // once (panics are caught by the worker loop), and `wait_idle`
+        // blocks until the count reaches zero — so no job can observe `f`
+        // after this frame returns, making the lifetime erasure sound.
+        let f_ref: &(dyn Fn(usize, usize) + Send + Sync) = &f;
+        let f_static: &'static (dyn Fn(usize, usize) + Send + Sync) =
+            unsafe { std::mem::transmute(f_ref) };
+        let mut start = 0;
+        while start < n {
+            let end = (start + chunk).min(n);
+            self.execute(move || f_static(start, end));
+            start = end;
+        }
+        self.wait_idle()
+    }
+}
+
+/// Raw-pointer wrapper for writing *disjoint* ranges of one slice from
+/// multiple pool jobs (the chunks handed out by [`ThreadPool::parallel_for`]
+/// never overlap, so each job owns its range exclusively).
+#[derive(Clone, Copy)]
+pub struct SyncPtr<T>(*mut T);
+
+unsafe impl<T: Send> Send for SyncPtr<T> {}
+unsafe impl<T: Send> Sync for SyncPtr<T> {}
+
+impl<T> SyncPtr<T> {
+    pub fn new(slice: &mut [T]) -> Self {
+        SyncPtr(slice.as_mut_ptr())
+    }
+
+    /// Reborrow `[start, start + len)` mutably.
+    ///
+    /// # Safety
+    /// The range must lie inside the original slice and must not overlap
+    /// any range concurrently handed to another job.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [T] {
+        std::slice::from_raw_parts_mut(self.0.add(start), len)
+    }
+}
+
 /// Chunked parallel map over `0..n`: calls `f(start, end)` on worker
 /// threads with disjoint ranges covering `0..n`, blocking until done.
 /// `f` must be `Sync` (typically writes through disjoint `&mut` chunks
@@ -171,5 +247,101 @@ mod tests {
         let pool = ThreadPool::new(2);
         pool.wait_idle().unwrap();
         parallel_ranges(&pool, 0, 1, |_, _| {}).unwrap();
+    }
+
+    /// Every `[start, end)` pair handed out by `parallel_for` must tile
+    /// `0..n` exactly once, independent of the worker count.
+    fn assert_covers_exactly(threads: usize, n: usize, chunk: usize) {
+        let pool = ThreadPool::new(threads);
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for(n, chunk, |s, e| {
+            assert!(s < e && e <= n, "bad range [{s}, {e}) for n={n}");
+            assert_eq!(s % chunk, 0, "chunk start not aligned");
+            for h in &hits[s..e] {
+                h.fetch_add(1, Ordering::SeqCst);
+            }
+        })
+        .unwrap();
+        assert!(
+            hits.iter().all(|h| h.load(Ordering::SeqCst) == 1),
+            "threads={threads} n={n} chunk={chunk}: uneven coverage"
+        );
+    }
+
+    #[test]
+    fn parallel_for_zero_items() {
+        let pool = ThreadPool::new(4);
+        let ran = AtomicU64::new(0);
+        pool.parallel_for(0, 16, |_, _| {
+            ran.fetch_add(1, Ordering::SeqCst);
+        })
+        .unwrap();
+        assert_eq!(ran.load(Ordering::SeqCst), 0, "no chunks for n = 0");
+    }
+
+    #[test]
+    fn parallel_for_one_item() {
+        assert_covers_exactly(4, 1, 16);
+        assert_covers_exactly(1, 1, 1);
+    }
+
+    #[test]
+    fn parallel_for_items_far_fewer_than_threads() {
+        // 3 items over 8 workers with chunk 1: three 1-element chunks.
+        assert_covers_exactly(8, 3, 1);
+        // Fewer chunks than threads after rounding.
+        assert_covers_exactly(8, 10, 4);
+    }
+
+    #[test]
+    fn parallel_for_covers_all_thread_counts() {
+        for threads in [1, 2, 3, 7] {
+            assert_covers_exactly(threads, 1000, 64);
+        }
+    }
+
+    #[test]
+    fn parallel_for_can_borrow_stack_state() {
+        let pool = ThreadPool::new(3);
+        let data: Vec<u64> = (0..500).collect();
+        let total = AtomicU64::new(0);
+        pool.parallel_for(data.len(), 32, |s, e| {
+            let part: u64 = data[s..e].iter().sum();
+            total.fetch_add(part, Ordering::SeqCst);
+        })
+        .unwrap();
+        assert_eq!(total.load(Ordering::SeqCst), 500 * 499 / 2);
+    }
+
+    #[test]
+    fn parallel_for_panic_surfaces_as_error_not_hang() {
+        let pool = ThreadPool::new(3);
+        let err = pool
+            .parallel_for(100, 4, |s, _| {
+                if s == 48 {
+                    panic!("chunk bomb");
+                }
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("panicked"), "got: {err}");
+        // The pool stays poisoned: later joins keep reporting the failure.
+        assert!(pool.parallel_for(4, 4, |_, _| {}).is_err());
+    }
+
+    #[test]
+    fn sync_ptr_disjoint_chunk_writes() {
+        let pool = ThreadPool::new(4);
+        let mut out = vec![0u64; 777];
+        let n = out.len();
+        let ptr = SyncPtr::new(&mut out);
+        pool.parallel_for(n, 10, |s, e| {
+            // SAFETY: parallel_for ranges are disjoint.
+            let chunk = unsafe { ptr.slice(s, e - s) };
+            for (off, v) in chunk.iter_mut().enumerate() {
+                *v = (s + off) as u64;
+            }
+        })
+        .unwrap();
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i as u64));
     }
 }

@@ -7,8 +7,14 @@
 
 use crate::tensor::ops;
 use crate::util::rng::Rng;
+use crate::util::threadpool::{SyncPtr, ThreadPool};
 
 use super::codebook::Codebook;
+
+/// Groups per scheduling chunk for the `(s, k)` distance sweep.  Fixed —
+/// never derived from the worker count — so per-chunk RNG streams and
+/// chunk-local writes give bit-identical output at every thread count.
+const CHUNK: usize = 64;
 
 /// Candidate-initialization strategy (Table 7).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -32,7 +38,9 @@ pub struct Candidates {
     pub dist: Vec<f32>,
 }
 
-/// Build the candidate table (Eq. 5 generalized per Table 7).
+/// Build the candidate table (Eq. 5 generalized per Table 7) on the
+/// serial path.  Identical, bit for bit, to [`candidates_with`] at any
+/// thread count — both run the same chunked schedule.
 pub fn candidates(
     flat: &[f32],
     cb: &Codebook,
@@ -40,35 +48,84 @@ pub fn candidates(
     init: AssignInit,
     rng: &mut Rng,
 ) -> Candidates {
+    candidates_with(flat, cb, n, init, rng, None)
+}
+
+/// Build the candidate table, optionally spreading the `(s, k)` distance
+/// sweep over a worker pool.  The RNG stream of each chunk is derived
+/// from the chunk index (not from thread interleaving), so the result is
+/// a pure function of `(flat, cb, n, init, rng seed)`.
+pub fn candidates_with(
+    flat: &[f32],
+    cb: &Codebook,
+    n: usize,
+    init: AssignInit,
+    rng: &mut Rng,
+    pool: Option<&ThreadPool>,
+) -> Candidates {
     assert_eq!(flat.len() % cb.d, 0);
     let s = flat.len() / cb.d;
     assert!(n >= 1 && n <= cb.k, "n={n} out of range for k={}", cb.k);
     let mut assign = vec![0u32; s * n];
     let mut dist = vec![0.0f32; s * n];
-    let mut scratch = vec![0.0f32; cb.k];
+    // One base draw keys every chunk stream; the parent RNG advances by
+    // exactly one step regardless of s or the thread count.
+    let base = rng.next_u64();
 
-    for g in 0..s {
-        let sub = &flat[g * cb.d..(g + 1) * cb.d];
-        match init {
-            AssignInit::Random => {
-                for m in 0..n {
-                    let c = rng.below(cb.k);
-                    assign[g * n + m] = c as u32;
-                    dist[g * n + m] = ops::sq_dist(sub, cb.word(c));
+    let kernel = |start: usize, end: usize, assign_chunk: &mut [u32], dist_chunk: &mut [f32]| {
+        let mut crng = Rng::chunk_stream(base, start / CHUNK);
+        let mut scratch = vec![0.0f32; cb.k];
+        for g in start..end {
+            let sub = &flat[g * cb.d..(g + 1) * cb.d];
+            let row = (g - start) * n;
+            match init {
+                AssignInit::Random => {
+                    for m in 0..n {
+                        let c = crng.below(cb.k);
+                        assign_chunk[row + m] = c as u32;
+                        dist_chunk[row + m] = ops::sq_dist(sub, cb.word(c));
+                    }
+                }
+                AssignInit::Euclid | AssignInit::Cosine => {
+                    for c in 0..cb.k {
+                        scratch[c] = match init {
+                            AssignInit::Euclid => ops::sq_dist(sub, cb.word(c)),
+                            AssignInit::Cosine => 1.0 - ops::cosine(sub, cb.word(c)),
+                            AssignInit::Random => unreachable!(),
+                        };
+                    }
+                    for (m, &c) in ops::argmin_n(&scratch, n).iter().enumerate() {
+                        assign_chunk[row + m] = c as u32;
+                        dist_chunk[row + m] = scratch[c];
+                    }
                 }
             }
-            AssignInit::Euclid | AssignInit::Cosine => {
-                for c in 0..cb.k {
-                    scratch[c] = match init {
-                        AssignInit::Euclid => ops::sq_dist(sub, cb.word(c)),
-                        AssignInit::Cosine => 1.0 - ops::cosine(sub, cb.word(c)),
-                        AssignInit::Random => unreachable!(),
-                    };
-                }
-                for (m, &c) in ops::argmin_n(&scratch, n).iter().enumerate() {
-                    assign[g * n + m] = c as u32;
-                    dist[g * n + m] = scratch[c];
-                }
+        }
+    };
+
+    match pool {
+        Some(pool) if pool.threads() > 1 && s > CHUNK => {
+            let assign_ptr = SyncPtr::new(&mut assign);
+            let dist_ptr = SyncPtr::new(&mut dist);
+            pool.parallel_for(s, CHUNK, |start, end| {
+                // SAFETY: parallel_for chunks are disjoint group ranges,
+                // so the [start*n, end*n) windows never overlap.
+                let a = unsafe { assign_ptr.slice(start * n, (end - start) * n) };
+                let d = unsafe { dist_ptr.slice(start * n, (end - start) * n) };
+                kernel(start, end, a, d);
+            })
+            .expect("candidate sweep worker panicked");
+        }
+        _ => {
+            let mut start = 0;
+            while start < s {
+                let end = (start + CHUNK).min(s);
+                let (a, d) = (
+                    &mut assign[start * n..end * n],
+                    &mut dist[start * n..end * n],
+                );
+                kernel(start, end, a, d);
+                start = end;
             }
         }
     }
@@ -150,6 +207,22 @@ mod tests {
         assert!((e[0] / e[1] - 2.0).abs() < 1e-6);
         assert!((e[1] / e[2] - 2.0).abs() < 1e-6);
         assert!((z[2]).abs() < 1e-7, "last logit is 0 by construction");
+    }
+
+    #[test]
+    fn parallel_sweep_is_bit_identical_to_serial() {
+        let mut rng = Rng::new(9);
+        let mut flat = vec![0.0f32; 2 * 500];
+        rng.fill_normal(&mut flat);
+        let pool = ThreadPool::new(4);
+        for init in [AssignInit::Random, AssignInit::Cosine, AssignInit::Euclid] {
+            let mut r1 = Rng::new(77);
+            let mut r2 = Rng::new(77);
+            let a = candidates(&flat, &cb(), 2, init, &mut r1);
+            let b = candidates_with(&flat, &cb(), 2, init, &mut r2, Some(&pool));
+            assert_eq!(a.assign, b.assign, "{init:?} assign diverged");
+            assert_eq!(a.dist, b.dist, "{init:?} dist diverged");
+        }
     }
 
     #[test]

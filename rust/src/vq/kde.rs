@@ -9,8 +9,17 @@
 
 use crate::tensor::ops;
 use crate::util::rng::Rng;
+use crate::util::threadpool::{SyncPtr, ThreadPool};
 
 use super::codebook::Codebook;
+
+/// Codewords per scheduling chunk when sampling a codebook; fixed so
+/// per-chunk RNG streams are thread-count independent.
+const SAMPLE_CHUNK: usize = 64;
+
+/// Pool points per chunk for density evaluation; partial sums reduce in
+/// chunk order so the f64 total is scheduling-independent.
+const DENSITY_CHUNK: usize = 256;
 
 /// KDE over a `(n, d)` sample pool with bandwidth `h`.
 #[derive(Clone, Debug)]
@@ -29,24 +38,66 @@ impl KdeSampler {
 
     /// Equal-count pool construction (§4.1: "randomly sample an equal
     /// number of weight sub-vectors from each network ... ensuring that
-    /// the codebook remains unbiased").
+    /// the codebook remains unbiased").  Serial entry point — identical
+    /// output to [`KdeSampler::pool_from_networks_with`] at any thread
+    /// count.
     pub fn pool_from_networks(flats: &[&[f32]], d: usize, per_net: usize, rng: &mut Rng) -> Vec<f32> {
-        let mut pool = Vec::with_capacity(flats.len() * per_net * d);
+        Self::pool_from_networks_with(flats, d, per_net, rng, None)
+    }
+
+    /// Equal-count pool construction, one pool job per network.  Every
+    /// network's sub-vector picks come from a stream seeded by its index,
+    /// so the pool is a pure function of `(flats, d, per_net, rng seed)`
+    /// regardless of worker interleaving.
+    pub fn pool_from_networks_with(
+        flats: &[&[f32]],
+        d: usize,
+        per_net: usize,
+        rng: &mut Rng,
+        pool: Option<&ThreadPool>,
+    ) -> Vec<f32> {
         for flat in flats {
             assert_eq!(flat.len() % d, 0);
+            assert!(!flat.is_empty(), "network with no sub-vectors");
+        }
+        let base = rng.next_u64();
+        let mut out = vec![0.0f32; flats.len() * per_net * d];
+
+        let kernel = |i: usize, dst: &mut [f32]| {
+            let mut nrng = Rng::chunk_stream(base, i);
+            let flat = flats[i];
             let s = flat.len() / d;
             if s >= per_net {
-                for idx in rng.sample_without_replacement(s, per_net) {
-                    pool.extend_from_slice(&flat[idx * d..(idx + 1) * d]);
+                for (slot, idx) in nrng.sample_without_replacement(s, per_net).into_iter().enumerate() {
+                    dst[slot * d..(slot + 1) * d].copy_from_slice(&flat[idx * d..(idx + 1) * d]);
                 }
             } else {
-                for _ in 0..per_net {
-                    let idx = rng.below(s);
-                    pool.extend_from_slice(&flat[idx * d..(idx + 1) * d]);
+                for slot in 0..per_net {
+                    let idx = nrng.below(s);
+                    dst[slot * d..(slot + 1) * d].copy_from_slice(&flat[idx * d..(idx + 1) * d]);
+                }
+            }
+        };
+
+        match pool {
+            Some(tp) if tp.threads() > 1 && flats.len() > 1 => {
+                let out_ptr = SyncPtr::new(&mut out);
+                tp.parallel_for(flats.len(), 1, |start, end| {
+                    for i in start..end {
+                        // SAFETY: each network owns a disjoint window.
+                        let dst = unsafe { out_ptr.slice(i * per_net * d, per_net * d) };
+                        kernel(i, dst);
+                    }
+                })
+                .expect("KDE pool construction worker panicked");
+            }
+            _ => {
+                for i in 0..flats.len() {
+                    kernel(i, &mut out[i * per_net * d..(i + 1) * per_net * d]);
                 }
             }
         }
-        pool
+        out
     }
 
     pub fn n(&self) -> usize {
@@ -62,27 +113,100 @@ impl KdeSampler {
             .collect()
     }
 
-    /// Draw a `(k, d)` frozen universal codebook (Eq. 4).
+    /// Draw a `(k, d)` frozen universal codebook (Eq. 4).  Serial entry
+    /// point — identical output to [`KdeSampler::sample_codebook_with`]
+    /// at any thread count.
     pub fn sample_codebook(&self, k: usize, rng: &mut Rng) -> Codebook {
-        let mut words = Vec::with_capacity(k * self.d);
-        for _ in 0..k {
-            words.extend(self.sample(rng));
+        self.sample_codebook_with(k, rng, None)
+    }
+
+    /// Draw a `(k, d)` codebook with the draws spread over fixed
+    /// codeword chunks, each chunk on its own index-derived RNG stream.
+    pub fn sample_codebook_with(&self, k: usize, rng: &mut Rng, pool: Option<&ThreadPool>) -> Codebook {
+        let base = rng.next_u64();
+        let mut words = vec![0.0f32; k * self.d];
+
+        let kernel = |start: usize, end: usize, dst: &mut [f32]| {
+            let mut crng = Rng::chunk_stream(base, start / SAMPLE_CHUNK);
+            for w in 0..(end - start) {
+                let i = crng.below(self.n());
+                let src = &self.pool[i * self.d..(i + 1) * self.d];
+                let out = &mut dst[w * self.d..(w + 1) * self.d];
+                for (o, &x) in out.iter_mut().zip(src) {
+                    *o = x + crng.normal_f32(0.0, self.bandwidth);
+                }
+            }
+        };
+
+        match pool {
+            Some(tp) if tp.threads() > 1 && k > SAMPLE_CHUNK => {
+                let words_ptr = SyncPtr::new(&mut words);
+                tp.parallel_for(k, SAMPLE_CHUNK, |start, end| {
+                    // SAFETY: disjoint codeword windows per chunk.
+                    let dst = unsafe { words_ptr.slice(start * self.d, (end - start) * self.d) };
+                    kernel(start, end, dst);
+                })
+                .expect("KDE codebook sampling worker panicked");
+            }
+            _ => {
+                let mut start = 0;
+                while start < k {
+                    let end = (start + SAMPLE_CHUNK).min(k);
+                    kernel(start, end, &mut words[start * self.d..end * self.d]);
+                    start = end;
+                }
+            }
         }
         Codebook::new(k, self.d, words)
     }
 
     /// Evaluate the KDE density at `q` (Eq. 3, product Gaussian kernel).
+    /// Serial entry point — identical to [`KdeSampler::density_with`].
     pub fn density(&self, q: &[f32]) -> f64 {
+        self.density_with(q, None)
+    }
+
+    /// Density evaluation with the kernel sum spread over fixed pool
+    /// chunks; per-chunk partials reduce in chunk order so the f64 total
+    /// is bit-identical at every thread count.
+    pub fn density_with(&self, q: &[f32], pool: Option<&ThreadPool>) -> f64 {
         assert_eq!(q.len(), self.d);
         let h2 = (self.bandwidth as f64) * (self.bandwidth as f64);
         let log_norm = -0.5 * self.d as f64 * (2.0 * std::f64::consts::PI * h2).ln();
-        let mut acc = 0.0f64;
-        for i in 0..self.n() {
-            let s = &self.pool[i * self.d..(i + 1) * self.d];
-            let sq = ops::sq_dist(q, s) as f64;
-            acc += (-0.5 * sq / h2 + log_norm).exp();
+        let n = self.n();
+        let nchunks = (n + DENSITY_CHUNK - 1) / DENSITY_CHUNK;
+        let mut partials = vec![0.0f64; nchunks];
+
+        let kernel = |start: usize, end: usize| -> f64 {
+            let mut acc = 0.0f64;
+            for i in start..end {
+                let s = &self.pool[i * self.d..(i + 1) * self.d];
+                let sq = ops::sq_dist(q, s) as f64;
+                acc += (-0.5 * sq / h2 + log_norm).exp();
+            }
+            acc
+        };
+
+        match pool {
+            Some(tp) if tp.threads() > 1 && n > DENSITY_CHUNK => {
+                let part_ptr = SyncPtr::new(&mut partials);
+                tp.parallel_for(n, DENSITY_CHUNK, |start, end| {
+                    let p = kernel(start, end);
+                    // SAFETY: one slot per chunk index.
+                    unsafe { part_ptr.slice(start / DENSITY_CHUNK, 1)[0] = p };
+                })
+                .expect("KDE density worker panicked");
+            }
+            _ => {
+                let mut start = 0;
+                while start < n {
+                    let end = (start + DENSITY_CHUNK).min(n);
+                    partials[start / DENSITY_CHUNK] = kernel(start, end);
+                    start = end;
+                }
+            }
         }
-        acc / self.n() as f64
+        partials.iter().sum::<f64>() / n as f64
     }
 }
 
@@ -149,6 +273,36 @@ mod tests {
         let twos = pool.iter().filter(|&&x| x == 2.0).count();
         assert_eq!(ones, 16, "equal count from each network");
         assert_eq!(twos, 16);
+    }
+
+    #[test]
+    fn parallel_paths_bit_identical_to_serial() {
+        let mut rng = Rng::new(5);
+        let mut pool_data = vec![0.0f32; 4 * 3000];
+        rng.fill_normal(&mut pool_data);
+        let kde = KdeSampler::new(pool_data.clone(), 4, 0.05);
+        let tp = ThreadPool::new(4);
+
+        // Codebook sampling: same seed, serial vs pooled.
+        let a = kde.sample_codebook(300, &mut Rng::new(41));
+        let b = kde.sample_codebook_with(300, &mut Rng::new(41), Some(&tp));
+        assert_eq!(a.words, b.words);
+
+        // Density: exact partial-sum grouping on both paths.
+        let q = [0.1f32, -0.2, 0.3, 0.0];
+        assert_eq!(
+            kde.density(&q).to_bits(),
+            kde.density_with(&q, Some(&tp)).to_bits()
+        );
+
+        // Pool construction: per-network streams.
+        let n1 = vec![1.0f32; 40 * 4];
+        let n2 = vec![2.0f32; 90 * 4];
+        let n3 = vec![3.0f32; 5 * 4];
+        let flats: Vec<&[f32]> = vec![&n1, &n2, &n3];
+        let p1 = KdeSampler::pool_from_networks(&flats, 4, 20, &mut Rng::new(6));
+        let p2 = KdeSampler::pool_from_networks_with(&flats, 4, 20, &mut Rng::new(6), Some(&tp));
+        assert_eq!(p1, p2);
     }
 
     #[test]

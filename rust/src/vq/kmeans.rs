@@ -3,13 +3,22 @@
 //! paper's "special layer" per-layer codebooks (§5).
 //!
 //! Multi-threaded assignment sweeps via the in-house pool; deterministic
-//! given the seed.
+//! given the seed *and independent of the thread count*: the sweeps are
+//! chunked on a fixed granularity and every float reduction sums
+//! per-chunk partials in chunk order, so `threads = 1` and `threads = N`
+//! produce bit-identical codebooks, codes, and MSE (property-tested in
+//! `rust/tests/prop_substrate.rs`).
 
 use crate::tensor::ops;
 use crate::util::rng::Rng;
-use crate::util::threadpool::ThreadPool;
+use crate::util::threadpool::{SyncPtr, ThreadPool};
 
 use super::codebook::Codebook;
+
+/// Sub-vectors per scheduling chunk for the assignment / distance sweeps.
+/// Fixed — never derived from the worker count — so the reduction
+/// grouping is identical at every parallelism setting.
+const CHUNK: usize = 128;
 
 /// Result of a k-means run.
 #[derive(Clone, Debug)]
@@ -28,7 +37,7 @@ pub struct KmeansOpts {
     /// Stop when relative MSE improvement drops below this.
     pub tol: f64,
     pub seed: u64,
-    /// Worker threads for the assignment sweep (0 = all cores).
+    /// Worker threads for the sweeps (0 = all cores, 1 = serial).
     pub threads: usize,
 }
 
@@ -43,25 +52,48 @@ impl Default for KmeansOpts {
     }
 }
 
-/// Cluster `(s, d)` sub-vectors into `k` codewords.
+/// Cluster `(s, d)` sub-vectors into `k` codewords.  Spawns its own
+/// worker pool per `opts.threads` — but only when the input is large
+/// enough for a sweep to actually use it, so small inputs (special-layer
+/// heads, unit tests) never pay spawn/teardown.  Callers that already
+/// hold a pool should use [`kmeans_with`].
 pub fn kmeans(flat: &[f32], d: usize, k: usize, opts: &KmeansOpts) -> KmeansResult {
+    assert!(d > 0 && flat.len() % d == 0, "flat must be (s, d)");
+    let s = flat.len() / d;
+    let own = if opts.threads != 1 && s > CHUNK {
+        Some(ThreadPool::new(opts.threads))
+    } else {
+        None
+    };
+    kmeans_with(flat, d, k, opts, own.as_ref())
+}
+
+/// [`kmeans`] on a caller-provided pool (`None` = serial).  Output is
+/// bit-identical at every parallelism setting, so passing a shared pool
+/// never changes results — only wall-clock.
+pub fn kmeans_with(
+    flat: &[f32],
+    d: usize,
+    k: usize,
+    opts: &KmeansOpts,
+    pool: Option<&ThreadPool>,
+) -> KmeansResult {
     assert!(d > 0 && flat.len() % d == 0, "flat must be (s, d)");
     let s = flat.len() / d;
     assert!(s > 0, "empty input");
     let k = k.min(s); // cannot have more clusters than points
     let mut rng = Rng::new(opts.seed);
 
-    let mut centers = kmeanspp_init(flat, s, d, k, &mut rng);
+    let mut centers = kmeanspp_init(flat, s, d, k, &mut rng, pool);
     let mut codes = vec![0u32; s];
-    let pool = ThreadPool::new(opts.threads.min(8));
     #[allow(unused_assignments)]
     let mut prev_mse = f64::INFINITY;
     let mut iters = 0;
 
     for it in 0..opts.max_iters {
         iters = it + 1;
-        // Assignment sweep (parallel over sub-vector ranges).
-        let mse = assign_sweep(flat, &centers, d, k, &mut codes, &pool);
+        // Assignment sweep (parallel over fixed sub-vector chunks).
+        let mse = assign_sweep(flat, &centers, d, k, &mut codes, pool);
 
         // Update step.
         let mut sums = vec![0.0f64; k * d];
@@ -92,7 +124,7 @@ pub fn kmeans(flat: &[f32], d: usize, k: usize, opts: &KmeansOpts) -> KmeansResu
     }
 
     // Final assignment against the final centers.
-    let mse = assign_sweep(flat, &centers, d, k, &mut codes, &pool);
+    let mse = assign_sweep(flat, &centers, d, k, &mut codes, pool);
     KmeansResult {
         codebook: Codebook::new(k, d, centers),
         codes,
@@ -101,65 +133,128 @@ pub fn kmeans(flat: &[f32], d: usize, k: usize, opts: &KmeansOpts) -> KmeansResu
     }
 }
 
+/// Nearest-center assignment over fixed chunks.  Each chunk writes a
+/// disjoint `codes` range and its own error-partial slot; the partials
+/// are reduced in chunk order, making the f64 sum independent of worker
+/// scheduling.
 fn assign_sweep(
     flat: &[f32],
     centers: &[f32],
     d: usize,
     k: usize,
     codes: &mut [u32],
-    pool: &ThreadPool,
+    pool: Option<&ThreadPool>,
 ) -> f64 {
     let s = codes.len();
-    // Parallel over chunks; each worker writes a disjoint codes range and
-    // returns its partial error via an atomic-free per-chunk buffer.
-    let nchunks = pool.threads().max(1);
-    let chunk = (s + nchunks - 1) / nchunks;
-    let errs = std::sync::Mutex::new(vec![0.0f64; nchunks]);
-    std::thread::scope(|scope| {
-        for (ci, codes_chunk) in codes.chunks_mut(chunk).enumerate() {
-            let start = ci * chunk;
-            let errs = &errs;
-            scope.spawn(move || {
-                let mut local = 0.0f64;
-                for (off, code) in codes_chunk.iter_mut().enumerate() {
-                    let g = start + off;
-                    let sub = &flat[g * d..(g + 1) * d];
-                    let mut best = 0usize;
-                    let mut best_d = f32::INFINITY;
-                    for c in 0..k {
-                        let dist = ops::sq_dist(sub, &centers[c * d..(c + 1) * d]);
-                        if dist < best_d {
-                            best_d = dist;
-                            best = c;
-                        }
-                    }
-                    *code = best as u32;
-                    local += best_d as f64;
+    if s == 0 {
+        return 0.0;
+    }
+    let nchunks = (s + CHUNK - 1) / CHUNK;
+    let mut errs = vec![0.0f64; nchunks];
+
+    let kernel = |start: usize, end: usize, codes_chunk: &mut [u32]| -> f64 {
+        let mut local = 0.0f64;
+        for (off, code) in codes_chunk.iter_mut().enumerate() {
+            let g = start + off;
+            let sub = &flat[g * d..(g + 1) * d];
+            let mut best = 0usize;
+            let mut best_d = f32::INFINITY;
+            for c in 0..k {
+                let dist = ops::sq_dist(sub, &centers[c * d..(c + 1) * d]);
+                if dist < best_d {
+                    best_d = dist;
+                    best = c;
                 }
-                errs.lock().unwrap()[ci] = local;
-            });
+            }
+            *code = best as u32;
+            local += best_d as f64;
         }
-    });
-    let total: f64 = errs.into_inner().unwrap().iter().sum();
+        local
+    };
+
+    match pool {
+        Some(pool) if pool.threads() > 1 && s > CHUNK => {
+            let codes_ptr = SyncPtr::new(codes);
+            let errs_ptr = SyncPtr::new(&mut errs);
+            pool.parallel_for(s, CHUNK, |start, end| {
+                // SAFETY: parallel_for ranges are disjoint, and each chunk
+                // index maps to a unique error slot.
+                let chunk = unsafe { codes_ptr.slice(start, end - start) };
+                let e = kernel(start, end, chunk);
+                unsafe { errs_ptr.slice(start / CHUNK, 1)[0] = e };
+            })
+            .expect("k-means assignment sweep worker panicked");
+        }
+        _ => {
+            let mut start = 0;
+            while start < s {
+                let end = (start + CHUNK).min(s);
+                errs[start / CHUNK] = kernel(start, end, &mut codes[start..end]);
+                start = end;
+            }
+        }
+    }
+    let total: f64 = errs.iter().sum();
     total / flat.len() as f64
 }
 
-/// k-means++ seeding: D^2-weighted center selection.
-fn kmeanspp_init(flat: &[f32], s: usize, d: usize, k: usize, rng: &mut Rng) -> Vec<f32> {
+/// k-means++ seeding: D^2-weighted center selection.  The per-point
+/// distance refresh after each new center is the `O(s * k * d)` half of
+/// the cost, so it runs over the same fixed-chunk schedule; the partial
+/// totals reduce in chunk order and the weighted pick stays serial.
+fn kmeanspp_init(
+    flat: &[f32],
+    s: usize,
+    d: usize,
+    k: usize,
+    rng: &mut Rng,
+    pool: Option<&ThreadPool>,
+) -> Vec<f32> {
     let mut centers = Vec::with_capacity(k * d);
     let first = rng.below(s);
     centers.extend_from_slice(&flat[first * d..(first + 1) * d]);
     let mut dist2 = vec![f32::INFINITY; s];
+    let nchunks = (s + CHUNK - 1) / CHUNK;
+    let mut partials = vec![0.0f64; nchunks];
     for c in 1..k {
         let last = &centers[(c - 1) * d..c * d];
-        let mut total = 0.0f64;
-        for g in 0..s {
-            let dd = ops::sq_dist(&flat[g * d..(g + 1) * d], last);
-            if dd < dist2[g] {
-                dist2[g] = dd;
+
+        let kernel = |start: usize, end: usize, d2_chunk: &mut [f32]| -> f64 {
+            let mut local = 0.0f64;
+            for (off, d2) in d2_chunk.iter_mut().enumerate() {
+                let g = start + off;
+                let dd = ops::sq_dist(&flat[g * d..(g + 1) * d], last);
+                if dd < *d2 {
+                    *d2 = dd;
+                }
+                local += *d2 as f64;
             }
-            total += dist2[g] as f64;
+            local
+        };
+
+        match pool {
+            Some(pool) if pool.threads() > 1 && s > CHUNK => {
+                let dist_ptr = SyncPtr::new(&mut dist2);
+                let part_ptr = SyncPtr::new(&mut partials);
+                pool.parallel_for(s, CHUNK, |start, end| {
+                    // SAFETY: disjoint chunk ranges / unique partial slots.
+                    let d2 = unsafe { dist_ptr.slice(start, end - start) };
+                    let p = kernel(start, end, d2);
+                    unsafe { part_ptr.slice(start / CHUNK, 1)[0] = p };
+                })
+                .expect("k-means++ distance sweep worker panicked");
+            }
+            _ => {
+                let mut start = 0;
+                while start < s {
+                    let end = (start + CHUNK).min(s);
+                    partials[start / CHUNK] = kernel(start, end, &mut dist2[start..end]);
+                    start = end;
+                }
+            }
         }
+        let total: f64 = partials.iter().sum();
+
         let pick = if total <= 0.0 {
             rng.below(s)
         } else {
@@ -229,5 +324,36 @@ mod tests {
         let b = kmeans(&flat, 4, 8, &KmeansOpts::default());
         assert_eq!(a.codes, b.codes);
         assert_eq!(a.codebook.words, b.codebook.words);
+    }
+
+    #[test]
+    fn serial_and_parallel_agree_bit_for_bit() {
+        let mut rng = Rng::new(8);
+        let mut flat = vec![0.0f32; 3 * 700];
+        rng.fill_normal(&mut flat);
+        let serial = kmeans(
+            &flat,
+            3,
+            12,
+            &KmeansOpts {
+                threads: 1,
+                ..Default::default()
+            },
+        );
+        for threads in [2usize, 5] {
+            let par = kmeans(
+                &flat,
+                3,
+                12,
+                &KmeansOpts {
+                    threads,
+                    ..Default::default()
+                },
+            );
+            assert_eq!(serial.codes, par.codes, "threads={threads}");
+            assert_eq!(serial.codebook.words, par.codebook.words);
+            assert_eq!(serial.mse.to_bits(), par.mse.to_bits());
+            assert_eq!(serial.iterations, par.iterations);
+        }
     }
 }

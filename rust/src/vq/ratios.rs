@@ -7,6 +7,11 @@
 //! optimal-assignment-index analysis.
 
 use crate::tensor::ops;
+use crate::util::threadpool::{SyncPtr, ThreadPool};
+
+/// Groups per scheduling chunk for the PNC scan sweep (fixed, so the
+/// decomposition never depends on the worker count).
+const SCAN_CHUNK: usize = 512;
 
 /// Per-group PNC state: 0 = free, 1 = frozen to `frozen_idx`.
 #[derive(Clone, Debug, Default)]
@@ -63,18 +68,55 @@ pub fn effective_ratios(z: &[f32], n: usize, fs: &FreezeState) -> Vec<f32> {
     r
 }
 
-/// Max ratio + its slot per group (the PNC scan input).
+/// Max softmax ratio + its slot for one logit row.  `softmax(z)[argmax]`
+/// equals `1 / sum(exp(z - max))` with the sum accumulated in row order —
+/// the exact arithmetic `ops::softmax_rows` performs, without
+/// materializing the full softmax.
+#[inline]
+fn row_max_ratio(row: &[f32]) -> (f32, usize) {
+    let m = ops::argmax(row);
+    let max = row[m];
+    let mut sum = 0.0f32;
+    for &v in row {
+        sum += (v - max).exp();
+    }
+    (1.0 / sum, m)
+}
+
+/// Max ratio + its slot per group (the PNC scan input).  Serial entry
+/// point — identical output to [`max_ratios_with`] at any thread count.
 pub fn max_ratios(z: &[f32], n: usize) -> Vec<(f32, usize)> {
+    max_ratios_with(z, n, None)
+}
+
+/// Max ratio + slot per group, with the row sweep spread over fixed
+/// chunks of groups.  Rows are independent, so the output is identical
+/// to the serial path regardless of scheduling.
+pub fn max_ratios_with(z: &[f32], n: usize, pool: Option<&ThreadPool>) -> Vec<(f32, usize)> {
     let s = z.len() / n;
-    let mut soft = z.to_vec();
-    ops::softmax_rows(&mut soft, s, n);
-    (0..s)
-        .map(|g| {
-            let row = &soft[g * n..(g + 1) * n];
-            let m = ops::argmax(row);
-            (row[m], m)
-        })
-        .collect()
+    assert_eq!(z.len(), s * n);
+    let mut out = vec![(0.0f32, 0usize); s];
+
+    match pool {
+        Some(tp) if tp.threads() > 1 && s > SCAN_CHUNK => {
+            let out_ptr = SyncPtr::new(&mut out);
+            tp.parallel_for(s, SCAN_CHUNK, |start, end| {
+                // SAFETY: disjoint group ranges per chunk.
+                let dst = unsafe { out_ptr.slice(start, end - start) };
+                for (off, slot) in dst.iter_mut().enumerate() {
+                    let g = start + off;
+                    *slot = row_max_ratio(&z[g * n..(g + 1) * n]);
+                }
+            })
+            .expect("PNC ratio sweep worker panicked");
+        }
+        _ => {
+            for (g, slot) in out.iter_mut().enumerate() {
+                *slot = row_max_ratio(&z[g * n..(g + 1) * n]);
+            }
+        }
+    }
+    out
 }
 
 /// Final hard codes (Algorithm 1 output): frozen slot or argmax slot,
@@ -155,6 +197,32 @@ mod tests {
         fs.freeze(0, 1); // frozen to slot 1 even though argmax is slot 0
         let codes = hard_codes(&z, &assign, 2, &fs);
         assert_eq!(codes, vec![11, 21]);
+    }
+
+    #[test]
+    fn max_ratios_matches_explicit_softmax_and_parallel_path() {
+        let mut rng = crate::util::rng::Rng::new(13);
+        let n = 6;
+        let s = 1500; // > SCAN_CHUNK so the pooled path really splits
+        let mut z = vec![0.0f32; s * n];
+        rng.fill_normal(&mut z);
+        // Reference: full softmax + argmax.
+        let mut soft = z.clone();
+        ops::softmax_rows(&mut soft, s, n);
+        let serial = max_ratios(&z, n);
+        for g in 0..s {
+            let row = &soft[g * n..(g + 1) * n];
+            let m = ops::argmax(row);
+            assert_eq!(serial[g].1, m, "slot mismatch at group {g}");
+            assert_eq!(
+                serial[g].0.to_bits(),
+                row[m].to_bits(),
+                "ratio mismatch at group {g}"
+            );
+        }
+        let tp = ThreadPool::new(4);
+        let par = max_ratios_with(&z, n, Some(&tp));
+        assert_eq!(serial, par);
     }
 
     #[test]

@@ -11,7 +11,11 @@ use vq4all::quant::uniform::{self, Granularity};
 use vq4all::rom::AreaModel;
 use vq4all::tensor::ops;
 use vq4all::testing::{proptest, Gen};
+use vq4all::util::rng::Rng;
+use vq4all::util::threadpool::ThreadPool;
+use vq4all::vq::assign::{candidates, candidates_with, AssignInit};
 use vq4all::vq::kmeans::{kmeans, KmeansOpts};
+use vq4all::vq::Codebook;
 use vq4all::{prop_assert, prop_assert_eq};
 
 fn weights(g: &mut Gen, len: usize) -> Vec<f32> {
@@ -138,6 +142,66 @@ fn kmeans_mse_never_increases_with_k_and_beats_random_codebook() {
         let m32 = kmeans(&w, d, 32.min(n), &opts).mse;
         prop_assert!(m8 <= m2 * 1.05, "k=8 ({m8}) worse than k=2 ({m2})");
         prop_assert!(m32 <= m8 * 1.05, "k=32 ({m32}) worse than k=8 ({m8})");
+        Ok(())
+    });
+}
+
+/// The tentpole's determinism contract: the pooled hot paths must be
+/// **bit-identical** to the serial (`threads = 1`) path across random
+/// shapes, thread counts, and all three `AssignInit` modes — per-chunk
+/// RNG streams derive from chunk indices, and every float reduction sums
+/// per-chunk partials in chunk order.
+#[test]
+fn parallel_candidates_and_kmeans_are_bit_identical_to_serial() {
+    proptest(|g| {
+        let d = [1usize, 2, 4][g.usize_in(0, 2)];
+        let s = g.usize_in(1, 400);
+        let k = g.usize_in(2, 24);
+        let n = g.usize_in(1, k);
+        let threads = g.usize_in(2, 8);
+        let words = g.vec_normal((k * d)..=(k * d));
+        let cb = Codebook::new(k, d, words);
+        let flat = g.vec_normal((s * d)..=(s * d));
+        let pool = ThreadPool::new(threads);
+        let seed = g.rng.next_u64();
+
+        for init in [AssignInit::Random, AssignInit::Cosine, AssignInit::Euclid] {
+            let mut r_serial = Rng::new(seed);
+            let mut r_par = Rng::new(seed);
+            let a = candidates(&flat, &cb, n, init, &mut r_serial);
+            let b = candidates_with(&flat, &cb, n, init, &mut r_par, Some(&pool));
+            prop_assert_eq!(a.assign, b.assign);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            prop_assert_eq!(bits(&a.dist), bits(&b.dist));
+            // Both paths must advance the caller RNG identically.
+            prop_assert_eq!(r_serial.next_u64(), r_par.next_u64());
+        }
+
+        let serial = kmeans(
+            &flat,
+            d,
+            k,
+            &KmeansOpts {
+                threads: 1,
+                seed,
+                ..Default::default()
+            },
+        );
+        let par = kmeans(
+            &flat,
+            d,
+            k,
+            &KmeansOpts {
+                threads,
+                seed,
+                ..Default::default()
+            },
+        );
+        prop_assert_eq!(serial.codes, par.codes);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        prop_assert_eq!(bits(&serial.codebook.words), bits(&par.codebook.words));
+        prop_assert_eq!(serial.mse.to_bits(), par.mse.to_bits());
+        prop_assert_eq!(serial.iterations, par.iterations);
         Ok(())
     });
 }

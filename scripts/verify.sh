@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# One-command tier-1 gate + hot-path perf smoke.
+#
+#   scripts/verify.sh            # build + tests + hotpath bench (smoke)
+#   VQ4ALL_BENCH_MS=300 scripts/verify.sh   # longer measurements
+#
+# The hotpath bench writes BENCH_hotpath.json (serial-vs-parallel
+# comparisons for candidate assignment, k-means, KDE density, and the
+# PNC scan) into the repo root so successive PRs can diff it.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "== perf smoke: hotpath bench =="
+VQ4ALL_BENCH_MS="${VQ4ALL_BENCH_MS:-60}" cargo bench --bench hotpath
+
+echo "verify OK"

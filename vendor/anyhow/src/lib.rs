@@ -1,0 +1,124 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The build image has no registry access, so this vendored shim provides
+//! the small API surface the workspace actually uses:
+//!
+//! * [`Error`] — a boxed, message-carrying error type.  Like the real
+//!   `anyhow::Error` it deliberately does **not** implement
+//!   `std::error::Error`, which is what makes the blanket
+//!   `From<E: std::error::Error>` conversion (and therefore `?` on any
+//!   std error) coherent.
+//! * [`Result<T>`] — `Result<T, Error>` with a defaulted error parameter.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the formatting macros.
+//!
+//! Context chaining (`.context(...)`) is intentionally omitted: the
+//! workspace formats context into messages at the call site instead.
+
+use std::fmt;
+
+/// A message-carrying error.  Construction is cheap (one `String`); the
+/// original error's `Display` output is captured at conversion time.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Debug mirrors Display so `main() -> anyhow::Result<()>` prints
+        // the human message, matching real-anyhow behaviour closely
+        // enough for this workspace.
+        f.write_str(&self.msg)
+    }
+}
+
+// `Error` itself must NOT implement `std::error::Error`, or this blanket
+// impl would overlap with the reflexive `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `Result` with the error type defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails_io() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/real/path/vq4all")?;
+        Ok(())
+    }
+
+    fn bails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {flag}");
+        if !flag {
+            bail!("unreachable");
+        }
+        Ok(7)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = fails_io().unwrap_err();
+        assert!(!err.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_format_and_shortcircuit() {
+        assert_eq!(bails(true).unwrap(), 7);
+        let e = bails(false).unwrap_err();
+        assert_eq!(e.to_string(), "flag was false");
+        let e2: Error = anyhow!("x = {}", 42);
+        assert_eq!(format!("{e2}"), "x = 42");
+        assert_eq!(format!("{e2:?}"), "x = 42");
+    }
+
+    #[test]
+    fn collects_into_result() {
+        let ok: Result<Vec<u32>> = (0u32..3).map(Ok).collect();
+        assert_eq!(ok.unwrap(), vec![0, 1, 2]);
+    }
+}
