@@ -1,9 +1,11 @@
 //! E13 — hot-path microbenchmarks (the §Perf substrate):
 //!
 //! * **serial vs parallel** candidate assignment (Eq. 5 distance sweep),
-//!   k-means, KDE density, and the PNC scan — the in-house-pool hot
-//!   paths; the comparison lands in `BENCH_hotpath.json` so later PRs
-//!   have a perf trajectory (`VQ4ALL_BENCH_JSON` overrides the path)
+//!   k-means, KDE density, the PNC scan, `encode_nearest` (the Table-1
+//!   MSE sweep), bulk packed-code unpack, and the batched serving decode
+//!   — the in-house-pool hot paths; the comparisons land in
+//!   `BENCH_hotpath.json` so later PRs have a perf trajectory
+//!   (`VQ4ALL_BENCH_JSON` overrides the path)
 //! * packed-code decode (the serving weight-stream path)
 //! * host weighted reconstruct (checkpoint validation path)
 //! * PJRT step latency: `train_step` / `eval_hard` / `infer_hard` on
@@ -15,13 +17,14 @@ mod common;
 use vq4all::bench::{Bencher, Comparison};
 use vq4all::coordinator::calib::CalibStream;
 use vq4all::coordinator::{NetSession, PncScheduler};
-use vq4all::serving::Router;
+use vq4all::serving::switchsim::decode_batch;
+use vq4all::serving::{Batch, Request, Router};
 use vq4all::util::rng::Rng;
 use vq4all::util::threadpool::ThreadPool;
 use vq4all::vq::assign::{candidates_with, AssignInit};
 use vq4all::vq::kde::KdeSampler;
 use vq4all::vq::kmeans::{kmeans_with, KmeansOpts};
-use vq4all::vq::pack::{pack_codes, unpack_codes};
+use vq4all::vq::pack::{pack_codes, unpack_codes, unpack_codes_with};
 use vq4all::vq::ratios::max_ratios_with;
 use vq4all::vq::Codebook;
 
@@ -100,6 +103,17 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(max_ratios_with(&z, n, Some(&pool)).len());
     });
 
+    // --- serial vs parallel: encode_nearest (Table-1 MSE sweep) ------------
+    let enc_serial = b.bench("encode_nearest s=20k k=256 [serial]", || {
+        let (m, c) = cb.encode_nearest_with(&flat, None);
+        std::hint::black_box((m, c.len()));
+    });
+    let enc_par = b.bench("encode_nearest s=20k k=256 [parallel]", || {
+        let (m, c) = cb.encode_nearest_with(&flat, Some(&pool));
+        std::hint::black_box((m, c.len()));
+    });
+    comparisons.push(Comparison::new("encode_nearest", &enc_serial, &enc_par, threads));
+
     // --- pure-host serving paths -------------------------------------------
     let codes: Vec<u32> = (0..100_000).map(|_| rng.below(256) as u32).collect();
     let packed = pack_codes(&codes, 8);
@@ -108,10 +122,51 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(v.len());
     });
 
+    // --- serial vs parallel: bulk unpack at an awkward width ---------------
+    let codes5: Vec<u32> = (0..2_000_000).map(|_| rng.below(32) as u32).collect();
+    let packed5 = pack_codes(&codes5, 5);
+    let unpack_serial = b.bench("unpack 2M codes @5b [serial]", || {
+        let v = unpack_codes_with(&packed5, None);
+        std::hint::black_box(v.len());
+    });
+    let unpack_par = b.bench("unpack 2M codes @5b [parallel]", || {
+        let v = unpack_codes_with(&packed5, Some(&pool));
+        std::hint::black_box(v.len());
+    });
+    comparisons.push(Comparison::new("unpack_codes", &unpack_serial, &unpack_par, threads));
+
     let mut out = vec![0.0f32; codes.len() * 4];
     b.bench("hard decode 100k codes (400k weights)", || {
         cb.decode(&codes, &mut out);
     });
+
+    // --- serial vs parallel: batched serving decode ------------------------
+    // A formed (padded) batch decodes its rows out of the packed stream:
+    // 64 device rows x 4096 codes/row @8b against the k=256 d=4 codebook.
+    let device_rows = 64usize;
+    let codes_per_row = 4096usize;
+    let codes8: Vec<u32> = (0..device_rows * codes_per_row)
+        .map(|_| rng.below(256) as u32)
+        .collect();
+    let packed8 = pack_codes(&codes8, 8);
+    let reqs: Vec<Request> = (0..48u64)
+        .map(|i| Request {
+            id: i,
+            net: "bench".into(),
+            row: (i as usize * 7) % device_rows,
+            arrived_ns: 0,
+        })
+        .collect();
+    let batch = Batch::form("bench", reqs, device_rows);
+    let bd_serial = b.bench("batched decode 64x4k codes @8b [serial]", || {
+        let r = decode_batch(&batch, &packed8, &cb, codes_per_row, None).unwrap();
+        std::hint::black_box(r.weights.len());
+    });
+    let bd_par = b.bench("batched decode 64x4k codes @8b [parallel]", || {
+        let r = decode_batch(&batch, &packed8, &cb, codes_per_row, Some(&pool)).unwrap();
+        std::hint::black_box(r.weights.len());
+    });
+    comparisons.push(Comparison::new("batched_decode", &bd_serial, &bd_par, threads));
 
     // --- router -------------------------------------------------------------
     b.bench("router submit+drain 1k reqs / 4 nets", || {

@@ -3,10 +3,12 @@ mod common;
 
 use vq4all::exp::table1;
 use vq4all::runtime::Manifest;
+use vq4all::util::threadpool::ThreadPool;
 
 fn main() -> anyhow::Result<()> {
     let manifest = Manifest::load(&common::artifacts_dir())?;
-    let rows = table1::run(&manifest, &table1::default_configs())?;
+    let pool = ThreadPool::new(0); // all cores; results thread-count-invariant
+    let rows = table1::run_with(&manifest, &table1::default_configs(), Some(&pool))?;
     table1::render(&rows).print();
     table1::check_shape(&rows)?;
     println!("shape check: P-VQ/U-VQ < UQ on MSE, U-VQ I/O = 1x — OK");

@@ -18,11 +18,13 @@
 use crate::quant::uniform::{self, Granularity};
 use crate::rom::memsim::TrafficReport;
 use crate::runtime::artifact::Manifest;
-use crate::serving::switchsim::{compare, SwitchWorkload};
+use crate::serving::switchsim::{compare, io_multiple, SwitchWorkload};
 use crate::tensor::io;
+use crate::util::config::Parallelism;
 use crate::util::rng::Rng;
 use crate::util::stats;
-use crate::vq::kmeans::{kmeans, KmeansOpts};
+use crate::util::threadpool::ThreadPool;
+use crate::vq::kmeans::{kmeans, kmeans_with, KmeansOpts};
 use crate::vq::KdeSampler;
 
 /// One row of Table 1.
@@ -96,8 +98,22 @@ fn switch_report(nets: usize, layers: usize, cb_bytes: usize) -> (TrafficReport,
     })
 }
 
-/// Run E1.  Returns rows grouped by bit width: UQ, P-VQ, U-VQ.
+/// Run E1 with an internally owned all-cores pool (the per-layer k-means
+/// and `encode_nearest` sweeps are the experiment's hot loops).  Returns
+/// rows grouped by bit width: UQ, P-VQ, U-VQ.
 pub fn run(manifest: &Manifest, configs: &[BitConfig]) -> anyhow::Result<Vec<Row>> {
+    let own = Parallelism::default().pool();
+    run_with(manifest, configs, own.as_ref())
+}
+
+/// [`run`] on a caller-provided pool (`None` = fully serial).  Output is
+/// bit-identical at every parallelism setting — every sweep underneath
+/// follows the fixed-chunk determinism contract.
+pub fn run_with(
+    manifest: &Manifest,
+    configs: &[BitConfig],
+    pool: Option<&ThreadPool>,
+) -> anyhow::Result<Vec<Row>> {
     let mut rows = Vec::new();
     let layers_per_net = 8; // representative per-layer codebook count
     for cfg in configs {
@@ -128,7 +144,7 @@ pub fn run(manifest: &Manifest, configs: &[BitConfig]) -> anyhow::Result<Vec<Row
         let mut cb_bytes = 0usize;
         let mut assign_bits = 0f64;
         for f in &flats {
-            let res = kmeans(f, dp, kp, &KmeansOpts::default());
+            let res = kmeans_with(f, dp, kp, &KmeansOpts::default(), pool);
             mse_acc += res.mse * f.len() as f64;
             weights += f.len();
             // per-layer: each of `layers_per_net` layers holds its own
@@ -136,7 +152,7 @@ pub fn run(manifest: &Manifest, configs: &[BitConfig]) -> anyhow::Result<Vec<Row
             cb_bytes += layers_per_net * res.codebook.storage_bytes();
             assign_bits += (f.len() / dp) as f64 * (kp as f64).log2();
         }
-        let (pl_traffic, _) = switch_report(flats.len(), layers_per_net, kp * dp * 4);
+        let (pl_traffic, rom_traffic) = switch_report(flats.len(), layers_per_net, kp * dp * 4);
         rows.push(Row {
             bit: cfg.bit as f64,
             k: kp,
@@ -148,7 +164,7 @@ pub fn run(manifest: &Manifest, configs: &[BitConfig]) -> anyhow::Result<Vec<Row
             // The paper's I/O column counts total codebook loads over the
             // task-switch benchmark, normalized to the universal codebook's
             // single (tape-out) load — its "514x vs 1x".
-            io_multiple: pl_traffic.codebook_loads.max(1) as f64,
+            io_multiple: io_multiple(&pl_traffic, &rom_traffic),
         });
 
         // ---------------- U-VQ: one KDE codebook for the whole zoo
@@ -156,14 +172,15 @@ pub fn run(manifest: &Manifest, configs: &[BitConfig]) -> anyhow::Result<Vec<Row
         let flats = zoo_flats(manifest, du)?;
         let refs: Vec<&[f32]> = flats.iter().map(|v| v.as_slice()).collect();
         let mut rng = Rng::new(0xE1 + cfg.bit as u64);
-        let pool = KdeSampler::pool_from_networks(&refs, du, 10 * ku.min(2000), &mut rng);
-        let kde = KdeSampler::new(pool, du, manifest.config.bandwidth as f32);
-        let ucb = kde.sample_codebook(ku, &mut rng);
+        let kde_pool =
+            KdeSampler::pool_from_networks_with(&refs, du, 10 * ku.min(2000), &mut rng, pool);
+        let kde = KdeSampler::new(kde_pool, du, manifest.config.bandwidth as f32);
+        let ucb = kde.sample_codebook_with(ku, &mut rng, pool);
         let mut mse_acc = 0.0;
         let mut weights = 0usize;
         let mut assign_bits = 0f64;
         for f in &flats {
-            let (m, _) = ucb.encode_nearest(f);
+            let (m, _) = ucb.encode_nearest_with(f, pool);
             mse_acc += m * f.len() as f64;
             weights += f.len();
             assign_bits += (f.len() / du) as f64 * (ku as f64).log2();

@@ -24,6 +24,9 @@ pub struct Row {
 /// Device-measured block at the build profile's bit width:
 /// VQ4ALL vs DKM-style (no PNC) vs UQ distortion proxy.
 pub fn run(campaign: &Campaign, nets: &[&str]) -> anyhow::Result<Vec<Row>> {
+    // One pool for the per-net `encode_nearest` sweeps (the campaign's
+    // construction loops spin their own internally).
+    let pool = campaign.cfg.parallelism().pool();
     let mut rows = Vec::new();
     for net in nets {
         // VQ4ALL (full pipeline).
@@ -68,7 +71,7 @@ pub fn run(campaign: &Campaign, nets: &[&str]) -> anyhow::Result<Vec<Row>> {
         let mse = uniform::quant_mse(flat, bit, uniform::Granularity::PerTensor);
         // Anchor map from the two device-measured points of this net.
         let cb = crate::vq::Codebook::new(k, d, campaign.codebook.as_f32()?.to_vec());
-        let (vq_mse, _) = cb.encode_nearest(flat);
+        let (vq_mse, _) = cb.encode_nearest_with(flat, pool.as_ref());
         let mut anchors = vec![(vq_mse, vq.hard_metric), (vq_mse * 4.0, dkm.hard_metric.min(vq.hard_metric))];
         anchors.push((1e-7, nm.float_metric));
         let est = super::fig2::mse_to_metric(&mut anchors, mse);

@@ -6,7 +6,12 @@
 //! batches are padded (rows repeat) and the padding is dropped on the
 //! way out — the padded fraction is tracked as a utilization metric.
 
+use crate::util::threadpool::ThreadPool;
+use crate::vq::codebook::Codebook;
+use crate::vq::pack::PackedCodes;
+
 use super::router::Request;
+use super::switchsim::{decode_batch, BatchDecode};
 
 /// Batcher policy.
 #[derive(Clone, Copy, Debug)]
@@ -44,6 +49,15 @@ impl Batch {
         for i in 0..padded {
             rows.push(rows[i % requests.len()]); // repeat real rows
         }
+        // Padding accounting invariants: the device always sees exactly
+        // `device_batch` rows, and every row is either a real request or
+        // a counted pad (nothing dropped, nothing double-counted).
+        assert_eq!(rows.len(), device_batch, "padding accounting drift");
+        assert_eq!(
+            padded + requests.len(),
+            rows.len(),
+            "padding accounting drift"
+        );
         Batch {
             net: net.to_string(),
             requests,
@@ -54,6 +68,22 @@ impl Batch {
 
     pub fn utilization(&self) -> f64 {
         self.requests.len() as f64 / self.rows.len() as f64
+    }
+
+    /// Decode this batch's weight rows out of a packed assignment stream
+    /// through the worker pool — see [`decode_batch`] for the row
+    /// addressing and the determinism contract.  This is what gives the
+    /// utilization metric something measurable: padded rows are decoded
+    /// too (the fixed-batch device cannot skip them), so
+    /// `utilization()` is exactly the useful fraction of the decode work.
+    pub fn decode_rows(
+        &self,
+        packed: &PackedCodes,
+        cb: &Codebook,
+        codes_per_row: usize,
+        pool: Option<&ThreadPool>,
+    ) -> anyhow::Result<BatchDecode> {
+        decode_batch(self, packed, cb, codes_per_row, pool)
     }
 }
 
@@ -96,11 +126,28 @@ mod tests {
         assert!((b.utilization() - 0.4).abs() < 1e-9);
     }
 
+    /// The `device_batch == requests.len()` zero-padding edge: no pad
+    /// rows are appended and the row list is exactly the request rows.
     #[test]
     fn full_batch_no_padding() {
-        let b = Batch::form("a", (0..4).map(|i| req(i, i as usize, 0)).collect(), 4);
+        let b = Batch::form("a", (0..4).map(|i| req(i, 10 + i as usize, 0)).collect(), 4);
         assert_eq!(b.padded, 0);
         assert_eq!(b.utilization(), 1.0);
+        assert_eq!(b.rows, vec![10, 11, 12, 13], "rows are the request rows, unpadded");
+        assert_eq!(b.rows.len(), b.requests.len());
+    }
+
+    #[test]
+    fn decode_rows_delegates_to_batched_decode() {
+        use crate::vq::pack::pack_codes;
+
+        let cb = Codebook::new(2, 2, vec![0., 0., 1., 1.]);
+        // 3 device rows of 2 codes each.
+        let packed = pack_codes(&[0u32, 1, 1, 1, 0, 0], 1);
+        let b = Batch::form("a", vec![req(0, 1, 0)], 3); // rows [1, 1, 1]
+        let r = b.decode_rows(&packed, &cb, 2, None).unwrap();
+        assert_eq!(r.weights, vec![1., 1., 1., 1.].repeat(3));
+        assert!((r.utilization - b.utilization()).abs() < 1e-12);
     }
 
     #[test]

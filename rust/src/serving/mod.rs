@@ -9,7 +9,10 @@
 //! * [`server`]    — thread-driven serving loop gluing router + batcher
 //!   to the `infer_hard` artifacts.
 //! * [`switchsim`] — task-switch cost simulator on top of `rom::memsim`
-//!   (Table 1's I/O column at serving granularity).
+//!   (Table 1's I/O column at serving granularity), plus the batched
+//!   packed-decode path ([`switchsim::decode_batch`]) that turns a
+//!   formed [`Batch`] into real unpack + codebook-decode work on the
+//!   worker pool.
 
 //! * [`tcp`]       — newline-JSON TCP front-end (std::net; single PJRT
 //!   dispatch thread + reader threads per connection).
@@ -22,3 +25,4 @@ pub mod tcp;
 
 pub use batcher::{Batch, BatcherConfig};
 pub use router::{Request, Router};
+pub use switchsim::{decode_batch, BatchDecode};

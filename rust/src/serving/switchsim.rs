@@ -1,8 +1,17 @@
 //! Task-switch cost simulation at serving granularity — §3.2's claim
 //! ("eliminates the need for repeated codebook loading during rapid task
-//! switching") made measurable, on top of `rom::memsim`.
+//! switching") made measurable, on top of `rom::memsim` — plus the
+//! actual decode work a formed batch drives: every batch row selects a
+//! window of the network's packed assignment stream, which is unpacked
+//! and decoded against the (ROM-resident) universal codebook through the
+//! worker pool ([`decode_batch`]).
 
 use crate::rom::memsim::{switch_storm, CodebookPlacement, MemSim, NetCodebooks, TrafficReport};
+use crate::util::threadpool::{SyncPtr, ThreadPool};
+use crate::vq::codebook::Codebook;
+use crate::vq::pack::{unpack_range, PackedCodes};
+
+use super::batcher::Batch;
 
 /// Workload description.
 #[derive(Clone, Copy, Debug)]
@@ -38,13 +47,95 @@ pub fn compare(w: &SwitchWorkload) -> (TrafficReport, TrafficReport) {
 /// The I/O multiple (per-layer loads : ROM loads, with ROM clamped to 1
 /// load representing the one-time tape-out — Table 1 normalizes the
 /// universal column to 1x).
-pub fn io_multiple(per_layer: &TrafficReport, _rom: &TrafficReport) -> f64 {
-    per_layer.codebook_loads.max(1) as f64
+pub fn io_multiple(per_layer: &TrafficReport, rom: &TrafficReport) -> f64 {
+    per_layer.codebook_loads as f64 / rom.codebook_loads.max(1) as f64
+}
+
+/// Accounting for one batched packed-decode ([`decode_batch`]).
+#[derive(Clone, Debug)]
+pub struct BatchDecode {
+    /// Reconstructed weights, `(batch rows, codes_per_row * d)` row-major
+    /// in `Batch::rows` order (padded rows included — the fixed-batch
+    /// device decodes them too, which is exactly the waste the
+    /// utilization metric prices).
+    pub weights: Vec<f32>,
+    /// Codes unpacked, padded rows included.
+    pub codes_unpacked: usize,
+    /// Packed bytes touched (per-row windows, rounded up to bytes).
+    pub packed_bytes_read: usize,
+    /// Real-request fraction of the decoded rows (`Batch::utilization`).
+    pub utilization: f64,
+}
+
+/// Decode a formed batch's rows out of a packed assignment stream: row
+/// `r` covers codes `[r * codes_per_row, (r + 1) * codes_per_row)`.
+/// Rows are independent (disjoint output windows, shared read-only
+/// stream), so the pooled path is bit-identical to serial — this is the
+/// serving-side decode the batcher's utilization metric measures.
+pub fn decode_batch(
+    batch: &Batch,
+    packed: &PackedCodes,
+    cb: &Codebook,
+    codes_per_row: usize,
+    pool: Option<&ThreadPool>,
+) -> anyhow::Result<BatchDecode> {
+    anyhow::ensure!(codes_per_row > 0, "codes_per_row must be positive");
+    // `row < count / codes_per_row` is equivalent to
+    // `(row + 1) * codes_per_row <= count` but cannot overflow — rows
+    // arrive off the wire (serving::tcp), so huge values must error, not
+    // wrap around and silently decode the wrong window.
+    let stream_rows = packed.count / codes_per_row;
+    for &row in &batch.rows {
+        anyhow::ensure!(
+            row < stream_rows,
+            "batch row {row} out of range: the {}-code stream holds {stream_rows} rows of {codes_per_row}",
+            packed.count
+        );
+    }
+    let stride = codes_per_row * cb.d;
+    let rows = batch.rows.len();
+    let mut weights = vec![0.0f32; rows * stride];
+
+    let kernel = |r: usize, dst: &mut [f32]| {
+        let row = batch.rows[r];
+        let mut codes = vec![0u32; codes_per_row];
+        unpack_range(packed, row * codes_per_row, (row + 1) * codes_per_row, &mut codes);
+        cb.decode(&codes, dst);
+    };
+
+    match pool {
+        Some(tp) if tp.threads() > 1 && rows > 1 => {
+            let w_ptr = SyncPtr::new(&mut weights);
+            tp.parallel_for(rows, 1, |start, end| {
+                for r in start..end {
+                    // SAFETY: each batch row owns a disjoint weights window.
+                    let dst = unsafe { w_ptr.slice(r * stride, stride) };
+                    kernel(r, dst);
+                }
+            })
+            .expect("batched decode worker panicked");
+        }
+        _ => {
+            for r in 0..rows {
+                kernel(r, &mut weights[r * stride..(r + 1) * stride]);
+            }
+        }
+    }
+
+    Ok(BatchDecode {
+        weights,
+        codes_unpacked: rows * codes_per_row,
+        packed_bytes_read: rows * ((codes_per_row * packed.bits as usize + 7) / 8),
+        utilization: batch.utilization(),
+    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serving::router::Request;
+    use crate::util::rng::Rng;
+    use crate::vq::pack::pack_codes;
 
     #[test]
     fn rom_wins_by_orders_of_magnitude() {
@@ -65,6 +156,8 @@ mod tests {
             pl.codebook_loads
         );
         assert_eq!(pl.inferences, rom.inferences);
+        // ROM loads clamp to 1, so the multiple equals the raw count.
+        assert_eq!(io_multiple(&pl, &rom), pl.codebook_loads as f64);
     }
 
     #[test]
@@ -80,5 +173,98 @@ mod tests {
         let (pl, rom) = compare(&w);
         assert_eq!(pl.codebook_loads, 30, "one cold load per codebook");
         assert_eq!(rom.codebook_loads, 0);
+    }
+
+    /// Regression for the `_rom`-ignoring bug: when the ROM side really
+    /// records loads (> 1), the multiple must be the *ratio*, not the raw
+    /// per-layer count.
+    #[test]
+    fn io_multiple_divides_by_rom_loads() {
+        let pl = TrafficReport {
+            codebook_loads: 500,
+            ..TrafficReport::default()
+        };
+        let rom = TrafficReport {
+            codebook_loads: 2,
+            ..TrafficReport::default()
+        };
+        assert_eq!(io_multiple(&pl, &rom), 250.0);
+        // Zero ROM loads clamp to the one-time tape-out load.
+        let rom0 = TrafficReport::default();
+        assert_eq!(io_multiple(&pl, &rom0), 500.0);
+    }
+
+    fn req(id: u64, row: usize) -> Request {
+        Request {
+            id,
+            net: "a".into(),
+            row,
+            arrived_ns: 0,
+        }
+    }
+
+    fn test_codebook(rng: &mut Rng, k: usize, d: usize) -> Codebook {
+        let mut words = vec![0.0f32; k * d];
+        rng.fill_normal(&mut words);
+        Codebook::new(k, d, words)
+    }
+
+    #[test]
+    fn batched_decode_matches_direct_row_decode() {
+        let mut rng = Rng::new(5);
+        let cb = test_codebook(&mut rng, 16, 3);
+        let (device_rows, codes_per_row) = (6usize, 20usize);
+        let codes: Vec<u32> = (0..device_rows * codes_per_row)
+            .map(|_| rng.below(16) as u32)
+            .collect();
+        let packed = pack_codes(&codes, 4);
+        let batch = Batch::form("a", vec![req(0, 3), req(1, 0)], 4);
+        let r = decode_batch(&batch, &packed, &cb, codes_per_row, None).unwrap();
+        assert_eq!(r.weights.len(), 4 * codes_per_row * cb.d);
+        assert_eq!(r.codes_unpacked, 4 * codes_per_row);
+        // Per-row byte rounding: 20 codes @4b = 10 bytes per row.
+        assert_eq!(r.packed_bytes_read, 4 * ((codes_per_row * 4 + 7) / 8));
+        assert!((r.utilization - 0.5).abs() < 1e-12);
+        // Every decoded row equals the direct decode of its stream window,
+        // and padded rows replicate their source rows exactly.
+        let stride = codes_per_row * cb.d;
+        for (pos, &row) in batch.rows.iter().enumerate() {
+            let direct = cb.decode_vec(&codes[row * codes_per_row..(row + 1) * codes_per_row]);
+            assert_eq!(&r.weights[pos * stride..(pos + 1) * stride], &direct[..]);
+        }
+        assert_eq!(batch.rows, vec![3, 0, 3, 0], "padding repeats real rows");
+    }
+
+    #[test]
+    fn batched_decode_parallel_bit_identical_to_serial() {
+        let mut rng = Rng::new(6);
+        let cb = test_codebook(&mut rng, 32, 4);
+        let (device_rows, codes_per_row) = (16usize, 257usize);
+        let codes: Vec<u32> = (0..device_rows * codes_per_row)
+            .map(|_| rng.below(32) as u32)
+            .collect();
+        let packed = pack_codes(&codes, 5);
+        let reqs: Vec<Request> = (0..9).map(|i| req(i, (i as usize * 5) % device_rows)).collect();
+        let batch = Batch::form("a", reqs, device_rows);
+        let pool = ThreadPool::new(4);
+        let serial = decode_batch(&batch, &packed, &cb, codes_per_row, None).unwrap();
+        let par = decode_batch(&batch, &packed, &cb, codes_per_row, Some(&pool)).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&serial.weights), bits(&par.weights));
+        assert_eq!(serial.codes_unpacked, par.codes_unpacked);
+        assert_eq!(serial.packed_bytes_read, par.packed_bytes_read);
+    }
+
+    #[test]
+    fn batched_decode_rejects_out_of_stream_rows() {
+        let mut rng = Rng::new(7);
+        let cb = test_codebook(&mut rng, 4, 2);
+        let packed = pack_codes(&[0u32, 1, 2, 3], 2); // one row of 4 codes
+        let batch = Batch::form("a", vec![req(0, 1)], 1); // row 1 doesn't exist
+        assert!(decode_batch(&batch, &packed, &cb, 4, None).is_err());
+        // Wire-sized garbage rows must error, not wrap around (the bounds
+        // check is overflow-free even in release builds).
+        let huge = Batch::form("a", vec![req(0, usize::MAX / 2)], 1);
+        assert!(decode_batch(&huge, &packed, &cb, 4, None).is_err());
     }
 }

@@ -1,6 +1,20 @@
 //! Codebook type + storage accounting (§3.1, Table 1's `C` column).
+//!
+//! The decode/encode sweeps here are serving-path hot loops (§3.2: the
+//! packed assignment stream is decoded on the fly at inference time), so
+//! they run over the same fixed-chunk deterministic schedule as the
+//! construction hot paths: chunk boundaries depend only on the input
+//! size, per-chunk float partials reduce in chunk order, and the pooled
+//! paths are bit-identical to serial at every thread count
+//! (property-tested in `rust/tests/prop_substrate.rs`).
 
 use crate::tensor::ops;
+use crate::util::threadpool::{SyncPtr, ThreadPool};
+
+/// Groups per scheduling chunk for the encode/decode sweeps.  Fixed —
+/// never derived from the worker count — so the error-partial grouping
+/// is identical at every parallelism setting.
+const CHUNK: usize = 128;
 
 /// A `(k, d)` codebook of f32 codewords (row-major).
 ///
@@ -40,12 +54,46 @@ impl Codebook {
         (usize::BITS - (self.k - 1).leading_zeros()).max(1)
     }
 
-    /// Hard decode: `out[s] = words[codes[s]]` (Eq. 2).
+    /// Hard decode: `out[s] = words[codes[s]]` (Eq. 2).  Serial entry
+    /// point — identical output to [`Codebook::decode_with`] at any
+    /// thread count.
     pub fn decode(&self, codes: &[u32], out: &mut [f32]) {
+        self.decode_with(codes, out, None)
+    }
+
+    /// Hard decode with the codeword copies spread over fixed chunks of
+    /// codes.  Each chunk writes a disjoint output window, so the result
+    /// is trivially identical to the serial path.
+    pub fn decode_with(&self, codes: &[u32], out: &mut [f32], pool: Option<&ThreadPool>) {
         assert_eq!(out.len(), codes.len() * self.d, "decode output size");
-        for (s, &c) in codes.iter().enumerate() {
-            let w = self.word(c as usize);
-            out[s * self.d..(s + 1) * self.d].copy_from_slice(w);
+        let s = codes.len();
+
+        let kernel = |start: usize, end: usize, dst: &mut [f32]| {
+            for (off, &c) in codes[start..end].iter().enumerate() {
+                let w = self.word(c as usize);
+                dst[off * self.d..(off + 1) * self.d].copy_from_slice(w);
+            }
+        };
+
+        match pool {
+            Some(pool) if pool.threads() > 1 && s > CHUNK => {
+                let out_ptr = SyncPtr::new(out);
+                pool.parallel_for(s, CHUNK, |start, end| {
+                    // SAFETY: parallel_for chunks are disjoint code ranges,
+                    // so the output windows never overlap.
+                    let dst = unsafe { out_ptr.slice(start * self.d, (end - start) * self.d) };
+                    kernel(start, end, dst);
+                })
+                .expect("decode worker panicked");
+            }
+            _ => {
+                let mut start = 0;
+                while start < s {
+                    let end = (start + CHUNK).min(s);
+                    kernel(start, end, &mut out[start * self.d..end * self.d]);
+                    start = end;
+                }
+            }
         }
     }
 
@@ -58,56 +106,140 @@ impl Codebook {
 
     /// Weighted decode `out[s] = sum_m r[s,m] * words[assign[s,m]]`
     /// (Eq. 8) — host-side mirror of the Pallas reconstruct kernel,
-    /// used by the coordinator's checkpoint validation.
+    /// used by the coordinator's checkpoint validation.  Serial entry
+    /// point — identical output to [`Codebook::decode_weighted_with`].
     pub fn decode_weighted(&self, assign: &[u32], ratios: &[f32], n: usize, out: &mut [f32]) {
+        self.decode_weighted_with(assign, ratios, n, out, None)
+    }
+
+    /// Weighted decode over fixed chunks of groups.  Each group's row is
+    /// accumulated independently (candidate order within the row never
+    /// changes), so the pooled path is bit-identical to serial.
+    pub fn decode_weighted_with(
+        &self,
+        assign: &[u32],
+        ratios: &[f32],
+        n: usize,
+        out: &mut [f32],
+        pool: Option<&ThreadPool>,
+    ) {
         let s = assign.len() / n;
         assert_eq!(assign.len(), s * n);
         assert_eq!(ratios.len(), s * n);
         assert_eq!(out.len(), s * self.d);
-        out.fill(0.0);
-        for g in 0..s {
-            let orow = &mut out[g * self.d..(g + 1) * self.d];
-            for m in 0..n {
-                let r = ratios[g * n + m];
-                if r == 0.0 {
-                    continue;
+
+        let kernel = |start: usize, end: usize, dst: &mut [f32]| {
+            dst.fill(0.0);
+            for g in start..end {
+                let orow = &mut dst[(g - start) * self.d..(g - start + 1) * self.d];
+                for m in 0..n {
+                    let r = ratios[g * n + m];
+                    if r == 0.0 {
+                        continue;
+                    }
+                    let w = self.word(assign[g * n + m] as usize);
+                    for j in 0..self.d {
+                        orow[j] += r * w[j];
+                    }
                 }
-                let w = self.word(assign[g * n + m] as usize);
-                for j in 0..self.d {
-                    orow[j] += r * w[j];
+            }
+        };
+
+        match pool {
+            Some(pool) if pool.threads() > 1 && s > CHUNK => {
+                let out_ptr = SyncPtr::new(out);
+                pool.parallel_for(s, CHUNK, |start, end| {
+                    // SAFETY: disjoint group windows per chunk.
+                    let dst = unsafe { out_ptr.slice(start * self.d, (end - start) * self.d) };
+                    kernel(start, end, dst);
+                })
+                .expect("weighted decode worker panicked");
+            }
+            _ => {
+                let mut start = 0;
+                while start < s {
+                    let end = (start + CHUNK).min(s);
+                    kernel(start, end, &mut out[start * self.d..end * self.d]);
+                    start = end;
                 }
             }
         }
     }
 
     /// Quantization MSE of encoding `flat` (S*d) with nearest codewords.
-    /// Returns (mse, codes).  This is Table 1's `MSE` column.
+    /// Returns (mse, codes).  This is Table 1's `MSE` column.  Serial
+    /// entry point — identical output to
+    /// [`Codebook::encode_nearest_with`] at any thread count.
     pub fn encode_nearest(&self, flat: &[f32]) -> (f64, Vec<u32>) {
+        self.encode_nearest_with(flat, None)
+    }
+
+    /// Nearest-codeword encode with the `(s, k)` distance sweep spread
+    /// over fixed chunks of groups.  Each chunk writes a disjoint codes
+    /// range and its own error-partial slot; the partials reduce in
+    /// chunk order, so the f64 MSE is bit-identical at every thread
+    /// count (both paths run the same chunked schedule).
+    pub fn encode_nearest_with(&self, flat: &[f32], pool: Option<&ThreadPool>) -> (f64, Vec<u32>) {
         assert_eq!(flat.len() % self.d, 0);
         let s = flat.len() / self.d;
         let mut codes = vec![0u32; s];
-        let mut err = 0.0f64;
-        for g in 0..s {
-            let sub = &flat[g * self.d..(g + 1) * self.d];
-            let mut best = 0usize;
-            let mut best_d = f32::INFINITY;
-            for c in 0..self.k {
-                let dist = ops::sq_dist(sub, self.word(c));
-                if dist < best_d {
-                    best_d = dist;
-                    best = c;
+        if s == 0 {
+            return (0.0, codes);
+        }
+        let nchunks = (s + CHUNK - 1) / CHUNK;
+        let mut errs = vec![0.0f64; nchunks];
+
+        let kernel = |start: usize, end: usize, codes_chunk: &mut [u32]| -> f64 {
+            let mut local = 0.0f64;
+            for (off, code) in codes_chunk.iter_mut().enumerate() {
+                let g = start + off;
+                let sub = &flat[g * self.d..(g + 1) * self.d];
+                let mut best = 0usize;
+                let mut best_d = f32::INFINITY;
+                for c in 0..self.k {
+                    let dist = ops::sq_dist(sub, self.word(c));
+                    if dist < best_d {
+                        best_d = dist;
+                        best = c;
+                    }
+                }
+                *code = best as u32;
+                local += best_d as f64;
+            }
+            local
+        };
+
+        match pool {
+            Some(pool) if pool.threads() > 1 && s > CHUNK => {
+                let codes_ptr = SyncPtr::new(&mut codes);
+                let errs_ptr = SyncPtr::new(&mut errs);
+                pool.parallel_for(s, CHUNK, |start, end| {
+                    // SAFETY: parallel_for ranges are disjoint, and each
+                    // chunk index maps to a unique error slot.
+                    let chunk = unsafe { codes_ptr.slice(start, end - start) };
+                    let e = kernel(start, end, chunk);
+                    unsafe { errs_ptr.slice(start / CHUNK, 1)[0] = e };
+                })
+                .expect("encode_nearest worker panicked");
+            }
+            _ => {
+                let mut start = 0;
+                while start < s {
+                    let end = (start + CHUNK).min(s);
+                    errs[start / CHUNK] = kernel(start, end, &mut codes[start..end]);
+                    start = end;
                 }
             }
-            codes[g] = best as u32;
-            err += best_d as f64;
         }
-        (err / flat.len() as f64, codes)
+        let total: f64 = errs.iter().sum();
+        (total / flat.len() as f64, codes)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     fn cb() -> Codebook {
         Codebook::new(4, 2, vec![0., 0., 1., 0., 0., 1., 1., 1.])
@@ -167,5 +299,43 @@ mod tests {
         let c2 = Codebook::new(65536, 8, vec![0.0; 65536 * 8]);
         assert_eq!(c2.bits_per_weight(), 2.0);
         assert_eq!(c2.index_bits(), 16);
+    }
+
+    /// The decode-side determinism contract: pooled encode/decode paths
+    /// are bit-identical to serial on workloads that really split
+    /// (s > CHUNK), including the f64 MSE reduction.
+    #[test]
+    fn parallel_encode_decode_bit_identical_to_serial() {
+        let mut rng = Rng::new(31);
+        let d = 4;
+        let s = 1000; // > CHUNK so the pooled path really splits
+        let mut words = vec![0.0f32; 16 * d];
+        rng.fill_normal(&mut words);
+        let c = Codebook::new(16, d, words);
+        let mut flat = vec![0.0f32; s * d];
+        rng.fill_normal(&mut flat);
+        let pool = ThreadPool::new(4);
+
+        let (m1, codes1) = c.encode_nearest_with(&flat, None);
+        let (m2, codes2) = c.encode_nearest_with(&flat, Some(&pool));
+        assert_eq!(m1.to_bits(), m2.to_bits(), "MSE reduction diverged");
+        assert_eq!(codes1, codes2);
+
+        let mut o1 = vec![0.0f32; s * d];
+        let mut o2 = vec![0.0f32; s * d];
+        c.decode_with(&codes1, &mut o1, None);
+        c.decode_with(&codes1, &mut o2, Some(&pool));
+        assert_eq!(o1, o2);
+
+        let n = 3;
+        let mut ratios = vec![0.0f32; s * n];
+        rng.fill_normal(&mut ratios);
+        let assign: Vec<u32> = (0..s * n).map(|_| rng.below(16) as u32).collect();
+        let mut w1 = vec![0.0f32; s * d];
+        let mut w2 = vec![0.0f32; s * d];
+        c.decode_weighted_with(&assign, &ratios, n, &mut w1, None);
+        c.decode_weighted_with(&assign, &ratios, n, &mut w2, Some(&pool));
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&w1), bits(&w2));
     }
 }

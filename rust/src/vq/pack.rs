@@ -6,7 +6,18 @@
 //! accounting used by every table (model bytes, ratio vs f32).
 //!
 //! The pack format is also what the serving path decodes on the fly
-//! (`serving::switchsim`), so unpack speed is a §Perf hot path.
+//! (`serving::switchsim`), so unpack speed is a §Perf hot path: the bulk
+//! unpack chunks **on code boundaries** (a chunk starting at code `i`
+//! begins at bit offset `i * bits`, independent of the worker count), so
+//! the pooled path is bit-identical to serial at every thread count.
+
+use crate::util::threadpool::{SyncPtr, ThreadPool};
+
+/// Codes per scheduling chunk for the parallel bulk unpack.  Fixed —
+/// never derived from the worker count — and every chunk starts at a
+/// known bit offset (`start * bits`), which is what makes the
+/// decomposition deterministic.
+const UNPACK_CHUNK: usize = 1024;
 
 /// A packed code stream.
 #[derive(Clone, Debug, PartialEq)]
@@ -46,23 +57,54 @@ pub fn pack_codes(codes: &[u32], bits: u32) -> PackedCodes {
     }
 }
 
-/// Unpack back into `u32` codes.
-pub fn unpack_codes(p: &PackedCodes) -> Vec<u32> {
-    let mut out = Vec::with_capacity(p.count);
-    let mut bitpos = 0usize;
-    for _ in 0..p.count {
+/// Unpack codes `[start, end)` into `dst` (`dst.len() == end - start`).
+/// This is the chunk kernel of the parallel bulk unpack and the serving
+/// batched-decode row reader: because the stream is fixed-width, the
+/// read starts at the statically known bit offset `start * bits`.
+pub fn unpack_range(p: &PackedCodes, start: usize, end: usize, dst: &mut [u32]) {
+    assert!(start <= end && end <= p.count, "range [{start}, {end}) out of {}", p.count);
+    assert_eq!(dst.len(), end - start, "unpack_range dst size");
+    let bits = p.bits as usize;
+    let mut bitpos = start * bits;
+    for slot in dst.iter_mut() {
         let mut v = 0u64;
         let mut got = 0usize;
-        while got < p.bits as usize {
+        while got < bits {
             let byte = bitpos / 8;
             let off = bitpos % 8;
-            let take = (8 - off).min(p.bits as usize - got);
+            let take = (8 - off).min(bits - got);
             let chunk = ((p.data[byte] >> off) as u64) & ((1u64 << take) - 1);
             v |= chunk << got;
             got += take;
             bitpos += take;
         }
-        out.push(v as u32);
+        *slot = v as u32;
+    }
+}
+
+/// Unpack back into `u32` codes.  Serial entry point — identical output
+/// to [`unpack_codes_with`] at any thread count.
+pub fn unpack_codes(p: &PackedCodes) -> Vec<u32> {
+    unpack_codes_with(p, None)
+}
+
+/// Bulk unpack with the stream split over fixed chunks of codes, each
+/// chunk starting at its known bit offset.  Chunks write disjoint output
+/// ranges and read the shared immutable byte stream, so the result is
+/// bit-identical to the serial path regardless of scheduling.
+pub fn unpack_codes_with(p: &PackedCodes, pool: Option<&ThreadPool>) -> Vec<u32> {
+    let mut out = vec![0u32; p.count];
+    match pool {
+        Some(tp) if tp.threads() > 1 && p.count > UNPACK_CHUNK => {
+            let out_ptr = SyncPtr::new(&mut out);
+            tp.parallel_for(p.count, UNPACK_CHUNK, |start, end| {
+                // SAFETY: parallel_for ranges are disjoint code ranges.
+                let dst = unsafe { out_ptr.slice(start, end - start) };
+                unpack_range(p, start, end, dst);
+            })
+            .expect("unpack worker panicked");
+        }
+        _ => unpack_range(p, 0, p.count, &mut out),
     }
     out
 }
@@ -71,20 +113,9 @@ pub fn unpack_codes(p: &PackedCodes) -> Vec<u32> {
 /// serving random-access path.
 pub fn unpack_one(p: &PackedCodes, i: usize) -> u32 {
     assert!(i < p.count);
-    let bits = p.bits as usize;
-    let mut bitpos = i * bits;
-    let mut v = 0u64;
-    let mut got = 0usize;
-    while got < bits {
-        let byte = bitpos / 8;
-        let off = bitpos % 8;
-        let take = (8 - off).min(bits - got);
-        let chunk = ((p.data[byte] >> off) as u64) & ((1u64 << take) - 1);
-        v |= chunk << got;
-        got += take;
-        bitpos += take;
-    }
-    v as u32
+    let mut out = [0u32];
+    unpack_range(p, i, i + 1, &mut out);
+    out[0]
 }
 
 impl PackedCodes {
@@ -158,6 +189,37 @@ mod tests {
     #[should_panic(expected = "exceeds")]
     fn rejects_out_of_range_codes() {
         pack_codes(&[8], 3);
+    }
+
+    #[test]
+    fn unpack_range_reads_arbitrary_windows() {
+        let mut rng = Rng::new(9);
+        for bits in [3u32, 5, 7, 13] {
+            let mask = (1u32 << bits) - 1;
+            let codes: Vec<u32> = (0..301).map(|_| (rng.next_u64() as u32) & mask).collect();
+            let p = pack_codes(&codes, bits);
+            for (start, end) in [(0usize, 301usize), (17, 191), (300, 301), (0, 0)] {
+                let mut dst = vec![0u32; end - start];
+                unpack_range(&p, start, end, &mut dst);
+                assert_eq!(dst, codes[start..end], "bits={bits} [{start}, {end})");
+            }
+        }
+    }
+
+    /// The pooled bulk unpack must split (count > UNPACK_CHUNK) and still
+    /// produce the exact serial stream at awkward non-byte widths.
+    #[test]
+    fn parallel_unpack_bit_identical_to_serial() {
+        let mut rng = Rng::new(7);
+        let pool = ThreadPool::new(4);
+        for bits in [1u32, 3, 5, 7, 13, 31] {
+            let mask = if bits == 32 { u32::MAX } else { (1 << bits) - 1 };
+            let codes: Vec<u32> = (0..UNPACK_CHUNK * 3 + 17)
+                .map(|_| (rng.next_u64() as u32) & mask)
+                .collect();
+            let p = pack_codes(&codes, bits);
+            assert_eq!(unpack_codes_with(&p, Some(&pool)), codes, "bits={bits}");
+        }
     }
 
     #[test]

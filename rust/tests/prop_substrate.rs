@@ -9,12 +9,15 @@ use vq4all::quant::pvq::{
 use vq4all::quant::ternary::{dequantize as tern_dequant, ternarize, ternary_mse};
 use vq4all::quant::uniform::{self, Granularity};
 use vq4all::rom::AreaModel;
+use vq4all::serving::router::Request;
+use vq4all::serving::{decode_batch, Batch};
 use vq4all::tensor::ops;
 use vq4all::testing::{proptest, Gen};
 use vq4all::util::rng::Rng;
 use vq4all::util::threadpool::ThreadPool;
 use vq4all::vq::assign::{candidates, candidates_with, AssignInit};
 use vq4all::vq::kmeans::{kmeans, KmeansOpts};
+use vq4all::vq::pack::{pack_codes, unpack_codes, unpack_codes_with, unpack_one, unpack_range};
 use vq4all::vq::Codebook;
 use vq4all::{prop_assert, prop_assert_eq};
 
@@ -202,6 +205,144 @@ fn parallel_candidates_and_kmeans_are_bit_identical_to_serial() {
         prop_assert_eq!(bits(&serial.codebook.words), bits(&par.codebook.words));
         prop_assert_eq!(serial.mse.to_bits(), par.mse.to_bits());
         prop_assert_eq!(serial.iterations, par.iterations);
+        Ok(())
+    });
+}
+
+/// Pack/unpack round-trips at every width 1..=32 with a bias toward the
+/// awkward non-byte-aligned ones (3/5/7/13), `unpack_one` and
+/// `unpack_range` agree with the bulk unpack, and the pooled bulk unpack
+/// is bit-identical to serial (lengths are drawn past the chunk size so
+/// the pooled path genuinely splits).
+#[test]
+fn pack_unpack_roundtrip_and_parallel_unpack_identical() {
+    let pool = ThreadPool::new(4);
+    proptest(|g| {
+        let bits = if g.bool() {
+            [3u32, 5, 7, 13][g.usize_in(0, 3)] // the awkward widths
+        } else {
+            g.usize_in(1, 32) as u32
+        };
+        let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+        let len = g.usize_in(0, 3000);
+        let codes: Vec<u32> = (0..len).map(|_| (g.rng.next_u64() as u32) & mask).collect();
+        let p = pack_codes(&codes, bits);
+        prop_assert_eq!(p.count, codes.len());
+        prop_assert_eq!(p.bytes(), (len * bits as usize + 7) / 8);
+
+        let serial = unpack_codes(&p);
+        prop_assert_eq!(serial.clone(), codes.clone());
+        let parallel = unpack_codes_with(&p, Some(&pool));
+        prop_assert_eq!(parallel, serial);
+
+        if !codes.is_empty() {
+            for _ in 0..8 {
+                let i = g.usize_in(0, codes.len() - 1);
+                prop_assert_eq!(unpack_one(&p, i), codes[i]);
+            }
+            let start = g.usize_in(0, codes.len() - 1);
+            let end = g.usize_in(start, codes.len());
+            let mut window = vec![0u32; end - start];
+            unpack_range(&p, start, end, &mut window);
+            prop_assert_eq!(window, codes[start..end].to_vec());
+        }
+        Ok(())
+    });
+}
+
+/// The decode-side determinism contract (tentpole of the parallel
+/// serving path): pooled `encode_nearest` / `decode` / `decode_weighted`
+/// are bit-identical to serial — including the f64 MSE reduction, which
+/// sums per-chunk partials in chunk order on both paths.
+#[test]
+fn parallel_encode_decode_paths_bit_identical_to_serial() {
+    proptest(|g| {
+        let d = [1usize, 2, 4][g.usize_in(0, 2)];
+        let k = g.usize_in(2, 24);
+        let s = g.usize_in(1, 400);
+        let threads = g.usize_in(2, 8);
+        let cb = Codebook::new(k, d, g.vec_normal((k * d)..=(k * d)));
+        let flat = g.vec_normal((s * d)..=(s * d));
+        let pool = ThreadPool::new(threads);
+        let fbits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+
+        let (m1, c1) = cb.encode_nearest_with(&flat, None);
+        let (m2, c2) = cb.encode_nearest_with(&flat, Some(&pool));
+        prop_assert_eq!(m1.to_bits(), m2.to_bits());
+        prop_assert_eq!(c1.clone(), c2);
+
+        let mut o1 = vec![0.0f32; s * d];
+        let mut o2 = vec![0.0f32; s * d];
+        cb.decode_with(&c1, &mut o1, None);
+        cb.decode_with(&c1, &mut o2, Some(&pool));
+        prop_assert_eq!(fbits(&o1), fbits(&o2));
+
+        let n = g.usize_in(1, k.min(4));
+        let assign: Vec<u32> = (0..s * n).map(|_| g.u32_below(k as u32)).collect();
+        let ratios = g.vec_uniform((s * n)..=(s * n), 0.0, 1.0);
+        let mut w1 = vec![0.0f32; s * d];
+        let mut w2 = vec![0.0f32; s * d];
+        cb.decode_weighted_with(&assign, &ratios, n, &mut w1, None);
+        cb.decode_weighted_with(&assign, &ratios, n, &mut w2, Some(&pool));
+        prop_assert_eq!(fbits(&w1), fbits(&w2));
+        Ok(())
+    });
+}
+
+/// Batched serving decode: pooled output is bit-identical to serial,
+/// every decoded row (padded ones included) equals the direct decode of
+/// its packed-stream window, and the utilization metric matches the
+/// batch's padding accounting.
+#[test]
+fn batched_packed_decode_parallel_identical_and_rows_correct() {
+    let pool = ThreadPool::new(4);
+    proptest(|g| {
+        let d = [1usize, 2, 4][g.usize_in(0, 2)];
+        let k = g.usize_in(2, 16);
+        let cb = Codebook::new(k, d, g.vec_normal((k * d)..=(k * d)));
+        let codes_per_row = g.usize_in(1, 32);
+        let device_rows = g.usize_in(1, 12);
+        let bits = (usize::BITS - (k - 1).leading_zeros()).max(1);
+        let codes: Vec<u32> = (0..device_rows * codes_per_row)
+            .map(|_| g.u32_below(k as u32))
+            .collect();
+        let packed = pack_codes(&codes, bits);
+
+        let nreq = g.usize_in(1, device_rows);
+        let reqs: Vec<Request> = (0..nreq)
+            .map(|i| Request {
+                id: i as u64,
+                net: "n".into(),
+                row: g.usize_in(0, device_rows - 1),
+                arrived_ns: 0,
+            })
+            .collect();
+        let batch = Batch::form("n", reqs, device_rows);
+        prop_assert_eq!(batch.rows.len(), device_rows);
+        prop_assert_eq!(batch.padded + batch.requests.len(), batch.rows.len());
+
+        let serial =
+            decode_batch(&batch, &packed, &cb, codes_per_row, None).map_err(|e| e.to_string())?;
+        let parallel = decode_batch(&batch, &packed, &cb, codes_per_row, Some(&pool))
+            .map_err(|e| e.to_string())?;
+        let fbits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        prop_assert_eq!(fbits(&serial.weights), fbits(&parallel.weights));
+        prop_assert_eq!(serial.codes_unpacked, device_rows * codes_per_row);
+        prop_assert!(
+            (serial.utilization - batch.utilization()).abs() < 1e-12,
+            "utilization {} != {}",
+            serial.utilization,
+            batch.utilization()
+        );
+
+        let stride = codes_per_row * d;
+        for (pos, &row) in batch.rows.iter().enumerate() {
+            let direct = cb.decode_vec(&codes[row * codes_per_row..(row + 1) * codes_per_row]);
+            prop_assert_eq!(
+                fbits(&serial.weights[pos * stride..(pos + 1) * stride]),
+                fbits(&direct)
+            );
+        }
         Ok(())
     });
 }
