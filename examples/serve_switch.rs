@@ -12,14 +12,17 @@
 //! quantifies what per-layer codebooks would have paid instead.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use vq4all::coordinator::{Campaign, NetSession};
 use vq4all::serving::batcher::BatcherConfig;
 use vq4all::serving::server::Server;
 use vq4all::serving::switchsim::{compare, SwitchWorkload};
+use vq4all::serving::{Engine, EngineConfig, HostedNet};
 use vq4all::util::cli::Cli;
 use vq4all::util::config::CampaignConfig;
 use vq4all::util::rng::Rng;
+use vq4all::vq::Codebook;
 
 fn main() -> anyhow::Result<()> {
     vq4all::util::logging::init_from_env();
@@ -30,6 +33,9 @@ fn main() -> anyhow::Result<()> {
         .opt("max-batch", "8", "batcher max batch")
         .opt("linger-us", "200", "batcher max linger (virtual microseconds)")
         .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("config", "", "config TOML ([engine] shards / cache_kb)")
+        .engine_opts()
+        .threads_opt()
         .parse()?;
 
     let cfg = CampaignConfig {
@@ -46,10 +52,21 @@ fn main() -> anyhow::Result<()> {
         .filter(|s| !s.is_empty())
         .collect();
 
+    let bc = BatcherConfig {
+        max_batch: args.usize_or("max-batch", 8)?,
+        max_linger_ns: args.usize_or("linger-us", 200)? as u64 * 1_000,
+    };
+
     // Phase 1 — construct each network (once, offline) and keep the
     // packed codes + a live session for serving.
     println!("constructing {} networks from the universal codebook...", nets.len());
+    let universal = Arc::new(Codebook::new(
+        campaign.manifest.config.k,
+        campaign.manifest.config.d,
+        campaign.codebook.as_f32()?.to_vec(),
+    ));
     let mut sessions: Vec<(NetSession, vq4all::tensor::Tensor)> = Vec::new();
+    let mut hosted: Vec<HostedNet> = Vec::new();
     for name in &nets {
         let res = campaign.construct(name)?;
         let mut sess = NetSession::new(&campaign.rt, &campaign.manifest, name, &campaign.codebook)?;
@@ -61,20 +78,41 @@ fn main() -> anyhow::Result<()> {
             res.hard_metric,
             res.sizes.ratio()
         );
+        // Host the packed stream on the decode plane, segmented so the
+        // request-row space (0..64) maps onto real stream rows.
+        hosted.push(HostedNet {
+            name: name.clone(),
+            packed: res.packed.clone(),
+            codebook: universal.clone(),
+            codes_per_row: (res.packed.count / 64).max(1),
+            device_batch: bc.max_batch.max(1),
+        });
         sessions.push((sess, codes));
     }
 
     // Phase 2 — serve an interleaved stream (bursty per-network arrivals
     // force constant task switching).
-    let bc = BatcherConfig {
-        max_batch: args.usize_or("max-batch", 8)?,
-        max_linger_ns: args.usize_or("linger-us", 200)? as u64 * 1_000,
-    };
     let sess_refs: Vec<(&mut NetSession, vq4all::tensor::Tensor)> = sessions
         .iter_mut()
         .map(|(s, c)| (s, c.clone()))
         .collect();
     let mut server = Server::new(sess_refs, bc);
+
+    // Attach the sharded, cache-aware decode plane.  Precedence:
+    // --shards/--cache-kb > [engine] config section > defaults; the
+    // --threads pool parallelizes its cache-miss decodes.
+    let knobs = args.engine_knobs_from_config(args.get("config"))?;
+    server.attach_plane(
+        Engine::new(
+            EngineConfig {
+                shards: knobs.shards,
+                cache_bytes: knobs.cache_bytes(),
+                batcher: bc,
+            },
+            hosted,
+        )?,
+        args.parallelism()?.pool(),
+    );
 
     let total = args.usize_or("requests", 400)?;
     let mut rng = Rng::new(7);
@@ -99,22 +137,16 @@ fn main() -> anyhow::Result<()> {
 
     println!("\n  network            served  batches  avg-batch  p50 lat(us)  p99 lat(us)");
     for (name, st) in &server.stats {
-        let mut lat: Vec<f64> = st.latency_ns.clone();
-        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let pct = |p: f64| -> f64 {
-            if lat.is_empty() {
-                return 0.0;
-            }
-            lat[((lat.len() - 1) as f64 * p) as usize] / 1_000.0
-        };
+        // Bounded latency summary: percentiles come from the reservoir,
+        // not an unbounded per-request log.
         println!(
             "  {:<18} {:>6}  {:>7}  {:>9.2}  {:>11.1}  {:>11.1}",
             name,
             st.served,
             st.batches,
             st.served as f64 / st.batches.max(1) as f64,
-            pct(0.50),
-            pct(0.99),
+            st.latency_ns.percentile(50.0) / 1_000.0,
+            st.latency_ns.percentile(99.0) / 1_000.0,
         );
     }
     println!(
@@ -122,6 +154,16 @@ fn main() -> anyhow::Result<()> {
         server.exec_ns.mean() / 1_000.0,
         server.exec_ns.count()
     );
+    if let Some(plane) = &server.plane {
+        let cs = plane.cache_stats();
+        println!(
+            "  decode plane: {} shards, {} weight-row lookups, hit_rate {:.3}, {} evictions",
+            plane.shard_count(),
+            cs.lookups,
+            cs.hit_rate(),
+            cs.evictions
+        );
+    }
 
     // Phase 3 — what the same switch pattern costs with per-layer
     // codebooks in DRAM vs the universal codebook in ROM.

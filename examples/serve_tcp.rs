@@ -12,13 +12,16 @@
 //! ```
 
 use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
 
 use vq4all::coordinator::{Campaign, NetSession};
 use vq4all::serving::batcher::BatcherConfig;
 use vq4all::serving::tcp::{client_request, Shutdown, TcpServer};
+use vq4all::serving::{Engine, EngineConfig, HostedNet};
 use vq4all::util::cli::Cli;
 use vq4all::util::config::CampaignConfig;
 use vq4all::util::rng::Rng;
+use vq4all::vq::Codebook;
 
 fn build_server(args: &vq4all::util::cli::Args) -> anyhow::Result<TcpServer> {
     let cfg = CampaignConfig {
@@ -34,7 +37,17 @@ fn build_server(args: &vq4all::util::cli::Args) -> anyhow::Result<TcpServer> {
         .map(|s| s.trim().to_string())
         .filter(|s| !s.is_empty())
         .collect();
+    let universal = Arc::new(Codebook::new(
+        campaign.manifest.config.k,
+        campaign.manifest.config.d,
+        campaign.codebook.as_f32()?.to_vec(),
+    ));
+    let bc = BatcherConfig {
+        max_batch: args.usize_or("max-batch", 16)?,
+        max_linger_ns: args.usize_or("linger-us", 500)? as u64 * 1_000,
+    };
     let mut sessions = Vec::new();
+    let mut hosted = Vec::new();
     for name in &nets {
         let res = campaign.construct(name)?;
         let mut sess = NetSession::new(&campaign.rt, &campaign.manifest, name, &campaign.codebook)?;
@@ -46,15 +59,31 @@ fn build_server(args: &vq4all::util::cli::Args) -> anyhow::Result<TcpServer> {
             res.hard_metric,
             res.sizes.ratio()
         );
+        hosted.push(HostedNet {
+            name: name.clone(),
+            packed: res.packed.clone(),
+            codebook: universal.clone(),
+            codes_per_row: (res.packed.count / 64).max(1),
+            device_batch: bc.max_batch.max(1),
+        });
         sessions.push((sess, codes));
     }
-    Ok(TcpServer::new(
-        sessions,
-        BatcherConfig {
-            max_batch: args.usize_or("max-batch", 16)?,
-            max_linger_ns: args.usize_or("linger-us", 500)? as u64 * 1_000,
-        },
-    ))
+    let mut server = TcpServer::new(sessions, bc);
+    // Precedence: --shards/--cache-kb > [engine] config > defaults; the
+    // --threads pool parallelizes the plane's cache-miss decodes.
+    let knobs = args.engine_knobs_from_config(args.get("config"))?;
+    server.attach_plane(
+        Engine::new(
+            EngineConfig {
+                shards: knobs.shards,
+                cache_bytes: knobs.cache_bytes(),
+                batcher: bc,
+            },
+            hosted,
+        )?,
+        args.parallelism()?.pool(),
+    );
+    Ok(server)
 }
 
 fn storm(addr: &str, nets: &[&str], n: usize) -> anyhow::Result<()> {
@@ -93,7 +122,10 @@ fn main() -> anyhow::Result<()> {
         .opt("max-batch", "16", "batcher max batch")
         .opt("linger-us", "500", "batcher linger (us)")
         .opt("artifacts", "artifacts", "artifacts directory")
+        .opt("config", "", "config TOML ([engine] shards / cache_kb)")
         .flag("self-test", "spawn server in-process and storm it")
+        .engine_opts()
+        .threads_opt()
         .parse()?;
 
     let nets: Vec<String> = args
@@ -130,10 +162,21 @@ fn main() -> anyhow::Result<()> {
         println!("server: {served} requests served");
         for (name, st) in &server.stats {
             println!(
-                "  {name}: served {} in {} batches (avg {:.2}/batch)",
+                "  {name}: served {} in {} batches (avg {:.2}/batch, p50 {:.0}us p99 {:.0}us)",
                 st.served,
                 st.batches,
-                st.served as f64 / st.batches.max(1) as f64
+                st.served as f64 / st.batches.max(1) as f64,
+                st.latency_us.percentile(50.0),
+                st.latency_us.percentile(99.0)
+            );
+        }
+        if let Some(plane) = &server.plane {
+            let cs = plane.cache_stats();
+            println!(
+                "  decode plane: {} shards, {} weight-row lookups, hit_rate {:.3}",
+                plane.shard_count(),
+                cs.lookups,
+                cs.hit_rate()
             );
         }
         return Ok(());

@@ -14,11 +14,14 @@
 
 mod common;
 
+use std::sync::Arc;
+
 use vq4all::bench::{Bencher, Comparison};
 use vq4all::coordinator::calib::CalibStream;
 use vq4all::coordinator::{NetSession, PncScheduler};
 use vq4all::serving::switchsim::decode_batch;
-use vq4all::serving::{Batch, Request, Router};
+use vq4all::serving::{Batch, BatcherConfig, Engine, EngineConfig, HostedNet, Request, Router};
+use vq4all::util::json::Json;
 use vq4all::util::rng::Rng;
 use vq4all::util::threadpool::ThreadPool;
 use vq4all::vq::assign::{candidates_with, AssignInit};
@@ -168,6 +171,96 @@ fn main() -> anyhow::Result<()> {
     });
     comparisons.push(Comparison::new("batched_decode", &bd_serial, &bd_par, threads));
 
+    // --- engine: cold vs warm decode cache ----------------------------------
+    // One shard hosting the 64x4096 @8b stream with a budget that fits
+    // every decoded row: the cold pass decodes fresh each iteration
+    // (cache cleared), the warm pass is pure cache-block copies.
+    let cb_arc = Arc::new(cb.clone());
+    let engine_net = HostedNet {
+        name: "bench".into(),
+        packed: packed8.clone(),
+        codebook: cb_arc.clone(),
+        codes_per_row,
+        device_batch: device_rows,
+    };
+    let stride = codes_per_row * cb_arc.d;
+    let row_bytes = stride * std::mem::size_of::<f32>();
+    let engine_cfg = |shards: usize, cache_bytes: usize| EngineConfig {
+        shards,
+        cache_bytes,
+        batcher: BatcherConfig {
+            max_batch: 16,
+            max_linger_ns: 0,
+        },
+    };
+    let all_rows: Vec<usize> = (0..device_rows).collect();
+    let mut staging = vec![0.0f32; device_rows * stride];
+    let budget = device_rows * row_bytes + 1024;
+    let mut cold_engine =
+        Engine::new(engine_cfg(1, budget), vec![engine_net.clone()]).unwrap();
+    let cache_cold = b.bench("engine decode 64x4k @8b [cold cache]", || {
+        cold_engine.clear_caches();
+        cold_engine
+            .decode_rows_into("bench", &all_rows, &mut staging, Some(&pool))
+            .unwrap();
+        std::hint::black_box(staging[0]);
+    });
+    let mut warm_engine =
+        Engine::new(engine_cfg(1, budget), vec![engine_net.clone()]).unwrap();
+    warm_engine
+        .decode_rows_into("bench", &all_rows, &mut staging, Some(&pool))
+        .unwrap(); // prefill
+    let cache_warm = b.bench("engine decode 64x4k @8b [warm cache]", || {
+        warm_engine
+            .decode_rows_into("bench", &all_rows, &mut staging, Some(&pool))
+            .unwrap();
+        std::hint::black_box(staging[0]);
+    });
+    comparisons.push(Comparison::new("engine_cache", &cache_cold, &cache_warm, threads));
+    let cache_stats = warm_engine.cache_stats();
+    println!(
+        "engine cache: {} lookups, hit_rate {:.3}, {} evictions",
+        cache_stats.lookups,
+        cache_stats.hit_rate(),
+        cache_stats.evictions
+    );
+
+    // --- engine: 1 shard serial vs N shards pooled ---------------------------
+    // Four hosted nets, 128 requests round-robin; the serial run drives
+    // one shard with no pool, the sharded run fans nets across shards on
+    // the pool.  Cache off, so both runs do identical decode work.
+    let engine_shards = 4usize.min(threads.max(2));
+    let hosted_multi: Vec<HostedNet> = (0..4)
+        .map(|i| HostedNet {
+            name: format!("net{i}"),
+            packed: packed8.clone(),
+            codebook: cb_arc.clone(),
+            codes_per_row,
+            device_batch: 16,
+        })
+        .collect();
+    let submit_all = |e: &mut Engine| {
+        for r in 0..128usize {
+            e.submit(&format!("net{}", r % 4), (r * 7) % device_rows).unwrap();
+        }
+    };
+    // Engines are built once (hosting validation scans the streams) and
+    // reused: each iteration times submit + drain only.
+    let mut eng_serial = Engine::new(engine_cfg(1, 0), hosted_multi.clone()).unwrap();
+    let shards_serial = b.bench("engine drain 128 reqs / 4 nets [1 shard serial]", || {
+        submit_all(&mut eng_serial);
+        std::hint::black_box(eng_serial.drain(None).unwrap());
+    });
+    let mut eng_sharded = Engine::new(engine_cfg(engine_shards, 0), hosted_multi.clone()).unwrap();
+    let shards_par = b.bench(
+        &format!("engine drain 128 reqs / 4 nets [{engine_shards} shards pooled]"),
+        || {
+            submit_all(&mut eng_sharded);
+            std::hint::black_box(eng_sharded.drain(Some(&pool)).unwrap());
+        },
+    );
+    comparisons.push(Comparison::new("engine_shards", &shards_serial, &shards_par, threads));
+
     // --- router -------------------------------------------------------------
     b.bench("router submit+drain 1k reqs / 4 nets", || {
         let mut r = Router::new(&["a", "b", "c", "d"]);
@@ -239,9 +332,22 @@ fn main() -> anyhow::Result<()> {
             c.speedup()
         );
     }
+    let engine_extra = Json::obj(vec![
+        ("cache_hit_rate", Json::num(cache_stats.hit_rate())),
+        ("cache_hits", Json::num(cache_stats.hits as f64)),
+        ("cache_misses", Json::num(cache_stats.misses as f64)),
+        ("cache_evictions", Json::num(cache_stats.evictions as f64)),
+        ("shards", Json::num(engine_shards as f64)),
+    ]);
+    println!(
+        "engine summary: hit_rate {:.3} over {} lookups, {} shards in the sharded row",
+        cache_stats.hit_rate(),
+        cache_stats.lookups,
+        engine_shards
+    );
     let json_path = std::env::var("VQ4ALL_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
-    b.write_json(std::path::Path::new(&json_path), &comparisons)?;
+    b.write_json(std::path::Path::new(&json_path), &comparisons, &[("engine", engine_extra)])?;
     println!("bench report written to {json_path}");
     Ok(())
 }

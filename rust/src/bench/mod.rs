@@ -99,8 +99,15 @@ impl Bencher {
 
     /// Dump every recorded result (plus optional serial-vs-parallel
     /// comparisons) as a JSON report, so later PRs get a perf trajectory
-    /// (`BENCH_hotpath.json` is the first consumer).
-    pub fn write_json(&self, path: &Path, comparisons: &[Comparison]) -> anyhow::Result<()> {
+    /// (`BENCH_hotpath.json` is the first consumer).  `extras` appends
+    /// additional top-level keys (e.g. the serving-engine cache summary
+    /// `scripts/verify.sh` gates on).
+    pub fn write_json(
+        &self,
+        path: &Path,
+        comparisons: &[Comparison],
+        extras: &[(&str, Json)],
+    ) -> anyhow::Result<()> {
         let benchmarks = Json::Arr(
             self.results
                 .iter()
@@ -130,11 +137,15 @@ impl Bencher {
                 })
                 .collect(),
         );
-        let doc = Json::obj(vec![
+        let mut fields = vec![
             ("target_ms", Json::num(self.target_ms)),
             ("benchmarks", benchmarks),
             ("comparisons", comps),
-        ]);
+        ];
+        for (k, v) in extras {
+            fields.push((k, v.clone()));
+        }
+        let doc = Json::obj(fields);
         std::fs::write(path, doc.to_string())
             .map_err(|e| anyhow::anyhow!("writing bench report {path:?}: {e}"))?;
         Ok(())
@@ -286,12 +297,19 @@ mod tests {
         let comp = Comparison::new("kernel", &serial, &parallel, 4);
         assert!(comp.speedup() > 0.0);
         let path = std::env::temp_dir().join("vq4all_bench_report_test.json");
-        b.write_json(&path, &[comp]).unwrap();
+        let extra = crate::util::json::Json::obj(vec![(
+            "cache_hit_rate",
+            crate::util::json::Json::num(0.5),
+        )]);
+        b.write_json(&path, &[comp], &[("engine", extra)]).unwrap();
         let doc = crate::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(doc.req_arr("benchmarks").unwrap().len(), 2);
         let c = &doc.req_arr("comparisons").unwrap()[0];
         assert_eq!(c.req_str("name").unwrap(), "kernel");
         assert_eq!(c.req_usize("threads").unwrap(), 4);
+        // Extras land as top-level keys.
+        let eng = doc.req("engine").unwrap();
+        assert_eq!(eng.req_f64("cache_hit_rate").unwrap(), 0.5);
         let _ = std::fs::remove_file(&path);
     }
 

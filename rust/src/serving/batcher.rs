@@ -10,6 +10,7 @@ use crate::util::threadpool::ThreadPool;
 use crate::vq::codebook::Codebook;
 use crate::vq::pack::PackedCodes;
 
+use super::engine::stream::{self, DecodeStats};
 use super::router::Request;
 use super::switchsim::{decode_batch, BatchDecode};
 
@@ -85,6 +86,23 @@ impl Batch {
     ) -> anyhow::Result<BatchDecode> {
         decode_batch(self, packed, cb, codes_per_row, pool)
     }
+
+    /// Streaming twin of [`Batch::decode_rows`]: unpack + decode this
+    /// batch's weight rows **directly into `dst`** (the `infer_hard`
+    /// input staging buffer, `rows.len() * codes_per_row * cb.d` f32s),
+    /// skipping the intermediate weights allocation on the hot path.
+    /// Same row addressing and determinism contract — see
+    /// [`stream::decode_into`].
+    pub fn decode_rows_into(
+        &self,
+        packed: &PackedCodes,
+        cb: &Codebook,
+        codes_per_row: usize,
+        dst: &mut [f32],
+        pool: Option<&ThreadPool>,
+    ) -> anyhow::Result<DecodeStats> {
+        stream::decode_into(self, packed, cb, codes_per_row, dst, pool)
+    }
 }
 
 /// Decide whether a queue should fire now.
@@ -148,6 +166,25 @@ mod tests {
         let r = b.decode_rows(&packed, &cb, 2, None).unwrap();
         assert_eq!(r.weights, vec![1., 1., 1., 1.].repeat(3));
         assert!((r.utilization - b.utilization()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decode_rows_into_streams_the_same_bits() {
+        use crate::vq::pack::pack_codes;
+
+        let cb = Codebook::new(2, 2, vec![0., 0., 1., 1.]);
+        let packed = pack_codes(&[0u32, 1, 1, 1, 0, 0], 1); // 3 rows of 2 codes
+        let b = Batch::form("a", vec![req(0, 1, 0), req(1, 2, 0)], 3);
+        let alloc = b.decode_rows(&packed, &cb, 2, None).unwrap();
+        let mut dst = vec![0.0f32; b.rows.len() * 2 * cb.d];
+        let s = b.decode_rows_into(&packed, &cb, 2, &mut dst, None).unwrap();
+        assert_eq!(dst, alloc.weights);
+        assert_eq!(s.codes_unpacked, alloc.codes_unpacked);
+        assert_eq!(s.packed_bytes_read, alloc.packed_bytes_read);
+        assert!((s.utilization - alloc.utilization).abs() < 1e-12);
+        // Wrong-size destination is an error, not UB.
+        let mut short = vec![0.0f32; 5];
+        assert!(b.decode_rows_into(&packed, &cb, 2, &mut short, None).is_err());
     }
 
     #[test]

@@ -1,0 +1,246 @@
+//! Decode cache: an LRU over decoded f32 row-blocks keyed on
+//! `(net, row window)` with byte-budget eviction and hit/miss/evict
+//! accounting — the cache-aware half of the decode plane.  VQ serving
+//! lives or dies on codebook-access locality (VQ-LLM, arXiv:2503.02236);
+//! hot rows of a hosted network's packed stream are decoded once and
+//! then served as straight memcpys.
+//!
+//! **Coherence invariant:** entries are only ever inserted from the
+//! output of the streaming decode kernel and lookups return them
+//! unmodified, so a cache-served row is bit-identical to a fresh
+//! `decode_batch` of the same window — property-tested across evictions
+//! and widths 1..=32 in `rust/tests/prop_substrate.rs`.
+
+use std::collections::BTreeMap;
+
+/// Cache key: one decoded row window — codes `[start, end)` of a hosted
+/// network's packed assignment stream.  The network is identified by its
+/// shard-local numeric id (assigned at hosting time, see
+/// `Shard::net_id`), keeping the key `Copy` so the hot lookup path does
+/// no allocation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct RowWindow {
+    /// Shard-local hosted-net id.
+    pub net: u32,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// Hit/miss/evict accounting.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub lookups: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+
+    /// Fold another shard's counters in (engine-level aggregation).
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.lookups += other.lookups;
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.evictions += other.evictions;
+    }
+}
+
+struct Entry {
+    data: Vec<f32>,
+    stamp: u64,
+}
+
+/// LRU decode cache with a byte budget (`budget_bytes == 0` disables
+/// caching entirely: every lookup misses and inserts are dropped).
+pub struct DecodeCache {
+    budget_bytes: usize,
+    bytes: usize,
+    map: BTreeMap<RowWindow, Entry>,
+    /// Recency index: stamp -> key.  Stamps are unique (monotone clock),
+    /// so the smallest stamp is always the least-recently-used entry.
+    lru: BTreeMap<u64, RowWindow>,
+    clock: u64,
+    pub stats: CacheStats,
+}
+
+impl DecodeCache {
+    pub fn new(budget_bytes: usize) -> Self {
+        DecodeCache {
+            budget_bytes,
+            bytes: 0,
+            map: BTreeMap::new(),
+            lru: BTreeMap::new(),
+            clock: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.budget_bytes > 0
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Resident f32 payload bytes.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Drop every entry (counters survive — they are cumulative).
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.lru.clear();
+        self.bytes = 0;
+    }
+
+    /// Look up a window.  A hit refreshes recency and returns the block.
+    pub fn get(&mut self, key: &RowWindow) -> Option<&[f32]> {
+        self.stats.lookups += 1;
+        let old_stamp = match self.map.get(key) {
+            Some(e) => e.stamp,
+            None => {
+                self.stats.misses += 1;
+                return None;
+            }
+        };
+        self.stats.hits += 1;
+        self.lru.remove(&old_stamp);
+        self.clock += 1;
+        self.lru.insert(self.clock, *key);
+        let e = self.map.get_mut(key).expect("entry vanished between lookups");
+        e.stamp = self.clock;
+        Some(&e.data)
+    }
+
+    /// Insert (or refresh) a decoded block, evicting least-recently-used
+    /// entries until the byte budget holds.  Blocks larger than the whole
+    /// budget are not cached (they would evict everything for one row).
+    pub fn insert(&mut self, key: RowWindow, data: &[f32]) {
+        let bytes = data.len() * std::mem::size_of::<f32>();
+        if !self.enabled() || bytes > self.budget_bytes {
+            return;
+        }
+        if let Some(old) = self.map.remove(&key) {
+            self.lru.remove(&old.stamp);
+            self.bytes -= old.data.len() * std::mem::size_of::<f32>();
+        }
+        while self.bytes + bytes > self.budget_bytes {
+            let (&victim_stamp, _) = self
+                .lru
+                .iter()
+                .next()
+                .expect("over budget with no resident entries");
+            let victim = self.lru.remove(&victim_stamp).unwrap();
+            let e = self.map.remove(&victim).unwrap();
+            self.bytes -= e.data.len() * std::mem::size_of::<f32>();
+            self.stats.evictions += 1;
+        }
+        self.clock += 1;
+        self.lru.insert(self.clock, key);
+        self.map.insert(
+            key,
+            Entry {
+                data: data.to_vec(),
+                stamp: self.clock,
+            },
+        );
+        self.bytes += bytes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(net: u32, row: usize) -> RowWindow {
+        RowWindow {
+            net,
+            start: row * 4,
+            end: (row + 1) * 4,
+        }
+    }
+
+    #[test]
+    fn hit_returns_exact_block_and_counts() {
+        let mut c = DecodeCache::new(1024);
+        assert!(c.get(&key(0, 0)).is_none());
+        c.insert(key(0, 0), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(c.get(&key(0, 0)).unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        assert!(c.get(&key(1, 0)).is_none(), "keys are per-net");
+        assert_eq!(c.stats.lookups, 3);
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.stats.misses, 2);
+        assert!((c.stats.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(c.bytes(), 16);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn evicts_least_recently_used_under_byte_budget() {
+        // Budget fits exactly two 4-f32 blocks (32 bytes).
+        let mut c = DecodeCache::new(32);
+        c.insert(key(0, 0), &[0.0; 4]);
+        c.insert(key(0, 1), &[1.0; 4]);
+        assert_eq!(c.len(), 2);
+        // Touch row 0 so row 1 becomes the LRU victim.
+        assert!(c.get(&key(0, 0)).is_some());
+        c.insert(key(0, 2), &[2.0; 4]);
+        assert_eq!(c.stats.evictions, 1);
+        assert!(c.get(&key(0, 1)).is_none(), "LRU entry evicted");
+        assert!(c.get(&key(0, 0)).is_some(), "recently-used entry kept");
+        assert!(c.get(&key(0, 2)).is_some());
+        assert!(c.bytes() <= 32, "budget respected: {} bytes", c.bytes());
+    }
+
+    #[test]
+    fn oversized_blocks_and_disabled_cache_are_no_ops() {
+        let mut c = DecodeCache::new(8);
+        c.insert(key(0, 0), &[0.0; 4]); // 16 bytes > 8 budget
+        assert!(c.is_empty());
+        let mut off = DecodeCache::new(0);
+        off.insert(key(0, 0), &[0.0]);
+        assert!(off.get(&key(0, 0)).is_none());
+        assert!(!off.enabled());
+        assert_eq!(off.stats.misses, 1);
+    }
+
+    #[test]
+    fn reinsert_replaces_without_leaking_bytes() {
+        let mut c = DecodeCache::new(64);
+        c.insert(key(0, 0), &[0.0; 4]);
+        c.insert(key(0, 0), &[9.0; 4]);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes(), 16);
+        assert_eq!(c.get(&key(0, 0)).unwrap(), &[9.0; 4]);
+    }
+
+    #[test]
+    fn clear_drops_entries_but_keeps_counters() {
+        let mut c = DecodeCache::new(64);
+        c.insert(key(0, 0), &[0.0; 4]);
+        assert!(c.get(&key(0, 0)).is_some());
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.bytes(), 0);
+        assert_eq!(c.stats.hits, 1, "cumulative counters survive clear");
+        assert!(c.get(&key(0, 0)).is_none());
+    }
+}

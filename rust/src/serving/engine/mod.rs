@@ -1,0 +1,490 @@
+//! `serving::engine` — the sharded, cache-aware decode plane.
+//!
+//! The paper's deployment argument (§3.2) is that a ROM-resident
+//! universal codebook makes hosting *many* networks on one platform
+//! cheap; what remains expensive at serving time is repeatedly unpacking
+//! and decoding assignment streams.  This subsystem attacks that cost on
+//! three axes:
+//!
+//! * **Sharded dispatch plane** ([`Engine`]) — `EngineConfig::shards`
+//!   worker shards, each owning a disjoint subset of the hosted networks
+//!   with its own router queue set ([`shard`]).  Shards share no mutable
+//!   state, so the engine fans them across `util::threadpool` under the
+//!   established deterministic-chunking contract: per-shard results and
+//!   cache state are bit-identical at every thread count, and every
+//!   accepted request is dispatched exactly once (property-tested in
+//!   `rust/tests/prop_substrate.rs`).
+//! * **Decode cache** ([`cache`]) — an LRU keyed on `(net, row window)`
+//!   holding decoded f32 row-blocks, with byte-budget eviction and
+//!   hit/miss/evict accounting.  Cache-served rows are bit-identical to
+//!   a fresh `decode_batch` (the coherence invariant, property-tested).
+//! * **Streaming decode** ([`stream`]) — [`stream::decode_into`] /
+//!   `Batch::decode_rows_into` unpack + decode straight into a
+//!   caller-provided `infer_hard` staging buffer through the fused
+//!   [`crate::vq::Codebook::decode_packed_into`] kernel, eliminating the
+//!   intermediate weights allocation on the hot path.
+//!
+//! `serving::server` (virtual clock) and `serving::tcp` (wall clock)
+//! attach an [`Engine`] as their decode plane; `benches/hotpath.rs`
+//! tracks cold-vs-warm-cache and 1-vs-N-shard engine rows in
+//! `BENCH_hotpath.json`, gated by `scripts/verify.sh`.
+
+pub mod cache;
+pub mod shard;
+pub mod stream;
+
+pub use cache::{CacheStats, DecodeCache, RowWindow};
+pub use shard::{HostedNet, RowServe, Shard, ShardStats};
+pub use stream::{decode_into, decode_rows_into, DecodeStats};
+
+use std::collections::BTreeMap;
+
+use crate::serving::batcher::BatcherConfig;
+use crate::util::threadpool::{SyncPtr, ThreadPool};
+
+/// Engine-level configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    /// Worker shards (clamped to the hosted-network count).
+    pub shards: usize,
+    /// Per-shard decode-cache byte budget (0 disables the cache).
+    pub cache_bytes: usize,
+    /// Batching policy every shard applies to its queues.
+    pub batcher: BatcherConfig,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            shards: 1,
+            cache_bytes: 1 << 20, // 1 MiB per shard
+            batcher: BatcherConfig::default(),
+        }
+    }
+}
+
+/// Aggregate serving counters across shards.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineTotals {
+    pub served: u64,
+    pub batches: u64,
+    pub padded_rows: u64,
+    pub rows_decoded: u64,
+    pub rows_from_cache: u64,
+}
+
+/// The sharded, cache-aware decode plane.
+pub struct Engine {
+    pub cfg: EngineConfig,
+    shards: Vec<Shard>,
+    /// net -> shard index (deterministic round-robin placement).
+    placement: BTreeMap<String, usize>,
+    /// Virtual time (ns) — advanced by [`Engine::tick`], mirrored into
+    /// every shard dispatch.
+    pub now_ns: u64,
+    accepted: u64,
+}
+
+impl Engine {
+    /// Build the plane: networks are assigned to shards round-robin in
+    /// the given order, so placement depends only on the input order —
+    /// never on thread scheduling.
+    pub fn new(cfg: EngineConfig, nets: Vec<HostedNet>) -> anyhow::Result<Self> {
+        anyhow::ensure!(cfg.shards >= 1, "engine needs at least one shard");
+        anyhow::ensure!(cfg.batcher.max_batch >= 1, "engine batcher needs max_batch >= 1");
+        anyhow::ensure!(!nets.is_empty(), "engine hosts no networks");
+        let nshards = cfg.shards.min(nets.len());
+        let mut buckets: Vec<Vec<HostedNet>> = (0..nshards).map(|_| Vec::new()).collect();
+        let mut placement = BTreeMap::new();
+        for (i, n) in nets.into_iter().enumerate() {
+            let s = i % nshards;
+            anyhow::ensure!(
+                placement.insert(n.name.clone(), s).is_none(),
+                "duplicate hosted network {:?}",
+                n.name
+            );
+            buckets[s].push(n);
+        }
+        let shards = buckets
+            .into_iter()
+            .enumerate()
+            .map(|(id, ns)| Shard::new(id, ns, cfg.cache_bytes))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Engine {
+            cfg,
+            shards,
+            placement,
+            now_ns: 0,
+            accepted: 0,
+        })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shards(&self) -> &[Shard] {
+        &self.shards
+    }
+
+    pub fn hosts(&self, net: &str) -> bool {
+        self.placement.contains_key(net)
+    }
+
+    /// The hosted network's descriptor (None if unknown).
+    pub fn hosted(&self, net: &str) -> Option<&HostedNet> {
+        self.placement.get(net).and_then(|&s| self.shards[s].net(net))
+    }
+
+    /// Decoded f32s per row of `net`.
+    pub fn row_stride(&self, net: &str) -> anyhow::Result<usize> {
+        self.hosted(net)
+            .map(|n| n.row_stride())
+            .ok_or_else(|| anyhow::anyhow!("engine: unknown network {net:?}"))
+    }
+
+    /// Advance virtual time.
+    pub fn tick(&mut self, ns: u64) {
+        self.now_ns += ns;
+    }
+
+    /// Enqueue a request on the owning shard at the current virtual
+    /// time; returns its shard-local id.  Out-of-range rows are rejected
+    /// here (before they can reach a decode), so `accepted` counts only
+    /// requests the plane is obligated to serve.
+    pub fn submit(&mut self, net: &str, row: usize) -> anyhow::Result<u64> {
+        let &s = self
+            .placement
+            .get(net)
+            .ok_or_else(|| anyhow::anyhow!("engine: unknown network {net:?}"))?;
+        let shard = &mut self.shards[s];
+        let stream_rows = shard.net(net).expect("placement without hosted net").stream_rows();
+        anyhow::ensure!(
+            row < stream_rows,
+            "engine: row {row} out of range for {net:?} ({stream_rows} stream rows)"
+        );
+        let id = shard.router.submit(net, row, self.now_ns)?;
+        self.accepted += 1;
+        Ok(id)
+    }
+
+    pub fn total_pending(&self) -> usize {
+        self.shards.iter().map(|s| s.router.total_pending()).sum()
+    }
+
+    /// One dispatch round: every shard fires at most one batch.  With a
+    /// multi-thread pool and more than one shard, shards run
+    /// concurrently (they share no state) with serial in-shard decode;
+    /// otherwise shards run in order and the pool (if any) parallelizes
+    /// the in-shard row decode instead.  Either way each shard's
+    /// behavior depends only on its own queues and the virtual clock, so
+    /// outputs, stats, and cache state are bit-identical.
+    pub fn dispatch_round(&mut self, pool: Option<&ThreadPool>) -> anyhow::Result<usize> {
+        let now = self.now_ns;
+        let cfg = self.cfg.batcher;
+        match pool {
+            Some(tp) if tp.threads() > 1 && self.shards.len() > 1 => {
+                let n = self.shards.len();
+                let mut results: Vec<anyhow::Result<usize>> = (0..n).map(|_| Ok(0)).collect();
+                let shards_ptr = SyncPtr::new(&mut self.shards);
+                let res_ptr = SyncPtr::new(&mut results);
+                tp.parallel_for(n, 1, |start, end| {
+                    for s in start..end {
+                        // SAFETY: each chunk owns disjoint shard + result
+                        // slots.
+                        let shard = unsafe { &mut shards_ptr.slice(s, 1)[0] };
+                        let out = unsafe { &mut res_ptr.slice(s, 1)[0] };
+                        *out = shard.dispatch_one(&cfg, now, None);
+                    }
+                })
+                .expect("engine shard worker panicked");
+                let mut total = 0;
+                for r in results {
+                    total += r?;
+                }
+                Ok(total)
+            }
+            _ => {
+                let mut total = 0;
+                for shard in &mut self.shards {
+                    total += shard.dispatch_one(&cfg, now, pool)?;
+                }
+                Ok(total)
+            }
+        }
+    }
+
+    /// Dispatch until every queue is empty, force-firing partial batches
+    /// by advancing the virtual clock past the linger deadline (mirrors
+    /// `server::drain_all`).
+    pub fn drain(&mut self, pool: Option<&ThreadPool>) -> anyhow::Result<u64> {
+        let mut total = 0u64;
+        loop {
+            let before = self.total_pending();
+            if before == 0 {
+                break;
+            }
+            self.tick(self.cfg.batcher.max_linger_ns + 1);
+            let served = self.dispatch_round(pool)?;
+            total += served as u64;
+            if served == 0 && self.total_pending() == before {
+                anyhow::bail!("engine wedged with {before} pending requests");
+            }
+        }
+        Ok(total)
+    }
+
+    /// Conservation counters `(accepted, dispatched)` — equal once the
+    /// plane is drained.
+    pub fn counters(&self) -> (u64, u64) {
+        (
+            self.accepted,
+            self.shards.iter().map(|s| s.stats.served).sum(),
+        )
+    }
+
+    /// Aggregate decode-cache counters across shards.
+    pub fn cache_stats(&self) -> CacheStats {
+        let mut out = CacheStats::default();
+        for s in &self.shards {
+            out.merge(&s.cache.stats);
+        }
+        out
+    }
+
+    /// Aggregate serving counters across shards.
+    pub fn totals(&self) -> EngineTotals {
+        let mut t = EngineTotals::default();
+        for s in &self.shards {
+            t.served += s.stats.served;
+            t.batches += s.stats.batches;
+            t.padded_rows += s.stats.padded_rows;
+            t.rows_decoded += s.stats.rows_decoded;
+            t.rows_from_cache += s.stats.rows_from_cache;
+        }
+        t
+    }
+
+    /// Drop every shard's cache entries (cumulative counters survive) —
+    /// the bench's cold-cache reset.
+    pub fn clear_caches(&mut self) {
+        for s in &mut self.shards {
+            s.cache.clear();
+        }
+    }
+
+    /// The raw decode-plane API: stream `rows` of `net` through the
+    /// owning shard's cache into `dst` (`dst.len() == rows.len() *
+    /// row_stride`).  Batch-serving callers use [`Engine::stream_batch`].
+    pub fn decode_rows_into(
+        &mut self,
+        net: &str,
+        rows: &[usize],
+        dst: &mut [f32],
+        pool: Option<&ThreadPool>,
+    ) -> anyhow::Result<RowServe> {
+        let &s = self
+            .placement
+            .get(net)
+            .ok_or_else(|| anyhow::anyhow!("engine: unknown network {net:?}"))?;
+        self.shards[s].decode_rows_into(net, rows, dst, pool)
+    }
+
+    /// Stream a dispatched batch's weight rows through the owning
+    /// shard's cache into its staging buffer, mapping caller rows onto
+    /// the packed stream cyclically — the one call `serving::server` and
+    /// `serving::tcp` make per batch.  `Ok(None)` when `net` is not
+    /// hosted on this plane.
+    pub fn stream_batch(
+        &mut self,
+        net: &str,
+        rows: &[usize],
+        pool: Option<&ThreadPool>,
+    ) -> anyhow::Result<Option<RowServe>> {
+        let Some(&s) = self.placement.get(net) else {
+            return Ok(None);
+        };
+        self.shards[s].stream_batch(net, rows, pool).map(Some)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::vq::pack::pack_codes;
+    use crate::vq::Codebook;
+    use std::sync::Arc;
+
+    fn hosted(name: &str, rows: usize, cpr: usize, cb: &Arc<Codebook>, rng: &mut Rng) -> HostedNet {
+        let codes: Vec<u32> = (0..rows * cpr).map(|_| rng.below(cb.k) as u32).collect();
+        HostedNet {
+            name: name.into(),
+            packed: pack_codes(&codes, cb.index_bits()),
+            codebook: cb.clone(),
+            codes_per_row: cpr,
+            device_batch: 4,
+        }
+    }
+
+    fn test_cb(rng: &mut Rng) -> Arc<Codebook> {
+        let mut words = vec![0.0f32; 8 * 2];
+        rng.fill_normal(&mut words);
+        Arc::new(Codebook::new(8, 2, words))
+    }
+
+    fn cfg(shards: usize, cache_bytes: usize) -> EngineConfig {
+        EngineConfig {
+            shards,
+            cache_bytes,
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_linger_ns: 100,
+            },
+        }
+    }
+
+    #[test]
+    fn placement_is_round_robin_and_disjoint() {
+        let mut rng = Rng::new(1);
+        let cb = test_cb(&mut rng);
+        let nets: Vec<HostedNet> = (0..5)
+            .map(|i| hosted(&format!("n{i}"), 6, 3, &cb, &mut rng))
+            .collect();
+        let e = Engine::new(cfg(2, 0), nets).unwrap();
+        assert_eq!(e.shard_count(), 2);
+        // Round-robin: n0,n2,n4 -> shard 0; n1,n3 -> shard 1.
+        for (name, want) in [("n0", 0), ("n1", 1), ("n2", 0), ("n3", 1), ("n4", 0)] {
+            assert!(e.hosts(name));
+            assert!(e.shards()[want].hosts(name), "{name} not on shard {want}");
+        }
+        assert!(!e.hosts("ghost"));
+        assert!(e.hosted("n3").is_some());
+        // More shards than nets clamps.
+        let mut rng = Rng::new(2);
+        let cb = test_cb(&mut rng);
+        let one = vec![hosted("solo", 4, 2, &cb, &mut rng)];
+        assert_eq!(Engine::new(cfg(8, 0), one).unwrap().shard_count(), 1);
+    }
+
+    #[test]
+    fn submit_validates_net_and_row() {
+        let mut rng = Rng::new(3);
+        let cb = test_cb(&mut rng);
+        let mut e = Engine::new(cfg(1, 0), vec![hosted("a", 6, 3, &cb, &mut rng)]).unwrap();
+        assert!(e.submit("ghost", 0).is_err());
+        assert!(e.submit("a", 6).is_err(), "stream holds rows 0..6");
+        e.submit("a", 5).unwrap();
+        let (acc, disp) = e.counters();
+        assert_eq!((acc, disp), (1, 0), "rejected submits are not accepted");
+    }
+
+    #[test]
+    fn drain_serves_everything_exactly_once_across_shards() {
+        let mut rng = Rng::new(4);
+        let cb = test_cb(&mut rng);
+        let nets: Vec<HostedNet> = (0..3)
+            .map(|i| hosted(&format!("n{i}"), 8, 2, &cb, &mut rng))
+            .collect();
+        let mut e = Engine::new(cfg(3, 4096), nets).unwrap();
+        let mut per_net = [0u64; 3];
+        for i in 0..37 {
+            let n = i % 3;
+            e.submit(&format!("n{n}"), i % 8).unwrap();
+            per_net[n] += 1;
+        }
+        let served = e.drain(None).unwrap();
+        assert_eq!(served, 37);
+        let (acc, disp) = e.counters();
+        assert_eq!(acc, 37);
+        assert_eq!(disp, 37);
+        assert_eq!(e.total_pending(), 0);
+        for (i, &want) in per_net.iter().enumerate() {
+            let name = format!("n{i}");
+            let got: u64 = e
+                .shards()
+                .iter()
+                .map(|s| s.stats.served_by_net.get(&name).copied().unwrap_or(0))
+                .sum();
+            assert_eq!(got, want, "{name} served count");
+        }
+        let t = e.totals();
+        assert_eq!(t.served, 37);
+        assert_eq!(t.rows_decoded + t.rows_from_cache, t.served + t.padded_rows);
+        assert!(t.rows_from_cache > 0, "repeat rows should hit the cache");
+    }
+
+    #[test]
+    fn decode_plane_matches_fresh_decode_and_counts_hits() {
+        let mut rng = Rng::new(5);
+        let cb = test_cb(&mut rng);
+        let net = hosted("a", 6, 4, &cb, &mut rng);
+        let packed = net.packed.clone();
+        let mut e = Engine::new(cfg(1, 1 << 16), vec![net]).unwrap();
+        let stride = e.row_stride("a").unwrap();
+        let rows = [3usize, 1, 3];
+        let mut dst = vec![0.0f32; rows.len() * stride];
+        let first = e.decode_rows_into("a", &rows, &mut dst, None).unwrap();
+        assert_eq!(first, RowServe { hits: 0, misses: 3 });
+        // Second pass over the same rows is all cache hits…
+        let mut dst2 = vec![0.0f32; rows.len() * stride];
+        let second = e.decode_rows_into("a", &rows, &mut dst2, None).unwrap();
+        assert_eq!(second, RowServe { hits: 3, misses: 0 });
+        // …and bit-identical to the fresh decode.
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&dst), bits(&dst2));
+        for (i, &row) in rows.iter().enumerate() {
+            let mut fresh = vec![0.0f32; stride];
+            cb.decode_packed_into(&packed, row * 4, (row + 1) * 4, &mut fresh);
+            assert_eq!(bits(&dst2[i * stride..(i + 1) * stride]), bits(&fresh));
+        }
+        let cs = e.cache_stats();
+        assert_eq!(cs.lookups, 6);
+        assert_eq!(cs.hits, 3);
+        assert_eq!(cs.misses, 3);
+        assert!((cs.hit_rate() - 0.5).abs() < 1e-12);
+        e.clear_caches();
+        let third = e.decode_rows_into("a", &rows, &mut dst2, None).unwrap();
+        assert_eq!(third.misses, 3, "cleared cache decodes fresh");
+    }
+
+    #[test]
+    fn stream_batch_maps_rows_cyclically_and_skips_unhosted_nets() {
+        let mut rng = Rng::new(7);
+        let cb = test_cb(&mut rng);
+        let net = hosted("a", 4, 3, &cb, &mut rng); // 4 stream rows
+        let mut e = Engine::new(cfg(1, 1 << 16), vec![net]).unwrap();
+        // Caller rows beyond the stream wrap cyclically: 5 % 4 == 1, so
+        // both positions decode window 1 (both miss — inserts happen
+        // after the batch's lookups).
+        let rs = e.stream_batch("a", &[5, 1], None).unwrap().unwrap();
+        assert_eq!(rs, RowServe { hits: 0, misses: 2 });
+        let rs2 = e.stream_batch("a", &[5], None).unwrap().unwrap();
+        assert_eq!(rs2, RowServe { hits: 1, misses: 0 }, "wrapped row hits the cached window");
+        assert!(e.stream_batch("ghost", &[0], None).unwrap().is_none());
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let mut rng = Rng::new(6);
+        let cb = test_cb(&mut rng);
+        assert!(Engine::new(cfg(0, 0), vec![hosted("a", 4, 2, &cb, &mut rng)]).is_err());
+        assert!(Engine::new(cfg(1, 0), vec![]).is_err());
+        let dup = vec![hosted("a", 4, 2, &cb, &mut rng), hosted("a", 4, 2, &cb, &mut rng)];
+        assert!(Engine::new(cfg(2, 0), dup).is_err());
+        let mut zero_batch = cfg(1, 0);
+        zero_batch.batcher.max_batch = 0;
+        assert!(Engine::new(zero_batch, vec![hosted("a", 4, 2, &cb, &mut rng)]).is_err());
+        // Packed codes that cannot address the codebook are rejected at
+        // hosting time, not mid-serve.
+        let cb3 = Arc::new(Codebook::new(3, 1, vec![0.0, 1.0, 2.0]));
+        let bad = HostedNet {
+            name: "bad".into(),
+            packed: pack_codes(&[0u32, 1, 2, 3], 2), // code 3 >= k = 3
+            codebook: cb3,
+            codes_per_row: 2,
+            device_batch: 1,
+        };
+        assert!(Engine::new(cfg(1, 0), vec![bad]).is_err());
+    }
+}

@@ -1,0 +1,333 @@
+//! One engine shard: a disjoint subset of the hosted networks with its
+//! own router queue set, decode cache, and reusable streaming-decode
+//! staging buffer.  Shards share no mutable state, so the engine can fan
+//! them across the worker pool — and because each shard's behavior
+//! depends only on its own queues and the virtual clock, results and
+//! cache state are bit-identical at every thread count.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::serving::batcher::{Batch, BatcherConfig};
+use crate::serving::router::Router;
+use crate::util::stats::Summary;
+use crate::util::threadpool::{SyncPtr, ThreadPool};
+use crate::vq::codebook::Codebook;
+use crate::vq::pack::{unpack_range, PackedCodes};
+
+use super::cache::{DecodeCache, RowWindow};
+
+/// One network hosted on the decode plane: its packed assignment stream,
+/// the shared (ROM-resident) universal codebook, and the row geometry —
+/// row `r` covers codes `[r * codes_per_row, (r + 1) * codes_per_row)`.
+#[derive(Clone, Debug)]
+pub struct HostedNet {
+    pub name: String,
+    pub packed: PackedCodes,
+    /// Shared universal codebook (one `Arc` across every hosted net —
+    /// the §3.2 premise).
+    pub codebook: Arc<Codebook>,
+    pub codes_per_row: usize,
+    /// Fixed device batch its `infer_hard` artifact was lowered at.
+    pub device_batch: usize,
+}
+
+impl HostedNet {
+    /// Rows the packed stream holds at this geometry.
+    pub fn stream_rows(&self) -> usize {
+        self.packed.count / self.codes_per_row
+    }
+
+    /// Decoded f32s per row.
+    pub fn row_stride(&self) -> usize {
+        self.codes_per_row * self.codebook.d
+    }
+}
+
+/// Cache-aware row serve accounting.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RowServe {
+    /// Rows copied straight out of the decode cache.
+    pub hits: usize,
+    /// Rows decoded fresh from the packed stream.
+    pub misses: usize,
+}
+
+/// Per-shard serving statistics.
+#[derive(Clone, Debug, Default)]
+pub struct ShardStats {
+    pub served: u64,
+    pub batches: u64,
+    pub padded_rows: u64,
+    /// Rows decoded fresh (cache misses or cache off).
+    pub rows_decoded: u64,
+    /// Rows served out of the decode cache.
+    pub rows_from_cache: u64,
+    /// Per-net served counts (the engine's conservation ledger).
+    pub served_by_net: BTreeMap<String, u64>,
+    /// Virtual-clock queue latency (ns) — bounded accounting.
+    pub latency_ns: Summary,
+}
+
+/// One dispatch shard.
+pub struct Shard {
+    pub id: usize,
+    pub router: Router,
+    /// Hosted nets plus their shard-local numeric ids (the `Copy` cache
+    /// key component — no per-row name clones on the lookup path).
+    nets: BTreeMap<String, (u32, HostedNet)>,
+    pub cache: DecodeCache,
+    /// Streaming-decode destination, reused across batches — the
+    /// `infer_hard` input staging buffer of this shard.
+    staging: Vec<f32>,
+    pub stats: ShardStats,
+}
+
+impl Shard {
+    pub fn new(id: usize, nets: Vec<HostedNet>, cache_bytes: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(!nets.is_empty(), "shard {id} hosts no networks");
+        for n in &nets {
+            anyhow::ensure!(n.codes_per_row > 0, "{:?}: codes_per_row must be positive", n.name);
+            anyhow::ensure!(n.device_batch > 0, "{:?}: device_batch must be positive", n.name);
+            anyhow::ensure!(
+                n.stream_rows() > 0,
+                "{:?}: packed stream of {} codes holds no rows of {}",
+                n.name,
+                n.packed.count,
+                n.codes_per_row
+            );
+            // One-time hosting validation: every packed code must address
+            // a real codeword, whatever the pack width — decode would
+            // panic mid-serve otherwise.  Chunked so hosting a large
+            // stream needs no O(count) allocation.
+            let mut buf = [0u32; 512];
+            let mut s = 0;
+            while s < n.packed.count {
+                let e = (s + buf.len()).min(n.packed.count);
+                let chunk = &mut buf[..e - s];
+                unpack_range(&n.packed, s, e, chunk);
+                if let Some(&bad) = chunk.iter().find(|&&c| c as usize >= n.codebook.k) {
+                    anyhow::bail!(
+                        "{:?}: packed code {bad} cannot address the k={} codebook",
+                        n.name,
+                        n.codebook.k
+                    );
+                }
+                s = e;
+            }
+        }
+        let names: Vec<&str> = nets.iter().map(|n| n.name.as_str()).collect();
+        let router = Router::new(&names);
+        // Ids follow hosting order — deterministic, never thread-derived.
+        let map: BTreeMap<String, (u32, HostedNet)> = nets
+            .into_iter()
+            .enumerate()
+            .map(|(i, n)| (n.name.clone(), (i as u32, n)))
+            .collect();
+        Ok(Shard {
+            id,
+            router,
+            nets: map,
+            cache: DecodeCache::new(cache_bytes),
+            staging: Vec::new(),
+            stats: ShardStats::default(),
+        })
+    }
+
+    pub fn hosts(&self, net: &str) -> bool {
+        self.nets.contains_key(net)
+    }
+
+    pub fn net(&self, net: &str) -> Option<&HostedNet> {
+        self.nets.get(net).map(|(_, n)| n)
+    }
+
+    /// The shard-local numeric id of a hosted net (the cache-key
+    /// component).
+    pub fn net_id(&self, net: &str) -> Option<u32> {
+        self.nets.get(net).map(|&(id, _)| id)
+    }
+
+    /// Hosted networks in deterministic (name) order.
+    pub fn net_names(&self) -> impl Iterator<Item = &str> {
+        self.nets.keys().map(|s| s.as_str())
+    }
+
+    /// Cache-aware streaming decode of `rows` of `net` into `dst`
+    /// (`dst.len() == rows.len() * row_stride`).  This is the raw decode
+    /// plane (caller-provided buffer); batch-serving callers use
+    /// [`Shard::stream_batch`].
+    pub fn decode_rows_into(
+        &mut self,
+        net: &str,
+        rows: &[usize],
+        dst: &mut [f32],
+        pool: Option<&ThreadPool>,
+    ) -> anyhow::Result<RowServe> {
+        let (net_id, n) = self
+            .nets
+            .get(net)
+            .ok_or_else(|| anyhow::anyhow!("shard {}: unknown network {net:?}", self.id))?;
+        serve_rows_into(n, *net_id, &mut self.cache, rows, dst, pool)
+    }
+
+    /// Cache-aware streaming decode of a dispatched batch's weight rows
+    /// into this shard's own staging buffer, mapping caller rows onto
+    /// the packed stream cyclically (safe for geometries where the
+    /// request-row space exceeds the stream).  The one call
+    /// `serving::server` / `serving::tcp` make per batch.
+    pub fn stream_batch(
+        &mut self,
+        net: &str,
+        rows: &[usize],
+        pool: Option<&ThreadPool>,
+    ) -> anyhow::Result<RowServe> {
+        let (net_id, n) = self
+            .nets
+            .get(net)
+            .ok_or_else(|| anyhow::anyhow!("shard {}: unknown network {net:?}", self.id))?;
+        let srows = n.stream_rows();
+        let mapped: Vec<usize> = rows.iter().map(|r| r % srows).collect();
+        let stride = n.row_stride();
+        self.staging.resize(mapped.len() * stride, 0.0);
+        serve_rows_into(n, *net_id, &mut self.cache, &mapped, &mut self.staging, pool)
+    }
+
+    /// Fire at most one batch if any hosted queue should; returns the
+    /// number of real requests served (0 if nothing fired).  The decode
+    /// streams through the cache into the shard's staging buffer.
+    pub fn dispatch_one(
+        &mut self,
+        cfg: &BatcherConfig,
+        now_ns: u64,
+        pool: Option<&ThreadPool>,
+    ) -> anyhow::Result<usize> {
+        let fire = self.router.next_fireable(cfg, now_ns).map(|n| n.to_string());
+        let Some(name) = fire else { return Ok(0) };
+        let device_batch = self
+            .nets
+            .get(&name)
+            .expect("router queue without hosted net")
+            .1
+            .device_batch;
+        // Never drain more than one device batch can carry — leftovers
+        // stay queued instead of being dropped.
+        let reqs = self.router.drain_net(&name, cfg.max_batch.min(device_batch));
+        let batch = Batch::form(&name, reqs, device_batch);
+        // Submitted rows were validated < stream_rows, so the cyclic
+        // mapping inside stream_batch is the identity here.
+        let serve = self.stream_batch(&name, &batch.rows, pool)?;
+
+        let st = &mut self.stats;
+        st.served += batch.requests.len() as u64;
+        st.batches += 1;
+        st.padded_rows += batch.padded as u64;
+        st.rows_from_cache += serve.hits as u64;
+        st.rows_decoded += serve.misses as u64;
+        *st.served_by_net.entry(name).or_insert(0) += batch.requests.len() as u64;
+        for r in &batch.requests {
+            st.latency_ns.push(now_ns.saturating_sub(r.arrived_ns) as f64);
+        }
+        Ok(batch.requests.len())
+    }
+}
+
+/// The cache-aware serve kernel: hits copy the cached block into `dst`,
+/// misses decode fresh (pooled over the miss list, disjoint windows) and
+/// then populate the cache **in row order** — so serial and pooled runs
+/// leave bit-identical cache state and output.
+fn serve_rows_into(
+    net: &HostedNet,
+    net_id: u32,
+    cache: &mut DecodeCache,
+    rows: &[usize],
+    dst: &mut [f32],
+    pool: Option<&ThreadPool>,
+) -> anyhow::Result<RowServe> {
+    let stride = net.row_stride();
+    anyhow::ensure!(
+        dst.len() == rows.len() * stride,
+        "serve_rows_into: dst holds {} f32s, {} rows of stride {stride} need {}",
+        dst.len(),
+        rows.len(),
+        rows.len() * stride
+    );
+    let stream_rows = net.stream_rows();
+    for &row in rows {
+        anyhow::ensure!(
+            row < stream_rows,
+            "row {row} out of range: {:?} holds {stream_rows} rows",
+            net.name
+        );
+    }
+    let cpr = net.codes_per_row;
+    let window = |row: usize| RowWindow {
+        net: net_id,
+        start: row * cpr,
+        end: (row + 1) * cpr,
+    };
+
+    // Phase 1 — cache lookups in row order; hits stream straight to dst.
+    let mut misses: Vec<usize> = Vec::new();
+    for (i, &row) in rows.iter().enumerate() {
+        match cache.get(&window(row)) {
+            Some(block) => dst[i * stride..(i + 1) * stride].copy_from_slice(block),
+            None => misses.push(i),
+        }
+    }
+
+    // Phase 2 — decode each distinct missed window once (pooled over
+    // disjoint dst windows).  Duplicate rows — `Batch::form` padding
+    // clones real rows — are back-filled from their first occurrence
+    // with a memcpy instead of re-decoding the same window.
+    let mut first_pos: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut primary: Vec<usize> = Vec::new();
+    let mut dups: Vec<(usize, usize)> = Vec::new(); // (dst pos, src pos)
+    for &i in &misses {
+        match first_pos.get(&rows[i]) {
+            Some(&src) => dups.push((i, src)),
+            None => {
+                first_pos.insert(rows[i], i);
+                primary.push(i);
+            }
+        }
+    }
+    let kernel = |i: usize, out: &mut [f32]| {
+        let row = rows[i];
+        net.codebook
+            .decode_packed_into(&net.packed, row * cpr, (row + 1) * cpr, out);
+    };
+    match pool {
+        Some(tp) if tp.threads() > 1 && primary.len() > 1 => {
+            let ptr = SyncPtr::new(dst);
+            tp.parallel_for(primary.len(), 1, |start, end| {
+                for m in start..end {
+                    let i = primary[m];
+                    // SAFETY: primary positions are distinct rows, so
+                    // their dst windows are disjoint.
+                    let out = unsafe { ptr.slice(i * stride, stride) };
+                    kernel(i, out);
+                }
+            })
+            .expect("shard decode worker panicked");
+        }
+        _ => {
+            for &i in &primary {
+                kernel(i, &mut dst[i * stride..(i + 1) * stride]);
+            }
+        }
+    }
+    for &(i, src) in &dups {
+        dst.copy_within(src * stride..(src + 1) * stride, i * stride);
+    }
+
+    // Phase 3 — populate the cache in row order (deterministic LRU; one
+    // insert per distinct window — duplicates carry identical bits).
+    for &i in &primary {
+        cache.insert(window(rows[i]), &dst[i * stride..(i + 1) * stride]);
+    }
+    Ok(RowServe {
+        hits: rows.len() - misses.len(),
+        misses: misses.len(),
+    })
+}

@@ -1,0 +1,159 @@
+//! Streaming decode: unpack + codebook-decode a batch's packed weight
+//! rows **directly into a caller-provided buffer** (the `infer_hard`
+//! input staging area), eliminating the intermediate weights allocation
+//! on the serving hot path.
+//!
+//! Row addressing and determinism contract are identical to
+//! [`crate::serving::switchsim::decode_batch`], which now delegates here:
+//! row `r` covers codes `[r * codes_per_row, (r + 1) * codes_per_row)`,
+//! rows are independent (disjoint output windows over a shared read-only
+//! stream), and every row runs through the fused
+//! [`Codebook::decode_packed_into`] kernel — so serial and pooled runs
+//! are bit-identical at every thread count.
+
+use crate::serving::batcher::Batch;
+use crate::util::threadpool::{SyncPtr, ThreadPool};
+use crate::vq::codebook::Codebook;
+use crate::vq::pack::PackedCodes;
+
+/// Accounting for one streamed decode — [`crate::serving::switchsim::BatchDecode`]
+/// minus the weights buffer, which lives with the caller.
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeStats {
+    /// Codes unpacked, padded rows included.
+    pub codes_unpacked: usize,
+    /// Packed bytes touched (per-row windows, rounded up to bytes).
+    pub packed_bytes_read: usize,
+    /// Real-request fraction of the decoded rows (`Batch::utilization`).
+    pub utilization: f64,
+}
+
+/// Decode a formed batch's rows out of a packed assignment stream
+/// straight into `dst` (`dst.len() == batch.rows.len() * codes_per_row *
+/// cb.d`, row-major in `Batch::rows` order, padded rows included).
+pub fn decode_into(
+    batch: &Batch,
+    packed: &PackedCodes,
+    cb: &Codebook,
+    codes_per_row: usize,
+    dst: &mut [f32],
+    pool: Option<&ThreadPool>,
+) -> anyhow::Result<DecodeStats> {
+    decode_rows_into(&batch.rows, packed, cb, codes_per_row, dst, pool)?;
+    Ok(DecodeStats {
+        codes_unpacked: batch.rows.len() * codes_per_row,
+        packed_bytes_read: batch.rows.len() * ((codes_per_row * packed.bits as usize + 7) / 8),
+        utilization: batch.utilization(),
+    })
+}
+
+/// Row-list core of [`decode_into`] — also the cache-miss decode the
+/// engine shards drive: stream `rows[i]`'s window into
+/// `dst[i * stride .. (i + 1) * stride]`.
+pub fn decode_rows_into(
+    rows: &[usize],
+    packed: &PackedCodes,
+    cb: &Codebook,
+    codes_per_row: usize,
+    dst: &mut [f32],
+    pool: Option<&ThreadPool>,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(codes_per_row > 0, "codes_per_row must be positive");
+    // `row < count / codes_per_row` is equivalent to
+    // `(row + 1) * codes_per_row <= count` but cannot overflow — rows
+    // arrive off the wire (serving::tcp), so huge values must error, not
+    // wrap around and silently decode the wrong window.
+    let stream_rows = packed.count / codes_per_row;
+    for &row in rows {
+        anyhow::ensure!(
+            row < stream_rows,
+            "row {row} out of range: the {}-code stream holds {stream_rows} rows of {codes_per_row}",
+            packed.count
+        );
+    }
+    let stride = codes_per_row * cb.d;
+    anyhow::ensure!(
+        dst.len() == rows.len() * stride,
+        "decode_rows_into: dst holds {} f32s, {} rows of stride {stride} need {}",
+        dst.len(),
+        rows.len(),
+        rows.len() * stride
+    );
+
+    let kernel = |i: usize, out: &mut [f32]| {
+        let row = rows[i];
+        cb.decode_packed_into(packed, row * codes_per_row, (row + 1) * codes_per_row, out);
+    };
+
+    match pool {
+        Some(tp) if tp.threads() > 1 && rows.len() > 1 => {
+            let ptr = SyncPtr::new(dst);
+            tp.parallel_for(rows.len(), 1, |start, end| {
+                for i in start..end {
+                    // SAFETY: each row position owns a disjoint dst window.
+                    let out = unsafe { ptr.slice(i * stride, stride) };
+                    kernel(i, out);
+                }
+            })
+            .expect("streaming decode worker panicked");
+        }
+        _ => {
+            for i in 0..rows.len() {
+                kernel(i, &mut dst[i * stride..(i + 1) * stride]);
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::router::Request;
+    use crate::serving::switchsim::decode_batch;
+    use crate::util::rng::Rng;
+    use crate::vq::pack::pack_codes;
+
+    fn req(id: u64, row: usize) -> Request {
+        Request {
+            id,
+            net: "a".into(),
+            row,
+            arrived_ns: 0,
+        }
+    }
+
+    #[test]
+    fn streamed_decode_matches_allocating_decode_batch() {
+        let mut rng = Rng::new(41);
+        let mut words = vec![0.0f32; 32 * 4];
+        rng.fill_normal(&mut words);
+        let cb = Codebook::new(32, 4, words);
+        let (device_rows, cpr) = (8usize, 23usize);
+        let codes: Vec<u32> = (0..device_rows * cpr).map(|_| rng.below(32) as u32).collect();
+        let packed = pack_codes(&codes, 5);
+        let batch = Batch::form("a", vec![req(0, 5), req(1, 2), req(2, 5)], device_rows);
+
+        let alloc = decode_batch(&batch, &packed, &cb, cpr, None).unwrap();
+        let mut dst = vec![0.0f32; batch.rows.len() * cpr * cb.d];
+        let s = decode_into(&batch, &packed, &cb, cpr, &mut dst, None).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&dst), bits(&alloc.weights));
+        assert_eq!(s.codes_unpacked, alloc.codes_unpacked);
+        assert_eq!(s.packed_bytes_read, alloc.packed_bytes_read);
+        assert!((s.utilization - alloc.utilization).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_wrong_dst_size_and_oob_rows() {
+        let cb = Codebook::new(2, 2, vec![0., 0., 1., 1.]);
+        let packed = pack_codes(&[0u32, 1, 1, 0], 1); // 2 rows of 2 codes
+        let mut small = vec![0.0f32; 3];
+        assert!(decode_rows_into(&[0], &packed, &cb, 2, &mut small, None).is_err());
+        let mut ok = vec![0.0f32; 4];
+        assert!(decode_rows_into(&[2], &packed, &cb, 2, &mut ok, None).is_err());
+        assert!(decode_rows_into(&[usize::MAX / 2], &packed, &cb, 2, &mut ok, None).is_err());
+        assert!(decode_rows_into(&[1], &packed, &cb, 2, &mut ok, None).is_ok());
+        assert_eq!(ok, vec![1., 1., 0., 0.]);
+    }
+}

@@ -3,26 +3,42 @@
 //! because the universal codebook never reloads.
 //!
 //! * [`batcher`]   — dynamic batcher: coalesces requests per network up
-//!   to a batch size / linger deadline.
+//!   to a batch size / linger deadline; [`Batch::decode_rows_into`]
+//!   streams a batch's weight rows into a caller-provided buffer.
 //! * [`router`]    — routes requests to per-network queues, tracks
-//!   fairness and queue depths.
+//!   fairness and queue depths (name-keyed, incl. [`Router::drain_net`]).
+//! * [`engine`]    — the sharded, cache-aware decode plane: worker
+//!   shards each owning a disjoint subset of the hosted networks with
+//!   their own router queue set, an LRU decode cache keyed on
+//!   `(net, row window)` with byte-budget eviction, and the streaming
+//!   decode path ([`engine::decode_into`]) that unpacks + decodes
+//!   straight into `infer_hard` staging buffers.  `server`/`tcp`
+//!   consume the plane per batch via `Engine::stream_batch` (cache +
+//!   streaming decode); the sharded dispatch loop
+//!   (`Engine::submit`/`dispatch_round`/`drain`) is the standalone
+//!   plane — exercised by `benches/hotpath.rs` and the conservation
+//!   property tests, and the target for moving the front-end routers
+//!   onto (see ROADMAP).
 //! * [`server`]    — thread-driven serving loop gluing router + batcher
-//!   to the `infer_hard` artifacts.
+//!   to the `infer_hard` artifacts (virtual clock); attaches an
+//!   [`Engine`] as its decode plane.
 //! * [`switchsim`] — task-switch cost simulator on top of `rom::memsim`
 //!   (Table 1's I/O column at serving granularity), plus the batched
 //!   packed-decode path ([`switchsim::decode_batch`]) that turns a
 //!   formed [`Batch`] into real unpack + codebook-decode work on the
 //!   worker pool.
-
 //! * [`tcp`]       — newline-JSON TCP front-end (std::net; single PJRT
-//!   dispatch thread + reader threads per connection).
+//!   dispatch thread + reader threads per connection, wall clock); also
+//!   attaches an [`Engine`] decode plane.
 
 pub mod batcher;
+pub mod engine;
 pub mod router;
 pub mod server;
 pub mod switchsim;
 pub mod tcp;
 
 pub use batcher::{Batch, BatcherConfig};
+pub use engine::{DecodeCache, Engine, EngineConfig, HostedNet};
 pub use router::{Request, Router};
 pub use switchsim::{decode_batch, BatchDecode};

@@ -4,6 +4,8 @@
 
 use std::collections::VecDeque;
 
+use super::batcher::{should_fire, BatcherConfig};
+
 /// One inference request.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Request {
@@ -115,6 +117,30 @@ impl Router {
         out
     }
 
+    /// Name-keyed twin of [`Router::drain`] — every other router API is
+    /// keyed by network name, so callers no longer need the
+    /// `names.iter().position(...)` dance.  Unknown nets drain nothing.
+    pub fn drain_net(&mut self, net: &str, max: usize) -> Vec<Request> {
+        match self.queues.iter().position(|(n, _)| n == net) {
+            Some(i) => self.drain(i, max),
+            None => Vec::new(),
+        }
+    }
+
+    /// First queue (in declaration order) whose depth or linger says it
+    /// should fire under `cfg` — the dispatch scan `server::Server` and
+    /// the engine shards share.
+    pub fn next_fireable(&self, cfg: &BatcherConfig, now_ns: u64) -> Option<&str> {
+        self.queues
+            .iter()
+            .find(|(_, q)| match q.front() {
+                // Empty queues never fire, whatever the policy says.
+                None => false,
+                Some(oldest) => should_fire(cfg, q.len(), oldest.arrived_ns, now_ns),
+            })
+            .map(|(n, _)| n.as_str())
+    }
+
     pub fn net_name(&self, i: usize) -> &str {
         &self.queues[i].0
     }
@@ -155,6 +181,23 @@ mod tests {
     }
 
     #[test]
+    fn drain_net_matches_indexed_drain_and_counts() {
+        let mut r = Router::new(&["a", "b"]);
+        for i in 0..5 {
+            r.submit("b", i, 0).unwrap();
+        }
+        let got = r.drain_net("b", 3);
+        assert_eq!(got.len(), 3);
+        assert_eq!(r.depth("b"), 2);
+        assert!(r.drain_net("ghost", 10).is_empty(), "unknown nets drain nothing");
+        let rest = r.drain_net("b", 10);
+        assert_eq!(rest.len(), 2);
+        let (acc, disp) = r.counters();
+        assert_eq!(acc, 5);
+        assert_eq!(disp, 5, "drain_net feeds the conservation counter");
+    }
+
+    #[test]
     fn conservation() {
         let mut r = Router::new(&["a", "b", "c"]);
         for i in 0..30 {
@@ -174,5 +217,32 @@ mod tests {
     fn empty_router_picks_none() {
         let mut r = Router::new(&["a"]);
         assert!(r.pick().is_none());
+    }
+
+    #[test]
+    fn next_fireable_honors_size_and_linger() {
+        let cfg = BatcherConfig {
+            max_batch: 2,
+            max_linger_ns: 100,
+        };
+        let mut r = Router::new(&["a", "b"]);
+        assert!(r.next_fireable(&cfg, 0).is_none(), "empty router");
+        r.submit("b", 0, 1000).unwrap();
+        assert!(r.next_fireable(&cfg, 1050).is_none(), "young partial waits");
+        assert_eq!(r.next_fireable(&cfg, 1101), Some("b"), "lingered partial fires");
+        r.submit("a", 1, 1050).unwrap();
+        r.submit("a", 2, 1050).unwrap();
+        assert_eq!(
+            r.next_fireable(&cfg, 1060),
+            Some("a"),
+            "full batch fires in declaration order before b lingers"
+        );
+        // Empty queues never fire even under a zero-size policy.
+        let zero = BatcherConfig {
+            max_batch: 0,
+            max_linger_ns: 0,
+        };
+        let empty = Router::new(&["a"]);
+        assert!(empty.next_fireable(&zero, u64::MAX).is_none());
     }
 }

@@ -11,18 +11,26 @@ use std::collections::BTreeMap;
 use crate::coordinator::calib::gather_rows;
 use crate::coordinator::session::NetSession;
 use crate::tensor::Tensor;
-use crate::util::stats::Running;
+use crate::util::stats::{Running, Summary};
+use crate::util::threadpool::ThreadPool;
 
-use super::batcher::{should_fire, Batch, BatcherConfig};
+use super::batcher::{Batch, BatcherConfig};
+use super::engine::Engine;
 use super::router::Router;
 
-/// Latency/throughput accounting per network.
+/// Latency/throughput accounting per network.  Latency is a bounded
+/// [`Summary`] (running moments + percentile reservoir), so long serve
+/// loops no longer grow memory linearly with traffic.
 #[derive(Clone, Debug, Default)]
 pub struct ServeStats {
     pub served: u64,
     pub batches: u64,
     pub padded_rows: u64,
-    pub latency_ns: Vec<f64>,
+    pub latency_ns: Summary,
+    /// Weight rows served out of the attached decode plane's cache.
+    pub rows_from_cache: u64,
+    /// Weight rows the decode plane decoded fresh.
+    pub rows_decoded: u64,
 }
 
 /// The multi-network server.
@@ -35,6 +43,14 @@ pub struct Server<'a> {
     pub now_ns: u64,
     /// Measured execute time per batch (feeds the virtual clock).
     pub exec_ns: Running,
+    /// Optional sharded decode plane: when attached (and hosting the
+    /// batch's net), every dispatched batch's weight rows are streamed
+    /// through the plane's decode cache into the owning shard's staging
+    /// buffer before the artifact runs — the host-side §3.2 decode work,
+    /// now cache-aware.
+    pub plane: Option<Engine>,
+    /// Worker pool the plane's miss-decodes run on (None = serial).
+    plane_pool: Option<ThreadPool>,
 }
 
 impl<'a> Server<'a> {
@@ -57,7 +73,17 @@ impl<'a> Server<'a> {
             stats,
             now_ns: 0,
             exec_ns: Running::new(),
+            plane: None,
+            plane_pool: None,
         }
+    }
+
+    /// Attach a decode plane (`serving::engine`) the dispatch path
+    /// streams every batch's weight rows through; `pool` parallelizes
+    /// the plane's cache-miss decodes (None = serial).
+    pub fn attach_plane(&mut self, plane: Engine, pool: Option<ThreadPool>) {
+        self.plane = Some(plane);
+        self.plane_pool = pool;
     }
 
     /// Submit a request at the current virtual time.
@@ -73,30 +99,31 @@ impl<'a> Server<'a> {
     /// Dispatch at most one batch if any queue should fire.
     /// Returns the served batch size (0 if nothing fired).
     pub fn dispatch_one(&mut self) -> anyhow::Result<usize> {
-        let names: Vec<String> = self.router.networks().iter().map(|s| s.to_string()).collect();
-        // Find a fireable queue (deepest-first via router.pick semantics).
-        let mut fire: Option<String> = None;
-        for name in &names {
-            let depth = self.router.depth(name);
-            if depth == 0 {
-                continue;
-            }
-            let oldest = self.router.oldest_arrival(name).unwrap_or(self.now_ns);
-            if should_fire(&self.cfg, depth, oldest, self.now_ns) {
-                fire = Some(name.clone());
-                break;
-            }
-        }
+        let fire = self
+            .router
+            .next_fireable(&self.cfg, self.now_ns)
+            .map(|n| n.to_string());
         let Some(name) = fire else { return Ok(0) };
-        let qi = names.iter().position(|n| n == &name).unwrap();
-        let reqs = self.router.drain(qi, self.cfg.max_batch);
         let (sess, codes) = self
             .sessions
             .get_mut(&name)
             .ok_or_else(|| anyhow::anyhow!("no session for {name:?}"))?;
         let device_batch = sess.net.eval_batch;
-        let take = reqs.len().min(device_batch);
-        let batch = Batch::form(&name, reqs[..take].to_vec(), device_batch);
+        // Drain by name (the router's name-keyed API) and never take more
+        // than one device batch can carry — leftovers stay queued.
+        let reqs = self
+            .router
+            .drain_net(&name, self.cfg.max_batch.min(device_batch));
+        let batch = Batch::form(&name, reqs, device_batch);
+
+        // Stream the batch's weight rows through the decode plane (cache
+        // + fused unpack) into the owning shard's staging buffer, when a
+        // plane is attached and hosts this net — the host-side decode
+        // that precedes the artifact run.
+        let row_serve = match self.plane.as_mut() {
+            Some(plane) => plane.stream_batch(&name, &batch.rows, self.plane_pool.as_ref())?,
+            None => None,
+        };
 
         // Gather input rows from the network's test pool and run infer.
         let x = gather_rows(&sess.test_x, &batch.rows)?;
@@ -112,6 +139,10 @@ impl<'a> Server<'a> {
         st.served += batch.requests.len() as u64;
         st.batches += 1;
         st.padded_rows += batch.padded as u64;
+        if let Some(rs) = row_serve {
+            st.rows_from_cache += rs.hits as u64;
+            st.rows_decoded += rs.misses as u64;
+        }
         for r in &batch.requests {
             st.latency_ns.push((self.now_ns - r.arrived_ns) as f64);
         }

@@ -7,11 +7,12 @@
 //! worker pool ([`decode_batch`]).
 
 use crate::rom::memsim::{switch_storm, CodebookPlacement, MemSim, NetCodebooks, TrafficReport};
-use crate::util::threadpool::{SyncPtr, ThreadPool};
+use crate::util::threadpool::ThreadPool;
 use crate::vq::codebook::Codebook;
-use crate::vq::pack::{unpack_range, PackedCodes};
+use crate::vq::pack::PackedCodes;
 
 use super::batcher::Batch;
+use super::engine::stream;
 
 /// Workload description.
 #[derive(Clone, Copy, Debug)]
@@ -72,6 +73,10 @@ pub struct BatchDecode {
 /// Rows are independent (disjoint output windows, shared read-only
 /// stream), so the pooled path is bit-identical to serial — this is the
 /// serving-side decode the batcher's utilization metric measures.
+///
+/// Allocating wrapper over the streaming [`stream::decode_into`] path
+/// (one kernel, one determinism contract): callers that can provide the
+/// destination buffer should stream instead.
 pub fn decode_batch(
     batch: &Batch,
     packed: &PackedCodes,
@@ -80,53 +85,13 @@ pub fn decode_batch(
     pool: Option<&ThreadPool>,
 ) -> anyhow::Result<BatchDecode> {
     anyhow::ensure!(codes_per_row > 0, "codes_per_row must be positive");
-    // `row < count / codes_per_row` is equivalent to
-    // `(row + 1) * codes_per_row <= count` but cannot overflow — rows
-    // arrive off the wire (serving::tcp), so huge values must error, not
-    // wrap around and silently decode the wrong window.
-    let stream_rows = packed.count / codes_per_row;
-    for &row in &batch.rows {
-        anyhow::ensure!(
-            row < stream_rows,
-            "batch row {row} out of range: the {}-code stream holds {stream_rows} rows of {codes_per_row}",
-            packed.count
-        );
-    }
-    let stride = codes_per_row * cb.d;
-    let rows = batch.rows.len();
-    let mut weights = vec![0.0f32; rows * stride];
-
-    let kernel = |r: usize, dst: &mut [f32]| {
-        let row = batch.rows[r];
-        let mut codes = vec![0u32; codes_per_row];
-        unpack_range(packed, row * codes_per_row, (row + 1) * codes_per_row, &mut codes);
-        cb.decode(&codes, dst);
-    };
-
-    match pool {
-        Some(tp) if tp.threads() > 1 && rows > 1 => {
-            let w_ptr = SyncPtr::new(&mut weights);
-            tp.parallel_for(rows, 1, |start, end| {
-                for r in start..end {
-                    // SAFETY: each batch row owns a disjoint weights window.
-                    let dst = unsafe { w_ptr.slice(r * stride, stride) };
-                    kernel(r, dst);
-                }
-            })
-            .expect("batched decode worker panicked");
-        }
-        _ => {
-            for r in 0..rows {
-                kernel(r, &mut weights[r * stride..(r + 1) * stride]);
-            }
-        }
-    }
-
+    let mut weights = vec![0.0f32; batch.rows.len() * codes_per_row * cb.d];
+    let stats = stream::decode_into(batch, packed, cb, codes_per_row, &mut weights, pool)?;
     Ok(BatchDecode {
         weights,
-        codes_unpacked: rows * codes_per_row,
-        packed_bytes_read: rows * ((codes_per_row * packed.bits as usize + 7) / 8),
-        utilization: batch.utilization(),
+        codes_unpacked: stats.codes_unpacked,
+        packed_bytes_read: stats.packed_bytes_read,
+        utilization: stats.utilization,
     })
 }
 

@@ -30,8 +30,11 @@ use crate::coordinator::calib::gather_rows;
 use crate::coordinator::session::NetSession;
 use crate::tensor::Tensor;
 use crate::util::json::{self, Json};
+use crate::util::stats::Summary;
+use crate::util::threadpool::ThreadPool;
 
 use super::batcher::BatcherConfig;
+use super::engine::Engine;
 
 /// One parsed in-flight request.
 struct InFlight {
@@ -41,12 +44,19 @@ struct InFlight {
     arrived: Instant,
 }
 
-/// Per-network serving statistics (mirrors `server::ServeStats`).
+/// Per-network serving statistics (mirrors `server::ServeStats`,
+/// including the bounded wall-clock latency summary).
 #[derive(Clone, Debug, Default)]
 pub struct TcpStats {
     pub served: u64,
     pub batches: u64,
     pub errors: u64,
+    /// Wall-clock request latency (µs) — bounded accounting.
+    pub latency_us: Summary,
+    /// Weight rows served out of the attached decode plane's cache.
+    pub rows_from_cache: u64,
+    /// Weight rows the decode plane decoded fresh.
+    pub rows_decoded: u64,
 }
 
 /// Shared handle for shutting the server down from another thread.
@@ -106,6 +116,11 @@ pub struct TcpServer {
     sessions: BTreeMap<String, (NetSession, Tensor)>,
     pub cfg: BatcherConfig,
     pub stats: BTreeMap<String, TcpStats>,
+    /// Optional sharded decode plane (see `server::Server::plane`) —
+    /// same engine, wall clock instead of virtual time.
+    pub plane: Option<Engine>,
+    /// Worker pool the plane's miss-decodes run on (None = serial).
+    plane_pool: Option<ThreadPool>,
 }
 
 impl TcpServer {
@@ -120,7 +135,17 @@ impl TcpServer {
             sessions: map,
             cfg,
             stats,
+            plane: None,
+            plane_pool: None,
         }
+    }
+
+    /// Attach a decode plane the dispatch path streams every batch's
+    /// weight rows through; `pool` parallelizes the plane's cache-miss
+    /// decodes (None = serial).
+    pub fn attach_plane(&mut self, plane: Engine, pool: Option<ThreadPool>) {
+        self.plane = Some(plane);
+        self.plane_pool = pool;
     }
 
     /// Serve until `shutdown` triggers.  Blocks the calling thread (it
@@ -214,7 +239,15 @@ impl TcpServer {
                 if !(full || lingered) {
                     continue;
                 }
-                let reqs: Vec<InFlight> = q.drain(..q.len().min(self.cfg.max_batch)).collect();
+                // Never drain more than the artifact's fixed batch can
+                // carry — leftovers stay queued for the next firing
+                // (mirrors server::dispatch_one).  Unknown nets drain at
+                // max_batch; dispatch answers them all with errors.
+                let cap = match self.sessions.get(&name) {
+                    Some((s, _)) => self.cfg.max_batch.min(s.net.eval_batch),
+                    None => self.cfg.max_batch,
+                };
+                let reqs: Vec<InFlight> = q.drain(..q.len().min(cap.max(1))).collect();
                 served += self.dispatch(&name, reqs, &writers)?;
             }
             if max_requests > 0 && served >= max_requests {
@@ -252,12 +285,22 @@ impl TcpServer {
         for i in 0..device_batch.saturating_sub(real) {
             rows.push(rows[i % real]); // pad with real rows
         }
+        // Stream the batch's weight rows through the decode plane (cache
+        // + fused unpack) into the owning shard's staging buffer, when a
+        // plane is attached and hosts this net — decode precedes the
+        // artifact run, mirroring server::dispatch_one.
+        let row_serve = match self.plane.as_mut() {
+            Some(plane) => plane.stream_batch(name, &rows, self.plane_pool.as_ref())?,
+            None => None,
+        };
+
         let x = gather_rows(&sess.test_x, &rows)?;
         let codes_t = codes.clone();
         let out = sess.eval_infer(&codes_t, &[x])?;
         let logits = out[0].as_f32()?;
         let classes = out[0].shape.get(1).copied().unwrap_or(1);
 
+        let st = self.stats.entry(name.to_string()).or_default();
         let mut w = writers.lock().unwrap();
         for (i, r) in reqs.iter().enumerate() {
             let seg = &logits[i * classes..(i + 1) * classes];
@@ -268,13 +311,17 @@ impl TcpServer {
                 .map(|(j, _)| j)
                 .unwrap_or(0);
             let latency = r.arrived.elapsed().as_micros() as f64;
+            st.latency_us.push(latency);
             if let Some(ws) = w.get_mut(&r.conn) {
                 let _ = writeln!(ws, "{}", ok_response(name, r.row, argmax, real, latency));
             }
         }
-        let st = self.stats.entry(name.to_string()).or_default();
         st.served += real as u64;
         st.batches += 1;
+        if let Some(rs) = row_serve {
+            st.rows_from_cache += rs.hits as u64;
+            st.rows_decoded += rs.misses as u64;
+        }
         Ok(real as u64)
     }
 }

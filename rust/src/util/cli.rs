@@ -69,6 +69,55 @@ impl Args {
             .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
     }
 
+    /// Serving-engine knobs from the conventional `--shards` /
+    /// `--cache-kb` options (declared with [`Cli::engine_opts`]); unset
+    /// values fall back to `EngineKnobs::default()`.
+    pub fn engine_knobs(&self) -> anyhow::Result<crate::util::config::EngineKnobs> {
+        self.engine_knobs_with(crate::util::config::EngineKnobs::default())
+    }
+
+    /// Full driver-side resolution: optional config file (`[engine]`
+    /// section) overlaid by the CLI options — CLI > config > defaults.
+    /// Pass `self.get("config")` (an empty/unset path means no file).
+    pub fn engine_knobs_from_config(
+        &self,
+        config_path: Option<&str>,
+    ) -> anyhow::Result<crate::util::config::EngineKnobs> {
+        let base = match config_path {
+            Some(p) if !p.is_empty() => crate::util::config::EngineKnobs::from_raw(
+                &crate::util::config::RawConfig::load(std::path::Path::new(p))?,
+            )?,
+            _ => crate::util::config::EngineKnobs::default(),
+        };
+        self.engine_knobs_with(base)
+    }
+
+    /// Like [`Args::engine_knobs`] but with an explicit fallback —
+    /// drivers that load a config file pass
+    /// `EngineKnobs::from_raw(&raw)?` here, so the precedence is
+    /// CLI > config file > defaults (mirroring `CampaignConfig`).
+    pub fn engine_knobs_with(
+        &self,
+        base: crate::util::config::EngineKnobs,
+    ) -> anyhow::Result<crate::util::config::EngineKnobs> {
+        let shards = match self.get("shards") {
+            None | Some("") => base.shards,
+            Some(v) => v
+                .parse::<usize>()
+                .map_err(|e| anyhow::anyhow!("--shards={v:?} is not an integer: {e}"))?,
+        };
+        let cache_kb = match self.get("cache-kb") {
+            None | Some("") => base.cache_kb,
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--cache-kb={v:?} is not an integer: {e}"))?,
+        };
+        Ok(crate::util::config::EngineKnobs {
+            shards: shards.max(1),
+            cache_kb,
+        })
+    }
+
     /// Parallelism selection from the conventional `--threads` option
     /// (0 = all cores, 1 = serial; unset = 0).  Drivers declare the
     /// option with [`Cli::threads_opt`] and read it here.
@@ -117,6 +166,24 @@ impl Cli {
             default: Some(default),
         });
         self
+    }
+
+    /// The conventional serving-engine options (`--shards`,
+    /// `--cache-kb`) the serving drivers expose.  Defaults are empty so
+    /// unset values fall back to the base knobs (config-file values via
+    /// [`Args::engine_knobs_with`], or `EngineKnobs::default()` via
+    /// [`Args::engine_knobs`]).
+    pub fn engine_opts(self) -> Self {
+        self.opt(
+            "shards",
+            "",
+            "decode-plane shards, each owning a subset of the hosted nets (unset = 1)",
+        )
+        .opt(
+            "cache-kb",
+            "",
+            "per-shard decode-cache budget in KiB (0 = off, unset = 1024)",
+        )
     }
 
     /// The conventional `--threads` option every hot-path driver exposes.
@@ -244,6 +311,55 @@ mod tests {
     fn typed_errors() {
         let a = args(&["--alpha", "zzz"]);
         assert!(a.f64_or("alpha", 0.0).is_err());
+    }
+
+    #[test]
+    fn engine_opts_parse_knobs() {
+        let cli = Cli::new("t", "test").engine_opts();
+        let a = cli.parse_from(Vec::<String>::new()).unwrap();
+        let k = a.engine_knobs().unwrap();
+        assert_eq!(k.shards, 1, "unset falls back to defaults");
+        assert_eq!(k.cache_kb, 1024);
+        let a = cli
+            .parse_from(vec!["--shards=4".to_string(), "--cache-kb=0".to_string()])
+            .unwrap();
+        let k = a.engine_knobs().unwrap();
+        assert_eq!(k.shards, 4);
+        assert_eq!(k.cache_kb, 0, "explicit 0 disables the cache");
+        let a = cli.parse_from(vec!["--shards=0".to_string()]).unwrap();
+        assert_eq!(a.engine_knobs().unwrap().shards, 1, "0 clamps to 1");
+        let a = cli.parse_from(vec!["--shards=zzz".to_string()]).unwrap();
+        assert!(a.engine_knobs().is_err());
+        // Config-file precedence: unset CLI values take the base, set
+        // CLI values override it.
+        let base = crate::util::config::EngineKnobs {
+            shards: 3,
+            cache_kb: 64,
+        };
+        let a = cli.parse_from(Vec::<String>::new()).unwrap();
+        assert_eq!(a.engine_knobs_with(base).unwrap(), base);
+        let a = cli.parse_from(vec!["--shards=8".to_string()]).unwrap();
+        let k = a.engine_knobs_with(base).unwrap();
+        assert_eq!(k.shards, 8, "CLI beats config");
+        assert_eq!(k.cache_kb, 64, "unset CLI keeps config value");
+    }
+
+    #[test]
+    fn engine_knobs_from_config_overlays_file() {
+        let cli = Cli::new("t", "test").engine_opts();
+        let p = std::env::temp_dir().join("vq4all_engine_knobs_test.toml");
+        std::fs::write(&p, "[engine]\nshards = 5\ncache_kb = 32\n").unwrap();
+        let path = p.to_string_lossy().to_string();
+        let a = cli.parse_from(Vec::<String>::new()).unwrap();
+        let k = a.engine_knobs_from_config(Some(&path)).unwrap();
+        assert_eq!((k.shards, k.cache_kb), (5, 32), "config file wins over defaults");
+        let a = cli.parse_from(vec!["--cache-kb=8".to_string()]).unwrap();
+        let k = a.engine_knobs_from_config(Some(&path)).unwrap();
+        assert_eq!((k.shards, k.cache_kb), (5, 8), "CLI wins over config");
+        let k = a.engine_knobs_from_config(None).unwrap();
+        assert_eq!(k.shards, 1, "no file falls back to defaults");
+        assert!(a.engine_knobs_from_config(Some("/no/such/file.toml")).is_err());
+        let _ = std::fs::remove_file(&p);
     }
 
     #[test]

@@ -59,6 +59,42 @@ impl Parallelism {
     }
 }
 
+/// Serving-engine knobs (the `[engine]` config section / `--shards`,
+/// `--cache-kb` CLI options): decode-plane shard count and per-shard
+/// decode-cache budget for `serving::engine`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EngineKnobs {
+    /// Decode-plane worker shards (each owns a disjoint subset of the
+    /// hosted networks); clamped to >= 1.
+    pub shards: usize,
+    /// Per-shard decode-cache budget in KiB (0 disables the cache).
+    pub cache_kb: usize,
+}
+
+impl Default for EngineKnobs {
+    fn default() -> Self {
+        EngineKnobs {
+            shards: 1,
+            cache_kb: 1024,
+        }
+    }
+}
+
+impl EngineKnobs {
+    /// Overlay `[engine]` keys from a RawConfig.
+    pub fn from_raw(raw: &RawConfig) -> anyhow::Result<Self> {
+        let d = EngineKnobs::default();
+        Ok(EngineKnobs {
+            shards: raw.usize("engine.shards", d.shards)?.max(1),
+            cache_kb: raw.usize("engine.cache_kb", d.cache_kb)?,
+        })
+    }
+
+    pub fn cache_bytes(&self) -> usize {
+        self.cache_kb * 1024
+    }
+}
+
 /// Parsed flat config: `section.key -> raw string value`.
 #[derive(Clone, Debug, Default)]
 pub struct RawConfig {
@@ -310,6 +346,26 @@ mod tests {
         let p = Parallelism::new(3).pool().expect("explicit 3 threads pools");
         assert_eq!(p.threads(), 3);
         assert_eq!(CampaignConfig::default().parallelism(), Parallelism::new(0));
+    }
+
+    #[test]
+    fn engine_knobs_overlay_and_defaults() {
+        let d = EngineKnobs::default();
+        assert_eq!(d.shards, 1);
+        assert_eq!(d.cache_bytes(), 1024 * 1024);
+        let raw = RawConfig::parse("[engine]\nshards = 4\ncache_kb = 256\n").unwrap();
+        let k = EngineKnobs::from_raw(&raw).unwrap();
+        assert_eq!(k.shards, 4);
+        assert_eq!(k.cache_bytes(), 256 * 1024);
+        // shards = 0 clamps to 1; cache_kb = 0 disables the cache.
+        let raw = RawConfig::parse("[engine]\nshards = 0\ncache_kb = 0\n").unwrap();
+        let k = EngineKnobs::from_raw(&raw).unwrap();
+        assert_eq!(k.shards, 1);
+        assert_eq!(k.cache_bytes(), 0);
+        assert!(EngineKnobs::from_raw(
+            &RawConfig::parse("[engine]\nshards = banana\n").unwrap()
+        )
+        .is_err());
     }
 
     #[test]

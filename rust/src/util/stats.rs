@@ -1,6 +1,8 @@
 //! Running statistics and small numeric helpers shared by the bench
 //! harness, the ROM simulator, and the experiment reports.
 
+use crate::util::rng::Rng;
+
 /// Welford online mean/variance plus min/max.
 #[derive(Clone, Debug, Default)]
 pub struct Running {
@@ -57,6 +59,97 @@ impl Running {
 
     pub fn max(&self) -> f64 {
         self.max
+    }
+}
+
+/// Bounded metric summary: Welford running moments plus a fixed-capacity
+/// reservoir (Vitter's Algorithm R, deterministic seed) for percentile
+/// estimates.  Replaces the unbounded `Vec<f64>` latency logs in the
+/// serving stats so long-running serve loops stay O(1) in memory
+/// regardless of traffic.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    running: Running,
+    samples: Vec<f64>,
+    cap: usize,
+    rng: Rng,
+}
+
+impl Default for Summary {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Summary {
+    /// Default reservoir capacity — 4096 f64s (32 KiB) bounds the memory
+    /// while keeping p99 estimates tight at serving volumes.
+    pub const DEFAULT_CAP: usize = 4096;
+
+    pub fn new() -> Self {
+        Self::with_capacity(Self::DEFAULT_CAP)
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        assert!(cap > 0, "summary reservoir needs capacity");
+        Summary {
+            running: Running::new(),
+            samples: Vec::new(),
+            cap,
+            rng: Rng::new(0x5EED_5A3E),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.running.push(x);
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            // Algorithm R: item i replaces a reservoir slot with
+            // probability cap/i, keeping a uniform sample of the stream.
+            let j = self.rng.below(self.running.count() as usize);
+            if j < self.cap {
+                self.samples[j] = x;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.running.count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count() == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.running.mean()
+    }
+
+    pub fn std(&self) -> f64 {
+        self.running.std()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.running.min()
+    }
+
+    pub fn max(&self) -> f64 {
+        self.running.max()
+    }
+
+    /// Percentile estimate from the reservoir (exact while the stream
+    /// fits in it); 0.0 for an empty summary.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        percentile(&self.samples, p)
+    }
+
+    /// The retained sample (exact stream prefix until `cap` is hit).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
     }
 }
 
@@ -155,6 +248,47 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 100.0);
         assert!((percentile(&xs, 50.0) - 50.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn summary_exact_below_capacity_and_bounded_above() {
+        let mut s = Summary::with_capacity(8);
+        assert_eq!(s.percentile(50.0), 0.0, "empty summary percentiles are 0");
+        for i in 1..=6 {
+            s.push(i as f64);
+        }
+        // Below capacity the reservoir is the exact stream.
+        assert_eq!(s.count(), 6);
+        assert_eq!(s.samples(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!((s.mean() - 3.5).abs() < 1e-12);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 6.0);
+
+        for i in 7..=10_000 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.count(), 10_000);
+        assert_eq!(s.samples().len(), 8, "reservoir stays bounded");
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 10_000.0);
+        // Running moments see the full stream, not just the reservoir.
+        assert!((s.mean() - 5000.5).abs() < 1e-9);
+        // The reservoir is a sample of the stream, so percentiles stay
+        // inside the observed range.
+        let p50 = s.percentile(50.0);
+        assert!((1.0..=10_000.0).contains(&p50));
+    }
+
+    #[test]
+    fn summary_is_deterministic() {
+        let run = || {
+            let mut s = Summary::with_capacity(16);
+            for i in 0..5000 {
+                s.push((i * 7 % 113) as f64);
+            }
+            (s.samples().to_vec(), s.percentile(99.0))
+        };
+        assert_eq!(run(), run(), "fixed-seed reservoir must reproduce");
     }
 
     #[test]

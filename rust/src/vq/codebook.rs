@@ -10,6 +10,7 @@
 
 use crate::tensor::ops;
 use crate::util::threadpool::{SyncPtr, ThreadPool};
+use crate::vq::pack::{unpack_range, PackedCodes};
 
 /// Groups per scheduling chunk for the encode/decode sweeps.  Fixed —
 /// never derived from the worker count — so the error-partial grouping
@@ -94,6 +95,34 @@ impl Codebook {
                     start = end;
                 }
             }
+        }
+    }
+
+    /// Fused unpack + decode of the packed code window `[start, end)`
+    /// straight into `out` (`out.len() == (end - start) * d`) — the
+    /// serving engine's streaming path: no intermediate codes vector, no
+    /// weights allocation.  Works through a fixed stack buffer, and both
+    /// stages are pure copies, so the output is bit-identical to
+    /// `unpack_range` followed by [`Codebook::decode`].
+    pub fn decode_packed_into(&self, p: &PackedCodes, start: usize, end: usize, out: &mut [f32]) {
+        assert!(
+            start <= end && end <= p.count,
+            "window [{start}, {end}) out of the {}-code stream",
+            p.count
+        );
+        assert_eq!(out.len(), (end - start) * self.d, "decode_packed_into output size");
+        const FUSE_CHUNK: usize = 128;
+        let mut buf = [0u32; FUSE_CHUNK];
+        let mut s = start;
+        while s < end {
+            let e = (s + FUSE_CHUNK).min(end);
+            let codes = &mut buf[..e - s];
+            unpack_range(p, s, e, codes);
+            for (off, &c) in codes.iter().enumerate() {
+                let o = (s - start + off) * self.d;
+                out[o..o + self.d].copy_from_slice(self.word(c as usize));
+            }
+            s = e;
         }
     }
 
@@ -251,6 +280,38 @@ mod tests {
         let codes = [3u32, 0, 1];
         let out = c.decode_vec(&codes);
         assert_eq!(out, vec![1., 1., 0., 0., 1., 0.]);
+    }
+
+    /// The fused streaming kernel must equal unpack-then-decode exactly,
+    /// on windows that straddle its internal stack-chunk boundary and at
+    /// a non-byte width.
+    #[test]
+    fn decode_packed_into_matches_unpack_then_decode() {
+        use crate::vq::pack::pack_codes;
+
+        let mut rng = Rng::new(17);
+        let mut words = vec![0.0f32; 16 * 3];
+        rng.fill_normal(&mut words);
+        let c = Codebook::new(16, 3, words);
+        let codes: Vec<u32> = (0..300).map(|_| rng.below(16) as u32).collect();
+        let p = pack_codes(&codes, 5);
+        for (start, end) in [(0usize, 300usize), (7, 291), (120, 140), (128, 128)] {
+            let mut fused = vec![0.0f32; (end - start) * c.d];
+            c.decode_packed_into(&p, start, end, &mut fused);
+            let direct = c.decode_vec(&codes[start..end]);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&fused), bits(&direct), "[{start}, {end})");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "output size")]
+    fn decode_packed_into_checks_output_size() {
+        use crate::vq::pack::pack_codes;
+        let c = cb();
+        let p = pack_codes(&[0u32, 1], 2);
+        let mut out = vec![0.0f32; 3]; // needs 2 * d = 4
+        c.decode_packed_into(&p, 0, 2, &mut out);
     }
 
     #[test]

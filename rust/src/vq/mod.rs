@@ -27,4 +27,7 @@ pub use assign::{candidates, AssignInit};
 pub use codebook::Codebook;
 pub use kde::KdeSampler;
 pub use kmeans::kmeans;
-pub use pack::{pack_codes, unpack_codes, unpack_codes_with, unpack_one, unpack_range, PackedCodes};
+pub use pack::{
+    pack_codes, unpack_codes, unpack_codes_into, unpack_codes_with, unpack_one, unpack_range,
+    PackedCodes,
+};

@@ -94,19 +94,28 @@ pub fn unpack_codes(p: &PackedCodes) -> Vec<u32> {
 /// bit-identical to the serial path regardless of scheduling.
 pub fn unpack_codes_with(p: &PackedCodes, pool: Option<&ThreadPool>) -> Vec<u32> {
     let mut out = vec![0u32; p.count];
+    unpack_codes_into(p, &mut out, pool);
+    out
+}
+
+/// Bulk unpack into a caller-provided buffer (`dst.len() == p.count`) —
+/// the allocation-free twin of [`unpack_codes_with`] used by the serving
+/// engine's streaming decode plane.  Same chunking, same determinism
+/// contract.
+pub fn unpack_codes_into(p: &PackedCodes, dst: &mut [u32], pool: Option<&ThreadPool>) {
+    assert_eq!(dst.len(), p.count, "unpack_codes_into dst size");
     match pool {
         Some(tp) if tp.threads() > 1 && p.count > UNPACK_CHUNK => {
-            let out_ptr = SyncPtr::new(&mut out);
+            let out_ptr = SyncPtr::new(dst);
             tp.parallel_for(p.count, UNPACK_CHUNK, |start, end| {
                 // SAFETY: parallel_for ranges are disjoint code ranges.
-                let dst = unsafe { out_ptr.slice(start, end - start) };
-                unpack_range(p, start, end, dst);
+                let chunk = unsafe { out_ptr.slice(start, end - start) };
+                unpack_range(p, start, end, chunk);
             })
             .expect("unpack worker panicked");
         }
-        _ => unpack_range(p, 0, p.count, &mut out),
+        _ => unpack_range(p, 0, p.count, dst),
     }
-    out
 }
 
 /// Unpack a single code at index `i` without touching the rest — the
@@ -204,6 +213,33 @@ mod tests {
                 assert_eq!(dst, codes[start..end], "bits={bits} [{start}, {end})");
             }
         }
+    }
+
+    #[test]
+    fn unpack_codes_into_matches_alloc_path() {
+        let mut rng = Rng::new(11);
+        let pool = ThreadPool::new(3);
+        for bits in [1u32, 5, 13] {
+            let mask = (1u32 << bits) - 1;
+            let codes: Vec<u32> = (0..UNPACK_CHUNK * 2 + 5)
+                .map(|_| (rng.next_u64() as u32) & mask)
+                .collect();
+            let p = pack_codes(&codes, bits);
+            let mut dst = vec![0u32; p.count];
+            unpack_codes_into(&p, &mut dst, None);
+            assert_eq!(dst, codes, "serial bits={bits}");
+            dst.fill(0);
+            unpack_codes_into(&p, &mut dst, Some(&pool));
+            assert_eq!(dst, codes, "pooled bits={bits}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "dst size")]
+    fn unpack_codes_into_checks_dst_len() {
+        let p = pack_codes(&[1u32, 2, 3], 2);
+        let mut dst = vec![0u32; 2];
+        unpack_codes_into(&p, &mut dst, None);
     }
 
     /// The pooled bulk unpack must split (count > UNPACK_CHUNK) and still

@@ -1,11 +1,39 @@
 //! Integration: the serving stack (router + batcher + server) over the
 //! real `infer_hard` artifact for mini_mlp.
 
+use std::sync::Arc;
+
 use vq4all::coordinator::{Campaign, NetSession};
 use vq4all::serving::batcher::BatcherConfig;
 use vq4all::serving::server::Server;
+use vq4all::serving::{Engine, EngineConfig, HostedNet};
 use vq4all::util::config::CampaignConfig;
 use vq4all::util::rng::Rng;
+use vq4all::vq::Codebook;
+
+/// Host a constructed net's packed stream on a decode plane (the stream
+/// is segmented so its row space covers the request rows the tests use).
+fn plane_for(c: &Campaign, res: &vq4all::coordinator::NetResult, shards: usize) -> Option<Engine> {
+    let words = c.codebook.as_f32().ok()?.to_vec();
+    let cb = Arc::new(Codebook::new(c.manifest.config.k, c.manifest.config.d, words));
+    let codes_per_row = (res.packed.count / 64).max(1);
+    let net = HostedNet {
+        name: res.name.clone(),
+        packed: res.packed.clone(),
+        codebook: cb,
+        codes_per_row,
+        device_batch: 16,
+    };
+    Engine::new(
+        EngineConfig {
+            shards,
+            cache_bytes: 1 << 20,
+            batcher: BatcherConfig::default(),
+        },
+        vec![net],
+    )
+    .ok()
+}
 
 /// Load the campaign, or `None` (with a visible skip note) when the
 /// artifacts or the PJRT runtime are unavailable in this build — the
@@ -39,6 +67,9 @@ fn server_serves_every_request_exactly_once() {
             max_linger_ns: 50_000,
         },
     );
+    if let Some(plane) = plane_for(&c, &res, 1) {
+        server.attach_plane(plane, None);
+    }
     let mut rng = Rng::new(11);
     let total = 75usize;
     for i in 0..total {
@@ -52,12 +83,23 @@ fn server_serves_every_request_exactly_once() {
 
     let st = &server.stats["mini_mlp"];
     assert_eq!(st.served as usize, total, "requests lost or duplicated");
-    assert_eq!(st.latency_ns.len(), total, "latency sample per request");
+    assert_eq!(st.latency_ns.count() as usize, total, "latency sample per request");
     assert!(st.batches > 0 && st.batches as usize <= total);
     // Latencies are nonnegative and finite.
-    assert!(st.latency_ns.iter().all(|&l| l >= 0.0 && l.is_finite()));
+    assert!(st.latency_ns.min() >= 0.0 && st.latency_ns.mean().is_finite());
+    assert!(st.latency_ns.percentile(99.0) >= st.latency_ns.percentile(50.0));
     let (acc, disp) = server.router.counters();
     assert_eq!(acc, disp, "router conservation violated");
+    // The decode plane saw every dispatched weight row.
+    if let Some(plane) = &server.plane {
+        let cs = plane.cache_stats();
+        assert_eq!(
+            cs.lookups,
+            st.rows_from_cache + st.rows_decoded,
+            "plane lookup accounting"
+        );
+        assert!(cs.lookups > 0, "plane never consulted");
+    }
 }
 
 #[test]
@@ -115,6 +157,9 @@ fn tcp_server_answers_over_loopback() {
             max_linger_ns: 1_000_000, // 1ms
         },
     );
+    if let Some(plane) = plane_for(&c, &res, 1) {
+        server.attach_plane(plane, None);
+    }
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
     let shutdown = Shutdown::new();
@@ -142,6 +187,12 @@ fn tcp_server_answers_over_loopback() {
     let oks = client.join().unwrap();
     assert_eq!(oks, 10);
     assert_eq!(served, 10);
-    assert_eq!(server.stats["mini_mlp"].served, 10);
+    let st = &server.stats["mini_mlp"];
+    assert_eq!(st.served, 10);
+    assert_eq!(st.latency_us.count(), 10, "bounded latency sample per request");
+    assert!(st.latency_us.min() >= 0.0);
     assert_eq!(server.stats["ghost"].errors, 1);
+    if let Some(plane) = &server.plane {
+        assert!(plane.cache_stats().lookups > 0, "plane never consulted");
+    }
 }

@@ -8,9 +8,12 @@ use vq4all::quant::pvq::{
 };
 use vq4all::quant::ternary::{dequantize as tern_dequant, ternarize, ternary_mse};
 use vq4all::quant::uniform::{self, Granularity};
+use std::sync::Arc;
+
 use vq4all::rom::AreaModel;
+use vq4all::serving::engine::{decode_into, Engine, EngineConfig, HostedNet};
 use vq4all::serving::router::Request;
-use vq4all::serving::{decode_batch, Batch};
+use vq4all::serving::{decode_batch, Batch, BatcherConfig};
 use vq4all::tensor::ops;
 use vq4all::testing::{proptest, Gen};
 use vq4all::util::rng::Rng;
@@ -343,6 +346,195 @@ fn batched_packed_decode_parallel_identical_and_rows_correct() {
                 fbits(&direct)
             );
         }
+
+        // The streaming path (caller-provided buffer, fused kernel) must
+        // produce the exact same bits and accounting as the allocating
+        // decode, serial and pooled.
+        let mut streamed = vec![0.0f32; batch.rows.len() * stride];
+        let s = decode_into(&batch, &packed, &cb, codes_per_row, &mut streamed, Some(&pool))
+            .map_err(|e| e.to_string())?;
+        prop_assert_eq!(fbits(&streamed), fbits(&serial.weights));
+        prop_assert_eq!(s.codes_unpacked, serial.codes_unpacked);
+        prop_assert_eq!(s.packed_bytes_read, serial.packed_bytes_read);
+        Ok(())
+    });
+}
+
+/// Engine conservation (tentpole property (a)): every accepted request
+/// is dispatched exactly once across shards — no loss, no duplication,
+/// no cross-net leakage — and a pooled engine behaves bit-identically
+/// to a serial one (same dispatch counts, same cache counters).
+#[test]
+fn engine_conserves_requests_across_shards_and_matches_serial() {
+    let pool = ThreadPool::new(4);
+    proptest(|g| {
+        let nnets = g.usize_in(1, 5);
+        let shards = g.usize_in(1, 4);
+        let d = [1usize, 2][g.usize_in(0, 1)];
+        let k = g.usize_in(2, 8);
+        let cb = Arc::new(Codebook::new(k, d, g.vec_normal((k * d)..=(k * d))));
+        let bits = (usize::BITS - (k - 1).leading_zeros()).max(1);
+        let mut nets = Vec::new();
+        for i in 0..nnets {
+            let cpr = g.usize_in(1, 6);
+            let rows = g.usize_in(1, 8);
+            let codes: Vec<u32> = (0..rows * cpr).map(|_| g.u32_below(k as u32)).collect();
+            nets.push(HostedNet {
+                name: format!("n{i}"),
+                packed: pack_codes(&codes, bits),
+                codebook: cb.clone(),
+                codes_per_row: cpr,
+                device_batch: g.usize_in(1, 6),
+            });
+        }
+        let cfg = EngineConfig {
+            shards,
+            cache_bytes: [0, g.usize_in(64, 4096)][g.usize_in(0, 1)],
+            batcher: BatcherConfig {
+                max_batch: g.usize_in(1, 8),
+                max_linger_ns: 10,
+            },
+        };
+        let mut serial = Engine::new(cfg, nets.clone()).map_err(|e| e.to_string())?;
+        let mut pooled = Engine::new(cfg, nets.clone()).unwrap();
+
+        let total = g.usize_in(1, 60);
+        let mut per_net = vec![0u64; nnets];
+        for _ in 0..total {
+            let i = g.usize_in(0, nnets - 1);
+            let srows = nets[i].packed.count / nets[i].codes_per_row;
+            let row = g.usize_in(0, srows - 1);
+            serial.submit(&nets[i].name, row).map_err(|e| e.to_string())?;
+            pooled.submit(&nets[i].name, row).unwrap();
+            per_net[i] += 1;
+            if g.bool() {
+                serial.tick(50);
+                pooled.tick(50);
+                let a = serial.dispatch_round(None).map_err(|e| e.to_string())?;
+                let b = pooled.dispatch_round(Some(&pool)).map_err(|e| e.to_string())?;
+                prop_assert_eq!(a, b);
+            }
+        }
+        // Rejected submits must not count as accepted.
+        prop_assert!(serial.submit("ghost", 0).is_err());
+        let oob = nets[0].packed.count / nets[0].codes_per_row;
+        prop_assert!(serial.submit("n0", oob).is_err());
+
+        let a = serial.drain(None).map_err(|e| e.to_string())?;
+        let b = pooled.drain(Some(&pool)).map_err(|e| e.to_string())?;
+        prop_assert_eq!(a, b);
+
+        for (eng, tag) in [(&serial, "serial"), (&pooled, "pooled")] {
+            let (acc, disp) = eng.counters();
+            prop_assert_eq!(acc, total as u64);
+            prop_assert!(
+                disp == total as u64,
+                "{tag}: dispatched {disp} of {total} accepted"
+            );
+            prop_assert_eq!(eng.total_pending(), 0);
+            for (i, &want) in per_net.iter().enumerate() {
+                let name = format!("n{i}");
+                let got: u64 = eng
+                    .shards()
+                    .iter()
+                    .map(|s| s.stats.served_by_net.get(&name).copied().unwrap_or(0))
+                    .sum();
+                prop_assert!(got == want, "{tag}: {name} served {got}, submitted {want}");
+            }
+            for s in eng.shards() {
+                // Bounded latency accounting: one sample per served
+                // request, nonnegative virtual-clock delays.
+                prop_assert_eq!(s.stats.latency_ns.count(), s.stats.served);
+                prop_assert!(
+                    s.stats.served == 0 || s.stats.latency_ns.min() >= 0.0,
+                    "{tag}: negative latency on shard {}",
+                    s.id
+                );
+            }
+        }
+        // Serial and pooled planes end in identical accounting states.
+        prop_assert_eq!(serial.cache_stats(), pooled.cache_stats());
+        prop_assert_eq!(serial.totals(), pooled.totals());
+        Ok(())
+    });
+}
+
+/// Decode-cache coherence (tentpole property (b)): any interleaving of
+/// cached/uncached row reads — across evictions, serial or pooled — is
+/// bit-identical to a fresh `decode_batch`, for widths 1..=32 (reusing
+/// the width-bias strategy: awkward non-byte widths drawn half the
+/// time).
+#[test]
+fn decode_cache_any_interleaving_bit_identical_to_fresh_decode() {
+    let pool = ThreadPool::new(4);
+    proptest(|g| {
+        let biased = if g.bool() {
+            [3u32, 5, 7, 13][g.usize_in(0, 3)]
+        } else {
+            g.usize_in(1, 32) as u32
+        };
+        let d = [1usize, 2, 4][g.usize_in(0, 2)];
+        let k = g.usize_in(2, 16);
+        let idx_bits = (usize::BITS - (k - 1).leading_zeros()).max(1);
+        // Codes must address < k words, so the drawn width only widens.
+        let bits = biased.max(idx_bits);
+        let cb = Arc::new(Codebook::new(k, d, g.vec_normal((k * d)..=(k * d))));
+        let cpr = g.usize_in(1, 16);
+        let rows = g.usize_in(1, 10);
+        let codes: Vec<u32> = (0..rows * cpr).map(|_| g.u32_below(k as u32)).collect();
+        let packed = pack_codes(&codes, bits);
+        // Budget drawn below the full working set, so evictions happen
+        // regularly; 0 (cache off) is in range too.
+        let budget = g.usize_in(0, rows * cpr * d * 4);
+        let net = HostedNet {
+            name: "n".into(),
+            packed: packed.clone(),
+            codebook: cb.clone(),
+            codes_per_row: cpr,
+            device_batch: rows,
+        };
+        let mut engine = Engine::new(
+            EngineConfig {
+                shards: 1,
+                cache_bytes: budget,
+                batcher: BatcherConfig::default(),
+            },
+            vec![net],
+        )
+        .map_err(|e| e.to_string())?;
+        let stride = cpr * d;
+        let fbits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+
+        for _round in 0..g.usize_in(1, 8) {
+            let nrows = g.usize_in(1, rows);
+            let pick: Vec<usize> = (0..nrows).map(|_| g.usize_in(0, rows - 1)).collect();
+            let mut dst = vec![0.0f32; nrows * stride];
+            let use_pool = g.bool();
+            engine
+                .decode_rows_into(
+                    "n",
+                    &pick,
+                    &mut dst,
+                    if use_pool { Some(&pool) } else { None },
+                )
+                .map_err(|e| e.to_string())?;
+            // Fresh decode of the same rows (unpadded batch).
+            let reqs: Vec<Request> = pick
+                .iter()
+                .enumerate()
+                .map(|(i, &r)| Request {
+                    id: i as u64,
+                    net: "n".into(),
+                    row: r,
+                    arrived_ns: 0,
+                })
+                .collect();
+            let batch = Batch::form("n", reqs, nrows);
+            let fresh = decode_batch(&batch, &packed, &cb, cpr, None).map_err(|e| e.to_string())?;
+            prop_assert_eq!(fbits(&dst), fbits(&fresh.weights));
+        }
+        let cs = engine.cache_stats();
+        prop_assert_eq!(cs.lookups, cs.hits + cs.misses);
         Ok(())
     });
 }

@@ -6,11 +6,14 @@
 #
 # The hotpath bench writes BENCH_hotpath.json (serial-vs-parallel
 # comparisons for candidate assignment, k-means, KDE density, the PNC
-# scan, encode_nearest, bulk packed unpack, and the batched serving
-# decode) into the repo root so successive PRs can diff it.  Any
+# scan, encode_nearest, bulk packed unpack, the batched serving decode,
+# and the serving-engine rows: cold-vs-warm decode cache and 1-vs-N
+# shards) into the repo root so successive PRs can diff it.  Any
 # comparison row that regresses below 1.0x (parallel slower than serial)
-# FAILS the gate, and the tier-1 pass/fail summary prints LAST so the
-# gate is unmissable.
+# FAILS the gate; the engine smoke additionally requires cache hit_rate
+# > 0 and warm-cache throughput >= cold (engine_cache >= 1.0x at any
+# thread count).  The tier-1 pass/fail summary prints LAST so the gate
+# is unmissable.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
@@ -18,6 +21,7 @@ build_status=FAIL
 test_status=FAIL
 bench_status=FAIL
 speedup_status=SKIP
+engine_status=SKIP
 
 echo "== tier-1: cargo build --release =="
 if cargo build --release; then build_status=PASS; fi
@@ -64,6 +68,47 @@ if comps and not gated:
 sys.exit(1 if (bad or not comps) else 0)
 EOF
     then speedup_status=PASS; else speedup_status=FAIL; fi
+
+    # Engine smoke: the serving-engine rows must exist, the warm-cache
+    # row must show hit_rate > 0 and warm >= cold throughput (the
+    # engine_cache speedup is thread-count independent, so it gates even
+    # on single-core runners); the shard row rides the generic >= 1.0x
+    # multi-thread gate above.
+    echo
+    echo "== engine smoke: decode cache + shards =="
+    if VQ4ALL_GATE_JSON="$bench_json" python3 - <<'EOF'
+import json, os, sys
+doc = json.load(open(os.environ["VQ4ALL_GATE_JSON"]))
+comps = {c["name"]: c for c in doc.get("comparisons", [])}
+bad = False
+eng = doc.get("engine")
+if eng is None:
+    print("  REGRESSION engine summary missing from bench JSON")
+    bad = True
+else:
+    hr = eng.get("cache_hit_rate", 0.0)
+    tag = "ok" if hr > 0 else "REGRESSION"
+    bad = bad or hr <= 0
+    print(f"  {tag:<10} cache hit_rate {hr:.3f} over "
+          f"{int(eng.get('cache_hits', 0) + eng.get('cache_misses', 0))} lookups "
+          f"(must be > 0); shards in sharded row: {int(eng.get('shards', 0))}")
+for name in ("engine_cache", "engine_shards"):
+    c = comps.get(name)
+    if c is None:
+        print(f"  REGRESSION comparison row {name!r} missing")
+        bad = True
+        continue
+    if name == "engine_cache":
+        ok = c["speedup"] >= 1.0
+        tag = "ok" if ok else "REGRESSION"
+        bad = bad or not ok
+        print(f"  {tag:<10} {name:<22} warm/cold {c['speedup']:.2f}x (must be >= 1.0)")
+    else:
+        print(f"  {'ok':<10} {name:<22} {c['speedup']:.2f}x over {c['threads']} threads "
+              "(gated by the generic >= 1.0x rule)")
+sys.exit(1 if bad else 0)
+EOF
+    then engine_status=PASS; else engine_status=FAIL; fi
   else
     echo "python3 unavailable; speedup gate skipped"
   fi
@@ -73,11 +118,13 @@ echo
 echo "== summary (tier-1 last) =="
 echo "  perf smoke (hotpath bench):   $bench_status"
 echo "  speedup >= 1.0x gate:         $speedup_status"
+echo "  engine smoke (cache+shards):  $engine_status"
 echo "  tier-1: cargo build:          $build_status"
 echo "  tier-1: cargo test:           $test_status"
 
 if [ "$build_status" = PASS ] && [ "$test_status" = PASS ] \
-    && [ "$bench_status" = PASS ] && [ "$speedup_status" != FAIL ]; then
+    && [ "$bench_status" = PASS ] && [ "$speedup_status" != FAIL ] \
+    && [ "$engine_status" != FAIL ]; then
   echo "verify OK"
   exit 0
 fi
