@@ -18,7 +18,7 @@ use vq4all::coordinator::{Campaign, NetSession};
 use vq4all::serving::batcher::BatcherConfig;
 use vq4all::serving::server::Server;
 use vq4all::serving::switchsim::{compare, SwitchWorkload};
-use vq4all::serving::{Engine, EngineConfig, HostedNet};
+use vq4all::serving::{Admission, Engine, EngineConfig, HostedNet};
 use vq4all::util::cli::Cli;
 use vq4all::util::config::CampaignConfig;
 use vq4all::util::rng::Rng;
@@ -33,7 +33,7 @@ fn main() -> anyhow::Result<()> {
         .opt("max-batch", "8", "batcher max batch")
         .opt("linger-us", "200", "batcher max linger (virtual microseconds)")
         .opt("artifacts", "artifacts", "artifacts directory")
-        .opt("config", "", "config TOML ([engine] shards / cache_kb)")
+        .opt("config", "", "config TOML ([engine] shards / cache_kb / max_queue)")
         .engine_opts()
         .threads_opt()
         .parse()?;
@@ -79,51 +79,56 @@ fn main() -> anyhow::Result<()> {
             res.sizes.ratio()
         );
         // Host the packed stream on the decode plane, segmented so the
-        // request-row space (0..64) maps onto real stream rows.
+        // request-row space (0..64) maps onto real stream rows.  The
+        // plane forms the batches now, so the hosted geometry carries
+        // the artifact's fixed eval batch.
         hosted.push(HostedNet {
             name: name.clone(),
             packed: res.packed.clone(),
             codebook: universal.clone(),
             codes_per_row: (res.packed.count / 64).max(1),
-            device_batch: bc.max_batch.max(1),
+            device_batch: sess.net.eval_batch,
         });
         sessions.push((sess, codes));
     }
 
     // Phase 2 — serve an interleaved stream (bursty per-network arrivals
-    // force constant task switching).
+    // force constant task switching) through the sharded plane: the one
+    // routing path (admission -> shard queues -> fire-selection ->
+    // cached decode -> infer_hard).  Precedence for the knobs:
+    // --shards/--cache-kb/--max-queue > [engine] config > defaults; the
+    // --threads pool parallelizes the plane's cache-miss decodes.
+    let knobs = args.engine_knobs_from_config(args.get("config"))?;
+    let plane = Engine::new(
+        EngineConfig {
+            shards: knobs.shards,
+            cache_bytes: knobs.cache_bytes(),
+            max_queue_depth: knobs.max_queue,
+            batcher: bc,
+        },
+        hosted,
+    )?;
     let sess_refs: Vec<(&mut NetSession, vq4all::tensor::Tensor)> = sessions
         .iter_mut()
         .map(|(s, c)| (s, c.clone()))
         .collect();
-    let mut server = Server::new(sess_refs, bc);
-
-    // Attach the sharded, cache-aware decode plane.  Precedence:
-    // --shards/--cache-kb > [engine] config section > defaults; the
-    // --threads pool parallelizes its cache-miss decodes.
-    let knobs = args.engine_knobs_from_config(args.get("config"))?;
-    server.attach_plane(
-        Engine::new(
-            EngineConfig {
-                shards: knobs.shards,
-                cache_bytes: knobs.cache_bytes(),
-                batcher: bc,
-            },
-            hosted,
-        )?,
-        args.parallelism()?.pool(),
-    );
+    let mut server = Server::new(sess_refs, plane, args.parallelism()?.pool())?;
 
     let total = args.usize_or("requests", 400)?;
     let mut rng = Rng::new(7);
     let mut submitted = 0usize;
+    let mut shed = 0u64;
     while submitted < total {
         // bursts of 1..=6 requests to one network, then switch
         let net = &nets[rng.below(nets.len())];
         let burst = 1 + rng.below(6);
         for _ in 0..burst.min(total - submitted) {
             let row = rng.below(64);
-            server.submit(net, row)?;
+            // Typed admission: over-budget bursts are shed (--max-queue)
+            // instead of queueing without bound.
+            if let Admission::Rejected { .. } = server.submit(net, row)? {
+                shed += 1;
+            }
             submitted += 1;
         }
         server.tick(20_000); // 20us virtual inter-burst gap
@@ -131,8 +136,12 @@ fn main() -> anyhow::Result<()> {
     }
     let drained = server.drain_all()?;
     println!(
-        "\nserved {} requests ({} drained at shutdown) across {} networks",
-        submitted, drained, nets.len()
+        "\nserved {} of {} requests ({} shed at admission, {} drained at shutdown) across {} networks",
+        submitted as u64 - shed,
+        submitted,
+        shed,
+        drained,
+        nets.len()
     );
 
     println!("\n  network            served  batches  avg-batch  p50 lat(us)  p99 lat(us)");
@@ -154,16 +163,23 @@ fn main() -> anyhow::Result<()> {
         server.exec_ns.mean() / 1_000.0,
         server.exec_ns.count()
     );
-    if let Some(plane) = &server.plane {
-        let cs = plane.cache_stats();
-        println!(
-            "  decode plane: {} shards, {} weight-row lookups, hit_rate {:.3}, {} evictions",
-            plane.shard_count(),
-            cs.lookups,
-            cs.hit_rate(),
-            cs.evictions
-        );
-    }
+    let cs = server.plane.cache_stats();
+    let t = server.plane.totals();
+    println!(
+        "  decode plane: {} shards, {} weight-row lookups, hit_rate {:.3}, {} evictions",
+        server.plane.shard_count(),
+        cs.lookups,
+        cs.hit_rate(),
+        cs.evictions
+    );
+    println!(
+        "  admission: accepted {} = dispatched {} + shed {} (peak shard depth {}, budget {})",
+        t.accepted,
+        t.served,
+        t.shed,
+        t.peak_depth,
+        server.plane.cfg.max_queue_depth
+    );
 
     // Phase 3 — what the same switch pattern costs with per-layer
     // codebooks in DRAM vs the universal codebook in ROM.

@@ -64,26 +64,27 @@ fn build_server(args: &vq4all::util::cli::Args) -> anyhow::Result<TcpServer> {
             packed: res.packed.clone(),
             codebook: universal.clone(),
             codes_per_row: (res.packed.count / 64).max(1),
-            device_batch: bc.max_batch.max(1),
+            device_batch: sess.net.eval_batch,
         });
         sessions.push((sess, codes));
     }
-    let mut server = TcpServer::new(sessions, bc);
-    // Precedence: --shards/--cache-kb > [engine] config > defaults; the
-    // --threads pool parallelizes the plane's cache-miss decodes.
+    // The plane is the one routing path (wall clock on this front-end):
+    // admission -> shard queues -> fire-selection -> cached decode ->
+    // infer_hard.  Precedence: --shards/--cache-kb/--max-queue >
+    // [engine] config > defaults; the --threads pool parallelizes the
+    // plane's cache-miss decodes.  With --max-queue set, over-budget
+    // requests backpressure the readers instead of queueing unbounded.
     let knobs = args.engine_knobs_from_config(args.get("config"))?;
-    server.attach_plane(
-        Engine::new(
-            EngineConfig {
-                shards: knobs.shards,
-                cache_bytes: knobs.cache_bytes(),
-                batcher: bc,
-            },
-            hosted,
-        )?,
-        args.parallelism()?.pool(),
-    );
-    Ok(server)
+    let plane = Engine::new(
+        EngineConfig {
+            shards: knobs.shards,
+            cache_bytes: knobs.cache_bytes(),
+            max_queue_depth: knobs.max_queue,
+            batcher: bc,
+        },
+        hosted,
+    )?;
+    TcpServer::new(sessions, plane, args.parallelism()?.pool())
 }
 
 fn storm(addr: &str, nets: &[&str], n: usize) -> anyhow::Result<()> {
@@ -122,7 +123,7 @@ fn main() -> anyhow::Result<()> {
         .opt("max-batch", "16", "batcher max batch")
         .opt("linger-us", "500", "batcher linger (us)")
         .opt("artifacts", "artifacts", "artifacts directory")
-        .opt("config", "", "config TOML ([engine] shards / cache_kb)")
+        .opt("config", "", "config TOML ([engine] shards / cache_kb / max_queue)")
         .flag("self-test", "spawn server in-process and storm it")
         .engine_opts()
         .threads_opt()
@@ -170,15 +171,23 @@ fn main() -> anyhow::Result<()> {
                 st.latency_us.percentile(99.0)
             );
         }
-        if let Some(plane) = &server.plane {
-            let cs = plane.cache_stats();
-            println!(
-                "  decode plane: {} shards, {} weight-row lookups, hit_rate {:.3}",
-                plane.shard_count(),
-                cs.lookups,
-                cs.hit_rate()
-            );
-        }
+        let cs = server.plane.cache_stats();
+        let t = server.plane.totals();
+        println!(
+            "  decode plane: {} shards, {} weight-row lookups, hit_rate {:.3}",
+            server.plane.shard_count(),
+            cs.lookups,
+            cs.hit_rate()
+        );
+        println!(
+            "  admission: accepted {} = dispatched {} + shed {} ({} deferrals, peak depth {}, budget {})",
+            t.accepted,
+            t.served,
+            t.shed,
+            t.deferred,
+            t.peak_depth,
+            server.plane.cfg.max_queue_depth
+        );
         return Ok(());
     }
 

@@ -3,7 +3,9 @@
 //! * **serial vs parallel** candidate assignment (Eq. 5 distance sweep),
 //!   k-means, KDE density, the PNC scan, `encode_nearest` (the Table-1
 //!   MSE sweep), bulk packed-code unpack, and the batched serving decode
-//!   — the in-house-pool hot paths; the comparisons land in
+//!   — the in-house-pool hot paths — plus the serving-engine rows
+//!   (cold-vs-warm cache, 1-vs-N shards, bounded-vs-unbounded admission
+//!   with its conservation check); the comparisons land in
 //!   `BENCH_hotpath.json` so later PRs have a perf trajectory
 //!   (`VQ4ALL_BENCH_JSON` overrides the path)
 //! * packed-code decode (the serving weight-stream path)
@@ -188,6 +190,7 @@ fn main() -> anyhow::Result<()> {
     let engine_cfg = |shards: usize, cache_bytes: usize| EngineConfig {
         shards,
         cache_bytes,
+        max_queue_depth: 0,
         batcher: BatcherConfig {
             max_batch: 16,
             max_linger_ns: 0,
@@ -260,6 +263,61 @@ fn main() -> anyhow::Result<()> {
         },
     );
     comparisons.push(Comparison::new("engine_shards", &shards_serial, &shards_par, threads));
+
+    // --- engine: admission control (bounded vs unbounded queue) -------------
+    // The same 4-net workload arriving as one 128-request burst per
+    // iteration before any dispatch: the unbounded plane queues and
+    // decodes all of it, the bounded plane (max_queue_depth = 16 on its
+    // single shard) admits 16 and sheds the overflow at admission — so
+    // the shed never reaches a queue, a batch, or a decode window.
+    let mut admission_cfg = engine_cfg(1, 0);
+    admission_cfg.max_queue_depth = 16;
+    let submit_all_typed = |e: &mut Engine| {
+        for r in 0..128usize {
+            // try_submit: shed outcomes are data here, not errors.
+            let _ = e
+                .try_submit(&format!("net{}", r % 4), (r * 7) % device_rows)
+                .unwrap();
+        }
+    };
+    let mut eng_adm_unbounded = Engine::new(engine_cfg(1, 0), hosted_multi.clone()).unwrap();
+    let adm_unbounded = b.bench("engine 128-req burst / 4 nets [unbounded queue]", || {
+        submit_all_typed(&mut eng_adm_unbounded);
+        std::hint::black_box(eng_adm_unbounded.drain(None).unwrap());
+    });
+    let mut eng_adm_bounded = Engine::new(admission_cfg, hosted_multi.clone()).unwrap();
+    let adm_bounded = b.bench("engine 128-req burst / 4 nets [max-queue 16]", || {
+        submit_all_typed(&mut eng_adm_bounded);
+        std::hint::black_box(eng_adm_bounded.drain(None).unwrap());
+    });
+    comparisons.push(Comparison::new(
+        "engine_admission",
+        &adm_unbounded,
+        &adm_bounded,
+        threads,
+    ));
+    // Conservation must be green serial AND pooled: run the same bounded
+    // burst on a sharded plane over the pool and check every ledger.
+    let mut pooled_cfg = engine_cfg(engine_shards, 0);
+    pooled_cfg.max_queue_depth = 16;
+    let mut eng_adm_pooled = Engine::new(pooled_cfg, hosted_multi.clone()).unwrap();
+    submit_all_typed(&mut eng_adm_pooled);
+    eng_adm_pooled.drain(Some(&pool)).unwrap();
+    for (eng, tag) in [
+        (&eng_adm_unbounded, "unbounded"),
+        (&eng_adm_bounded, "bounded serial"),
+        (&eng_adm_pooled, "bounded pooled"),
+    ] {
+        let (acc, disp, shed) = eng.counters();
+        assert_eq!(acc, disp + shed, "admission conservation violated ({tag})");
+        assert_eq!(eng.total_pending(), 0, "drained plane still pending ({tag})");
+    }
+    let admission = eng_adm_bounded.totals();
+    assert!(admission.shed > 0, "bounded plane never shed — gate would be vacuous");
+    println!(
+        "engine admission: accepted {} = dispatched {} + shed {} (peak depth {}, budget {})",
+        admission.accepted, admission.served, admission.shed, admission.peak_depth, 16
+    );
 
     // --- router -------------------------------------------------------------
     b.bench("router submit+drain 1k reqs / 4 nets", || {
@@ -338,12 +396,21 @@ fn main() -> anyhow::Result<()> {
         ("cache_misses", Json::num(cache_stats.misses as f64)),
         ("cache_evictions", Json::num(cache_stats.evictions as f64)),
         ("shards", Json::num(engine_shards as f64)),
+        // Admission counters from the bounded (max-queue 16) run —
+        // scripts/verify.sh gates accepted == dispatched + shed > 0.
+        ("max_queue_depth", Json::num(16.0)),
+        ("admission_accepted", Json::num(admission.accepted as f64)),
+        ("admission_dispatched", Json::num(admission.served as f64)),
+        ("admission_shed", Json::num(admission.shed as f64)),
+        ("admission_peak_depth", Json::num(admission.peak_depth as f64)),
     ]);
     println!(
-        "engine summary: hit_rate {:.3} over {} lookups, {} shards in the sharded row",
+        "engine summary: hit_rate {:.3} over {} lookups, {} shards in the sharded row, \
+         {} shed under the bounded queue",
         cache_stats.hit_rate(),
         cache_stats.lookups,
-        engine_shards
+        engine_shards,
+        admission.shed
     );
     let json_path = std::env::var("VQ4ALL_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());

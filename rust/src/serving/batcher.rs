@@ -10,8 +10,8 @@ use crate::util::threadpool::ThreadPool;
 use crate::vq::codebook::Codebook;
 use crate::vq::pack::PackedCodes;
 
+use super::engine::router::Request;
 use super::engine::stream::{self, DecodeStats};
-use super::router::Request;
 use super::switchsim::{decode_batch, BatchDecode};
 
 /// Batcher policy.

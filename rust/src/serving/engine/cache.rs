@@ -111,6 +111,15 @@ impl DecodeCache {
         self.bytes = 0;
     }
 
+    /// Non-mutating membership probe: is a block for this window
+    /// resident right now?  No stats, no recency refresh — the observer
+    /// the admission property tests use to prove a shed request's row
+    /// was never decoded (on an eviction-free budget, every decoded
+    /// window is resident).
+    pub fn contains(&self, key: &RowWindow) -> bool {
+        self.map.contains_key(key)
+    }
+
     /// Look up a window.  A hit refreshes recency and returns the block.
     pub fn get(&mut self, key: &RowWindow) -> Option<&[f32]> {
         self.stats.lookups += 1;
@@ -185,7 +194,9 @@ mod tests {
         c.insert(key(0, 0), &[1.0, 2.0, 3.0, 4.0]);
         assert_eq!(c.get(&key(0, 0)).unwrap(), &[1.0, 2.0, 3.0, 4.0]);
         assert!(c.get(&key(1, 0)).is_none(), "keys are per-net");
-        assert_eq!(c.stats.lookups, 3);
+        assert!(c.contains(&key(0, 0)));
+        assert!(!c.contains(&key(1, 0)));
+        assert_eq!(c.stats.lookups, 3, "contains() is not a lookup");
         assert_eq!(c.stats.hits, 1);
         assert_eq!(c.stats.misses, 2);
         assert!((c.stats.hit_rate() - 1.0 / 3.0).abs() < 1e-12);

@@ -6,14 +6,23 @@
 //! and decoding assignment streams.  This subsystem attacks that cost on
 //! three axes:
 //!
-//! * **Sharded dispatch plane** ([`Engine`]) — `EngineConfig::shards`
-//!   worker shards, each owning a disjoint subset of the hosted networks
-//!   with its own router queue set ([`shard`]).  Shards share no mutable
-//!   state, so the engine fans them across `util::threadpool` under the
-//!   established deterministic-chunking contract: per-shard results and
-//!   cache state are bit-identical at every thread count, and every
-//!   accepted request is dispatched exactly once (property-tested in
-//!   `rust/tests/prop_substrate.rs`).
+//! * **Sharded routing/dispatch plane** ([`Engine`]) —
+//!   `EngineConfig::shards` worker shards, each owning a disjoint subset
+//!   of the hosted networks with its own [`router`] queue set
+//!   ([`shard`]); the **only** `Router` construction sites in the crate.
+//!   Shards share no mutable state, so the engine fans them across
+//!   `util::threadpool` under the established deterministic-chunking
+//!   contract: per-shard results and cache state are bit-identical at
+//!   every thread count, and every accepted request is dispatched
+//!   exactly once (property-tested in `rust/tests/prop_substrate.rs`).
+//! * **Admission control** — a per-shard queue-depth budget
+//!   ([`EngineConfig::max_queue_depth`]): over-budget submissions
+//!   resolve to the typed [`Admission::Rejected`] (shed — never
+//!   enqueued, never decoded) on [`Engine::try_submit`], while
+//!   wall-clock callers probe [`Engine::would_admit`] and defer with
+//!   backpressure instead.  Conservation
+//!   (`accepted == dispatched + shed`, per net via [`NetLedger`]) and
+//!   serial-vs-pooled shed-decision identity are property-tested.
 //! * **Decode cache** ([`cache`]) — an LRU keyed on `(net, row window)`
 //!   holding decoded f32 row-blocks, with byte-budget eviction and
 //!   hit/miss/evict accounting.  Cache-served rows are bit-identical to
@@ -24,22 +33,28 @@
 //!   [`crate::vq::Codebook::decode_packed_into`] kernel, eliminating the
 //!   intermediate weights allocation on the hot path.
 //!
-//! `serving::server` (virtual clock) and `serving::tcp` (wall clock)
-//! attach an [`Engine`] as their decode plane; `benches/hotpath.rs`
-//! tracks cold-vs-warm-cache and 1-vs-N-shard engine rows in
-//! `BENCH_hotpath.json`, gated by `scripts/verify.sh`.
+//! `serving::server` (virtual clock, [`Engine::tick`]) and
+//! `serving::tcp` (wall clock, [`Engine::set_now`]) are thin front-ends
+//! over this plane: admission → shard queue → fire-selection
+//! ([`Engine::next_batch`]) → cached/streamed decode
+//! ([`Engine::stream_batch`]) → `infer_hard` is one shared code path.
+//! `benches/hotpath.rs` tracks the cold-vs-warm-cache, 1-vs-N-shard, and
+//! bounded-vs-unbounded-admission engine rows in `BENCH_hotpath.json`,
+//! gated by `scripts/verify.sh`.
 
 pub mod cache;
+pub mod router;
 pub mod shard;
 pub mod stream;
 
 pub use cache::{CacheStats, DecodeCache, RowWindow};
-pub use shard::{HostedNet, RowServe, Shard, ShardStats};
+pub use router::{Request, Router};
+pub use shard::{HostedNet, NetLedger, RowServe, Shard, ShardStats};
 pub use stream::{decode_into, decode_rows_into, DecodeStats};
 
 use std::collections::BTreeMap;
 
-use crate::serving::batcher::BatcherConfig;
+use crate::serving::batcher::{Batch, BatcherConfig};
 use crate::util::threadpool::{SyncPtr, ThreadPool};
 
 /// Engine-level configuration.
@@ -49,6 +64,10 @@ pub struct EngineConfig {
     pub shards: usize,
     /// Per-shard decode-cache byte budget (0 disables the cache).
     pub cache_bytes: usize,
+    /// Per-shard admission budget: a shard whose queued backlog is at
+    /// this depth sheds further submissions with a typed
+    /// [`Admission::Rejected`] (0 = unbounded, the default).
+    pub max_queue_depth: usize,
     /// Batching policy every shard applies to its queues.
     pub batcher: BatcherConfig,
 }
@@ -58,15 +77,44 @@ impl Default for EngineConfig {
         EngineConfig {
             shards: 1,
             cache_bytes: 1 << 20, // 1 MiB per shard
+            max_queue_depth: 0,
             batcher: BatcherConfig::default(),
         }
     }
 }
 
+/// Typed admission outcome of [`Engine::try_submit`]: the deterministic
+/// shed decision the virtual-clock front-end surfaces to its callers.
+/// (The wall-clock TCP front-end avoids shedding by probing
+/// [`Engine::would_admit`] and deferring — backpressure — instead.)
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Enqueued on the owning shard under this shard-local request id.
+    Accepted { id: u64 },
+    /// Shed: the owning shard's backlog was at the
+    /// [`EngineConfig::max_queue_depth`] budget.  The request was never
+    /// enqueued, so it can never reach a batch, a decode, or
+    /// `infer_hard` — not even as a padded row.
+    Rejected {
+        /// The shard that refused the request.
+        shard: usize,
+        /// Its queue depth at the moment of refusal.
+        depth: usize,
+    },
+}
+
 /// Aggregate serving counters across shards.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct EngineTotals {
+    /// Validated submissions offered to the plane (served + shed + queued).
+    pub accepted: u64,
     pub served: u64,
+    /// Submissions rejected at admission.
+    pub shed: u64,
+    /// Front-end backpressure events (see [`Engine::note_deferral`]).
+    pub deferred: u64,
+    /// Deepest backlog any single shard ever held.
+    pub peak_depth: usize,
     pub batches: u64,
     pub padded_rows: u64,
     pub rows_decoded: u64,
@@ -79,10 +127,13 @@ pub struct Engine {
     shards: Vec<Shard>,
     /// net -> shard index (deterministic round-robin placement).
     placement: BTreeMap<String, usize>,
-    /// Virtual time (ns) — advanced by [`Engine::tick`], mirrored into
-    /// every shard dispatch.
+    /// Virtual time (ns) — advanced by [`Engine::tick`] (virtual-clock
+    /// front-ends) or [`Engine::set_now`] (wall-clock front-ends),
+    /// mirrored into every shard dispatch.
     pub now_ns: u64,
-    accepted: u64,
+    /// Round-robin start shard for [`Engine::next_batch`] scans, so a
+    /// hot shard cannot starve the others on the front-end fire path.
+    fire_cursor: usize,
 }
 
 impl Engine {
@@ -115,7 +166,7 @@ impl Engine {
             shards,
             placement,
             now_ns: 0,
-            accepted: 0,
+            fire_cursor: 0,
         })
     }
 
@@ -148,11 +199,24 @@ impl Engine {
         self.now_ns += ns;
     }
 
-    /// Enqueue a request on the owning shard at the current virtual
-    /// time; returns its shard-local id.  Out-of-range rows are rejected
-    /// here (before they can reach a decode), so `accepted` counts only
-    /// requests the plane is obligated to serve.
-    pub fn submit(&mut self, net: &str, row: usize) -> anyhow::Result<u64> {
+    /// Drive the plane's clock from an external (wall) clock — monotone,
+    /// so interleaved `tick`s can never run it backwards.  The TCP
+    /// front-end calls this with `Instant`-derived nanoseconds before
+    /// every admission and fire scan.
+    pub fn set_now(&mut self, now_ns: u64) {
+        if now_ns > self.now_ns {
+            self.now_ns = now_ns;
+        }
+    }
+
+    /// Offer a request to the owning shard at the current clock under
+    /// the [`EngineConfig::max_queue_depth`] admission budget.  Unknown
+    /// nets and out-of-range rows are *errors* (never counted — the
+    /// plane was never obligated to serve them); valid submissions
+    /// always count as accepted and resolve to exactly one of
+    /// [`Admission::Accepted`] (enqueued) or [`Admission::Rejected`]
+    /// (shed), so `accepted == dispatched + shed` holds once drained.
+    pub fn try_submit(&mut self, net: &str, row: usize) -> anyhow::Result<Admission> {
         let &s = self
             .placement
             .get(net)
@@ -163,9 +227,78 @@ impl Engine {
             row < stream_rows,
             "engine: row {row} out of range for {net:?} ({stream_rows} stream rows)"
         );
-        let id = shard.router.submit(net, row, self.now_ns)?;
-        self.accepted += 1;
-        Ok(id)
+        Ok(shard.admit(net, row, self.now_ns, self.cfg.max_queue_depth))
+    }
+
+    /// [`Engine::try_submit`] for callers that treat shedding as an
+    /// error (benches, tests, unbounded planes); returns the enqueued
+    /// request's shard-local id.
+    pub fn submit(&mut self, net: &str, row: usize) -> anyhow::Result<u64> {
+        match self.try_submit(net, row)? {
+            Admission::Accepted { id } => Ok(id),
+            Admission::Rejected { shard, depth } => anyhow::bail!(
+                "engine: {net:?} shed at admission (shard {shard} depth {depth} at budget {})",
+                self.cfg.max_queue_depth
+            ),
+        }
+    }
+
+    /// Check-only admission probe (no counters, no side effects): would
+    /// a submission for `net` be admitted right now?  `false` for
+    /// unknown nets.  The TCP front-end uses this to *defer* (hold the
+    /// request and stop pulling from the wire — backpressure) instead of
+    /// shedding.
+    pub fn would_admit(&self, net: &str) -> bool {
+        match self.placement.get(net) {
+            Some(&s) => {
+                self.cfg.max_queue_depth == 0
+                    || self.shards[s].router.total_pending() < self.cfg.max_queue_depth
+            }
+            None => false,
+        }
+    }
+
+    /// Record one backpressure event on `net`'s owning shard: a
+    /// front-end held a request back (instead of shedding it) because
+    /// [`Engine::would_admit`] said no.  Unknown nets are ignored.
+    pub fn note_deferral(&mut self, net: &str) {
+        if let Some(&s) = self.placement.get(net) {
+            self.shards[s].stats.deferred += 1;
+        }
+    }
+
+    /// Front-end construction check, shared by `Server::new` and
+    /// `TcpServer::new`: every session must be hosted at the artifact's
+    /// fixed eval batch (the plane forms the batches), and — the
+    /// converse — every hosted net must have a session, because the
+    /// plane is the routing table and a hosted net without a session
+    /// would admit requests nobody can serve.
+    pub fn validate_sessions<'n>(
+        &self,
+        front_end: &str,
+        sessions: impl IntoIterator<Item = (&'n str, usize)>,
+    ) -> anyhow::Result<()> {
+        let mut seen: std::collections::BTreeSet<&str> = std::collections::BTreeSet::new();
+        for (name, eval_batch) in sessions {
+            let hosted = self.hosted(name).ok_or_else(|| {
+                anyhow::anyhow!("{front_end}: {name:?} is not hosted on the decode plane")
+            })?;
+            anyhow::ensure!(
+                hosted.device_batch == eval_batch,
+                "{front_end}: {name:?} hosted at device_batch {} but its artifact runs eval_batch {eval_batch}",
+                hosted.device_batch
+            );
+            seen.insert(name);
+        }
+        for shard in &self.shards {
+            for net in shard.net_names() {
+                anyhow::ensure!(
+                    seen.contains(net),
+                    "{front_end}: plane hosts {net:?} but no session serves it"
+                );
+            }
+        }
+        Ok(())
     }
 
     pub fn total_pending(&self) -> usize {
@@ -234,13 +367,33 @@ impl Engine {
         Ok(total)
     }
 
-    /// Conservation counters `(accepted, dispatched)` — equal once the
-    /// plane is drained.
-    pub fn counters(&self) -> (u64, u64) {
-        (
-            self.accepted,
-            self.shards.iter().map(|s| s.stats.served).sum(),
-        )
+    /// Fire-selection for the front-ends: scan the shards (round-robin
+    /// from a rotating cursor, so no shard starves) and drain at most
+    /// one device batch from the first one that should fire at the
+    /// current clock.  The caller then streams the batch through
+    /// [`Engine::stream_batch`] and runs its artifact — admission →
+    /// shard queue → fire-selection → cached/streamed decode →
+    /// `infer_hard` is one code path for `serving::server`,
+    /// `serving::tcp`, the benches, and the property tests.
+    pub fn next_batch(&mut self) -> Option<Batch> {
+        let n = self.shards.len();
+        let now = self.now_ns;
+        let cfg = self.cfg.batcher;
+        for off in 0..n {
+            let s = (self.fire_cursor + off) % n;
+            if let Some(batch) = self.shards[s].next_batch(&cfg, now) {
+                self.fire_cursor = (s + 1) % n;
+                return Some(batch);
+            }
+        }
+        None
+    }
+
+    /// Conservation counters `(accepted, dispatched, shed)` —
+    /// `accepted == dispatched + shed` once the plane is drained.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        let t = self.totals();
+        (t.accepted, t.served, t.shed)
     }
 
     /// Aggregate decode-cache counters across shards.
@@ -256,7 +409,11 @@ impl Engine {
     pub fn totals(&self) -> EngineTotals {
         let mut t = EngineTotals::default();
         for s in &self.shards {
+            t.accepted += s.stats.accepted;
             t.served += s.stats.served;
+            t.shed += s.stats.shed;
+            t.deferred += s.stats.deferred;
+            t.peak_depth = t.peak_depth.max(s.stats.peak_depth);
             t.batches += s.stats.batches;
             t.padded_rows += s.stats.padded_rows;
             t.rows_decoded += s.stats.rows_decoded;
@@ -337,6 +494,7 @@ mod tests {
         EngineConfig {
             shards,
             cache_bytes,
+            max_queue_depth: 0,
             batcher: BatcherConfig {
                 max_batch: 4,
                 max_linger_ns: 100,
@@ -375,8 +533,109 @@ mod tests {
         assert!(e.submit("ghost", 0).is_err());
         assert!(e.submit("a", 6).is_err(), "stream holds rows 0..6");
         e.submit("a", 5).unwrap();
-        let (acc, disp) = e.counters();
-        assert_eq!((acc, disp), (1, 0), "rejected submits are not accepted");
+        let (acc, disp, shed) = e.counters();
+        assert_eq!((acc, disp, shed), (1, 0, 0), "invalid submits are not accepted");
+    }
+
+    #[test]
+    fn admission_sheds_at_the_queue_budget_and_conserves() {
+        let mut rng = Rng::new(9);
+        let cb = test_cb(&mut rng);
+        let mut c = cfg(1, 0);
+        c.max_queue_depth = 2;
+        let mut e = Engine::new(c, vec![hosted("a", 6, 3, &cb, &mut rng)]).unwrap();
+        assert!(e.would_admit("a"));
+        assert!(matches!(e.try_submit("a", 0).unwrap(), Admission::Accepted { .. }));
+        assert!(matches!(e.try_submit("a", 1).unwrap(), Admission::Accepted { .. }));
+        assert!(!e.would_admit("a"), "backlog at budget");
+        assert!(!e.would_admit("ghost"), "unknown nets are never admitted");
+        match e.try_submit("a", 2).unwrap() {
+            Admission::Rejected { shard, depth } => {
+                assert_eq!(shard, 0);
+                assert_eq!(depth, 2);
+            }
+            other => panic!("expected a shed, got {other:?}"),
+        }
+        assert!(e.submit("a", 2).is_err(), "submit() surfaces the shed as an error");
+        e.note_deferral("a");
+        e.note_deferral("ghost"); // ignored
+        let t = e.totals();
+        assert_eq!((t.accepted, t.shed, t.deferred, t.peak_depth), (4, 2, 1, 2));
+        // Shedding freed nothing: the two queued requests still drain.
+        let served = e.drain(None).unwrap();
+        assert_eq!(served, 2);
+        let (acc, disp, shed) = e.counters();
+        assert_eq!(acc, disp + shed, "admission conservation");
+        let ledger = e.shards()[0].stats.by_net["a"];
+        assert_eq!(
+            (ledger.accepted, ledger.served, ledger.shed),
+            (4, 2, 2),
+            "per-net ledger conserves"
+        );
+        assert!(e.would_admit("a"), "drained plane admits again");
+    }
+
+    #[test]
+    fn next_batch_fires_the_front_end_path_and_rotates_shards() {
+        let mut rng = Rng::new(10);
+        let cb = test_cb(&mut rng);
+        let nets: Vec<HostedNet> = (0..2)
+            .map(|i| hosted(&format!("n{i}"), 8, 2, &cb, &mut rng))
+            .collect();
+        let mut e = Engine::new(cfg(2, 4096), nets).unwrap();
+        assert!(e.next_batch().is_none(), "idle plane fires nothing");
+        for i in 0..4 {
+            e.submit("n0", i).unwrap();
+            e.submit("n1", i).unwrap();
+        }
+        // Both shards are full (max_batch = 4); the cursor alternates.
+        let first = e.next_batch().expect("full queue fires");
+        let second = e.next_batch().expect("other shard fires");
+        assert_ne!(first.net, second.net, "cursor rotation reaches both shards");
+        assert_eq!(first.requests.len() + second.requests.len(), 8);
+        // next_batch records the serve-side counters; the decode halves
+        // stay zero until the caller streams the batch.
+        let t = e.totals();
+        assert_eq!(t.served, 8);
+        assert_eq!(t.rows_decoded + t.rows_from_cache, 0);
+        let rs = e
+            .stream_batch(&first.net, &first.rows, None)
+            .unwrap()
+            .expect("hosted net streams");
+        assert_eq!(rs.hits + rs.misses, first.rows.len());
+        assert_eq!(e.totals().rows_decoded + e.totals().rows_from_cache, first.rows.len() as u64);
+        assert_eq!(e.total_pending(), 0);
+    }
+
+    #[test]
+    fn validate_sessions_checks_both_directions() {
+        let mut rng = Rng::new(12);
+        let cb = test_cb(&mut rng);
+        let nets: Vec<HostedNet> = (0..2)
+            .map(|i| hosted(&format!("n{i}"), 4, 2, &cb, &mut rng))
+            .collect();
+        let e = Engine::new(cfg(1, 0), nets).unwrap();
+        // One-to-one at the hosted device_batch (4): ok.
+        assert!(e.validate_sessions("t", [("n0", 4), ("n1", 4)]).is_ok());
+        // A session the plane does not host.
+        assert!(e.validate_sessions("t", [("n0", 4), ("ghost", 4)]).is_err());
+        // Batch-geometry mismatch.
+        assert!(e.validate_sessions("t", [("n0", 4), ("n1", 8)]).is_err());
+        // A hosted net with no session would admit unservable requests.
+        assert!(e.validate_sessions("t", [("n0", 4)]).is_err());
+    }
+
+    #[test]
+    fn set_now_is_monotone() {
+        let mut rng = Rng::new(11);
+        let cb = test_cb(&mut rng);
+        let mut e = Engine::new(cfg(1, 0), vec![hosted("a", 4, 2, &cb, &mut rng)]).unwrap();
+        e.set_now(100);
+        assert_eq!(e.now_ns, 100);
+        e.set_now(50);
+        assert_eq!(e.now_ns, 100, "wall clock never runs backwards");
+        e.tick(5);
+        assert_eq!(e.now_ns, 105);
     }
 
     #[test]
@@ -395,16 +654,17 @@ mod tests {
         }
         let served = e.drain(None).unwrap();
         assert_eq!(served, 37);
-        let (acc, disp) = e.counters();
+        let (acc, disp, shed) = e.counters();
         assert_eq!(acc, 37);
         assert_eq!(disp, 37);
+        assert_eq!(shed, 0, "unbounded plane sheds nothing");
         assert_eq!(e.total_pending(), 0);
         for (i, &want) in per_net.iter().enumerate() {
             let name = format!("n{i}");
             let got: u64 = e
                 .shards()
                 .iter()
-                .map(|s| s.stats.served_by_net.get(&name).copied().unwrap_or(0))
+                .map(|s| s.stats.by_net.get(&name).map(|l| l.served).unwrap_or(0))
                 .sum();
             assert_eq!(got, want, "{name} served count");
         }

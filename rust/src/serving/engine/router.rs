@@ -1,10 +1,16 @@
 //! Request router: one queue per hosted network, round-robin-with-
 //! backlog-priority dispatch, conservation guarantees (every accepted
 //! request is dispatched exactly once — property-tested).
+//!
+//! The router is an **engine-internal** component: since the serving
+//! planes were unified, the only construction sites are the engine's
+//! shards ([`super::shard::Shard`]) — the front-ends (`serving::server`,
+//! `serving::tcp`) route exclusively through the engine's per-shard
+//! router queue sets.
 
 use std::collections::VecDeque;
 
-use super::batcher::{should_fire, BatcherConfig};
+use crate::serving::batcher::{should_fire, BatcherConfig};
 
 /// One inference request.
 #[derive(Clone, Debug, PartialEq)]

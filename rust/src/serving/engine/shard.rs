@@ -9,13 +9,14 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::serving::batcher::{Batch, BatcherConfig};
-use crate::serving::router::Router;
 use crate::util::stats::Summary;
 use crate::util::threadpool::{SyncPtr, ThreadPool};
 use crate::vq::codebook::Codebook;
 use crate::vq::pack::{unpack_range, PackedCodes};
 
 use super::cache::{DecodeCache, RowWindow};
+use super::router::Router;
+use super::Admission;
 
 /// One network hosted on the decode plane: its packed assignment stream,
 /// the shared (ROM-resident) universal codebook, and the row geometry —
@@ -53,18 +54,39 @@ pub struct RowServe {
     pub misses: usize,
 }
 
+/// Per-net conservation ledger: every validated submission lands in
+/// `accepted`, and then in exactly one of `served` (dispatched through a
+/// batch) or `shed` (rejected at admission) — so after a drain
+/// `accepted == served + shed` holds per net, per shard, and engine-wide
+/// (property-tested in `rust/tests/prop_substrate.rs`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct NetLedger {
+    pub accepted: u64,
+    pub served: u64,
+    pub shed: u64,
+}
+
 /// Per-shard serving statistics.
 #[derive(Clone, Debug, Default)]
 pub struct ShardStats {
+    /// Validated submissions offered to this shard (admitted + shed).
+    pub accepted: u64,
     pub served: u64,
+    /// Submissions rejected at admission (queue depth at budget).
+    pub shed: u64,
+    /// Backpressure events: a front-end held a request back because the
+    /// shard would have shed it (see `Engine::note_deferral`).
+    pub deferred: u64,
+    /// Deepest queue backlog this shard ever held.
+    pub peak_depth: usize,
     pub batches: u64,
     pub padded_rows: u64,
     /// Rows decoded fresh (cache misses or cache off).
     pub rows_decoded: u64,
     /// Rows served out of the decode cache.
     pub rows_from_cache: u64,
-    /// Per-net served counts (the engine's conservation ledger).
-    pub served_by_net: BTreeMap<String, u64>,
+    /// Per-net conservation ledgers (accepted / served / shed).
+    pub by_net: BTreeMap<String, NetLedger>,
     /// Virtual-clock queue latency (ns) — bounded accounting.
     pub latency_ns: Summary,
 }
@@ -153,6 +175,71 @@ impl Shard {
         self.nets.keys().map(|s| s.as_str())
     }
 
+    /// Admission control: offer a (validated) request to this shard at
+    /// `now_ns` under a queue-depth budget (`0` = unbounded).  Every
+    /// offer counts as `accepted`; a full queue sheds the request (typed
+    /// [`Admission::Rejected`], never enqueued — so no batch, and no
+    /// padded row, can ever carry it to a decode or `infer_hard` run),
+    /// otherwise it is enqueued under a fresh shard-local id.
+    pub fn admit(
+        &mut self,
+        net: &str,
+        row: usize,
+        now_ns: u64,
+        max_queue_depth: usize,
+    ) -> Admission {
+        let depth = self.router.total_pending();
+        let shed = max_queue_depth > 0 && depth >= max_queue_depth;
+        let st = &mut self.stats;
+        st.accepted += 1;
+        let ledger = st.by_net.entry(net.to_string()).or_default();
+        ledger.accepted += 1;
+        if shed {
+            ledger.shed += 1;
+            st.shed += 1;
+            return Admission::Rejected {
+                shard: self.id,
+                depth,
+            };
+        }
+        st.peak_depth = st.peak_depth.max(depth + 1);
+        let id = self
+            .router
+            .submit(net, row, now_ns)
+            .expect("admit called for a net this shard hosts");
+        Admission::Accepted { id }
+    }
+
+    /// Fire-selection: if any hosted queue should fire under `cfg` at
+    /// `now_ns`, drain at most one device batch, form it, and record the
+    /// serve-side counters (served / batches / padding / ledger /
+    /// latency).  The decode and inference belong to the caller:
+    /// [`Shard::dispatch_one`] (the standalone plane) streams the batch
+    /// through this shard's cache, the front-ends stream it and then run
+    /// the `infer_hard` artifact — one shared fire path either way.
+    pub fn next_batch(&mut self, cfg: &BatcherConfig, now_ns: u64) -> Option<Batch> {
+        let name = self.router.next_fireable(cfg, now_ns)?.to_string();
+        let device_batch = self
+            .nets
+            .get(&name)
+            .expect("router queue without hosted net")
+            .1
+            .device_batch;
+        // Never drain more than one device batch can carry — leftovers
+        // stay queued instead of being dropped.
+        let reqs = self.router.drain_net(&name, cfg.max_batch.min(device_batch));
+        let batch = Batch::form(&name, reqs, device_batch);
+        let st = &mut self.stats;
+        st.served += batch.requests.len() as u64;
+        st.batches += 1;
+        st.padded_rows += batch.padded as u64;
+        st.by_net.entry(name).or_default().served += batch.requests.len() as u64;
+        for r in &batch.requests {
+            st.latency_ns.push(now_ns.saturating_sub(r.arrived_ns) as f64);
+        }
+        Some(batch)
+    }
+
     /// Cache-aware streaming decode of `rows` of `net` into `dst`
     /// (`dst.len() == rows.len() * row_stride`).  This is the raw decode
     /// plane (caller-provided buffer); batch-serving callers use
@@ -174,8 +261,9 @@ impl Shard {
     /// Cache-aware streaming decode of a dispatched batch's weight rows
     /// into this shard's own staging buffer, mapping caller rows onto
     /// the packed stream cyclically (safe for geometries where the
-    /// request-row space exceeds the stream).  The one call
-    /// `serving::server` / `serving::tcp` make per batch.
+    /// request-row space exceeds the stream).  The one decode call the
+    /// dispatch path makes per batch — standalone plane and front-ends
+    /// alike — so the per-shard row counters are maintained here.
     pub fn stream_batch(
         &mut self,
         net: &str,
@@ -190,7 +278,10 @@ impl Shard {
         let mapped: Vec<usize> = rows.iter().map(|r| r % srows).collect();
         let stride = n.row_stride();
         self.staging.resize(mapped.len() * stride, 0.0);
-        serve_rows_into(n, *net_id, &mut self.cache, &mapped, &mut self.staging, pool)
+        let serve = serve_rows_into(n, *net_id, &mut self.cache, &mapped, &mut self.staging, pool)?;
+        self.stats.rows_from_cache += serve.hits as u64;
+        self.stats.rows_decoded += serve.misses as u64;
+        Ok(serve)
     }
 
     /// Fire at most one batch if any hosted queue should; returns the
@@ -202,32 +293,12 @@ impl Shard {
         now_ns: u64,
         pool: Option<&ThreadPool>,
     ) -> anyhow::Result<usize> {
-        let fire = self.router.next_fireable(cfg, now_ns).map(|n| n.to_string());
-        let Some(name) = fire else { return Ok(0) };
-        let device_batch = self
-            .nets
-            .get(&name)
-            .expect("router queue without hosted net")
-            .1
-            .device_batch;
-        // Never drain more than one device batch can carry — leftovers
-        // stay queued instead of being dropped.
-        let reqs = self.router.drain_net(&name, cfg.max_batch.min(device_batch));
-        let batch = Batch::form(&name, reqs, device_batch);
+        let Some(batch) = self.next_batch(cfg, now_ns) else {
+            return Ok(0);
+        };
         // Submitted rows were validated < stream_rows, so the cyclic
         // mapping inside stream_batch is the identity here.
-        let serve = self.stream_batch(&name, &batch.rows, pool)?;
-
-        let st = &mut self.stats;
-        st.served += batch.requests.len() as u64;
-        st.batches += 1;
-        st.padded_rows += batch.padded as u64;
-        st.rows_from_cache += serve.hits as u64;
-        st.rows_decoded += serve.misses as u64;
-        *st.served_by_net.entry(name).or_insert(0) += batch.requests.len() as u64;
-        for r in &batch.requests {
-            st.latency_ns.push(now_ns.saturating_sub(r.arrived_ns) as f64);
-        }
+        self.stream_batch(&batch.net, &batch.rows, pool)?;
         Ok(batch.requests.len())
     }
 }

@@ -109,7 +109,7 @@ pub fn decode_rows_into(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::serving::router::Request;
+    use crate::serving::engine::router::Request;
     use crate::serving::switchsim::decode_batch;
     use crate::util::rng::Rng;
     use crate::vq::pack::pack_codes;

@@ -2,43 +2,61 @@
 //! compressed networks resident on one platform, fast task switching
 //! because the universal codebook never reloads.
 //!
-//! * [`batcher`]   — dynamic batcher: coalesces requests per network up
-//!   to a batch size / linger deadline; [`Batch::decode_rows_into`]
-//!   streams a batch's weight rows into a caller-provided buffer.
-//! * [`router`]    — routes requests to per-network queues, tracks
-//!   fairness and queue depths (name-keyed, incl. [`Router::drain_net`]).
-//! * [`engine`]    — the sharded, cache-aware decode plane: worker
-//!   shards each owning a disjoint subset of the hosted networks with
-//!   their own router queue set, an LRU decode cache keyed on
-//!   `(net, row window)` with byte-budget eviction, and the streaming
-//!   decode path ([`engine::decode_into`]) that unpacks + decodes
-//!   straight into `infer_hard` staging buffers.  `server`/`tcp`
-//!   consume the plane per batch via `Engine::stream_batch` (cache +
-//!   streaming decode); the sharded dispatch loop
-//!   (`Engine::submit`/`dispatch_round`/`drain`) is the standalone
-//!   plane — exercised by `benches/hotpath.rs` and the conservation
-//!   property tests, and the target for moving the front-end routers
-//!   onto (see ROADMAP).
-//! * [`server`]    — thread-driven serving loop gluing router + batcher
-//!   to the `infer_hard` artifacts (virtual clock); attaches an
-//!   [`Engine`] as its decode plane.
+//! Since the planes were unified there is exactly **one routing/dispatch
+//! path**, owned by [`engine`]:
+//!
+//! ```text
+//!                     serving::server (virtual clock)
+//!                     serving::tcp    (wall clock)
+//!                               │ try_submit / would_admit
+//!                               ▼
+//!            ┌───────────── serving::engine ─────────────┐
+//!            │ admission (max_queue_depth: shed | defer)  │
+//!            │   → per-shard Router queue sets            │
+//!            │   → fire-selection (Engine::next_batch)    │
+//!            │   → cached/streamed decode (stream_batch)  │
+//!            └────────────────────┬───────────────────────┘
+//!                                 ▼
+//!                       infer_hard artifacts
+//! ```
+//!
+//! The front-ends no longer own a `Router` — the only router
+//! construction sites are the engine's shards.  Both front-ends, the
+//! benches, and the property tests drive the same admission → shard
+//! queue → fire-selection → decode pipeline; the virtual-clock path
+//! sheds over-budget submissions with a typed
+//! [`engine::Admission::Rejected`], the TCP path probes
+//! [`Engine::would_admit`] and defers (backpressure) instead.
+//!
+//! * [`batcher`]   — dynamic batcher: fire-on-size-or-linger policy
+//!   ([`batcher::should_fire`]) plus [`Batch`] forming/padding;
+//!   [`Batch::decode_rows_into`] streams a batch's weight rows into a
+//!   caller-provided buffer.
+//! * [`engine`]    — the sharded, cache-aware decode **and dispatch**
+//!   plane: worker shards each owning a disjoint subset of the hosted
+//!   networks with their own router queue set and admission budget, an
+//!   LRU decode cache keyed on `(net, row window)` with byte-budget
+//!   eviction, and the streaming decode path ([`engine::decode_into`])
+//!   that unpacks + decodes straight into `infer_hard` staging buffers.
+//! * [`server`]    — virtual-clock front-end gluing the plane to the
+//!   `infer_hard` artifacts (deterministic serving benches).
 //! * [`switchsim`] — task-switch cost simulator on top of `rom::memsim`
 //!   (Table 1's I/O column at serving granularity), plus the batched
-//!   packed-decode path ([`switchsim::decode_batch`]) that turns a
-//!   formed [`Batch`] into real unpack + codebook-decode work on the
-//!   worker pool.
-//! * [`tcp`]       — newline-JSON TCP front-end (std::net; single PJRT
-//!   dispatch thread + reader threads per connection, wall clock); also
-//!   attaches an [`Engine`] decode plane.
-
+//!   packed-decode path ([`switchsim::decode_batch`]).
+//! * [`tcp`]       — newline-JSON TCP front-end (std::net; single
+//!   dispatch thread owning every session + the plane, reader threads
+//!   per connection feeding a **bounded** channel, wall clock): when a
+//!   shard is at its admission budget the dispatcher defers and stops
+//!   pulling, the channel fills, and the kernel socket buffers
+//!   backpressure the clients.
 pub mod batcher;
 pub mod engine;
-pub mod router;
 pub mod server;
 pub mod switchsim;
 pub mod tcp;
 
 pub use batcher::{Batch, BatcherConfig};
-pub use engine::{DecodeCache, Engine, EngineConfig, HostedNet};
-pub use router::{Request, Router};
+pub use engine::{
+    Admission, DecodeCache, Engine, EngineConfig, HostedNet, NetLedger, Request, Router,
+};
 pub use switchsim::{decode_batch, BatchDecode};

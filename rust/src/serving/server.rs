@@ -1,10 +1,18 @@
-//! Serving loop: drives router + batcher against the `infer_hard`
-//! artifacts for a set of constructed networks.
+//! Serving loop: drives the sharded engine plane against the
+//! `infer_hard` artifacts for a set of constructed networks.
 //!
 //! Single dispatch thread (the CPU PJRT client serializes execution
 //! anyway); the interesting concurrency — request arrival vs dispatch —
 //! is modeled with a virtual clock so the serving benches are
 //! deterministic.
+//!
+//! **Breaking change (plane unification):** the server no longer owns a
+//! `Router` or a `BatcherConfig` — routing, batching policy, admission
+//! control, and the virtual clock all live on the mandatory
+//! [`Engine`] plane ([`Server::new`] takes it by value).  `submit`
+//! returns the plane's typed [`Admission`] outcome: over-budget
+//! submissions are shed with [`Admission::Rejected`] instead of being
+//! queued without bound.
 
 use std::collections::BTreeMap;
 
@@ -14,9 +22,7 @@ use crate::tensor::Tensor;
 use crate::util::stats::{Running, Summary};
 use crate::util::threadpool::ThreadPool;
 
-use super::batcher::{Batch, BatcherConfig};
-use super::engine::Engine;
-use super::router::Router;
+use super::engine::{Admission, Engine};
 
 /// Latency/throughput accounting per network.  Latency is a bounded
 /// [`Summary`] (running moments + percentile reservoir), so long serve
@@ -27,105 +33,101 @@ pub struct ServeStats {
     pub batches: u64,
     pub padded_rows: u64,
     pub latency_ns: Summary,
-    /// Weight rows served out of the attached decode plane's cache.
+    /// Weight rows served out of the decode plane's cache.
     pub rows_from_cache: u64,
     /// Weight rows the decode plane decoded fresh.
     pub rows_decoded: u64,
 }
 
-/// The multi-network server.
+/// The multi-network server: a virtual-clock front-end over the sharded
+/// engine plane.
 pub struct Server<'a> {
     pub sessions: BTreeMap<String, (&'a mut NetSession, Tensor)>, // (session, codes tensor)
-    pub router: Router,
-    pub cfg: BatcherConfig,
     pub stats: BTreeMap<String, ServeStats>,
-    /// Virtual time (ns).
-    pub now_ns: u64,
     /// Measured execute time per batch (feeds the virtual clock).
     pub exec_ns: Running,
-    /// Optional sharded decode plane: when attached (and hosting the
-    /// batch's net), every dispatched batch's weight rows are streamed
-    /// through the plane's decode cache into the owning shard's staging
-    /// buffer before the artifact runs — the host-side §3.2 decode work,
-    /// now cache-aware.
-    pub plane: Option<Engine>,
+    /// The sharded decode/dispatch plane — the single routing path:
+    /// admission, per-shard queues, fire-selection, and the cached
+    /// streaming decode all happen here.
+    pub plane: Engine,
     /// Worker pool the plane's miss-decodes run on (None = serial).
     plane_pool: Option<ThreadPool>,
 }
 
 impl<'a> Server<'a> {
+    /// Build the server on a plane whose hosted nets and the sessions
+    /// match one-to-one, each hosted at the session's `eval_batch` (the
+    /// fixed batch its `infer_hard` artifact was lowered at — the plane
+    /// forms the batches now).  See [`Engine::validate_sessions`].
     pub fn new(
         sessions: Vec<(&'a mut NetSession, Tensor)>,
-        cfg: BatcherConfig,
-    ) -> Self {
-        let names: Vec<String> = sessions.iter().map(|(s, _)| s.net.name.clone()).collect();
-        let router = Router::new(&names.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        plane: Engine,
+        pool: Option<ThreadPool>,
+    ) -> anyhow::Result<Self> {
         let mut map = BTreeMap::new();
         let mut stats = BTreeMap::new();
         for (s, codes) in sessions {
-            stats.insert(s.net.name.clone(), ServeStats::default());
-            map.insert(s.net.name.clone(), (s, codes));
+            let name = s.net.name.clone();
+            stats.insert(name.clone(), ServeStats::default());
+            anyhow::ensure!(
+                map.insert(name.clone(), (s, codes)).is_none(),
+                "server: duplicate session for {name:?}"
+            );
         }
-        Server {
+        plane.validate_sessions(
+            "server",
+            map.iter().map(|(n, (s, _))| (n.as_str(), s.net.eval_batch)),
+        )?;
+        Ok(Server {
             sessions: map,
-            router,
-            cfg,
             stats,
-            now_ns: 0,
             exec_ns: Running::new(),
-            plane: None,
-            plane_pool: None,
-        }
+            plane,
+            plane_pool: pool,
+        })
     }
 
-    /// Attach a decode plane (`serving::engine`) the dispatch path
-    /// streams every batch's weight rows through; `pool` parallelizes
-    /// the plane's cache-miss decodes (None = serial).
-    pub fn attach_plane(&mut self, plane: Engine, pool: Option<ThreadPool>) {
-        self.plane = Some(plane);
-        self.plane_pool = pool;
+    /// Current virtual time (ns) — the plane's clock.
+    pub fn now_ns(&self) -> u64 {
+        self.plane.now_ns
     }
 
-    /// Submit a request at the current virtual time.
-    pub fn submit(&mut self, net: &str, row: usize) -> anyhow::Result<u64> {
-        self.router.submit(net, row, self.now_ns)
+    /// Submit a request at the current virtual time; over-budget
+    /// submissions come back as the typed [`Admission::Rejected`] shed.
+    /// The plane validates `row` against the hosted packed stream; rows
+    /// beyond the session's *input pool* fail loudly at dispatch
+    /// (`gather_rows`), never remap silently.
+    pub fn submit(&mut self, net: &str, row: usize) -> anyhow::Result<Admission> {
+        self.plane.try_submit(net, row)
     }
 
     /// Advance virtual time.
     pub fn tick(&mut self, ns: u64) {
-        self.now_ns += ns;
+        self.plane.tick(ns);
     }
 
-    /// Dispatch at most one batch if any queue should fire.
+    /// Dispatch at most one batch if any shard queue should fire.
     /// Returns the served batch size (0 if nothing fired).
     pub fn dispatch_one(&mut self) -> anyhow::Result<usize> {
-        let fire = self
-            .router
-            .next_fireable(&self.cfg, self.now_ns)
-            .map(|n| n.to_string());
-        let Some(name) = fire else { return Ok(0) };
+        let Some(batch) = self.plane.next_batch() else {
+            return Ok(0);
+        };
+        let name = batch.net.clone();
+        // Stream the batch's weight rows through the plane's decode
+        // cache (fused unpack + decode) into the owning shard's staging
+        // buffer — the host-side decode that precedes the artifact run.
+        let row_serve = self
+            .plane
+            .stream_batch(&name, &batch.rows, self.plane_pool.as_ref())?
+            .ok_or_else(|| anyhow::anyhow!("plane fired a batch for unhosted net {name:?}"))?;
+
         let (sess, codes) = self
             .sessions
             .get_mut(&name)
             .ok_or_else(|| anyhow::anyhow!("no session for {name:?}"))?;
-        let device_batch = sess.net.eval_batch;
-        // Drain by name (the router's name-keyed API) and never take more
-        // than one device batch can carry — leftovers stay queued.
-        let reqs = self
-            .router
-            .drain_net(&name, self.cfg.max_batch.min(device_batch));
-        let batch = Batch::form(&name, reqs, device_batch);
-
-        // Stream the batch's weight rows through the decode plane (cache
-        // + fused unpack) into the owning shard's staging buffer, when a
-        // plane is attached and hosts this net — the host-side decode
-        // that precedes the artifact run.
-        let row_serve = match self.plane.as_mut() {
-            Some(plane) => plane.stream_batch(&name, &batch.rows, self.plane_pool.as_ref())?,
-            None => None,
-        };
-
-        // Gather input rows from the network's test pool and run infer.
+        // Gather input rows from the network's test pool.  Rows beyond
+        // the pool are a loud error here (as before the unification) —
+        // never silently remapped to a different input row.
         let x = gather_rows(&sess.test_x, &batch.rows)?;
         let codes_t = codes.clone();
         let t0 = std::time::Instant::now();
@@ -133,35 +135,33 @@ impl<'a> Server<'a> {
         let _out = sess.eval_infer(&codes_t, &[x])?;
         let dt = t0.elapsed().as_nanos() as u64;
         self.exec_ns.push(dt as f64);
-        self.now_ns += dt;
+        self.plane.tick(dt);
 
         let st = self.stats.get_mut(&name).unwrap();
         st.served += batch.requests.len() as u64;
         st.batches += 1;
         st.padded_rows += batch.padded as u64;
-        if let Some(rs) = row_serve {
-            st.rows_from_cache += rs.hits as u64;
-            st.rows_decoded += rs.misses as u64;
-        }
+        st.rows_from_cache += row_serve.hits as u64;
+        st.rows_decoded += row_serve.misses as u64;
         for r in &batch.requests {
-            st.latency_ns.push((self.now_ns - r.arrived_ns) as f64);
+            st.latency_ns.push((self.plane.now_ns - r.arrived_ns) as f64);
         }
         Ok(batch.requests.len())
     }
 
-    /// Drain everything.
+    /// Drain everything still queued on the plane.
     pub fn drain_all(&mut self) -> anyhow::Result<u64> {
         let mut total = 0u64;
         loop {
             // Force-fire partial batches once queues stop growing.
-            let before = self.router.total_pending();
+            let before = self.plane.total_pending();
             if before == 0 {
                 break;
             }
-            self.tick(self.cfg.max_linger_ns + 1);
+            self.tick(self.plane.cfg.batcher.max_linger_ns + 1);
             let served = self.dispatch_one()?;
             total += served as u64;
-            if served == 0 && self.router.total_pending() == before {
+            if served == 0 && self.plane.total_pending() == before {
                 anyhow::bail!("server wedged with {before} pending requests");
             }
         }

@@ -98,7 +98,7 @@ pub fn decode_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::serving::router::Request;
+    use crate::serving::engine::router::Request;
     use crate::util::rng::Rng;
     use crate::vq::pack::pack_codes;
 

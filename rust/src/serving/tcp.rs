@@ -6,24 +6,40 @@
 //! -> {"net": "mini_mlp", "row": 5}
 //! <- {"ok": true, "net": "mini_mlp", "row": 5, "argmax": 3,
 //!     "batch": 4, "latency_us": 812.0}
-//! <- {"ok": false, "error": "router: unknown network \"ghost\""}
+//! <- {"ok": false, "error": "unknown network \"ghost\""}
+//! <- {"ok": false, "error": "row 999 out of range: \"mini_mlp\" serves rows 0..64"}
 //! ```
 //!
+//! The servable row space is `0..min(stream_rows, input_pool_rows)` —
+//! bounded by the hosted packed stream and the session's input pool;
+//! out-of-range rows are answered with a structured error rather than
+//! silently wrapped onto a different row.
+//!
 //! Threading model: PJRT executables are not thread-safe to share, so
-//! **one dispatch thread owns every session** and runs the dynamic
-//! batcher against a real clock; each connection gets a reader thread
-//! that parses lines into an mpsc queue and a writer handle the
-//! dispatcher answers through.  This is the same router/batcher policy
-//! as [`super::server`], with wall-clock linger instead of virtual time.
-//! (`tokio` is not vendored in this build environment; the std::net +
-//! channel design keeps the same structure an async runtime would.)
+//! **one dispatch thread owns every session and the engine plane**; each
+//! connection gets a reader thread that parses lines into a **bounded**
+//! mpsc queue and a writer handle the dispatcher answers through.
+//! Routing, batching, and admission all happen on the same sharded
+//! [`Engine`] plane as [`super::server`], driven by a wall clock
+//! ([`Engine::set_now`]) instead of virtual time.
+//!
+//! **Backpressure (wall-clock admission policy):** where the
+//! virtual-clock front-end sheds over-budget submissions, the TCP
+//! dispatcher *defers* — it probes [`Engine::would_admit`], parks the
+//! request in a local FIFO, and stops pulling from the reader channel
+//! until the shard drains.  The bounded channel then fills, reader
+//! threads block on `send`, and the kernel socket buffers throttle the
+//! clients; each parked request counts one deferral on the owning
+//! shard ([`Engine::note_deferral`]).  (`tokio` is not vendored in this
+//! build environment; the std::net + channel design keeps the same
+//! structure an async runtime would.)
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::calib::gather_rows;
@@ -33,8 +49,8 @@ use crate::util::json::{self, Json};
 use crate::util::stats::Summary;
 use crate::util::threadpool::ThreadPool;
 
-use super::batcher::BatcherConfig;
-use super::engine::Engine;
+use super::batcher::Batch;
+use super::engine::{Admission, Engine};
 
 /// One parsed in-flight request.
 struct InFlight {
@@ -43,6 +59,14 @@ struct InFlight {
     row: usize,
     arrived: Instant,
 }
+
+/// Per-connection writer handles the dispatch thread answers through.
+type Writers = Arc<Mutex<BTreeMap<u64, TcpStream>>>;
+
+/// (conn, arrival) for every enqueued request, keyed by (net,
+/// shard-local request id) — ids are unique per net because a net lives
+/// on exactly one shard router.
+type InFlightMap = BTreeMap<(String, u64), (u64, Instant)>;
 
 /// Per-network serving statistics (mirrors `server::ServeStats`,
 /// including the bounded wall-clock latency summary).
@@ -53,7 +77,7 @@ pub struct TcpStats {
     pub errors: u64,
     /// Wall-clock request latency (µs) — bounded accounting.
     pub latency_us: Summary,
-    /// Weight rows served out of the attached decode plane's cache.
+    /// Weight rows served out of the decode plane's cache.
     pub rows_from_cache: u64,
     /// Weight rows the decode plane decoded fresh.
     pub rows_decoded: u64,
@@ -111,41 +135,47 @@ pub fn err_response(msg: &str) -> String {
     .to_string()
 }
 
-/// The TCP server. Owns the constructed sessions + their hard codes.
+/// The TCP server. Owns the constructed sessions + their hard codes and
+/// the engine plane that routes every request.
 pub struct TcpServer {
     sessions: BTreeMap<String, (NetSession, Tensor)>,
-    pub cfg: BatcherConfig,
     pub stats: BTreeMap<String, TcpStats>,
-    /// Optional sharded decode plane (see `server::Server::plane`) —
+    /// The sharded decode/dispatch plane (see `server::Server::plane`) —
     /// same engine, wall clock instead of virtual time.
-    pub plane: Option<Engine>,
+    pub plane: Engine,
     /// Worker pool the plane's miss-decodes run on (None = serial).
     plane_pool: Option<ThreadPool>,
 }
 
 impl TcpServer {
-    pub fn new(sessions: Vec<(NetSession, Tensor)>, cfg: BatcherConfig) -> Self {
+    /// Build the server on a plane whose hosted nets and the sessions
+    /// match one-to-one, each hosted at the session's `eval_batch` (the
+    /// plane forms the batches now).  See [`Engine::validate_sessions`].
+    pub fn new(
+        sessions: Vec<(NetSession, Tensor)>,
+        plane: Engine,
+        pool: Option<ThreadPool>,
+    ) -> anyhow::Result<Self> {
         let mut map = BTreeMap::new();
         let mut stats = BTreeMap::new();
         for (s, codes) in sessions {
-            stats.insert(s.net.name.clone(), TcpStats::default());
-            map.insert(s.net.name.clone(), (s, codes));
+            let name = s.net.name.clone();
+            stats.insert(name.clone(), TcpStats::default());
+            anyhow::ensure!(
+                map.insert(name.clone(), (s, codes)).is_none(),
+                "tcp: duplicate session for {name:?}"
+            );
         }
-        TcpServer {
+        plane.validate_sessions(
+            "tcp",
+            map.iter().map(|(n, (s, _))| (n.as_str(), s.net.eval_batch)),
+        )?;
+        Ok(TcpServer {
             sessions: map,
-            cfg,
             stats,
-            plane: None,
-            plane_pool: None,
-        }
-    }
-
-    /// Attach a decode plane the dispatch path streams every batch's
-    /// weight rows through; `pool` parallelizes the plane's cache-miss
-    /// decodes (None = serial).
-    pub fn attach_plane(&mut self, plane: Engine, pool: Option<ThreadPool>) {
-        self.plane = Some(plane);
-        self.plane_pool = pool;
+            plane,
+            plane_pool: pool,
+        })
     }
 
     /// Serve until `shutdown` triggers.  Blocks the calling thread (it
@@ -159,11 +189,16 @@ impl TcpServer {
         max_requests: u64,
     ) -> anyhow::Result<u64> {
         listener.set_nonblocking(true)?;
-        let (tx, rx): (Sender<InFlight>, Receiver<InFlight>) = channel();
+        // Bounded reader channel: sized to the plane's admission budget
+        // so blocked readers (not an unbounded queue) absorb overload.
+        let cap = match self.plane.cfg.max_queue_depth {
+            0 => 1024,
+            d => (d * self.plane.shard_count()).max(1),
+        };
+        let (tx, rx): (SyncSender<InFlight>, Receiver<InFlight>) = sync_channel(cap);
         let conn_seq = Arc::new(AtomicU64::new(0));
         // Writers: dispatch thread sends rendered lines per connection.
-        let writers: Arc<std::sync::Mutex<BTreeMap<u64, TcpStream>>> =
-            Arc::new(std::sync::Mutex::new(BTreeMap::new()));
+        let writers: Writers = Arc::new(Mutex::new(BTreeMap::new()));
 
         // Accept loop on a helper thread.
         let accept_shutdown = shutdown.clone();
@@ -187,6 +222,8 @@ impl TcpServer {
                                 }
                                 match parse_request(&line) {
                                     Ok((net, row)) => {
+                                        // Blocks when the channel is full
+                                        // — the backpressure edge.
                                         if tx2
                                             .send(InFlight {
                                                 conn: id,
@@ -217,92 +254,156 @@ impl TcpServer {
             }
         });
 
-        // Dispatch loop (this thread): batch per network with linger.
-        let mut pending: BTreeMap<String, Vec<InFlight>> = BTreeMap::new();
+        // Dispatch loop (this thread): the engine plane owns the queues
+        // and the batching policy; this loop feeds admission and fires.
+        // At most ONE request is ever parked for backpressure (the pull
+        // below is gated on the slot being empty), so an Option slot —
+        // not a queue — states the invariant.
+        let t0 = Instant::now();
+        let elapsed_ns = |t0: &Instant| t0.elapsed().as_nanos() as u64;
+        let linger = Duration::from_nanos(self.plane.cfg.batcher.max_linger_ns);
+        let mut parked: Option<InFlight> = None;
+        let mut inflight: InFlightMap = BTreeMap::new();
         let mut served = 0u64;
-        let linger = Duration::from_nanos(self.cfg.max_linger_ns);
         while !shutdown.is_set() {
-            match rx.recv_timeout(linger.max(Duration::from_millis(1))) {
-                Ok(req) => pending.entry(req.net.clone()).or_default().push(req),
-                Err(RecvTimeoutError::Timeout) => {}
-                Err(RecvTimeoutError::Disconnected) => break,
+            self.plane.set_now(elapsed_ns(&t0));
+
+            // Re-admit the parked request first — its shard may have
+            // drained since it was deferred.
+            if let Some(req) = parked.take() {
+                if self.plane.would_admit(&req.net) {
+                    self.enqueue(req, &mut inflight)?;
+                } else {
+                    parked = Some(req);
+                }
             }
-            // Fire every queue that is full or has lingered.
-            let names: Vec<String> = pending.keys().cloned().collect();
-            for name in names {
-                let q = pending.get_mut(&name).unwrap();
-                if q.is_empty() {
-                    continue;
+
+            // Pull from the wire only when nothing is parked: the
+            // channel fills behind us and blocks the readers.
+            if parked.is_none() {
+                match rx.recv_timeout(linger.max(Duration::from_millis(1))) {
+                    Ok(req) => {
+                        self.plane.set_now(elapsed_ns(&t0));
+                        // Validate BEFORE the defer decision: a request
+                        // that can never occupy a queue slot (unknown
+                        // net, out-of-range row) is answered right away
+                        // instead of head-of-line-blocking the channel
+                        // behind a full shard.
+                        if let Some(err) = self.reject_reason(&req) {
+                            if let Some(w) = writers.lock().unwrap().get_mut(&req.conn) {
+                                let _ = writeln!(w, "{}", err_response(&err));
+                            }
+                            self.stats.entry(req.net.clone()).or_default().errors += 1;
+                        } else if !self.plane.would_admit(&req.net) {
+                            self.plane.note_deferral(&req.net);
+                            parked = Some(req);
+                        } else {
+                            self.enqueue(req, &mut inflight)?;
+                        }
+                    }
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => break,
                 }
-                let full = q.len() >= self.cfg.max_batch;
-                let lingered = q[0].arrived.elapsed() >= linger;
-                if !(full || lingered) {
-                    continue;
-                }
-                // Never drain more than the artifact's fixed batch can
-                // carry — leftovers stay queued for the next firing
-                // (mirrors server::dispatch_one).  Unknown nets drain at
-                // max_batch; dispatch answers them all with errors.
-                let cap = match self.sessions.get(&name) {
-                    Some((s, _)) => self.cfg.max_batch.min(s.net.eval_batch),
-                    None => self.cfg.max_batch,
-                };
-                let reqs: Vec<InFlight> = q.drain(..q.len().min(cap.max(1))).collect();
-                served += self.dispatch(&name, reqs, &writers)?;
+            } else {
+                // The parked request waits on the plane, not the channel.
+                std::thread::sleep(Duration::from_millis(1));
+            }
+
+            // Fire every batch the plane says is due (size or linger).
+            loop {
+                self.plane.set_now(elapsed_ns(&t0));
+                let Some(batch) = self.plane.next_batch() else { break };
+                served += self.dispatch(batch, &mut inflight, &writers)?;
             }
             if max_requests > 0 && served >= max_requests {
                 shutdown.trigger();
             }
         }
+        // Drop both channel ends before joining so blocked readers
+        // unblock with a send error and exit.
+        drop(rx);
         drop(tx);
         let _ = acceptor.join();
         Ok(served)
     }
 
-    /// Execute one batch and answer every requester.
+    /// Why `req` can never be served — unknown net, or a row outside
+    /// the servable range (the hosted packed stream AND the session's
+    /// input pool both bound it; silently wrapping onto a different row
+    /// would answer the wrong question while echoing the asked one).
+    /// `None` means the request is admissible in principle and may be
+    /// enqueued or deferred.
+    fn reject_reason(&self, req: &InFlight) -> Option<String> {
+        let Some(hosted) = self.plane.hosted(&req.net) else {
+            return Some(format!("unknown network {:?}", req.net));
+        };
+        let (sess, _) = self
+            .sessions
+            .get(&req.net)
+            .expect("every hosted net has a session (validated at construction)");
+        let max_row = hosted.stream_rows().min(sess.test_x.shape[0]);
+        if req.row >= max_row {
+            return Some(format!(
+                "row {} out of range: {:?} serves rows 0..{max_row}",
+                req.row, req.net
+            ));
+        }
+        None
+    }
+
+    /// Enqueue a validated, admissible request on the plane and record
+    /// it in-flight so the dispatch can answer the right connection.
+    fn enqueue(&mut self, req: InFlight, inflight: &mut InFlightMap) -> anyhow::Result<()> {
+        match self.plane.try_submit(&req.net, req.row)? {
+            Admission::Accepted { id } => {
+                inflight.insert((req.net, id), (req.conn, req.arrived));
+                Ok(())
+            }
+            // Both call sites gate on would_admit and this thread is the
+            // only submitter, so a shed here is a logic bug — fail loud
+            // rather than dropping the request silently.
+            Admission::Rejected { shard, depth } => anyhow::bail!(
+                "plane shed a request the would_admit probe approved \
+                 ({:?}, shard {shard}, depth {depth})",
+                req.net
+            ),
+        }
+    }
+
+    /// Execute one plane-fired batch and answer every requester.
     fn dispatch(
         &mut self,
-        name: &str,
-        reqs: Vec<InFlight>,
-        writers: &Arc<std::sync::Mutex<BTreeMap<u64, TcpStream>>>,
+        batch: Batch,
+        inflight: &mut InFlightMap,
+        writers: &Writers,
     ) -> anyhow::Result<u64> {
-        let Some((sess, codes)) = self.sessions.get_mut(name) else {
-            let msg = err_response(&format!("unknown network {name:?}"));
-            let mut w = writers.lock().unwrap();
-            for r in &reqs {
-                if let Some(ws) = w.get_mut(&r.conn) {
-                    let _ = writeln!(ws, "{msg}");
-                }
-            }
-            let st = self.stats.entry(name.to_string()).or_default();
-            st.errors += reqs.len() as u64;
-            return Ok(0);
-        };
-        let device_batch = sess.net.eval_batch;
-        let pool_rows = sess.test_x.shape[0];
-        let mut rows: Vec<usize> = reqs.iter().map(|r| r.row % pool_rows).collect();
-        let real = rows.len();
-        for i in 0..device_batch.saturating_sub(real) {
-            rows.push(rows[i % real]); // pad with real rows
-        }
-        // Stream the batch's weight rows through the decode plane (cache
-        // + fused unpack) into the owning shard's staging buffer, when a
-        // plane is attached and hosts this net — decode precedes the
-        // artifact run, mirroring server::dispatch_one.
-        let row_serve = match self.plane.as_mut() {
-            Some(plane) => plane.stream_batch(name, &rows, self.plane_pool.as_ref())?,
-            None => None,
-        };
+        let name = batch.net.clone();
+        // Stream the batch's weight rows through the plane's decode
+        // cache into the owning shard's staging buffer — decode precedes
+        // the artifact run, mirroring server::dispatch_one.
+        let row_serve = self
+            .plane
+            .stream_batch(&name, &batch.rows, self.plane_pool.as_ref())?
+            .ok_or_else(|| anyhow::anyhow!("plane fired a batch for unhosted net {name:?}"))?;
 
-        let x = gather_rows(&sess.test_x, &rows)?;
+        let (sess, codes) = self
+            .sessions
+            .get_mut(&name)
+            .expect("every hosted net has a session (validated at construction)");
+        // Admission validated every row against both the stream and the
+        // input pool, so the batch rows gather directly — no remapping.
+        let x = gather_rows(&sess.test_x, &batch.rows)?;
         let codes_t = codes.clone();
         let out = sess.eval_infer(&codes_t, &[x])?;
         let logits = out[0].as_f32()?;
         let classes = out[0].shape.get(1).copied().unwrap_or(1);
 
-        let st = self.stats.entry(name.to_string()).or_default();
+        let real = batch.requests.len();
+        let st = self.stats.entry(name.clone()).or_default();
+        st.rows_from_cache += row_serve.hits as u64;
+        st.rows_decoded += row_serve.misses as u64;
         let mut w = writers.lock().unwrap();
-        for (i, r) in reqs.iter().enumerate() {
+        for (i, r) in batch.requests.iter().enumerate() {
             let seg = &logits[i * classes..(i + 1) * classes];
             let argmax = seg
                 .iter()
@@ -310,18 +411,17 @@ impl TcpServer {
                 .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
                 .map(|(j, _)| j)
                 .unwrap_or(0);
-            let latency = r.arrived.elapsed().as_micros() as f64;
+            let Some((conn, arrived)) = inflight.remove(&(name.clone(), r.id)) else {
+                continue;
+            };
+            let latency = arrived.elapsed().as_micros() as f64;
             st.latency_us.push(latency);
-            if let Some(ws) = w.get_mut(&r.conn) {
-                let _ = writeln!(ws, "{}", ok_response(name, r.row, argmax, real, latency));
+            if let Some(ws) = w.get_mut(&conn) {
+                let _ = writeln!(ws, "{}", ok_response(&name, r.row, argmax, real, latency));
             }
         }
         st.served += real as u64;
         st.batches += 1;
-        if let Some(rs) = row_serve {
-            st.rows_from_cache += rs.hits as u64;
-            st.rows_decoded += rs.misses as u64;
-        }
         Ok(real as u64)
     }
 }

@@ -112,9 +112,16 @@ impl Args {
                 .parse()
                 .map_err(|e| anyhow::anyhow!("--cache-kb={v:?} is not an integer: {e}"))?,
         };
+        let max_queue = match self.get("max-queue") {
+            None | Some("") => base.max_queue,
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--max-queue={v:?} is not an integer: {e}"))?,
+        };
         Ok(crate::util::config::EngineKnobs {
             shards: shards.max(1),
             cache_kb,
+            max_queue,
         })
     }
 
@@ -169,10 +176,10 @@ impl Cli {
     }
 
     /// The conventional serving-engine options (`--shards`,
-    /// `--cache-kb`) the serving drivers expose.  Defaults are empty so
-    /// unset values fall back to the base knobs (config-file values via
-    /// [`Args::engine_knobs_with`], or `EngineKnobs::default()` via
-    /// [`Args::engine_knobs`]).
+    /// `--cache-kb`, `--max-queue`) the serving drivers expose.
+    /// Defaults are empty so unset values fall back to the base knobs
+    /// (config-file values via [`Args::engine_knobs_with`], or
+    /// `EngineKnobs::default()` via [`Args::engine_knobs`]).
     pub fn engine_opts(self) -> Self {
         self.opt(
             "shards",
@@ -183,6 +190,12 @@ impl Cli {
             "cache-kb",
             "",
             "per-shard decode-cache budget in KiB (0 = off, unset = 1024)",
+        )
+        .opt(
+            "max-queue",
+            "",
+            "per-shard admission budget: queue depth that sheds (virtual clock) or \
+             backpressures (TCP) further requests (0 = unbounded, the default)",
         )
     }
 
@@ -320,21 +333,30 @@ mod tests {
         let k = a.engine_knobs().unwrap();
         assert_eq!(k.shards, 1, "unset falls back to defaults");
         assert_eq!(k.cache_kb, 1024);
+        assert_eq!(k.max_queue, 0, "unbounded admission by default");
         let a = cli
-            .parse_from(vec!["--shards=4".to_string(), "--cache-kb=0".to_string()])
+            .parse_from(vec![
+                "--shards=4".to_string(),
+                "--cache-kb=0".to_string(),
+                "--max-queue=32".to_string(),
+            ])
             .unwrap();
         let k = a.engine_knobs().unwrap();
         assert_eq!(k.shards, 4);
         assert_eq!(k.cache_kb, 0, "explicit 0 disables the cache");
+        assert_eq!(k.max_queue, 32);
         let a = cli.parse_from(vec!["--shards=0".to_string()]).unwrap();
         assert_eq!(a.engine_knobs().unwrap().shards, 1, "0 clamps to 1");
         let a = cli.parse_from(vec!["--shards=zzz".to_string()]).unwrap();
+        assert!(a.engine_knobs().is_err());
+        let a = cli.parse_from(vec!["--max-queue=zzz".to_string()]).unwrap();
         assert!(a.engine_knobs().is_err());
         // Config-file precedence: unset CLI values take the base, set
         // CLI values override it.
         let base = crate::util::config::EngineKnobs {
             shards: 3,
             cache_kb: 64,
+            max_queue: 16,
         };
         let a = cli.parse_from(Vec::<String>::new()).unwrap();
         assert_eq!(a.engine_knobs_with(base).unwrap(), base);
@@ -342,20 +364,25 @@ mod tests {
         let k = a.engine_knobs_with(base).unwrap();
         assert_eq!(k.shards, 8, "CLI beats config");
         assert_eq!(k.cache_kb, 64, "unset CLI keeps config value");
+        assert_eq!(k.max_queue, 16, "unset CLI keeps config value");
     }
 
     #[test]
     fn engine_knobs_from_config_overlays_file() {
         let cli = Cli::new("t", "test").engine_opts();
         let p = std::env::temp_dir().join("vq4all_engine_knobs_test.toml");
-        std::fs::write(&p, "[engine]\nshards = 5\ncache_kb = 32\n").unwrap();
+        std::fs::write(&p, "[engine]\nshards = 5\ncache_kb = 32\nmax_queue = 9\n").unwrap();
         let path = p.to_string_lossy().to_string();
         let a = cli.parse_from(Vec::<String>::new()).unwrap();
         let k = a.engine_knobs_from_config(Some(&path)).unwrap();
-        assert_eq!((k.shards, k.cache_kb), (5, 32), "config file wins over defaults");
+        assert_eq!(
+            (k.shards, k.cache_kb, k.max_queue),
+            (5, 32, 9),
+            "config file wins over defaults"
+        );
         let a = cli.parse_from(vec!["--cache-kb=8".to_string()]).unwrap();
         let k = a.engine_knobs_from_config(Some(&path)).unwrap();
-        assert_eq!((k.shards, k.cache_kb), (5, 8), "CLI wins over config");
+        assert_eq!((k.shards, k.cache_kb, k.max_queue), (5, 8, 9), "CLI wins over config");
         let k = a.engine_knobs_from_config(None).unwrap();
         assert_eq!(k.shards, 1, "no file falls back to defaults");
         assert!(a.engine_knobs_from_config(Some("/no/such/file.toml")).is_err());

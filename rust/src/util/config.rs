@@ -60,8 +60,9 @@ impl Parallelism {
 }
 
 /// Serving-engine knobs (the `[engine]` config section / `--shards`,
-/// `--cache-kb` CLI options): decode-plane shard count and per-shard
-/// decode-cache budget for `serving::engine`.
+/// `--cache-kb`, `--max-queue` CLI options): decode-plane shard count,
+/// per-shard decode-cache budget, and per-shard admission budget for
+/// `serving::engine`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct EngineKnobs {
     /// Decode-plane worker shards (each owns a disjoint subset of the
@@ -69,6 +70,10 @@ pub struct EngineKnobs {
     pub shards: usize,
     /// Per-shard decode-cache budget in KiB (0 disables the cache).
     pub cache_kb: usize,
+    /// Per-shard admission budget: queue depth at which further
+    /// submissions are shed (virtual-clock front-end) or deferred with
+    /// backpressure (TCP front-end).  0 = unbounded.
+    pub max_queue: usize,
 }
 
 impl Default for EngineKnobs {
@@ -76,6 +81,7 @@ impl Default for EngineKnobs {
         EngineKnobs {
             shards: 1,
             cache_kb: 1024,
+            max_queue: 0,
         }
     }
 }
@@ -87,6 +93,7 @@ impl EngineKnobs {
         Ok(EngineKnobs {
             shards: raw.usize("engine.shards", d.shards)?.max(1),
             cache_kb: raw.usize("engine.cache_kb", d.cache_kb)?,
+            max_queue: raw.usize("engine.max_queue", d.max_queue)?,
         })
     }
 
@@ -353,10 +360,12 @@ mod tests {
         let d = EngineKnobs::default();
         assert_eq!(d.shards, 1);
         assert_eq!(d.cache_bytes(), 1024 * 1024);
-        let raw = RawConfig::parse("[engine]\nshards = 4\ncache_kb = 256\n").unwrap();
+        assert_eq!(d.max_queue, 0, "unbounded admission by default");
+        let raw = RawConfig::parse("[engine]\nshards = 4\ncache_kb = 256\nmax_queue = 64\n").unwrap();
         let k = EngineKnobs::from_raw(&raw).unwrap();
         assert_eq!(k.shards, 4);
         assert_eq!(k.cache_bytes(), 256 * 1024);
+        assert_eq!(k.max_queue, 64);
         // shards = 0 clamps to 1; cache_kb = 0 disables the cache.
         let raw = RawConfig::parse("[engine]\nshards = 0\ncache_kb = 0\n").unwrap();
         let k = EngineKnobs::from_raw(&raw).unwrap();

@@ -1,5 +1,5 @@
-//! Integration: the serving stack (router + batcher + server) over the
-//! real `infer_hard` artifact for mini_mlp.
+//! Integration: the serving stack (engine plane + server front-ends)
+//! over the real `infer_hard` artifact for mini_mlp.
 
 use std::sync::Arc;
 
@@ -11,26 +11,36 @@ use vq4all::util::config::CampaignConfig;
 use vq4all::util::rng::Rng;
 use vq4all::vq::Codebook;
 
-/// Host a constructed net's packed stream on a decode plane (the stream
-/// is segmented so its row space covers the request rows the tests use).
-fn plane_for(c: &Campaign, res: &vq4all::coordinator::NetResult, shards: usize) -> Option<Engine> {
+/// Host constructed nets' packed streams on a decode plane (each stream
+/// is segmented so its row space covers the request rows the tests use;
+/// `device_batch` carries the artifact's fixed eval batch, which the
+/// plane's batches must match).
+fn plane_for(
+    c: &Campaign,
+    nets: &[(&vq4all::coordinator::NetResult, usize)],
+    shards: usize,
+    bc: BatcherConfig,
+) -> Option<Engine> {
     let words = c.codebook.as_f32().ok()?.to_vec();
     let cb = Arc::new(Codebook::new(c.manifest.config.k, c.manifest.config.d, words));
-    let codes_per_row = (res.packed.count / 64).max(1);
-    let net = HostedNet {
-        name: res.name.clone(),
-        packed: res.packed.clone(),
-        codebook: cb,
-        codes_per_row,
-        device_batch: 16,
-    };
+    let hosted: Vec<HostedNet> = nets
+        .iter()
+        .map(|(res, eval_batch)| HostedNet {
+            name: res.name.clone(),
+            packed: res.packed.clone(),
+            codebook: cb.clone(),
+            codes_per_row: (res.packed.count / 64).max(1),
+            device_batch: *eval_batch,
+        })
+        .collect();
     Engine::new(
         EngineConfig {
             shards,
             cache_bytes: 1 << 20,
-            batcher: BatcherConfig::default(),
+            max_queue_depth: 0,
+            batcher: bc,
         },
-        vec![net],
+        hosted,
     )
     .ok()
 }
@@ -59,17 +69,14 @@ fn server_serves_every_request_exactly_once() {
     let res = c.construct("mini_mlp").unwrap();
     let mut sess = NetSession::new(&c.rt, &c.manifest, "mini_mlp", &c.codebook).unwrap();
     let codes = sess.codes_tensor(&res.codes);
+    let eval_batch = sess.net.eval_batch;
 
-    let mut server = Server::new(
-        vec![(&mut sess, codes)],
-        BatcherConfig {
-            max_batch: 16,
-            max_linger_ns: 50_000,
-        },
-    );
-    if let Some(plane) = plane_for(&c, &res, 1) {
-        server.attach_plane(plane, None);
-    }
+    let bc = BatcherConfig {
+        max_batch: 16,
+        max_linger_ns: 50_000,
+    };
+    let Some(plane) = plane_for(&c, &[(&res, eval_batch)], 1, bc) else { return };
+    let mut server = Server::new(vec![(&mut sess, codes)], plane, None).unwrap();
     let mut rng = Rng::new(11);
     let total = 75usize;
     for i in 0..total {
@@ -88,18 +95,19 @@ fn server_serves_every_request_exactly_once() {
     // Latencies are nonnegative and finite.
     assert!(st.latency_ns.min() >= 0.0 && st.latency_ns.mean().is_finite());
     assert!(st.latency_ns.percentile(99.0) >= st.latency_ns.percentile(50.0));
-    let (acc, disp) = server.router.counters();
-    assert_eq!(acc, disp, "router conservation violated");
+    // The plane is the only router: its conservation ledger must close.
+    let (acc, disp, shed) = server.plane.counters();
+    assert_eq!(acc, disp + shed, "plane conservation violated");
+    assert_eq!(shed, 0, "unbounded plane shed requests");
+    assert_eq!(acc as usize, total);
     // The decode plane saw every dispatched weight row.
-    if let Some(plane) = &server.plane {
-        let cs = plane.cache_stats();
-        assert_eq!(
-            cs.lookups,
-            st.rows_from_cache + st.rows_decoded,
-            "plane lookup accounting"
-        );
-        assert!(cs.lookups > 0, "plane never consulted");
-    }
+    let cs = server.plane.cache_stats();
+    assert_eq!(
+        cs.lookups,
+        st.rows_from_cache + st.rows_decoded,
+        "plane lookup accounting"
+    );
+    assert!(cs.lookups > 0, "plane never consulted");
 }
 
 #[test]
@@ -107,23 +115,27 @@ fn multi_net_server_interleaves_without_cross_talk() {
     let Some(c) = campaign(4) else { return };
     let nets = ["mini_mlp", "mini_resnet18"];
     let mut pairs = Vec::new();
+    let mut results = Vec::new();
     for n in nets {
         let res = c.construct(n).unwrap();
         let sess = NetSession::new(&c.rt, &c.manifest, n, &c.codebook).unwrap();
         let codes = sess.codes_tensor(&res.codes);
+        results.push((res, sess.net.eval_batch));
         pairs.push((sess, codes));
     }
+    let bc = BatcherConfig {
+        max_batch: 8,
+        max_linger_ns: 10_000,
+    };
+    let hosted: Vec<(&vq4all::coordinator::NetResult, usize)> =
+        results.iter().map(|(r, eb)| (r, *eb)).collect();
+    // Two shards: each net routes on its own shard of the plane.
+    let Some(plane) = plane_for(&c, &hosted, 2, bc) else { return };
     let refs: Vec<(&mut NetSession, vq4all::tensor::Tensor)> = pairs
         .iter_mut()
         .map(|(s, c2)| (s, c2.clone()))
         .collect();
-    let mut server = Server::new(
-        refs,
-        BatcherConfig {
-            max_batch: 8,
-            max_linger_ns: 10_000,
-        },
-    );
+    let mut server = Server::new(refs, plane, None).unwrap();
     let mut rng = Rng::new(3);
     let mut per_net = std::collections::BTreeMap::new();
     for _ in 0..60 {
@@ -139,6 +151,8 @@ fn multi_net_server_interleaves_without_cross_talk() {
             "{n}: served count mismatch"
         );
     }
+    let (acc, disp, shed) = server.plane.counters();
+    assert_eq!((acc, disp, shed), (60, 60, 0), "plane conservation across shards");
 }
 
 #[test]
@@ -150,16 +164,13 @@ fn tcp_server_answers_over_loopback() {
     let res = c.construct("mini_mlp").unwrap();
     let sess = NetSession::new(&c.rt, &c.manifest, "mini_mlp", &c.codebook).unwrap();
     let codes = sess.codes_tensor(&res.codes);
-    let mut server = TcpServer::new(
-        vec![(sess, codes)],
-        BatcherConfig {
-            max_batch: 4,
-            max_linger_ns: 1_000_000, // 1ms
-        },
-    );
-    if let Some(plane) = plane_for(&c, &res, 1) {
-        server.attach_plane(plane, None);
-    }
+    let eval_batch = sess.net.eval_batch;
+    let bc = BatcherConfig {
+        max_batch: 4,
+        max_linger_ns: 1_000_000, // 1ms
+    };
+    let Some(plane) = plane_for(&c, &[(&res, eval_batch)], 1, bc) else { return };
+    let mut server = TcpServer::new(vec![(sess, codes)], plane, None).unwrap();
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
     let shutdown = Shutdown::new();
@@ -192,7 +203,8 @@ fn tcp_server_answers_over_loopback() {
     assert_eq!(st.latency_us.count(), 10, "bounded latency sample per request");
     assert!(st.latency_us.min() >= 0.0);
     assert_eq!(server.stats["ghost"].errors, 1);
-    if let Some(plane) = &server.plane {
-        assert!(plane.cache_stats().lookups > 0, "plane never consulted");
-    }
+    // The plane routed every request: conservation closes on it too.
+    let (acc, disp, shed) = server.plane.counters();
+    assert_eq!((acc, disp, shed), (10, 10, 0), "plane conservation (wall clock)");
+    assert!(server.plane.cache_stats().lookups > 0, "plane never consulted");
 }

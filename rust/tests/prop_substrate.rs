@@ -11,8 +11,8 @@ use vq4all::quant::uniform::{self, Granularity};
 use std::sync::Arc;
 
 use vq4all::rom::AreaModel;
-use vq4all::serving::engine::{decode_into, Engine, EngineConfig, HostedNet};
-use vq4all::serving::router::Request;
+use vq4all::serving::engine::router::Request;
+use vq4all::serving::engine::{decode_into, Admission, Engine, EngineConfig, HostedNet, RowWindow};
 use vq4all::serving::{decode_batch, Batch, BatcherConfig};
 use vq4all::tensor::ops;
 use vq4all::testing::{proptest, Gen};
@@ -390,6 +390,7 @@ fn engine_conserves_requests_across_shards_and_matches_serial() {
         let cfg = EngineConfig {
             shards,
             cache_bytes: [0, g.usize_in(64, 4096)][g.usize_in(0, 1)],
+            max_queue_depth: 0,
             batcher: BatcherConfig {
                 max_batch: g.usize_in(1, 8),
                 max_linger_ns: 10,
@@ -425,19 +426,20 @@ fn engine_conserves_requests_across_shards_and_matches_serial() {
         prop_assert_eq!(a, b);
 
         for (eng, tag) in [(&serial, "serial"), (&pooled, "pooled")] {
-            let (acc, disp) = eng.counters();
+            let (acc, disp, shed) = eng.counters();
             prop_assert_eq!(acc, total as u64);
             prop_assert!(
                 disp == total as u64,
                 "{tag}: dispatched {disp} of {total} accepted"
             );
+            prop_assert!(shed == 0, "{tag}: unbounded plane shed {shed} requests");
             prop_assert_eq!(eng.total_pending(), 0);
             for (i, &want) in per_net.iter().enumerate() {
                 let name = format!("n{i}");
                 let got: u64 = eng
                     .shards()
                     .iter()
-                    .map(|s| s.stats.served_by_net.get(&name).copied().unwrap_or(0))
+                    .map(|s| s.stats.by_net.get(&name).map(|l| l.served).unwrap_or(0))
                     .sum();
                 prop_assert!(got == want, "{tag}: {name} served {got}, submitted {want}");
             }
@@ -453,6 +455,149 @@ fn engine_conserves_requests_across_shards_and_matches_serial() {
             }
         }
         // Serial and pooled planes end in identical accounting states.
+        prop_assert_eq!(serial.cache_stats(), pooled.cache_stats());
+        prop_assert_eq!(serial.totals(), pooled.totals());
+        Ok(())
+    });
+}
+
+/// Admission control (the unified-plane tentpole property): under any
+/// per-shard queue-depth budget and arbitrary submit/dispatch
+/// interleavings, (a) shed decisions are identical serial vs pooled,
+/// (b) `accepted == dispatched + shed` holds per net and engine-wide
+/// once drained, and (c) no shed request's row ever reaches a decode
+/// (and therefore `infer_hard`) — not even as a padded row.  The decode
+/// cache is the observer for (c): on an eviction-free budget every
+/// decoded window stays resident, so a shed-only row must be absent.
+#[test]
+fn engine_admission_sheds_deterministically_and_conserves_per_net() {
+    let pool = ThreadPool::new(4);
+    proptest(|g| {
+        let nnets = g.usize_in(1, 4);
+        let shards = g.usize_in(1, 4);
+        let d = [1usize, 2][g.usize_in(0, 1)];
+        let k = g.usize_in(2, 8);
+        let cb = Arc::new(Codebook::new(k, d, g.vec_normal((k * d)..=(k * d))));
+        let bits = (usize::BITS - (k - 1).leading_zeros()).max(1);
+        let mut nets = Vec::new();
+        for i in 0..nnets {
+            let cpr = g.usize_in(1, 4);
+            let rows = g.usize_in(1, 8);
+            let codes: Vec<u32> = (0..rows * cpr).map(|_| g.u32_below(k as u32)).collect();
+            nets.push(HostedNet {
+                name: format!("n{i}"),
+                packed: pack_codes(&codes, bits),
+                codebook: cb.clone(),
+                codes_per_row: cpr,
+                device_batch: g.usize_in(1, 4),
+            });
+        }
+        let max_queue = g.usize_in(0, 4); // 0 = unbounded is in range too
+        let cfg = EngineConfig {
+            shards,
+            // Eviction-free budget: cache membership witnesses "this
+            // row's window was decoded at some point".
+            cache_bytes: 1 << 20,
+            max_queue_depth: max_queue,
+            batcher: BatcherConfig {
+                max_batch: g.usize_in(1, 4),
+                max_linger_ns: 10,
+            },
+        };
+        let mut serial = Engine::new(cfg, nets.clone()).map_err(|e| e.to_string())?;
+        let mut pooled = Engine::new(cfg, nets.clone()).unwrap();
+
+        let total = g.usize_in(1, 80);
+        let mut offered = vec![0u64; nnets];
+        let mut accepted_rows = std::collections::BTreeSet::new();
+        let mut shed_rows = std::collections::BTreeSet::new();
+        for _ in 0..total {
+            let i = g.usize_in(0, nnets - 1);
+            let srows = nets[i].packed.count / nets[i].codes_per_row;
+            let row = g.usize_in(0, srows - 1);
+            let a = serial.try_submit(&nets[i].name, row).map_err(|e| e.to_string())?;
+            let b = pooled.try_submit(&nets[i].name, row).map_err(|e| e.to_string())?;
+            prop_assert!(
+                a == b,
+                "shed decision diverged serial vs pooled: {a:?} vs {b:?}"
+            );
+            offered[i] += 1;
+            match a {
+                Admission::Accepted { .. } => {
+                    accepted_rows.insert((i, row));
+                }
+                Admission::Rejected { depth, .. } => {
+                    prop_assert!(
+                        max_queue > 0 && depth >= max_queue,
+                        "shed below budget: depth {depth}, budget {max_queue}"
+                    );
+                    shed_rows.insert((i, row));
+                }
+            }
+            if g.bool() {
+                serial.tick(50);
+                pooled.tick(50);
+                let a = serial.dispatch_round(None).map_err(|e| e.to_string())?;
+                let b = pooled.dispatch_round(Some(&pool)).map_err(|e| e.to_string())?;
+                prop_assert_eq!(a, b);
+            }
+        }
+        let a = serial.drain(None).map_err(|e| e.to_string())?;
+        let b = pooled.drain(Some(&pool)).map_err(|e| e.to_string())?;
+        prop_assert_eq!(a, b);
+
+        for (eng, tag) in [(&serial, "serial"), (&pooled, "pooled")] {
+            let (acc, disp, shed) = eng.counters();
+            prop_assert_eq!(acc, total as u64);
+            prop_assert!(
+                acc == disp + shed,
+                "{tag}: accepted {acc} != dispatched {disp} + shed {shed}"
+            );
+            prop_assert_eq!(eng.total_pending(), 0);
+            for (i, &want) in offered.iter().enumerate() {
+                let name = format!("n{i}");
+                let mut ledger = vq4all::serving::NetLedger::default();
+                for s in eng.shards() {
+                    if let Some(l) = s.stats.by_net.get(&name) {
+                        ledger.accepted += l.accepted;
+                        ledger.served += l.served;
+                        ledger.shed += l.shed;
+                    }
+                }
+                prop_assert!(
+                    ledger.accepted == want && ledger.accepted == ledger.served + ledger.shed,
+                    "{tag}: {name} ledger {ledger:?} vs {want} offered"
+                );
+            }
+            for s in eng.shards() {
+                prop_assert!(
+                    max_queue == 0 || s.stats.peak_depth <= max_queue,
+                    "{tag}: shard {} backlog {} exceeded the budget {max_queue}",
+                    s.id,
+                    s.stats.peak_depth
+                );
+            }
+            // (c) shed-only rows were never decoded: their windows are
+            // absent from the owning shard's (eviction-free) cache.
+            for &(i, row) in shed_rows.difference(&accepted_rows) {
+                let name = format!("n{i}");
+                let shard = eng
+                    .shards()
+                    .iter()
+                    .find(|s| s.hosts(&name))
+                    .expect("hosted net has a shard");
+                let cpr = nets[i].codes_per_row;
+                let w = RowWindow {
+                    net: shard.net_id(&name).expect("hosted net has an id"),
+                    start: row * cpr,
+                    end: (row + 1) * cpr,
+                };
+                prop_assert!(
+                    !shard.cache.contains(&w),
+                    "{tag}: shed request's row {row} of {name} reached a decode"
+                );
+            }
+        }
         prop_assert_eq!(serial.cache_stats(), pooled.cache_stats());
         prop_assert_eq!(serial.totals(), pooled.totals());
         Ok(())
@@ -497,6 +642,7 @@ fn decode_cache_any_interleaving_bit_identical_to_fresh_decode() {
             EngineConfig {
                 shards: 1,
                 cache_bytes: budget,
+                max_queue_depth: 0,
                 batcher: BatcherConfig::default(),
             },
             vec![net],

@@ -1,50 +1,120 @@
 #!/usr/bin/env bash
 # One-command tier-1 gate + hot-path perf smoke.
 #
-#   scripts/verify.sh            # build + tests + hotpath bench (smoke)
-#   VQ4ALL_BENCH_MS=300 scripts/verify.sh   # longer measurements
+#   scripts/verify.sh                    # build + tests + hotpath bench + JSON gates
+#   scripts/verify.sh --check-json       # ... + row-set diff against the committed baseline
+#   scripts/verify.sh --gates-only [J]   # only the JSON gates, against J
+#                                        #   (default: $VQ4ALL_BENCH_JSON / BENCH_hotpath.json)
+#   VQ4ALL_BENCH_MS=300 scripts/verify.sh        # longer measurements
 #
-# The hotpath bench writes BENCH_hotpath.json (serial-vs-parallel
-# comparisons for candidate assignment, k-means, KDE density, the PNC
-# scan, encode_nearest, bulk packed unpack, the batched serving decode,
-# and the serving-engine rows: cold-vs-warm decode cache and 1-vs-N
-# shards) into the repo root so successive PRs can diff it.  Any
-# comparison row that regresses below 1.0x (parallel slower than serial)
-# FAILS the gate; the engine smoke additionally requires cache hit_rate
-# > 0 and warm-cache throughput >= cold (engine_cache >= 1.0x at any
-# thread count).  The tier-1 pass/fail summary prints LAST so the gate
-# is unmissable.
+# Environment overrides:
+#   VQ4ALL_BENCH_MS       per-bench measurement budget in ms (default 60)
+#   VQ4ALL_BENCH_JSON     where the hotpath bench writes (and the gates
+#                         read) the report — default BENCH_hotpath.json
+#   VQ4ALL_BASELINE_JSON  committed row manifest --check-json diffs the
+#                         fresh report against — default
+#                         scripts/bench_baseline.json (names/keys only;
+#                         timings are machine-local and never compared
+#                         across files)
+#
+# The hotpath bench writes serial-vs-parallel comparisons for the VQ and
+# serving hot paths plus the serving-engine rows (cold-vs-warm decode
+# cache, 1-vs-N shards, bounded-vs-unbounded admission).  Gates:
+#   * any comparison row measured on >= 2 worker threads below 1.0x FAILS
+#   * the engine summary must exist with cache hit_rate > 0,
+#     engine_cache >= 1.0x (warm never slower than cold, any thread
+#     count), and admission conservation
+#     (admission_accepted == admission_dispatched + admission_shed > 0)
+#   * --check-json additionally FAILS if the fresh report lost any
+#     comparison row or engine-summary key the committed baseline lists
+# Exit-code contract (the PR-4 bugfix): once the bench has PASSed, the
+# JSON gates MUST run and PASS — a missing report, missing python3, or a
+# failing engine gate fails the script even when tier-1 is green.  The
+# tier-1 pass/fail summary prints LAST so the gate is unmissable.
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
-build_status=FAIL
-test_status=FAIL
-bench_status=FAIL
+mode=full
+check_json=0
+gates_json=""
+while [ $# -gt 0 ]; do
+  case "$1" in
+    --check-json)
+      check_json=1
+      ;;
+    --gates-only)
+      mode=gates
+      if [ $# -gt 1 ] && [ "${2#--}" = "$2" ]; then
+        gates_json="$2"
+        shift
+      fi
+      ;;
+    *)
+      echo "unknown argument: $1" >&2
+      echo "usage: scripts/verify.sh [--check-json] [--gates-only [bench.json]]" >&2
+      exit 2
+      ;;
+  esac
+  shift
+done
+
+build_status=SKIP
+test_status=SKIP
+bench_status=SKIP
 speedup_status=SKIP
 engine_status=SKIP
+diff_status=SKIP
 
-echo "== tier-1: cargo build --release =="
-if cargo build --release; then build_status=PASS; fi
-
-echo
-echo "== tier-1: cargo test -q =="
-if [ "$build_status" = PASS ] && cargo test -q; then test_status=PASS; fi
-
-echo
-echo "== perf smoke: hotpath bench =="
-if [ "$build_status" = PASS ] \
-    && VQ4ALL_BENCH_MS="${VQ4ALL_BENCH_MS:-60}" cargo bench --bench hotpath; then
-  bench_status=PASS
+bench_json="${VQ4ALL_BENCH_JSON:-BENCH_hotpath.json}"
+baseline_json="${VQ4ALL_BASELINE_JSON:-scripts/bench_baseline.json}"
+if [ "$mode" = gates ] && [ -n "$gates_json" ]; then
+  bench_json="$gates_json"
 fi
 
-# Serial-vs-parallel regression gate: every comparisons[] row in the
-# bench JSON must hold >= 1.0x (parallel never slower than serial).
-# The ROADMAP bar is >= 2x on >= 4 cores; 1.0x is the hard floor that
-# fails the gate rather than warns.  Rows measured with < 2 worker
-# threads are informational only (parallel == serial + noise there).
-bench_json="${VQ4ALL_BENCH_JSON:-BENCH_hotpath.json}"
-if [ "$bench_status" = PASS ] && [ -f "$bench_json" ]; then
-  if command -v python3 >/dev/null 2>&1; then
+if [ "$mode" = full ]; then
+  build_status=FAIL
+  test_status=FAIL
+  bench_status=FAIL
+
+  echo "== tier-1: cargo build --release =="
+  if cargo build --release; then build_status=PASS; fi
+
+  echo
+  echo "== tier-1: cargo test -q =="
+  if [ "$build_status" = PASS ] && cargo test -q; then test_status=PASS; fi
+
+  echo
+  echo "== perf smoke: hotpath bench =="
+  if [ "$build_status" = PASS ] \
+      && VQ4ALL_BENCH_MS="${VQ4ALL_BENCH_MS:-60}" \
+         VQ4ALL_BENCH_JSON="$bench_json" cargo bench --bench hotpath; then
+    bench_status=PASS
+  fi
+fi
+
+run_gates=0
+if [ "$mode" = gates ]; then run_gates=1; fi
+if [ "$mode" = full ] && [ "$bench_status" = PASS ]; then run_gates=1; fi
+
+if [ "$run_gates" = 1 ]; then
+  # A bench that PASSed but left no readable report — or a machine that
+  # cannot evaluate the gates — is a FAILURE, not a skip: the gates are
+  # the point of the script.
+  speedup_status=FAIL
+  engine_status=FAIL
+  if [ "$check_json" = 1 ]; then diff_status=FAIL; fi
+  if ! command -v python3 >/dev/null 2>&1; then
+    echo
+    echo "ERROR: python3 is required to evaluate the bench JSON gates" >&2
+  elif [ ! -f "$bench_json" ]; then
+    echo
+    echo "ERROR: bench report $bench_json does not exist" >&2
+  else
+    # Serial-vs-parallel regression gate: every comparisons[] row in the
+    # bench JSON must hold >= 1.0x (parallel never slower than serial).
+    # The ROADMAP bar is >= 2x on >= 4 cores; 1.0x is the hard floor.
+    # Rows measured with < 2 worker threads are informational only
+    # (parallel == serial + noise there).
     echo
     echo "== speedup gate: serial-vs-parallel >= 1.0x =="
     if VQ4ALL_GATE_JSON="$bench_json" python3 - <<'EOF'
@@ -69,13 +139,14 @@ sys.exit(1 if (bad or not comps) else 0)
 EOF
     then speedup_status=PASS; else speedup_status=FAIL; fi
 
-    # Engine smoke: the serving-engine rows must exist, the warm-cache
-    # row must show hit_rate > 0 and warm >= cold throughput (the
-    # engine_cache speedup is thread-count independent, so it gates even
-    # on single-core runners); the shard row rides the generic >= 1.0x
-    # multi-thread gate above.
+    # Engine smoke: the serving-engine rows must exist; the warm-cache
+    # row must show hit_rate > 0 and warm >= cold throughput (thread-
+    # count independent, so it gates even on single-core runners); the
+    # admission summary must conserve (accepted == dispatched + shed)
+    # with a nonzero shed from the bounded run.  The shard/admission
+    # rows additionally ride the generic >= 1.0x multi-thread gate.
     echo
-    echo "== engine smoke: decode cache + shards =="
+    echo "== engine smoke: decode cache + shards + admission =="
     if VQ4ALL_GATE_JSON="$bench_json" python3 - <<'EOF'
 import json, os, sys
 doc = json.load(open(os.environ["VQ4ALL_GATE_JSON"]))
@@ -92,7 +163,20 @@ else:
     print(f"  {tag:<10} cache hit_rate {hr:.3f} over "
           f"{int(eng.get('cache_hits', 0) + eng.get('cache_misses', 0))} lookups "
           f"(must be > 0); shards in sharded row: {int(eng.get('shards', 0))}")
-for name in ("engine_cache", "engine_shards"):
+    acc = eng.get("admission_accepted")
+    disp = eng.get("admission_dispatched")
+    shed = eng.get("admission_shed")
+    if acc is None or disp is None or shed is None:
+        print("  REGRESSION admission counters missing from the engine summary")
+        bad = True
+    else:
+        conserves = int(acc) == int(disp) + int(shed)
+        nonzero = int(shed) > 0
+        tag = "ok" if (conserves and nonzero) else "REGRESSION"
+        bad = bad or not (conserves and nonzero)
+        print(f"  {tag:<10} admission {int(acc)} accepted == {int(disp)} dispatched "
+              f"+ {int(shed)} shed (conservation; bounded run must shed)")
+for name in ("engine_cache", "engine_shards", "engine_admission"):
     c = comps.get(name)
     if c is None:
         print(f"  REGRESSION comparison row {name!r} missing")
@@ -109,22 +193,73 @@ for name in ("engine_cache", "engine_shards"):
 sys.exit(1 if bad else 0)
 EOF
     then engine_status=PASS; else engine_status=FAIL; fi
-  else
-    echo "python3 unavailable; speedup gate skipped"
+
+    if [ "$check_json" = 1 ]; then
+      # Row-set diff against the committed baseline manifest: the fresh
+      # report may add rows/keys, but losing any that the baseline lists
+      # is a regression (a silently dropped bench row would otherwise
+      # pass every numeric gate).  Values in the baseline are ignored —
+      # timings are machine-local.
+      echo
+      echo "== check-json: fresh report vs committed baseline =="
+      if [ ! -f "$baseline_json" ]; then
+        echo "ERROR: baseline $baseline_json does not exist (set VQ4ALL_BASELINE_JSON)" >&2
+        diff_status=FAIL
+      elif VQ4ALL_GATE_JSON="$bench_json" VQ4ALL_BASELINE="$baseline_json" python3 - <<'EOF'
+import json, os, sys
+fresh = json.load(open(os.environ["VQ4ALL_GATE_JSON"]))
+base = json.load(open(os.environ["VQ4ALL_BASELINE"]))
+bad = False
+fresh_rows = {c.get("name") for c in fresh.get("comparisons", [])}
+for c in base.get("comparisons", []):
+    name = c.get("name")
+    tag = "ok" if name in fresh_rows else "REGRESSION"
+    bad = bad or name not in fresh_rows
+    print(f"  {tag:<10} comparison row {name!r}")
+fresh_eng = fresh.get("engine") or {}
+for key in (base.get("engine") or {}):
+    tag = "ok" if key in fresh_eng else "REGRESSION"
+    bad = bad or key not in fresh_eng
+    print(f"  {tag:<10} engine summary key {key!r}")
+extra = fresh_rows - {c.get("name") for c in base.get("comparisons", [])}
+if extra:
+    print(f"  note: fresh rows not in the baseline yet (add them): {sorted(extra)}")
+sys.exit(1 if bad else 0)
+EOF
+      then diff_status=PASS; else diff_status=FAIL; fi
+    fi
   fi
 fi
 
 echo
-echo "== summary (tier-1 last) =="
+echo "== summary (mode: $mode; tier-1 last) =="
 echo "  perf smoke (hotpath bench):   $bench_status"
 echo "  speedup >= 1.0x gate:         $speedup_status"
-echo "  engine smoke (cache+shards):  $engine_status"
+echo "  engine smoke (cache+shards+admission): $engine_status"
+echo "  check-json baseline diff:     $diff_status"
 echo "  tier-1: cargo build:          $build_status"
 echo "  tier-1: cargo test:           $test_status"
 
-if [ "$build_status" = PASS ] && [ "$test_status" = PASS ] \
-    && [ "$bench_status" = PASS ] && [ "$speedup_status" != FAIL ] \
-    && [ "$engine_status" != FAIL ]; then
+ok=1
+for s in "$build_status" "$test_status" "$bench_status" \
+         "$speedup_status" "$engine_status" "$diff_status"; do
+  if [ "$s" = FAIL ]; then ok=0; fi
+done
+if [ "$mode" = full ]; then
+  # Tier-1 + bench must PASS, and the gates must have actually RUN and
+  # passed — SKIP is only acceptable for an unrequested --check-json.
+  if [ "$build_status" != PASS ] || [ "$test_status" != PASS ] \
+      || [ "$bench_status" != PASS ] || [ "$speedup_status" != PASS ] \
+      || [ "$engine_status" != PASS ]; then
+    ok=0
+  fi
+  if [ "$check_json" = 1 ] && [ "$diff_status" != PASS ]; then ok=0; fi
+else
+  if [ "$speedup_status" != PASS ] || [ "$engine_status" != PASS ]; then ok=0; fi
+  if [ "$check_json" = 1 ] && [ "$diff_status" != PASS ]; then ok=0; fi
+fi
+
+if [ "$ok" = 1 ]; then
   echo "verify OK"
   exit 0
 fi
