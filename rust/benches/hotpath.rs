@@ -8,6 +8,13 @@
 //!   with its conservation check); the comparisons land in
 //!   `BENCH_hotpath.json` so later PRs have a perf trajectory
 //!   (`VQ4ALL_BENCH_JSON` overrides the path)
+//! * **legacy vs specialized** kernel rows (thread-count independent,
+//!   gated >= 1.0x unconditionally): `unpack_wordwise` (bit-loop vs u64
+//!   window loads), `encode_pruned` (full scan vs norm-seeded
+//!   partial-distance pruning, bit-identity asserted in-bench), and
+//!   `fused_decode` (reference fused decode vs wordwise + small-d
+//!   gather) — plus absolute `rows_per_sec` / `codes_per_sec` keys in
+//!   the `engine` summary from the cold-cache decode run
 //! * packed-code decode (the serving weight-stream path)
 //! * host weighted reconstruct (checkpoint validation path)
 //! * PJRT step latency: `train_step` / `eval_hard` / `infer_hard` on
@@ -29,7 +36,9 @@ use vq4all::util::threadpool::ThreadPool;
 use vq4all::vq::assign::{candidates_with, AssignInit};
 use vq4all::vq::kde::KdeSampler;
 use vq4all::vq::kmeans::{kmeans_with, KmeansOpts};
-use vq4all::vq::pack::{pack_codes, unpack_codes, unpack_codes_with};
+use vq4all::vq::pack::{
+    pack_codes, unpack_codes, unpack_codes_with, unpack_range, unpack_range_reference,
+};
 use vq4all::vq::ratios::max_ratios_with;
 use vq4all::vq::Codebook;
 
@@ -139,6 +148,73 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(v.len());
     });
     comparisons.push(Comparison::new("unpack_codes", &unpack_serial, &unpack_par, threads));
+
+    // --- legacy vs specialized: word-level unpack ---------------------------
+    // Same 2M-code @5b stream, single-threaded: the retained bit-at-a-
+    // time reference against the u64-window kernel.  Thread-count
+    // independent, so verify.sh gates it at >= 1.0x unconditionally.
+    let mut unpack_dst = vec![0u32; packed5.count];
+    let ww_legacy = b.bench("unpack 2M codes @5b [legacy bit-loop]", || {
+        unpack_range_reference(&packed5, 0, packed5.count, &mut unpack_dst);
+        std::hint::black_box(unpack_dst[0]);
+    });
+    let ww_spec = b.bench("unpack 2M codes @5b [wordwise]", || {
+        unpack_range(&packed5, 0, packed5.count, &mut unpack_dst);
+        std::hint::black_box(unpack_dst[0]);
+    });
+    comparisons.push(Comparison::new("unpack_wordwise", &ww_legacy, &ww_spec, 1));
+
+    // --- legacy vs specialized: pruned nearest-codeword scan ----------------
+    // d=16 (>= PRUNE_MIN_D) so the norm-seeded partial-distance scan
+    // actually dispatches; the kernels are proven bit-identical, and the
+    // bench asserts it on this workload too.  Groups are drawn near
+    // codewords — the representative encode workload: every encode in
+    // this repo quantizes data its codebook was built to explain (the
+    // Table-1 sweeps encode weights against their own KDE codebook), so
+    // nearest distances are far below average and the bail bound bites.
+    let cb16 = {
+        let mut words = vec![0.0f32; 256 * 16];
+        rng.fill_normal(&mut words);
+        Codebook::new(256, 16, words)
+    };
+    let mut flat16 = vec![0.0f32; 16 * 4_000];
+    for g in 0..4_000 {
+        let w = cb16.word(rng.below(256));
+        for j in 0..16 {
+            flat16[g * 16 + j] = w[j] + rng.normal_f32(0.0, 0.15);
+        }
+    }
+    let enc_legacy = b.bench("encode 4k groups k=256 d=16 [legacy full scan]", || {
+        let (m, c) = cb16.encode_nearest_reference(&flat16);
+        std::hint::black_box((m, c.len()));
+    });
+    let enc_spec = b.bench("encode 4k groups k=256 d=16 [pruned]", || {
+        let (m, c) = cb16.encode_nearest_with(&flat16, None);
+        std::hint::black_box((m, c.len()));
+    });
+    comparisons.push(Comparison::new("encode_pruned", &enc_legacy, &enc_spec, 1));
+    {
+        let (m_ref, c_ref) = cb16.encode_nearest_reference(&flat16);
+        let (m_new, c_new) = cb16.encode_nearest_with(&flat16, None);
+        assert_eq!(m_ref.to_bits(), m_new.to_bits(), "pruned encode MSE diverged");
+        assert_eq!(c_ref, c_new, "pruned encode codes diverged");
+    }
+
+    // --- legacy vs specialized: fused streaming decode ----------------------
+    // 256k codes @5b against the k=256 d=4 serving codebook: the
+    // reference (bit-loop unpack + runtime-length copies) vs the fused
+    // wordwise + small-d gather kernel the decode plane rides.
+    let fuse_n = 262_144.min(packed5.count);
+    let mut fused_out = vec![0.0f32; fuse_n * cb.d];
+    let fd_legacy = b.bench("fused decode 256k codes @5b d=4 [legacy]", || {
+        cb.decode_packed_into_reference(&packed5, 0, fuse_n, &mut fused_out);
+        std::hint::black_box(fused_out[0]);
+    });
+    let fd_spec = b.bench("fused decode 256k codes @5b d=4 [wordwise+gather]", || {
+        cb.decode_packed_into(&packed5, 0, fuse_n, &mut fused_out);
+        std::hint::black_box(fused_out[0]);
+    });
+    comparisons.push(Comparison::new("fused_decode", &fd_legacy, &fd_spec, 1));
 
     let mut out = vec![0.0f32; codes.len() * 4];
     b.bench("hard decode 100k codes (400k weights)", || {
@@ -390,11 +466,25 @@ fn main() -> anyhow::Result<()> {
             c.speedup()
         );
     }
+    // Absolute decode-plane throughput (not a serial-vs-parallel ratio):
+    // the cold-cache engine run decodes all `device_rows` rows of
+    // `codes_per_row` codes fresh every iteration, so rows/codes per
+    // second fall straight out of its mean time.  verify.sh gates the
+    // keys as present and > 0; the values themselves are machine-local
+    // trajectory data.
+    let rows_per_sec = cache_cold.throughput(device_rows as f64);
+    let codes_per_sec = cache_cold.throughput((device_rows * codes_per_row) as f64);
+    println!(
+        "engine absolute throughput (cold decode): {rows_per_sec:.0} rows/s, \
+         {codes_per_sec:.0} codes/s"
+    );
     let engine_extra = Json::obj(vec![
         ("cache_hit_rate", Json::num(cache_stats.hit_rate())),
         ("cache_hits", Json::num(cache_stats.hits as f64)),
         ("cache_misses", Json::num(cache_stats.misses as f64)),
         ("cache_evictions", Json::num(cache_stats.evictions as f64)),
+        ("rows_per_sec", Json::num(rows_per_sec)),
+        ("codes_per_sec", Json::num(codes_per_sec)),
         ("shards", Json::num(engine_shards as f64)),
         // Admission counters from the bounded (max-queue 16) run —
         // scripts/verify.sh gates accepted == dispatched + shed > 0.

@@ -121,22 +121,25 @@ impl DecodeCache {
     }
 
     /// Look up a window.  A hit refreshes recency and returns the block.
+    /// One tree descent on the hot path: the entry is fetched mutably
+    /// once and its recency stamp rewritten in place (the old
+    /// double-lookup re-descended the map after updating the LRU index).
     pub fn get(&mut self, key: &RowWindow) -> Option<&[f32]> {
         self.stats.lookups += 1;
-        let old_stamp = match self.map.get(key) {
-            Some(e) => e.stamp,
+        match self.map.get_mut(key) {
             None => {
                 self.stats.misses += 1;
-                return None;
+                None
             }
-        };
-        self.stats.hits += 1;
-        self.lru.remove(&old_stamp);
-        self.clock += 1;
-        self.lru.insert(self.clock, *key);
-        let e = self.map.get_mut(key).expect("entry vanished between lookups");
-        e.stamp = self.clock;
-        Some(&e.data)
+            Some(e) => {
+                self.stats.hits += 1;
+                self.lru.remove(&e.stamp);
+                self.clock += 1;
+                e.stamp = self.clock;
+                self.lru.insert(self.clock, *key);
+                Some(&e.data)
+            }
+        }
     }
 
     /// Insert (or refresh) a decoded block, evicting least-recently-used

@@ -121,7 +121,8 @@ impl Shard {
             // One-time hosting validation: every packed code must address
             // a real codeword, whatever the pack width — decode would
             // panic mid-serve otherwise.  Chunked so hosting a large
-            // stream needs no O(count) allocation.
+            // stream needs no O(count) allocation; rides the word-level
+            // unpack_range, so hosting big streams stays cheap.
             let mut buf = [0u32; 512];
             let mut s = 0;
             while s < n.packed.count {

@@ -10,6 +10,13 @@
 //! stream), and every row runs through the fused
 //! [`Codebook::decode_packed_into`] kernel — so serial and pooled runs
 //! are bit-identical at every thread count.
+//!
+//! §Perf: `decode_packed_into` is the specialized kernel pair — the
+//! word-level `vq::pack::unpack_range` (one `u64` window load per code)
+//! fused with the small-`d` monomorphized gather — so every serving
+//! decode, cache miss, and `stream_batch` call rides it; the hotpath
+//! bench's `fused_decode` row and the engine summary's absolute
+//! `rows_per_sec` / `codes_per_sec` keys track it.
 
 use crate::serving::batcher::Batch;
 use crate::util::threadpool::{SyncPtr, ThreadPool};

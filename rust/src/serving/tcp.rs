@@ -8,7 +8,16 @@
 //!     "batch": 4, "latency_us": 812.0}
 //! <- {"ok": false, "error": "unknown network \"ghost\""}
 //! <- {"ok": false, "error": "row 999 out of range: \"mini_mlp\" serves rows 0..64"}
+//! -> {"stats": true}
+//! <- {"ok": true, "stats": true, "accepted": 10, "dispatched": 10,
+//!     "shed": 0, "deferred": 0, "peak_depth": 4, "rows_decoded": 40,
+//!     "rows_from_cache": 24, "cache_hit_rate": 0.375, "per_net": {...}}
 //! ```
+//!
+//! The `/stats` verb is answered by the dispatch thread (a consistent
+//! snapshot of the plane it owns) and rides the same reader channel as
+//! row requests, so it observes the protocol's ordering — including
+//! waiting behind backpressure like any other line.
 //!
 //! The servable row space is `0..min(stream_rows, input_pool_rows)` —
 //! bounded by the hosted packed stream and the session's input pool;
@@ -60,6 +69,15 @@ struct InFlight {
     arrived: Instant,
 }
 
+/// One line pulled off a reader channel: a row request, or a control
+/// verb the dispatch thread answers directly.
+enum Inbound {
+    Request(InFlight),
+    /// `{"stats": true}` — dump the plane's admission + throughput
+    /// counters to this connection.
+    Stats { conn: u64 },
+}
+
 /// Per-connection writer handles the dispatch thread answers through.
 type Writers = Arc<Mutex<BTreeMap<u64, TcpStream>>>;
 
@@ -105,12 +123,39 @@ impl Shutdown {
     }
 }
 
-/// Parse one request line. Returns (net, row).
-pub fn parse_request(line: &str) -> anyhow::Result<(String, usize)> {
+/// One parsed inbound line of the wire protocol.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Verb {
+    /// `{"net": ..., "row": ...}` — serve one row.
+    Infer { net: String, row: usize },
+    /// `{"stats": true}` — report the plane's admission and decode
+    /// throughput counters (ROADMAP: surfacing the admission counters
+    /// over a `/stats` TCP verb).
+    Stats,
+}
+
+/// Parse one protocol line into a [`Verb`].
+pub fn parse_verb(line: &str) -> anyhow::Result<Verb> {
     let v = json::parse(line)?;
+    if let Some(s) = v.get("stats") {
+        anyhow::ensure!(
+            s.as_bool() == Some(true),
+            "the \"stats\" key must be `true` when present"
+        );
+        return Ok(Verb::Stats);
+    }
     let net = v.req_str("net")?.to_string();
     let row = v.req_usize("row")?;
-    Ok((net, row))
+    Ok(Verb::Infer { net, row })
+}
+
+/// Parse one request line. Returns (net, row).  Row-request-only wrapper
+/// around [`parse_verb`], kept for callers that never speak verbs.
+pub fn parse_request(line: &str) -> anyhow::Result<(String, usize)> {
+    match parse_verb(line)? {
+        Verb::Infer { net, row } => Ok((net, row)),
+        Verb::Stats => anyhow::bail!("expected a row request, got the stats verb"),
+    }
 }
 
 /// Render a success response.
@@ -131,6 +176,50 @@ pub fn err_response(msg: &str) -> String {
     Json::obj(vec![
         ("ok", Json::Bool(false)),
         ("error", Json::str(msg.to_string())),
+    ])
+    .to_string()
+}
+
+/// Render the `/stats` verb response: the plane's admission counters
+/// (accepted / dispatched / shed / deferred / peak queue depth), decode
+/// throughput counters (rows decoded fresh vs served from cache, cache
+/// hit rate and evictions), and per-net serve counts.
+pub fn stats_response(plane: &Engine, stats: &BTreeMap<String, TcpStats>) -> String {
+    let t = plane.totals();
+    let cs = plane.cache_stats();
+    let per_net: BTreeMap<String, Json> = stats
+        .iter()
+        .map(|(n, s)| {
+            (
+                n.clone(),
+                Json::obj(vec![
+                    ("served", Json::num(s.served as f64)),
+                    ("batches", Json::num(s.batches as f64)),
+                    ("errors", Json::num(s.errors as f64)),
+                    ("rows_from_cache", Json::num(s.rows_from_cache as f64)),
+                    ("rows_decoded", Json::num(s.rows_decoded as f64)),
+                ]),
+            )
+        })
+        .collect();
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("stats", Json::Bool(true)),
+        ("accepted", Json::num(t.accepted as f64)),
+        ("dispatched", Json::num(t.served as f64)),
+        ("shed", Json::num(t.shed as f64)),
+        ("deferred", Json::num(t.deferred as f64)),
+        ("peak_depth", Json::num(t.peak_depth as f64)),
+        ("pending", Json::num(plane.total_pending() as f64)),
+        ("batches", Json::num(t.batches as f64)),
+        ("padded_rows", Json::num(t.padded_rows as f64)),
+        ("rows_decoded", Json::num(t.rows_decoded as f64)),
+        ("rows_from_cache", Json::num(t.rows_from_cache as f64)),
+        ("cache_hit_rate", Json::num(cs.hit_rate())),
+        ("cache_evictions", Json::num(cs.evictions as f64)),
+        ("max_queue_depth", Json::num(plane.cfg.max_queue_depth as f64)),
+        ("shards", Json::num(plane.shard_count() as f64)),
+        ("per_net", Json::Obj(per_net)),
     ])
     .to_string()
 }
@@ -195,7 +284,7 @@ impl TcpServer {
             0 => 1024,
             d => (d * self.plane.shard_count()).max(1),
         };
-        let (tx, rx): (SyncSender<InFlight>, Receiver<InFlight>) = sync_channel(cap);
+        let (tx, rx): (SyncSender<Inbound>, Receiver<Inbound>) = sync_channel(cap);
         let conn_seq = Arc::new(AtomicU64::new(0));
         // Writers: dispatch thread sends rendered lines per connection.
         let writers: Writers = Arc::new(Mutex::new(BTreeMap::new()));
@@ -220,19 +309,28 @@ impl TcpServer {
                                 if line.trim().is_empty() {
                                     continue;
                                 }
-                                match parse_request(&line) {
-                                    Ok((net, row)) => {
+                                match parse_verb(&line) {
+                                    Ok(Verb::Infer { net, row }) => {
                                         // Blocks when the channel is full
                                         // — the backpressure edge.
                                         if tx2
-                                            .send(InFlight {
+                                            .send(Inbound::Request(InFlight {
                                                 conn: id,
                                                 net,
                                                 row,
                                                 arrived: Instant::now(),
-                                            })
+                                            }))
                                             .is_err()
                                         {
+                                            break;
+                                        }
+                                    }
+                                    // Stats rides the same channel, so it
+                                    // observes the dispatcher's ordering
+                                    // (and waits behind a parked request
+                                    // like any other line).
+                                    Ok(Verb::Stats) => {
+                                        if tx2.send(Inbound::Stats { conn: id }).is_err() {
                                             break;
                                         }
                                     }
@@ -282,7 +380,15 @@ impl TcpServer {
             // channel fills behind us and blocks the readers.
             if parked.is_none() {
                 match rx.recv_timeout(linger.max(Duration::from_millis(1))) {
-                    Ok(req) => {
+                    Ok(Inbound::Stats { conn }) => {
+                        // Answered inline by the dispatch thread — it owns
+                        // the plane, so the counters are a consistent
+                        // snapshot with no extra synchronization.
+                        if let Some(w) = writers.lock().unwrap().get_mut(&conn) {
+                            let _ = writeln!(w, "{}", stats_response(&self.plane, &self.stats));
+                        }
+                    }
+                    Ok(Inbound::Request(req)) => {
                         self.plane.set_now(elapsed_ns(&t0));
                         // Validate BEFORE the defer decision: a request
                         // that can never occupy a queue slot (unknown
@@ -440,6 +546,16 @@ pub fn client_request(stream: &mut TcpStream, net: &str, row: usize) -> anyhow::
     json::parse(&line)
 }
 
+/// Blocking client helper for the `/stats` verb: send `{"stats": true}`,
+/// read the counter snapshot.
+pub fn client_stats(stream: &mut TcpStream) -> anyhow::Result<Json> {
+    writeln!(stream, "{}", Json::obj(vec![("stats", Json::Bool(true))]))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    json::parse(&line)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -451,6 +567,85 @@ mod tests {
         assert_eq!(row, 7);
         assert!(parse_request(r#"{"row": 7}"#).is_err());
         assert!(parse_request("not json").is_err());
+    }
+
+    #[test]
+    fn verb_parses_stats_and_rejects_malformed() {
+        assert_eq!(parse_verb(r#"{"stats": true}"#).unwrap(), Verb::Stats);
+        assert_eq!(
+            parse_verb(r#"{"net": "a", "row": 3}"#).unwrap(),
+            Verb::Infer { net: "a".into(), row: 3 }
+        );
+        assert!(parse_verb(r#"{"stats": false}"#).is_err());
+        assert!(parse_verb(r#"{"stats": 1}"#).is_err());
+        // The request-only wrapper refuses the verb.
+        assert!(parse_request(r#"{"stats": true}"#).is_err());
+    }
+
+    /// The stats snapshot must reflect the plane's admission + decode
+    /// counters — driven end to end on a standalone engine (no PJRT
+    /// artifacts needed).
+    #[test]
+    fn stats_response_reports_plane_counters() {
+        use crate::serving::batcher::BatcherConfig;
+        use crate::serving::engine::{EngineConfig, HostedNet};
+        use crate::util::rng::Rng;
+        use crate::vq::pack::pack_codes;
+        use crate::vq::Codebook;
+        use std::sync::Arc;
+
+        let mut rng = Rng::new(51);
+        let mut words = vec![0.0f32; 8 * 2];
+        rng.fill_normal(&mut words);
+        let cb = Arc::new(Codebook::new(8, 2, words));
+        let codes: Vec<u32> = (0..24).map(|_| rng.below(8) as u32).collect();
+        let net = HostedNet {
+            name: "a".into(),
+            packed: pack_codes(&codes, 3),
+            codebook: cb,
+            codes_per_row: 4,
+            device_batch: 2,
+        };
+        let mut plane = Engine::new(
+            EngineConfig {
+                shards: 1,
+                cache_bytes: 1 << 16,
+                max_queue_depth: 5,
+                batcher: BatcherConfig {
+                    max_batch: 2,
+                    max_linger_ns: 10,
+                },
+            },
+            vec![net],
+        )
+        .unwrap();
+        for row in [0usize, 1, 0] {
+            plane.submit("a", row).unwrap();
+        }
+        plane.drain(None).unwrap();
+
+        let mut stats: BTreeMap<String, TcpStats> = BTreeMap::new();
+        stats.entry("a".into()).or_default().served = 3;
+        let parsed = json::parse(&stats_response(&plane, &stats)).unwrap();
+        assert!(parsed.req_bool("ok").unwrap());
+        assert!(parsed.req_bool("stats").unwrap());
+        assert_eq!(parsed.req_usize("accepted").unwrap(), 3);
+        assert_eq!(parsed.req_usize("dispatched").unwrap(), 3);
+        assert_eq!(parsed.req_usize("shed").unwrap(), 0);
+        assert_eq!(parsed.req_usize("pending").unwrap(), 0);
+        assert_eq!(parsed.req_usize("max_queue_depth").unwrap(), 5);
+        let t = plane.totals();
+        assert_eq!(
+            parsed.req_usize("rows_decoded").unwrap() as u64,
+            t.rows_decoded,
+            "decode counter surfaced"
+        );
+        assert_eq!(
+            parsed.req_usize("rows_from_cache").unwrap() as u64,
+            t.rows_from_cache
+        );
+        let per_net = parsed.req("per_net").unwrap().get("a").expect("per-net entry");
+        assert_eq!(per_net.req_usize("served").unwrap(), 3);
     }
 
     #[test]

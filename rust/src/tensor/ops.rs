@@ -57,14 +57,21 @@ pub fn argmax(xs: &[f32]) -> usize {
 }
 
 /// Indices of the `n` smallest values, ascending (partial selection).
+/// Ties break toward the smaller index, so the result is a pure function
+/// of the values — the pruned top-n scan in `vq::assign` is proven
+/// bit-identical against exactly this ordering.
 pub fn argmin_n(xs: &[f32], n: usize) -> Vec<usize> {
     assert!(n <= xs.len(), "argmin_n: n {} > len {}", n, xs.len());
+    let key = |&a: &usize, &b: &usize| {
+        xs[a]
+            .partial_cmp(&xs[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    };
     let mut idx: Vec<usize> = (0..xs.len()).collect();
-    idx.select_nth_unstable_by(n.saturating_sub(1), |&a, &b| {
-        xs[a].partial_cmp(&xs[b]).unwrap_or(std::cmp::Ordering::Equal)
-    });
+    idx.select_nth_unstable_by(n.saturating_sub(1), key);
     let mut head = idx[..n].to_vec();
-    head.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap_or(std::cmp::Ordering::Equal));
+    head.sort_by(key);
     head
 }
 
@@ -78,6 +85,100 @@ pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
         acc += d * d;
     }
     acc
+}
+
+/// Minimum sub-vector width at which the pruned nearest-codeword scans
+/// ([`nearest_pruned`], the Euclid top-n scan in `vq::assign`) pay off:
+/// [`sq_dist_pruned`] checks its bail bound every 4 lanes, so below two
+/// full check blocks a bail can skip at most a ragged tail — not enough
+/// to cover the compare/branch and norm-seed overhead.  Callers dispatch
+/// to the retained naive scan below this threshold — both paths are
+/// bit-identical, so where the line sits is purely a perf knob.
+pub const PRUNE_MIN_D: usize = 8;
+
+/// Partial-distance squared Euclidean scan: accumulates `(a[i]-b[i])^2`
+/// in exactly the index order of [`sq_dist`], checking the running
+/// prefix against `limit` every 4 lanes and bailing with `None` as soon
+/// as it exceeds `limit` **strictly**.
+///
+/// Exactness: every term is nonnegative, and for nonnegative f32 `x, t`
+/// round-to-nearest gives `fl(x + t) >= fl(x) = x` (rounding is
+/// monotone), so the prefix sums never decrease — a prefix above `limit`
+/// proves the full sum is above it too.  Conversely a candidate whose
+/// full distance is `<= limit` never bails (all its prefixes are below
+/// the final sum), so `Some(v)` carries the bit-exact [`sq_dist`] value.
+/// The strict comparison keeps distance-equals-bound candidates alive,
+/// which is what lets callers prove first-index tie-breaks unchanged.
+#[inline]
+pub fn sq_dist_pruned(a: &[f32], b: &[f32], limit: f32) -> Option<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc = 0.0f32;
+    let mut i = 0;
+    while i < n {
+        let e = (i + 4).min(n);
+        while i < e {
+            let d = a[i] - b[i];
+            acc += d * d;
+            i += 1;
+        }
+        if acc > limit {
+            return None;
+        }
+    }
+    Some(acc)
+}
+
+/// Pruned first-index argmin of squared distances from `sub` to the `k`
+/// rows of `words` (`norms[c]` = precomputed squared norm of row `c`).
+/// Returns `(best_index, best_dist)` **bit-identical** to the naive
+/// reference scan
+///
+/// ```text
+/// for c in 0..k { d = sq_dist(sub, word(c)); if d < best_d { best = c; ... } }
+/// ```
+///
+/// including argmin tie-breaks (first min wins) and the f32 bits of
+/// `best_dist` (the winning candidate always runs to completion in
+/// [`sq_dist`]'s accumulation order).  Two exact pruning devices:
+///
+/// * **Seed bound** — the codeword whose squared norm is closest to
+///   `|sub|^2` is fully evaluated up front; its distance `B` bounds the
+///   final minimum (`m <= B`, the seed is one of the candidates).  The
+///   scan still visits *every* index in order, so the seed choice only
+///   affects speed, never the result.
+/// * **Partial-distance bail** — each candidate accumulates through
+///   [`sq_dist_pruned`] with `limit = min(best_d, B)`; strict-bail
+///   semantics mean a candidate with distance exactly `limit` completes
+///   and ties resolve exactly as in the naive scan.
+pub fn nearest_pruned(sub: &[f32], words: &[f32], norms: &[f32]) -> (usize, f32) {
+    let d = sub.len();
+    let k = norms.len();
+    debug_assert_eq!(words.len(), k * d);
+    debug_assert!(k > 0);
+    let q = dot(sub, sub);
+    let mut seed = 0usize;
+    let mut seed_gap = f32::INFINITY;
+    for (c, &nc) in norms.iter().enumerate() {
+        let gap = (nc - q).abs();
+        if gap < seed_gap {
+            seed_gap = gap;
+            seed = c;
+        }
+    }
+    let bound = sq_dist(sub, &words[seed * d..(seed + 1) * d]);
+    let mut best = 0usize;
+    let mut best_d = f32::INFINITY;
+    for c in 0..k {
+        let limit = if best_d < bound { best_d } else { bound };
+        if let Some(dist) = sq_dist_pruned(sub, &words[c * d..(c + 1) * d], limit) {
+            if dist < best_d {
+                best_d = dist;
+                best = c;
+            }
+        }
+    }
+    (best, best_d)
 }
 
 /// Dot product.
@@ -204,6 +305,65 @@ mod tests {
         assert_eq!(argmin_n(&xs, 3), vec![3, 1, 4]);
         assert_eq!(argmin_n(&xs, 5), vec![3, 1, 4, 2, 0]);
         assert_eq!(argmax(&xs), 0);
+    }
+
+    #[test]
+    fn argmin_n_breaks_ties_by_index() {
+        // Duplicated minima and a duplicated threshold value: the smaller
+        // index must win in both the selection and the output order.
+        let xs = [2.0, 1.0, 2.0, 1.0, 0.5, 2.0];
+        assert_eq!(argmin_n(&xs, 1), vec![4]);
+        assert_eq!(argmin_n(&xs, 2), vec![4, 1]);
+        assert_eq!(argmin_n(&xs, 4), vec![4, 1, 3, 0]);
+        assert_eq!(argmin_n(&xs, 6), vec![4, 1, 3, 0, 2, 5]);
+    }
+
+    #[test]
+    fn sq_dist_pruned_exact_or_bails() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [0.0f32; 6];
+        let full = sq_dist(&a, &b);
+        // Generous limit: exact full value, bit for bit.
+        assert_eq!(sq_dist_pruned(&a, &b, f32::INFINITY).unwrap().to_bits(), full.to_bits());
+        // Limit exactly the full distance: strict bail keeps it alive.
+        assert_eq!(sq_dist_pruned(&a, &b, full).unwrap().to_bits(), full.to_bits());
+        // The first 4-lane prefix is 1+4+9+16 = 30: anything below bails.
+        assert_eq!(sq_dist_pruned(&a, &b, 29.0), None);
+        // A limit above the first prefix but below the total also bails
+        // (at the final check).
+        assert_eq!(sq_dist_pruned(&a, &b, full - 1.0), None);
+    }
+
+    #[test]
+    fn nearest_pruned_matches_naive_scan_with_ties() {
+        // k=4, d=8; words 1 and 3 are identical — the naive scan keeps
+        // the first of an exact tie, and so must the pruned scan.
+        let d = 8;
+        let mut words = vec![0.0f32; 4 * d];
+        for j in 0..d {
+            words[j] = j as f32; // word 0
+            words[d + j] = 1.5; // word 1
+            words[2 * d + j] = -3.0; // word 2
+            words[3 * d + j] = 1.5; // word 3 == word 1
+        }
+        let norms: Vec<f32> = words.chunks_exact(d).map(|w| dot(w, w)).collect();
+        let sub = vec![1.5f32; d];
+        let naive = |sub: &[f32]| {
+            let mut best = 0usize;
+            let mut best_d = f32::INFINITY;
+            for c in 0..4 {
+                let dist = sq_dist(sub, &words[c * d..(c + 1) * d]);
+                if dist < best_d {
+                    best_d = dist;
+                    best = c;
+                }
+            }
+            (best, best_d)
+        };
+        assert_eq!(nearest_pruned(&sub, &words, &norms), naive(&sub));
+        assert_eq!(nearest_pruned(&sub, &words, &norms).0, 1, "first of the tie wins");
+        let far = vec![-2.9f32; d];
+        assert_eq!(nearest_pruned(&far, &words, &norms), naive(&far));
     }
 
     #[test]

@@ -4,6 +4,12 @@
 //! distance kernel); this host implementation backs the pure-Rust
 //! baselines, the Table-7 initialization ablation (random / cosine /
 //! Euclidean), and the coordinator's unit tests.
+//!
+//! §Perf: the Euclid sweep at `d >= ops::PRUNE_MIN_D` replaces the full
+//! `(s, k)` scratch table with a running top-n buffer plus
+//! partial-distance early exit (`ops::sq_dist_pruned`) — bit-identical
+//! to the naive path (`ops::argmin_n` ties break by index on both
+//! sides), so which path runs is purely a perf decision.
 
 use crate::tensor::ops;
 use crate::util::rng::Rng;
@@ -72,9 +78,20 @@ pub fn candidates_with(
     // exactly one step regardless of s or the thread count.
     let base = rng.next_u64();
 
+    // §Perf: the Euclid sweep at d >= PRUNE_MIN_D keeps a running top-n
+    // buffer and prunes each candidate with the partial-distance scan.
+    // The buffer holds the n lexicographically-smallest (dist, index)
+    // pairs seen so far — exactly what `ops::argmin_n` (index tie-break)
+    // returns over the full scratch table — and the strict bail keeps
+    // distance-equals-bound candidates alive, so the output is
+    // bit-identical to the naive scratch path retained below (proven on
+    // adversarial near-tie codebooks in `rust/tests/prop_substrate.rs`).
+    let prune = init == AssignInit::Euclid && cb.d >= ops::PRUNE_MIN_D;
+
     let kernel = |start: usize, end: usize, assign_chunk: &mut [u32], dist_chunk: &mut [f32]| {
         let mut crng = Rng::chunk_stream(base, start / CHUNK);
         let mut scratch = vec![0.0f32; cb.k];
+        let mut top: Vec<(f32, u32)> = Vec::with_capacity(n);
         for g in start..end {
             let sub = &flat[g * cb.d..(g + 1) * cb.d];
             let row = (g - start) * n;
@@ -84,6 +101,34 @@ pub fn candidates_with(
                         let c = crng.below(cb.k);
                         assign_chunk[row + m] = c as u32;
                         dist_chunk[row + m] = ops::sq_dist(sub, cb.word(c));
+                    }
+                }
+                AssignInit::Euclid if prune => {
+                    top.clear();
+                    for c in 0..cb.k {
+                        // Bail bound: the current n-th best (∞ until the
+                        // buffer fills).  Scan order is index order, so a
+                        // later candidate tying the worst entry never
+                        // displaces it — insertion is strictly-less only.
+                        let limit = if top.len() == n { top[n - 1].0 } else { f32::INFINITY };
+                        let Some(dist) = ops::sq_dist_pruned(sub, cb.word(c), limit) else {
+                            continue;
+                        };
+                        if top.len() == n {
+                            if dist >= top[n - 1].0 {
+                                continue;
+                            }
+                            top.pop();
+                        }
+                        let mut pos = top.len();
+                        while pos > 0 && dist < top[pos - 1].0 {
+                            pos -= 1;
+                        }
+                        top.insert(pos, (dist, c as u32));
+                    }
+                    for (m, &(dv, ci)) in top.iter().enumerate() {
+                        assign_chunk[row + m] = ci;
+                        dist_chunk[row + m] = dv;
                     }
                 }
                 AssignInit::Euclid | AssignInit::Cosine => {
@@ -207,6 +252,42 @@ mod tests {
         assert!((e[0] / e[1] - 2.0).abs() < 1e-6);
         assert!((e[1] / e[2] - 2.0).abs() < 1e-6);
         assert!((z[2]).abs() < 1e-7, "last logit is 0 by construction");
+    }
+
+    /// The pruned Euclid top-n scan (d >= PRUNE_MIN_D) must equal the
+    /// naive scratch + argmin_n reference bit for bit — duplicated
+    /// codewords and planted exact matches force argmin tie-breaks.
+    #[test]
+    fn pruned_topn_matches_scratch_reference() {
+        let mut rng = Rng::new(23);
+        let d = 10; // >= ops::PRUNE_MIN_D
+        let k = 24;
+        let mut words = vec![0.0f32; k * d];
+        rng.fill_normal(&mut words);
+        let dup: Vec<f32> = words[2 * d..3 * d].to_vec();
+        words[17 * d..18 * d].copy_from_slice(&dup); // exact duplicate pair
+        let c = Codebook::new(k, d, words);
+        let s = 120;
+        let mut flat = vec![0.0f32; s * d];
+        rng.fill_normal(&mut flat);
+        let w2: Vec<f32> = c.word(2).to_vec();
+        flat[7 * d..8 * d].copy_from_slice(&w2); // zero-distance tie
+        for n in [1usize, 3, 8] {
+            let mut r = Rng::new(5);
+            let got = candidates(&flat, &c, n, AssignInit::Euclid, &mut r);
+            for g in 0..s {
+                let sub = &flat[g * d..(g + 1) * d];
+                let scratch: Vec<f32> = (0..k).map(|cc| ops::sq_dist(sub, c.word(cc))).collect();
+                for (m, &cc) in ops::argmin_n(&scratch, n).iter().enumerate() {
+                    assert_eq!(got.assign[g * n + m], cc as u32, "n={n} g={g} m={m}");
+                    assert_eq!(
+                        got.dist[g * n + m].to_bits(),
+                        scratch[cc].to_bits(),
+                        "n={n} g={g} m={m} dist bits"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -7,10 +7,21 @@
 //! size, per-chunk float partials reduce in chunk order, and the pooled
 //! paths are bit-identical to serial at every thread count
 //! (property-tested in `rust/tests/prop_substrate.rs`).
+//!
+//! §Perf (specialized kernels): the fused streaming decode
+//! ([`Codebook::decode_packed_into`]) runs the word-level
+//! `vq::pack::unpack_range` and a small-`d` (1..=4) monomorphized
+//! gather; the nearest-codeword encode runs the norm-seeded
+//! partial-distance pruned scan (`tensor::ops::nearest_pruned`) at
+//! `d >= ops::PRUNE_MIN_D`.  Both keep their scalar originals —
+//! [`Codebook::decode_packed_into_reference`] and
+//! [`Codebook::encode_nearest_reference`] — as property-test ground
+//! truth and as the legacy side of the `fused_decode` / `encode_pruned`
+//! hotpath bench rows.
 
 use crate::tensor::ops;
 use crate::util::threadpool::{SyncPtr, ThreadPool};
-use crate::vq::pack::{unpack_range, PackedCodes};
+use crate::vq::pack::{unpack_range, unpack_range_reference, PackedCodes};
 
 /// Groups per scheduling chunk for the encode/decode sweeps.  Fixed —
 /// never derived from the worker count — so the error-partial grouping
@@ -27,17 +38,28 @@ pub struct Codebook {
     pub k: usize,
     pub d: usize,
     pub words: Vec<f32>, // len = k * d
+    /// Per-codeword squared norms, computed once at construction — the
+    /// seed input of the pruned nearest-codeword scan (§Perf).  Derived
+    /// from `words`, so it never goes stale: the only construction site
+    /// is [`Codebook::new`] and `words` is never mutated in place.
+    norms: Vec<f32>, // len = k
 }
 
 impl Codebook {
     pub fn new(k: usize, d: usize, words: Vec<f32>) -> Self {
         assert_eq!(words.len(), k * d, "codebook size mismatch");
         assert!(k > 0 && d > 0);
-        Codebook { k, d, words }
+        let norms = words.chunks_exact(d).map(|w| ops::dot(w, w)).collect();
+        Codebook { k, d, words, norms }
     }
 
     pub fn word(&self, i: usize) -> &[f32] {
         &self.words[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Precomputed squared norm of each codeword (len `k`).
+    pub fn norms(&self) -> &[f32] {
+        &self.norms
     }
 
     /// Storage cost in bytes at f32 (Table 1's `C` column).
@@ -69,12 +91,8 @@ impl Codebook {
         assert_eq!(out.len(), codes.len() * self.d, "decode output size");
         let s = codes.len();
 
-        let kernel = |start: usize, end: usize, dst: &mut [f32]| {
-            for (off, &c) in codes[start..end].iter().enumerate() {
-                let w = self.word(c as usize);
-                dst[off * self.d..(off + 1) * self.d].copy_from_slice(w);
-            }
-        };
+        let kernel =
+            |start: usize, end: usize, dst: &mut [f32]| self.gather(&codes[start..end], dst);
 
         match pool {
             Some(pool) if pool.threads() > 1 && s > CHUNK => {
@@ -98,12 +116,39 @@ impl Codebook {
         }
     }
 
+    /// The gather half of every decode: `dst[i] = words[codes[i]]`, with
+    /// dedicated small-`d` (1..=4) kernels that move a compile-time-sized
+    /// row instead of calling `copy_from_slice` with a runtime length —
+    /// pure copies either way, so the output is bit-identical to the
+    /// generic path.
+    fn gather(&self, codes: &[u32], dst: &mut [f32]) {
+        debug_assert_eq!(dst.len(), codes.len() * self.d);
+        match self.d {
+            1 => {
+                for (slot, &c) in dst.iter_mut().zip(codes) {
+                    *slot = self.words[c as usize];
+                }
+            }
+            2 => gather_fixed::<2>(&self.words, codes, dst),
+            3 => gather_fixed::<3>(&self.words, codes, dst),
+            4 => gather_fixed::<4>(&self.words, codes, dst),
+            d => {
+                for (row, &c) in dst.chunks_exact_mut(d).zip(codes) {
+                    row.copy_from_slice(&self.words[c as usize * d..(c as usize + 1) * d]);
+                }
+            }
+        }
+    }
+
     /// Fused unpack + decode of the packed code window `[start, end)`
     /// straight into `out` (`out.len() == (end - start) * d`) — the
-    /// serving engine's streaming path: no intermediate codes vector, no
-    /// weights allocation.  Works through a fixed stack buffer, and both
+    /// serving engine's streaming path (cache-miss decode and
+    /// `stream_batch` both land here): no intermediate codes vector, no
+    /// weights allocation.  Each stack-buffered chunk runs the word-level
+    /// [`unpack_range`] and then the small-`d`-specialized gather; both
     /// stages are pure copies, so the output is bit-identical to
-    /// `unpack_range` followed by [`Codebook::decode`].
+    /// `unpack_range` followed by [`Codebook::decode`] — and to the
+    /// retained [`Codebook::decode_packed_into_reference`].
     pub fn decode_packed_into(&self, p: &PackedCodes, start: usize, end: usize, out: &mut [f32]) {
         assert!(
             start <= end && end <= p.count,
@@ -118,6 +163,35 @@ impl Codebook {
             let e = (s + FUSE_CHUNK).min(end);
             let codes = &mut buf[..e - s];
             unpack_range(p, s, e, codes);
+            self.gather(codes, &mut out[(s - start) * self.d..(e - start) * self.d]);
+            s = e;
+        }
+    }
+
+    /// The retained scalar reference for [`Codebook::decode_packed_into`]:
+    /// bit-at-a-time unpack ([`unpack_range_reference`]) and the generic
+    /// per-code `copy_from_slice` — the property-test ground truth and
+    /// the legacy side of the `fused_decode` hotpath bench row.
+    pub fn decode_packed_into_reference(
+        &self,
+        p: &PackedCodes,
+        start: usize,
+        end: usize,
+        out: &mut [f32],
+    ) {
+        assert!(
+            start <= end && end <= p.count,
+            "window [{start}, {end}) out of the {}-code stream",
+            p.count
+        );
+        assert_eq!(out.len(), (end - start) * self.d, "decode_packed_into output size");
+        const FUSE_CHUNK: usize = 128;
+        let mut buf = [0u32; FUSE_CHUNK];
+        let mut s = start;
+        while s < end {
+            let e = (s + FUSE_CHUNK).min(end);
+            let codes = &mut buf[..e - s];
+            unpack_range_reference(p, s, e, codes);
             for (off, &c) in codes.iter().enumerate() {
                 let o = (s - start + off) * self.d;
                 out[o..o + self.d].copy_from_slice(self.word(c as usize));
@@ -208,6 +282,14 @@ impl Codebook {
     /// range and its own error-partial slot; the partials reduce in
     /// chunk order, so the f64 MSE is bit-identical at every thread
     /// count (both paths run the same chunked schedule).
+    ///
+    /// §Perf (pruned scan): at `d >= ops::PRUNE_MIN_D` the inner scan
+    /// runs [`ops::nearest_pruned`] — norm-seeded bound plus
+    /// partial-distance early exit — which is proven bit-identical
+    /// (codes, argmin tie-breaks, the f32 distance bits that feed the
+    /// f64 MSE partials) to the naive scan retained in
+    /// [`Codebook::encode_nearest_reference`]; smaller `d` keeps the
+    /// naive scan, where bail checks cost more than they save.
     pub fn encode_nearest_with(&self, flat: &[f32], pool: Option<&ThreadPool>) -> (f64, Vec<u32>) {
         assert_eq!(flat.len() % self.d, 0);
         let s = flat.len() / self.d;
@@ -217,21 +299,27 @@ impl Codebook {
         }
         let nchunks = (s + CHUNK - 1) / CHUNK;
         let mut errs = vec![0.0f64; nchunks];
+        let prune = self.d >= ops::PRUNE_MIN_D;
 
         let kernel = |start: usize, end: usize, codes_chunk: &mut [u32]| -> f64 {
             let mut local = 0.0f64;
             for (off, code) in codes_chunk.iter_mut().enumerate() {
                 let g = start + off;
                 let sub = &flat[g * self.d..(g + 1) * self.d];
-                let mut best = 0usize;
-                let mut best_d = f32::INFINITY;
-                for c in 0..self.k {
-                    let dist = ops::sq_dist(sub, self.word(c));
-                    if dist < best_d {
-                        best_d = dist;
-                        best = c;
+                let (best, best_d) = if prune {
+                    ops::nearest_pruned(sub, &self.words, &self.norms)
+                } else {
+                    let mut best = 0usize;
+                    let mut best_d = f32::INFINITY;
+                    for c in 0..self.k {
+                        let dist = ops::sq_dist(sub, self.word(c));
+                        if dist < best_d {
+                            best_d = dist;
+                            best = c;
+                        }
                     }
-                }
+                    (best, best_d)
+                };
                 *code = best as u32;
                 local += best_d as f64;
             }
@@ -262,6 +350,61 @@ impl Codebook {
         }
         let total: f64 = errs.iter().sum();
         (total / flat.len() as f64, codes)
+    }
+
+    /// The retained brute-force reference for
+    /// [`Codebook::encode_nearest_with`]: the full `O(s*k*d)` scan with
+    /// no pruning, over the identical serial chunk schedule (same CHUNK
+    /// grouping, f64 partials summed in chunk order) — so `(mse, codes)`
+    /// must match the pruned path bit for bit.  Property-tested against
+    /// adversarial near-tie codebooks in `rust/tests/prop_substrate.rs`
+    /// and benched as the legacy side of the `encode_pruned` row.
+    pub fn encode_nearest_reference(&self, flat: &[f32]) -> (f64, Vec<u32>) {
+        assert_eq!(flat.len() % self.d, 0);
+        let s = flat.len() / self.d;
+        let mut codes = vec![0u32; s];
+        if s == 0 {
+            return (0.0, codes);
+        }
+        let nchunks = (s + CHUNK - 1) / CHUNK;
+        let mut errs = vec![0.0f64; nchunks];
+        let mut start = 0;
+        while start < s {
+            let end = (start + CHUNK).min(s);
+            let mut local = 0.0f64;
+            for (off, code) in codes[start..end].iter_mut().enumerate() {
+                let g = start + off;
+                let sub = &flat[g * self.d..(g + 1) * self.d];
+                let mut best = 0usize;
+                let mut best_d = f32::INFINITY;
+                for c in 0..self.k {
+                    let dist = ops::sq_dist(sub, self.word(c));
+                    if dist < best_d {
+                        best_d = dist;
+                        best = c;
+                    }
+                }
+                *code = best as u32;
+                local += best_d as f64;
+            }
+            errs[start / CHUNK] = local;
+            start = end;
+        }
+        let total: f64 = errs.iter().sum();
+        (total / flat.len() as f64, codes)
+    }
+}
+
+/// Monomorphized fixed-width row copy for the small-`d` gather: the
+/// compiler moves `D` f32s with unrolled loads/stores instead of a
+/// runtime-length `memcpy` call per code.
+#[inline]
+fn gather_fixed<const D: usize>(words: &[f32], codes: &[u32], dst: &mut [f32]) {
+    for (row, &c) in dst.chunks_exact_mut(D).zip(codes) {
+        let base = c as usize * D;
+        let w: &[f32; D] = words[base..base + D].try_into().expect("codeword window");
+        let row: &mut [f32; D] = row.try_into().expect("gather output row");
+        *row = *w;
     }
 }
 
@@ -329,6 +472,63 @@ mod tests {
         // (0.5, 0.0) is 0.25 away (sq) from both (0,0) and (1,0).
         let (mse, _) = c.encode_nearest(&[0.5, 0.0]);
         assert!((mse - 0.125).abs() < 1e-7, "0.25 sq err over 2 weights");
+    }
+
+    #[test]
+    fn norms_cached_at_construction() {
+        let c = cb();
+        assert_eq!(c.norms(), &[0.0, 1.0, 1.0, 2.0]);
+    }
+
+    /// The pruned encode path (d >= PRUNE_MIN_D) must match the retained
+    /// brute-force reference bit for bit — including the f64 MSE, whose
+    /// partials it sums over the same chunk schedule.
+    #[test]
+    fn pruned_encode_matches_reference_at_large_d() {
+        let mut rng = Rng::new(37);
+        let d = 12; // >= ops::PRUNE_MIN_D: the pruned scan really runs
+        let mut words = vec![0.0f32; 32 * d];
+        rng.fill_normal(&mut words);
+        // Exact duplicate codeword -> argmin ties must break first-index.
+        let dup: Vec<f32> = words[3 * d..4 * d].to_vec();
+        words[19 * d..20 * d].copy_from_slice(&dup);
+        let c = Codebook::new(32, d, words);
+        let mut flat = vec![0.0f32; 300 * d];
+        rng.fill_normal(&mut flat);
+        // Plant exact codewords so zero-distance ties occur.
+        let w3: Vec<f32> = c.word(3).to_vec();
+        flat[5 * d..6 * d].copy_from_slice(&w3);
+        flat[250 * d..251 * d].copy_from_slice(&w3);
+        let (m_ref, c_ref) = c.encode_nearest_reference(&flat);
+        let (m_new, c_new) = c.encode_nearest_with(&flat, None);
+        assert_eq!(m_ref.to_bits(), m_new.to_bits(), "MSE diverged");
+        assert_eq!(c_ref, c_new, "codes diverged");
+        assert_eq!(c_new[5], 3, "duplicate-codeword tie must keep the first index");
+    }
+
+    /// The fused word-level + gathered decode must equal the retained
+    /// bit-loop reference across small-d specializations and widths.
+    #[test]
+    fn fused_decode_matches_reference_kernel() {
+        use crate::vq::pack::pack_codes;
+        let mut rng = Rng::new(41);
+        for d in [1usize, 2, 3, 4, 7] {
+            let mut words = vec![0.0f32; 16 * d];
+            rng.fill_normal(&mut words);
+            let c = Codebook::new(16, d, words);
+            let codes: Vec<u32> = (0..300).map(|_| rng.below(16) as u32).collect();
+            for bits in [4u32, 5, 13] {
+                let p = pack_codes(&codes, bits);
+                for (start, end) in [(0usize, 300usize), (17, 291), (297, 300)] {
+                    let mut fast = vec![0.0f32; (end - start) * d];
+                    let mut slow = vec![0.0f32; (end - start) * d];
+                    c.decode_packed_into(&p, start, end, &mut fast);
+                    c.decode_packed_into_reference(&p, start, end, &mut slow);
+                    let b = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                    assert_eq!(b(&fast), b(&slow), "d={d} bits={bits} [{start}, {end})");
+                }
+            }
+        }
     }
 
     #[test]

@@ -137,6 +137,13 @@ pub fn kmeans_with(
 /// disjoint `codes` range and its own error-partial slot; the partials
 /// are reduced in chunk order, making the f64 sum independent of worker
 /// scheduling.
+///
+/// §Perf: at `d >= ops::PRUNE_MIN_D` the inner scan is the norm-seeded
+/// pruned scan (`ops::nearest_pruned`, per-center squared norms computed
+/// once per sweep) — bit-identical to the naive scan retained for
+/// smaller `d` (codes, argmin tie-breaks, and the f32 distance bits
+/// feeding the chunk-ordered f64 partials), so the dispatch never
+/// changes results.
 fn assign_sweep(
     flat: &[f32],
     centers: &[f32],
@@ -151,21 +158,32 @@ fn assign_sweep(
     }
     let nchunks = (s + CHUNK - 1) / CHUNK;
     let mut errs = vec![0.0f64; nchunks];
+    let prune = d >= ops::PRUNE_MIN_D;
+    let norms: Vec<f32> = if prune {
+        centers.chunks_exact(d).map(|c| ops::dot(c, c)).collect()
+    } else {
+        Vec::new()
+    };
 
     let kernel = |start: usize, end: usize, codes_chunk: &mut [u32]| -> f64 {
         let mut local = 0.0f64;
         for (off, code) in codes_chunk.iter_mut().enumerate() {
             let g = start + off;
             let sub = &flat[g * d..(g + 1) * d];
-            let mut best = 0usize;
-            let mut best_d = f32::INFINITY;
-            for c in 0..k {
-                let dist = ops::sq_dist(sub, &centers[c * d..(c + 1) * d]);
-                if dist < best_d {
-                    best_d = dist;
-                    best = c;
+            let (best, best_d) = if prune {
+                ops::nearest_pruned(sub, centers, &norms)
+            } else {
+                let mut best = 0usize;
+                let mut best_d = f32::INFINITY;
+                for c in 0..k {
+                    let dist = ops::sq_dist(sub, &centers[c * d..(c + 1) * d]);
+                    if dist < best_d {
+                        best_d = dist;
+                        best = c;
+                    }
                 }
-            }
+                (best, best_d)
+            };
             *code = best as u32;
             local += best_d as f64;
         }
@@ -324,6 +342,31 @@ mod tests {
         let b = kmeans(&flat, 4, 8, &KmeansOpts::default());
         assert_eq!(a.codes, b.codes);
         assert_eq!(a.codebook.words, b.codebook.words);
+    }
+
+    /// At d >= PRUNE_MIN_D the sweep dispatches to the pruned scan; the
+    /// final assignments must still be exact brute-force nearest centers
+    /// (first index on ties).
+    #[test]
+    fn pruned_sweep_assignments_match_brute_force() {
+        let mut rng = Rng::new(9);
+        let d = 8;
+        let mut flat = vec![0.0f32; d * 300];
+        rng.fill_normal(&mut flat);
+        let res = kmeans(&flat, d, 10, &KmeansOpts::default());
+        for g in 0..300 {
+            let sub = &flat[g * d..(g + 1) * d];
+            let mut best = 0usize;
+            let mut best_d = f32::INFINITY;
+            for c in 0..res.codebook.k {
+                let dist = ops::sq_dist(sub, res.codebook.word(c));
+                if dist < best_d {
+                    best_d = dist;
+                    best = c;
+                }
+            }
+            assert_eq!(res.codes[g], best as u32, "group {g}");
+        }
     }
 
     #[test]

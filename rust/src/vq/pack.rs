@@ -10,6 +10,26 @@
 //! unpack chunks **on code boundaries** (a chunk starting at code `i`
 //! begins at bit offset `i * bits`, independent of the worker count), so
 //! the pooled path is bit-identical to serial at every thread count.
+//!
+//! §Perf (word-level unpack): [`unpack_range`] no longer walks the
+//! stream bit by bit.  A code at index `i` occupies bits
+//! `[i*bits, (i+1)*bits)` of the little-endian stream; with `bits <= 32`
+//! and a byte offset of at most 7, those bits always sit inside the 8
+//! bytes starting at `i*bits/8`:
+//!
+//! ```text
+//! data:   ... [b] [b+1] [b+2] [b+3] [b+4] [b+5] [b+6] [b+7] ...
+//!              └─────────── u64 window (LE load) ──────────┘
+//! code i:      ····xxxxx·······   = (window >> (bitpos & 7)) & mask
+//! ```
+//!
+//! so one load + one shift + one mask replaces the per-bit loop.
+//! Byte-aligned widths (8/16/32) read whole lanes, sub-byte powers of
+//! two (1/2/4) read one byte, and the stream-end tail (where an 8-byte
+//! window would run past the buffer) reads through a zero-padded stack
+//! copy.  The original scalar loop is retained as
+//! [`unpack_range_reference`] — the property-test ground truth and the
+//! legacy side of the `unpack_wordwise` bench row.
 
 use crate::util::threadpool::{SyncPtr, ThreadPool};
 
@@ -61,7 +81,106 @@ pub fn pack_codes(codes: &[u32], bits: u32) -> PackedCodes {
 /// This is the chunk kernel of the parallel bulk unpack and the serving
 /// batched-decode row reader: because the stream is fixed-width, the
 /// read starts at the statically known bit offset `start * bits`.
+///
+/// §Perf: dispatches on the width — byte-aligned widths (8/16/32) read
+/// whole little-endian lanes, sub-byte power-of-two widths (1/2/4) never
+/// straddle a byte so a single byte load suffices, and every other width
+/// runs the branchless word-level kernel (one `u64` window load + one
+/// shift + one mask per code).  Every path is bit-identical to the
+/// retained scalar reference [`unpack_range_reference`] — unpack is
+/// exact integer work, and the property suite proves it at widths
+/// 1..=32 over arbitrary windows and stream-end tails.
 pub fn unpack_range(p: &PackedCodes, start: usize, end: usize, dst: &mut [u32]) {
+    assert!(start <= end && end <= p.count, "range [{start}, {end}) out of {}", p.count);
+    assert_eq!(dst.len(), end - start, "unpack_range dst size");
+    match p.bits {
+        8 => {
+            for (i, slot) in dst.iter_mut().enumerate() {
+                *slot = p.data[start + i] as u32;
+            }
+        }
+        16 => {
+            for (i, slot) in dst.iter_mut().enumerate() {
+                let b = (start + i) * 2;
+                *slot = u16::from_le_bytes([p.data[b], p.data[b + 1]]) as u32;
+            }
+        }
+        32 => {
+            for (i, slot) in dst.iter_mut().enumerate() {
+                let b = (start + i) * 4;
+                let w = [p.data[b], p.data[b + 1], p.data[b + 2], p.data[b + 3]];
+                *slot = u32::from_le_bytes(w);
+            }
+        }
+        1 | 2 | 4 => {
+            // Sub-byte powers of two divide 8: a code never straddles a
+            // byte boundary, so one byte load + shift + mask per code.
+            let bits = p.bits as usize;
+            let mask = (1u32 << bits) - 1;
+            let per_byte = 8 / bits;
+            for (i, slot) in dst.iter_mut().enumerate() {
+                let idx = start + i;
+                *slot = ((p.data[idx / per_byte] as u32) >> ((idx % per_byte) * bits)) & mask;
+            }
+        }
+        _ => unpack_range_wordwise(p, start, end, dst),
+    }
+}
+
+/// Load the little-endian `u64` window starting at byte `byte`,
+/// zero-padding past the stream end — the tail-safe load shared by
+/// [`unpack_one`] and the wordwise kernel's tail loop.  Callers
+/// guarantee `byte < data.len()` (the code's own bits are in range;
+/// only window padding is ever synthetic).
+#[inline]
+fn load_window(data: &[u8], byte: usize) -> u64 {
+    if byte + 8 <= data.len() {
+        u64::from_le_bytes(data[byte..byte + 8].try_into().expect("8-byte window"))
+    } else {
+        let mut buf = [0u8; 8];
+        buf[..data.len() - byte].copy_from_slice(&data[byte..]);
+        u64::from_le_bytes(buf)
+    }
+}
+
+/// General-width word-level kernel: each code's `bits` (< 32 here, so at
+/// most 7 + 31 = 38 window bits) live inside the 8 bytes starting at
+/// `bitpos / 8`, so one little-endian `u64` load, one shift, and one
+/// mask produce the code — no per-bit loop, no branches in the main
+/// body.  The range is split so the main loop's 8-byte load is always in
+/// bounds; the few codes near the stream end read through the
+/// zero-padded [`load_window`] instead.
+fn unpack_range_wordwise(p: &PackedCodes, start: usize, end: usize, dst: &mut [u32]) {
+    let bits = p.bits as usize;
+    debug_assert!(bits < 32 && !matches!(bits, 1 | 2 | 4 | 8 | 16));
+    let mask = (1u64 << bits) - 1;
+    let data = &p.data;
+    // Largest code index whose 8-byte window fits: idx*bits/8 + 8 <= len
+    // <=> idx*bits < (len - 7) * 8  <=>  idx <= ((len - 7) * 8 - 1) / bits.
+    let fit = if data.len() >= 8 {
+        (((data.len() - 7) * 8 - 1) / bits + 1).min(end).max(start)
+    } else {
+        start
+    };
+    let mut bitpos = start * bits;
+    for slot in dst[..fit - start].iter_mut() {
+        let byte = bitpos >> 3;
+        let w = u64::from_le_bytes(data[byte..byte + 8].try_into().expect("8-byte window"));
+        *slot = ((w >> (bitpos & 7)) & mask) as u32;
+        bitpos += bits;
+    }
+    for slot in dst[fit - start..].iter_mut() {
+        let w = load_window(data, bitpos >> 3);
+        *slot = ((w >> (bitpos & 7)) & mask) as u32;
+        bitpos += bits;
+    }
+}
+
+/// The retained scalar reference for [`unpack_range`]: the original
+/// byte/bit-at-a-time loop.  Kept as the ground truth the word-level
+/// kernels are property-tested against (`rust/tests/prop_substrate.rs`)
+/// and as the legacy side of the `unpack_wordwise` hotpath bench row.
+pub fn unpack_range_reference(p: &PackedCodes, start: usize, end: usize, dst: &mut [u32]) {
     assert!(start <= end && end <= p.count, "range [{start}, {end}) out of {}", p.count);
     assert_eq!(dst.len(), end - start, "unpack_range dst size");
     let bits = p.bits as usize;
@@ -119,12 +238,16 @@ pub fn unpack_codes_into(p: &PackedCodes, dst: &mut [u32], pool: Option<&ThreadP
 }
 
 /// Unpack a single code at index `i` without touching the rest — the
-/// serving random-access path.
+/// serving random-access path.  One bounds check and one word load: this
+/// no longer routes through [`unpack_range`], whose range/size asserts
+/// (and width dispatch) are pure overhead for a single code.
 pub fn unpack_one(p: &PackedCodes, i: usize) -> u32 {
-    assert!(i < p.count);
-    let mut out = [0u32];
-    unpack_range(p, i, i + 1, &mut out);
-    out[0]
+    assert!(i < p.count, "unpack_one: index {i} out of {}", p.count);
+    let bits = p.bits as usize;
+    let mask = if p.bits == 32 { u64::from(u32::MAX) } else { (1u64 << bits) - 1 };
+    let bitpos = i * bits;
+    let w = load_window(&p.data, bitpos >> 3);
+    ((w >> (bitpos & 7)) & mask) as u32
 }
 
 impl PackedCodes {
@@ -256,6 +379,62 @@ mod tests {
             let p = pack_codes(&codes, bits);
             assert_eq!(unpack_codes_with(&p, Some(&pool)), codes, "bits={bits}");
         }
+    }
+
+    /// The word-level dispatch must agree with the retained scalar
+    /// reference at every width — including the byte-aligned and
+    /// power-of-two fast paths — on windows that end at the stream tail
+    /// (where the 8-byte load would run past the buffer).
+    #[test]
+    fn wordwise_unpack_matches_reference_at_every_width() {
+        let mut rng = Rng::new(21);
+        for bits in 1..=32u32 {
+            let mask = if bits == 32 { u32::MAX } else { (1 << bits) - 1 };
+            for count in [1usize, 2, 7, 65, 300] {
+                let codes: Vec<u32> =
+                    (0..count).map(|_| (rng.next_u64() as u32) & mask).collect();
+                let p = pack_codes(&codes, bits);
+                let windows = [
+                    (0usize, count),
+                    (count / 3, count),
+                    (count.saturating_sub(2), count),
+                    (0, count / 2),
+                ];
+                for (start, end) in windows {
+                    let mut fast = vec![0u32; end - start];
+                    let mut slow = vec![0u32; end - start];
+                    unpack_range(&p, start, end, &mut fast);
+                    unpack_range_reference(&p, start, end, &mut slow);
+                    assert_eq!(fast, slow, "bits={bits} count={count} [{start}, {end})");
+                }
+            }
+        }
+    }
+
+    /// Regression for the `unpack_one` fast path: single-code reads at
+    /// the stream end exercise the zero-padded tail load, and every
+    /// index must agree with the packed values at tail-heavy counts.
+    #[test]
+    fn unpack_one_direct_word_load_is_tail_safe() {
+        let mut rng = Rng::new(22);
+        for bits in [1u32, 3, 5, 8, 13, 16, 31, 32] {
+            let mask = if bits == 32 { u32::MAX } else { (1 << bits) - 1 };
+            for count in 1..=9usize {
+                let codes: Vec<u32> =
+                    (0..count).map(|_| (rng.next_u64() as u32) & mask).collect();
+                let p = pack_codes(&codes, bits);
+                for (i, &c) in codes.iter().enumerate() {
+                    assert_eq!(unpack_one(&p, i), c, "bits={bits} count={count} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of")]
+    fn unpack_one_rejects_out_of_range_index() {
+        let p = pack_codes(&[1u32, 2], 3);
+        unpack_one(&p, 2);
     }
 
     #[test]

@@ -158,7 +158,7 @@ fn multi_net_server_interleaves_without_cross_talk() {
 #[test]
 fn tcp_server_answers_over_loopback() {
     use std::net::{TcpListener, TcpStream};
-    use vq4all::serving::tcp::{client_request, Shutdown, TcpServer};
+    use vq4all::serving::tcp::{client_request, client_stats, Shutdown, TcpServer};
 
     let Some(c) = campaign(4) else { return };
     let res = c.construct("mini_mlp").unwrap();
@@ -190,6 +190,20 @@ fn tcp_server_answers_over_loopback() {
         // Unknown network -> structured error, connection stays usable.
         let resp = client_request(&mut conn, "ghost", 0).unwrap();
         assert!(!resp.req_bool("ok").unwrap());
+        // The /stats verb answers on the same connection with the
+        // plane's admission + decode-throughput counters.
+        let stats = client_stats(&mut conn).unwrap();
+        assert!(stats.req_bool("ok").unwrap() && stats.req_bool("stats").unwrap());
+        assert_eq!(stats.req_usize("accepted").unwrap(), 10);
+        assert_eq!(stats.req_usize("dispatched").unwrap(), 10);
+        assert_eq!(stats.req_usize("shed").unwrap(), 0);
+        assert!(
+            stats.req_usize("rows_decoded").unwrap() + stats.req_usize("rows_from_cache").unwrap()
+                > 0,
+            "decode-throughput counters must be live"
+        );
+        let per_net = stats.req("per_net").unwrap().get("mini_mlp").expect("hosted net entry");
+        assert_eq!(per_net.req_usize("served").unwrap(), 10);
         sd.trigger();
         let _ = TcpStream::connect(&addr2); // wake the acceptor
         oks

@@ -20,7 +20,9 @@ use vq4all::util::rng::Rng;
 use vq4all::util::threadpool::ThreadPool;
 use vq4all::vq::assign::{candidates, candidates_with, AssignInit};
 use vq4all::vq::kmeans::{kmeans, KmeansOpts};
-use vq4all::vq::pack::{pack_codes, unpack_codes, unpack_codes_with, unpack_one, unpack_range};
+use vq4all::vq::pack::{
+    pack_codes, unpack_codes, unpack_codes_with, unpack_one, unpack_range, unpack_range_reference,
+};
 use vq4all::vq::Codebook;
 use vq4all::{prop_assert, prop_assert_eq};
 
@@ -160,7 +162,8 @@ fn kmeans_mse_never_increases_with_k_and_beats_random_codebook() {
 #[test]
 fn parallel_candidates_and_kmeans_are_bit_identical_to_serial() {
     proptest(|g| {
-        let d = [1usize, 2, 4][g.usize_in(0, 2)];
+        // d = 8 draws the pruned-scan dispatch into the contract too.
+        let d = [1usize, 2, 4, 8][g.usize_in(0, 3)];
         let s = g.usize_in(1, 400);
         let k = g.usize_in(2, 24);
         let n = g.usize_in(1, k);
@@ -253,6 +256,231 @@ fn pack_unpack_roundtrip_and_parallel_unpack_identical() {
     });
 }
 
+/// Tentpole (word-level unpack): the specialized [`unpack_range`]
+/// dispatch — byte-aligned lanes, sub-byte power-of-two loads, and the
+/// general u64-window kernel — must be bit-identical to the retained
+/// scalar reference at widths 1..=32 (biased to the awkward 3/5/7/13),
+/// over stream lengths that include the pooled chunk boundary (1024
+/// codes) and end-of-stream tails where the 8-byte window load must
+/// zero-pad, on arbitrary sub-windows.  `unpack_one`'s direct word load
+/// rides the same draws.
+#[test]
+fn wordwise_unpack_bit_identical_to_scalar_reference() {
+    proptest(|g| {
+        let bits = if g.bool() {
+            [3u32, 5, 7, 13][g.usize_in(0, 3)]
+        } else {
+            g.usize_in(1, 32) as u32
+        };
+        let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+        let len = match g.usize_in(0, 3) {
+            0 => g.usize_in(0, 16),       // tiny, incl. empty: all-tail streams
+            1 => g.usize_in(1020, 1030),  // the UNPACK_CHUNK boundary
+            2 => 2048 + g.usize_in(0, 7), // exact multiples + small tails
+            _ => g.usize_in(0, 3000),
+        };
+        let codes: Vec<u32> = (0..len).map(|_| (g.rng.next_u64() as u32) & mask).collect();
+        let p = pack_codes(&codes, bits);
+
+        let mut windows = vec![(0usize, len)];
+        if len > 0 {
+            let a = g.usize_in(0, len - 1);
+            windows.push((a, g.usize_in(a, len)));
+            // The end-of-stream tail: the last few codes force the
+            // zero-padded window load.
+            windows.push((len - g.usize_in(1, 9).min(len), len));
+        }
+        for (start, end) in windows {
+            let mut fast = vec![0u32; end - start];
+            let mut slow = vec![0u32; end - start];
+            unpack_range(&p, start, end, &mut fast);
+            unpack_range_reference(&p, start, end, &mut slow);
+            prop_assert!(fast == slow, "bits={bits} len={len} [{start}, {end}) diverged");
+            prop_assert_eq!(fast, codes[start..end].to_vec());
+        }
+        if len > 0 {
+            for _ in 0..4 {
+                let i = g.usize_in(0, len - 1);
+                prop_assert_eq!(unpack_one(&p, i), codes[i]);
+            }
+            prop_assert_eq!(unpack_one(&p, len - 1), codes[len - 1]);
+        }
+        Ok(())
+    });
+}
+
+/// Tentpole (fused decode): the wordwise + small-d-gather streaming
+/// decode must equal the retained reference kernel bit for bit across
+/// the gather specializations (d = 1..=4) and the generic path.
+#[test]
+fn fused_wordwise_decode_bit_identical_to_reference() {
+    proptest(|g| {
+        let d = [1usize, 2, 3, 4, 7][g.usize_in(0, 4)];
+        let k = g.usize_in(2, 32);
+        let idx_bits = (usize::BITS - (k - 1).leading_zeros()).max(1);
+        let biased = if g.bool() {
+            [3u32, 5, 7, 13][g.usize_in(0, 3)]
+        } else {
+            g.usize_in(1, 32) as u32
+        };
+        let bits = biased.max(idx_bits);
+        let cb = Codebook::new(k, d, g.vec_normal((k * d)..=(k * d)));
+        let len = g.usize_in(0, 600);
+        let codes: Vec<u32> = (0..len).map(|_| g.u32_below(k as u32)).collect();
+        let p = pack_codes(&codes, bits);
+        let (start, end) = if len == 0 {
+            (0, 0)
+        } else {
+            let a = g.usize_in(0, len - 1);
+            (a, g.usize_in(a, len))
+        };
+        let mut fast = vec![0.0f32; (end - start) * d];
+        let mut slow = vec![0.0f32; (end - start) * d];
+        cb.decode_packed_into(&p, start, end, &mut fast);
+        cb.decode_packed_into_reference(&p, start, end, &mut slow);
+        let fb = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        prop_assert!(
+            fb(&fast) == fb(&slow),
+            "d={d} bits={bits} [{start}, {end}) fused decode diverged"
+        );
+        Ok(())
+    });
+}
+
+/// Tentpole (pruned encode): the norm-seeded partial-distance scan must
+/// agree with the retained brute-force reference on (codes, f64 MSE
+/// bits, argmin tie-breaks) — on adversarial near-tie codebooks
+/// (duplicated codewords, data points planted exactly on codewords so
+/// zero-distance ties occur), serial and pooled, across the dispatch
+/// threshold (d below and at/above PRUNE_MIN_D).
+#[test]
+fn pruned_encode_bit_identical_to_brute_reference() {
+    let pool = ThreadPool::new(4);
+    proptest(|g| {
+        let d = [1usize, 2, 4, 8, 12, 16, 19][g.usize_in(0, 6)];
+        let k = g.usize_in(2, 40);
+        let mut words = g.vec_normal((k * d)..=(k * d));
+        if g.bool() {
+            // Exact duplicate codewords: ties must break first-index.
+            for _ in 0..g.usize_in(1, 4) {
+                let src = g.usize_in(0, k - 1);
+                let dst = g.usize_in(0, k - 1);
+                let row: Vec<f32> = words[src * d..(src + 1) * d].to_vec();
+                words[dst * d..(dst + 1) * d].copy_from_slice(&row);
+            }
+        }
+        let cb = Codebook::new(k, d, words);
+        let s = g.usize_in(0, 300);
+        let mut flat = g.vec_normal((s * d)..=(s * d));
+        if s > 0 {
+            // Plant exact codewords: distance 0, duplicated -> exact tie.
+            for _ in 0..g.usize_in(0, 8) {
+                let gi = g.usize_in(0, s - 1);
+                let c = g.usize_in(0, k - 1);
+                let w: Vec<f32> = cb.word(c).to_vec();
+                flat[gi * d..(gi + 1) * d].copy_from_slice(&w);
+            }
+        }
+        let (m_ref, c_ref) = cb.encode_nearest_reference(&flat);
+        let (m_ser, c_ser) = cb.encode_nearest_with(&flat, None);
+        prop_assert!(m_ref.to_bits() == m_ser.to_bits(), "serial MSE diverged (d={d})");
+        prop_assert_eq!(c_ref.clone(), c_ser);
+        let (m_par, c_par) = cb.encode_nearest_with(&flat, Some(&pool));
+        prop_assert!(m_ref.to_bits() == m_par.to_bits(), "pooled MSE diverged (d={d})");
+        prop_assert_eq!(c_ref, c_par);
+        Ok(())
+    });
+}
+
+/// Tentpole (pruned top-n assign): the Euclid candidate sweep must equal
+/// the naive scratch-table + `argmin_n` reference — index tie-breaks
+/// included — on both sides of the dispatch threshold, with the pooled
+/// sweep identical to serial.
+#[test]
+fn pruned_assign_topn_matches_scratch_argmin_reference() {
+    let pool = ThreadPool::new(4);
+    proptest(|g| {
+        let d = [2usize, 8, 12, 16][g.usize_in(0, 3)];
+        let k = g.usize_in(2, 24);
+        let mut words = g.vec_normal((k * d)..=(k * d));
+        if g.bool() {
+            let src = g.usize_in(0, k - 1);
+            let dst = g.usize_in(0, k - 1);
+            let row: Vec<f32> = words[src * d..(src + 1) * d].to_vec();
+            words[dst * d..(dst + 1) * d].copy_from_slice(&row);
+        }
+        let cb = Codebook::new(k, d, words);
+        let s = g.usize_in(1, 150);
+        let mut flat = g.vec_normal((s * d)..=(s * d));
+        for _ in 0..g.usize_in(0, 4) {
+            let gi = g.usize_in(0, s - 1);
+            let c = g.usize_in(0, k - 1);
+            let w: Vec<f32> = cb.word(c).to_vec();
+            flat[gi * d..(gi + 1) * d].copy_from_slice(&w);
+        }
+        let n = g.usize_in(1, k);
+        let seed = g.rng.next_u64();
+        let mut r = Rng::new(seed);
+        let got = candidates(&flat, &cb, n, AssignInit::Euclid, &mut r);
+        for gi in 0..s {
+            let sub = &flat[gi * d..(gi + 1) * d];
+            let scratch: Vec<f32> = (0..k).map(|c| ops::sq_dist(sub, cb.word(c))).collect();
+            for (m, &c) in ops::argmin_n(&scratch, n).iter().enumerate() {
+                prop_assert!(got.assign[gi * n + m] == c as u32, "g={gi} m={m} index diverged");
+                prop_assert!(
+                    got.dist[gi * n + m].to_bits() == scratch[c].to_bits(),
+                    "g={gi} m={m} dist bits diverged"
+                );
+            }
+        }
+        let mut r2 = Rng::new(seed);
+        let pooled = candidates_with(&flat, &cb, n, AssignInit::Euclid, &mut r2, Some(&pool));
+        prop_assert_eq!(got.assign, pooled.assign);
+        let fb = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        prop_assert_eq!(fb(&got.dist), fb(&pooled.dist));
+        Ok(())
+    });
+}
+
+/// Tentpole (pruned nearest scan, the k-means kernel): `nearest_pruned`
+/// must equal the naive first-min scan bit for bit — argmin index,
+/// distance bits, first-index tie-breaks — for arbitrary shapes and
+/// planted exact ties.
+#[test]
+fn nearest_pruned_bit_identical_to_naive_first_min_scan() {
+    proptest(|g| {
+        let d = g.usize_in(1, 24);
+        let k = g.usize_in(1, 40);
+        let mut words = g.vec_normal((k * d)..=(k * d));
+        if g.bool() && k >= 2 {
+            let src = g.usize_in(0, k - 1);
+            let dst = g.usize_in(0, k - 1);
+            let row: Vec<f32> = words[src * d..(src + 1) * d].to_vec();
+            words[dst * d..(dst + 1) * d].copy_from_slice(&row);
+        }
+        let sub: Vec<f32> = if g.bool() {
+            let c = g.usize_in(0, k - 1);
+            words[c * d..(c + 1) * d].to_vec()
+        } else {
+            g.vec_normal(d..=d)
+        };
+        let norms: Vec<f32> = words.chunks_exact(d).map(|w| ops::dot(w, w)).collect();
+        let (gi, gd) = ops::nearest_pruned(&sub, &words, &norms);
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for c in 0..k {
+            let dist = ops::sq_dist(&sub, &words[c * d..(c + 1) * d]);
+            if dist < best_d {
+                best_d = dist;
+                best = c;
+            }
+        }
+        prop_assert!(gi == best, "argmin diverged (d={d}, k={k}): {gi} vs {best}");
+        prop_assert!(gd.to_bits() == best_d.to_bits(), "distance bits diverged (d={d}, k={k})");
+        Ok(())
+    });
+}
+
 /// The decode-side determinism contract (tentpole of the parallel
 /// serving path): pooled `encode_nearest` / `decode` / `decode_weighted`
 /// are bit-identical to serial — including the f64 MSE reduction, which
@@ -260,7 +488,8 @@ fn pack_unpack_roundtrip_and_parallel_unpack_identical() {
 #[test]
 fn parallel_encode_decode_paths_bit_identical_to_serial() {
     proptest(|g| {
-        let d = [1usize, 2, 4][g.usize_in(0, 2)];
+        // d = 8 draws the pruned-scan dispatch into the contract too.
+        let d = [1usize, 2, 4, 8][g.usize_in(0, 3)];
         let k = g.usize_in(2, 24);
         let s = g.usize_in(1, 400);
         let threads = g.usize_in(2, 8);

@@ -19,12 +19,18 @@
 #
 # The hotpath bench writes serial-vs-parallel comparisons for the VQ and
 # serving hot paths plus the serving-engine rows (cold-vs-warm decode
-# cache, 1-vs-N shards, bounded-vs-unbounded admission).  Gates:
+# cache, 1-vs-N shards, bounded-vs-unbounded admission) and the
+# legacy-vs-specialized kernel rows (word-level unpack, pruned encode,
+# fused decode).  Gates:
 #   * any comparison row measured on >= 2 worker threads below 1.0x FAILS
+#   * the kernel rows (unpack_wordwise, encode_pruned, fused_decode) must
+#     exist and hold >= 1.0x at ANY thread count (they compare two
+#     single-threaded kernels, so thread count is irrelevant)
 #   * the engine summary must exist with cache hit_rate > 0,
 #     engine_cache >= 1.0x (warm never slower than cold, any thread
-#     count), and admission conservation
-#     (admission_accepted == admission_dispatched + admission_shed > 0)
+#     count), admission conservation
+#     (admission_accepted == admission_dispatched + admission_shed > 0),
+#     and absolute throughput keys rows_per_sec / codes_per_sec > 0
 #   * --check-json additionally FAILS if the fresh report lost any
 #     comparison row or engine-summary key the committed baseline lists
 # Exit-code contract (the PR-4 bugfix): once the bench has PASSed, the
@@ -139,14 +145,18 @@ sys.exit(1 if (bad or not comps) else 0)
 EOF
     then speedup_status=PASS; else speedup_status=FAIL; fi
 
-    # Engine smoke: the serving-engine rows must exist; the warm-cache
-    # row must show hit_rate > 0 and warm >= cold throughput (thread-
-    # count independent, so it gates even on single-core runners); the
-    # admission summary must conserve (accepted == dispatched + shed)
-    # with a nonzero shed from the bounded run.  The shard/admission
-    # rows additionally ride the generic >= 1.0x multi-thread gate.
+    # Engine + kernel smoke: the serving-engine rows must exist; the
+    # warm-cache row must show hit_rate > 0 and warm >= cold throughput
+    # (thread-count independent, so it gates even on single-core
+    # runners); the admission summary must conserve (accepted ==
+    # dispatched + shed) with a nonzero shed from the bounded run; the
+    # absolute-throughput keys must be present and positive; and the
+    # legacy-vs-specialized kernel rows must exist and hold >= 1.0x at
+    # any thread count (specialized kernels never slower than the
+    # retained references).  The shard/admission rows additionally ride
+    # the generic >= 1.0x multi-thread gate.
     echo
-    echo "== engine smoke: decode cache + shards + admission =="
+    echo "== engine + kernel smoke: decode cache + shards + admission + specialized kernels =="
     if VQ4ALL_GATE_JSON="$bench_json" python3 - <<'EOF'
 import json, os, sys
 doc = json.load(open(os.environ["VQ4ALL_GATE_JSON"]))
@@ -176,6 +186,13 @@ else:
         bad = bad or not (conserves and nonzero)
         print(f"  {tag:<10} admission {int(acc)} accepted == {int(disp)} dispatched "
               f"+ {int(shed)} shed (conservation; bounded run must shed)")
+    for key in ("rows_per_sec", "codes_per_sec"):
+        v = eng.get(key)
+        if v is None or v <= 0:
+            print(f"  REGRESSION absolute throughput key {key!r} missing or <= 0: {v}")
+            bad = True
+        else:
+            print(f"  {'ok':<10} engine {key} = {v:.0f} (absolute, machine-local)")
 for name in ("engine_cache", "engine_shards", "engine_admission"):
     c = comps.get(name)
     if c is None:
@@ -190,6 +207,17 @@ for name in ("engine_cache", "engine_shards", "engine_admission"):
     else:
         print(f"  {'ok':<10} {name:<22} {c['speedup']:.2f}x over {c['threads']} threads "
               "(gated by the generic >= 1.0x rule)")
+for name in ("unpack_wordwise", "encode_pruned", "fused_decode"):
+    c = comps.get(name)
+    if c is None:
+        print(f"  REGRESSION kernel row {name!r} missing")
+        bad = True
+        continue
+    ok = c["speedup"] >= 1.0
+    tag = "ok" if ok else "REGRESSION"
+    bad = bad or not ok
+    print(f"  {tag:<10} {name:<22} legacy/specialized {c['speedup']:.2f}x "
+          "(must be >= 1.0 at any thread count)")
 sys.exit(1 if bad else 0)
 EOF
     then engine_status=PASS; else engine_status=FAIL; fi
@@ -235,7 +263,7 @@ echo
 echo "== summary (mode: $mode; tier-1 last) =="
 echo "  perf smoke (hotpath bench):   $bench_status"
 echo "  speedup >= 1.0x gate:         $speedup_status"
-echo "  engine smoke (cache+shards+admission): $engine_status"
+echo "  engine+kernel smoke (cache+shards+admission+specialized): $engine_status"
 echo "  check-json baseline diff:     $diff_status"
 echo "  tier-1: cargo build:          $build_status"
 echo "  tier-1: cargo test:           $test_status"
