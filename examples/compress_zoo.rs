@@ -57,9 +57,8 @@ fn main() -> anyhow::Result<()> {
         .collect();
 
     println!(
-        "platform: {} | zoo: {:?}",
-        campaign.rt.platform(),
-        nets
+        "platform: {} | zoo: {nets:?}",
+        campaign.rt.platform()
     );
     println!(
         "universal codebook: {}x{} = {} KiB, frozen (ROM-resident)",
@@ -107,11 +106,10 @@ fn main() -> anyhow::Result<()> {
     let zoo_ratio =
         total_float as f64 / (total_packed + result.codebook_bytes) as f64;
     println!(
-        "\nzoo totals: float {:.2} MiB -> packed {:.2} MiB + one {:.2} MiB ROM codebook = {:.1}x whole-zoo compression",
+        "\nzoo totals: float {:.2} MiB -> packed {:.2} MiB + one {:.2} MiB ROM codebook = {zoo_ratio:.1}x whole-zoo compression",
         total_float as f64 / (1 << 20) as f64,
         total_packed as f64 / (1 << 20) as f64,
-        result.codebook_bytes as f64 / (1 << 20) as f64,
-        zoo_ratio
+        result.codebook_bytes as f64 / (1 << 20) as f64
     );
 
     // Stage 4 — codebook I/O under a task-switch storm for THIS zoo's

@@ -136,11 +136,8 @@ fn main() -> anyhow::Result<()> {
     }
     let drained = server.drain_all()?;
     println!(
-        "\nserved {} of {} requests ({} shed at admission, {} drained at shutdown) across {} networks",
+        "\nserved {} of {submitted} requests ({shed} shed at admission, {drained} drained at shutdown) across {} networks",
         submitted as u64 - shed,
-        submitted,
-        shed,
-        drained,
         nets.len()
     );
 
@@ -149,8 +146,7 @@ fn main() -> anyhow::Result<()> {
         // Bounded latency summary: percentiles come from the reservoir,
         // not an unbounded per-request log.
         println!(
-            "  {:<18} {:>6}  {:>7}  {:>9.2}  {:>11.1}  {:>11.1}",
-            name,
+            "  {name:<18} {:>6}  {:>7}  {:>9.2}  {:>11.1}  {:>11.1}",
             st.served,
             st.batches,
             st.served as f64 / st.batches.max(1) as f64,

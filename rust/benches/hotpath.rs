@@ -495,11 +495,10 @@ fn main() -> anyhow::Result<()> {
         ("admission_peak_depth", Json::num(admission.peak_depth as f64)),
     ]);
     println!(
-        "engine summary: hit_rate {:.3} over {} lookups, {} shards in the sharded row, \
+        "engine summary: hit_rate {:.3} over {} lookups, {engine_shards} shards in the sharded row, \
          {} shed under the bounded queue",
         cache_stats.hit_rate(),
         cache_stats.lookups,
-        engine_shards,
         admission.shed
     );
     let json_path = std::env::var("VQ4ALL_BENCH_JSON")

@@ -36,9 +36,7 @@ fn main() -> anyhow::Result<()> {
     let area = AreaModel::default();
     let (sram, rom_mm2) = area.compare(5 * 20 * 256 * 1024, 2 << 20);
     println!(
-        "\nsilicon area (7nm): per-layer SRAM-resident {:.3} mm^2 vs universal ROM {:.4} mm^2 ({:.0}x)",
-        sram,
-        rom_mm2,
+        "\nsilicon area (7nm): per-layer SRAM-resident {sram:.3} mm^2 vs universal ROM {rom_mm2:.4} mm^2 ({:.0}x)",
         sram / rom_mm2
     );
     Ok(())

@@ -1,0 +1,292 @@
+//! `vq4all-audit` — repo-native static analysis for the crate's unsafe
+//! and perf-gate contracts.
+//!
+//! The whole perf story of this crate rests on conventions that used to
+//! live only in comments: every `unsafe` `SyncPtr` write from
+//! `ThreadPool::parallel_for` hits a disjoint chunk, and every
+//! specialized kernel keeps a retained `*_reference`, a property test,
+//! and a gated bench row.  This module machine-checks those conventions
+//! over the source tree (std-only — the container is offline, so no
+//! syn/proc-macro machinery):
+//!
+//! * [`scan`] — a small line-level Rust scanner (comments, strings,
+//!   char-vs-lifetime) producing per-line code/comment parts;
+//! * [`rules`] — the four contract rules: `safety-comment`,
+//!   `unsafe-allowlist`, `reference-manifest`, `float-accumulation`;
+//! * [`run_audit`] / [`audit_sources`] — the tree walker and the
+//!   in-memory entry point (the latter is what the negative tests use).
+//!
+//! The CLI driver is `rust/src/bin/audit.rs` (`cargo run --bin audit`,
+//! or `scripts/verify.sh --audit`).  The dynamic counterpart — the
+//! `race-audit` cargo feature that shadow-checks actual `SyncPtr` write
+//! ranges at every `parallel_for` join — lives in
+//! [`crate::util::threadpool`].
+
+pub mod rules;
+pub mod scan;
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+
+pub use rules::{Finding, Rule};
+
+/// Files allowed to contain `unsafe`.  This is the audit's module
+/// allow-list: the parallel substrate itself, the chunked VQ kernels,
+/// and the serving engine's decode plane.  A new file that needs
+/// `unsafe` must be added here — deliberately, in review.
+pub const UNSAFE_ALLOWLIST: &[&str] = &[
+    "rust/src/util/threadpool.rs",
+    "rust/src/vq/assign.rs",
+    "rust/src/vq/codebook.rs",
+    "rust/src/vq/kde.rs",
+    "rust/src/vq/kmeans.rs",
+    "rust/src/vq/pack.rs",
+    "rust/src/vq/ratios.rs",
+    "rust/src/serving/engine/mod.rs",
+    "rust/src/serving/engine/shard.rs",
+    "rust/src/serving/engine/stream.rs",
+];
+
+/// Reference-kernel manifest: every `pub fn *_reference` in the tree
+/// must map here to the bench row that gates its specialized twin, must
+/// be named by a property in `rust/tests/prop_substrate.rs`, and the
+/// row must be listed in `scripts/bench_baseline.json`.  Landing a new
+/// specialized kernel therefore forces the property test and the perf
+/// gate to land with it.
+pub const REFERENCE_KERNELS: &[(&str, &str)] = &[
+    ("unpack_range_reference", "unpack_wordwise"),
+    ("decode_packed_into_reference", "fused_decode"),
+    ("encode_nearest_reference", "encode_pruned"),
+];
+
+/// Directories (relative to the repo root) the audit walks.
+const SCAN_ROOTS: &[&str] = &["rust/src", "rust/tests", "rust/benches", "examples"];
+
+/// Aggregate result of one audit run.
+#[derive(Debug, Default)]
+pub struct AuditReport {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    /// Lines whose code part contains the `unsafe` token.
+    pub unsafe_sites: usize,
+    pub reference_kernels: usize,
+}
+
+impl AuditReport {
+    pub fn passed(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// Run every rule over an in-memory corpus of `(relative path, source)`
+/// pairs.  `baseline_json` is the raw text of the committed bench-row
+/// manifest; `extra_allow` extends [`UNSAFE_ALLOWLIST`] (used by the
+/// negative tests and the CI seeded-violation checks).
+pub fn audit_sources(
+    files: &[(String, String)],
+    baseline_json: &str,
+    extra_allow: &[String],
+) -> AuditReport {
+    let mut allow: HashSet<String> = UNSAFE_ALLOWLIST.iter().map(|s| s.to_string()).collect();
+    allow.extend(extra_allow.iter().cloned());
+
+    let scanned: Vec<(String, Vec<scan::Line>)> = files
+        .iter()
+        .map(|(path, src)| (path.clone(), scan::strip(src)))
+        .collect();
+
+    let mut report = AuditReport {
+        files_scanned: scanned.len(),
+        ..Default::default()
+    };
+    for (path, lines) in &scanned {
+        report.unsafe_sites += lines.iter().filter(|l| l.has_code_word("unsafe")).count();
+        rules::check_safety_comments(path, lines, &mut report.findings);
+        rules::check_allowlist(path, lines, &allow, &mut report.findings);
+        rules::check_float_accumulation(path, lines, &mut report.findings);
+        report.reference_kernels += rules::reference_kernel_defs(lines).len();
+    }
+    rules::check_reference_kernels(
+        &scanned,
+        REFERENCE_KERNELS,
+        baseline_json,
+        &mut report.findings,
+    );
+    report.findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    report
+}
+
+/// Walk the source tree under `root` and audit it against the baseline
+/// manifest at `baseline` (missing baseline is itself a finding — the
+/// manifest is part of the contract).
+pub fn run_audit(root: &Path, baseline: &Path, extra_allow: &[String]) -> AuditReport {
+    let mut files = Vec::new();
+    for sub in SCAN_ROOTS {
+        collect_rs_files(&root.join(sub), root, &mut files);
+    }
+    files.sort();
+    let sources: Vec<(String, String)> = files
+        .iter()
+        .filter_map(|(rel, abs)| {
+            std::fs::read_to_string(abs).ok().map(|s| (rel.clone(), s))
+        })
+        .collect();
+    let baseline_text = std::fs::read_to_string(baseline).unwrap_or_default();
+    let mut report = audit_sources(&sources, &baseline_text, extra_allow);
+    if baseline_text.is_empty() {
+        report.findings.push(Finding {
+            rule: Rule::ReferenceManifest,
+            file: baseline.display().to_string(),
+            line: 0,
+            message: "committed baseline manifest is missing or unreadable".to_string(),
+        });
+    }
+    report
+}
+
+fn collect_rs_files(dir: &Path, root: &Path, out: &mut Vec<(String, PathBuf)>) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    for entry in entries.flatten() {
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs_files(&path, root, out);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push((rel, path));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CLEAN_BASELINE: &str =
+        "{\"comparisons\": [{\"name\": \"unpack_wordwise\"}, {\"name\": \"fused_decode\"}, \
+         {\"name\": \"encode_pruned\"}]}";
+
+    fn prop_file() -> (String, String) {
+        (
+            "rust/tests/prop_substrate.rs".to_string(),
+            "fn p() { unpack_range_reference(); decode_packed_into_reference(); \
+             encode_nearest_reference(); }\n"
+                .to_string(),
+        )
+    }
+
+    #[test]
+    fn clean_corpus_passes() {
+        let files = vec![
+            (
+                "rust/src/vq/pack.rs".to_string(),
+                "pub fn unpack_range_reference() {}\n\
+                 // SAFETY: chunks are disjoint.\n\
+                 fn f(p: SyncPtr<u32>) { let _ = unsafe { p.slice(0, 1) }; }\n"
+                    .to_string(),
+            ),
+            (
+                "rust/src/vq/codebook.rs".to_string(),
+                "pub fn decode_packed_into_reference() {}\n\
+                 pub fn encode_nearest_reference() {}\n"
+                    .to_string(),
+            ),
+            prop_file(),
+        ];
+        let r = audit_sources(&files, CLEAN_BASELINE, &[]);
+        assert!(r.passed(), "{:?}", r.findings);
+        assert_eq!(r.unsafe_sites, 1);
+        assert_eq!(r.reference_kernels, 3);
+    }
+
+    #[test]
+    fn uncommented_unsafe_snippet_fails_the_audit() {
+        // The crafted negative case from the issue: a bare unsafe block
+        // in an allow-listed file must produce a safety-comment finding.
+        let files = vec![
+            (
+                "rust/src/vq/pack.rs".to_string(),
+                "fn f(p: *const u8) { let _ = unsafe { *p }; }\n".to_string(),
+            ),
+            kernels_file(),
+            prop_file(),
+        ];
+        let r = audit_sources(&files, CLEAN_BASELINE, &[]);
+        assert!(!r.passed());
+        assert!(r
+            .findings
+            .iter()
+            .any(|f| f.rule == Rule::SafetyComment && f.file == "rust/src/vq/pack.rs"));
+    }
+
+    fn kernels_file() -> (String, String) {
+        (
+            "rust/src/vq/codebook.rs".to_string(),
+            "pub fn unpack_range_reference() {}\n\
+             pub fn decode_packed_into_reference() {}\n\
+             pub fn encode_nearest_reference() {}\n"
+                .to_string(),
+        )
+    }
+
+    #[test]
+    fn non_allowlisted_unsafe_file_fails() {
+        let files = vec![
+            (
+                "rust/src/serving/rogue.rs".to_string(),
+                "// SAFETY: commented, but the module never opted in.\n\
+                 fn f(p: *const u8) { let _ = unsafe { *p }; }\n"
+                    .to_string(),
+            ),
+            kernels_file(),
+            prop_file(),
+        ];
+        let r = audit_sources(&files, CLEAN_BASELINE, &[]);
+        assert!(r
+            .findings
+            .iter()
+            .any(|f| f.rule == Rule::UnsafeAllowlist && f.file == "rust/src/serving/rogue.rs"));
+        // The same corpus passes once the file is explicitly allow-listed.
+        let r2 = audit_sources(&files, CLEAN_BASELINE, &["rust/src/serving/rogue.rs".into()]);
+        assert!(r2.passed(), "{:?}", r2.findings);
+    }
+
+    #[test]
+    fn missing_baseline_row_fails() {
+        let files = vec![kernels_file(), prop_file()];
+        let partial =
+            "{\"comparisons\": [{\"name\": \"unpack_wordwise\"}, {\"name\": \"fused_decode\"}]}";
+        let r = audit_sources(&files, partial, &[]);
+        assert!(r
+            .findings
+            .iter()
+            .any(|f| f.rule == Rule::ReferenceManifest && f.message.contains("encode_pruned")));
+    }
+
+    #[test]
+    fn real_tree_audit_is_wired() {
+        // Walk the actual repo when run from the crate root; this is the
+        // same entry point the audit binary uses.  Skip silently if the
+        // layout is absent (e.g. running from an unusual cwd).
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        if !root.join("rust/src").is_dir() {
+            return;
+        }
+        let report = run_audit(root, &root.join("scripts/bench_baseline.json"), &[]);
+        assert!(report.files_scanned > 50, "walker found too few files");
+        assert!(report.unsafe_sites >= 20, "unsafe sites undercounted");
+        assert_eq!(report.reference_kernels, REFERENCE_KERNELS.len());
+        assert!(
+            report.passed(),
+            "the committed tree must audit clean:\n{:#?}",
+            report.findings
+        );
+    }
+}

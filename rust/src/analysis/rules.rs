@@ -1,0 +1,626 @@
+//! The repo-contract rules enforced by `vq4all-audit`.
+//!
+//! Four rule families over the scanned source tree (see
+//! [`super::scan`]):
+//!
+//! 1. **safety-comment** — every `unsafe` occurrence in code must carry
+//!    a justification: a `// SAFETY:` comment on the same line, in the
+//!    contiguous comment block directly above the statement, or (for
+//!    `unsafe fn` / `unsafe impl` / `unsafe trait` declarations) a
+//!    `# Safety` doc section.
+//! 2. **unsafe-allowlist** — `unsafe` may appear only in the modules
+//!    listed in [`super::UNSAFE_ALLOWLIST`] (the pool, the VQ kernels,
+//!    the serving engine).  New files must opt in by being added there.
+//! 3. **reference-manifest** — every `pub fn *_reference` kernel must
+//!    have an entry in [`super::REFERENCE_KERNELS`], be named by a
+//!    property in `rust/tests/prop_substrate.rs`, and have its mapped
+//!    bench row present in the committed baseline manifest.  This
+//!    cross-checks source against `scripts/bench_baseline.json` and
+//!    catches the "kernel landed, gate forgot" failure class.
+//! 4. **float-accumulation** — inside a `parallel_for` closure, a `+=`
+//!    on a float variable captured from outside the closure is flagged:
+//!    cross-chunk float reductions must go through chunk-ordered
+//!    partials to stay bit-identical at every thread count.  Suppress a
+//!    deliberate exception with `// audit: allow(float-accum)` on the
+//!    same or the preceding line.
+
+use std::collections::HashSet;
+
+use super::scan::{has_word, Line};
+
+/// Rule identifiers, stable strings for CI grepping.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Rule {
+    SafetyComment,
+    UnsafeAllowlist,
+    ReferenceManifest,
+    FloatAccumulation,
+}
+
+impl Rule {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Rule::SafetyComment => "safety-comment",
+            Rule::UnsafeAllowlist => "unsafe-allowlist",
+            Rule::ReferenceManifest => "reference-manifest",
+            Rule::FloatAccumulation => "float-accumulation",
+        }
+    }
+}
+
+/// One audit violation.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: Rule,
+    pub file: String,
+    /// 1-based; 0 for file-level findings.
+    pub line: usize,
+    pub message: String,
+}
+
+/// Marker that suppresses the float-accumulation rule at one site.
+const FLOAT_ACCUM_ALLOW: &str = "audit: allow(float-accum)";
+
+/// How far upward a statement may continue before the safety-comment
+/// walk gives up (defensive bound, real statements are far shorter).
+const STMT_WALK_LIMIT: usize = 12;
+
+fn stmt_terminates(code: &str) -> bool {
+    let t = code.trim_end();
+    t.ends_with(';') || t.ends_with('{') || t.ends_with('}')
+}
+
+/// Find the first line of the statement containing line `i`: walk
+/// upward while the previous line is code that does not terminate a
+/// statement (so multi-line statements like
+/// `let x: T =\n    unsafe { ... };` anchor at the `let`).
+fn statement_start(lines: &[Line], i: usize) -> usize {
+    let mut j = i;
+    let mut steps = 0;
+    while j > 0 && steps < STMT_WALK_LIMIT {
+        let prev = &lines[j - 1];
+        if prev.is_blank() || prev.is_comment_only() || prev.is_attr_only() {
+            break;
+        }
+        if stmt_terminates(&prev.code) {
+            break;
+        }
+        j -= 1;
+        steps += 1;
+    }
+    j
+}
+
+/// Collect the contiguous comment/attribute block directly above line
+/// `start` (no blank line may intervene).
+fn comment_block_above(lines: &[Line], start: usize) -> String {
+    let mut text = String::new();
+    let mut j = start;
+    while j > 0 {
+        let prev = &lines[j - 1];
+        if prev.is_comment_only() || prev.is_attr_only() {
+            text.push_str(&prev.comment);
+            text.push('\n');
+            j -= 1;
+        } else {
+            break;
+        }
+    }
+    text
+}
+
+/// Rule 1: `// SAFETY:` discipline for every `unsafe` in code.
+pub fn check_safety_comments(path: &str, lines: &[Line], findings: &mut Vec<Finding>) {
+    for (i, line) in lines.iter().enumerate() {
+        if !line.has_code_word("unsafe") {
+            continue;
+        }
+        let is_decl = ["unsafe fn", "unsafe impl", "unsafe trait"]
+            .iter()
+            .any(|p| line.code.contains(p));
+        if line.comment.contains("SAFETY:") {
+            continue;
+        }
+        let above = comment_block_above(lines, statement_start(lines, i));
+        if above.contains("SAFETY:") || (is_decl && above.contains("# Safety")) {
+            continue;
+        }
+        let kind = if is_decl { "declaration" } else { "block" };
+        findings.push(Finding {
+            rule: Rule::SafetyComment,
+            file: path.to_string(),
+            line: i + 1,
+            message: format!(
+                "unsafe {kind} without a `// SAFETY:` comment (same line, or the \
+                 comment block directly above the statement{})",
+                if is_decl { ", or a `# Safety` doc section" } else { "" }
+            ),
+        });
+    }
+}
+
+/// Rule 2: `unsafe` only in allow-listed modules.
+pub fn check_allowlist(
+    path: &str,
+    lines: &[Line],
+    allow: &HashSet<String>,
+    findings: &mut Vec<Finding>,
+) {
+    if allow.contains(path) {
+        return;
+    }
+    if let Some(i) = lines.iter().position(|l| l.has_code_word("unsafe")) {
+        findings.push(Finding {
+            rule: Rule::UnsafeAllowlist,
+            file: path.to_string(),
+            line: i + 1,
+            message: "file uses `unsafe` but is not in analysis::UNSAFE_ALLOWLIST \
+                      (new unsafe modules must opt in there)"
+                .to_string(),
+        });
+    }
+}
+
+/// Extract `pub fn <ident>` names ending in `_reference` from a scanned
+/// file, with their 1-based line numbers.
+pub fn reference_kernel_defs(lines: &[Line]) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        let code = &line.code;
+        for pat in ["pub fn ", "pub(crate) fn "] {
+            if let Some(pos) = code.find(pat) {
+                let rest = &code[pos + pat.len()..];
+                let ident: String = rest
+                    .chars()
+                    .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                    .collect();
+                if ident.ends_with("_reference") {
+                    out.push((ident, i + 1));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Rule 3: reference kernels ↔ property tests ↔ baseline manifest.
+///
+/// `files` is the scanned corpus; the prop-test file is located by path
+/// suffix.  `kernel_map` maps reference-kernel fn names to the bench
+/// row that gates them; `baseline_json` is the raw text of the
+/// committed row manifest.
+pub fn check_reference_kernels(
+    files: &[(String, Vec<Line>)],
+    kernel_map: &[(&str, &str)],
+    baseline_json: &str,
+    findings: &mut Vec<Finding>,
+) {
+    let prop = files
+        .iter()
+        .find(|(p, _)| p.ends_with("tests/prop_substrate.rs"));
+    let prop_text: String = match &prop {
+        Some((_, lines)) => lines
+            .iter()
+            .flat_map(|l| [l.code.as_str(), "\n"])
+            .collect(),
+        None => String::new(),
+    };
+    if prop.is_none() {
+        findings.push(Finding {
+            rule: Rule::ReferenceManifest,
+            file: "rust/tests/prop_substrate.rs".to_string(),
+            line: 0,
+            message: "property-test file missing from the scanned tree".to_string(),
+        });
+    }
+
+    let mut seen = Vec::new();
+    for (path, lines) in files {
+        for (name, line_no) in reference_kernel_defs(lines) {
+            seen.push(name.clone());
+            let Some((_, row)) = kernel_map.iter().find(|(k, _)| *k == name) else {
+                findings.push(Finding {
+                    rule: Rule::ReferenceManifest,
+                    file: path.clone(),
+                    line: line_no,
+                    message: format!(
+                        "reference kernel `{name}` has no entry in \
+                         analysis::REFERENCE_KERNELS — add the kernel→bench-row \
+                         mapping, a prop_substrate property naming it, and its row \
+                         in scripts/bench_baseline.json"
+                    ),
+                });
+                continue;
+            };
+            if prop.is_some() && !has_word(&prop_text, &name) {
+                findings.push(Finding {
+                    rule: Rule::ReferenceManifest,
+                    file: path.clone(),
+                    line: line_no,
+                    message: format!(
+                        "reference kernel `{name}` is never named in \
+                         rust/tests/prop_substrate.rs — the specialized kernel has \
+                         no property test pinning it to this reference"
+                    ),
+                });
+            }
+            if !baseline_json.contains(&format!("\"{row}\"")) {
+                findings.push(Finding {
+                    rule: Rule::ReferenceManifest,
+                    file: path.clone(),
+                    line: line_no,
+                    message: format!(
+                        "bench row \"{row}\" for reference kernel `{name}` is \
+                         missing from the committed baseline manifest \
+                         (scripts/bench_baseline.json) — the perf gate would never \
+                         notice the row disappearing"
+                    ),
+                });
+            }
+        }
+    }
+    for (name, _) in kernel_map {
+        if !seen.iter().any(|s| s == name) {
+            findings.push(Finding {
+                rule: Rule::ReferenceManifest,
+                file: "rust/src/analysis/mod.rs".to_string(),
+                line: 0,
+                message: format!(
+                    "analysis::REFERENCE_KERNELS lists `{name}` but no such \
+                     `pub fn` exists in the tree (stale manifest entry)"
+                ),
+            });
+        }
+    }
+}
+
+/// The extent (inclusive line range) of a `parallel_for(...)` call
+/// starting on line `i`: tracks parenthesis depth from the call's
+/// opening paren until it closes.  Returns `None` when the call never
+/// closes within the cap (malformed source).
+fn call_extent(lines: &[Line], i: usize) -> Option<(usize, usize)> {
+    let mut depth = 0usize;
+    let mut opened = false;
+    let mut at = lines[i].code.find("parallel_for").unwrap_or(0);
+    for (j, line) in lines.iter().enumerate().skip(i).take(400) {
+        for c in line.code[at.min(line.code.len())..].chars() {
+            match c {
+                '(' => {
+                    depth += 1;
+                    opened = true;
+                }
+                ')' => {
+                    depth = depth.saturating_sub(1);
+                    if opened && depth == 0 {
+                        return Some((i, j));
+                    }
+                }
+                _ => {}
+            }
+        }
+        at = 0;
+    }
+    None
+}
+
+/// The identifier on the left of a `+=`, or `None` when the target is
+/// indexed (`x[i] +=`, the sanctioned per-chunk slot pattern) or a
+/// field/deref expression we do not reason about.
+fn plain_accum_target(code: &str) -> Option<String> {
+    let lhs = code.split("+=").next()?.trim_end();
+    if lhs.ends_with(']') {
+        return None;
+    }
+    let ident: String = lhs
+        .chars()
+        .rev()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+        .collect::<String>()
+        .chars()
+        .rev()
+        .collect();
+    if ident.is_empty() || ident.chars().next().is_some_and(|c| c.is_ascii_digit()) {
+        return None;
+    }
+    // `self.x +=` / `a.b +=` — field accumulation, skip.
+    let before = lhs[..lhs.len() - ident.len()].trim_end();
+    if before.ends_with('.') {
+        return None;
+    }
+    Some(ident)
+}
+
+fn declares(code: &str, ident: &str) -> bool {
+    [format!("let mut {ident}"), format!("let {ident}")]
+        .iter()
+        .any(|p| {
+            code.find(p.as_str()).is_some_and(|pos| {
+                let after = code[pos + p.len()..].chars().next();
+                !matches!(after, Some(c) if c.is_ascii_alphanumeric() || c == '_')
+            })
+        })
+}
+
+fn looks_float_decl(code: &str) -> bool {
+    if code.contains("f32") || code.contains("f64") {
+        return true;
+    }
+    // A float literal on the declaration line: digit '.' digit.
+    let b = code.as_bytes();
+    (1..b.len().saturating_sub(1)).any(|k| {
+        b[k] == b'.' && b[k - 1].is_ascii_digit() && b[k + 1].is_ascii_digit()
+    })
+}
+
+/// Rule 4: captured-float `+=` inside `parallel_for` closures.
+pub fn check_float_accumulation(path: &str, lines: &[Line], findings: &mut Vec<Finding>) {
+    for i in 0..lines.len() {
+        if !lines[i].code.contains("parallel_for") {
+            continue;
+        }
+        let Some((lo, hi)) = call_extent(lines, i) else {
+            continue;
+        };
+        for j in lo..=hi.min(lines.len() - 1) {
+            if !lines[j].code.contains("+=") {
+                continue;
+            }
+            let Some(ident) = plain_accum_target(&lines[j].code) else {
+                continue;
+            };
+            // Declared inside the closure extent → per-chunk local, fine.
+            if (lo..=j).any(|k| declares(&lines[k].code, &ident)) {
+                continue;
+            }
+            // Explicit suppression.
+            let suppressed = lines[j].comment.contains(FLOAT_ACCUM_ALLOW)
+                || (j > 0 && lines[j - 1].comment.contains(FLOAT_ACCUM_ALLOW));
+            if suppressed {
+                continue;
+            }
+            // Captured: float only if the visible outer declaration says so.
+            let outer_decl = (0..lo)
+                .rev()
+                .take(120)
+                .find(|&k| declares(&lines[k].code, &ident));
+            let Some(decl_line) = outer_decl else {
+                continue;
+            };
+            if !looks_float_decl(&lines[decl_line].code) {
+                continue;
+            }
+            findings.push(Finding {
+                rule: Rule::FloatAccumulation,
+                file: path.to_string(),
+                line: j + 1,
+                message: format!(
+                    "`{ident} +=` accumulates a captured float across parallel_for \
+                     chunks (declared on line {}) — reduce through chunk-ordered \
+                     per-chunk partials instead, or suppress a provably-ordered \
+                     site with `// {FLOAT_ACCUM_ALLOW}`",
+                    decl_line + 1
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::scan::strip;
+
+    fn run_safety(src: &str) -> Vec<Finding> {
+        let mut f = Vec::new();
+        check_safety_comments("t.rs", &strip(src), &mut f);
+        f
+    }
+
+    #[test]
+    fn bare_unsafe_block_is_flagged() {
+        let f = run_safety("fn f(p: *const u8) { let _ = unsafe { *p }; }\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, Rule::SafetyComment);
+        assert_eq!(f[0].line, 1);
+    }
+
+    #[test]
+    fn same_line_safety_passes() {
+        let f = run_safety("let _ = unsafe { g() }; // SAFETY: g is total\n");
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn comment_above_statement_passes() {
+        let src = "// SAFETY: disjoint chunks.\nlet d = unsafe { p.slice(s, n) };\n";
+        assert!(run_safety(src).is_empty());
+    }
+
+    #[test]
+    fn comment_above_multiline_statement_passes() {
+        let src = "// SAFETY: lifetime erasure is scoped.\n\
+                   let f2: &'static F =\n    unsafe { std::mem::transmute(f1) };\n";
+        assert!(run_safety(src).is_empty());
+    }
+
+    #[test]
+    fn blank_line_breaks_the_comment_link() {
+        let src = "// SAFETY: stale, far away.\n\nlet d = unsafe { g() };\n";
+        assert_eq!(run_safety(src).len(), 1);
+    }
+
+    #[test]
+    fn consecutive_blocks_each_need_their_own_comment() {
+        let src = "// SAFETY: covers only the first.\n\
+                   let a = unsafe { g() };\nlet b = unsafe { h() };\n";
+        let f = run_safety(src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn unsafe_decl_accepts_doc_safety_section() {
+        let src = "/// # Safety\n/// Caller guarantees disjointness.\n\
+                   pub unsafe fn slice(&self) {}\n";
+        assert!(run_safety(src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_in_strings_and_comments_is_ignored() {
+        let src = "let s = \"unsafe\"; // the word unsafe here is prose\n";
+        assert!(run_safety(src).is_empty());
+    }
+
+    #[test]
+    fn allowlist_blocks_new_files() {
+        let allow: HashSet<String> = ["rust/src/util/threadpool.rs".to_string()].into();
+        let lines = strip("fn f() { unsafe { g() } }\n");
+        let mut f = Vec::new();
+        check_allowlist("rust/src/rogue.rs", &lines, &allow, &mut f);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, Rule::UnsafeAllowlist);
+        let mut f2 = Vec::new();
+        check_allowlist("rust/src/util/threadpool.rs", &lines, &allow, &mut f2);
+        assert!(f2.is_empty());
+    }
+
+    #[test]
+    fn reference_kernel_defs_are_found() {
+        let lines = strip(
+            "pub fn unpack_range_reference(x: u8) {}\n\
+             fn helper_reference_counts() {}\n\
+             fn some_test_matches_scratch_reference() {}\n",
+        );
+        let defs = reference_kernel_defs(&lines);
+        assert_eq!(defs.len(), 1);
+        assert_eq!(defs[0].0, "unpack_range_reference");
+    }
+
+    fn kernel_corpus() -> Vec<(String, Vec<crate::analysis::scan::Line>)> {
+        vec![
+            (
+                "rust/src/vq/k.rs".to_string(),
+                strip("pub fn foo_reference(x: u8) {}\n"),
+            ),
+            (
+                "rust/tests/prop_substrate.rs".to_string(),
+                strip("fn p() { foo_reference(1); }\n"),
+            ),
+        ]
+    }
+
+    #[test]
+    fn mapped_tested_gated_kernel_passes() {
+        let mut f = Vec::new();
+        check_reference_kernels(
+            &kernel_corpus(),
+            &[("foo_reference", "foo_row")],
+            "{\"comparisons\": [{\"name\": \"foo_row\"}]}",
+            &mut f,
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn missing_baseline_row_is_flagged() {
+        let mut f = Vec::new();
+        check_reference_kernels(
+            &kernel_corpus(),
+            &[("foo_reference", "foo_row")],
+            "{\"comparisons\": []}",
+            &mut f,
+        );
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("foo_row"));
+    }
+
+    #[test]
+    fn unmapped_kernel_and_stale_entry_are_flagged() {
+        let mut f = Vec::new();
+        check_reference_kernels(&kernel_corpus(), &[("gone_reference", "r")], "{}", &mut f);
+        let msgs: Vec<_> = f.iter().map(|x| x.message.as_str()).collect();
+        assert!(msgs.iter().any(|m| m.contains("no entry")), "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("stale")), "{msgs:?}");
+    }
+
+    #[test]
+    fn untested_kernel_is_flagged() {
+        let corpus = vec![
+            (
+                "rust/src/vq/k.rs".to_string(),
+                strip("pub fn foo_reference(x: u8) {}\n"),
+            ),
+            ("rust/tests/prop_substrate.rs".to_string(), strip("fn p() {}\n")),
+        ];
+        let mut f = Vec::new();
+        check_reference_kernels(
+            &corpus,
+            &[("foo_reference", "foo_row")],
+            "{\"comparisons\": [{\"name\": \"foo_row\"}]}",
+            &mut f,
+        );
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("never named"));
+    }
+
+    fn run_accum(src: &str) -> Vec<Finding> {
+        let mut f = Vec::new();
+        check_float_accumulation("t.rs", &strip(src), &mut f);
+        f
+    }
+
+    #[test]
+    fn captured_float_accumulation_is_flagged() {
+        let src = "let mut acc = 0.0f32;\n\
+                   pool.parallel_for(n, 64, |s, e| {\n\
+                       acc += kernel(s, e);\n\
+                   })\n\
+                   .unwrap();\n";
+        let f = run_accum(src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, Rule::FloatAccumulation);
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn closure_local_accumulator_passes() {
+        let src = "pool.parallel_for(n, 64, |s, e| {\n\
+                       let mut local = 0.0f64;\n\
+                       local += kernel(s, e);\n\
+                       out[s / 64] = local;\n\
+                   })\n\
+                   .unwrap();\n";
+        assert!(run_accum(src).is_empty());
+    }
+
+    #[test]
+    fn indexed_slot_writes_pass() {
+        let src = "let mut parts = vec![0.0f64; 4];\n\
+                   pool.parallel_for(n, 64, |s, e| {\n\
+                       parts[s / 64] += kernel(s, e);\n\
+                   })\n\
+                   .unwrap();\n";
+        assert!(run_accum(src).is_empty());
+    }
+
+    #[test]
+    fn integer_accumulation_passes() {
+        let src = "let mut count = 0usize;\n\
+                   pool.parallel_for(n, 64, |s, e| {\n\
+                       count += e - s;\n\
+                   })\n\
+                   .unwrap();\n";
+        assert!(run_accum(src).is_empty());
+    }
+
+    #[test]
+    fn suppression_comment_is_honored() {
+        let src = "let mut acc = 0.0f32;\n\
+                   pool.parallel_for(n, 64, |s, e| {\n\
+                       // audit: allow(float-accum)\n\
+                       acc += kernel(s, e);\n\
+                   })\n\
+                   .unwrap();\n";
+        assert!(run_accum(src).is_empty());
+    }
+}

@@ -1,0 +1,279 @@
+//! Minimal line-level Rust source scanner.
+//!
+//! Splits a source file into per-line `(code, comment)` parts with
+//! string-literal *contents* removed from the code part (the delimiting
+//! quotes stay, so the code keeps its token shape).  That is exactly
+//! enough for the repo-contract rules in [`super::rules`]: keyword
+//! occurrences ("unsafe", "parallel_for", "+=") are only meaningful in
+//! the code part, and `// SAFETY:` markers only in the comment part.
+//!
+//! This is deliberately **not** a Rust parser.  It handles the lexical
+//! constructs that would otherwise confuse a substring search — line and
+//! nested block comments, plain and raw strings (both spanning lines),
+//! byte strings, and char literals vs. lifetimes — and nothing more.
+
+/// One scanned source line: the code part (string contents blanked) and
+/// the comment part (line-comment text plus any block-comment text that
+/// crosses the line).
+#[derive(Clone, Debug, Default)]
+pub struct Line {
+    pub code: String,
+    pub comment: String,
+}
+
+impl Line {
+    /// Line holds nothing but whitespace.
+    pub fn is_blank(&self) -> bool {
+        self.code.trim().is_empty() && self.comment.trim().is_empty()
+    }
+
+    /// Line is comment-only (no code tokens).
+    pub fn is_comment_only(&self) -> bool {
+        self.code.trim().is_empty() && !self.comment.trim().is_empty()
+    }
+
+    /// Line is a (single-line) attribute such as `#[allow(...)]`.
+    pub fn is_attr_only(&self) -> bool {
+        let t = self.code.trim();
+        t.starts_with("#[") || t.starts_with("#![")
+    }
+
+    /// True when `word` appears in the code part as a standalone token
+    /// (not as a substring of a longer identifier).
+    pub fn has_code_word(&self, word: &str) -> bool {
+        has_word(&self.code, word)
+    }
+}
+
+/// Standalone-token search in arbitrary text.
+pub fn has_word(text: &str, word: &str) -> bool {
+    let bytes = text.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = text[from..].find(word) {
+        let at = from + pos;
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let end = at + word.len();
+        let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = at + 1;
+    }
+    false
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Lexical state carried across lines.
+enum State {
+    Code,
+    /// Inside a nested block comment at the given depth.
+    Block(usize),
+    /// Inside a `"..."` (or `b"..."`) string literal.
+    Str,
+    /// Inside a raw string closed by `"` followed by this many `#`s.
+    RawStr(usize),
+}
+
+/// Scan `source` into per-line code/comment parts.
+pub fn strip(source: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    let mut state = State::Code;
+    for raw in source.lines() {
+        let chars: Vec<char> = raw.chars().collect();
+        let mut line = Line::default();
+        let mut i = 0;
+        while i < chars.len() {
+            match state {
+                State::Block(depth) => {
+                    if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        state = State::Block(depth + 1);
+                        line.comment.push_str("/*");
+                        i += 2;
+                    } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        state = if depth <= 1 { State::Code } else { State::Block(depth - 1) };
+                        line.comment.push_str("*/");
+                        i += 2;
+                    } else {
+                        line.comment.push(chars[i]);
+                        i += 1;
+                    }
+                }
+                State::Str => {
+                    if chars[i] == '\\' {
+                        i += 2;
+                    } else if chars[i] == '"' {
+                        line.code.push('"');
+                        state = State::Code;
+                        i += 1;
+                    } else {
+                        i += 1;
+                    }
+                }
+                State::RawStr(hashes) => {
+                    if chars[i] == '"' && closes_raw(&chars, i + 1, hashes) {
+                        line.code.push('"');
+                        state = State::Code;
+                        i += 1 + hashes;
+                    } else {
+                        i += 1;
+                    }
+                }
+                State::Code => {
+                    let c = chars[i];
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        line.comment.push_str(&chars[i..].iter().collect::<String>());
+                        i = chars.len();
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        state = State::Block(1);
+                        line.comment.push_str("/*");
+                        i += 2;
+                    } else if c == '"' {
+                        line.code.push('"');
+                        state = State::Str;
+                        i += 1;
+                    } else if c == 'r' && is_raw_string_start(&chars, i) {
+                        let hashes = count_hashes(&chars, i + 1);
+                        line.code.push('"');
+                        state = State::RawStr(hashes);
+                        i += 2 + hashes;
+                    } else if c == 'b' && chars.get(i + 1) == Some(&'"') {
+                        line.code.push('"');
+                        state = State::Str;
+                        i += 2;
+                    } else if c == '\'' {
+                        if let Some(skip) = char_literal_len(&chars, i) {
+                            line.code.push(' ');
+                            i += skip;
+                        } else {
+                            // A lifetime tick (`'a`) — plain code.
+                            line.code.push(c);
+                            i += 1;
+                        }
+                    } else {
+                        line.code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        out.push(line);
+    }
+    out
+}
+
+/// `r"`, `r#"`, `r##"`, ... starting at `chars[at] == 'r'` — but not an
+/// identifier that merely contains `r` (checked by the caller passing a
+/// code-mode position; we additionally require the previous char not be
+/// part of an identifier).
+fn is_raw_string_start(chars: &[char], at: usize) -> bool {
+    if at > 0 {
+        let p = chars[at - 1];
+        if p.is_ascii_alphanumeric() || p == '_' {
+            return false;
+        }
+    }
+    let mut j = at + 1;
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+    }
+    chars.get(j) == Some(&'"')
+}
+
+fn count_hashes(chars: &[char], from: usize) -> usize {
+    let mut n = 0;
+    while chars.get(from + n) == Some(&'#') {
+        n += 1;
+    }
+    n
+}
+
+fn closes_raw(chars: &[char], from: usize, hashes: usize) -> bool {
+    (0..hashes).all(|k| chars.get(from + k) == Some(&'#'))
+}
+
+/// Length (in chars, including both quotes) of a char literal starting
+/// at `chars[at] == '\''`, or `None` if this is a lifetime tick.
+fn char_literal_len(chars: &[char], at: usize) -> Option<usize> {
+    match chars.get(at + 1)? {
+        '\\' => {
+            // Escaped: '\n', '\'', '\\', '\u{..}', '\x7f'.
+            let mut j = at + 2;
+            if chars.get(j) == Some(&'u') && chars.get(j + 1) == Some(&'{') {
+                j += 2;
+                while j < chars.len() && chars[j] != '}' {
+                    j += 1;
+                }
+                j += 1;
+            } else if chars.get(j) == Some(&'x') {
+                j += 3;
+            } else {
+                j += 1;
+            }
+            (chars.get(j) == Some(&'\'')).then_some(j + 1 - at)
+        }
+        _ => (chars.get(at + 2) == Some(&'\'')).then_some(3),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_comment_split() {
+        let l = strip("let x = 1; // SAFETY: fine\n");
+        assert_eq!(l[0].code.trim(), "let x = 1;");
+        assert!(l[0].comment.contains("SAFETY:"));
+    }
+
+    #[test]
+    fn string_contents_removed_from_code() {
+        let l = strip("let s = \"unsafe parallel_for\";\n");
+        assert!(!l[0].has_code_word("unsafe"));
+        assert!(!l[0].code.contains("parallel_for"));
+        assert!(l[0].code.contains("let s = "));
+    }
+
+    #[test]
+    fn raw_string_spanning_lines() {
+        let src = "let s = r#\"line one unsafe\nline two\"#;\nlet y = 2;\n";
+        let l = strip(src);
+        assert!(!l[0].has_code_word("unsafe"));
+        assert!(l[2].code.contains("let y = 2;"));
+    }
+
+    #[test]
+    fn nested_block_comment() {
+        let src = "/* outer /* unsafe */ still comment */ let z = 3;\n";
+        let l = strip(src);
+        assert!(!l[0].has_code_word("unsafe"));
+        assert!(l[0].code.contains("let z = 3;"));
+        assert!(l[0].comment.contains("still comment"));
+    }
+
+    #[test]
+    fn char_literal_vs_lifetime() {
+        let l = strip("fn f<'a>(x: &'a str) { let q = '\\''; let w = 'u'; }\n");
+        assert!(l[0].code.contains("<'a>"));
+        assert!(!l[0].code.contains("'u'"));
+    }
+
+    #[test]
+    fn word_boundaries() {
+        let l = strip("let unsafe_count = 1;\n");
+        assert!(!l[0].has_code_word("unsafe"));
+        let l = strip("unsafe { x() };\n");
+        assert!(l[0].has_code_word("unsafe"));
+    }
+
+    #[test]
+    fn block_comment_carries_across_lines() {
+        let l = strip("/* SAFETY: spans\nlines */ unsafe { f() }\n");
+        assert!(l[0].comment.contains("SAFETY:"));
+        assert!(l[1].has_code_word("unsafe"));
+        assert!(l[1].comment.contains("lines"));
+    }
+}

@@ -1,0 +1,66 @@
+//! `vq4all-audit` — the repo-contract static analyzer CLI.
+//!
+//! Usage:
+//!
+//! ```text
+//! cargo run --release --bin audit [-- <repo root>]
+//! ```
+//!
+//! Environment overrides (used by the CI seeded-violation regressions):
+//!
+//! * `VQ4ALL_AUDIT_ROOT`        repo root to scan (default `.` / argv[1])
+//! * `VQ4ALL_AUDIT_BASELINE`    bench-row manifest path
+//!                              (default `<root>/scripts/bench_baseline.json`)
+//! * `VQ4ALL_AUDIT_EXTRA_ALLOW` colon-separated extra allow-listed
+//!                              relative paths for the unsafe-allowlist
+//!                              rule (testing only)
+//!
+//! Exit code 0 when the tree audits clean, 1 when any finding exists.
+//! See `vq4all::analysis` for the rules.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use vq4all::analysis;
+
+fn main() -> ExitCode {
+    let arg_root = std::env::args().nth(1);
+    let root = std::env::var("VQ4ALL_AUDIT_ROOT")
+        .ok()
+        .or(arg_root)
+        .unwrap_or_else(|| ".".to_string());
+    let root = PathBuf::from(root);
+    let baseline = std::env::var("VQ4ALL_AUDIT_BASELINE")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| root.join("scripts/bench_baseline.json"));
+    let extra_allow: Vec<String> = std::env::var("VQ4ALL_AUDIT_EXTRA_ALLOW")
+        .map(|v| v.split(':').filter(|s| !s.is_empty()).map(str::to_string).collect())
+        .unwrap_or_default();
+
+    let report = analysis::run_audit(&root, &baseline, &extra_allow);
+    println!(
+        "vq4all-audit: {} files, {} unsafe sites, {} reference kernels (root: {})",
+        report.files_scanned,
+        report.unsafe_sites,
+        report.reference_kernels,
+        root.display()
+    );
+    if report.files_scanned == 0 {
+        eprintln!("vq4all-audit: FAIL — nothing scanned (wrong root?)");
+        return ExitCode::FAILURE;
+    }
+    if report.passed() {
+        println!("vq4all-audit: OK — all contracts hold");
+        return ExitCode::SUCCESS;
+    }
+    for f in &report.findings {
+        let loc = if f.line > 0 {
+            format!("{}:{}", f.file, f.line)
+        } else {
+            f.file.clone()
+        };
+        println!("  FAIL [{}] {loc}: {}", f.rule.name(), f.message);
+    }
+    eprintln!("vq4all-audit: FAIL — {} finding(s)", report.findings.len());
+    ExitCode::FAILURE
+}

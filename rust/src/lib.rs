@@ -16,6 +16,7 @@
 //!
 //! | module        | role |
 //! |---------------|------|
+//! | [`analysis`]  | `vq4all-audit`: repo-contract static analyzer (SAFETY discipline, unsafe allow-list, reference-kernel manifest) |
 //! | [`util`]      | in-house substrates: PRNG, JSON, CLI, config, logging, thread pool, stats |
 //! | [`tensor`]    | host tensors, `.vqt` I/O, host math (matmul/softmax/top-k) |
 //! | [`vq`]        | vector-quantization substrate: k-means, KDE sampling, candidate assignment, bit-packing, codebook formats |
@@ -28,6 +29,7 @@
 //! | [`bench`]     | micro-benchmark harness (criterion is unavailable offline) |
 //! | [`testing`]   | property-testing mini-framework |
 
+pub mod analysis;
 pub mod bench;
 pub mod coordinator;
 pub mod exp;

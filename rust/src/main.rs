@@ -119,8 +119,8 @@ fn codebook(dir: &Path, args: &vq4all::util::cli::Args) -> anyhow::Result<()> {
     let out = PathBuf::from(args.get_or("out", "codebook.vqt"));
     io::write_tensor(&out, &cb)?;
     println!(
-        "wrote {}x{} universal codebook from {:?} to {:?}",
-        manifest.config.k, manifest.config.d, nets, out
+        "wrote {}x{} universal codebook from {nets:?} to {out:?}",
+        manifest.config.k, manifest.config.d
     );
     Ok(())
 }

@@ -65,7 +65,7 @@ pub fn ternary_mse(w: &[f32], t: f32) -> f64 {
 
 /// Storage: 2 bits per weight (trit packed at 2b) + two f32 magnitudes.
 pub fn storage_bytes(num_weights: usize) -> usize {
-    (num_weights * 2 + 7) / 8 + 8
+    (num_weights * 2).div_ceil(8) + 8
 }
 
 #[cfg(test)]

@@ -85,7 +85,7 @@ pub fn quant_mse(w: &[f32], bits: u32, gran: Granularity) -> f64 {
 
 /// Storage bytes: packed integer values + f32 scales.
 pub fn storage_bytes(num_weights: usize, bits: u32, num_scales: usize) -> usize {
-    (num_weights * bits as usize + 7) / 8 + num_scales * 4
+    (num_weights * bits as usize).div_ceil(8) + num_scales * 4
 }
 
 #[cfg(test)]

@@ -323,9 +323,9 @@ impl Engine {
                 let res_ptr = SyncPtr::new(&mut results);
                 tp.parallel_for(n, 1, |start, end| {
                     for s in start..end {
-                        // SAFETY: each chunk owns disjoint shard + result
-                        // slots.
+                        // SAFETY: each chunk owns a disjoint shard slot.
                         let shard = unsafe { &mut shards_ptr.slice(s, 1)[0] };
+                        // SAFETY: and the matching disjoint result slot.
                         let out = unsafe { &mut res_ptr.slice(s, 1)[0] };
                         *out = shard.dispatch_one(&cfg, now, None);
                     }

@@ -49,7 +49,7 @@ pub fn decode_into(
     decode_rows_into(&batch.rows, packed, cb, codes_per_row, dst, pool)?;
     Ok(DecodeStats {
         codes_unpacked: batch.rows.len() * codes_per_row,
-        packed_bytes_read: batch.rows.len() * ((codes_per_row * packed.bits as usize + 7) / 8),
+        packed_bytes_read: batch.rows.len() * (codes_per_row * packed.bits as usize).div_ceil(8),
         utilization: batch.utilization(),
     })
 }
@@ -95,6 +95,9 @@ pub fn decode_rows_into(
     match pool {
         Some(tp) if tp.threads() > 1 && rows.len() > 1 => {
             let ptr = SyncPtr::new(dst);
+            tp.note_read(rows);
+            tp.note_read(&packed.data);
+            tp.note_read(&cb.words);
             tp.parallel_for(rows.len(), 1, |start, end| {
                 for i in start..end {
                     // SAFETY: each row position owns a disjoint dst window.

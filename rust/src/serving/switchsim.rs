@@ -188,7 +188,7 @@ mod tests {
         assert_eq!(r.weights.len(), 4 * codes_per_row * cb.d);
         assert_eq!(r.codes_unpacked, 4 * codes_per_row);
         // Per-row byte rounding: 20 codes @4b = 10 bytes per row.
-        assert_eq!(r.packed_bytes_read, 4 * ((codes_per_row * 4 + 7) / 8));
+        assert_eq!(r.packed_bytes_read, 4 * (codes_per_row * 4).div_ceil(8));
         assert!((r.utilization - 0.5).abs() < 1e-12);
         // Every decoded row equals the direct decode of its stream window,
         // and padded rows replicate their source rows exactly.

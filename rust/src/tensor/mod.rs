@@ -223,7 +223,7 @@ impl Tensor {
     pub fn reshape(mut self, shape: &[usize]) -> anyhow::Result<Self> {
         let n: usize = shape.iter().product();
         if n != self.len() {
-            anyhow::bail!("reshape {:?} -> {:?}: element count mismatch", self.shape, shape);
+            anyhow::bail!("reshape {:?} -> {shape:?}: element count mismatch", self.shape);
         }
         self.shape = shape.to_vec();
         Ok(self)

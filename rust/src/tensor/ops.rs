@@ -61,7 +61,7 @@ pub fn argmax(xs: &[f32]) -> usize {
 /// of the values — the pruned top-n scan in `vq::assign` is proven
 /// bit-identical against exactly this ordering.
 pub fn argmin_n(xs: &[f32], n: usize) -> Vec<usize> {
-    assert!(n <= xs.len(), "argmin_n: n {} > len {}", n, xs.len());
+    assert!(n <= xs.len(), "argmin_n: n {n} > len {}", xs.len());
     let key = |&a: &usize, &b: &usize| {
         xs[a]
             .partial_cmp(&xs[b])

@@ -113,11 +113,9 @@ macro_rules! prop_assert_eq {
         let (a, b) = (&$a, &$b);
         if a != b {
             return Err(format!(
-                "{} != {} ({:?} vs {:?})",
+                "{} != {} ({a:?} vs {b:?})",
                 stringify!($a),
-                stringify!($b),
-                a,
-                b
+                stringify!($b)
             ));
         }
     }};

@@ -4,13 +4,19 @@
 use crate::util::rng::Rng;
 
 /// Welford online mean/variance plus min/max.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct Running {
     n: u64,
     mean: f64,
     m2: f64,
     min: f64,
     max: f64,
+}
+
+impl Default for Running {
+    fn default() -> Self {
+        Running::new()
+    }
 }
 
 impl Running {

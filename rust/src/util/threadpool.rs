@@ -5,6 +5,19 @@
 //! (k-means assignment sweeps, Table-1 MSE scans) and the serving
 //! batcher tests.  Shutdown is explicit and panic-safe: a panicking job
 //! poisons the pool and surfaces as an error on `join`.
+//!
+//! # `race-audit` feature
+//!
+//! With `--features race-audit` every [`ThreadPool::parallel_for`] run
+//! keeps a shadow write-set: each [`SyncPtr::slice`] call records the
+//! byte range it hands out, attributed to the chunk that asked, and the
+//! join asserts (a) pairwise disjointness of the ranges across chunks
+//! and (b) disjointness against every shared input registered via
+//! [`ThreadPool::note_read`].  A violation surfaces as `Err` from
+//! `parallel_for` — turning "the chunks never overlap" from a comment
+//! into a checked contract.  The feature is for tests/CI only: recording
+//! takes a mutex per `slice` call, so release builds leave it off (every
+//! hook compiles to nothing).
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -24,6 +37,8 @@ pub struct ThreadPool {
     handles: Vec<thread::JoinHandle<()>>,
     panicked: Arc<AtomicBool>,
     in_flight: Arc<AtomicUsize>,
+    #[cfg(feature = "race-audit")]
+    audit: Arc<race_audit::AuditState>,
 }
 
 impl ThreadPool {
@@ -66,6 +81,8 @@ impl ThreadPool {
             handles,
             panicked,
             in_flight,
+            #[cfg(feature = "race-audit")]
+            audit: Arc::new(race_audit::AuditState::default()),
         }
     }
 
@@ -88,6 +105,35 @@ impl ThreadPool {
             anyhow::bail!("a pool job panicked");
         }
         Ok(())
+    }
+
+    /// Register `slice` as a shared read-only input of the next
+    /// [`ThreadPool::parallel_for`] run: under `race-audit` the join
+    /// fails if any chunk's [`SyncPtr::slice`] write range overlaps it.
+    /// Without the feature this compiles to nothing.
+    #[cfg(feature = "race-audit")]
+    pub fn note_read<T>(&self, slice: &[T]) {
+        let start = slice.as_ptr() as usize;
+        self.audit.note_read(start, start + std::mem::size_of_val(slice));
+    }
+
+    /// `race-audit`-only hook; a no-op in normal builds.
+    #[cfg(not(feature = "race-audit"))]
+    #[inline(always)]
+    pub fn note_read<T>(&self, _slice: &[T]) {}
+
+    /// Join-time audit: always drain the shadow write/read sets, then
+    /// report the join error (a panicked chunk) ahead of any overlap.
+    #[cfg(feature = "race-audit")]
+    fn finish_audit(&self, joined: anyhow::Result<()>) -> anyhow::Result<()> {
+        let audit = self.audit.check_and_clear();
+        joined.and(audit)
+    }
+
+    #[cfg(not(feature = "race-audit"))]
+    #[inline(always)]
+    fn finish_audit(&self, joined: anyhow::Result<()>) -> anyhow::Result<()> {
+        joined
     }
 }
 
@@ -124,47 +170,78 @@ impl ThreadPool {
     {
         let chunk = chunk.max(1);
         if n == 0 {
-            return self.wait_idle();
+            return self.finish_audit(self.wait_idle());
         }
         if self.threads() <= 1 || n <= chunk {
             // Inline path: same decomposition, no cross-thread dispatch.
+            // Chunks still enter the race audit so the overlap contract
+            // is checked even on serial runs (and negative tests can
+            // exercise a bad write plan without a real data race).
             let mut start = 0;
             while start < n {
                 let end = (start + chunk).min(n);
+                #[cfg(feature = "race-audit")]
+                let _guard = race_audit::ChunkGuard::enter(Arc::clone(&self.audit), start / chunk);
                 f(start, end);
                 start = end;
             }
-            return self.wait_idle();
+            return self.finish_audit(self.wait_idle());
         }
+        let f_ref: &(dyn Fn(usize, usize) + Send + Sync) = &f;
         // SAFETY: every job enqueued below decrements `in_flight` exactly
         // once (panics are caught by the worker loop), and `wait_idle`
         // blocks until the count reaches zero — so no job can observe `f`
         // after this frame returns, making the lifetime erasure sound.
-        let f_ref: &(dyn Fn(usize, usize) + Send + Sync) = &f;
         let f_static: &'static (dyn Fn(usize, usize) + Send + Sync) =
             unsafe { std::mem::transmute(f_ref) };
         let mut start = 0;
         while start < n {
             let end = (start + chunk).min(n);
+            #[cfg(feature = "race-audit")]
+            {
+                let audit = Arc::clone(&self.audit);
+                let index = start / chunk;
+                self.execute(move || {
+                    let _guard = race_audit::ChunkGuard::enter(audit, index);
+                    f_static(start, end)
+                });
+            }
+            #[cfg(not(feature = "race-audit"))]
             self.execute(move || f_static(start, end));
             start = end;
         }
-        self.wait_idle()
+        self.finish_audit(self.wait_idle())
     }
 }
 
 /// Raw-pointer wrapper for writing *disjoint* ranges of one slice from
 /// multiple pool jobs (the chunks handed out by [`ThreadPool::parallel_for`]
-/// never overlap, so each job owns its range exclusively).
+/// never overlap, so each job owns its range exclusively).  Under the
+/// `race-audit` feature every `slice` call is bounds-checked against the
+/// source slice and recorded in the pool's shadow write-set.
 #[derive(Clone, Copy)]
-pub struct SyncPtr<T>(*mut T);
+pub struct SyncPtr<T> {
+    ptr: *mut T,
+    #[cfg(feature = "race-audit")]
+    len: usize,
+}
 
+// SAFETY: SyncPtr is only a capability to re-derive `&mut [T]` windows;
+// callers uphold disjointness per `slice`'s contract (checked at join
+// under `race-audit`), so sending/sharing the pointer itself is sound
+// whenever `T: Send` (the data may move across threads, never aliased).
 unsafe impl<T: Send> Send for SyncPtr<T> {}
+// SAFETY: as above — `&SyncPtr<T>` only exposes `slice`, whose contract
+// forbids overlapping ranges across concurrent users.
 unsafe impl<T: Send> Sync for SyncPtr<T> {}
 
 impl<T> SyncPtr<T> {
     pub fn new(slice: &mut [T]) -> Self {
-        SyncPtr(slice.as_mut_ptr())
+        SyncPtr {
+            ptr: slice.as_mut_ptr(),
+            #[cfg(feature = "race-audit")]
+            len: slice.len(),
+        }
     }
 
     /// Reborrow `[start, start + len)` mutably.
@@ -174,7 +251,167 @@ impl<T> SyncPtr<T> {
     /// any range concurrently handed to another job.
     #[allow(clippy::mut_from_ref)]
     pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [T] {
-        std::slice::from_raw_parts_mut(self.0.add(start), len)
+        #[cfg(feature = "race-audit")]
+        {
+            assert!(
+                start.checked_add(len).is_some_and(|e| e <= self.len),
+                "race-audit: slice [{start}, {start}+{len}) outside the {}-element source",
+                self.len
+            );
+            let base = self.ptr as usize;
+            race_audit::note_write(
+                base + start * std::mem::size_of::<T>(),
+                base + (start + len) * std::mem::size_of::<T>(),
+            );
+        }
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+/// Shadow write-set race detector behind the `race-audit` feature — see
+/// the module docs for the contract it enforces.
+#[cfg(feature = "race-audit")]
+pub mod race_audit {
+    use std::cell::RefCell;
+    use std::sync::{Arc, Mutex};
+
+    /// One recorded write: byte range `[start, end)` claimed via
+    /// [`super::SyncPtr::slice`] by chunk `chunk` of the current run.
+    #[derive(Clone, Copy, Debug)]
+    struct WriteRec {
+        chunk: usize,
+        start: usize,
+        end: usize,
+    }
+
+    /// Per-pool shadow sets, drained at every `parallel_for` join.
+    #[derive(Default)]
+    pub struct AuditState {
+        writes: Mutex<Vec<WriteRec>>,
+        reads: Mutex<Vec<(usize, usize)>>,
+    }
+
+    thread_local! {
+        /// The (pool, chunk index) a `slice` call on this thread should
+        /// be attributed to; `None` outside a `parallel_for` chunk.
+        static CURRENT: RefCell<Option<(Arc<AuditState>, usize)>> = const { RefCell::new(None) };
+    }
+
+    /// RAII marker: while alive, `SyncPtr::slice` calls on this thread
+    /// are attributed to chunk `index` of `state`.  `parallel_for` holds
+    /// one around every chunk call, on both the inline and pooled paths.
+    pub struct ChunkGuard;
+
+    impl ChunkGuard {
+        pub fn enter(state: Arc<AuditState>, index: usize) -> ChunkGuard {
+            CURRENT.with(|c| *c.borrow_mut() = Some((state, index)));
+            ChunkGuard
+        }
+    }
+
+    impl Drop for ChunkGuard {
+        fn drop(&mut self) {
+            CURRENT.with(|c| *c.borrow_mut() = None);
+        }
+    }
+
+    /// Record a byte-range write for the current chunk (no-op outside a
+    /// `parallel_for` chunk — e.g. plain `execute` jobs).
+    pub fn note_write(start: usize, end: usize) {
+        CURRENT.with(|c| {
+            if let Some((state, chunk)) = c.borrow().as_ref() {
+                state.writes.lock().unwrap().push(WriteRec {
+                    chunk: *chunk,
+                    start,
+                    end,
+                });
+            }
+        });
+    }
+
+    impl AuditState {
+        pub(super) fn note_read(&self, start: usize, end: usize) {
+            if start < end {
+                self.reads.lock().unwrap().push((start, end));
+            }
+        }
+
+        /// Drain the shadow sets and check the disjointness contract.
+        /// Always drains — a failed run must not poison the next one.
+        pub(super) fn check_and_clear(&self) -> anyhow::Result<()> {
+            let mut writes = std::mem::take(&mut *self.writes.lock().unwrap());
+            let reads = std::mem::take(&mut *self.reads.lock().unwrap());
+            // Coalesce each chunk's own ranges first: a chunk re-slicing
+            // its window is sequential with itself and perfectly legal.
+            writes.sort_by_key(|w| (w.chunk, w.start));
+            let mut merged: Vec<WriteRec> = Vec::with_capacity(writes.len());
+            for w in writes {
+                if w.start >= w.end {
+                    continue;
+                }
+                match merged.last_mut() {
+                    Some(m) if m.chunk == w.chunk && w.start <= m.end => m.end = m.end.max(w.end),
+                    _ => merged.push(w),
+                }
+            }
+            // Cross-chunk sweep in address order.  `max1` is the
+            // furthest-reaching interval so far; `alt_end` bounds the
+            // furthest end among *other* chunks than `max1`'s (it may
+            // conservatively include `max1.chunk` entries — harmless,
+            // since post-coalescing a chunk never starts before its own
+            // earlier end, so those can't trip the comparison).
+            merged.sort_by_key(|w| (w.start, w.end));
+            let mut max1: Option<(usize, usize)> = None; // (end, chunk)
+            let mut alt_end = 0usize;
+            for w in &merged {
+                let other_end = match max1 {
+                    Some((_, chunk)) if chunk == w.chunk => alt_end,
+                    Some((end, _)) => end,
+                    None => 0,
+                };
+                if w.start < other_end {
+                    anyhow::bail!(
+                        "race-audit: chunk {} write [{:#x}, {:#x}) overlaps another \
+                         chunk's write ending at {:#x}",
+                        w.chunk,
+                        w.start,
+                        w.end,
+                        other_end
+                    );
+                }
+                match &mut max1 {
+                    Some((end, chunk)) if *chunk == w.chunk => *end = (*end).max(w.end),
+                    Some((end, chunk)) => {
+                        if w.end >= *end {
+                            alt_end = alt_end.max(*end);
+                            *end = w.end;
+                            *chunk = w.chunk;
+                        } else {
+                            alt_end = alt_end.max(w.end);
+                        }
+                    }
+                    None => max1 = Some((w.end, w.chunk)),
+                }
+            }
+            // Shared inputs: no chunk may write into a registered read
+            // range (reads are few — a linear scan per read is fine).
+            for &(rs, re) in &reads {
+                for w in &merged {
+                    if w.start < re && rs < w.end {
+                        anyhow::bail!(
+                            "race-audit: chunk {} write [{:#x}, {:#x}) overlaps shared \
+                             read range [{:#x}, {:#x})",
+                            w.chunk,
+                            w.start,
+                            w.end,
+                            rs,
+                            re
+                        );
+                    }
+                }
+            }
+            Ok(())
+        }
     }
 }
 
@@ -190,7 +427,7 @@ where
         return Ok(());
     }
     let chunks = pool.threads().max(1);
-    let chunk = ((n + chunks - 1) / chunks).max(min_chunk.max(1));
+    let chunk = n.div_ceil(chunks).max(min_chunk.max(1));
     let f = Arc::new(f);
     let mut start = 0;
     while start < n {
@@ -343,5 +580,81 @@ mod tests {
         })
         .unwrap();
         assert!(out.iter().enumerate().all(|(i, &v)| v == i as u64));
+    }
+
+    #[cfg(feature = "race-audit")]
+    mod race_audit_detection {
+        use super::*;
+
+        #[test]
+        fn overlapping_chunk_writes_trip_the_audit() {
+            // One worker forces the inline path, so the chunks with the
+            // deliberately-overlapping write plan run *sequentially* —
+            // no real data race happens, only the recorded plan is bad,
+            // which is exactly what the join must reject.
+            let pool = ThreadPool::new(1);
+            let mut out = vec![0u32; 64];
+            let ptr = SyncPtr::new(&mut out);
+            let err = pool
+                .parallel_for(64, 16, |s, _| {
+                    // SAFETY: in-bounds and sequential on the inline
+                    // path; the cross-chunk overlap is the point.
+                    let w = unsafe { ptr.slice(0, 8) };
+                    w[0] = s as u32;
+                })
+                .unwrap_err();
+            assert!(err.to_string().contains("race-audit"), "got: {err}");
+            // The audit drains at the join: the pool is not poisoned and
+            // a following disjoint run passes clean.
+            let ok = pool.parallel_for(64, 16, |s, e| {
+                // SAFETY: parallel_for ranges are disjoint.
+                let w = unsafe { ptr.slice(s, e - s) };
+                w.fill(1);
+            });
+            assert!(ok.is_ok(), "clean run after violation: {ok:?}");
+        }
+
+        #[test]
+        fn disjoint_writes_pass_under_audit_on_the_pooled_path() {
+            let pool = ThreadPool::new(4);
+            let mut out = vec![0u8; 501];
+            let n = out.len();
+            let ptr = SyncPtr::new(&mut out);
+            pool.parallel_for(n, 32, |s, e| {
+                // SAFETY: parallel_for ranges are disjoint.
+                unsafe { ptr.slice(s, e - s) }.fill(7);
+            })
+            .unwrap();
+            assert!(out.iter().all(|&v| v == 7));
+        }
+
+        #[test]
+        fn write_into_registered_read_range_trips_the_audit() {
+            let pool = ThreadPool::new(1);
+            let mut buf = vec![0u32; 32];
+            let ptr = SyncPtr::new(&mut buf);
+            // Register the same buffer as a shared read-only input, then
+            // write it from chunks: disjoint across chunks, but a
+            // read/write race against the registered range.
+            pool.note_read(&buf);
+            let err = pool
+                .parallel_for(2, 1, |s, _| {
+                    // SAFETY: in-bounds, disjoint across chunks, and
+                    // sequential on the inline path; the conflict with
+                    // the registered read range is the point.
+                    unsafe { ptr.slice(s, 1) }[0] = 1;
+                })
+                .unwrap_err();
+            assert!(err.to_string().contains("read range"), "got: {err}");
+        }
+
+        #[test]
+        #[should_panic(expected = "race-audit")]
+        fn out_of_bounds_slice_asserts() {
+            let mut buf = vec![0u8; 8];
+            let ptr = SyncPtr::new(&mut buf);
+            // SAFETY: never reached — the bounds assertion fires first.
+            let _ = unsafe { ptr.slice(4, 8) };
+        }
     }
 }

@@ -156,6 +156,8 @@ pub fn candidates_with(
                 // SAFETY: parallel_for chunks are disjoint group ranges,
                 // so the [start*n, end*n) windows never overlap.
                 let a = unsafe { assign_ptr.slice(start * n, (end - start) * n) };
+                // SAFETY: same disjoint [start*n, end*n) windows, in the
+                // separately-allocated distance buffer.
                 let d = unsafe { dist_ptr.slice(start * n, (end - start) * n) };
                 kernel(start, end, a, d);
             })

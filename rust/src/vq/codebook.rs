@@ -97,6 +97,8 @@ impl Codebook {
         match pool {
             Some(pool) if pool.threads() > 1 && s > CHUNK => {
                 let out_ptr = SyncPtr::new(out);
+                pool.note_read(codes);
+                pool.note_read(&self.words);
                 pool.parallel_for(s, CHUNK, |start, end| {
                     // SAFETY: parallel_for chunks are disjoint code ranges,
                     // so the output windows never overlap.
@@ -251,6 +253,9 @@ impl Codebook {
         match pool {
             Some(pool) if pool.threads() > 1 && s > CHUNK => {
                 let out_ptr = SyncPtr::new(out);
+                pool.note_read(assign);
+                pool.note_read(ratios);
+                pool.note_read(&self.words);
                 pool.parallel_for(s, CHUNK, |start, end| {
                     // SAFETY: disjoint group windows per chunk.
                     let dst = unsafe { out_ptr.slice(start * self.d, (end - start) * self.d) };
@@ -297,7 +302,7 @@ impl Codebook {
         if s == 0 {
             return (0.0, codes);
         }
-        let nchunks = (s + CHUNK - 1) / CHUNK;
+        let nchunks = s.div_ceil(CHUNK);
         let mut errs = vec![0.0f64; nchunks];
         let prune = self.d >= ops::PRUNE_MIN_D;
 
@@ -330,11 +335,13 @@ impl Codebook {
             Some(pool) if pool.threads() > 1 && s > CHUNK => {
                 let codes_ptr = SyncPtr::new(&mut codes);
                 let errs_ptr = SyncPtr::new(&mut errs);
+                pool.note_read(flat);
+                pool.note_read(&self.words);
                 pool.parallel_for(s, CHUNK, |start, end| {
-                    // SAFETY: parallel_for ranges are disjoint, and each
-                    // chunk index maps to a unique error slot.
+                    // SAFETY: parallel_for ranges are disjoint.
                     let chunk = unsafe { codes_ptr.slice(start, end - start) };
                     let e = kernel(start, end, chunk);
+                    // SAFETY: each chunk index maps to a unique error slot.
                     unsafe { errs_ptr.slice(start / CHUNK, 1)[0] = e };
                 })
                 .expect("encode_nearest worker panicked");
@@ -366,7 +373,7 @@ impl Codebook {
         if s == 0 {
             return (0.0, codes);
         }
-        let nchunks = (s + CHUNK - 1) / CHUNK;
+        let nchunks = s.div_ceil(CHUNK);
         let mut errs = vec![0.0f64; nchunks];
         let mut start = 0;
         while start < s {

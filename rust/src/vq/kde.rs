@@ -174,7 +174,7 @@ impl KdeSampler {
         let h2 = (self.bandwidth as f64) * (self.bandwidth as f64);
         let log_norm = -0.5 * self.d as f64 * (2.0 * std::f64::consts::PI * h2).ln();
         let n = self.n();
-        let nchunks = (n + DENSITY_CHUNK - 1) / DENSITY_CHUNK;
+        let nchunks = n.div_ceil(DENSITY_CHUNK);
         let mut partials = vec![0.0f64; nchunks];
 
         let kernel = |start: usize, end: usize| -> f64 {
@@ -190,6 +190,8 @@ impl KdeSampler {
         match pool {
             Some(tp) if tp.threads() > 1 && n > DENSITY_CHUNK => {
                 let part_ptr = SyncPtr::new(&mut partials);
+                tp.note_read(&self.pool);
+                tp.note_read(q);
                 tp.parallel_for(n, DENSITY_CHUNK, |start, end| {
                     let p = kernel(start, end);
                     // SAFETY: one slot per chunk index.

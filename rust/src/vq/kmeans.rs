@@ -156,7 +156,7 @@ fn assign_sweep(
     if s == 0 {
         return 0.0;
     }
-    let nchunks = (s + CHUNK - 1) / CHUNK;
+    let nchunks = s.div_ceil(CHUNK);
     let mut errs = vec![0.0f64; nchunks];
     let prune = d >= ops::PRUNE_MIN_D;
     let norms: Vec<f32> = if prune {
@@ -194,11 +194,13 @@ fn assign_sweep(
         Some(pool) if pool.threads() > 1 && s > CHUNK => {
             let codes_ptr = SyncPtr::new(codes);
             let errs_ptr = SyncPtr::new(&mut errs);
+            pool.note_read(flat);
+            pool.note_read(centers);
             pool.parallel_for(s, CHUNK, |start, end| {
-                // SAFETY: parallel_for ranges are disjoint, and each chunk
-                // index maps to a unique error slot.
+                // SAFETY: parallel_for ranges are disjoint.
                 let chunk = unsafe { codes_ptr.slice(start, end - start) };
                 let e = kernel(start, end, chunk);
+                // SAFETY: each chunk index maps to a unique error slot.
                 unsafe { errs_ptr.slice(start / CHUNK, 1)[0] = e };
             })
             .expect("k-means assignment sweep worker panicked");
@@ -232,7 +234,7 @@ fn kmeanspp_init(
     let first = rng.below(s);
     centers.extend_from_slice(&flat[first * d..(first + 1) * d]);
     let mut dist2 = vec![f32::INFINITY; s];
-    let nchunks = (s + CHUNK - 1) / CHUNK;
+    let nchunks = s.div_ceil(CHUNK);
     let mut partials = vec![0.0f64; nchunks];
     for c in 1..k {
         let last = &centers[(c - 1) * d..c * d];
@@ -255,9 +257,10 @@ fn kmeanspp_init(
                 let dist_ptr = SyncPtr::new(&mut dist2);
                 let part_ptr = SyncPtr::new(&mut partials);
                 pool.parallel_for(s, CHUNK, |start, end| {
-                    // SAFETY: disjoint chunk ranges / unique partial slots.
+                    // SAFETY: parallel_for chunk ranges are disjoint.
                     let d2 = unsafe { dist_ptr.slice(start, end - start) };
                     let p = kernel(start, end, d2);
+                    // SAFETY: each chunk index maps to a unique partial slot.
                     unsafe { part_ptr.slice(start / CHUNK, 1)[0] = p };
                 })
                 .expect("k-means++ distance sweep worker panicked");

@@ -55,7 +55,7 @@ pub fn pack_codes(codes: &[u32], bits: u32) -> PackedCodes {
         assert!(c <= mask, "code {c} at {i} exceeds {bits} bits");
     }
     let total_bits = codes.len() * bits as usize;
-    let mut data = vec![0u8; (total_bits + 7) / 8];
+    let mut data = vec![0u8; total_bits.div_ceil(8)];
     let mut bitpos = 0usize;
     for &c in codes {
         let mut v = c as u64;
@@ -156,9 +156,9 @@ fn unpack_range_wordwise(p: &PackedCodes, start: usize, end: usize, dst: &mut [u
     let mask = (1u64 << bits) - 1;
     let data = &p.data;
     // Largest code index whose 8-byte window fits: idx*bits/8 + 8 <= len
-    // <=> idx*bits < (len - 7) * 8  <=>  idx <= ((len - 7) * 8 - 1) / bits.
+    // <=> idx*bits < (len - 7) * 8  <=>  idx < ceil((len - 7) * 8 / bits).
     let fit = if data.len() >= 8 {
-        (((data.len() - 7) * 8 - 1) / bits + 1).min(end).max(start)
+        ((data.len() - 7) * 8).div_ceil(bits).min(end).max(start)
     } else {
         start
     };
@@ -314,7 +314,7 @@ mod tests {
     fn packed_size_is_tight() {
         let codes = vec![1u32; 100];
         let p = pack_codes(&codes, 3);
-        assert_eq!(p.bytes(), (100 * 3 + 7) / 8);
+        assert_eq!(p.bytes(), (100usize * 3).div_ceil(8));
     }
 
     #[test]

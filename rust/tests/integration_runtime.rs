@@ -55,12 +55,11 @@ fn manifest_loads_and_is_consistent() {
         // Every executable's HLO file must exist.
         for (ename, espec) in &net.executables {
             let p = m.path(&espec.hlo);
-            assert!(p.exists(), "{}::{} HLO missing at {p:?}", net.name, ename);
+            assert!(p.exists(), "{}::{ename} HLO missing at {p:?}", net.name);
             assert!(
                 !espec.inputs.is_empty() && !espec.outputs.is_empty(),
-                "{}::{} has an empty signature",
-                net.name,
-                ename
+                "{}::{ename} has an empty signature",
+                net.name
             );
         }
         // Layer table must tile s_total exactly.

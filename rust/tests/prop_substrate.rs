@@ -234,7 +234,7 @@ fn pack_unpack_roundtrip_and_parallel_unpack_identical() {
         let codes: Vec<u32> = (0..len).map(|_| (g.rng.next_u64() as u32) & mask).collect();
         let p = pack_codes(&codes, bits);
         prop_assert_eq!(p.count, codes.len());
-        prop_assert_eq!(p.bytes(), (len * bits as usize + 7) / 8);
+        prop_assert_eq!(p.bytes(), (len * bits as usize).div_ceil(8));
 
         let serial = unpack_codes(&p);
         prop_assert_eq!(serial.clone(), codes.clone());
@@ -1020,4 +1020,27 @@ fn area_model_rom_always_denser_than_sram() {
         prop_assert!(m.sram_mm2(bytes * 2) > m.sram_mm2(bytes), "SRAM not monotone");
         Ok(())
     });
+}
+
+/// Under `--features race-audit` this whole suite runs with the
+/// ThreadPool shadow write-set armed — every parallel kernel above is
+/// re-checked for disjoint chunk writes at each join.  This marker
+/// proves the detector is actually live in that configuration: a
+/// deliberately overlapping write plan must be rejected.  The plan is
+/// recorded through the public `note_write` hook with fabricated
+/// addresses, so no memory is actually raced (and no `unsafe` leaks
+/// into this non-allowlisted test file — the contract audit checks).
+#[cfg(feature = "race-audit")]
+#[test]
+fn race_audit_detector_is_armed() {
+    use vq4all::util::threadpool::race_audit;
+    let pool = ThreadPool::new(1);
+    let err = pool
+        .parallel_for(32, 8, |_, _| {
+            // Every chunk claims the same byte range; the join must
+            // report the cross-chunk overlap.
+            race_audit::note_write(0x1000, 0x1008);
+        })
+        .unwrap_err();
+    assert!(err.to_string().contains("race-audit"), "got: {err}");
 }

@@ -5,7 +5,14 @@
 #   scripts/verify.sh --check-json       # ... + row-set diff against the committed baseline
 #   scripts/verify.sh --gates-only [J]   # only the JSON gates, against J
 #                                        #   (default: $VQ4ALL_BENCH_JSON / BENCH_hotpath.json)
+#   scripts/verify.sh --audit            # only the repo-native contract audit
+#                                        #   (cargo run --bin audit; standalone —
+#                                        #   combines with no other flag)
 #   VQ4ALL_BENCH_MS=300 scripts/verify.sh        # longer measurements
+#
+# Flags are validated strictly: unknown flags, duplicate flags, and
+# conflicting combinations (--audit with anything else) exit 2 with the
+# usage line instead of silently running the wrong mode.
 #
 # Environment overrides:
 #   VQ4ALL_BENCH_MS       per-bench measurement budget in ms (default 60)
@@ -40,29 +47,76 @@
 set -uo pipefail
 cd "$(dirname "$0")/.."
 
+usage() {
+  echo "usage: scripts/verify.sh [--check-json] [--gates-only [bench.json]]" >&2
+  echo "       scripts/verify.sh --audit" >&2
+  exit 2
+}
+
 mode=full
 check_json=0
 gates_json=""
+audit=0
 while [ $# -gt 0 ]; do
   case "$1" in
     --check-json)
+      if [ "$check_json" = 1 ]; then
+        echo "duplicate flag: --check-json" >&2
+        usage
+      fi
       check_json=1
       ;;
     --gates-only)
+      if [ "$mode" = gates ]; then
+        echo "duplicate flag: --gates-only" >&2
+        usage
+      fi
       mode=gates
       if [ $# -gt 1 ] && [ "${2#--}" = "$2" ]; then
         gates_json="$2"
         shift
       fi
       ;;
+    --audit)
+      if [ "$audit" = 1 ]; then
+        echo "duplicate flag: --audit" >&2
+        usage
+      fi
+      audit=1
+      ;;
     *)
       echo "unknown argument: $1" >&2
-      echo "usage: scripts/verify.sh [--check-json] [--gates-only [bench.json]]" >&2
-      exit 2
+      usage
       ;;
   esac
   shift
 done
+
+if [ "$audit" = 1 ] && { [ "$check_json" = 1 ] || [ "$mode" = gates ]; }; then
+  echo "conflicting flags: --audit runs standalone" >&2
+  usage
+fi
+
+if [ "$audit" = 1 ]; then
+  # Standalone contract audit: SAFETY comments, the unsafe-module
+  # allow-list, reference-kernel coverage, float accumulation in
+  # parallel_for closures.  Env overrides (VQ4ALL_AUDIT_ROOT,
+  # VQ4ALL_AUDIT_BASELINE, VQ4ALL_AUDIT_EXTRA_ALLOW) pass through to the
+  # binary — CI uses them to seed violations.
+  echo "== contract audit: cargo run --release --bin audit =="
+  if cargo run --release --bin audit; then
+    echo
+    echo "== summary (mode: audit) =="
+    echo "  contract audit:               PASS"
+    echo "verify OK"
+    exit 0
+  fi
+  echo
+  echo "== summary (mode: audit) =="
+  echo "  contract audit:               FAIL"
+  echo "verify FAILED"
+  exit 1
+fi
 
 build_status=SKIP
 test_status=SKIP
