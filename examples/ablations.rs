@@ -14,19 +14,21 @@
 //! * `alpha`   — PNC threshold sweep (Figure 4)
 //! * `codebook`— KDE source-combination study (Table 6)
 //! * `init`    — assignment-init study: random/cosine/euclid/+ratio (Table 7)
+//! * `stages`  — residual-stage sweep at matched total bits (universal
+//!   codebook, prefix-restricted stages; `exp::stages`)
 //! * `all`     — everything above
 
 use std::path::PathBuf;
 
 use vq4all::coordinator::Campaign;
-use vq4all::exp::{fig4, table5, table6_7};
+use vq4all::exp::{fig4, stages, table5, table6_7};
 use vq4all::util::cli::Cli;
 use vq4all::util::config::CampaignConfig;
 
 fn main() -> anyhow::Result<()> {
     vq4all::util::logging::init_from_env();
     let args = Cli::new("ablations", "VQ4ALL ablation studies (Table 5, Fig 4, Tables 6/7)")
-        .opt("study", "all", "n | parts | index | alpha | codebook | init | all")
+        .opt("study", "all", "n | parts | index | alpha | codebook | init | stages | all")
         .opt("net", "mini_resnet18", "network under ablation")
         .opt("steps", "100", "construction steps per run")
         .opt("artifacts", "artifacts", "artifacts directory")
@@ -107,6 +109,12 @@ fn main() -> anyhow::Result<()> {
         ];
         let rows = table6_7::assign_init(&campaign, &net, &variants)?;
         table6_7::render(&format!("Table 7 — assignment init ({net})"), &rows).print();
+    }
+
+    if run("stages") {
+        println!("\n== residual-stage sweep at matched total bits (exp::stages) ==");
+        let rows = stages::run(&campaign.manifest, &stages::default_splits())?;
+        stages::render(&rows).print();
     }
 
     Ok(())

@@ -27,6 +27,7 @@ use vq4all::rom::memsim::{switch_storm, CodebookPlacement, MemSim, NetCodebooks}
 use vq4all::tensor::io;
 use vq4all::util::cli::Cli;
 use vq4all::util::config::CampaignConfig;
+use vq4all::vq::Utilization;
 
 fn main() -> anyhow::Result<()> {
     vq4all::util::logging::init_from_env();
@@ -95,6 +96,24 @@ fn main() -> anyhow::Result<()> {
     // Stage 2+3 — the campaign.
     let result = campaign.run(&refs)?;
     report::table(&result).print();
+
+    // Codeword-utilization audit (the collapse/under-use diagnostics of
+    // arXiv 2309.17361): what fraction of the universal codebook each
+    // constructed network actually addresses, and how far its empirical
+    // code entropy sits below the log2(k) budget the packed width pays.
+    println!("\ncodeword utilization (k = {}):", campaign.manifest.config.k);
+    for n in &result.nets {
+        let u = Utilization::from_codes(&n.codes, campaign.manifest.config.k);
+        println!(
+            "  {}: {}/{} codewords used ({:.1}%), code entropy {:.2} of {:.1} bits",
+            n.name,
+            u.used,
+            u.k,
+            u.used_fraction() * 100.0,
+            u.entropy_bits,
+            (u.k as f64).log2()
+        );
+    }
 
     let mut total_float = 0usize;
     let mut total_packed = 0usize;

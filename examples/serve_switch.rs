@@ -22,7 +22,7 @@ use vq4all::serving::{Admission, Engine, EngineConfig, HostedNet};
 use vq4all::util::cli::Cli;
 use vq4all::util::config::CampaignConfig;
 use vq4all::util::rng::Rng;
-use vq4all::vq::Codebook;
+use vq4all::vq::{Codebook, StagedCodes};
 
 fn main() -> anyhow::Result<()> {
     vq4all::util::logging::init_from_env();
@@ -84,7 +84,7 @@ fn main() -> anyhow::Result<()> {
         // the artifact's fixed eval batch.
         hosted.push(HostedNet {
             name: name.clone(),
-            packed: res.packed.clone(),
+            codes: StagedCodes::single(res.packed.clone()),
             codebook: universal.clone(),
             codes_per_row: (res.packed.count / 64).max(1),
             device_batch: sess.net.eval_batch,

@@ -21,7 +21,7 @@ use vq4all::serving::{Engine, EngineConfig, HostedNet};
 use vq4all::util::cli::Cli;
 use vq4all::util::config::CampaignConfig;
 use vq4all::util::rng::Rng;
-use vq4all::vq::Codebook;
+use vq4all::vq::{Codebook, StagedCodes};
 
 fn build_server(args: &vq4all::util::cli::Args) -> anyhow::Result<TcpServer> {
     let cfg = CampaignConfig {
@@ -61,7 +61,7 @@ fn build_server(args: &vq4all::util::cli::Args) -> anyhow::Result<TcpServer> {
         );
         hosted.push(HostedNet {
             name: name.clone(),
-            packed: res.packed.clone(),
+            codes: StagedCodes::single(res.packed.clone()),
             codebook: universal.clone(),
             codes_per_row: (res.packed.count / 64).max(1),
             device_batch: sess.net.eval_batch,

@@ -10,11 +10,15 @@
 //!   (`VQ4ALL_BENCH_JSON` overrides the path)
 //! * **legacy vs specialized** kernel rows (thread-count independent,
 //!   gated >= 1.0x unconditionally): `unpack_wordwise` (bit-loop vs u64
-//!   window loads), `encode_pruned` (full scan vs norm-seeded
-//!   partial-distance pruning, bit-identity asserted in-bench), and
-//!   `fused_decode` (reference fused decode vs wordwise + small-d
-//!   gather) — plus absolute `rows_per_sec` / `codes_per_sec` keys in
-//!   the `engine` summary from the cold-cache decode run
+//!   window loads), `pack_wordwise` (its encode-side mirror),
+//!   `encode_pruned` (full scan vs norm-seeded partial-distance pruning,
+//!   bit-identity asserted in-bench), `fused_decode` (reference fused
+//!   decode vs wordwise + small-d gather), `staged_encode` (naive
+//!   per-stage residual scan vs the pruned staged encoder), and
+//!   `staged_decode` (scalar stage-summed decode vs the fused
+//!   gather-accumulate) — plus absolute `rows_per_sec` /
+//!   `codes_per_sec` keys in the `engine` summary from the cold-cache
+//!   decode run
 //! * packed-code decode (the serving weight-stream path)
 //! * host weighted reconstruct (checkpoint validation path)
 //! * PJRT step latency: `train_step` / `eval_hard` / `infer_hard` on
@@ -37,7 +41,8 @@ use vq4all::vq::assign::{candidates_with, AssignInit};
 use vq4all::vq::kde::KdeSampler;
 use vq4all::vq::kmeans::{kmeans_with, KmeansOpts};
 use vq4all::vq::pack::{
-    pack_codes, unpack_codes, unpack_codes_with, unpack_range, unpack_range_reference,
+    pack_codes, pack_codes_reference, unpack_codes, unpack_codes_with, unpack_range,
+    unpack_range_reference, StagedCodes,
 };
 use vq4all::vq::ratios::max_ratios_with;
 use vq4all::vq::Codebook;
@@ -164,6 +169,25 @@ fn main() -> anyhow::Result<()> {
     });
     comparisons.push(Comparison::new("unpack_wordwise", &ww_legacy, &ww_spec, 1));
 
+    // --- legacy vs specialized: word-level pack ------------------------------
+    // The encode-side mirror of `unpack_wordwise`: the same 2M-code @5b
+    // stream packed through the retained bit-at-a-time reference vs the
+    // u64-accumulator kernel, byte-identity asserted in-bench.
+    let pk_legacy = b.bench("pack 2M codes @5b [legacy bit-loop]", || {
+        let p = pack_codes_reference(&codes5, 5);
+        std::hint::black_box(p.data.len());
+    });
+    let pk_spec = b.bench("pack 2M codes @5b [wordwise]", || {
+        let p = pack_codes(&codes5, 5);
+        std::hint::black_box(p.data.len());
+    });
+    comparisons.push(Comparison::new("pack_wordwise", &pk_legacy, &pk_spec, 1));
+    assert_eq!(
+        pack_codes_reference(&codes5, 5).data,
+        packed5.data,
+        "wordwise pack bytes diverged from the bit-loop reference"
+    );
+
     // --- legacy vs specialized: pruned nearest-codeword scan ----------------
     // d=16 (>= PRUNE_MIN_D) so the norm-seeded partial-distance scan
     // actually dispatches; the kernels are proven bit-identical, and the
@@ -200,6 +224,27 @@ fn main() -> anyhow::Result<()> {
         assert_eq!(c_ref, c_new, "pruned encode codes diverged");
     }
 
+    // --- legacy vs specialized: staged residual encode -----------------------
+    // The same 4k-group d=16 workload at a 2-stage [5, 5] split: the
+    // naive full-prefix reference scan vs the production encoder (the
+    // PR-5 pruned scan per stage, wordwise pack).  Proven bit-identical
+    // by the staged prop_substrate properties and asserted here too.
+    let se_legacy = b.bench("staged encode 4k groups d=16 [5,5] [legacy full scan]", || {
+        let e = cb16.encode_staged_reference(&flat16, &[5, 5]);
+        std::hint::black_box(e.mse);
+    });
+    let se_spec = b.bench("staged encode 4k groups d=16 [5,5] [pruned per stage]", || {
+        let e = cb16.encode_staged(&flat16, &[5, 5], None);
+        std::hint::black_box(e.mse);
+    });
+    comparisons.push(Comparison::new("staged_encode", &se_legacy, &se_spec, 1));
+    {
+        let r = cb16.encode_staged_reference(&flat16, &[5, 5]);
+        let s = cb16.encode_staged(&flat16, &[5, 5], None);
+        assert_eq!(r.mse.to_bits(), s.mse.to_bits(), "staged encode MSE diverged");
+        assert_eq!(r.codes, s.codes, "staged encode streams diverged");
+    }
+
     // --- legacy vs specialized: fused streaming decode ----------------------
     // 256k codes @5b against the k=256 d=4 serving codebook: the
     // reference (bit-loop unpack + runtime-length copies) vs the fused
@@ -216,6 +261,32 @@ fn main() -> anyhow::Result<()> {
     });
     comparisons.push(Comparison::new("fused_decode", &fd_legacy, &fd_spec, 1));
 
+    // --- legacy vs specialized: staged residual decode -----------------------
+    // The same 256k-code window as a 2-stage stream (5b + 3b against the
+    // k=256 d=4 serving codebook): the scalar stage-summed reference vs
+    // the fused kernel (stage-0 gather write, later stages wordwise
+    // unpack + gather-accumulate) every serving decode now rides.
+    let codes3: Vec<u32> = (0..packed5.count).map(|_| rng.below(8) as u32).collect();
+    let staged2 = StagedCodes::new(vec![packed5.clone(), pack_codes(&codes3, 3)]);
+    let mut staged_out = vec![0.0f32; fuse_n * cb.d];
+    let sd_legacy = b.bench("staged decode 256k codes 2-stage d=4 [legacy]", || {
+        cb.decode_staged_packed_into_reference(&staged2, 0, fuse_n, &mut staged_out);
+        std::hint::black_box(staged_out[0]);
+    });
+    let sd_spec = b.bench("staged decode 256k codes 2-stage d=4 [fused]", || {
+        cb.decode_staged_packed_into(&staged2, 0, fuse_n, &mut staged_out);
+        std::hint::black_box(staged_out[0]);
+    });
+    comparisons.push(Comparison::new("staged_decode", &sd_legacy, &sd_spec, 1));
+    {
+        let mut a = vec![0.0f32; fuse_n * cb.d];
+        let mut bb = vec![0.0f32; fuse_n * cb.d];
+        cb.decode_staged_packed_into_reference(&staged2, 0, fuse_n, &mut a);
+        cb.decode_staged_packed_into(&staged2, 0, fuse_n, &mut bb);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&bb), "staged decode diverged from reference");
+    }
+
     let mut out = vec![0.0f32; codes.len() * 4];
     b.bench("hard decode 100k codes (400k weights)", || {
         cb.decode(&codes, &mut out);
@@ -229,7 +300,7 @@ fn main() -> anyhow::Result<()> {
     let codes8: Vec<u32> = (0..device_rows * codes_per_row)
         .map(|_| rng.below(256) as u32)
         .collect();
-    let packed8 = pack_codes(&codes8, 8);
+    let packed8 = StagedCodes::single(pack_codes(&codes8, 8));
     let reqs: Vec<Request> = (0..48u64)
         .map(|i| Request {
             id: i,
@@ -256,7 +327,7 @@ fn main() -> anyhow::Result<()> {
     let cb_arc = Arc::new(cb.clone());
     let engine_net = HostedNet {
         name: "bench".into(),
-        packed: packed8.clone(),
+        codes: packed8.clone(),
         codebook: cb_arc.clone(),
         codes_per_row,
         device_batch: device_rows,
@@ -312,7 +383,7 @@ fn main() -> anyhow::Result<()> {
     let hosted_multi: Vec<HostedNet> = (0..4)
         .map(|i| HostedNet {
             name: format!("net{i}"),
-            packed: packed8.clone(),
+            codes: packed8.clone(),
             codebook: cb_arc.clone(),
             codes_per_row,
             device_batch: 16,

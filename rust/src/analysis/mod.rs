@@ -57,6 +57,9 @@ pub const REFERENCE_KERNELS: &[(&str, &str)] = &[
     ("unpack_range_reference", "unpack_wordwise"),
     ("decode_packed_into_reference", "fused_decode"),
     ("encode_nearest_reference", "encode_pruned"),
+    ("pack_codes_reference", "pack_wordwise"),
+    ("encode_staged_reference", "staged_encode"),
+    ("decode_staged_packed_into_reference", "staged_decode"),
 ];
 
 /// Directories (relative to the repo root) the audit walks.
@@ -171,13 +174,15 @@ mod tests {
 
     const CLEAN_BASELINE: &str =
         "{\"comparisons\": [{\"name\": \"unpack_wordwise\"}, {\"name\": \"fused_decode\"}, \
-         {\"name\": \"encode_pruned\"}]}";
+         {\"name\": \"encode_pruned\"}, {\"name\": \"pack_wordwise\"}, \
+         {\"name\": \"staged_encode\"}, {\"name\": \"staged_decode\"}]}";
 
     fn prop_file() -> (String, String) {
         (
             "rust/tests/prop_substrate.rs".to_string(),
             "fn p() { unpack_range_reference(); decode_packed_into_reference(); \
-             encode_nearest_reference(); }\n"
+             encode_nearest_reference(); pack_codes_reference(); \
+             encode_staged_reference(); decode_staged_packed_into_reference(); }\n"
                 .to_string(),
         )
     }
@@ -188,6 +193,7 @@ mod tests {
             (
                 "rust/src/vq/pack.rs".to_string(),
                 "pub fn unpack_range_reference() {}\n\
+                 pub fn pack_codes_reference() {}\n\
                  // SAFETY: chunks are disjoint.\n\
                  fn f(p: SyncPtr<u32>) { let _ = unsafe { p.slice(0, 1) }; }\n"
                     .to_string(),
@@ -195,7 +201,9 @@ mod tests {
             (
                 "rust/src/vq/codebook.rs".to_string(),
                 "pub fn decode_packed_into_reference() {}\n\
-                 pub fn encode_nearest_reference() {}\n"
+                 pub fn encode_nearest_reference() {}\n\
+                 pub fn encode_staged_reference() {}\n\
+                 pub fn decode_staged_packed_into_reference() {}\n"
                     .to_string(),
             ),
             prop_file(),
@@ -203,7 +211,7 @@ mod tests {
         let r = audit_sources(&files, CLEAN_BASELINE, &[]);
         assert!(r.passed(), "{:?}", r.findings);
         assert_eq!(r.unsafe_sites, 1);
-        assert_eq!(r.reference_kernels, 3);
+        assert_eq!(r.reference_kernels, 6);
     }
 
     #[test]
@@ -231,7 +239,10 @@ mod tests {
             "rust/src/vq/codebook.rs".to_string(),
             "pub fn unpack_range_reference() {}\n\
              pub fn decode_packed_into_reference() {}\n\
-             pub fn encode_nearest_reference() {}\n"
+             pub fn encode_nearest_reference() {}\n\
+             pub fn pack_codes_reference() {}\n\
+             pub fn encode_staged_reference() {}\n\
+             pub fn decode_staged_packed_into_reference() {}\n"
                 .to_string(),
         )
     }

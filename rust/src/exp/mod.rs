@@ -7,6 +7,7 @@ pub mod fig2;
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
+pub mod stages;
 pub mod table1;
 pub mod table2;
 pub mod table3;

@@ -111,6 +111,10 @@ pub struct VqConfig {
     pub alpha: f64,
     pub bandwidth: f64,
     pub effective_bit: f64,
+    /// Residual quantization stages (`vq::StagedCodes`).  Manifests
+    /// predating the staged format omit the key, which means exactly one
+    /// stage — the legacy single-stream encoding.
+    pub stages: usize,
 }
 
 /// The parsed manifest.
@@ -138,6 +142,7 @@ impl Manifest {
             alpha: cfg.req_f64("alpha")?,
             bandwidth: cfg.req_f64("bandwidth")?,
             effective_bit: cfg.req_f64("effective_bit")?,
+            stages: cfg.get("stages").and_then(|v| v.as_usize()).unwrap_or(1),
         };
         let mut networks = Vec::new();
         for nj in root.req_arr("networks")? {
@@ -296,6 +301,7 @@ mod tests {
         let m = Manifest::load(&dir).unwrap();
         assert_eq!(m.config.k, 256);
         assert_eq!(m.config.d, 4);
+        assert_eq!(m.config.stages, 1, "missing stages key means legacy single-stage");
         let net = m.network("tiny").unwrap();
         assert_eq!(net.s_total, 100);
         assert_eq!(net.layers[0].groups, 100);
@@ -305,6 +311,16 @@ mod tests {
         assert!(net.exec("nope").is_err());
         assert!(m.network("ghost").is_err());
         assert_eq!(net.data_file("calib_x").unwrap(), "tiny__calib_x.vqt");
+    }
+
+    #[test]
+    fn stages_key_rides_the_config_block() {
+        let dir = std::env::temp_dir().join("vq4all_manifest_staged_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let staged = SAMPLE.replace("\"effective_bit\": 2.0", "\"effective_bit\": 2.0, \"stages\": 3");
+        std::fs::write(dir.join("manifest.json"), staged).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.config.stages, 3);
     }
 
     #[test]

@@ -9,12 +9,20 @@
 //! output of the streaming decode kernel and lookups return them
 //! unmodified, so a cache-served row is bit-identical to a fresh
 //! `decode_batch` of the same window — property-tested across evictions
-//! and widths 1..=32 in `rust/tests/prop_substrate.rs`.
+//! and widths 1..=32 in `rust/tests/prop_substrate.rs`.  The key is
+//! stage-agnostic by construction: a window identifies a code range of
+//! the net's *staged* stream, and the cached block is the fully
+//! stage-summed decode ([`Codebook::decode_staged_packed_into`]'s
+//! output), so residual stages add zero keys and zero coherence cases —
+//! the same property test runs at stage counts 1..=3.
+//!
+//! [`Codebook::decode_staged_packed_into`]: crate::vq::codebook::Codebook::decode_staged_packed_into
 
 use std::collections::BTreeMap;
 
 /// Cache key: one decoded row window — codes `[start, end)` of a hosted
-/// network's packed assignment stream.  The network is identified by its
+/// network's staged assignment stream (the same range addresses every
+/// residual stage).  The network is identified by its
 /// shard-local numeric id (assigned at hosting time, see
 /// `Shard::net_id`), keeping the key `Copy` so the hot lookup path does
 /// no allocation.

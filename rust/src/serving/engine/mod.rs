@@ -30,8 +30,12 @@
 //! * **Streaming decode** ([`stream`]) — [`stream::decode_into`] /
 //!   `Batch::decode_rows_into` unpack + decode straight into a
 //!   caller-provided `infer_hard` staging buffer through the fused
-//!   [`crate::vq::Codebook::decode_packed_into`] kernel, eliminating the
-//!   intermediate weights allocation on the hot path.
+//!   staged kernel
+//!   ([`crate::vq::Codebook::decode_staged_packed_into`]: one gather
+//!   per residual stage, stage 0 writes and later stages accumulate),
+//!   eliminating the intermediate weights allocation on the hot path.
+//!   Hosted nets carry [`crate::vq::StagedCodes`]; `stages == 1` is the
+//!   legacy single-stream format and decodes identically.
 //!
 //! `serving::server` (virtual clock, [`Engine::tick`]) and
 //! `serving::tcp` (wall clock, [`Engine::set_now`]) are thin front-ends
@@ -192,6 +196,16 @@ impl Engine {
         self.hosted(net)
             .map(|n| n.row_stride())
             .ok_or_else(|| anyhow::anyhow!("engine: unknown network {net:?}"))
+    }
+
+    /// Per-stage codeword utilization of a hosted net, computed once at
+    /// hosting time by the owning shard (None if unknown).  The TCP
+    /// `/stats` verb surfaces this per net.
+    pub fn net_utilization(&self, net: &str) -> Option<&[crate::vq::assign::Utilization]> {
+        self.placement
+            .get(net)
+            .and_then(|&s| self.shards[s].stats.utilization.get(net))
+            .map(|v| v.as_slice())
     }
 
     /// Advance virtual time.
@@ -469,7 +483,7 @@ impl Engine {
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
-    use crate::vq::pack::pack_codes;
+    use crate::vq::pack::{pack_codes, StagedCodes};
     use crate::vq::Codebook;
     use std::sync::Arc;
 
@@ -477,7 +491,7 @@ mod tests {
         let codes: Vec<u32> = (0..rows * cpr).map(|_| rng.below(cb.k) as u32).collect();
         HostedNet {
             name: name.into(),
-            packed: pack_codes(&codes, cb.index_bits()),
+            codes: StagedCodes::single(pack_codes(&codes, cb.index_bits())),
             codebook: cb.clone(),
             codes_per_row: cpr,
             device_batch: 4,
@@ -679,7 +693,7 @@ mod tests {
         let mut rng = Rng::new(5);
         let cb = test_cb(&mut rng);
         let net = hosted("a", 6, 4, &cb, &mut rng);
-        let packed = net.packed.clone();
+        let staged = net.codes.clone();
         let mut e = Engine::new(cfg(1, 1 << 16), vec![net]).unwrap();
         let stride = e.row_stride("a").unwrap();
         let rows = [3usize, 1, 3];
@@ -695,7 +709,7 @@ mod tests {
         assert_eq!(bits(&dst), bits(&dst2));
         for (i, &row) in rows.iter().enumerate() {
             let mut fresh = vec![0.0f32; stride];
-            cb.decode_packed_into(&packed, row * 4, (row + 1) * 4, &mut fresh);
+            cb.decode_staged_packed_into(&staged, row * 4, (row + 1) * 4, &mut fresh);
             assert_eq!(bits(&dst2[i * stride..(i + 1) * stride]), bits(&fresh));
         }
         let cs = e.cache_stats();
@@ -740,11 +754,45 @@ mod tests {
         let cb3 = Arc::new(Codebook::new(3, 1, vec![0.0, 1.0, 2.0]));
         let bad = HostedNet {
             name: "bad".into(),
-            packed: pack_codes(&[0u32, 1, 2, 3], 2), // code 3 >= k = 3
-            codebook: cb3,
+            codes: StagedCodes::single(pack_codes(&[0u32, 1, 2, 3], 2)), // code 3 >= k = 3
+            codebook: cb3.clone(),
             codes_per_row: 2,
             device_batch: 1,
         };
         assert!(Engine::new(cfg(1, 0), vec![bad]).is_err());
+        // A bad code hiding in a later stage is caught too.
+        let bad_stage = HostedNet {
+            name: "bad2".into(),
+            codes: StagedCodes::new(vec![
+                pack_codes(&[0u32, 1, 2, 0], 2),
+                pack_codes(&[0u32, 1, 2, 3], 2), // stage 1 code 3 >= k = 3
+            ]),
+            codebook: cb3,
+            codes_per_row: 2,
+            device_batch: 1,
+        };
+        assert!(Engine::new(cfg(1, 0), vec![bad_stage]).is_err());
+    }
+
+    #[test]
+    fn hosting_reports_per_stage_utilization() {
+        let mut rng = Rng::new(13);
+        let cb = test_cb(&mut rng); // k = 8
+        let net = HostedNet {
+            name: "a".into(),
+            codes: StagedCodes::new(vec![
+                pack_codes(&[0u32, 1, 0, 3], 3),
+                pack_codes(&[7u32, 7, 7, 7], 3),
+            ]),
+            codebook: cb,
+            codes_per_row: 2,
+            device_batch: 1,
+        };
+        let e = Engine::new(cfg(1, 0), vec![net]).unwrap();
+        let util = e.net_utilization("a").expect("hosted net has utilization");
+        assert_eq!(util.len(), 2);
+        assert_eq!((util[0].k, util[0].total, util[0].used), (8, 4, 3));
+        assert_eq!((util[1].used, util[1].entropy_bits), (1, 0.0), "collapsed stage");
+        assert!(e.net_utilization("ghost").is_none());
     }
 }

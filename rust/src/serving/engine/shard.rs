@@ -11,22 +11,25 @@ use std::sync::Arc;
 use crate::serving::batcher::{Batch, BatcherConfig};
 use crate::util::stats::Summary;
 use crate::util::threadpool::{SyncPtr, ThreadPool};
+use crate::vq::assign::Utilization;
 use crate::vq::codebook::Codebook;
-use crate::vq::pack::{unpack_range, PackedCodes};
+use crate::vq::pack::{unpack_range, StagedCodes};
 
 use super::cache::{DecodeCache, RowWindow};
 use super::router::Router;
 use super::Admission;
 
-/// One network hosted on the decode plane: its packed assignment stream,
-/// the shared (ROM-resident) universal codebook, and the row geometry —
-/// row `r` covers codes `[r * codes_per_row, (r + 1) * codes_per_row)`.
+/// One network hosted on the decode plane: its staged assignment
+/// streams (one packed stream per residual stage — `stages == 1` is the
+/// legacy single-stream format), the shared (ROM-resident) universal
+/// codebook, and the row geometry — row `r` covers codes
+/// `[r * codes_per_row, (r + 1) * codes_per_row)` of every stage.
 #[derive(Clone, Debug)]
 pub struct HostedNet {
     pub name: String,
-    pub packed: PackedCodes,
-    /// Shared universal codebook (one `Arc` across every hosted net —
-    /// the §3.2 premise).
+    pub codes: StagedCodes,
+    /// Shared universal codebook (one `Arc` across every hosted net and
+    /// every residual stage — the §3.2 premise).
     pub codebook: Arc<Codebook>,
     pub codes_per_row: usize,
     /// Fixed device batch its `infer_hard` artifact was lowered at.
@@ -34,9 +37,9 @@ pub struct HostedNet {
 }
 
 impl HostedNet {
-    /// Rows the packed stream holds at this geometry.
+    /// Rows the staged streams hold at this geometry.
     pub fn stream_rows(&self) -> usize {
-        self.packed.count / self.codes_per_row
+        self.codes.count() / self.codes_per_row
     }
 
     /// Decoded f32s per row.
@@ -89,6 +92,11 @@ pub struct ShardStats {
     pub by_net: BTreeMap<String, NetLedger>,
     /// Virtual-clock queue latency (ns) — bounded accounting.
     pub latency_ns: Summary,
+    /// Per-net, per-stage codeword utilization over the full codebook,
+    /// computed once at hosting time from the same chunked unpack that
+    /// validates the streams (arXiv 2309.17361) — surfaced through the
+    /// TCP `/stats` verb.
+    pub utilization: BTreeMap<String, Vec<Utilization>>,
 }
 
 /// One dispatch shard.
@@ -108,36 +116,47 @@ pub struct Shard {
 impl Shard {
     pub fn new(id: usize, nets: Vec<HostedNet>, cache_bytes: usize) -> anyhow::Result<Self> {
         anyhow::ensure!(!nets.is_empty(), "shard {id} hosts no networks");
+        let mut utilization: BTreeMap<String, Vec<Utilization>> = BTreeMap::new();
         for n in &nets {
             anyhow::ensure!(n.codes_per_row > 0, "{:?}: codes_per_row must be positive", n.name);
             anyhow::ensure!(n.device_batch > 0, "{:?}: device_batch must be positive", n.name);
             anyhow::ensure!(
                 n.stream_rows() > 0,
-                "{:?}: packed stream of {} codes holds no rows of {}",
+                "{:?}: staged streams of {} codes hold no rows of {}",
                 n.name,
-                n.packed.count,
+                n.codes.count(),
                 n.codes_per_row
             );
-            // One-time hosting validation: every packed code must address
-            // a real codeword, whatever the pack width — decode would
-            // panic mid-serve otherwise.  Chunked so hosting a large
-            // stream needs no O(count) allocation; rides the word-level
-            // unpack_range, so hosting big streams stays cheap.
-            let mut buf = [0u32; 512];
-            let mut s = 0;
-            while s < n.packed.count {
-                let e = (s + buf.len()).min(n.packed.count);
-                let chunk = &mut buf[..e - s];
-                unpack_range(&n.packed, s, e, chunk);
-                if let Some(&bad) = chunk.iter().find(|&&c| c as usize >= n.codebook.k) {
-                    anyhow::bail!(
-                        "{:?}: packed code {bad} cannot address the k={} codebook",
-                        n.name,
-                        n.codebook.k
-                    );
+            // One-time hosting validation, every stage: each packed code
+            // must address a real codeword, whatever the pack width —
+            // decode would panic mid-serve otherwise.  Chunked so
+            // hosting a large stream needs no O(count) allocation; rides
+            // the word-level unpack_range, so hosting big streams stays
+            // cheap.  The same pass histograms the codes into the per-
+            // stage utilization summary the `/stats` verb reports.
+            let mut net_util = Vec::with_capacity(n.codes.stages());
+            for (stage, p) in n.codes.stage_streams().iter().enumerate() {
+                let mut counts = vec![0u64; n.codebook.k];
+                let mut buf = [0u32; 512];
+                let mut s = 0;
+                while s < p.count {
+                    let e = (s + buf.len()).min(p.count);
+                    let chunk = &mut buf[..e - s];
+                    unpack_range(p, s, e, chunk);
+                    for &c in chunk.iter() {
+                        anyhow::ensure!(
+                            (c as usize) < n.codebook.k,
+                            "{:?}: stage {stage} packed code {c} cannot address the k={} codebook",
+                            n.name,
+                            n.codebook.k
+                        );
+                        counts[c as usize] += 1;
+                    }
+                    s = e;
                 }
-                s = e;
+                net_util.push(Utilization::from_counts(&counts));
             }
+            utilization.insert(n.name.clone(), net_util);
         }
         let names: Vec<&str> = nets.iter().map(|n| n.name.as_str()).collect();
         let router = Router::new(&names);
@@ -153,7 +172,10 @@ impl Shard {
             nets: map,
             cache: DecodeCache::new(cache_bytes),
             staging: Vec::new(),
-            stats: ShardStats::default(),
+            stats: ShardStats {
+                utilization,
+                ..ShardStats::default()
+            },
         })
     }
 
@@ -367,7 +389,7 @@ fn serve_rows_into(
     let kernel = |i: usize, out: &mut [f32]| {
         let row = rows[i];
         net.codebook
-            .decode_packed_into(&net.packed, row * cpr, (row + 1) * cpr, out);
+            .decode_staged_packed_into(&net.codes, row * cpr, (row + 1) * cpr, out);
     };
     match pool {
         Some(tp) if tp.threads() > 1 && primary.len() > 1 => {

@@ -5,61 +5,69 @@
 //!
 //! Row addressing and determinism contract are identical to
 //! [`crate::serving::switchsim::decode_batch`], which now delegates here:
-//! row `r` covers codes `[r * codes_per_row, (r + 1) * codes_per_row)`,
-//! rows are independent (disjoint output windows over a shared read-only
-//! stream), and every row runs through the fused
-//! [`Codebook::decode_packed_into`] kernel — so serial and pooled runs
-//! are bit-identical at every thread count.
+//! row `r` covers codes `[r * codes_per_row, (r + 1) * codes_per_row)`
+//! of every residual stage, rows are independent (disjoint output
+//! windows over shared read-only streams), and every row runs through
+//! the fused staged kernel [`Codebook::decode_staged_packed_into`] — so
+//! serial and pooled runs are bit-identical at every thread count and
+//! stage count.
 //!
-//! §Perf: `decode_packed_into` is the specialized kernel pair — the
-//! word-level `vq::pack::unpack_range` (one `u64` window load per code)
-//! fused with the small-`d` monomorphized gather — so every serving
-//! decode, cache miss, and `stream_batch` call rides it; the hotpath
-//! bench's `fused_decode` row and the engine summary's absolute
-//! `rows_per_sec` / `codes_per_sec` keys track it.
+//! §Perf: `decode_staged_packed_into` is the specialized kernel pair —
+//! the word-level `vq::pack::unpack_range` (one `u64` window load per
+//! code) fused with the small-`d` monomorphized gather, once per stage
+//! (stage 0 writes, later stages accumulate) — so every serving decode,
+//! cache miss, and `stream_batch` call rides it; the hotpath bench's
+//! `fused_decode` / `staged_decode` rows and the engine summary's
+//! absolute `rows_per_sec` / `codes_per_sec` keys track it.
 
 use crate::serving::batcher::Batch;
 use crate::util::threadpool::{SyncPtr, ThreadPool};
 use crate::vq::codebook::Codebook;
-use crate::vq::pack::PackedCodes;
+use crate::vq::pack::StagedCodes;
 
 /// Accounting for one streamed decode — [`crate::serving::switchsim::BatchDecode`]
 /// minus the weights buffer, which lives with the caller.
 #[derive(Clone, Copy, Debug)]
 pub struct DecodeStats {
-    /// Codes unpacked, padded rows included.
+    /// Codes unpacked, padded rows and all residual stages included.
     pub codes_unpacked: usize,
-    /// Packed bytes touched (per-row windows, rounded up to bytes).
+    /// Packed bytes touched (per-row windows, rounded up to bytes,
+    /// summed over stages).
     pub packed_bytes_read: usize,
     /// Real-request fraction of the decoded rows (`Batch::utilization`).
     pub utilization: f64,
 }
 
-/// Decode a formed batch's rows out of a packed assignment stream
+/// Decode a formed batch's rows out of a staged assignment stream
 /// straight into `dst` (`dst.len() == batch.rows.len() * codes_per_row *
 /// cb.d`, row-major in `Batch::rows` order, padded rows included).
 pub fn decode_into(
     batch: &Batch,
-    packed: &PackedCodes,
+    staged: &StagedCodes,
     cb: &Codebook,
     codes_per_row: usize,
     dst: &mut [f32],
     pool: Option<&ThreadPool>,
 ) -> anyhow::Result<DecodeStats> {
-    decode_rows_into(&batch.rows, packed, cb, codes_per_row, dst, pool)?;
+    decode_rows_into(&batch.rows, staged, cb, codes_per_row, dst, pool)?;
+    let window_bytes: usize = staged
+        .stage_streams()
+        .iter()
+        .map(|p| (codes_per_row * p.bits as usize).div_ceil(8))
+        .sum();
     Ok(DecodeStats {
-        codes_unpacked: batch.rows.len() * codes_per_row,
-        packed_bytes_read: batch.rows.len() * (codes_per_row * packed.bits as usize).div_ceil(8),
+        codes_unpacked: batch.rows.len() * codes_per_row * staged.stages(),
+        packed_bytes_read: batch.rows.len() * window_bytes,
         utilization: batch.utilization(),
     })
 }
 
 /// Row-list core of [`decode_into`] — also the cache-miss decode the
-/// engine shards drive: stream `rows[i]`'s window into
+/// engine shards drive: stream `rows[i]`'s window (every stage) into
 /// `dst[i * stride .. (i + 1) * stride]`.
 pub fn decode_rows_into(
     rows: &[usize],
-    packed: &PackedCodes,
+    staged: &StagedCodes,
     cb: &Codebook,
     codes_per_row: usize,
     dst: &mut [f32],
@@ -70,12 +78,12 @@ pub fn decode_rows_into(
     // `(row + 1) * codes_per_row <= count` but cannot overflow — rows
     // arrive off the wire (serving::tcp), so huge values must error, not
     // wrap around and silently decode the wrong window.
-    let stream_rows = packed.count / codes_per_row;
+    let stream_rows = staged.count() / codes_per_row;
     for &row in rows {
         anyhow::ensure!(
             row < stream_rows,
             "row {row} out of range: the {}-code stream holds {stream_rows} rows of {codes_per_row}",
-            packed.count
+            staged.count()
         );
     }
     let stride = codes_per_row * cb.d;
@@ -89,14 +97,16 @@ pub fn decode_rows_into(
 
     let kernel = |i: usize, out: &mut [f32]| {
         let row = rows[i];
-        cb.decode_packed_into(packed, row * codes_per_row, (row + 1) * codes_per_row, out);
+        cb.decode_staged_packed_into(staged, row * codes_per_row, (row + 1) * codes_per_row, out);
     };
 
     match pool {
         Some(tp) if tp.threads() > 1 && rows.len() > 1 => {
             let ptr = SyncPtr::new(dst);
             tp.note_read(rows);
-            tp.note_read(&packed.data);
+            for p in staged.stage_streams() {
+                tp.note_read(&p.data);
+            }
             tp.note_read(&cb.words);
             tp.parallel_for(rows.len(), 1, |start, end| {
                 for i in start..end {
@@ -141,12 +151,12 @@ mod tests {
         let cb = Codebook::new(32, 4, words);
         let (device_rows, cpr) = (8usize, 23usize);
         let codes: Vec<u32> = (0..device_rows * cpr).map(|_| rng.below(32) as u32).collect();
-        let packed = pack_codes(&codes, 5);
+        let staged = StagedCodes::single(pack_codes(&codes, 5));
         let batch = Batch::form("a", vec![req(0, 5), req(1, 2), req(2, 5)], device_rows);
 
-        let alloc = decode_batch(&batch, &packed, &cb, cpr, None).unwrap();
+        let alloc = decode_batch(&batch, &staged, &cb, cpr, None).unwrap();
         let mut dst = vec![0.0f32; batch.rows.len() * cpr * cb.d];
-        let s = decode_into(&batch, &packed, &cb, cpr, &mut dst, None).unwrap();
+        let s = decode_into(&batch, &staged, &cb, cpr, &mut dst, None).unwrap();
         let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&dst), bits(&alloc.weights));
         assert_eq!(s.codes_unpacked, alloc.codes_unpacked);
@@ -154,16 +164,49 @@ mod tests {
         assert!((s.utilization - alloc.utilization).abs() < 1e-12);
     }
 
+    /// A 2-stage stream through the streaming path must equal the
+    /// stage-summed direct decode, and the byte/code accounting must
+    /// scale with the stage count.
+    #[test]
+    fn streamed_decode_handles_residual_stages() {
+        let mut rng = Rng::new(43);
+        let mut words = vec![0.0f32; 32 * 3];
+        rng.fill_normal(&mut words);
+        let cb = Codebook::new(32, 3, words);
+        let (device_rows, cpr) = (6usize, 11usize);
+        let mk = |rng: &mut Rng, bits: u32| {
+            let codes: Vec<u32> =
+                (0..device_rows * cpr).map(|_| rng.below(16) as u32).collect();
+            pack_codes(&codes, bits)
+        };
+        let staged = StagedCodes::new(vec![mk(&mut rng, 5), mk(&mut rng, 4)]);
+        let batch = Batch::form("a", vec![req(0, 3), req(1, 1)], device_rows);
+
+        let mut dst = vec![0.0f32; batch.rows.len() * cpr * cb.d];
+        let s = decode_into(&batch, &staged, &cb, cpr, &mut dst, None).unwrap();
+        assert_eq!(s.codes_unpacked, batch.rows.len() * cpr * 2);
+        assert_eq!(
+            s.packed_bytes_read,
+            batch.rows.len() * ((cpr * 5).div_ceil(8) + (cpr * 4).div_ceil(8))
+        );
+        let mut direct = vec![0.0f32; cpr * cb.d];
+        for (i, &row) in batch.rows.iter().enumerate() {
+            cb.decode_staged_packed_into(&staged, row * cpr, (row + 1) * cpr, &mut direct);
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&dst[i * cpr * cb.d..(i + 1) * cpr * cb.d]), bits(&direct));
+        }
+    }
+
     #[test]
     fn rejects_wrong_dst_size_and_oob_rows() {
         let cb = Codebook::new(2, 2, vec![0., 0., 1., 1.]);
-        let packed = pack_codes(&[0u32, 1, 1, 0], 1); // 2 rows of 2 codes
+        let staged = StagedCodes::single(pack_codes(&[0u32, 1, 1, 0], 1)); // 2 rows of 2 codes
         let mut small = vec![0.0f32; 3];
-        assert!(decode_rows_into(&[0], &packed, &cb, 2, &mut small, None).is_err());
+        assert!(decode_rows_into(&[0], &staged, &cb, 2, &mut small, None).is_err());
         let mut ok = vec![0.0f32; 4];
-        assert!(decode_rows_into(&[2], &packed, &cb, 2, &mut ok, None).is_err());
-        assert!(decode_rows_into(&[usize::MAX / 2], &packed, &cb, 2, &mut ok, None).is_err());
-        assert!(decode_rows_into(&[1], &packed, &cb, 2, &mut ok, None).is_ok());
+        assert!(decode_rows_into(&[2], &staged, &cb, 2, &mut ok, None).is_err());
+        assert!(decode_rows_into(&[usize::MAX / 2], &staged, &cb, 2, &mut ok, None).is_err());
+        assert!(decode_rows_into(&[1], &staged, &cb, 2, &mut ok, None).is_ok());
         assert_eq!(ok, vec![1., 1., 0., 0.]);
     }
 }

@@ -42,7 +42,8 @@
 //!   `infer_hard` artifacts (deterministic serving benches).
 //! * [`switchsim`] — task-switch cost simulator on top of `rom::memsim`
 //!   (Table 1's I/O column at serving granularity), plus the batched
-//!   packed-decode path ([`switchsim::decode_batch`]).
+//!   staged-decode path ([`switchsim::decode_batch`], one packed stream
+//!   per residual stage summed against the same universal codebook).
 //! * [`tcp`]       — newline-JSON TCP front-end (std::net; single
 //!   dispatch thread owning every session + the plane, reader threads
 //!   per connection feeding a **bounded** channel, wall clock): when a

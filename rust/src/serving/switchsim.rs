@@ -2,14 +2,15 @@
 //! ("eliminates the need for repeated codebook loading during rapid task
 //! switching") made measurable, on top of `rom::memsim` — plus the
 //! actual decode work a formed batch drives: every batch row selects a
-//! window of the network's packed assignment stream, which is unpacked
-//! and decoded against the (ROM-resident) universal codebook through the
-//! worker pool ([`decode_batch`]).
+//! window of the network's staged assignment stream (one packed stream
+//! per residual stage), which is unpacked and decoded against the
+//! (ROM-resident) universal codebook through the worker pool
+//! ([`decode_batch`]).
 
 use crate::rom::memsim::{switch_storm, CodebookPlacement, MemSim, NetCodebooks, TrafficReport};
 use crate::util::threadpool::ThreadPool;
 use crate::vq::codebook::Codebook;
-use crate::vq::pack::PackedCodes;
+use crate::vq::pack::StagedCodes;
 
 use super::batcher::Batch;
 use super::engine::stream;
@@ -60,33 +61,35 @@ pub struct BatchDecode {
     /// device decodes them too, which is exactly the waste the
     /// utilization metric prices).
     pub weights: Vec<f32>,
-    /// Codes unpacked, padded rows included.
+    /// Codes unpacked, padded rows and all residual stages included.
     pub codes_unpacked: usize,
-    /// Packed bytes touched (per-row windows, rounded up to bytes).
+    /// Packed bytes touched (per-row windows, rounded up to bytes,
+    /// summed over residual stages).
     pub packed_bytes_read: usize,
     /// Real-request fraction of the decoded rows (`Batch::utilization`).
     pub utilization: f64,
 }
 
-/// Decode a formed batch's rows out of a packed assignment stream: row
-/// `r` covers codes `[r * codes_per_row, (r + 1) * codes_per_row)`.
-/// Rows are independent (disjoint output windows, shared read-only
-/// stream), so the pooled path is bit-identical to serial — this is the
-/// serving-side decode the batcher's utilization metric measures.
+/// Decode a formed batch's rows out of a staged assignment stream: row
+/// `r` covers codes `[r * codes_per_row, (r + 1) * codes_per_row)` of
+/// every residual stage. Rows are independent (disjoint output windows,
+/// shared read-only streams), so the pooled path is bit-identical to
+/// serial — this is the serving-side decode the batcher's utilization
+/// metric measures.
 ///
 /// Allocating wrapper over the streaming [`stream::decode_into`] path
 /// (one kernel, one determinism contract): callers that can provide the
 /// destination buffer should stream instead.
 pub fn decode_batch(
     batch: &Batch,
-    packed: &PackedCodes,
+    staged: &StagedCodes,
     cb: &Codebook,
     codes_per_row: usize,
     pool: Option<&ThreadPool>,
 ) -> anyhow::Result<BatchDecode> {
     anyhow::ensure!(codes_per_row > 0, "codes_per_row must be positive");
     let mut weights = vec![0.0f32; batch.rows.len() * codes_per_row * cb.d];
-    let stats = stream::decode_into(batch, packed, cb, codes_per_row, &mut weights, pool)?;
+    let stats = stream::decode_into(batch, staged, cb, codes_per_row, &mut weights, pool)?;
     Ok(BatchDecode {
         weights,
         codes_unpacked: stats.codes_unpacked,
@@ -182,9 +185,9 @@ mod tests {
         let codes: Vec<u32> = (0..device_rows * codes_per_row)
             .map(|_| rng.below(16) as u32)
             .collect();
-        let packed = pack_codes(&codes, 4);
+        let staged = StagedCodes::single(pack_codes(&codes, 4));
         let batch = Batch::form("a", vec![req(0, 3), req(1, 0)], 4);
-        let r = decode_batch(&batch, &packed, &cb, codes_per_row, None).unwrap();
+        let r = decode_batch(&batch, &staged, &cb, codes_per_row, None).unwrap();
         assert_eq!(r.weights.len(), 4 * codes_per_row * cb.d);
         assert_eq!(r.codes_unpacked, 4 * codes_per_row);
         // Per-row byte rounding: 20 codes @4b = 10 bytes per row.
@@ -208,12 +211,12 @@ mod tests {
         let codes: Vec<u32> = (0..device_rows * codes_per_row)
             .map(|_| rng.below(32) as u32)
             .collect();
-        let packed = pack_codes(&codes, 5);
+        let staged = StagedCodes::single(pack_codes(&codes, 5));
         let reqs: Vec<Request> = (0..9).map(|i| req(i, (i as usize * 5) % device_rows)).collect();
         let batch = Batch::form("a", reqs, device_rows);
         let pool = ThreadPool::new(4);
-        let serial = decode_batch(&batch, &packed, &cb, codes_per_row, None).unwrap();
-        let par = decode_batch(&batch, &packed, &cb, codes_per_row, Some(&pool)).unwrap();
+        let serial = decode_batch(&batch, &staged, &cb, codes_per_row, None).unwrap();
+        let par = decode_batch(&batch, &staged, &cb, codes_per_row, Some(&pool)).unwrap();
         let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&serial.weights), bits(&par.weights));
         assert_eq!(serial.codes_unpacked, par.codes_unpacked);
@@ -224,12 +227,12 @@ mod tests {
     fn batched_decode_rejects_out_of_stream_rows() {
         let mut rng = Rng::new(7);
         let cb = test_codebook(&mut rng, 4, 2);
-        let packed = pack_codes(&[0u32, 1, 2, 3], 2); // one row of 4 codes
+        let staged = StagedCodes::single(pack_codes(&[0u32, 1, 2, 3], 2)); // one row of 4 codes
         let batch = Batch::form("a", vec![req(0, 1)], 1); // row 1 doesn't exist
-        assert!(decode_batch(&batch, &packed, &cb, 4, None).is_err());
+        assert!(decode_batch(&batch, &staged, &cb, 4, None).is_err());
         // Wire-sized garbage rows must error, not wrap around (the bounds
         // check is overflow-free even in release builds).
         let huge = Batch::form("a", vec![req(0, usize::MAX / 2)], 1);
-        assert!(decode_batch(&huge, &packed, &cb, 4, None).is_err());
+        assert!(decode_batch(&huge, &staged, &cb, 4, None).is_err());
     }
 }

@@ -183,13 +183,36 @@ pub fn err_response(msg: &str) -> String {
 /// Render the `/stats` verb response: the plane's admission counters
 /// (accepted / dispatched / shed / deferred / peak queue depth), decode
 /// throughput counters (rows decoded fresh vs served from cache, cache
-/// hit rate and evictions), and per-net serve counts.
+/// hit rate and evictions), and per-net serve counts plus the hosting
+/// audit's per-stage codeword utilization (fraction of the universal
+/// codebook a net's assignment stream actually addresses, and the
+/// empirical code entropy in bits — the collapse/under-use diagnostics
+/// of arXiv 2309.17361, computed once at hosting time).
 pub fn stats_response(plane: &Engine, stats: &BTreeMap<String, TcpStats>) -> String {
     let t = plane.totals();
     let cs = plane.cache_stats();
     let per_net: BTreeMap<String, Json> = stats
         .iter()
         .map(|(n, s)| {
+            // One object per residual stage, stage order; empty for nets
+            // the plane does not host (stats entries can outlive hosting
+            // in principle — never invent counters for them).
+            let utilization = Json::Arr(
+                plane
+                    .net_utilization(n)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|u| {
+                        Json::obj(vec![
+                            ("k", Json::num(u.k as f64)),
+                            ("codes", Json::num(u.total as f64)),
+                            ("used", Json::num(u.used as f64)),
+                            ("used_fraction", Json::num(u.used_fraction())),
+                            ("entropy_bits", Json::num(u.entropy_bits)),
+                        ])
+                    })
+                    .collect(),
+            );
             (
                 n.clone(),
                 Json::obj(vec![
@@ -198,6 +221,7 @@ pub fn stats_response(plane: &Engine, stats: &BTreeMap<String, TcpStats>) -> Str
                     ("errors", Json::num(s.errors as f64)),
                     ("rows_from_cache", Json::num(s.rows_from_cache as f64)),
                     ("rows_decoded", Json::num(s.rows_decoded as f64)),
+                    ("utilization", utilization),
                 ]),
             )
         })
@@ -590,7 +614,7 @@ mod tests {
         use crate::serving::batcher::BatcherConfig;
         use crate::serving::engine::{EngineConfig, HostedNet};
         use crate::util::rng::Rng;
-        use crate::vq::pack::pack_codes;
+        use crate::vq::pack::{pack_codes, StagedCodes};
         use crate::vq::Codebook;
         use std::sync::Arc;
 
@@ -601,7 +625,7 @@ mod tests {
         let codes: Vec<u32> = (0..24).map(|_| rng.below(8) as u32).collect();
         let net = HostedNet {
             name: "a".into(),
-            packed: pack_codes(&codes, 3),
+            codes: StagedCodes::single(pack_codes(&codes, 3)),
             codebook: cb,
             codes_per_row: 4,
             device_batch: 2,
@@ -646,6 +670,18 @@ mod tests {
         );
         let per_net = parsed.req("per_net").unwrap().get("a").expect("per-net entry");
         assert_eq!(per_net.req_usize("served").unwrap(), 3);
+        // The hosting-time utilization audit rides along: one entry per
+        // residual stage, matching the engine's own accounting.
+        let util = per_net
+            .get("utilization")
+            .and_then(|u| u.as_arr())
+            .expect("utilization array");
+        assert_eq!(util.len(), 1, "single-stage net reports one stage");
+        let expected = plane.net_utilization("a").expect("hosted net has utilization");
+        assert_eq!(util[0].req_usize("k").unwrap(), expected[0].k);
+        assert_eq!(util[0].req_usize("codes").unwrap(), expected[0].total);
+        assert_eq!(util[0].req_usize("used").unwrap(), expected[0].used);
+        assert!(util[0].req("entropy_bits").is_ok());
     }
 
     #[test]

@@ -179,6 +179,67 @@ pub fn candidates_with(
     Candidates { n, assign, dist }
 }
 
+/// Codeword-utilization summary of one assignment stream (arXiv
+/// 2309.17361 motivates tracking this: dead codewords are wasted ROM,
+/// and a collapsed assignment distribution signals a bad codebook or a
+/// scale-mismatched net).  Computed from the final integer codes, so it
+/// is exactly reproducible on any path that produced identical codes —
+/// the staged encoder reports one per stage, and the serving shards
+/// surface one per hosted net through the TCP `/stats` verb.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Utilization {
+    /// Codebook entries the stream could draw from (the stage's
+    /// `stage_k` prefix, or the full `k`).
+    pub k: usize,
+    /// Assignments counted.
+    pub total: usize,
+    /// Codewords hit at least once.
+    pub used: usize,
+    /// Shannon entropy of the empirical assignment distribution, in
+    /// bits — `log2(k)` at perfectly balanced usage, 0 at collapse.
+    pub entropy_bits: f64,
+}
+
+impl Utilization {
+    /// Histogram `codes` against a `k`-entry codebook.  Serial by
+    /// design: one pass over the final codes, integer counts, and a
+    /// f64 entropy accumulated in index order — deterministic without
+    /// any scheduling contract.
+    pub fn from_codes(codes: &[u32], k: usize) -> Self {
+        assert!(k > 0, "utilization over an empty codebook");
+        let mut counts = vec![0u64; k];
+        for &c in codes {
+            counts[c as usize] += 1;
+        }
+        Self::from_counts(&counts)
+    }
+
+    /// Summarize a pre-built histogram (`counts[c]` = assignments of
+    /// codeword `c`) — the incremental path for callers that stream the
+    /// codes in chunks, like shard hosting validation.
+    pub fn from_counts(counts: &[u64]) -> Self {
+        let k = counts.len();
+        assert!(k > 0, "utilization over an empty codebook");
+        let total: u64 = counts.iter().sum();
+        let used = counts.iter().filter(|&&c| c > 0).count();
+        let mut entropy_bits = 0.0f64;
+        if total > 0 {
+            for &c in counts {
+                if c > 0 {
+                    let p = c as f64 / total as f64;
+                    entropy_bits -= p * p.log2();
+                }
+            }
+        }
+        Utilization { k, total: total as usize, used, entropy_bits }
+    }
+
+    /// Fraction of the codebook hit at least once.
+    pub fn used_fraction(&self) -> f64 {
+        self.used as f64 / self.k as f64
+    }
+}
+
 /// Eq. 7: logits `z_m = ln(d_last / d_m)` so softmax(z) ∝ 1/d.
 pub fn init_ratio_logits(cand: &Candidates) -> Vec<f32> {
     let n = cand.n;
@@ -306,6 +367,26 @@ mod tests {
             assert_eq!(a.assign, b.assign, "{init:?} assign diverged");
             assert_eq!(a.dist, b.dist, "{init:?} dist diverged");
         }
+    }
+
+    #[test]
+    fn utilization_counts_used_and_entropy() {
+        // 4 codes over k=8: words {0, 1, 3} used, 0 twice.
+        let u = Utilization::from_codes(&[0, 1, 0, 3], 8);
+        assert_eq!(u.k, 8);
+        assert_eq!(u.total, 4);
+        assert_eq!(u.used, 3);
+        assert!((u.used_fraction() - 0.375).abs() < 1e-12);
+        // p = [1/2, 1/4, 1/4] -> H = 1.5 bits.
+        assert!((u.entropy_bits - 1.5).abs() < 1e-12, "{}", u.entropy_bits);
+
+        let collapsed = Utilization::from_codes(&[5, 5, 5], 8);
+        assert_eq!(collapsed.used, 1);
+        assert_eq!(collapsed.entropy_bits, 0.0);
+
+        let empty = Utilization::from_codes(&[], 8);
+        assert_eq!(empty.used, 0);
+        assert_eq!(empty.entropy_bits, 0.0);
     }
 
     #[test]

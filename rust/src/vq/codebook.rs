@@ -17,11 +17,27 @@
 //! [`Codebook::decode_packed_into_reference`] and
 //! [`Codebook::encode_nearest_reference`] — as property-test ground
 //! truth and as the legacy side of the `fused_decode` / `encode_pruned`
-//! hotpath bench rows.
+//! hotpath bench rows.  Note `Codebook::decode` / `decode_vec` already
+//! ride the same gather core (`decode_with`'s chunk kernel *is*
+//! [`Codebook::gather`]), so there is exactly one decode kernel family.
+//!
+//! §Residual stages: [`Codebook::encode_staged`] quantizes residuals
+//! against successive *prefixes of the same codebook* (stage `s` scans
+//! the first `2^bits_s` codewords — pure index restriction, no extra
+//! ROM), and [`Codebook::decode_staged_packed_into`] reconstructs as a
+//! sum of per-stage gathers (stage 0 writes, stages >= 1 accumulate).
+//! Both keep scalar originals — [`Codebook::encode_staged_reference`]
+//! and [`Codebook::decode_staged_packed_into_reference`] — as the
+//! ground truth and legacy sides of the `staged_encode` /
+//! `staged_decode` bench rows.
 
 use crate::tensor::ops;
 use crate::util::threadpool::{SyncPtr, ThreadPool};
-use crate::vq::pack::{unpack_range, unpack_range_reference, PackedCodes};
+use crate::vq::assign::Utilization;
+use crate::vq::pack::{
+    pack_codes, pack_codes_reference, unpack_range, unpack_range_reference, PackedCodes,
+    StagedCodes,
+};
 
 /// Groups per scheduling chunk for the encode/decode sweeps.  Fixed —
 /// never derived from the worker count — so the error-partial grouping
@@ -199,6 +215,100 @@ impl Codebook {
                 out[o..o + self.d].copy_from_slice(self.word(c as usize));
             }
             s = e;
+        }
+    }
+
+    /// The accumulate twin of [`Codebook::gather`] for residual stages:
+    /// `dst[i] += words[codes[i]]`, with the same small-`d` (1..=4)
+    /// monomorphized kernels.  Element adds run in `j` order exactly
+    /// like the scalar loop, so the staged sum is bit-identical to the
+    /// reference accumulation.
+    fn gather_add(&self, codes: &[u32], dst: &mut [f32]) {
+        debug_assert_eq!(dst.len(), codes.len() * self.d);
+        match self.d {
+            1 => {
+                for (slot, &c) in dst.iter_mut().zip(codes) {
+                    *slot += self.words[c as usize];
+                }
+            }
+            2 => gather_add_fixed::<2>(&self.words, codes, dst),
+            3 => gather_add_fixed::<3>(&self.words, codes, dst),
+            4 => gather_add_fixed::<4>(&self.words, codes, dst),
+            d => {
+                for (row, &c) in dst.chunks_exact_mut(d).zip(codes) {
+                    let w = &self.words[c as usize * d..(c as usize + 1) * d];
+                    for (slot, wj) in row.iter_mut().zip(w) {
+                        *slot += wj;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Fused staged decode of row window `[start, end)`: stage 0 runs
+    /// the existing fused unpack + gather *write*
+    /// ([`Codebook::decode_packed_into`]), every later stage runs the
+    /// same word-level unpack and a gather *accumulate* — a sum of one
+    /// gather per stage, no intermediate codes or weights allocation.
+    /// At `stages == 1` this is exactly the legacy fused decode.  The
+    /// serving engine's cache-miss and `stream_batch` paths land here.
+    /// Bit-identical to the retained
+    /// [`Codebook::decode_staged_packed_into_reference`] (same
+    /// stage-major add order per element).
+    pub fn decode_staged_packed_into(
+        &self,
+        staged: &StagedCodes,
+        start: usize,
+        end: usize,
+        out: &mut [f32],
+    ) {
+        self.decode_packed_into(staged.stage(0), start, end, out);
+        const FUSE_CHUNK: usize = 128;
+        let mut buf = [0u32; FUSE_CHUNK];
+        for stage in 1..staged.stages() {
+            let p = staged.stage(stage);
+            let mut s = start;
+            while s < end {
+                let e = (s + FUSE_CHUNK).min(end);
+                let codes = &mut buf[..e - s];
+                unpack_range(p, s, e, codes);
+                self.gather_add(codes, &mut out[(s - start) * self.d..(e - start) * self.d]);
+                s = e;
+            }
+        }
+    }
+
+    /// The retained scalar reference for
+    /// [`Codebook::decode_staged_packed_into`]: bit-at-a-time unpack
+    /// ([`unpack_range_reference`]) and per-code scalar write/add loops,
+    /// stage-major like the fused path — the property-test ground truth
+    /// and the legacy side of the `staged_decode` hotpath bench row.
+    pub fn decode_staged_packed_into_reference(
+        &self,
+        staged: &StagedCodes,
+        start: usize,
+        end: usize,
+        out: &mut [f32],
+    ) {
+        self.decode_packed_into_reference(staged.stage(0), start, end, out);
+        const FUSE_CHUNK: usize = 128;
+        let mut buf = [0u32; FUSE_CHUNK];
+        for stage in 1..staged.stages() {
+            let p = staged.stage(stage);
+            let mut s = start;
+            while s < end {
+                let e = (s + FUSE_CHUNK).min(end);
+                let codes = &mut buf[..e - s];
+                unpack_range_reference(p, s, e, codes);
+                for (off, &c) in codes.iter().enumerate() {
+                    let o = (s - start + off) * self.d;
+                    let w = self.word(c as usize);
+                    for (slot, wj) in out[o..o + self.d].iter_mut().zip(w) {
+                        *slot += wj;
+                    }
+                }
+                s = e;
+            }
         }
     }
 
@@ -400,6 +510,227 @@ impl Codebook {
         let total: f64 = errs.iter().sum();
         (total / flat.len() as f64, codes)
     }
+
+    /// Codewords a `bits`-wide stage may draw from: the first
+    /// `min(2^bits, k)` entries of the one universal codebook — a pure
+    /// index-prefix restriction, so matched-total-bit stage splits
+    /// (e.g. 5+5 vs one 10-bit stage) share the exact same ROM as the
+    /// full-width single stage.
+    pub fn stage_k(&self, bits: u32) -> usize {
+        assert!((1..=32).contains(&bits), "bits must be 1..=32");
+        if bits >= usize::BITS || (1usize << bits) >= self.k {
+            self.k
+        } else {
+            1usize << bits
+        }
+    }
+
+    /// Residual multi-stage encode (arXiv 1907.05686 on the universal
+    /// codebook): stage 0 is the nearest-codeword assignment of `flat`,
+    /// stage `s` the nearest-codeword assignment of the residual left
+    /// by stages `0..s` — each stage restricted to its
+    /// [`Codebook::stage_k`] prefix and scanned with the same pruned
+    /// kernel as [`Codebook::encode_nearest_with`] (at
+    /// `d >= ops::PRUNE_MIN_D`).  Returns the packed per-stage streams
+    /// plus per-stage MSE and codeword-utilization accounting.
+    ///
+    /// Determinism: the per-stage sweep runs the fixed-CHUNK schedule —
+    /// disjoint codes/residual windows per chunk, f64 error partials
+    /// summed in chunk order — so the pooled path is bit-identical to
+    /// serial at every thread count, and both are bit-identical to the
+    /// retained [`Codebook::encode_staged_reference`] (the pruned scan
+    /// is distance-bit-exact vs the naive scan; the word-level pack is
+    /// byte-exact vs the bit-loop pack).
+    pub fn encode_staged(
+        &self,
+        flat: &[f32],
+        stage_bits: &[u32],
+        pool: Option<&ThreadPool>,
+    ) -> StagedEncode {
+        assert!(!stage_bits.is_empty(), "encode_staged needs at least one stage");
+        assert_eq!(flat.len() % self.d, 0);
+        let s = flat.len() / self.d;
+        let mut residual = flat.to_vec();
+        let mut streams = Vec::with_capacity(stage_bits.len());
+        let mut stage_mse = Vec::with_capacity(stage_bits.len());
+        let mut utilization = Vec::with_capacity(stage_bits.len());
+        for &bits in stage_bits {
+            let stage_k = self.stage_k(bits);
+            let mut codes = vec![0u32; s];
+            let err = self.encode_stage_with(&mut residual, stage_k, &mut codes, pool);
+            stage_mse.push(err / flat.len().max(1) as f64);
+            utilization.push(Utilization::from_codes(&codes, stage_k));
+            streams.push(pack_codes(&codes, bits));
+        }
+        StagedEncode {
+            mse: *stage_mse.last().expect("at least one stage"),
+            codes: StagedCodes::new(streams),
+            stage_mse,
+            utilization,
+        }
+    }
+
+    /// One residual stage: assign each group of `residual` to its
+    /// nearest codeword among the first `stage_k`, subtract the chosen
+    /// word in place, and return the summed squared error (the f32
+    /// nearest distance accumulated into f64 chunk partials).
+    fn encode_stage_with(
+        &self,
+        residual: &mut [f32],
+        stage_k: usize,
+        codes: &mut [u32],
+        pool: Option<&ThreadPool>,
+    ) -> f64 {
+        let s = codes.len();
+        debug_assert_eq!(residual.len(), s * self.d);
+        if s == 0 {
+            return 0.0;
+        }
+        let nchunks = s.div_ceil(CHUNK);
+        let mut errs = vec![0.0f64; nchunks];
+        let prune = self.d >= ops::PRUNE_MIN_D;
+        let words = &self.words[..stage_k * self.d];
+        let norms = &self.norms[..stage_k];
+
+        let kernel = |codes_chunk: &mut [u32], res_chunk: &mut [f32]| -> f64 {
+            let mut local = 0.0f64;
+            for (off, code) in codes_chunk.iter_mut().enumerate() {
+                let sub = &mut res_chunk[off * self.d..(off + 1) * self.d];
+                let (best, best_d) = if prune {
+                    ops::nearest_pruned(sub, words, norms)
+                } else {
+                    let mut best = 0usize;
+                    let mut best_d = f32::INFINITY;
+                    for c in 0..stage_k {
+                        let dist = ops::sq_dist(sub, &words[c * self.d..(c + 1) * self.d]);
+                        if dist < best_d {
+                            best_d = dist;
+                            best = c;
+                        }
+                    }
+                    (best, best_d)
+                };
+                *code = best as u32;
+                let w = &words[best * self.d..(best + 1) * self.d];
+                for (r, wj) in sub.iter_mut().zip(w) {
+                    *r -= wj;
+                }
+                local += best_d as f64;
+            }
+            local
+        };
+
+        match pool {
+            Some(pool) if pool.threads() > 1 && s > CHUNK => {
+                let codes_ptr = SyncPtr::new(codes);
+                let res_ptr = SyncPtr::new(residual);
+                let errs_ptr = SyncPtr::new(&mut errs);
+                pool.note_read(&self.words);
+                pool.parallel_for(s, CHUNK, |start, end| {
+                    // SAFETY: parallel_for ranges are disjoint group
+                    // ranges, so the codes and residual windows never
+                    // overlap across chunks.
+                    let chunk = unsafe { codes_ptr.slice(start, end - start) };
+                    let res = unsafe { res_ptr.slice(start * self.d, (end - start) * self.d) };
+                    let e = kernel(chunk, res);
+                    // SAFETY: each chunk index maps to a unique error slot.
+                    unsafe { errs_ptr.slice(start / CHUNK, 1)[0] = e };
+                })
+                .expect("encode_staged worker panicked");
+            }
+            _ => {
+                let mut start = 0;
+                while start < s {
+                    let end = (start + CHUNK).min(s);
+                    errs[start / CHUNK] = kernel(
+                        &mut codes[start..end],
+                        &mut residual[start * self.d..end * self.d],
+                    );
+                    start = end;
+                }
+            }
+        }
+        errs.iter().sum()
+    }
+
+    /// The retained brute-force reference for
+    /// [`Codebook::encode_staged`]: per stage, the full naive scan over
+    /// the `stage_k` prefix on the identical serial chunk schedule
+    /// (same CHUNK grouping, f64 partials in chunk order, same in-place
+    /// residual subtraction) and the bit-loop
+    /// [`pack_codes_reference`] — so the whole [`StagedEncode`] (codes
+    /// bytes, MSE bits, utilization) must match the specialized path
+    /// exactly.  Property-tested in `rust/tests/prop_substrate.rs` and
+    /// benched as the legacy side of the `staged_encode` row.
+    pub fn encode_staged_reference(&self, flat: &[f32], stage_bits: &[u32]) -> StagedEncode {
+        assert!(!stage_bits.is_empty(), "encode_staged needs at least one stage");
+        assert_eq!(flat.len() % self.d, 0);
+        let s = flat.len() / self.d;
+        let mut residual = flat.to_vec();
+        let mut streams = Vec::with_capacity(stage_bits.len());
+        let mut stage_mse = Vec::with_capacity(stage_bits.len());
+        let mut utilization = Vec::with_capacity(stage_bits.len());
+        for &bits in stage_bits {
+            let stage_k = self.stage_k(bits);
+            let mut codes = vec![0u32; s];
+            let nchunks = s.div_ceil(CHUNK);
+            let mut errs = vec![0.0f64; nchunks];
+            let mut start = 0;
+            while start < s {
+                let end = (start + CHUNK).min(s);
+                let mut local = 0.0f64;
+                for g in start..end {
+                    let sub = &mut residual[g * self.d..(g + 1) * self.d];
+                    let mut best = 0usize;
+                    let mut best_d = f32::INFINITY;
+                    for c in 0..stage_k {
+                        let dist = ops::sq_dist(sub, &self.words[c * self.d..(c + 1) * self.d]);
+                        if dist < best_d {
+                            best_d = dist;
+                            best = c;
+                        }
+                    }
+                    codes[g] = best as u32;
+                    let w = &self.words[best * self.d..(best + 1) * self.d];
+                    for (r, wj) in sub.iter_mut().zip(w) {
+                        *r -= wj;
+                    }
+                    local += best_d as f64;
+                }
+                errs[start / CHUNK] = local;
+                start = end;
+            }
+            let err: f64 = errs.iter().sum();
+            stage_mse.push(err / flat.len().max(1) as f64);
+            utilization.push(Utilization::from_codes(&codes, stage_k));
+            streams.push(pack_codes_reference(&codes, bits));
+        }
+        StagedEncode {
+            mse: *stage_mse.last().expect("at least one stage"),
+            codes: StagedCodes::new(streams),
+            stage_mse,
+            utilization,
+        }
+    }
+}
+
+/// Result of a staged (residual) encode: the packed per-stage streams
+/// plus the accuracy and codeword-utilization accounting reported by
+/// the stages sweep (`exp::stages`) and `compress_zoo`.
+#[derive(Clone, Debug)]
+pub struct StagedEncode {
+    /// Per-stage packed assignment streams.
+    pub codes: StagedCodes,
+    /// Final reconstruction MSE after all stages (== last `stage_mse`).
+    pub mse: f64,
+    /// Residual MSE after each stage is applied.  (Not guaranteed
+    /// monotone in general — a stage whose nearest codeword overshoots
+    /// the residual can grow it — but non-increasing whenever the
+    /// codebook contains a near-zero word, which KDE pools always do.)
+    pub stage_mse: Vec<f64>,
+    /// Per-stage codeword utilization over that stage's `stage_k`
+    /// prefix (arXiv 2309.17361 motivates tracking this at all).
+    pub utilization: Vec<Utilization>,
 }
 
 /// Monomorphized fixed-width row copy for the small-`d` gather: the
@@ -412,6 +743,22 @@ fn gather_fixed<const D: usize>(words: &[f32], codes: &[u32], dst: &mut [f32]) {
         let w: &[f32; D] = words[base..base + D].try_into().expect("codeword window");
         let row: &mut [f32; D] = row.try_into().expect("gather output row");
         *row = *w;
+    }
+}
+
+/// The accumulate twin of [`gather_fixed`] for residual stages:
+/// `dst_row += words[code]` with a compile-time-sized add loop.  The
+/// element adds run in `j` order, exactly like the generic scalar loop,
+/// so the staged sum stays bit-identical to the reference path.
+#[inline]
+fn gather_add_fixed<const D: usize>(words: &[f32], codes: &[u32], dst: &mut [f32]) {
+    for (row, &c) in dst.chunks_exact_mut(D).zip(codes) {
+        let base = c as usize * D;
+        let w: &[f32; D] = words[base..base + D].try_into().expect("codeword window");
+        let row: &mut [f32; D] = row.try_into().expect("gather output row");
+        for j in 0..D {
+            row[j] += w[j];
+        }
     }
 }
 
@@ -536,6 +883,147 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// At stages == 1 the staged decode IS the legacy fused decode:
+    /// same bytes in (StagedCodes::single wraps without repacking),
+    /// same float bits out.
+    #[test]
+    fn single_stage_staged_decode_equals_legacy_fused() {
+        use crate::vq::pack::{pack_codes, StagedCodes};
+        let mut rng = Rng::new(43);
+        let mut words = vec![0.0f32; 16 * 3];
+        rng.fill_normal(&mut words);
+        let c = Codebook::new(16, 3, words);
+        let codes: Vec<u32> = (0..300).map(|_| rng.below(16) as u32).collect();
+        let p = pack_codes(&codes, 5);
+        let staged = StagedCodes::single(p.clone());
+        for (start, end) in [(0usize, 300usize), (7, 291), (120, 140)] {
+            let mut legacy = vec![0.0f32; (end - start) * c.d];
+            let mut staged_out = vec![0.0f32; (end - start) * c.d];
+            c.decode_packed_into(&p, start, end, &mut legacy);
+            c.decode_staged_packed_into(&staged, start, end, &mut staged_out);
+            let b = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(b(&legacy), b(&staged_out), "[{start}, {end})");
+        }
+    }
+
+    /// The fused staged decode (word-level unpack + gather/gather_add)
+    /// must equal the retained scalar reference across small-d
+    /// specializations, stage counts, and mixed stage widths.
+    #[test]
+    fn staged_decode_matches_reference_kernel() {
+        use crate::vq::pack::{pack_codes, StagedCodes};
+        let mut rng = Rng::new(47);
+        for d in [1usize, 2, 3, 4, 7] {
+            let mut words = vec![0.0f32; 32 * d];
+            rng.fill_normal(&mut words);
+            let c = Codebook::new(32, d, words);
+            for stages in 1..=3usize {
+                let streams: Vec<_> = (0..stages)
+                    .map(|s| {
+                        let bits = [5u32, 3, 13][s];
+                        let k = 1usize << bits.min(5);
+                        let codes: Vec<u32> =
+                            (0..300).map(|_| rng.below(k) as u32).collect();
+                        pack_codes(&codes, bits)
+                    })
+                    .collect();
+                let staged = StagedCodes::new(streams);
+                for (start, end) in [(0usize, 300usize), (17, 291), (297, 300)] {
+                    let mut fast = vec![0.0f32; (end - start) * d];
+                    let mut slow = vec![0.0f32; (end - start) * d];
+                    c.decode_staged_packed_into(&staged, start, end, &mut fast);
+                    c.decode_staged_packed_into_reference(&staged, start, end, &mut slow);
+                    let b = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                    assert_eq!(b(&fast), b(&slow), "d={d} stages={stages} [{start}, {end})");
+                }
+            }
+        }
+    }
+
+    /// The specialized staged encode (pruned scan + word-level pack)
+    /// must match the brute-force reference exactly — packed bytes, MSE
+    /// bits, utilization — and the pooled path must match serial, at a
+    /// d where the pruned scan really runs.
+    #[test]
+    fn staged_encode_matches_reference_and_pooled() {
+        let mut rng = Rng::new(53);
+        for d in [4usize, 12] {
+            let mut words = vec![0.0f32; 64 * d];
+            rng.fill_normal(&mut words);
+            let c = Codebook::new(64, d, words);
+            let mut flat = vec![0.0f32; 300 * d];
+            rng.fill_normal(&mut flat);
+            let pool = ThreadPool::new(4);
+            for stage_bits in [&[6u32][..], &[5u32, 5][..], &[4u32, 3, 5][..]] {
+                let reference = c.encode_staged_reference(&flat, stage_bits);
+                let serial = c.encode_staged(&flat, stage_bits, None);
+                let pooled = c.encode_staged(&flat, stage_bits, Some(&pool));
+                for got in [&serial, &pooled] {
+                    assert_eq!(reference.codes, got.codes, "d={d} {stage_bits:?}");
+                    assert_eq!(
+                        reference.mse.to_bits(),
+                        got.mse.to_bits(),
+                        "d={d} {stage_bits:?} MSE diverged"
+                    );
+                    let sb = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                    assert_eq!(sb(&reference.stage_mse), sb(&got.stage_mse));
+                    assert_eq!(reference.utilization, got.utilization);
+                }
+            }
+        }
+    }
+
+    /// Residual round-trip: staged decode of the staged encode must
+    /// reconstruct better with more stages on a codebook whose first
+    /// word is exactly zero (so a stage can never grow the residual —
+    /// the zero word reproduces the incoming error bit for bit) and
+    /// whose next words sit at residual scale (so the second stage has
+    /// something to say).  The decoded reconstruction error must agree
+    /// with the encoder's reported MSE up to f32 re-association.
+    #[test]
+    fn staged_roundtrip_reduces_error_with_stages() {
+        let mut rng = Rng::new(59);
+        let d = 4;
+        let mut words = vec![0.0f32; 64 * d];
+        rng.fill_normal(&mut words);
+        words[..d].fill(0.0); // exact zero word: stages are monotone
+        for w in words[d..8 * d].iter_mut() {
+            *w *= 0.2; // residual-scale words for stage 2 to use
+        }
+        let c = Codebook::new(64, d, words);
+        let mut flat = vec![0.0f32; 200 * d];
+        rng.fill_normal(&mut flat);
+
+        let one = c.encode_staged(&flat, &[6], None);
+        let two = c.encode_staged(&flat, &[6, 6], None);
+        assert!(two.mse < one.mse, "2-stage {} !< 1-stage {}", two.mse, one.mse);
+        assert!(two.stage_mse[1] <= two.stage_mse[0]);
+
+        let mut recon = vec![0.0f32; flat.len()];
+        c.decode_staged_packed_into(&two.codes, 0, 200, &mut recon);
+        let mse: f64 = flat
+            .iter()
+            .zip(&recon)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / flat.len() as f64;
+        assert!(
+            (mse - two.mse).abs() <= 1e-4 * (1.0 + two.mse.abs()),
+            "decode MSE {mse} vs encoder-reported {}",
+            two.mse
+        );
+    }
+
+    /// stage_k is a pure prefix restriction of the one codebook.
+    #[test]
+    fn stage_k_is_a_prefix_of_the_codebook() {
+        let c = Codebook::new(64, 2, vec![0.0; 128]);
+        assert_eq!(c.stage_k(3), 8);
+        assert_eq!(c.stage_k(6), 64);
+        assert_eq!(c.stage_k(10), 64);
+        assert_eq!(c.stage_k(32), 64);
     }
 
     #[test]

@@ -8,6 +8,13 @@
 //! per-chunk partials in chunk order, so `threads = 1` and `threads = N`
 //! produce bit-identical codebooks, codes, and MSE (property-tested in
 //! `rust/tests/prop_substrate.rs`).
+//!
+//! This baseline fits a *fresh* codebook per layer; the universal-
+//! codebook counterpart for closing the same accuracy gap without new
+//! codebook storage is residual staging — `Codebook::encode_staged` /
+//! [`super::pack::StagedCodes`] — which re-scans prefixes of the one
+//! frozen codebook instead of training new centroids (see
+//! `exp/stages.rs` for the matched-total-bits comparison).
 
 use crate::tensor::ops;
 use crate::util::rng::Rng;

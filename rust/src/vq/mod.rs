@@ -14,7 +14,8 @@
 //! * [`ratios`]   — softmax-ratio math + PNC freeze bookkeeping shared
 //!   with the coordinator.
 //! * [`pack`]     — bit-packing of assignment streams into the compressed
-//!   on-disk/ROM format, with the compression-rate arithmetic of §3.1.
+//!   on-disk/ROM format ([`pack::StagedCodes`]: one stream per residual
+//!   stage), with the compression-rate arithmetic of §3.1.
 
 pub mod assign;
 pub mod codebook;
@@ -23,11 +24,11 @@ pub mod kmeans;
 pub mod pack;
 pub mod ratios;
 
-pub use assign::{candidates, AssignInit};
-pub use codebook::Codebook;
+pub use assign::{candidates, AssignInit, Utilization};
+pub use codebook::{Codebook, StagedEncode};
 pub use kde::KdeSampler;
 pub use kmeans::kmeans;
 pub use pack::{
-    pack_codes, unpack_codes, unpack_codes_into, unpack_codes_with, unpack_one, unpack_range,
-    PackedCodes,
+    pack_codes, pack_codes_reference, unpack_codes, unpack_codes_into, unpack_codes_with,
+    unpack_one, unpack_range, PackedCodes, StagedCodes,
 };

@@ -30,6 +30,20 @@
 //! copy.  The original scalar loop is retained as
 //! [`unpack_range_reference`] — the property-test ground truth and the
 //! legacy side of the `unpack_wordwise` bench row.
+//!
+//! §Perf (word-level pack): [`pack_codes`] is the encode-side mirror — a
+//! `u64` shift accumulator collects codes LSB-first and flushes 32 bits
+//! at a time as a little-endian lane, so one shift + one OR per code and
+//! one 4-byte store per 32 accumulated bits replace the per-bit store
+//! loop.  The original bit-at-a-time packer is retained as
+//! [`pack_codes_reference`] (ground truth + the legacy side of the
+//! `pack_wordwise` bench row); both produce byte-identical streams.
+//!
+//! §Residual stages: [`StagedCodes`] lifts the one-stream assumption —
+//! a compressed net carries one `PackedCodes` per residual stage, all
+//! indexing the *same* universal codebook (decode sums one gather per
+//! stage; ROM budget unchanged).  `stages == 1` is byte-identical to the
+//! legacy single-stream format, so existing artifacts keep working.
 
 use crate::util::threadpool::{SyncPtr, ThreadPool};
 
@@ -48,7 +62,60 @@ pub struct PackedCodes {
 }
 
 /// Pack `codes` at `bits` per entry (LSB-first within the stream).
+///
+/// §Perf: word-level kernel.  A `u64` accumulator holds fewer than 32
+/// pending bits at every loop top, so `acc |= code << nbits` never
+/// shifts past bit 63 (`nbits <= 31`, `bits <= 32`); once 32 or more
+/// bits are pending, the low lane is stored as 4 little-endian bytes.
+/// In-bounds by the stream-length invariant `out * 8 + nbits ==` bits
+/// consumed `<= total_bits <= data.len() * 8`: `nbits >= 32` implies
+/// `out + 4 <= data.len()`.  The tail flush writes the remaining
+/// `nbits < 32` bits a byte at a time (acc's bits above `nbits` are
+/// zero, so the last partial byte matches the zero-padded allocation).
+/// Byte-identical to the retained [`pack_codes_reference`] — proven at
+/// widths 1..=32 with tail-heavy counts in the tests below and in
+/// `rust/tests/prop_substrate.rs`.
 pub fn pack_codes(codes: &[u32], bits: u32) -> PackedCodes {
+    assert!((1..=32).contains(&bits), "bits must be 1..=32");
+    let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+    for (i, &c) in codes.iter().enumerate() {
+        assert!(c <= mask, "code {c} at {i} exceeds {bits} bits");
+    }
+    let bw = bits as usize;
+    let total_bits = codes.len() * bw;
+    let mut data = vec![0u8; total_bits.div_ceil(8)];
+    let mut acc = 0u64;
+    let mut nbits = 0usize;
+    let mut out = 0usize;
+    for &c in codes {
+        acc |= (c as u64) << nbits;
+        nbits += bw;
+        if nbits >= 32 {
+            data[out..out + 4].copy_from_slice(&(acc as u32).to_le_bytes());
+            out += 4;
+            acc >>= 32;
+            nbits -= 32;
+        }
+    }
+    while nbits > 0 {
+        data[out] = acc as u8;
+        acc >>= 8;
+        out += 1;
+        nbits = nbits.saturating_sub(8);
+    }
+    PackedCodes {
+        bits,
+        count: codes.len(),
+        data,
+    }
+}
+
+/// The retained scalar reference for [`pack_codes`]: the original
+/// byte/bit-at-a-time store loop.  Kept as the ground truth the
+/// word-level packer is property-tested against
+/// (`rust/tests/prop_substrate.rs`) and as the legacy side of the
+/// `pack_wordwise` hotpath bench row.
+pub fn pack_codes_reference(codes: &[u32], bits: u32) -> PackedCodes {
     assert!((1..=32).contains(&bits), "bits must be 1..=32");
     let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
     for (i, &c) in codes.iter().enumerate() {
@@ -256,6 +323,76 @@ impl PackedCodes {
     }
 }
 
+/// A residual multi-stage code stream: one [`PackedCodes`] per stage,
+/// every stage indexing the *same* universal codebook (global indices —
+/// no per-stage codebooks, so the ROM budget is unchanged; arXiv
+/// 1907.05686's residual scheme on the paper's §3.2 built-in-ROM
+/// premise).  Stage 0 carries the nearest-codeword assignment of the
+/// weights; stage `s >= 1` carries the assignment of the residual left
+/// by stages `0..s`.  Decode is a sum of per-stage gathers
+/// ([`crate::vq::Codebook::decode_staged_packed_into`]).
+///
+/// All stages have the same code count (one code per weight group per
+/// stage).  `stages == 1` is byte-identical to the legacy single-stream
+/// format: [`StagedCodes::single`] wraps a `PackedCodes` without
+/// touching a byte, and `stage(0)` hands it back as-is.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StagedCodes {
+    stages: Vec<PackedCodes>,
+}
+
+impl StagedCodes {
+    /// Wrap a legacy single-stage stream.  Byte-identical to the input:
+    /// no re-pack, no copy beyond the move.
+    pub fn single(p: PackedCodes) -> Self {
+        StagedCodes { stages: vec![p] }
+    }
+
+    /// Build from per-stage streams.  Every stage must carry the same
+    /// code count (one code per group per stage); stage widths may
+    /// differ (matched-total-bit sweeps pack narrower stages).
+    pub fn new(stages: Vec<PackedCodes>) -> Self {
+        assert!(!stages.is_empty(), "StagedCodes needs at least one stage");
+        let count = stages[0].count;
+        for (s, p) in stages.iter().enumerate() {
+            assert_eq!(p.count, count, "stage {s} code-count mismatch");
+        }
+        StagedCodes { stages }
+    }
+
+    /// Number of residual stages (>= 1).
+    pub fn stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// The packed stream of stage `s`.
+    pub fn stage(&self, s: usize) -> &PackedCodes {
+        &self.stages[s]
+    }
+
+    /// All per-stage streams, stage-major.
+    pub fn stage_streams(&self) -> &[PackedCodes] {
+        &self.stages
+    }
+
+    /// Codes per stage (groups in the quantized scope).
+    pub fn count(&self) -> usize {
+        self.stages[0].count
+    }
+
+    /// Total packed bytes across stages — the `assign_bytes` of the
+    /// compression accounting.
+    pub fn bytes(&self) -> usize {
+        self.stages.iter().map(|p| p.bytes()).sum()
+    }
+
+    /// Index bits per group summed over stages — the matched-total-bits
+    /// axis of the stages sweep.
+    pub fn total_bits(&self) -> u32 {
+        self.stages.iter().map(|p| p.bits).sum()
+    }
+}
+
 /// Compression accounting for one network (§3.1 / Table 1 "Rate").
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SizeReport {
@@ -435,6 +572,68 @@ mod tests {
     fn unpack_one_rejects_out_of_range_index() {
         let p = pack_codes(&[1u32, 2], 3);
         unpack_one(&p, 2);
+    }
+
+    /// The word-level packer must produce the exact byte stream of the
+    /// retained bit-at-a-time reference at every width, including
+    /// tail-heavy counts where the final flush writes partial bytes.
+    #[test]
+    fn wordwise_pack_matches_reference_at_every_width() {
+        let mut rng = Rng::new(23);
+        for bits in 1..=32u32 {
+            let mask = if bits == 32 { u32::MAX } else { (1 << bits) - 1 };
+            for count in [0usize, 1, 2, 7, 65, 300] {
+                let codes: Vec<u32> =
+                    (0..count).map(|_| (rng.next_u64() as u32) & mask).collect();
+                let fast = pack_codes(&codes, bits);
+                let slow = pack_codes_reference(&codes, bits);
+                assert_eq!(fast, slow, "bits={bits} count={count}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn wordwise_pack_rejects_out_of_range_codes() {
+        pack_codes_reference(&[8], 3);
+    }
+
+    /// `StagedCodes::single` is byte-identical to the wrapped legacy
+    /// stream — the stages == 1 compatibility contract.
+    #[test]
+    fn staged_single_is_byte_identical_to_legacy() {
+        let codes = vec![3u32, 1, 4, 1, 5];
+        let p = pack_codes(&codes, 3);
+        let staged = StagedCodes::single(p.clone());
+        assert_eq!(staged.stages(), 1);
+        assert_eq!(staged.stage(0), &p);
+        assert_eq!(staged.count(), 5);
+        assert_eq!(staged.bytes(), p.bytes());
+        assert_eq!(staged.total_bits(), 3);
+    }
+
+    #[test]
+    fn staged_accounting_sums_stages() {
+        let s0 = pack_codes(&[1u32, 2, 3], 5);
+        let s1 = pack_codes(&[0u32, 1, 0], 2);
+        let staged = StagedCodes::new(vec![s0.clone(), s1.clone()]);
+        assert_eq!(staged.stages(), 2);
+        assert_eq!(staged.count(), 3);
+        assert_eq!(staged.bytes(), s0.bytes() + s1.bytes());
+        assert_eq!(staged.total_bits(), 7);
+        assert_eq!(staged.stage_streams(), &[s0, s1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one stage")]
+    fn staged_rejects_empty() {
+        StagedCodes::new(vec![]);
+    }
+
+    #[test]
+    #[should_panic(expected = "count mismatch")]
+    fn staged_rejects_mismatched_counts() {
+        StagedCodes::new(vec![pack_codes(&[1u32, 2], 3), pack_codes(&[1u32], 3)]);
     }
 
     #[test]

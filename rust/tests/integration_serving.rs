@@ -9,7 +9,7 @@ use vq4all::serving::server::Server;
 use vq4all::serving::{Engine, EngineConfig, HostedNet};
 use vq4all::util::config::CampaignConfig;
 use vq4all::util::rng::Rng;
-use vq4all::vq::Codebook;
+use vq4all::vq::{Codebook, StagedCodes};
 
 /// Host constructed nets' packed streams on a decode plane (each stream
 /// is segmented so its row space covers the request rows the tests use;
@@ -27,7 +27,7 @@ fn plane_for(
         .iter()
         .map(|(res, eval_batch)| HostedNet {
             name: res.name.clone(),
-            packed: res.packed.clone(),
+            codes: StagedCodes::single(res.packed.clone()),
             codebook: cb.clone(),
             codes_per_row: (res.packed.count / 64).max(1),
             device_batch: *eval_batch,

@@ -21,7 +21,8 @@ use vq4all::util::threadpool::ThreadPool;
 use vq4all::vq::assign::{candidates, candidates_with, AssignInit};
 use vq4all::vq::kmeans::{kmeans, KmeansOpts};
 use vq4all::vq::pack::{
-    pack_codes, unpack_codes, unpack_codes_with, unpack_one, unpack_range, unpack_range_reference,
+    pack_codes, pack_codes_reference, unpack_codes, unpack_codes_with, unpack_one, unpack_range,
+    unpack_range_reference, StagedCodes,
 };
 use vq4all::vq::Codebook;
 use vq4all::{prop_assert, prop_assert_eq};
@@ -309,6 +310,137 @@ fn wordwise_unpack_bit_identical_to_scalar_reference() {
     });
 }
 
+/// Satellite (word-level pack): the u64-accumulator `pack_codes` must be
+/// byte-identical to the retained bit-loop `pack_codes_reference` at
+/// widths 1..=32 (biased to the awkward 3/5/7/13), over lengths that
+/// include the u64-flush boundary and sub-word tails — and a
+/// single-stage [`StagedCodes`] must be byte-identical to the legacy
+/// packed stream (the `stages == 1` format guarantee the staged decode
+/// plane rests on).
+#[test]
+fn wordwise_pack_byte_identical_and_single_stage_is_legacy_format() {
+    proptest(|g| {
+        let bits = if g.bool() {
+            [3u32, 5, 7, 13][g.usize_in(0, 3)]
+        } else {
+            g.usize_in(1, 32) as u32
+        };
+        let mask = if bits == 32 { u32::MAX } else { (1u32 << bits) - 1 };
+        let len = match g.usize_in(0, 2) {
+            0 => g.usize_in(0, 16),  // tiny, incl. empty: tail-only streams
+            1 => g.usize_in(60, 70), // around the u64 accumulator flushes
+            _ => g.usize_in(0, 2000),
+        };
+        let codes: Vec<u32> = (0..len).map(|_| (g.rng.next_u64() as u32) & mask).collect();
+        let fast = pack_codes(&codes, bits);
+        let slow = pack_codes_reference(&codes, bits);
+        prop_assert!(
+            fast == slow,
+            "bits={bits} len={len}: wordwise pack diverged from the bit-loop reference"
+        );
+        let staged = StagedCodes::single(fast);
+        prop_assert_eq!(staged.stages(), 1);
+        prop_assert!(
+            *staged.stage(0) == slow,
+            "single-stage staged stream is not byte-identical to the legacy pack"
+        );
+        prop_assert_eq!(staged.total_bits(), bits);
+        prop_assert_eq!(staged.count(), len);
+        Ok(())
+    });
+}
+
+/// Satellite (staged residual encode): `encode_staged` — the PR-5 pruned
+/// scan run per stage over a codebook prefix — must agree with the naive
+/// `encode_staged_reference` on (per-stage packed bytes, f64 MSE bits,
+/// per-stage residual MSE bits, utilization histograms), serial AND
+/// pooled, for stage counts 1..=3 at widths 1..=32, on both sides of the
+/// pruning dispatch threshold.
+#[test]
+fn staged_encode_bit_identical_to_reference_serial_and_pooled() {
+    let pool = ThreadPool::new(4);
+    proptest(|g| {
+        let d = [1usize, 2, 4, 8, 16][g.usize_in(0, 4)];
+        let k = g.usize_in(2, 32);
+        let cb = Codebook::new(k, d, g.vec_normal((k * d)..=(k * d)));
+        let s = g.usize_in(0, 200);
+        let flat = g.vec_normal((s * d)..=(s * d));
+        let nstages = g.usize_in(1, 3);
+        let stage_bits: Vec<u32> = (0..nstages)
+            .map(|_| {
+                if g.bool() {
+                    [3u32, 5, 7, 13][g.usize_in(0, 3)]
+                } else {
+                    g.usize_in(1, 32) as u32
+                }
+            })
+            .collect();
+        let r = cb.encode_staged_reference(&flat, &stage_bits);
+        let a = cb.encode_staged(&flat, &stage_bits, None);
+        let b = cb.encode_staged(&flat, &stage_bits, Some(&pool));
+        for (enc, tag) in [(&a, "serial"), (&b, "pooled")] {
+            prop_assert!(
+                enc.codes == r.codes,
+                "{tag}: staged streams diverged from reference (d={d}, bits={stage_bits:?})"
+            );
+            prop_assert_eq!(enc.mse.to_bits(), r.mse.to_bits());
+            prop_assert_eq!(enc.stage_mse.len(), r.stage_mse.len());
+            for (x, y) in enc.stage_mse.iter().zip(&r.stage_mse) {
+                prop_assert_eq!(x.to_bits(), y.to_bits());
+            }
+            prop_assert!(enc.utilization == r.utilization, "{tag}: utilization diverged");
+        }
+        Ok(())
+    });
+}
+
+/// Satellite (staged residual decode): the fused
+/// `decode_staged_packed_into` (stage-0 gather write, later stages
+/// wordwise unpack + gather-accumulate) must equal the scalar
+/// `decode_staged_packed_into_reference` bit for bit across the gather
+/// specializations (d = 1..=4) and the generic path, stage counts 1..=3,
+/// widths 1..=32, on arbitrary sub-windows.
+#[test]
+fn staged_decode_bit_identical_to_reference_across_stage_counts() {
+    proptest(|g| {
+        let d = [1usize, 2, 3, 4, 7][g.usize_in(0, 4)];
+        let k = g.usize_in(2, 32);
+        let idx_bits = (usize::BITS - (k - 1).leading_zeros()).max(1);
+        let cb = Codebook::new(k, d, g.vec_normal((k * d)..=(k * d)));
+        let len = g.usize_in(0, 600);
+        let nstages = g.usize_in(1, 3);
+        let streams: Vec<_> = (0..nstages)
+            .map(|_| {
+                let biased = if g.bool() {
+                    [3u32, 5, 7, 13][g.usize_in(0, 3)]
+                } else {
+                    g.usize_in(1, 32) as u32
+                };
+                let bits = biased.max(idx_bits);
+                let codes: Vec<u32> = (0..len).map(|_| g.u32_below(k as u32)).collect();
+                pack_codes(&codes, bits)
+            })
+            .collect();
+        let staged = StagedCodes::new(streams);
+        let (start, end) = if len == 0 {
+            (0, 0)
+        } else {
+            let a = g.usize_in(0, len - 1);
+            (a, g.usize_in(a, len))
+        };
+        let mut fast = vec![0.0f32; (end - start) * d];
+        let mut slow = vec![0.0f32; (end - start) * d];
+        cb.decode_staged_packed_into(&staged, start, end, &mut fast);
+        cb.decode_staged_packed_into_reference(&staged, start, end, &mut slow);
+        let fb = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        prop_assert!(
+            fb(&fast) == fb(&slow),
+            "d={d} stages={nstages} [{start}, {end}) staged decode diverged"
+        );
+        Ok(())
+    });
+}
+
 /// Tentpole (fused decode): the wordwise + small-d-gather streaming
 /// decode must equal the retained reference kernel bit for bit across
 /// the gather specializations (d = 1..=4) and the generic path.
@@ -538,7 +670,7 @@ fn batched_packed_decode_parallel_identical_and_rows_correct() {
         let codes: Vec<u32> = (0..device_rows * codes_per_row)
             .map(|_| g.u32_below(k as u32))
             .collect();
-        let packed = pack_codes(&codes, bits);
+        let staged = StagedCodes::single(pack_codes(&codes, bits));
 
         let nreq = g.usize_in(1, device_rows);
         let reqs: Vec<Request> = (0..nreq)
@@ -554,8 +686,8 @@ fn batched_packed_decode_parallel_identical_and_rows_correct() {
         prop_assert_eq!(batch.padded + batch.requests.len(), batch.rows.len());
 
         let serial =
-            decode_batch(&batch, &packed, &cb, codes_per_row, None).map_err(|e| e.to_string())?;
-        let parallel = decode_batch(&batch, &packed, &cb, codes_per_row, Some(&pool))
+            decode_batch(&batch, &staged, &cb, codes_per_row, None).map_err(|e| e.to_string())?;
+        let parallel = decode_batch(&batch, &staged, &cb, codes_per_row, Some(&pool))
             .map_err(|e| e.to_string())?;
         let fbits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         prop_assert_eq!(fbits(&serial.weights), fbits(&parallel.weights));
@@ -580,7 +712,7 @@ fn batched_packed_decode_parallel_identical_and_rows_correct() {
         // produce the exact same bits and accounting as the allocating
         // decode, serial and pooled.
         let mut streamed = vec![0.0f32; batch.rows.len() * stride];
-        let s = decode_into(&batch, &packed, &cb, codes_per_row, &mut streamed, Some(&pool))
+        let s = decode_into(&batch, &staged, &cb, codes_per_row, &mut streamed, Some(&pool))
             .map_err(|e| e.to_string())?;
         prop_assert_eq!(fbits(&streamed), fbits(&serial.weights));
         prop_assert_eq!(s.codes_unpacked, serial.codes_unpacked);
@@ -610,7 +742,7 @@ fn engine_conserves_requests_across_shards_and_matches_serial() {
             let codes: Vec<u32> = (0..rows * cpr).map(|_| g.u32_below(k as u32)).collect();
             nets.push(HostedNet {
                 name: format!("n{i}"),
-                packed: pack_codes(&codes, bits),
+                codes: StagedCodes::single(pack_codes(&codes, bits)),
                 codebook: cb.clone(),
                 codes_per_row: cpr,
                 device_batch: g.usize_in(1, 6),
@@ -632,7 +764,7 @@ fn engine_conserves_requests_across_shards_and_matches_serial() {
         let mut per_net = vec![0u64; nnets];
         for _ in 0..total {
             let i = g.usize_in(0, nnets - 1);
-            let srows = nets[i].packed.count / nets[i].codes_per_row;
+            let srows = nets[i].codes.count() / nets[i].codes_per_row;
             let row = g.usize_in(0, srows - 1);
             serial.submit(&nets[i].name, row).map_err(|e| e.to_string())?;
             pooled.submit(&nets[i].name, row).unwrap();
@@ -647,7 +779,7 @@ fn engine_conserves_requests_across_shards_and_matches_serial() {
         }
         // Rejected submits must not count as accepted.
         prop_assert!(serial.submit("ghost", 0).is_err());
-        let oob = nets[0].packed.count / nets[0].codes_per_row;
+        let oob = nets[0].codes.count() / nets[0].codes_per_row;
         prop_assert!(serial.submit("n0", oob).is_err());
 
         let a = serial.drain(None).map_err(|e| e.to_string())?;
@@ -715,7 +847,7 @@ fn engine_admission_sheds_deterministically_and_conserves_per_net() {
             let codes: Vec<u32> = (0..rows * cpr).map(|_| g.u32_below(k as u32)).collect();
             nets.push(HostedNet {
                 name: format!("n{i}"),
-                packed: pack_codes(&codes, bits),
+                codes: StagedCodes::single(pack_codes(&codes, bits)),
                 codebook: cb.clone(),
                 codes_per_row: cpr,
                 device_batch: g.usize_in(1, 4),
@@ -742,7 +874,7 @@ fn engine_admission_sheds_deterministically_and_conserves_per_net() {
         let mut shed_rows = std::collections::BTreeSet::new();
         for _ in 0..total {
             let i = g.usize_in(0, nnets - 1);
-            let srows = nets[i].packed.count / nets[i].codes_per_row;
+            let srows = nets[i].codes.count() / nets[i].codes_per_row;
             let row = g.usize_in(0, srows - 1);
             let a = serial.try_submit(&nets[i].name, row).map_err(|e| e.to_string())?;
             let b = pooled.try_submit(&nets[i].name, row).map_err(|e| e.to_string())?;
@@ -837,32 +969,41 @@ fn engine_admission_sheds_deterministically_and_conserves_per_net() {
 /// cached/uncached row reads — across evictions, serial or pooled — is
 /// bit-identical to a fresh `decode_batch`, for widths 1..=32 (reusing
 /// the width-bias strategy: awkward non-byte widths drawn half the
-/// time).
+/// time) and stage counts 1..=3 (the cache key is stage-agnostic: it
+/// stores the fully stage-summed block).
 #[test]
 fn decode_cache_any_interleaving_bit_identical_to_fresh_decode() {
     let pool = ThreadPool::new(4);
     proptest(|g| {
-        let biased = if g.bool() {
-            [3u32, 5, 7, 13][g.usize_in(0, 3)]
-        } else {
-            g.usize_in(1, 32) as u32
-        };
         let d = [1usize, 2, 4][g.usize_in(0, 2)];
         let k = g.usize_in(2, 16);
         let idx_bits = (usize::BITS - (k - 1).leading_zeros()).max(1);
-        // Codes must address < k words, so the drawn width only widens.
-        let bits = biased.max(idx_bits);
         let cb = Arc::new(Codebook::new(k, d, g.vec_normal((k * d)..=(k * d))));
         let cpr = g.usize_in(1, 16);
         let rows = g.usize_in(1, 10);
-        let codes: Vec<u32> = (0..rows * cpr).map(|_| g.u32_below(k as u32)).collect();
-        let packed = pack_codes(&codes, bits);
+        let nstages = g.usize_in(1, 3);
+        let staged = StagedCodes::new(
+            (0..nstages)
+                .map(|_| {
+                    let biased = if g.bool() {
+                        [3u32, 5, 7, 13][g.usize_in(0, 3)]
+                    } else {
+                        g.usize_in(1, 32) as u32
+                    };
+                    // Codes must address < k words, so the width only widens.
+                    let bits = biased.max(idx_bits);
+                    let codes: Vec<u32> =
+                        (0..rows * cpr).map(|_| g.u32_below(k as u32)).collect();
+                    pack_codes(&codes, bits)
+                })
+                .collect(),
+        );
         // Budget drawn below the full working set, so evictions happen
         // regularly; 0 (cache off) is in range too.
         let budget = g.usize_in(0, rows * cpr * d * 4);
         let net = HostedNet {
             name: "n".into(),
-            packed: packed.clone(),
+            codes: staged.clone(),
             codebook: cb.clone(),
             codes_per_row: cpr,
             device_batch: rows,
@@ -905,7 +1046,7 @@ fn decode_cache_any_interleaving_bit_identical_to_fresh_decode() {
                 })
                 .collect();
             let batch = Batch::form("n", reqs, nrows);
-            let fresh = decode_batch(&batch, &packed, &cb, cpr, None).map_err(|e| e.to_string())?;
+            let fresh = decode_batch(&batch, &staged, &cb, cpr, None).map_err(|e| e.to_string())?;
             prop_assert_eq!(fbits(&dst), fbits(&fresh.weights));
         }
         let cs = engine.cache_stats();

@@ -27,10 +27,11 @@
 # The hotpath bench writes serial-vs-parallel comparisons for the VQ and
 # serving hot paths plus the serving-engine rows (cold-vs-warm decode
 # cache, 1-vs-N shards, bounded-vs-unbounded admission) and the
-# legacy-vs-specialized kernel rows (word-level unpack, pruned encode,
-# fused decode).  Gates:
+# legacy-vs-specialized kernel rows (word-level unpack, word-level pack,
+# pruned encode, fused decode, staged residual encode/decode).  Gates:
 #   * any comparison row measured on >= 2 worker threads below 1.0x FAILS
-#   * the kernel rows (unpack_wordwise, encode_pruned, fused_decode) must
+#   * the kernel rows (unpack_wordwise, encode_pruned, fused_decode,
+#     pack_wordwise, staged_encode, staged_decode) must
 #     exist and hold >= 1.0x at ANY thread count (they compare two
 #     single-threaded kernels, so thread count is irrelevant)
 #   * the engine summary must exist with cache hit_rate > 0,
@@ -261,7 +262,8 @@ for name in ("engine_cache", "engine_shards", "engine_admission"):
     else:
         print(f"  {'ok':<10} {name:<22} {c['speedup']:.2f}x over {c['threads']} threads "
               "(gated by the generic >= 1.0x rule)")
-for name in ("unpack_wordwise", "encode_pruned", "fused_decode"):
+for name in ("unpack_wordwise", "encode_pruned", "fused_decode",
+             "pack_wordwise", "staged_encode", "staged_decode"):
     c = comps.get(name)
     if c is None:
         print(f"  REGRESSION kernel row {name!r} missing")
