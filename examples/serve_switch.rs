@@ -16,6 +16,7 @@ use std::sync::Arc;
 
 use vq4all::coordinator::{Campaign, NetSession};
 use vq4all::serving::batcher::BatcherConfig;
+use vq4all::serving::obs::expose;
 use vq4all::serving::server::Server;
 use vq4all::serving::switchsim::{compare, SwitchWorkload};
 use vq4all::serving::{Admission, Engine, EngineConfig, HostedNet};
@@ -58,8 +59,14 @@ fn main() -> anyhow::Result<()> {
     };
 
     // Phase 1 — construct each network (once, offline) and keep the
-    // packed codes + a live session for serving.
-    println!("constructing {} networks from the universal codebook...", nets.len());
+    // packed codes + a live session for serving.  Progress diagnostics
+    // go through util::logging so VQ4ALL_LOG governs their verbosity;
+    // only the end-of-run report prints unconditionally.
+    vq4all::log_info!(
+        "serve_switch",
+        "constructing {} networks from the universal codebook...",
+        nets.len()
+    );
     let universal = Arc::new(Codebook::new(
         campaign.manifest.config.k,
         campaign.manifest.config.d,
@@ -72,8 +79,9 @@ fn main() -> anyhow::Result<()> {
         let mut sess = NetSession::new(&campaign.rt, &campaign.manifest, name, &campaign.codebook)?;
         sess.set_others(&res.final_others)?; // codes pair with trained norms
         let codes = sess.codes_tensor(&res.codes);
-        println!(
-            "  {name}: float {:.3} -> hard {:.3} at {:.1}x",
+        vq4all::log_info!(
+            "serve_switch",
+            "{name}: float {:.3} -> hard {:.3} at {:.1}x",
             res.float_metric,
             res.hard_metric,
             res.sizes.ratio()
@@ -105,6 +113,7 @@ fn main() -> anyhow::Result<()> {
             cache_bytes: knobs.cache_bytes(),
             max_queue_depth: knobs.max_queue,
             batcher: bc,
+            obs: Default::default(),
         },
         hosted,
     )?;
@@ -141,16 +150,21 @@ fn main() -> anyhow::Result<()> {
         nets.len()
     );
 
-    println!("\n  network            served  batches  avg-batch  p50 lat(us)  p99 lat(us)");
+    // Virtual-clock latencies (engine clock, ns → reported in us) —
+    // the same unit+clock labeling the `/stats` verb uses.
+    println!(
+        "\n  network            served  batches  avg-batch  p50 lat(us)  p90 lat(us)  p99 lat(us)   [clock: engine]"
+    );
     for (name, st) in &server.stats {
         // Bounded latency summary: percentiles come from the reservoir,
         // not an unbounded per-request log.
         println!(
-            "  {name:<18} {:>6}  {:>7}  {:>9.2}  {:>11.1}  {:>11.1}",
+            "  {name:<18} {:>6}  {:>7}  {:>9.2}  {:>11.1}  {:>11.1}  {:>11.1}",
             st.served,
             st.batches,
             st.served as f64 / st.batches.max(1) as f64,
             st.latency_ns.percentile(50.0) / 1_000.0,
+            st.latency_ns.percentile(90.0) / 1_000.0,
             st.latency_ns.percentile(99.0) / 1_000.0,
         );
     }
@@ -176,6 +190,18 @@ fn main() -> anyhow::Result<()> {
         t.peak_depth,
         server.plane.cfg.max_queue_depth
     );
+
+    // Final unified metrics snapshot — the same object the TCP
+    // front-end serves as `/metrics` `"format": "json"`, dumped so
+    // headless runs leave a machine-readable observability record.
+    let snap = server.plane.metrics_snapshot();
+    println!(
+        "  stage split: decode {:.1} us / infer {:.1} us per batch, decode-hidden ratio {:.3}",
+        snap.decode_ns_total as f64 / snap.batches.max(1) as f64 / 1_000.0,
+        snap.infer_ns_total as f64 / snap.batches.max(1) as f64 / 1_000.0,
+        snap.decode_hidden_ratio()
+    );
+    println!("\nfinal metrics snapshot:\n{}", expose::snapshot_json(&snap));
 
     // Phase 3 — what the same switch pattern costs with per-layer
     // codebooks in DRAM vs the universal codebook in ROM.

@@ -16,7 +16,8 @@ use std::sync::Arc;
 
 use vq4all::coordinator::{Campaign, NetSession};
 use vq4all::serving::batcher::BatcherConfig;
-use vq4all::serving::tcp::{client_request, Shutdown, TcpServer};
+use vq4all::serving::obs::expose;
+use vq4all::serving::tcp::{client_metrics, client_request, client_trace, Shutdown, TcpServer};
 use vq4all::serving::{Engine, EngineConfig, HostedNet};
 use vq4all::util::cli::Cli;
 use vq4all::util::config::CampaignConfig;
@@ -53,8 +54,11 @@ fn build_server(args: &vq4all::util::cli::Args) -> anyhow::Result<TcpServer> {
         let mut sess = NetSession::new(&campaign.rt, &campaign.manifest, name, &campaign.codebook)?;
         sess.set_others(&res.final_others)?; // codes pair with trained norms
         let codes = sess.codes_tensor(&res.codes);
-        println!(
-            "  {name}: float {:.3} -> hard {:.3} at {:.1}x",
+        // Construction progress rides util::logging so VQ4ALL_LOG
+        // governs its verbosity; the serve reports stay on stdout.
+        vq4all::log_info!(
+            "serve_tcp",
+            "{name}: float {:.3} -> hard {:.3} at {:.1}x",
             res.float_metric,
             res.hard_metric,
             res.sizes.ratio()
@@ -81,6 +85,7 @@ fn build_server(args: &vq4all::util::cli::Args) -> anyhow::Result<TcpServer> {
             cache_bytes: knobs.cache_bytes(),
             max_queue_depth: knobs.max_queue,
             batcher: bc,
+            obs: Default::default(),
         },
         hosted,
     )?;
@@ -105,9 +110,22 @@ fn storm(addr: &str, nets: &[&str], n: usize) -> anyhow::Result<()> {
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pct = |p: f64| lat.get(((lat.len() - 1) as f64 * p) as usize).copied().unwrap_or(0.0);
     println!(
-        "client: {ok}/{n} ok | latency p50 {:.0}us p99 {:.0}us",
+        "client: {ok}/{n} ok | wall latency p50 {:.0}us p90 {:.0}us p99 {:.0}us",
         pct(0.5),
+        pct(0.9),
         pct(0.99)
+    );
+    // Exercise the observability verbs over the same connection: the
+    // Prometheus exposition must parse under the repo's own checker,
+    // and /trace reports how much flight-recorder history survives.
+    let m = client_metrics(&mut conn, false)?;
+    let body = m.req_str("body")?;
+    let samples = expose::check_exposition(body)?;
+    let tr = client_trace(&mut conn)?;
+    println!(
+        "client: /metrics exposition ok ({samples} samples) | /trace {} events retained, {} dropped",
+        tr.req("events")?.as_arr().map(|e| e.len()).unwrap_or(0),
+        tr.req_usize("dropped")?
     );
     Ok(())
 }
@@ -162,12 +180,15 @@ fn main() -> anyhow::Result<()> {
         client.join().unwrap()?;
         println!("server: {served} requests served");
         for (name, st) in &server.stats {
+            // Wall-clock percentiles from the bounded reservoir — the
+            // same labeled family the `/stats` verb reports.
             println!(
-                "  {name}: served {} in {} batches (avg {:.2}/batch, p50 {:.0}us p99 {:.0}us)",
+                "  {name}: served {} in {} batches (avg {:.2}/batch, wall p50 {:.0}us p90 {:.0}us p99 {:.0}us)",
                 st.served,
                 st.batches,
                 st.served as f64 / st.batches.max(1) as f64,
                 st.latency_us.percentile(50.0),
+                st.latency_us.percentile(90.0),
                 st.latency_us.percentile(99.0)
             );
         }
@@ -188,12 +209,22 @@ fn main() -> anyhow::Result<()> {
             t.peak_depth,
             server.plane.cfg.max_queue_depth
         );
+        // Final unified metrics snapshot — identical in shape to the
+        // `/metrics` `"format": "json"` response, for headless capture.
+        let snap = server.plane.metrics_snapshot();
+        println!(
+            "  stage split: decode {:.1} us / infer {:.1} us per batch, decode-hidden ratio {:.3}",
+            snap.decode_ns_total as f64 / snap.batches.max(1) as f64 / 1_000.0,
+            snap.infer_ns_total as f64 / snap.batches.max(1) as f64 / 1_000.0,
+            snap.decode_hidden_ratio()
+        );
+        println!("\nfinal metrics snapshot:\n{}", expose::snapshot_json(&snap));
         return Ok(());
     }
 
     let addr = args.get_or("listen", "127.0.0.1:7878").to_string();
     let listener = TcpListener::bind(&addr)?;
-    println!("constructing {} networks...", nets.len());
+    vq4all::log_info!("serve_tcp", "constructing {} networks...", nets.len());
     let mut server = build_server(&args)?;
     println!("serving on {addr} (newline JSON: {{\"net\": ..., \"row\": ...}}; ctrl-c to stop)");
     server.serve(listener, Shutdown::new(), 0)?;

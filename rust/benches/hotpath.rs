@@ -342,6 +342,7 @@ fn main() -> anyhow::Result<()> {
             max_batch: 16,
             max_linger_ns: 0,
         },
+        obs: Default::default(),
     };
     let all_rows: Vec<usize> = (0..device_rows).collect();
     let mut staging = vec![0.0f32; device_rows * stride];
@@ -374,6 +375,30 @@ fn main() -> anyhow::Result<()> {
         cache_stats.hit_rate(),
         cache_stats.evictions
     );
+
+    // --- engine: obs instrumentation overhead --------------------------------
+    // The ISSUE-8 observability contract: per-shard plain-field counters
+    // and log2 histograms must cost ~nothing on the hot path.  Same
+    // warm-cache stream_batch workload with the obs plane disabled
+    // (baseline) vs enabled (instrumented); single-threaded so the row
+    // rides only its own >= 0.95x verify gate, not the generic
+    // parallel-speedup gate.
+    let mut obs_off_cfg = engine_cfg(1, budget);
+    obs_off_cfg.obs.enabled = false;
+    obs_off_cfg.obs.ring_capacity = 0;
+    let mut eng_obs_off = Engine::new(obs_off_cfg, vec![engine_net.clone()]).unwrap();
+    let mut eng_obs_on = Engine::new(engine_cfg(1, budget), vec![engine_net.clone()]).unwrap();
+    eng_obs_off.stream_batch("bench", &all_rows, None).unwrap(); // prefill
+    eng_obs_on.stream_batch("bench", &all_rows, None).unwrap(); // prefill
+    let obs_off = b.bench("engine stream 64 rows warm [obs off]", || {
+        let s = eng_obs_off.stream_batch("bench", &all_rows, None).unwrap();
+        std::hint::black_box(s);
+    });
+    let obs_on = b.bench("engine stream 64 rows warm [obs on]", || {
+        let s = eng_obs_on.stream_batch("bench", &all_rows, None).unwrap();
+        std::hint::black_box(s);
+    });
+    comparisons.push(Comparison::new("obs_overhead", &obs_off, &obs_on, 1));
 
     // --- engine: 1 shard serial vs N shards pooled ---------------------------
     // Four hosted nets, 128 requests round-robin; the serial run drives
@@ -464,6 +489,21 @@ fn main() -> anyhow::Result<()> {
     println!(
         "engine admission: accepted {} = dispatched {} + shed {} (peak depth {}, budget {})",
         admission.accepted, admission.served, admission.shed, admission.peak_depth, 16
+    );
+    // The obs plane's own reconciliation, checked in-bench before the
+    // summary keys are written: one queue-wait sample per dispatched
+    // request, and every shed recorded as a flight-recorder event (the
+    // ring only retains the tail, but the recorded counter is lifetime).
+    let obs_snapshot = eng_adm_bounded.metrics_snapshot();
+    assert_eq!(
+        obs_snapshot.queue_ns.count(),
+        admission.served,
+        "queue-wait histogram out of step with the dispatch ledger"
+    );
+    assert_eq!(
+        obs_snapshot.events_recorded,
+        admission.shed,
+        "bounded plane's sheds must all land in the flight recorder"
     );
 
     // --- router -------------------------------------------------------------
@@ -564,6 +604,15 @@ fn main() -> anyhow::Result<()> {
         ("admission_dispatched", Json::num(admission.served as f64)),
         ("admission_shed", Json::num(admission.shed as f64)),
         ("admission_peak_depth", Json::num(admission.peak_depth as f64)),
+        // Observability reconciliation keys from the same bounded run —
+        // verify.sh gates obs_queue_count == admission_dispatched (one
+        // queue-wait histogram sample per dispatched request) and
+        // obs_events > 0 (the bounded plane's sheds must land in the
+        // flight recorder).
+        ("obs_queue_count", Json::num(obs_snapshot.queue_ns.count() as f64)),
+        ("obs_events", Json::num(obs_snapshot.events_recorded as f64)),
+        ("obs_events_dropped", Json::num(obs_snapshot.events_dropped as f64)),
+        ("obs_decode_hidden_ratio", Json::num(obs_snapshot.decode_hidden_ratio())),
     ]);
     println!(
         "engine summary: hit_rate {:.3} over {} lookups, {engine_shards} shards in the sharded row, \
@@ -571,6 +620,15 @@ fn main() -> anyhow::Result<()> {
         cache_stats.hit_rate(),
         cache_stats.lookups,
         admission.shed
+    );
+    println!(
+        "engine obs: queue hist count {} (== dispatched {}), {} flight-recorder events \
+         ({} dropped), decode-hidden ratio {:.3}",
+        obs_snapshot.queue_ns.count(),
+        admission.served,
+        obs_snapshot.events_recorded,
+        obs_snapshot.events_dropped,
+        obs_snapshot.decode_hidden_ratio()
     );
     let json_path = std::env::var("VQ4ALL_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());

@@ -8,7 +8,7 @@
 
 use crate::util::threadpool::ThreadPool;
 use crate::vq::codebook::Codebook;
-use crate::vq::pack::PackedCodes;
+use crate::vq::pack::StagedCodes;
 
 use super::engine::router::Request;
 use super::engine::stream::{self, DecodeStats};
@@ -79,12 +79,12 @@ impl Batch {
     /// `utilization()` is exactly the useful fraction of the decode work.
     pub fn decode_rows(
         &self,
-        packed: &PackedCodes,
+        staged: &StagedCodes,
         cb: &Codebook,
         codes_per_row: usize,
         pool: Option<&ThreadPool>,
     ) -> anyhow::Result<BatchDecode> {
-        decode_batch(self, packed, cb, codes_per_row, pool)
+        decode_batch(self, staged, cb, codes_per_row, pool)
     }
 
     /// Streaming twin of [`Batch::decode_rows`]: unpack + decode this
@@ -95,13 +95,13 @@ impl Batch {
     /// [`stream::decode_into`].
     pub fn decode_rows_into(
         &self,
-        packed: &PackedCodes,
+        staged: &StagedCodes,
         cb: &Codebook,
         codes_per_row: usize,
         dst: &mut [f32],
         pool: Option<&ThreadPool>,
     ) -> anyhow::Result<DecodeStats> {
-        stream::decode_into(self, packed, cb, codes_per_row, dst, pool)
+        stream::decode_into(self, staged, cb, codes_per_row, dst, pool)
     }
 }
 
@@ -161,7 +161,7 @@ mod tests {
 
         let cb = Codebook::new(2, 2, vec![0., 0., 1., 1.]);
         // 3 device rows of 2 codes each.
-        let packed = pack_codes(&[0u32, 1, 1, 1, 0, 0], 1);
+        let packed = StagedCodes::single(pack_codes(&[0u32, 1, 1, 1, 0, 0], 1));
         let b = Batch::form("a", vec![req(0, 1, 0)], 3); // rows [1, 1, 1]
         let r = b.decode_rows(&packed, &cb, 2, None).unwrap();
         assert_eq!(r.weights, vec![1., 1., 1., 1.].repeat(3));
@@ -173,7 +173,8 @@ mod tests {
         use crate::vq::pack::pack_codes;
 
         let cb = Codebook::new(2, 2, vec![0., 0., 1., 1.]);
-        let packed = pack_codes(&[0u32, 1, 1, 1, 0, 0], 1); // 3 rows of 2 codes
+        // 3 rows of 2 codes, single-stage staged stream.
+        let packed = StagedCodes::single(pack_codes(&[0u32, 1, 1, 1, 0, 0], 1));
         let b = Batch::form("a", vec![req(0, 1, 0), req(1, 2, 0)], 3);
         let alloc = b.decode_rows(&packed, &cb, 2, None).unwrap();
         let mut dst = vec![0.0f32; b.rows.len() * 2 * cb.d];

@@ -36,6 +36,13 @@
 //!   eliminating the intermediate weights allocation on the hot path.
 //!   Hosted nets carry [`crate::vq::StagedCodes`]; `stages == 1` is the
 //!   legacy single-stream format and decodes identically.
+//! * **Observability** ([`crate::serving::obs`]) — each shard carries a
+//!   [`crate::serving::obs::ShardObs`] slice (request-lifecycle stage
+//!   histograms on the engine clock, per-net counters, a flight
+//!   recorder of shed/deferral/eviction/error events), merged by
+//!   [`Engine::metrics_snapshot`] into one [`MetricsSnapshot`] whose
+//!   totals reconcile exactly with the conservation counters; the TCP
+//!   `/metrics` and `/trace` verbs expose it.
 //!
 //! `serving::server` (virtual clock, [`Engine::tick`]) and
 //! `serving::tcp` (wall clock, [`Engine::set_now`]) are thin front-ends
@@ -54,11 +61,12 @@ pub mod stream;
 pub use cache::{CacheStats, DecodeCache, RowWindow};
 pub use router::{Request, Router};
 pub use shard::{HostedNet, NetLedger, RowServe, Shard, ShardStats};
-pub use stream::{decode_into, decode_rows_into, DecodeStats};
+pub use stream::{decode_into, decode_rows_into, row_window_bytes, DecodeStats};
 
 use std::collections::BTreeMap;
 
 use crate::serving::batcher::{Batch, BatcherConfig};
+use crate::serving::obs::{Event, EventKind, MetricsSnapshot, ObsConfig};
 use crate::util::threadpool::{SyncPtr, ThreadPool};
 
 /// Engine-level configuration.
@@ -74,6 +82,11 @@ pub struct EngineConfig {
     pub max_queue_depth: usize,
     /// Batching policy every shard applies to its queues.
     pub batcher: BatcherConfig,
+    /// Observability plane knobs ([`crate::serving::obs`]): histogram /
+    /// flight-recorder instrumentation, on by default; the
+    /// `obs_overhead` bench row gates its cost on the `stream_batch`
+    /// path.
+    pub obs: ObsConfig,
 }
 
 impl Default for EngineConfig {
@@ -83,6 +96,7 @@ impl Default for EngineConfig {
             cache_bytes: 1 << 20, // 1 MiB per shard
             max_queue_depth: 0,
             batcher: BatcherConfig::default(),
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -163,7 +177,7 @@ impl Engine {
         let shards = buckets
             .into_iter()
             .enumerate()
-            .map(|(id, ns)| Shard::new(id, ns, cfg.cache_bytes))
+            .map(|(id, ns)| Shard::new(id, ns, cfg.cache_bytes, cfg.obs))
             .collect::<anyhow::Result<Vec<_>>>()?;
         Ok(Engine {
             cfg,
@@ -277,7 +291,48 @@ impl Engine {
     /// [`Engine::would_admit`] said no.  Unknown nets are ignored.
     pub fn note_deferral(&mut self, net: &str) {
         if let Some(&s) = self.placement.get(net) {
-            self.shards[s].stats.deferred += 1;
+            let now = self.now_ns;
+            let sh = &mut self.shards[s];
+            sh.stats.deferred += 1;
+            let depth = sh.router.total_pending() as u64;
+            sh.obs.touch(now);
+            sh.obs.note_event(EventKind::Deferral, net, depth, 0);
+        }
+    }
+
+    /// Record a request the plane refused *before* admission (unknown
+    /// net, out-of-range row, malformed request) on the owning shard's
+    /// flight recorder — shard 0 when no shard owns the net.  These
+    /// never touch the conservation counters (the plane was never
+    /// obligated to serve them); the flight recorder is how they stay
+    /// explainable after the fact.
+    pub fn note_rejected(&mut self, net: &str, kind: EventKind, a: u64, b: u64) {
+        let s = self.placement.get(net).copied().unwrap_or(0);
+        let now = self.now_ns;
+        let sh = &mut self.shards[s];
+        sh.obs.touch(now);
+        sh.obs.note_event(kind, net, a, b);
+    }
+
+    /// Record front-end measured stage durations for one responded
+    /// batch of `net`: decode (split hit/miss via `serve`), infer, and
+    /// respond.  The engine never reads a wall clock itself — the
+    /// front-end owns the clock choice (`Instant` deltas on TCP,
+    /// virtual-clock deltas on `serving::server`), so engine-driven
+    /// runs stay deterministic.  Unknown nets are ignored.
+    pub fn observe_batch(
+        &mut self,
+        net: &str,
+        serve: RowServe,
+        decode_ns: u64,
+        infer_ns: u64,
+        respond_ns: u64,
+    ) {
+        if let Some(&s) = self.placement.get(net) {
+            let now = self.now_ns;
+            let sh = &mut self.shards[s];
+            sh.obs.touch(now);
+            sh.obs.note_stages(decode_ns, infer_ns, respond_ns, serve.misses > 0);
         }
     }
 
@@ -436,6 +491,62 @@ impl Engine {
         t
     }
 
+    /// One coherent observability snapshot, merged across shards.  Its
+    /// totals are *defined* to reconcile with the engine's conservation
+    /// identities — `accepted == dispatched + shed` (and per net via
+    /// the ledgers), `cache_hits + cache_misses == cache_lookups`,
+    /// `queue_ns.count() == dispatched` — and, because every stamp uses
+    /// the engine clock, serial and pooled runs produce *equal*
+    /// snapshots (property-tested in `prop_substrate`).
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        let t = self.totals();
+        let c = self.cache_stats();
+        let mut snap = MetricsSnapshot {
+            shards: self.shards.len() as u64,
+            hosted_nets: self.placement.len() as u64,
+            accepted: t.accepted,
+            dispatched: t.served,
+            shed: t.shed,
+            deferred: t.deferred,
+            batches: t.batches,
+            padded_rows: t.padded_rows,
+            rows_from_cache: t.rows_from_cache,
+            rows_decoded: t.rows_decoded,
+            cache_lookups: c.lookups,
+            cache_hits: c.hits,
+            cache_misses: c.misses,
+            cache_evictions: c.evictions,
+            pending: self.total_pending() as u64,
+            ..MetricsSnapshot::default()
+        };
+        for sh in &self.shards {
+            snap.absorb_shard(&sh.obs);
+            for (net, l) in &sh.stats.by_net {
+                let dst = snap.per_net.entry(net.clone()).or_default();
+                dst.accepted += l.accepted;
+                dst.served += l.served;
+                dst.shed += l.shed;
+            }
+            for (net, depth) in sh.router.depths() {
+                if depth > 0 {
+                    snap.per_net.entry(net.to_string()).or_default().pending += depth as u64;
+                }
+            }
+        }
+        snap
+    }
+
+    /// Every shard's retained flight-recorder events as
+    /// `(shard, event)`, oldest first within a shard — the `/trace`
+    /// verb body.
+    pub fn trace_events(&self) -> Vec<(usize, Event)> {
+        let mut out = Vec::new();
+        for (i, sh) in self.shards.iter().enumerate() {
+            out.extend(sh.obs.recorder.events().cloned().map(|e| (i, e)));
+        }
+        out
+    }
+
     /// Drop every shard's cache entries (cumulative counters survive) —
     /// the bench's cold-cache reset.
     pub fn clear_caches(&mut self) {
@@ -513,6 +624,7 @@ mod tests {
                 max_batch: 4,
                 max_linger_ns: 100,
             },
+            obs: ObsConfig::default(),
         }
     }
 
@@ -587,6 +699,71 @@ mod tests {
             "per-net ledger conserves"
         );
         assert!(e.would_admit("a"), "drained plane admits again");
+    }
+
+    #[test]
+    fn metrics_snapshot_reconciles_and_traces_the_shed() {
+        let mut rng = Rng::new(21);
+        let cb = test_cb(&mut rng);
+        let mut c = cfg(1, 1 << 16);
+        c.max_queue_depth = 2;
+        let mut e = Engine::new(c, vec![hosted("a", 6, 3, &cb, &mut rng)]).unwrap();
+        e.tick(10);
+        e.try_submit("a", 0).unwrap();
+        e.try_submit("a", 1).unwrap();
+        assert!(matches!(e.try_submit("a", 5).unwrap(), Admission::Rejected { .. }));
+        e.note_deferral("a");
+        e.note_rejected("ghost", EventKind::HostingError, 3, 0);
+
+        let queued = e.metrics_snapshot();
+        assert_eq!(queued.pending, 2);
+        assert_eq!(queued.per_net["a"].pending, 2);
+
+        e.drain(None).unwrap();
+        e.observe_batch("a", RowServe { hits: 0, misses: 2 }, 40, 100, 5);
+        let s = e.metrics_snapshot();
+        assert_eq!((s.accepted, s.dispatched, s.shed, s.deferred), (3, 2, 1, 1));
+        assert_eq!(s.accepted, s.dispatched + s.shed, "conservation");
+        assert_eq!(s.queue_ns.count(), s.dispatched, "one span per dispatched request");
+        assert_eq!(s.per_net["a"].queue_ns.count(), 2);
+        assert_eq!(s.cache_hits + s.cache_misses, s.cache_lookups);
+        assert_eq!(s.per_net["a"].rows_hit + s.per_net["a"].rows_missed, s.cache_lookups);
+        assert!(s.decoded_bytes_read > 0, "misses account packed bytes");
+        assert_eq!(s.pending, 0);
+        assert_eq!(s.infer_ns.count(), 1);
+        assert!((s.decode_hidden_ratio() - 0.4).abs() < 1e-12);
+        // The shed, the deferral, and the hosting error are explainable
+        // from the flight recorder.
+        let kinds: Vec<EventKind> = e.trace_events().iter().map(|(_, ev)| ev.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![EventKind::Shed, EventKind::Deferral, EventKind::HostingError]
+        );
+        let shed_ev = &e.trace_events()[0].1;
+        assert_eq!((shed_ev.at_ns, shed_ev.net.as_str(), shed_ev.a, shed_ev.b), (10, "a", 5, 2));
+        assert_eq!(s.events_recorded, 3);
+        assert_eq!(s.events_dropped, 0);
+
+        // Disabled obs: same engine traffic, empty obs plane — and the
+        // conservation counters still fill the snapshot.
+        let mut rng = Rng::new(21);
+        let cb = test_cb(&mut rng);
+        let mut c2 = cfg(1, 1 << 16);
+        c2.max_queue_depth = 2;
+        c2.obs = ObsConfig {
+            enabled: false,
+            ring_capacity: 256,
+        };
+        let mut e2 = Engine::new(c2, vec![hosted("a", 6, 3, &cb, &mut rng)]).unwrap();
+        e2.tick(10);
+        e2.try_submit("a", 0).unwrap();
+        e2.try_submit("a", 1).unwrap();
+        let _ = e2.try_submit("a", 5).unwrap();
+        e2.drain(None).unwrap();
+        let s2 = e2.metrics_snapshot();
+        assert_eq!((s2.accepted, s2.dispatched, s2.shed), (3, 2, 1));
+        assert_eq!(s2.queue_ns.count(), 0, "disabled obs records no spans");
+        assert!(e2.trace_events().is_empty());
     }
 
     #[test]

@@ -83,6 +83,12 @@ impl Router {
         self.queues.iter().map(|(_, q)| q.len()).sum()
     }
 
+    /// Per-net queue depths in declaration order — the obs plane's
+    /// per-net pending gauges (`Engine::metrics_snapshot`).
+    pub fn depths(&self) -> impl Iterator<Item = (&str, usize)> {
+        self.queues.iter().map(|(n, q)| (n.as_str(), q.len()))
+    }
+
     /// Arrival time of the oldest waiting request in `net`'s queue
     /// (None if empty) — the batcher's linger clock.
     pub fn oldest_arrival(&self, net: &str) -> Option<u64> {

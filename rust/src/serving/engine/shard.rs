@@ -9,6 +9,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::serving::batcher::{Batch, BatcherConfig};
+use crate::serving::obs::{EventKind, ObsConfig, ShardObs};
 use crate::util::stats::Summary;
 use crate::util::threadpool::{SyncPtr, ThreadPool};
 use crate::vq::assign::Utilization;
@@ -111,10 +112,19 @@ pub struct Shard {
     /// `infer_hard` input staging buffer of this shard.
     staging: Vec<f32>,
     pub stats: ShardStats,
+    /// Observability slice: stage histograms, per-net obs counters, and
+    /// the flight recorder — plain fields, merged only at snapshot time
+    /// (`Engine::metrics_snapshot`).
+    pub obs: ShardObs,
 }
 
 impl Shard {
-    pub fn new(id: usize, nets: Vec<HostedNet>, cache_bytes: usize) -> anyhow::Result<Self> {
+    pub fn new(
+        id: usize,
+        nets: Vec<HostedNet>,
+        cache_bytes: usize,
+        obs: ObsConfig,
+    ) -> anyhow::Result<Self> {
         anyhow::ensure!(!nets.is_empty(), "shard {id} hosts no networks");
         let mut utilization: BTreeMap<String, Vec<Utilization>> = BTreeMap::new();
         for n in &nets {
@@ -176,6 +186,7 @@ impl Shard {
                 utilization,
                 ..ShardStats::default()
             },
+            obs: ShardObs::new(obs),
         })
     }
 
@@ -213,6 +224,7 @@ impl Shard {
     ) -> Admission {
         let depth = self.router.total_pending();
         let shed = max_queue_depth > 0 && depth >= max_queue_depth;
+        self.obs.touch(now_ns);
         let st = &mut self.stats;
         st.accepted += 1;
         let ledger = st.by_net.entry(net.to_string()).or_default();
@@ -220,6 +232,7 @@ impl Shard {
         if shed {
             ledger.shed += 1;
             st.shed += 1;
+            self.obs.note_event(EventKind::Shed, net, row as u64, depth as u64);
             return Admission::Rejected {
                 shard: self.id,
                 depth,
@@ -252,13 +265,19 @@ impl Shard {
         // stay queued instead of being dropped.
         let reqs = self.router.drain_net(&name, cfg.max_batch.min(device_batch));
         let batch = Batch::form(&name, reqs, device_batch);
+        self.obs.touch(now_ns);
         let st = &mut self.stats;
         st.served += batch.requests.len() as u64;
         st.batches += 1;
         st.padded_rows += batch.padded as u64;
         st.by_net.entry(name).or_default().served += batch.requests.len() as u64;
         for r in &batch.requests {
-            st.latency_ns.push(now_ns.saturating_sub(r.arrived_ns) as f64);
+            // One admit→fire span sample per dispatched request, on the
+            // engine clock — so `queue_ns.count() == dispatched` is part
+            // of the snapshot reconciliation contract.
+            let wait = now_ns.saturating_sub(r.arrived_ns);
+            st.latency_ns.push(wait as f64);
+            self.obs.note_queue_wait(&batch.net, wait);
         }
         Some(batch)
     }
@@ -301,9 +320,20 @@ impl Shard {
         let mapped: Vec<usize> = rows.iter().map(|r| r % srows).collect();
         let stride = n.row_stride();
         self.staging.resize(mapped.len() * stride, 0.0);
+        let evictions_before = self.cache.stats.evictions;
         let serve = serve_rows_into(n, *net_id, &mut self.cache, &mapped, &mut self.staging, pool)?;
         self.stats.rows_from_cache += serve.hits as u64;
         self.stats.rows_decoded += serve.misses as u64;
+        if self.obs.enabled() {
+            let row_bytes = super::stream::row_window_bytes(&n.codes, n.codes_per_row) as u64;
+            let evicted = self.cache.stats.evictions - evictions_before;
+            let cache_bytes = self.cache.bytes() as u64;
+            self.obs
+                .note_batch_rows(net, serve.hits as u64, serve.misses as u64, serve.misses as u64 * row_bytes);
+            if evicted > 0 {
+                self.obs.note_event(EventKind::Eviction, net, evicted, cache_bytes);
+            }
+        }
         Ok(serve)
     }
 

@@ -50,16 +50,24 @@ pub fn decode_into(
     pool: Option<&ThreadPool>,
 ) -> anyhow::Result<DecodeStats> {
     decode_rows_into(&batch.rows, staged, cb, codes_per_row, dst, pool)?;
-    let window_bytes: usize = staged
-        .stage_streams()
-        .iter()
-        .map(|p| (codes_per_row * p.bits as usize).div_ceil(8))
-        .sum();
+    let window_bytes = row_window_bytes(staged, codes_per_row);
     Ok(DecodeStats {
         codes_unpacked: batch.rows.len() * codes_per_row * staged.stages(),
         packed_bytes_read: batch.rows.len() * window_bytes,
         utilization: batch.utilization(),
     })
+}
+
+/// Packed bytes one row's code windows span, summed across every
+/// residual stage (per-stage windows round up to whole bytes) — the
+/// cache-miss read volume per decoded row.  Shared by [`decode_into`]'s
+/// accounting and the obs plane's `decoded_bytes_read` counter.
+pub fn row_window_bytes(staged: &StagedCodes, codes_per_row: usize) -> usize {
+    staged
+        .stage_streams()
+        .iter()
+        .map(|p| (codes_per_row * p.bits as usize).div_ceil(8))
+        .sum()
 }
 
 /// Row-list core of [`decode_into`] — also the cache-miss decode the

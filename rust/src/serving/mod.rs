@@ -38,6 +38,12 @@
 //!   LRU decode cache keyed on `(net, row window)` with byte-budget
 //!   eviction, and the streaming decode path ([`engine::decode_into`])
 //!   that unpacks + decodes straight into `infer_hard` staging buffers.
+//! * [`obs`]       — unified observability plane: per-shard metrics
+//!   registry (log2 latency histograms, counters, gauges) merged into
+//!   one [`MetricsSnapshot`] by [`Engine::metrics_snapshot`],
+//!   request-lifecycle stage tracing on the engine clock, Prometheus
+//!   text exposition (the TCP `/metrics` verb), and a per-shard flight
+//!   recorder of structured events (the `/trace` verb).
 //! * [`server`]    — virtual-clock front-end gluing the plane to the
 //!   `infer_hard` artifacts (deterministic serving benches).
 //! * [`switchsim`] — task-switch cost simulator on top of `rom::memsim`
@@ -52,6 +58,7 @@
 //!   backpressure the clients.
 pub mod batcher;
 pub mod engine;
+pub mod obs;
 pub mod server;
 pub mod switchsim;
 pub mod tcp;
@@ -60,4 +67,5 @@ pub use batcher::{Batch, BatcherConfig};
 pub use engine::{
     Admission, DecodeCache, Engine, EngineConfig, HostedNet, NetLedger, Request, Router,
 };
+pub use obs::{Event, EventKind, FlightRecorder, MetricsSnapshot, ObsConfig, ShardObs};
 pub use switchsim::{decode_batch, BatchDecode};

@@ -1,0 +1,435 @@
+//! Exposition: render a [`MetricsSnapshot`] as Prometheus text format
+//! (the TCP `/metrics` verb body) or as a JSON object (the JSON
+//! snapshot verb and the serve examples' final dumps), plus the labeled
+//! latency-summary shape that unifies the `latency_ns` (engine clock)
+//! vs `latency_us` (wall clock) reporting mismatch.
+//!
+//! [`check_exposition`] is a deliberately small text-format validator —
+//! enough for the integration test to *parse* what `/metrics` returns
+//! (every required family declared and sampled, histogram buckets
+//! cumulative and consistent with `_count`) without vendoring a
+//! Prometheus client.
+
+use std::fmt::Write as _;
+
+use super::MetricsSnapshot;
+use crate::util::json::Json;
+use crate::util::stats::{Log2Hist, Summary};
+
+/// Metric families every exposition must contain — the CI
+/// seeded-violation step and [`check_exposition`] key off this list.
+pub const REQUIRED_FAMILIES: &[&str] = &[
+    "vq4all_requests_accepted_total",
+    "vq4all_requests_dispatched_total",
+    "vq4all_requests_shed_total",
+    "vq4all_requests_deferred_total",
+    "vq4all_batches_total",
+    "vq4all_padded_rows_total",
+    "vq4all_rows_from_cache_total",
+    "vq4all_rows_decoded_total",
+    "vq4all_cache_lookups_total",
+    "vq4all_cache_hits_total",
+    "vq4all_cache_misses_total",
+    "vq4all_cache_evictions_total",
+    "vq4all_decoded_bytes_total",
+    "vq4all_obs_events_recorded_total",
+    "vq4all_obs_events_dropped_total",
+    "vq4all_shards",
+    "vq4all_hosted_nets",
+    "vq4all_pending_requests",
+    "vq4all_decode_hidden_ratio",
+    "vq4all_queue_wait_ns",
+    "vq4all_decode_ns",
+    "vq4all_infer_ns",
+    "vq4all_respond_ns",
+    "vq4all_decode_hit_ns",
+    "vq4all_decode_miss_ns",
+];
+
+/// The histogram subset of [`REQUIRED_FAMILIES`].
+pub const HISTOGRAM_FAMILIES: &[&str] = &[
+    "vq4all_queue_wait_ns",
+    "vq4all_decode_ns",
+    "vq4all_infer_ns",
+    "vq4all_respond_ns",
+    "vq4all_decode_hit_ns",
+    "vq4all_decode_miss_ns",
+];
+
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn counter(out: &mut String, name: &str, help: &str, v: u64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} counter");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+fn gauge(out: &mut String, name: &str, help: &str, v: f64) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} gauge");
+    let _ = writeln!(out, "{name} {v}");
+}
+
+fn histogram(out: &mut String, name: &str, help: &str, h: &Log2Hist) {
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} histogram");
+    let cum = h.cumulative();
+    for (i, c) in cum.iter().enumerate() {
+        if i == Log2Hist::BUCKETS - 1 {
+            let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {c}");
+        } else {
+            let _ = writeln!(out, "{name}_bucket{{le=\"{}\"}} {c}", 1u64 << i);
+        }
+    }
+    let _ = writeln!(out, "{name}_sum {}", h.sum());
+    let _ = writeln!(out, "{name}_count {}", h.count());
+}
+
+/// Render the snapshot in Prometheus text exposition format
+/// (`text/plain; version=0.0.4`).
+pub fn prometheus_text(s: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    counter(&mut out, "vq4all_requests_accepted_total", "Requests admitted by the plane", s.accepted);
+    counter(&mut out, "vq4all_requests_dispatched_total", "Requests fired into batches", s.dispatched);
+    counter(&mut out, "vq4all_requests_shed_total", "Requests rejected at the admission budget", s.shed);
+    counter(&mut out, "vq4all_requests_deferred_total", "Requests deferred by front-end backpressure", s.deferred);
+    counter(&mut out, "vq4all_batches_total", "Batches formed and served", s.batches);
+    counter(&mut out, "vq4all_padded_rows_total", "Padding rows added to fill device batches", s.padded_rows);
+    counter(&mut out, "vq4all_rows_from_cache_total", "Weight rows served from the decode cache", s.rows_from_cache);
+    counter(&mut out, "vq4all_rows_decoded_total", "Weight rows decoded fresh on a cache miss", s.rows_decoded);
+    counter(&mut out, "vq4all_cache_lookups_total", "Decode-cache window lookups", s.cache_lookups);
+    counter(&mut out, "vq4all_cache_hits_total", "Decode-cache window hits", s.cache_hits);
+    counter(&mut out, "vq4all_cache_misses_total", "Decode-cache window misses", s.cache_misses);
+    counter(&mut out, "vq4all_cache_evictions_total", "Decode-cache windows evicted under byte pressure", s.cache_evictions);
+    counter(&mut out, "vq4all_decoded_bytes_total", "Packed bytes read to decode cache misses", s.decoded_bytes_read);
+    counter(&mut out, "vq4all_obs_events_recorded_total", "Flight-recorder events recorded", s.events_recorded);
+    counter(&mut out, "vq4all_obs_events_dropped_total", "Flight-recorder events pushed out of the ring", s.events_dropped);
+    gauge(&mut out, "vq4all_shards", "Engine shard count", s.shards as f64);
+    gauge(&mut out, "vq4all_hosted_nets", "Networks hosted on the plane", s.hosted_nets as f64);
+    gauge(&mut out, "vq4all_pending_requests", "Requests queued across all shards", s.pending as f64);
+    gauge(&mut out, "vq4all_decode_hidden_ratio", "decode_ns_total / infer_ns_total", s.decode_hidden_ratio());
+    histogram(&mut out, "vq4all_queue_wait_ns", "Admit-to-fire wait per dispatched request (engine clock, ns)", &s.queue_ns);
+    histogram(&mut out, "vq4all_decode_ns", "Decode stage duration per batch (ns)", &s.decode_ns);
+    histogram(&mut out, "vq4all_infer_ns", "Infer stage duration per batch (ns)", &s.infer_ns);
+    histogram(&mut out, "vq4all_respond_ns", "Respond stage duration per batch (ns)", &s.respond_ns);
+    histogram(&mut out, "vq4all_decode_hit_ns", "Decode stage duration, all-cache-hit batches (ns)", &s.decode_hit_ns);
+    histogram(&mut out, "vq4all_decode_miss_ns", "Decode stage duration, batches with >=1 cache miss (ns)", &s.decode_miss_ns);
+    if !s.per_net.is_empty() {
+        let nets: Vec<(&String, &super::NetSnapshot)> = s.per_net.iter().collect();
+        let labeled = |out: &mut String, name: &str, help: &str, ty: &str, f: &dyn Fn(&super::NetSnapshot) -> u64| {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} {ty}");
+            for (net, n) in &nets {
+                let _ = writeln!(out, "{name}{{net=\"{}\"}} {}", escape_label(net), f(n));
+            }
+        };
+        labeled(&mut out, "vq4all_net_accepted_total", "Requests admitted per net", "counter", &|n| n.accepted);
+        labeled(&mut out, "vq4all_net_served_total", "Requests served per net", "counter", &|n| n.served);
+        labeled(&mut out, "vq4all_net_shed_total", "Requests shed per net", "counter", &|n| n.shed);
+        labeled(&mut out, "vq4all_net_pending", "Requests queued per net", "gauge", &|n| n.pending);
+        labeled(&mut out, "vq4all_net_batches_total", "Batches streamed per net", "counter", &|n| n.batches);
+        labeled(&mut out, "vq4all_net_rows_hit_total", "Cache-hit weight rows per net", "counter", &|n| n.rows_hit);
+        labeled(&mut out, "vq4all_net_rows_missed_total", "Cache-miss weight rows per net", "counter", &|n| n.rows_missed);
+        // Per-net queue wait as a summary (sum + count) — the full
+        // bucket shape lives in the unlabeled engine-wide histogram.
+        let _ = writeln!(out, "# HELP vq4all_net_queue_wait_ns Admit-to-fire wait per net (engine clock, ns)");
+        let _ = writeln!(out, "# TYPE vq4all_net_queue_wait_ns summary");
+        for (net, n) in &nets {
+            let e = escape_label(net);
+            let _ = writeln!(out, "vq4all_net_queue_wait_ns_sum{{net=\"{e}\"}} {}", n.queue_ns.sum());
+            let _ = writeln!(out, "vq4all_net_queue_wait_ns_count{{net=\"{e}\"}} {}", n.queue_ns.count());
+        }
+    }
+    out
+}
+
+/// Parse + validate a Prometheus text exposition: every line must be a
+/// comment or a `name[{labels}] value` sample, every family in
+/// [`REQUIRED_FAMILIES`] must be declared (`# TYPE`) and sampled, and
+/// every required histogram must have cumulative buckets whose `+Inf`
+/// count equals its `_count` sample.  Returns the number of sample
+/// lines on success.
+pub fn check_exposition(text: &str) -> anyhow::Result<usize> {
+    let mut typed: Vec<String> = Vec::new();
+    let mut sampled: Vec<String> = Vec::new();
+    // (family, le value as f64 or +Inf, cumulative count) in order.
+    let mut buckets: Vec<(String, f64, f64)> = Vec::new();
+    let mut counts: Vec<(String, f64)> = Vec::new();
+    let mut samples = 0usize;
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().unwrap_or("").to_string();
+            let ty = it.next().unwrap_or("");
+            anyhow::ensure!(
+                matches!(ty, "counter" | "gauge" | "histogram" | "summary"),
+                "line {}: unknown metric type {ty:?}",
+                ln + 1
+            );
+            typed.push(name);
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        // Sample line: name[{labels}] value
+        let (head, value) = line
+            .rsplit_once(' ')
+            .ok_or_else(|| anyhow::anyhow!("line {}: no value on sample line {line:?}", ln + 1))?;
+        let value: f64 = value
+            .parse()
+            .map_err(|_| anyhow::anyhow!("line {}: unparsable value {value:?}", ln + 1))?;
+        let (name, labels) = match head.split_once('{') {
+            Some((n, l)) => {
+                let l = l
+                    .strip_suffix('}')
+                    .ok_or_else(|| anyhow::anyhow!("line {}: unterminated labels", ln + 1))?;
+                (n, Some(l))
+            }
+            None => (head, None),
+        };
+        anyhow::ensure!(
+            !name.is_empty() && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'),
+            "line {}: bad metric name {name:?}",
+            ln + 1
+        );
+        samples += 1;
+        if let Some(base) = name.strip_suffix("_bucket") {
+            let le = labels
+                .and_then(|l| l.strip_prefix("le=\""))
+                .and_then(|l| l.strip_suffix('"'))
+                .ok_or_else(|| anyhow::anyhow!("line {}: bucket without le label", ln + 1))?;
+            let le = if le == "+Inf" { f64::INFINITY } else { le.parse::<f64>()? };
+            buckets.push((base.to_string(), le, value));
+            sampled.push(base.to_string());
+        } else if let Some(base) = name.strip_suffix("_count") {
+            counts.push((base.to_string(), value));
+            sampled.push(base.to_string());
+        } else if let Some(base) = name.strip_suffix("_sum") {
+            sampled.push(base.to_string());
+        } else {
+            sampled.push(name.to_string());
+        }
+    }
+    for fam in REQUIRED_FAMILIES {
+        anyhow::ensure!(typed.iter().any(|t| t == fam), "missing # TYPE for required family {fam}");
+        anyhow::ensure!(sampled.iter().any(|s| s == fam), "required family {fam} has no samples");
+    }
+    for fam in HISTOGRAM_FAMILIES {
+        let fam_buckets: Vec<&(String, f64, f64)> =
+            buckets.iter().filter(|(b, _, _)| b == fam).collect();
+        anyhow::ensure!(!fam_buckets.is_empty(), "histogram {fam} has no buckets");
+        for w in fam_buckets.windows(2) {
+            anyhow::ensure!(
+                w[0].1 < w[1].1 && w[0].2 <= w[1].2,
+                "histogram {fam}: buckets must be le-ordered and cumulative"
+            );
+        }
+        let last = fam_buckets.last().unwrap();
+        anyhow::ensure!(last.1.is_infinite(), "histogram {fam}: last bucket must be +Inf");
+        let count = counts
+            .iter()
+            .find(|(b, _)| b == fam)
+            .ok_or_else(|| anyhow::anyhow!("histogram {fam} lacks _count"))?;
+        anyhow::ensure!(
+            count.1 == last.2,
+            "histogram {fam}: _count {} != +Inf bucket {}",
+            count.1,
+            last.2
+        );
+    }
+    Ok(samples)
+}
+
+fn hist_json(h: &Log2Hist) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(h.count() as f64)),
+        ("sum", Json::num(h.sum() as f64)),
+    ])
+}
+
+/// JSON twin of [`prometheus_text`] — the `/metrics?format=json` verb
+/// body and the serve examples' final snapshot dump.
+pub fn snapshot_json(s: &MetricsSnapshot) -> Json {
+    let per_net: Vec<(&str, Json)> = s
+        .per_net
+        .iter()
+        .map(|(net, n)| {
+            (
+                net.as_str(),
+                Json::obj(vec![
+                    ("accepted", Json::num(n.accepted as f64)),
+                    ("served", Json::num(n.served as f64)),
+                    ("shed", Json::num(n.shed as f64)),
+                    ("pending", Json::num(n.pending as f64)),
+                    ("batches", Json::num(n.batches as f64)),
+                    ("rows_hit", Json::num(n.rows_hit as f64)),
+                    ("rows_missed", Json::num(n.rows_missed as f64)),
+                    ("queue_wait_ns", hist_json(&n.queue_ns)),
+                ]),
+            )
+        })
+        .collect();
+    Json::obj(vec![
+        ("shards", Json::num(s.shards as f64)),
+        ("hosted_nets", Json::num(s.hosted_nets as f64)),
+        ("accepted", Json::num(s.accepted as f64)),
+        ("dispatched", Json::num(s.dispatched as f64)),
+        ("shed", Json::num(s.shed as f64)),
+        ("deferred", Json::num(s.deferred as f64)),
+        ("batches", Json::num(s.batches as f64)),
+        ("padded_rows", Json::num(s.padded_rows as f64)),
+        ("rows_from_cache", Json::num(s.rows_from_cache as f64)),
+        ("rows_decoded", Json::num(s.rows_decoded as f64)),
+        ("cache_lookups", Json::num(s.cache_lookups as f64)),
+        ("cache_hits", Json::num(s.cache_hits as f64)),
+        ("cache_misses", Json::num(s.cache_misses as f64)),
+        ("cache_evictions", Json::num(s.cache_evictions as f64)),
+        ("decoded_bytes_read", Json::num(s.decoded_bytes_read as f64)),
+        ("pending", Json::num(s.pending as f64)),
+        ("queue_wait_ns", hist_json(&s.queue_ns)),
+        ("decode_ns", hist_json(&s.decode_ns)),
+        ("infer_ns", hist_json(&s.infer_ns)),
+        ("respond_ns", hist_json(&s.respond_ns)),
+        ("decode_hit_ns", hist_json(&s.decode_hit_ns)),
+        ("decode_miss_ns", hist_json(&s.decode_miss_ns)),
+        ("decode_ns_total", Json::num(s.decode_ns_total as f64)),
+        ("infer_ns_total", Json::num(s.infer_ns_total as f64)),
+        ("decode_hidden_ratio", Json::num(s.decode_hidden_ratio())),
+        ("events_recorded", Json::num(s.events_recorded as f64)),
+        ("events_dropped", Json::num(s.events_dropped as f64)),
+        ("per_net", Json::obj(per_net)),
+    ])
+}
+
+/// One labeled latency shape for every report: the serving stack keeps
+/// engine-clock nanosecond summaries (`latency_ns`) and wall-clock
+/// microsecond summaries (`latency_us`); this tags each with its unit
+/// and clock so the `/stats` verb and the examples' end-of-run reports
+/// stop mixing bare numbers of different units.
+pub fn latency_summary_json(s: &Summary, unit: &str, clock: &str) -> Json {
+    Json::obj(vec![
+        ("unit", Json::str(unit)),
+        ("clock", Json::str(clock)),
+        ("count", Json::num(s.count() as f64)),
+        ("mean", Json::num(if s.is_empty() { 0.0 } else { s.mean() })),
+        ("p50", Json::num(s.percentile(50.0))),
+        ("p90", Json::num(s.percentile(90.0))),
+        ("p99", Json::num(s.percentile(99.0))),
+        ("max", Json::num(if s.is_empty() { 0.0 } else { s.max() })),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serving::obs::{NetSnapshot, ObsConfig, ShardObs};
+
+    fn sample_snapshot() -> MetricsSnapshot {
+        let mut o = ShardObs::new(ObsConfig::default());
+        o.touch(1_000);
+        for w in [3u64, 70, 900] {
+            o.note_queue_wait("alpha", w);
+        }
+        o.note_batch_rows("alpha", 2, 1, 48);
+        o.note_stages(120, 400, 9, true);
+        let mut s = MetricsSnapshot {
+            shards: 1,
+            hosted_nets: 1,
+            accepted: 4,
+            dispatched: 3,
+            shed: 1,
+            deferred: 0,
+            batches: 1,
+            rows_from_cache: 2,
+            rows_decoded: 1,
+            cache_lookups: 3,
+            cache_hits: 2,
+            cache_misses: 1,
+            pending: 1,
+            ..MetricsSnapshot::default()
+        };
+        s.absorb_shard(&o);
+        let n = s.per_net.entry("alpha".into()).or_default();
+        n.accepted = 4;
+        n.served = 3;
+        n.shed = 1;
+        n.pending = 1;
+        s
+    }
+
+    #[test]
+    fn exposition_round_trips_through_the_checker() {
+        let s = sample_snapshot();
+        let text = prometheus_text(&s);
+        let samples = check_exposition(&text).expect("valid exposition");
+        assert!(samples > 40, "histograms alone exceed 40 samples, got {samples}");
+        assert!(text.contains("vq4all_requests_accepted_total 4"));
+        assert!(text.contains("vq4all_queue_wait_ns_count 3"));
+        assert!(text.contains("vq4all_net_served_total{net=\"alpha\"} 3"));
+        assert!(text.contains("vq4all_net_queue_wait_ns_count{net=\"alpha\"} 3"));
+    }
+
+    #[test]
+    fn checker_rejects_missing_family_and_broken_buckets() {
+        let s = sample_snapshot();
+        let text = prometheus_text(&s);
+        // Drop one required family wholesale.
+        let gutted: String = text
+            .lines()
+            .filter(|l| !l.contains("vq4all_cache_hits_total"))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        let err = check_exposition(&gutted).unwrap_err().to_string();
+        assert!(err.contains("vq4all_cache_hits_total"), "err: {err}");
+        // Corrupt a histogram count so buckets and _count disagree.
+        let broken = text.replace("vq4all_queue_wait_ns_count 3", "vq4all_queue_wait_ns_count 99");
+        assert!(check_exposition(&broken).is_err());
+        // Garbage line.
+        assert!(check_exposition("not a metric line at all\n").is_err());
+    }
+
+    #[test]
+    fn label_escaping_survives_hostile_net_names() {
+        let mut s = sample_snapshot();
+        s.per_net.insert("we\"ird\\net".into(), NetSnapshot::default());
+        let text = prometheus_text(&s);
+        assert!(text.contains("net=\"we\\\"ird\\\\net\""));
+        check_exposition(&text).expect("escaped labels still parse");
+    }
+
+    #[test]
+    fn snapshot_json_carries_the_required_keys() {
+        let s = sample_snapshot();
+        let j = snapshot_json(&s);
+        assert_eq!(j.req_usize("accepted").unwrap(), 4);
+        assert_eq!(j.req_usize("dispatched").unwrap(), 3);
+        assert_eq!(j.req_usize("cache_lookups").unwrap(), 3);
+        assert!(j.req_f64("decode_hidden_ratio").unwrap() > 0.0);
+        let net = j.req("per_net").unwrap().get("alpha").expect("net entry");
+        assert_eq!(net.req_usize("served").unwrap(), 3);
+        assert_eq!(net.req("queue_wait_ns").unwrap().req_usize("count").unwrap(), 3);
+    }
+
+    #[test]
+    fn latency_shape_is_labeled_and_total() {
+        let mut sum = Summary::new();
+        for i in 1..=100 {
+            sum.push(i as f64);
+        }
+        let j = latency_summary_json(&sum, "us", "wall");
+        assert_eq!(j.req_str("unit").unwrap(), "us");
+        assert_eq!(j.req_str("clock").unwrap(), "wall");
+        assert_eq!(j.req_usize("count").unwrap(), 100);
+        assert!(j.req_f64("p99").unwrap() >= j.req_f64("p50").unwrap());
+        let empty = latency_summary_json(&Summary::new(), "ns", "engine");
+        assert_eq!(empty.req_f64("mean").unwrap(), 0.0);
+        assert_eq!(empty.req_f64("max").unwrap(), 0.0);
+    }
+}

@@ -1,0 +1,352 @@
+//! Unified observability plane for the serving engine.
+//!
+//! Three parts, one contract:
+//!
+//! 1. **Metrics registry** — counters, gauges, and fixed-bucket log2
+//!    latency histograms ([`crate::util::stats::Log2Hist`]), accumulated
+//!    in plain non-atomic per-shard fields ([`ShardObs`]) and merged at
+//!    snapshot time by [`crate::serving::Engine::metrics_snapshot`].
+//!    The hot path stays lock-free, and because every stamp uses the
+//!    **engine clock** (virtual on `serving::server`, `set_now` wall
+//!    time on `serving::tcp`), serial and pooled runs produce
+//!    bit-identical snapshots — property-tested in `prop_substrate`.
+//! 2. **Request-lifecycle tracing** — each admitted request's span is
+//!    stamped admit → enqueue → fire (queue-wait histogram, recorded in
+//!    `Shard::next_batch`) → decode (cache-hit vs miss split) → infer →
+//!    respond (stage histograms fed by the front-ends through
+//!    [`crate::serving::Engine::observe_batch`]), per shard and per
+//!    net, plus derived keys like the decode-hidden ratio
+//!    ([`MetricsSnapshot::decode_hidden_ratio`]).
+//! 3. **Exposition + flight recorder** — [`expose::prometheus_text`]
+//!    renders the snapshot as Prometheus text format (served by the TCP
+//!    `/metrics` verb; [`expose::snapshot_json`] is the JSON twin), and
+//!    each shard keeps a fixed-capacity [`recorder::FlightRecorder`]
+//!    ring of recent structured events (shed / deferral / eviction /
+//!    hosting / validation / out-of-range), dumped by the `/trace`
+//!    verb.
+//!
+//! **Reconciliation contract:** [`MetricsSnapshot`] totals are
+//! *defined* to equal the engine's existing conservation counters —
+//! `accepted == dispatched + shed`, per-net ledger sums, cache
+//! `hits + misses == lookups`, and `queue_ns.count() == dispatched`
+//! (one queue-wait sample per dispatched request).  The `obs_overhead`
+//! bench row gates the instrumentation cost of the `stream_batch` path
+//! at ≤ ~5% (`scripts/verify.sh`).
+
+pub mod expose;
+pub mod recorder;
+
+use std::collections::BTreeMap;
+
+use crate::util::stats::Log2Hist;
+pub use recorder::{Event, EventKind, FlightRecorder};
+
+/// Observability knobs, part of `EngineConfig` (so `Copy`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ObsConfig {
+    /// Master switch: `false` skips every histogram/ring update on the
+    /// hot path (the `obs_overhead` bench's uninstrumented side).
+    pub enabled: bool,
+    /// Flight-recorder capacity per shard (0 disables the ring).
+    pub ring_capacity: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            enabled: true,
+            ring_capacity: 256,
+        }
+    }
+}
+
+/// Per-net slice of a shard's observability state.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct NetObs {
+    /// Admit→fire wait per dispatched request (engine clock).
+    pub queue_ns: Log2Hist,
+    /// Batches streamed for this net.
+    pub batches: u64,
+    /// Weight rows served out of the decode cache / decoded fresh.
+    pub rows_hit: u64,
+    pub rows_missed: u64,
+}
+
+/// Per-shard observability state: plain fields, owned by exactly one
+/// shard, merged only at snapshot time.  All methods are no-ops when
+/// the plane is disabled.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardObs {
+    enabled: bool,
+    /// Engine clock at the last admit/fire on this shard — the
+    /// timestamp source for events raised where no clock is in scope
+    /// (e.g. cache evictions inside `stream_batch`).
+    pub now_ns: u64,
+    /// Admit→fire wait per dispatched request.
+    pub queue_ns: Log2Hist,
+    /// Front-end measured stage durations per batch.
+    pub decode_ns: Log2Hist,
+    pub infer_ns: Log2Hist,
+    pub respond_ns: Log2Hist,
+    /// Decode-stage duration split by cache outcome: batches whose rows
+    /// all hit vs batches that decoded at least one miss.
+    pub decode_hit_ns: Log2Hist,
+    pub decode_miss_ns: Log2Hist,
+    /// Stage-duration running totals (the decode-hidden ratio inputs).
+    pub decode_ns_total: u64,
+    pub infer_ns_total: u64,
+    /// Packed bytes read to decode cache misses
+    /// (`stream::row_window_bytes` per missed row).
+    pub decoded_bytes_read: u64,
+    pub by_net: BTreeMap<String, NetObs>,
+    pub recorder: FlightRecorder,
+}
+
+impl ShardObs {
+    pub fn new(cfg: ObsConfig) -> Self {
+        ShardObs {
+            enabled: cfg.enabled,
+            now_ns: 0,
+            queue_ns: Log2Hist::new(),
+            decode_ns: Log2Hist::new(),
+            infer_ns: Log2Hist::new(),
+            respond_ns: Log2Hist::new(),
+            decode_hit_ns: Log2Hist::new(),
+            decode_miss_ns: Log2Hist::new(),
+            decode_ns_total: 0,
+            infer_ns_total: 0,
+            decoded_bytes_read: 0,
+            by_net: BTreeMap::new(),
+            recorder: FlightRecorder::new(if cfg.enabled { cfg.ring_capacity } else { 0 }),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Advance the shard-local engine-clock mirror (monotone max, so
+    /// out-of-order admit/fire interleavings cannot run it backwards).
+    #[inline]
+    pub fn touch(&mut self, now_ns: u64) {
+        if self.enabled {
+            self.now_ns = self.now_ns.max(now_ns);
+        }
+    }
+
+    /// Borrow (create on first use) a net's obs slice without cloning
+    /// the name on the hot path once the entry exists.
+    fn net_mut(&mut self, net: &str) -> &mut NetObs {
+        if !self.by_net.contains_key(net) {
+            self.by_net.insert(net.to_string(), NetObs::default());
+        }
+        self.by_net.get_mut(net).expect("entry just ensured")
+    }
+
+    /// One dispatched request's admit→fire wait.
+    #[inline]
+    pub fn note_queue_wait(&mut self, net: &str, wait_ns: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.queue_ns.record(wait_ns);
+        self.net_mut(net).queue_ns.record(wait_ns);
+    }
+
+    /// One streamed batch's cache outcome (`stream_batch`).
+    #[inline]
+    pub fn note_batch_rows(&mut self, net: &str, hits: u64, misses: u64, miss_bytes: u64) {
+        if !self.enabled {
+            return;
+        }
+        self.decoded_bytes_read += miss_bytes;
+        let n = self.net_mut(net);
+        n.batches += 1;
+        n.rows_hit += hits;
+        n.rows_missed += misses;
+    }
+
+    /// Front-end measured stage durations for one responded batch.
+    pub fn note_stages(
+        &mut self,
+        decode_ns: u64,
+        infer_ns: u64,
+        respond_ns: u64,
+        had_miss: bool,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.decode_ns.record(decode_ns);
+        self.infer_ns.record(infer_ns);
+        self.respond_ns.record(respond_ns);
+        if had_miss {
+            self.decode_miss_ns.record(decode_ns);
+        } else {
+            self.decode_hit_ns.record(decode_ns);
+        }
+        self.decode_ns_total += decode_ns;
+        self.infer_ns_total += infer_ns;
+    }
+
+    /// Raise a flight-recorder event at the shard's clock mirror.
+    #[inline]
+    pub fn note_event(&mut self, kind: EventKind, net: &str, a: u64, b: u64) {
+        if self.enabled {
+            self.recorder.record(self.now_ns, kind, net, a, b);
+        }
+    }
+}
+
+/// Per-net slice of a [`MetricsSnapshot`] — ledger counters plus the
+/// obs-plane additions, reconciled against `NetLedger` by the property
+/// tests.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct NetSnapshot {
+    pub accepted: u64,
+    pub served: u64,
+    pub shed: u64,
+    /// Requests sitting in this net's queue right now (gauge).
+    pub pending: u64,
+    pub queue_ns: Log2Hist,
+    pub batches: u64,
+    pub rows_hit: u64,
+    pub rows_missed: u64,
+}
+
+/// One coherent, fully merged view of the engine's metrics.  All fields
+/// are integers (or integer histograms) so the snapshot is `Eq` and the
+/// serial-vs-pooled property can demand exact equality.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    pub shards: u64,
+    pub hosted_nets: u64,
+    // Admission conservation: accepted == dispatched + shed.
+    pub accepted: u64,
+    pub dispatched: u64,
+    pub shed: u64,
+    pub deferred: u64,
+    pub batches: u64,
+    pub padded_rows: u64,
+    // Decode plane: rows_from_cache + rows_decoded == cache lookups.
+    pub rows_from_cache: u64,
+    pub rows_decoded: u64,
+    pub cache_lookups: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_evictions: u64,
+    pub decoded_bytes_read: u64,
+    /// Requests queued across every shard right now (gauge).
+    pub pending: u64,
+    pub queue_ns: Log2Hist,
+    pub decode_ns: Log2Hist,
+    pub infer_ns: Log2Hist,
+    pub respond_ns: Log2Hist,
+    pub decode_hit_ns: Log2Hist,
+    pub decode_miss_ns: Log2Hist,
+    pub decode_ns_total: u64,
+    pub infer_ns_total: u64,
+    pub events_recorded: u64,
+    pub events_dropped: u64,
+    pub per_net: BTreeMap<String, NetSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// Fraction of decode time hidden behind (divided by) infer time —
+    /// the decode/execute-overlap headline the ROADMAP's device-path
+    /// item will optimize.  0 when nothing was observed.
+    pub fn decode_hidden_ratio(&self) -> f64 {
+        if self.infer_ns_total == 0 {
+            return 0.0;
+        }
+        self.decode_ns_total as f64 / self.infer_ns_total as f64
+    }
+
+    /// Fold one shard's view into the totals (snapshot-time merge).
+    pub fn absorb_shard(&mut self, obs: &ShardObs) {
+        self.queue_ns.merge(&obs.queue_ns);
+        self.decode_ns.merge(&obs.decode_ns);
+        self.infer_ns.merge(&obs.infer_ns);
+        self.respond_ns.merge(&obs.respond_ns);
+        self.decode_hit_ns.merge(&obs.decode_hit_ns);
+        self.decode_miss_ns.merge(&obs.decode_miss_ns);
+        self.decode_ns_total += obs.decode_ns_total;
+        self.infer_ns_total += obs.infer_ns_total;
+        self.decoded_bytes_read += obs.decoded_bytes_read;
+        self.events_recorded += obs.recorder.recorded();
+        self.events_dropped += obs.recorder.dropped();
+        for (net, n) in &obs.by_net {
+            let dst = self.per_net.entry(net.clone()).or_default();
+            dst.queue_ns.merge(&n.queue_ns);
+            dst.batches += n.batches;
+            dst.rows_hit += n.rows_hit;
+            dst.rows_missed += n.rows_missed;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_obs_records_nothing() {
+        let mut o = ShardObs::new(ObsConfig {
+            enabled: false,
+            ring_capacity: 8,
+        });
+        o.touch(100);
+        o.note_queue_wait("a", 5);
+        o.note_batch_rows("a", 3, 1, 64);
+        o.note_stages(10, 20, 1, true);
+        o.note_event(EventKind::Shed, "a", 0, 0);
+        assert_eq!(o.now_ns, 0);
+        assert_eq!(o.queue_ns.count(), 0);
+        assert!(o.by_net.is_empty());
+        assert_eq!(o.decode_ns_total + o.infer_ns_total + o.decoded_bytes_read, 0);
+        assert_eq!(o.recorder.recorded(), 0);
+    }
+
+    #[test]
+    fn shard_merge_reconciles_into_snapshot() {
+        let mk = |waits: &[u64], net: &str| {
+            let mut o = ShardObs::new(ObsConfig::default());
+            o.touch(50);
+            for &w in waits {
+                o.note_queue_wait(net, w);
+            }
+            o.note_batch_rows(net, waits.len() as u64, 1, 10);
+            o.note_stages(4, 8, 1, true);
+            o.note_event(EventKind::Eviction, net, 1, 0);
+            o
+        };
+        let a = mk(&[1, 2, 3], "x");
+        let b = mk(&[7], "y");
+        let mut s = MetricsSnapshot::default();
+        s.absorb_shard(&a);
+        s.absorb_shard(&b);
+        assert_eq!(s.queue_ns.count(), 4);
+        assert_eq!(s.per_net.len(), 2);
+        assert_eq!(s.per_net["x"].queue_ns.count(), 3);
+        assert_eq!(s.per_net["x"].rows_hit, 3);
+        assert_eq!(s.decode_ns_total, 8);
+        assert_eq!(s.infer_ns_total, 16);
+        assert_eq!(s.decoded_bytes_read, 20);
+        assert_eq!(s.events_recorded, 2);
+        assert!((s.decode_hidden_ratio() - 0.5).abs() < 1e-12);
+        // Stage histograms saw one batch per shard, split by outcome.
+        assert_eq!(s.decode_ns.count(), 2);
+        assert_eq!(s.decode_miss_ns.count(), 2);
+        assert_eq!(s.decode_hit_ns.count(), 0);
+    }
+
+    #[test]
+    fn shard_clock_mirror_is_monotone() {
+        let mut o = ShardObs::new(ObsConfig::default());
+        o.touch(100);
+        o.touch(40);
+        assert_eq!(o.now_ns, 100);
+        o.note_event(EventKind::Shed, "a", 0, 0);
+        assert_eq!(o.recorder.events().next().unwrap().at_ns, 100);
+    }
+}

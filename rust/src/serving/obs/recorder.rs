@@ -1,0 +1,172 @@
+//! Per-shard flight recorder: a fixed-capacity ring buffer of recent
+//! structured events (sheds, deferrals, evictions, hosting/validation
+//! errors, out-of-range rows), so a misbehaving burst is explainable
+//! after the fact without log scraping.  The ring is plain per-shard
+//! state — no locks, no atomics — and is dumped via the TCP `/trace`
+//! verb or the engine's [`crate::serving::Engine::trace_events`].
+
+use std::collections::VecDeque;
+
+/// What happened.  The discriminants are stable wire names (see
+/// [`EventKind::as_str`]) used by the `/trace` verb and the exposition
+/// counters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// Admission rejected a request at the queue-depth budget
+    /// (`a` = row, `b` = queue depth at rejection).
+    Shed,
+    /// A front-end deferred a request instead of shedding
+    /// (`a` = queue depth at deferral, `b` = 0).
+    Deferral,
+    /// The decode cache evicted windows under byte pressure
+    /// (`a` = evictions in this serve, `b` = cache bytes after).
+    Eviction,
+    /// A request named a network this plane does not host
+    /// (`a` = row, `b` = 0).
+    HostingError,
+    /// A request's row fell outside the net's stream (`a` = row,
+    /// `b` = stream rows).
+    OutOfRangeRow,
+    /// A request failed structural validation before admission
+    /// (`a`/`b` free-form).
+    ValidationError,
+}
+
+impl EventKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EventKind::Shed => "shed",
+            EventKind::Deferral => "deferral",
+            EventKind::Eviction => "eviction",
+            EventKind::HostingError => "hosting_error",
+            EventKind::OutOfRangeRow => "out_of_range_row",
+            EventKind::ValidationError => "validation_error",
+        }
+    }
+}
+
+/// One recorded event.  `seq` is the shard-local sequence number (gaps
+/// reveal how much the ring dropped between retained events); `at_ns`
+/// is the engine clock at record time.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub seq: u64,
+    pub at_ns: u64,
+    pub kind: EventKind,
+    pub net: String,
+    pub a: u64,
+    pub b: u64,
+}
+
+/// Fixed-capacity ring of recent [`Event`]s.  When full, the oldest
+/// event is dropped (and counted) — recording is O(1) and allocation-
+/// free after the ring fills.  Capacity 0 disables recording entirely.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FlightRecorder {
+    cap: usize,
+    ring: VecDeque<Event>,
+    next_seq: u64,
+    dropped: u64,
+}
+
+impl FlightRecorder {
+    pub fn new(cap: usize) -> Self {
+        FlightRecorder {
+            cap,
+            ring: VecDeque::with_capacity(cap),
+            next_seq: 0,
+            dropped: 0,
+        }
+    }
+
+    pub fn record(&mut self, at_ns: u64, kind: EventKind, net: &str, a: u64, b: u64) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        self.ring.push_back(Event {
+            seq: self.next_seq,
+            at_ns,
+            kind,
+            net: net.to_string(),
+            a,
+            b,
+        });
+        self.next_seq += 1;
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Total events ever recorded (retained + dropped).
+    pub fn recorded(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Events pushed out of the ring by newer ones.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Retained events, oldest first.
+    pub fn events(&self) -> impl Iterator<Item = &Event> {
+        self.ring.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_wraps_and_counts_drops() {
+        let mut r = FlightRecorder::new(3);
+        assert!(r.is_empty());
+        for i in 0..5u64 {
+            r.record(i * 10, EventKind::Shed, "a", i, 0);
+        }
+        assert_eq!(r.len(), 3, "ring stays at capacity");
+        assert_eq!(r.recorded(), 5);
+        assert_eq!(r.dropped(), 2, "two oldest pushed out");
+        let seqs: Vec<u64> = r.events().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![2, 3, 4], "oldest-first, newest retained");
+        let first = r.events().next().unwrap();
+        assert_eq!((first.at_ns, first.a), (20, 2), "payload rides along");
+    }
+
+    #[test]
+    fn zero_capacity_disables_recording() {
+        let mut r = FlightRecorder::new(0);
+        r.record(1, EventKind::Eviction, "a", 0, 0);
+        assert!(r.is_empty());
+        assert_eq!(r.recorded(), 0, "disabled ring records nothing");
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn kind_names_are_stable() {
+        // The /trace verb and exposition counters key on these strings.
+        for (k, s) in [
+            (EventKind::Shed, "shed"),
+            (EventKind::Deferral, "deferral"),
+            (EventKind::Eviction, "eviction"),
+            (EventKind::HostingError, "hosting_error"),
+            (EventKind::OutOfRangeRow, "out_of_range_row"),
+            (EventKind::ValidationError, "validation_error"),
+        ] {
+            assert_eq!(k.as_str(), s);
+        }
+    }
+}

@@ -116,10 +116,18 @@ impl<'a> Server<'a> {
         // Stream the batch's weight rows through the plane's decode
         // cache (fused unpack + decode) into the owning shard's staging
         // buffer — the host-side decode that precedes the artifact run.
+        // Decode and infer are wall-timed separately here (the engine
+        // never reads a clock itself) and reported back through
+        // [`Engine::observe_batch`] — the stage histograms and the
+        // decode-hidden ratio in [`Engine::metrics_snapshot`].  The
+        // virtual clock advances by the *sum*, so latency accounting
+        // sees the full host-side cost of the batch as before.
+        let t_decode = std::time::Instant::now();
         let row_serve = self
             .plane
             .stream_batch(&name, &batch.rows, self.plane_pool.as_ref())?
             .ok_or_else(|| anyhow::anyhow!("plane fired a batch for unhosted net {name:?}"))?;
+        let decode_ns = t_decode.elapsed().as_nanos() as u64;
 
         let (sess, codes) = self
             .sessions
@@ -135,7 +143,8 @@ impl<'a> Server<'a> {
         let _out = sess.eval_infer(&codes_t, &[x])?;
         let dt = t0.elapsed().as_nanos() as u64;
         self.exec_ns.push(dt as f64);
-        self.plane.tick(dt);
+        self.plane.tick(decode_ns + dt);
+        self.plane.observe_batch(&name, row_serve, decode_ns, dt, 0);
 
         let st = self.stats.get_mut(&name).unwrap();
         st.served += batch.requests.len() as u64;

@@ -11,13 +11,30 @@
 //! -> {"stats": true}
 //! <- {"ok": true, "stats": true, "accepted": 10, "dispatched": 10,
 //!     "shed": 0, "deferred": 0, "peak_depth": 4, "rows_decoded": 40,
-//!     "rows_from_cache": 24, "cache_hit_rate": 0.375, "per_net": {...}}
+//!     "rows_from_cache": 24, "cache_hit_rate": 0.375,
+//!     "queue_wait": {"unit": "ns", "clock": "engine", "count": 10,
+//!                    "p50": ..., "p90": ..., "p99": ...},
+//!     "per_net": {...}}
+//! -> {"metrics": true}
+//! <- {"ok": true, "metrics": true,
+//!     "content_type": "text/plain; version=0.0.4",
+//!     "body": "# HELP vq4all_requests_accepted_total ...\n..."}
+//! -> {"metrics": true, "format": "json"}
+//! <- {"ok": true, "metrics": true, "format": "json", "snapshot": {...}}
+//! -> {"trace": true}
+//! <- {"ok": true, "trace": true, "recorded": 3, "dropped": 0,
+//!     "events": [{"shard": 0, "seq": 0, "at_ns": 10, "kind": "shed",
+//!                 "net": "a", "a": 5, "b": 2}, ...]}
 //! ```
 //!
-//! The `/stats` verb is answered by the dispatch thread (a consistent
-//! snapshot of the plane it owns) and rides the same reader channel as
-//! row requests, so it observes the protocol's ordering — including
-//! waiting behind backpressure like any other line.
+//! The `/stats`, `/metrics`, and `/trace` verbs are answered by the
+//! dispatch thread (a consistent snapshot of the plane it owns) and
+//! ride the same reader channel as row requests, so they observe the
+//! protocol's ordering — including waiting behind backpressure like any
+//! other line.  `/metrics` carries the Prometheus exposition as an
+//! escaped string under `"body"` because the wire protocol is
+//! newline-framed: one JSON object per line, however many lines the
+//! text format itself has.
 //!
 //! The servable row space is `0..min(stream_rows, input_pool_rows)` —
 //! bounded by the hosted packed stream and the session's input pool;
@@ -60,6 +77,7 @@ use crate::util::threadpool::ThreadPool;
 
 use super::batcher::Batch;
 use super::engine::{Admission, Engine};
+use super::obs::{expose, EventKind};
 
 /// One parsed in-flight request.
 struct InFlight {
@@ -76,6 +94,13 @@ enum Inbound {
     /// `{"stats": true}` — dump the plane's admission + throughput
     /// counters to this connection.
     Stats { conn: u64 },
+    /// `{"metrics": true}` — dump the unified metrics snapshot
+    /// (Prometheus text by default, `"format": "json"` for the raw
+    /// snapshot object).
+    Metrics { conn: u64, json: bool },
+    /// `{"trace": true}` — dump every shard's retained flight-recorder
+    /// events.
+    Trace { conn: u64 },
 }
 
 /// Per-connection writer handles the dispatch thread answers through.
@@ -132,6 +157,13 @@ pub enum Verb {
     /// throughput counters (ROADMAP: surfacing the admission counters
     /// over a `/stats` TCP verb).
     Stats,
+    /// `{"metrics": true}` — the unified observability snapshot, as
+    /// Prometheus text (default) or the raw snapshot object
+    /// (`"format": "json"`).
+    Metrics { json: bool },
+    /// `{"trace": true}` — the per-shard flight recorders' retained
+    /// structured events.
+    Trace,
 }
 
 /// Parse one protocol line into a [`Verb`].
@@ -144,6 +176,27 @@ pub fn parse_verb(line: &str) -> anyhow::Result<Verb> {
         );
         return Ok(Verb::Stats);
     }
+    if let Some(m) = v.get("metrics") {
+        anyhow::ensure!(
+            m.as_bool() == Some(true),
+            "the \"metrics\" key must be `true` when present"
+        );
+        let json = match v.get("format").and_then(|f| f.as_str()) {
+            None | Some("prometheus") | Some("text") => false,
+            Some("json") => true,
+            Some(other) => anyhow::bail!(
+                "unknown metrics format {other:?} (expected \"prometheus\" or \"json\")"
+            ),
+        };
+        return Ok(Verb::Metrics { json });
+    }
+    if let Some(t) = v.get("trace") {
+        anyhow::ensure!(
+            t.as_bool() == Some(true),
+            "the \"trace\" key must be `true` when present"
+        );
+        return Ok(Verb::Trace);
+    }
     let net = v.req_str("net")?.to_string();
     let row = v.req_usize("row")?;
     Ok(Verb::Infer { net, row })
@@ -154,7 +207,9 @@ pub fn parse_verb(line: &str) -> anyhow::Result<Verb> {
 pub fn parse_request(line: &str) -> anyhow::Result<(String, usize)> {
     match parse_verb(line)? {
         Verb::Infer { net, row } => Ok((net, row)),
-        Verb::Stats => anyhow::bail!("expected a row request, got the stats verb"),
+        Verb::Stats | Verb::Metrics { .. } | Verb::Trace => {
+            anyhow::bail!("expected a row request, got a control verb")
+        }
     }
 }
 
@@ -221,11 +276,21 @@ pub fn stats_response(plane: &Engine, stats: &BTreeMap<String, TcpStats>) -> Str
                     ("errors", Json::num(s.errors as f64)),
                     ("rows_from_cache", Json::num(s.rows_from_cache as f64)),
                     ("rows_decoded", Json::num(s.rows_decoded as f64)),
+                    // Wall-clock request latency, reservoir percentiles —
+                    // same labeled shape as the engine-clock `queue_wait`
+                    // below so the two latency families read uniformly.
+                    ("latency", expose::latency_summary_json(&s.latency_us, "us", "wall")),
                     ("utilization", utilization),
                 ]),
             )
         })
         .collect();
+    // Plane-wide queue-wait summary on the engine clock: exact moments,
+    // reservoir percentiles, merged across shards at snapshot time.
+    let mut queue_wait = Summary::new();
+    for sh in plane.shards() {
+        queue_wait.absorb(&sh.stats.latency_ns);
+    }
     Json::obj(vec![
         ("ok", Json::Bool(true)),
         ("stats", Json::Bool(true)),
@@ -243,7 +308,67 @@ pub fn stats_response(plane: &Engine, stats: &BTreeMap<String, TcpStats>) -> Str
         ("cache_evictions", Json::num(cs.evictions as f64)),
         ("max_queue_depth", Json::num(plane.cfg.max_queue_depth as f64)),
         ("shards", Json::num(plane.shard_count() as f64)),
+        ("queue_wait", expose::latency_summary_json(&queue_wait, "ns", "engine")),
         ("per_net", Json::Obj(per_net)),
+    ])
+    .to_string()
+}
+
+/// Render the `/metrics` verb response.  The Prometheus exposition is
+/// multi-line text, but the wire protocol is one JSON object per line —
+/// so the text rides as an escaped string under `"body"`, next to the
+/// `content_type` a gateway would serve it with.  `"format": "json"`
+/// returns the raw [`MetricsSnapshot`] object instead.
+pub fn metrics_response(plane: &Engine, json_format: bool) -> String {
+    let snap = plane.metrics_snapshot();
+    if json_format {
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("metrics", Json::Bool(true)),
+            ("format", Json::str("json".to_string())),
+            ("snapshot", expose::snapshot_json(&snap)),
+        ])
+        .to_string()
+    } else {
+        Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("metrics", Json::Bool(true)),
+            ("content_type", Json::str("text/plain; version=0.0.4".to_string())),
+            ("body", Json::str(expose::prometheus_text(&snap))),
+        ])
+        .to_string()
+    }
+}
+
+/// Render the `/trace` verb response: every shard's retained
+/// flight-recorder events, oldest first within a shard, plus the
+/// lifetime recorded/dropped counters so a reader knows how much
+/// history the rings have already shed.
+pub fn trace_response(plane: &Engine) -> String {
+    let events: Vec<Json> = plane
+        .trace_events()
+        .iter()
+        .map(|(shard, e)| {
+            Json::obj(vec![
+                ("shard", Json::num(*shard as f64)),
+                ("seq", Json::num(e.seq as f64)),
+                ("at_ns", Json::num(e.at_ns as f64)),
+                ("kind", Json::str(e.kind.as_str().to_string())),
+                ("net", Json::str(e.net.clone())),
+                ("a", Json::num(e.a as f64)),
+                ("b", Json::num(e.b as f64)),
+            ])
+        })
+        .collect();
+    let (recorded, dropped) = plane.shards().iter().fold((0u64, 0u64), |(r, d), s| {
+        (r + s.obs.recorder.recorded(), d + s.obs.recorder.dropped())
+    });
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("trace", Json::Bool(true)),
+        ("recorded", Json::num(recorded as f64)),
+        ("dropped", Json::num(dropped as f64)),
+        ("events", Json::Arr(events)),
     ])
     .to_string()
 }
@@ -308,6 +433,11 @@ impl TcpServer {
             0 => 1024,
             d => (d * self.plane.shard_count()).max(1),
         };
+        crate::log_info!(
+            "serving::tcp",
+            "dispatch loop up: {} shard(s), reader channel capacity {cap}",
+            self.plane.shard_count()
+        );
         let (tx, rx): (SyncSender<Inbound>, Receiver<Inbound>) = sync_channel(cap);
         let conn_seq = Arc::new(AtomicU64::new(0));
         // Writers: dispatch thread sends rendered lines per connection.
@@ -320,8 +450,9 @@ impl TcpServer {
         let acceptor = std::thread::spawn(move || {
             while !accept_shutdown.is_set() {
                 match listener.accept() {
-                    Ok((stream, _)) => {
+                    Ok((stream, peer)) => {
                         let id = conn_seq.fetch_add(1, Ordering::SeqCst);
+                        crate::log_debug!("serving::tcp", "conn {id} accepted from {peer}");
                         let ws = stream.try_clone().expect("clone stream");
                         accept_writers.lock().unwrap().insert(id, ws);
                         let tx2 = accept_tx.clone();
@@ -349,12 +480,22 @@ impl TcpServer {
                                             break;
                                         }
                                     }
-                                    // Stats rides the same channel, so it
-                                    // observes the dispatcher's ordering
-                                    // (and waits behind a parked request
-                                    // like any other line).
+                                    // Control verbs ride the same channel,
+                                    // so they observe the dispatcher's
+                                    // ordering (and wait behind a parked
+                                    // request like any other line).
                                     Ok(Verb::Stats) => {
                                         if tx2.send(Inbound::Stats { conn: id }).is_err() {
+                                            break;
+                                        }
+                                    }
+                                    Ok(Verb::Metrics { json }) => {
+                                        if tx2.send(Inbound::Metrics { conn: id, json }).is_err() {
+                                            break;
+                                        }
+                                    }
+                                    Ok(Verb::Trace) => {
+                                        if tx2.send(Inbound::Trace { conn: id }).is_err() {
                                             break;
                                         }
                                     }
@@ -412,6 +553,16 @@ impl TcpServer {
                             let _ = writeln!(w, "{}", stats_response(&self.plane, &self.stats));
                         }
                     }
+                    Ok(Inbound::Metrics { conn, json }) => {
+                        if let Some(w) = writers.lock().unwrap().get_mut(&conn) {
+                            let _ = writeln!(w, "{}", metrics_response(&self.plane, json));
+                        }
+                    }
+                    Ok(Inbound::Trace { conn }) => {
+                        if let Some(w) = writers.lock().unwrap().get_mut(&conn) {
+                            let _ = writeln!(w, "{}", trace_response(&self.plane));
+                        }
+                    }
                     Ok(Inbound::Request(req)) => {
                         self.plane.set_now(elapsed_ns(&t0));
                         // Validate BEFORE the defer decision: a request
@@ -454,6 +605,7 @@ impl TcpServer {
         drop(rx);
         drop(tx);
         let _ = acceptor.join();
+        crate::log_info!("serving::tcp", "dispatch loop stopped after {served} served requests");
         Ok(served)
     }
 
@@ -462,9 +614,13 @@ impl TcpServer {
     /// input pool both bound it; silently wrapping onto a different row
     /// would answer the wrong question while echoing the asked one).
     /// `None` means the request is admissible in principle and may be
-    /// enqueued or deferred.
-    fn reject_reason(&self, req: &InFlight) -> Option<String> {
+    /// enqueued or deferred.  Every refusal also lands in the flight
+    /// recorder ([`Engine::note_rejected`]) so `/trace` shows the
+    /// requests that never reached a queue, not just the shed ones.
+    fn reject_reason(&mut self, req: &InFlight) -> Option<String> {
         let Some(hosted) = self.plane.hosted(&req.net) else {
+            self.plane
+                .note_rejected(&req.net, EventKind::HostingError, req.row as u64, 0);
             return Some(format!("unknown network {:?}", req.net));
         };
         let (sess, _) = self
@@ -473,6 +629,12 @@ impl TcpServer {
             .expect("every hosted net has a session (validated at construction)");
         let max_row = hosted.stream_rows().min(sess.test_x.shape[0]);
         if req.row >= max_row {
+            self.plane.note_rejected(
+                &req.net,
+                EventKind::OutOfRangeRow,
+                req.row as u64,
+                max_row as u64,
+            );
             return Some(format!(
                 "row {} out of range: {:?} serves rows 0..{max_row}",
                 req.row, req.net
@@ -510,11 +672,17 @@ impl TcpServer {
         let name = batch.net.clone();
         // Stream the batch's weight rows through the plane's decode
         // cache into the owning shard's staging buffer — decode precedes
-        // the artifact run, mirroring server::dispatch_one.
+        // the artifact run, mirroring server::dispatch_one.  Each stage
+        // is wall-timed here (the engine never reads a clock itself) and
+        // reported back through `Engine::observe_batch`, which is what
+        // feeds the decode/infer/respond stage histograms and the
+        // decode-hidden ratio.
+        let t_decode = Instant::now();
         let row_serve = self
             .plane
             .stream_batch(&name, &batch.rows, self.plane_pool.as_ref())?
             .ok_or_else(|| anyhow::anyhow!("plane fired a batch for unhosted net {name:?}"))?;
+        let decode_ns = t_decode.elapsed().as_nanos() as u64;
 
         let (sess, codes) = self
             .sessions
@@ -524,7 +692,9 @@ impl TcpServer {
         // input pool, so the batch rows gather directly — no remapping.
         let x = gather_rows(&sess.test_x, &batch.rows)?;
         let codes_t = codes.clone();
+        let t_infer = Instant::now();
         let out = sess.eval_infer(&codes_t, &[x])?;
+        let infer_ns = t_infer.elapsed().as_nanos() as u64;
         let logits = out[0].as_f32()?;
         let classes = out[0].shape.get(1).copied().unwrap_or(1);
 
@@ -532,6 +702,7 @@ impl TcpServer {
         let st = self.stats.entry(name.clone()).or_default();
         st.rows_from_cache += row_serve.hits as u64;
         st.rows_decoded += row_serve.misses as u64;
+        let t_respond = Instant::now();
         let mut w = writers.lock().unwrap();
         for (i, r) in batch.requests.iter().enumerate() {
             let seg = &logits[i * classes..(i + 1) * classes];
@@ -552,6 +723,10 @@ impl TcpServer {
         }
         st.served += real as u64;
         st.batches += 1;
+        drop(w);
+        let respond_ns = t_respond.elapsed().as_nanos() as u64;
+        self.plane
+            .observe_batch(&name, row_serve, decode_ns, infer_ns, respond_ns);
         Ok(real as u64)
     }
 }
@@ -574,6 +749,31 @@ pub fn client_request(stream: &mut TcpStream, net: &str, row: usize) -> anyhow::
 /// read the counter snapshot.
 pub fn client_stats(stream: &mut TcpStream) -> anyhow::Result<Json> {
     writeln!(stream, "{}", Json::obj(vec![("stats", Json::Bool(true))]))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    json::parse(&line)
+}
+
+/// Blocking client helper for the `/metrics` verb.  `json` selects the
+/// raw-snapshot format; the default is the Prometheus text exposition
+/// (returned inside the JSON envelope under `"body"`).
+pub fn client_metrics(stream: &mut TcpStream, json_format: bool) -> anyhow::Result<Json> {
+    let mut req = vec![("metrics", Json::Bool(true))];
+    if json_format {
+        req.push(("format", Json::str("json".to_string())));
+    }
+    writeln!(stream, "{}", Json::obj(req))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    json::parse(&line)
+}
+
+/// Blocking client helper for the `/trace` verb: send `{"trace": true}`,
+/// read the flight-recorder dump.
+pub fn client_trace(stream: &mut TcpStream) -> anyhow::Result<Json> {
+    writeln!(stream, "{}", Json::obj(vec![("trace", Json::Bool(true))]))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut line = String::new();
     reader.read_line(&mut line)?;
@@ -604,6 +804,28 @@ mod tests {
         assert!(parse_verb(r#"{"stats": 1}"#).is_err());
         // The request-only wrapper refuses the verb.
         assert!(parse_request(r#"{"stats": true}"#).is_err());
+    }
+
+    #[test]
+    fn verb_parses_metrics_and_trace() {
+        assert_eq!(
+            parse_verb(r#"{"metrics": true}"#).unwrap(),
+            Verb::Metrics { json: false }
+        );
+        assert_eq!(
+            parse_verb(r#"{"metrics": true, "format": "prometheus"}"#).unwrap(),
+            Verb::Metrics { json: false }
+        );
+        assert_eq!(
+            parse_verb(r#"{"metrics": true, "format": "json"}"#).unwrap(),
+            Verb::Metrics { json: true }
+        );
+        assert_eq!(parse_verb(r#"{"trace": true}"#).unwrap(), Verb::Trace);
+        assert!(parse_verb(r#"{"metrics": false}"#).is_err());
+        assert!(parse_verb(r#"{"metrics": true, "format": "xml"}"#).is_err());
+        assert!(parse_verb(r#"{"trace": 0}"#).is_err());
+        assert!(parse_request(r#"{"metrics": true}"#).is_err());
+        assert!(parse_request(r#"{"trace": true}"#).is_err());
     }
 
     /// The stats snapshot must reflect the plane's admission + decode
@@ -639,6 +861,7 @@ mod tests {
                     max_batch: 2,
                     max_linger_ns: 10,
                 },
+                obs: Default::default(),
             },
             vec![net],
         )
@@ -682,6 +905,99 @@ mod tests {
         assert_eq!(util[0].req_usize("codes").unwrap(), expected[0].total);
         assert_eq!(util[0].req_usize("used").unwrap(), expected[0].used);
         assert!(util[0].req("entropy_bits").is_ok());
+        // The unified latency shape: engine-clock queue wait at the top
+        // level, wall-clock per-net latency — both labeled with their
+        // unit and clock so readers never guess which family they hold.
+        let qw = parsed.req("queue_wait").unwrap();
+        assert_eq!(qw.req_str("unit").unwrap(), "ns");
+        assert_eq!(qw.req_str("clock").unwrap(), "engine");
+        assert_eq!(
+            qw.req_usize("count").unwrap(),
+            3,
+            "one queue-wait sample per dispatched request"
+        );
+        assert!(qw.req_f64("p99").unwrap() >= qw.req_f64("p50").unwrap());
+        let lat = per_net.req("latency").unwrap();
+        assert_eq!(lat.req_str("unit").unwrap(), "us");
+        assert_eq!(lat.req_str("clock").unwrap(), "wall");
+        assert_eq!(lat.req_usize("count").unwrap(), 0, "no wall samples pushed here");
+    }
+
+    /// `/metrics` (both formats) and `/trace` driven end to end on a
+    /// standalone engine: the Prometheus body parses under the repo's
+    /// own exposition checker, the JSON snapshot carries the
+    /// conservation counters, and the flight recorder surfaces the shed
+    /// with its payload convention.
+    #[test]
+    fn metrics_and_trace_responses_expose_the_plane() {
+        use crate::serving::batcher::BatcherConfig;
+        use crate::serving::engine::{EngineConfig, HostedNet};
+        use crate::util::rng::Rng;
+        use crate::vq::pack::{pack_codes, StagedCodes};
+        use crate::vq::Codebook;
+        use std::sync::Arc;
+
+        let mut rng = Rng::new(52);
+        let mut words = vec![0.0f32; 8 * 2];
+        rng.fill_normal(&mut words);
+        let cb = Arc::new(Codebook::new(8, 2, words));
+        let codes: Vec<u32> = (0..24).map(|_| rng.below(8) as u32).collect();
+        let net = HostedNet {
+            name: "a".into(),
+            codes: StagedCodes::single(pack_codes(&codes, 3)),
+            codebook: cb,
+            codes_per_row: 4,
+            device_batch: 2,
+        };
+        let mut plane = Engine::new(
+            EngineConfig {
+                shards: 1,
+                cache_bytes: 1 << 16,
+                max_queue_depth: 2,
+                batcher: BatcherConfig {
+                    max_batch: 2,
+                    max_linger_ns: 10,
+                },
+                obs: Default::default(),
+            },
+            vec![net],
+        )
+        .unwrap();
+        // Two admits fill the depth-2 budget; the third sheds — one
+        // flight-recorder event for `/trace`.
+        for row in [0usize, 1, 0] {
+            let _ = plane.try_submit("a", row).unwrap();
+        }
+        plane.drain(None).unwrap();
+
+        let prom = json::parse(&metrics_response(&plane, false)).unwrap();
+        assert!(prom.req_bool("ok").unwrap());
+        assert!(prom.req_bool("metrics").unwrap());
+        assert_eq!(
+            prom.req_str("content_type").unwrap(),
+            "text/plain; version=0.0.4"
+        );
+        let body = prom.req_str("body").unwrap();
+        let samples = expose::check_exposition(body).expect("valid exposition");
+        assert!(samples > 0);
+        assert!(body.contains("vq4all_requests_shed_total 1"));
+
+        let js = json::parse(&metrics_response(&plane, true)).unwrap();
+        assert_eq!(js.req_str("format").unwrap(), "json");
+        let snap = js.req("snapshot").unwrap();
+        assert_eq!(snap.req_usize("accepted").unwrap(), 3);
+        assert_eq!(snap.req_usize("dispatched").unwrap(), 2);
+        assert_eq!(snap.req_usize("shed").unwrap(), 1);
+
+        let tr = json::parse(&trace_response(&plane)).unwrap();
+        assert!(tr.req_bool("trace").unwrap());
+        assert_eq!(tr.req_usize("recorded").unwrap(), 1);
+        assert_eq!(tr.req_usize("dropped").unwrap(), 0);
+        let events = tr.req("events").unwrap().as_arr().unwrap().to_vec();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].req_str("kind").unwrap(), "shed");
+        assert_eq!(events[0].req_str("net").unwrap(), "a");
+        assert_eq!(events[0].req_usize("shard").unwrap(), 0);
     }
 
     #[test]

@@ -157,6 +157,42 @@ impl Summary {
     pub fn samples(&self) -> &[f64] {
         &self.samples
     }
+
+    /// Fold `other` into `self` — snapshot-time aggregation across
+    /// shards (the `/stats` verb's plane-wide latency shape).  The
+    /// moments combine exactly (Chan et al. parallel Welford:
+    /// count/mean/std/min/max are as if every sample hit one summary);
+    /// the percentile reservoir concatenates the retained samples and,
+    /// past capacity, keeps a deterministic random subsample — so
+    /// percentiles stay estimates while the counts stay exact.
+    pub fn absorb(&mut self, other: &Summary) {
+        if other.running.n == 0 {
+            return;
+        }
+        if self.running.n == 0 {
+            self.running = other.running.clone();
+        } else {
+            let (na, nb) = (self.running.n as f64, other.running.n as f64);
+            let delta = other.running.mean - self.running.mean;
+            self.running.mean += delta * nb / (na + nb);
+            self.running.m2 += other.running.m2 + delta * delta * na * nb / (na + nb);
+            self.running.n += other.running.n;
+            self.running.min = self.running.min.min(other.running.min);
+            self.running.max = self.running.max.max(other.running.max);
+        }
+        let mut seen = self.samples.len();
+        for &x in &other.samples {
+            seen += 1;
+            if self.samples.len() < self.cap {
+                self.samples.push(x);
+            } else {
+                let j = self.rng.below(seen);
+                if j < self.cap {
+                    self.samples[j] = x;
+                }
+            }
+        }
+    }
 }
 
 /// Percentile over a copy of the data (nearest-rank).
@@ -230,6 +266,99 @@ impl Histogram {
     }
 }
 
+/// Fixed-bucket log2 histogram for nanosecond durations — the
+/// observability plane's latency shape.  Bucket `i` counts values
+/// `v <= 2^i` not already counted lower (upper bound `2^i` ns, so the
+/// buckets cover 1 ns .. ~2^38 ns ≈ 4.6 min); the last bucket is the
+/// +Inf overflow.  Plain non-atomic fields: each shard owns one and the
+/// engine merges at snapshot time, keeping the hot path lock-free and
+/// the serial-vs-pooled snapshots bit-identical.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Log2Hist {
+    counts: [u64; Log2Hist::BUCKETS],
+    count: u64,
+    sum: u64,
+}
+
+impl Default for Log2Hist {
+    fn default() -> Self {
+        Log2Hist::new()
+    }
+}
+
+impl Log2Hist {
+    /// Bucket count, overflow included.
+    pub const BUCKETS: usize = 40;
+
+    pub fn new() -> Self {
+        Log2Hist {
+            counts: [0; Self::BUCKETS],
+            count: 0,
+            sum: 0,
+        }
+    }
+
+    /// Bucket index for `v`: the smallest `i` with `v <= 2^i`, clamped
+    /// into the overflow bucket.
+    pub fn bucket_of(v: u64) -> usize {
+        if v <= 1 {
+            0
+        } else {
+            ((64 - (v - 1).leading_zeros()) as usize).min(Self::BUCKETS - 1)
+        }
+    }
+
+    /// Upper bound of bucket `i` (`2^i`; +Inf for the overflow bucket).
+    pub fn upper_bound(i: usize) -> f64 {
+        if i >= Self::BUCKETS - 1 {
+            f64::INFINITY
+        } else {
+            (1u64 << i) as f64
+        }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Sum of recorded values (saturating — a century of ns fits u64).
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+
+    pub fn counts(&self) -> &[u64; Self::BUCKETS] {
+        &self.counts
+    }
+
+    /// Cumulative (`le`-style) counts, Prometheus histogram semantics:
+    /// entry `i` counts every value `<= 2^i`; the last entry equals
+    /// `count()`.
+    pub fn cumulative(&self) -> [u64; Self::BUCKETS] {
+        let mut out = [0u64; Self::BUCKETS];
+        let mut acc = 0u64;
+        for (o, &c) in out.iter_mut().zip(self.counts.iter()) {
+            acc += c;
+            *o = acc;
+        }
+        out
+    }
+
+    /// Fold `other` into `self` (snapshot-time per-shard merge).
+    pub fn merge(&mut self, other: &Log2Hist) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -298,9 +427,113 @@ mod tests {
     }
 
     #[test]
+    fn summary_absorb_combines_moments_exactly() {
+        let mut whole = Summary::with_capacity(64);
+        let mut a = Summary::with_capacity(64);
+        let mut b = Summary::with_capacity(64);
+        for i in 0..40 {
+            let x = (i * 13 % 29) as f64;
+            whole.push(x);
+            if i % 3 == 0 {
+                a.push(x);
+            } else {
+                b.push(x);
+            }
+        }
+        a.absorb(&b);
+        assert_eq!(a.count(), whole.count(), "counts add exactly");
+        assert!((a.mean() - whole.mean()).abs() < 1e-12);
+        assert!((a.std() - whole.std()).abs() < 1e-9);
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+        // Under capacity the merged reservoir is the exact union, so
+        // percentiles match the single-stream summary too.
+        let mut got = a.samples().to_vec();
+        let mut want = whole.samples().to_vec();
+        got.sort_by(f64::total_cmp);
+        want.sort_by(f64::total_cmp);
+        assert_eq!(got, want);
+
+        // Absorbing into/out of an empty summary is the identity.
+        let mut empty = Summary::with_capacity(8);
+        empty.absorb(&a);
+        assert_eq!(empty.count(), a.count());
+        a.absorb(&Summary::with_capacity(8));
+        assert_eq!(a.count(), whole.count());
+
+        // Over capacity the reservoir stays bounded but the moments
+        // still combine exactly.
+        let mut big = Summary::with_capacity(4);
+        let mut tail = Summary::with_capacity(4);
+        for i in 0..100 {
+            big.push(i as f64);
+            tail.push((100 + i) as f64);
+        }
+        let (n0, m0) = (big.count(), big.mean());
+        big.absorb(&tail);
+        assert_eq!(big.count(), 200);
+        assert_eq!(big.samples().len(), 4, "reservoir stays bounded");
+        assert!((big.mean() - (m0 * n0 as f64 + tail.mean() * 100.0) / 200.0).abs() < 1e-9);
+        assert_eq!(big.max(), 199.0);
+    }
+
+    #[test]
     fn mse_basic() {
         assert_eq!(mse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
         assert!((mse(&[0.0, 0.0], &[1.0, 1.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn log2_hist_bucket_edges() {
+        // Power-of-two edges land in the `le 2^i` bucket, one past the
+        // edge rolls into the next.
+        assert_eq!(Log2Hist::bucket_of(0), 0);
+        assert_eq!(Log2Hist::bucket_of(1), 0);
+        assert_eq!(Log2Hist::bucket_of(2), 1);
+        assert_eq!(Log2Hist::bucket_of(3), 2);
+        assert_eq!(Log2Hist::bucket_of(4), 2);
+        assert_eq!(Log2Hist::bucket_of(5), 3);
+        for i in 1..Log2Hist::BUCKETS - 1 {
+            let edge = 1u64 << i;
+            assert_eq!(Log2Hist::bucket_of(edge), i, "2^{i} belongs to bucket {i}");
+            assert_eq!(Log2Hist::bucket_of(edge + 1), i + 1, "2^{i}+1 spills over");
+        }
+        // Far past the covered range clamps into the overflow bucket.
+        assert_eq!(Log2Hist::bucket_of(u64::MAX), Log2Hist::BUCKETS - 1);
+        assert_eq!(Log2Hist::upper_bound(0), 1.0);
+        assert_eq!(Log2Hist::upper_bound(3), 8.0);
+        assert!(Log2Hist::upper_bound(Log2Hist::BUCKETS - 1).is_infinite());
+    }
+
+    #[test]
+    fn log2_hist_counts_cumulative_and_merge() {
+        let mut h = Log2Hist::new();
+        for v in [0u64, 1, 2, 4, 5, 1 << 20, u64::MAX] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 7);
+        assert_eq!(h.counts()[0], 2, "0 and 1 share the first bucket");
+        assert_eq!(h.counts()[Log2Hist::BUCKETS - 1], 1, "overflow counted");
+        let cum = h.cumulative();
+        assert_eq!(cum[Log2Hist::BUCKETS - 1], h.count(), "le +Inf == count");
+        for w in cum.windows(2) {
+            assert!(w[0] <= w[1], "cumulative counts are monotone");
+        }
+        assert_eq!(h.sum(), u64::MAX, "sum saturates instead of wrapping");
+
+        let mut a = Log2Hist::new();
+        let mut b = Log2Hist::new();
+        let mut whole = Log2Hist::new();
+        for (i, v) in [3u64, 9, 17, 100, 4096].iter().enumerate() {
+            if i % 2 == 0 {
+                a.record(*v);
+            } else {
+                b.record(*v);
+            }
+            whole.record(*v);
+        }
+        a.merge(&b);
+        assert_eq!(a, whole, "merge equals recording the union");
     }
 
     #[test]

@@ -39,6 +39,7 @@ fn plane_for(
             cache_bytes: 1 << 20,
             max_queue_depth: 0,
             batcher: bc,
+            obs: Default::default(),
         },
         hosted,
     )
@@ -158,7 +159,9 @@ fn multi_net_server_interleaves_without_cross_talk() {
 #[test]
 fn tcp_server_answers_over_loopback() {
     use std::net::{TcpListener, TcpStream};
-    use vq4all::serving::tcp::{client_request, client_stats, Shutdown, TcpServer};
+    use vq4all::serving::tcp::{
+        client_metrics, client_request, client_stats, client_trace, Shutdown, TcpServer,
+    };
 
     let Some(c) = campaign(4) else { return };
     let res = c.construct("mini_mlp").unwrap();
@@ -204,6 +207,40 @@ fn tcp_server_answers_over_loopback() {
         );
         let per_net = stats.req("per_net").unwrap().get("mini_mlp").expect("hosted net entry");
         assert_eq!(per_net.req_usize("served").unwrap(), 10);
+        // The /stats latency families carry the unified labeled shape:
+        // wall-clock microseconds per net, engine-clock queue wait.
+        let lat = per_net.req("latency").unwrap();
+        assert_eq!(lat.req_str("unit").unwrap(), "us");
+        assert_eq!(lat.req_str("clock").unwrap(), "wall");
+        assert_eq!(lat.req_usize("count").unwrap(), 10);
+        // The /metrics verb answers valid Prometheus text exposition on
+        // the same connection (ISSUE-8 acceptance: parse it here), and
+        // the JSON format mirrors the same snapshot.
+        let m = client_metrics(&mut conn, false).unwrap();
+        assert!(m.req_bool("ok").unwrap() && m.req_bool("metrics").unwrap());
+        assert!(m.req_str("content_type").unwrap().starts_with("text/plain"));
+        let body = m.req_str("body").unwrap();
+        let samples = vq4all::serving::obs::expose::check_exposition(body)
+            .expect("/metrics body must be valid Prometheus text");
+        assert!(samples > 0, "exposition carried no samples");
+        assert!(
+            body.contains("vq4all_requests_dispatched_total 10"),
+            "dispatched counter missing from exposition"
+        );
+        let mj = client_metrics(&mut conn, true).unwrap();
+        let snap = mj.req("snapshot").expect("json snapshot");
+        assert_eq!(snap.req_usize("accepted").unwrap(), 10);
+        assert_eq!(snap.req_usize("dispatched").unwrap(), 10);
+        assert_eq!(snap.req_usize("pending").unwrap(), 0);
+        // The /trace verb reports the flight recorder; the only event
+        // so far is the ghost-net hosting error recorded above.
+        let tr = client_trace(&mut conn).unwrap();
+        assert!(tr.req_bool("ok").unwrap() && tr.req_bool("trace").unwrap());
+        let events = tr.req("events").unwrap().as_arr().expect("events array").to_vec();
+        assert_eq!(events.len(), 1, "expected exactly the ghost-net event");
+        assert_eq!(events[0].req_str("kind").unwrap(), "hosting_error");
+        assert_eq!(events[0].req_str("net").unwrap(), "ghost");
+        assert_eq!(tr.req_usize("dropped").unwrap(), 0);
         sd.trigger();
         let _ = TcpStream::connect(&addr2); // wake the acceptor
         oks

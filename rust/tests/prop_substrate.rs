@@ -756,6 +756,7 @@ fn engine_conserves_requests_across_shards_and_matches_serial() {
                 max_batch: g.usize_in(1, 8),
                 max_linger_ns: 10,
             },
+            obs: Default::default(),
         };
         let mut serial = Engine::new(cfg, nets.clone()).map_err(|e| e.to_string())?;
         let mut pooled = Engine::new(cfg, nets.clone()).unwrap();
@@ -864,6 +865,7 @@ fn engine_admission_sheds_deterministically_and_conserves_per_net() {
                 max_batch: g.usize_in(1, 4),
                 max_linger_ns: 10,
             },
+            obs: Default::default(),
         };
         let mut serial = Engine::new(cfg, nets.clone()).map_err(|e| e.to_string())?;
         let mut pooled = Engine::new(cfg, nets.clone()).unwrap();
@@ -965,6 +967,183 @@ fn engine_admission_sheds_deterministically_and_conserves_per_net() {
     });
 }
 
+/// Observability reconciliation (ISSUE-8 tentpole property): under
+/// arbitrary shed / deferral / pre-admission-rejection interleavings,
+/// stage counts 1..=3, and any queue budget, `Engine::metrics_snapshot`
+/// satisfies the conservation identities it is *defined* to satisfy —
+/// `accepted == dispatched + shed` (engine-wide and per net),
+/// `cache_hits + cache_misses == cache_lookups`,
+/// `queue_ns.count() == dispatched`, events exactly the injected ones —
+/// and, because every stamp rides the engine clock, a pooled engine's
+/// snapshot and flight-recorder trace are *equal* to the serial one's.
+#[test]
+fn metrics_snapshot_reconciles_and_is_pool_invariant() {
+    use vq4all::serving::engine::RowServe;
+    use vq4all::serving::EventKind;
+    let pool = ThreadPool::new(4);
+    proptest(|g| {
+        let nnets = g.usize_in(1, 3);
+        let shards = g.usize_in(1, 3);
+        let d = [1usize, 2][g.usize_in(0, 1)];
+        let k = g.usize_in(2, 8);
+        let cb = Arc::new(Codebook::new(k, d, g.vec_normal((k * d)..=(k * d))));
+        let idx_bits = (usize::BITS - (k - 1).leading_zeros()).max(1);
+        let mut nets = Vec::new();
+        for i in 0..nnets {
+            let cpr = g.usize_in(1, 4);
+            let rows = g.usize_in(1, 8);
+            let nstages = g.usize_in(1, 3);
+            let staged = StagedCodes::new(
+                (0..nstages)
+                    .map(|_| {
+                        let codes: Vec<u32> =
+                            (0..rows * cpr).map(|_| g.u32_below(k as u32)).collect();
+                        pack_codes(&codes, idx_bits)
+                    })
+                    .collect(),
+            );
+            nets.push(HostedNet {
+                name: format!("n{i}"),
+                codes: staged,
+                codebook: cb.clone(),
+                codes_per_row: cpr,
+                device_batch: g.usize_in(1, 4),
+            });
+        }
+        let cfg = EngineConfig {
+            shards,
+            // Eviction-free budget: the only recorded events are the
+            // sheds/deferrals/rejections this test injects, so the
+            // flight-recorder ledger is exactly predictable.
+            cache_bytes: 1 << 20,
+            max_queue_depth: g.usize_in(0, 4),
+            batcher: BatcherConfig {
+                max_batch: g.usize_in(1, 4),
+                max_linger_ns: 10,
+            },
+            obs: Default::default(),
+        };
+        let mut serial = Engine::new(cfg, nets.clone()).map_err(|e| e.to_string())?;
+        let mut pooled = Engine::new(cfg, nets.clone()).unwrap();
+
+        let mut sheds = 0u64;
+        let mut deferrals = 0u64;
+        let mut rejections = 0u64;
+        let mut stage_reports = 0u64;
+        let mut decode_total = 0u64;
+        let mut infer_total = 0u64;
+        for _ in 0..g.usize_in(1, 60) {
+            let i = g.usize_in(0, nnets - 1);
+            let name = format!("n{i}");
+            let srows = nets[i].codes.count() / nets[i].codes_per_row;
+            let row = g.usize_in(0, srows - 1);
+            let a = serial.try_submit(&name, row).map_err(|e| e.to_string())?;
+            let b = pooled.try_submit(&name, row).map_err(|e| e.to_string())?;
+            prop_assert!(a == b, "admission diverged: {a:?} vs {b:?}");
+            if matches!(a, Admission::Rejected { .. }) {
+                sheds += 1;
+            }
+            if g.bool() {
+                // A front-end parking a request instead of shedding it
+                // counts one deferral on the owning shard.
+                serial.note_deferral(&name);
+                pooled.note_deferral(&name);
+                deferrals += 1;
+            }
+            if g.usize_in(0, 9) == 0 {
+                // Pre-admission refusal (unknown net / bad row): lands
+                // on the flight recorder, never on the conservation
+                // counters.
+                let kind =
+                    [EventKind::HostingError, EventKind::OutOfRangeRow][g.usize_in(0, 1)];
+                serial.note_rejected(&name, kind, row as u64, srows as u64);
+                pooled.note_rejected(&name, kind, row as u64, srows as u64);
+                rejections += 1;
+            }
+            if g.bool() {
+                serial.tick(50);
+                pooled.tick(50);
+                let x = serial.dispatch_round(None).map_err(|e| e.to_string())?;
+                let y = pooled.dispatch_round(Some(&pool)).map_err(|e| e.to_string())?;
+                prop_assert_eq!(x, y);
+                // The front-end owns the stage clocks; both engines must
+                // fold identical reports into identical histograms.
+                let serve = RowServe {
+                    hits: g.usize_in(0, 4),
+                    misses: g.usize_in(0, 4),
+                };
+                let (dns, ins, rns) = (
+                    g.usize_in(0, 5_000) as u64,
+                    g.usize_in(1, 5_000) as u64,
+                    g.usize_in(0, 500) as u64,
+                );
+                serial.observe_batch(&name, serve, dns, ins, rns);
+                pooled.observe_batch(&name, serve, dns, ins, rns);
+                stage_reports += 1;
+                decode_total += dns;
+                infer_total += ins;
+            }
+        }
+        serial.drain(None).map_err(|e| e.to_string())?;
+        pooled.drain(Some(&pool)).map_err(|e| e.to_string())?;
+
+        let ss = serial.metrics_snapshot();
+        let ps = pooled.metrics_snapshot();
+        prop_assert!(ss == ps, "pooled snapshot diverged from serial");
+        prop_assert_eq!(serial.trace_events(), pooled.trace_events());
+
+        // Admission conservation, engine-wide and per net.
+        prop_assert_eq!(ss.accepted, ss.dispatched + ss.shed);
+        prop_assert_eq!(ss.shed, sheds);
+        prop_assert_eq!(ss.deferred, deferrals);
+        prop_assert_eq!(ss.pending, 0);
+        // One queue-wait sample per dispatched request.
+        prop_assert_eq!(ss.queue_ns.count(), ss.dispatched);
+        let mut acc = 0u64;
+        let mut net_lookups = 0u64;
+        let mut net_queue = 0u64;
+        for (name, n) in &ss.per_net {
+            prop_assert!(
+                n.accepted == n.served + n.shed,
+                "{name}: per-net ledger does not reconcile ({n:?})"
+            );
+            prop_assert_eq!(n.pending, 0);
+            prop_assert_eq!(n.queue_ns.count(), n.served);
+            acc += n.accepted;
+            net_lookups += n.rows_hit + n.rows_missed;
+            net_queue += n.queue_ns.count();
+        }
+        prop_assert_eq!(acc, ss.accepted);
+        prop_assert_eq!(net_queue, ss.queue_ns.count());
+        // Decode plane: every streamed row is a cache lookup, and the
+        // per-net hit/miss rows partition the lookups exactly.
+        prop_assert_eq!(ss.cache_lookups, ss.cache_hits + ss.cache_misses);
+        prop_assert_eq!(ss.rows_from_cache + ss.rows_decoded, ss.cache_lookups);
+        prop_assert_eq!(net_lookups, ss.cache_lookups);
+        // Flight recorder: eviction-free budget, so the ledger is
+        // exactly the injected events — none dropped at this volume.
+        prop_assert_eq!(ss.events_recorded, sheds + deferrals + rejections);
+        prop_assert_eq!(ss.events_dropped, 0);
+        // Below ring capacity, the trace retains every recorded event.
+        prop_assert_eq!(serial.trace_events().len() as u64, ss.events_recorded);
+        // Stage tracing: one decode/infer/respond sample per front-end
+        // report, decode split exactly between the hit/miss histograms,
+        // and the decode-hidden-ratio inputs sum the reported values.
+        prop_assert_eq!(ss.decode_ns.count(), stage_reports);
+        prop_assert_eq!(ss.infer_ns.count(), stage_reports);
+        prop_assert_eq!(ss.respond_ns.count(), stage_reports);
+        prop_assert_eq!(
+            ss.decode_hit_ns.count() + ss.decode_miss_ns.count(),
+            stage_reports
+        );
+        prop_assert_eq!(ss.decode_ns_total, decode_total);
+        prop_assert_eq!(ss.infer_ns_total, infer_total);
+        prop_assert_eq!(ss.decode_ns.sum(), decode_total);
+        prop_assert_eq!(ss.infer_ns.sum(), infer_total);
+        Ok(())
+    });
+}
+
 /// Decode-cache coherence (tentpole property (b)): any interleaving of
 /// cached/uncached row reads — across evictions, serial or pooled — is
 /// bit-identical to a fresh `decode_batch`, for widths 1..=32 (reusing
@@ -1014,6 +1193,7 @@ fn decode_cache_any_interleaving_bit_identical_to_fresh_decode() {
                 cache_bytes: budget,
                 max_queue_depth: 0,
                 batcher: BatcherConfig::default(),
+                obs: Default::default(),
             },
             vec![net],
         )

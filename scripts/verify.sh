@@ -39,6 +39,13 @@
 #     count), admission conservation
 #     (admission_accepted == admission_dispatched + admission_shed > 0),
 #     and absolute throughput keys rows_per_sec / codes_per_sec > 0
+#   * the obs_overhead row (uninstrumented vs instrumented warm
+#     stream_batch, single-threaded so the generic rule skips it) must
+#     exist and hold >= 0.95x — full metrics/tracing may cost at most
+#     5% of hot-path throughput — and the obs engine keys must
+#     reconcile (obs_queue_count == admission_dispatched, obs_events
+#     > 0 with obs_events_dropped reported, obs_decode_hidden_ratio
+#     present)
 #   * --check-json additionally FAILS if the fresh report lost any
 #     comparison row or engine-summary key the committed baseline lists
 # Exit-code contract (the PR-4 bugfix): once the bench has PASSed, the
@@ -210,8 +217,16 @@ EOF
     # any thread count (specialized kernels never slower than the
     # retained references).  The shard/admission rows additionally ride
     # the generic >= 1.0x multi-thread gate.
+    # The observability plane adds its own contract: the obs_overhead
+    # row compares the same warm stream_batch with obs disabled vs
+    # enabled (threads: 1 — two configs of one engine, so the generic
+    # multi-thread rule never gates it) and must hold >= 0.95x; the obs
+    # engine keys must reconcile with the admission ledger
+    # (obs_queue_count == admission_dispatched: one queue-wait sample
+    # per dispatched request) and the bounded run must have recorded
+    # its sheds on the flight recorder (obs_events > 0).
     echo
-    echo "== engine + kernel smoke: decode cache + shards + admission + specialized kernels =="
+    echo "== engine + kernel smoke: decode cache + shards + admission + specialized kernels + obs =="
     if VQ4ALL_GATE_JSON="$bench_json" python3 - <<'EOF'
 import json, os, sys
 doc = json.load(open(os.environ["VQ4ALL_GATE_JSON"]))
@@ -248,6 +263,27 @@ else:
             bad = True
         else:
             print(f"  {'ok':<10} engine {key} = {v:.0f} (absolute, machine-local)")
+    qc = eng.get("obs_queue_count")
+    if qc is None or disp is None or int(qc) != int(disp):
+        print(f"  REGRESSION obs_queue_count {qc} != admission_dispatched {disp} "
+              "(one queue-wait sample per dispatched request)")
+        bad = True
+    else:
+        print(f"  {'ok':<10} obs_queue_count {int(qc)} == admission_dispatched (snapshot reconciles)")
+    ev = eng.get("obs_events")
+    dropped = eng.get("obs_events_dropped")
+    if ev is None or dropped is None or int(ev) <= 0 or int(dropped) < 0:
+        print(f"  REGRESSION obs_events {ev} (must be > 0: the bounded run sheds) "
+              f"/ obs_events_dropped {dropped} (must be reported)")
+        bad = True
+    else:
+        print(f"  {'ok':<10} flight recorder: {int(ev)} events recorded, {int(dropped)} dropped")
+    dh = eng.get("obs_decode_hidden_ratio")
+    if dh is None or dh < 0:
+        print(f"  REGRESSION obs_decode_hidden_ratio missing or negative: {dh}")
+        bad = True
+    else:
+        print(f"  {'ok':<10} obs_decode_hidden_ratio = {dh:.3f} (informational, must exist)")
 for name in ("engine_cache", "engine_shards", "engine_admission"):
     c = comps.get(name)
     if c is None:
@@ -274,6 +310,16 @@ for name in ("unpack_wordwise", "encode_pruned", "fused_decode",
     bad = bad or not ok
     print(f"  {tag:<10} {name:<22} legacy/specialized {c['speedup']:.2f}x "
           "(must be >= 1.0 at any thread count)")
+c = comps.get("obs_overhead")
+if c is None:
+    print("  REGRESSION comparison row 'obs_overhead' missing")
+    bad = True
+else:
+    ok = c["speedup"] >= 0.95
+    tag = "ok" if ok else "REGRESSION"
+    bad = bad or not ok
+    print(f"  {tag:<10} {'obs_overhead':<22} obs-off/obs-on {c['speedup']:.2f}x "
+          "(instrumentation may cost at most 5% of warm stream_batch)")
 sys.exit(1 if bad else 0)
 EOF
     then engine_status=PASS; else engine_status=FAIL; fi
@@ -319,7 +365,7 @@ echo
 echo "== summary (mode: $mode; tier-1 last) =="
 echo "  perf smoke (hotpath bench):   $bench_status"
 echo "  speedup >= 1.0x gate:         $speedup_status"
-echo "  engine+kernel smoke (cache+shards+admission+specialized): $engine_status"
+echo "  engine+kernel smoke (cache+shards+admission+specialized+obs): $engine_status"
 echo "  check-json baseline diff:     $diff_status"
 echo "  tier-1: cargo build:          $build_status"
 echo "  tier-1: cargo test:           $test_status"
