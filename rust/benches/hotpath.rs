@@ -14,9 +14,12 @@
 //!   `encode_pruned` (full scan vs norm-seeded partial-distance pruning,
 //!   bit-identity asserted in-bench), `fused_decode` (reference fused
 //!   decode vs wordwise + small-d gather), `staged_encode` (naive
-//!   per-stage residual scan vs the pruned staged encoder), and
+//!   per-stage residual scan vs the pruned staged encoder),
 //!   `staged_decode` (scalar stage-summed decode vs the fused
-//!   gather-accumulate) — plus absolute `rows_per_sec` /
+//!   gather-accumulate), `simd_gather` (scalar lane-order row copy vs
+//!   the dispatched AVX2/NEON gather) and `simd_scan` (scalar lane-order
+//!   pruned nearest scan vs the dispatched arm, codes + distance bits
+//!   asserted identical) — plus absolute `rows_per_sec` /
 //!   `codes_per_sec` keys in the `engine` summary from the cold-cache
 //!   decode run
 //! * packed-code decode (the serving weight-stream path)
@@ -31,6 +34,7 @@ use std::sync::Arc;
 
 use vq4all::bench::{Bencher, Comparison};
 use vq4all::coordinator::calib::CalibStream;
+use vq4all::tensor::ops;
 use vq4all::coordinator::{NetSession, PncScheduler};
 use vq4all::serving::switchsim::decode_batch;
 use vq4all::serving::{Batch, BatcherConfig, Engine, EngineConfig, HostedNet, Request, Router};
@@ -45,6 +49,7 @@ use vq4all::vq::pack::{
     unpack_range_reference, StagedCodes,
 };
 use vq4all::vq::ratios::max_ratios_with;
+use vq4all::vq::simd::{self, SimdLevel};
 use vq4all::vq::Codebook;
 
 fn main() -> anyhow::Result<()> {
@@ -285,6 +290,87 @@ fn main() -> anyhow::Result<()> {
         cb.decode_staged_packed_into(&staged2, 0, fuse_n, &mut bb);
         let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         assert_eq!(bits(&a), bits(&bb), "staged decode diverged from reference");
+    }
+
+    // --- scalar reference vs dispatched SIMD: wide-row gather ---------------
+    // 64k random codes against the k=256 d=16 codebook: the scalar
+    // lane-order row copy vs whatever arm runtime dispatch picked (AVX2
+    // on x86_64, NEON on aarch64).  Byte-identical copies, asserted
+    // below — the row measures the vector load/store win alone.  On a
+    // host with no vector arm the dispatched side IS the reference, so
+    // the row is kept at exactly 1.0x rather than vanishing from the
+    // gate.
+    let simd_arm = simd::best();
+    println!("{}", simd::probe_line());
+    let gather_codes: Vec<u32> = (0..65_536).map(|_| rng.below(256) as u32).collect();
+    let mut gather_out = vec![0.0f32; gather_codes.len() * cb16.d];
+    let sg_ref = b.bench("gather 64k rows d=16 [scalar reference]", || {
+        simd::gather_rows_reference(&cb16.words, &gather_codes, cb16.d, &mut gather_out);
+        std::hint::black_box(gather_out[0]);
+    });
+    let sg_spec = if simd_arm == SimdLevel::Scalar {
+        println!("simd_gather: no vector arm on this host; dispatched side = scalar reference");
+        sg_ref.clone()
+    } else {
+        b.bench(&format!("gather 64k rows d=16 [{}]", simd_arm.name()), || {
+            simd::gather_rows(simd_arm, &cb16.words, &gather_codes, cb16.d, &mut gather_out);
+            std::hint::black_box(gather_out[0]);
+        })
+    };
+    comparisons.push(Comparison::new("simd_gather", &sg_ref, &sg_spec, 1));
+    {
+        let mut want = vec![0.0f32; gather_codes.len() * cb16.d];
+        let mut got = vec![0.0f32; gather_codes.len() * cb16.d];
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        simd::gather_rows_reference(&cb16.words, &gather_codes, cb16.d, &mut want);
+        simd::gather_rows(simd_arm, &cb16.words, &gather_codes, cb16.d, &mut got);
+        assert_eq!(bits(&want), bits(&got), "simd gather diverged from reference");
+        simd::gather_rows_add_reference(&cb16.words, &gather_codes, cb16.d, &mut want);
+        simd::gather_rows_add(simd_arm, &cb16.words, &gather_codes, cb16.d, &mut got);
+        assert_eq!(bits(&want), bits(&got), "simd gather-accumulate diverged from reference");
+    }
+
+    // --- scalar reference vs dispatched SIMD: pruned distance scan ----------
+    // The encode workload (4k near-codeword groups, k=256 d=16) swept
+    // through the level-threaded nearest scan: the scalar lane-order arm
+    // vs the dispatched one.  Both sides use the same canonical
+    // summation order and bail rule, so the argmin codes AND the f32
+    // distance bits must agree exactly — asserted below.
+    let ss_ref = b.bench("nearest scan 4k groups k=256 d=16 [scalar reference]", || {
+        let mut h = 0u64;
+        for g in 0..4_000 {
+            let sub = &flat16[g * 16..(g + 1) * 16];
+            let (c, dist) =
+                ops::nearest_pruned_at(SimdLevel::Scalar, sub, &cb16.words, cb16.norms());
+            h ^= (c as u64) ^ u64::from(dist.to_bits());
+        }
+        std::hint::black_box(h);
+    });
+    let ss_spec = if simd_arm == SimdLevel::Scalar {
+        println!("simd_scan: no vector arm on this host; dispatched side = scalar reference");
+        ss_ref.clone()
+    } else {
+        b.bench(
+            &format!("nearest scan 4k groups k=256 d=16 [{}]", simd_arm.name()),
+            || {
+                let mut h = 0u64;
+                for g in 0..4_000 {
+                    let sub = &flat16[g * 16..(g + 1) * 16];
+                    let (c, dist) =
+                        ops::nearest_pruned_at(simd_arm, sub, &cb16.words, cb16.norms());
+                    h ^= (c as u64) ^ u64::from(dist.to_bits());
+                }
+                std::hint::black_box(h);
+            },
+        )
+    };
+    comparisons.push(Comparison::new("simd_scan", &ss_ref, &ss_spec, 1));
+    for g in 0..4_000 {
+        let sub = &flat16[g * 16..(g + 1) * 16];
+        let (c0, d0) = ops::nearest_pruned_at(SimdLevel::Scalar, sub, &cb16.words, cb16.norms());
+        let (c1, d1) = ops::nearest_pruned_at(simd_arm, sub, &cb16.words, cb16.norms());
+        assert_eq!(c0, c1, "simd scan argmin diverged at group {g}");
+        assert_eq!(d0.to_bits(), d1.to_bits(), "simd scan distance bits diverged at group {g}");
     }
 
     let mut out = vec![0.0f32; codes.len() * 4];

@@ -32,8 +32,9 @@ pub use rules::{Finding, Rule};
 
 /// Files allowed to contain `unsafe`.  This is the audit's module
 /// allow-list: the parallel substrate itself, the chunked VQ kernels,
-/// and the serving engine's decode plane.  A new file that needs
-/// `unsafe` must be added here — deliberately, in review.
+/// the explicit-SIMD dispatch arms, and the serving engine's decode
+/// plane.  A new file that needs `unsafe` must be added here —
+/// deliberately, in review.
 pub const UNSAFE_ALLOWLIST: &[&str] = &[
     "rust/src/util/threadpool.rs",
     "rust/src/vq/assign.rs",
@@ -42,6 +43,9 @@ pub const UNSAFE_ALLOWLIST: &[&str] = &[
     "rust/src/vq/kmeans.rs",
     "rust/src/vq/pack.rs",
     "rust/src/vq/ratios.rs",
+    "rust/src/vq/simd/mod.rs",
+    "rust/src/vq/simd/x86.rs",
+    "rust/src/vq/simd/neon.rs",
     "rust/src/serving/engine/mod.rs",
     "rust/src/serving/engine/shard.rs",
     "rust/src/serving/engine/stream.rs",
@@ -60,6 +64,10 @@ pub const REFERENCE_KERNELS: &[(&str, &str)] = &[
     ("pack_codes_reference", "pack_wordwise"),
     ("encode_staged_reference", "staged_encode"),
     ("decode_staged_packed_into_reference", "staged_decode"),
+    ("gather_rows_reference", "simd_gather"),
+    ("gather_rows_add_reference", "simd_gather"),
+    ("sq_dist_lanes_reference", "simd_scan"),
+    ("sq_dist_pruned_lanes_reference", "simd_scan"),
 ];
 
 /// Directories (relative to the repo root) the audit walks.
@@ -175,14 +183,17 @@ mod tests {
     const CLEAN_BASELINE: &str =
         "{\"comparisons\": [{\"name\": \"unpack_wordwise\"}, {\"name\": \"fused_decode\"}, \
          {\"name\": \"encode_pruned\"}, {\"name\": \"pack_wordwise\"}, \
-         {\"name\": \"staged_encode\"}, {\"name\": \"staged_decode\"}]}";
+         {\"name\": \"staged_encode\"}, {\"name\": \"staged_decode\"}, \
+         {\"name\": \"simd_gather\"}, {\"name\": \"simd_scan\"}]}";
 
     fn prop_file() -> (String, String) {
         (
             "rust/tests/prop_substrate.rs".to_string(),
             "fn p() { unpack_range_reference(); decode_packed_into_reference(); \
              encode_nearest_reference(); pack_codes_reference(); \
-             encode_staged_reference(); decode_staged_packed_into_reference(); }\n"
+             encode_staged_reference(); decode_staged_packed_into_reference(); \
+             gather_rows_reference(); gather_rows_add_reference(); \
+             sq_dist_lanes_reference(); sq_dist_pruned_lanes_reference(); }\n"
                 .to_string(),
         )
     }
@@ -206,12 +217,20 @@ mod tests {
                  pub fn decode_staged_packed_into_reference() {}\n"
                     .to_string(),
             ),
+            (
+                "rust/src/vq/simd/mod.rs".to_string(),
+                "pub fn gather_rows_reference() {}\n\
+                 pub fn gather_rows_add_reference() {}\n\
+                 pub fn sq_dist_lanes_reference() {}\n\
+                 pub fn sq_dist_pruned_lanes_reference() {}\n"
+                    .to_string(),
+            ),
             prop_file(),
         ];
         let r = audit_sources(&files, CLEAN_BASELINE, &[]);
         assert!(r.passed(), "{:?}", r.findings);
         assert_eq!(r.unsafe_sites, 1);
-        assert_eq!(r.reference_kernels, 6);
+        assert_eq!(r.reference_kernels, 10);
     }
 
     #[test]
@@ -242,7 +261,11 @@ mod tests {
              pub fn encode_nearest_reference() {}\n\
              pub fn pack_codes_reference() {}\n\
              pub fn encode_staged_reference() {}\n\
-             pub fn decode_staged_packed_into_reference() {}\n"
+             pub fn decode_staged_packed_into_reference() {}\n\
+             pub fn gather_rows_reference() {}\n\
+             pub fn gather_rows_add_reference() {}\n\
+             pub fn sq_dist_lanes_reference() {}\n\
+             pub fn sq_dist_pruned_lanes_reference() {}\n"
                 .to_string(),
         )
     }

@@ -1,0 +1,10 @@
+//! Print the one-line SIMD dispatch report and exit.
+//!
+//! CI's `simd-matrix` job runs this under each `VQ4ALL_SIMD` setting
+//! and asserts on the `active=` / `best=` fields — proving which kernel
+//! arm the accompanying `cargo test` run exercised, rather than
+//! trusting that runtime dispatch did the right thing silently.
+
+fn main() {
+    println!("{}", vq4all::vq::simd::probe_line());
+}

@@ -179,6 +179,9 @@ impl Engine {
             .enumerate()
             .map(|(id, ns)| Shard::new(id, ns, cfg.cache_bytes, cfg.obs))
             .collect::<anyhow::Result<Vec<_>>>()?;
+        // One probe line per engine so serving logs record which SIMD
+        // arm the decode plane resolved to (and why, if overridden).
+        crate::log_debug!("engine", "{}", crate::vq::simd::probe_line());
         Ok(Engine {
             cfg,
             shards,

@@ -3,6 +3,18 @@
 //!
 //! Everything operates on plain slices; shapes are passed explicitly.
 //! The k-means/Table-1 hot loops live in `vq::` and call into these.
+//!
+//! §Canonical summation order: for slices of `len >= vq::simd::LANES`
+//! (8), [`sq_dist`] and [`sq_dist_pruned`] are *defined* by the
+//! lane-tree accumulation of `vq::simd` (eight lane accumulators plus a
+//! fixed combine tree — the order the AVX2/NEON arms compute natively),
+//! and dispatch to the runtime-selected arm; below 8 they keep the
+//! sequential left-to-right order.  Every naive/reference scan in the
+//! crate sums through these same entry points, so specialized and
+//! reference paths share one order and all the bit-identity contracts
+//! hold unchanged.
+
+use crate::vq::simd;
 
 /// `c[m, n] = sum_k a[m, k] * b[k, n]` — naive blocked matmul, f32.
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
@@ -76,9 +88,24 @@ pub fn argmin_n(xs: &[f32], n: usize) -> Vec<usize> {
 }
 
 /// Squared Euclidean distance between two equal-length slices.
+///
+/// At `len >= vq::simd::LANES` this is the canonical lane-tree sum (see
+/// the module docs), computed by the process-wide dispatched arm
+/// ([`simd::active`]); below that, the sequential left-to-right sum.
 #[inline]
 pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
+    if a.len() >= simd::LANES {
+        simd::sq_dist_lanes(simd::active(), a, b)
+    } else {
+        sq_dist_seq(a, b)
+    }
+}
+
+/// The sequential (left-to-right) accumulation used below the lane
+/// threshold — also the canonical order for those short widths.
+#[inline]
+fn sq_dist_seq(a: &[f32], b: &[f32]) -> f32 {
     let mut acc = 0.0f32;
     for i in 0..a.len() {
         let d = a[i] - b[i];
@@ -87,31 +114,69 @@ pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
     acc
 }
 
+/// [`sq_dist`] with an explicit dispatch arm — the pruned sweeps probe
+/// the level once per scan and thread it through here.
+#[inline]
+fn sq_dist_at(level: simd::SimdLevel, a: &[f32], b: &[f32]) -> f32 {
+    if a.len() >= simd::LANES {
+        simd::sq_dist_lanes(level, a, b)
+    } else {
+        sq_dist_seq(a, b)
+    }
+}
+
 /// Minimum sub-vector width at which the pruned nearest-codeword scans
 /// ([`nearest_pruned`], the Euclid top-n scan in `vq::assign`) pay off:
-/// [`sq_dist_pruned`] checks its bail bound every 4 lanes, so below two
-/// full check blocks a bail can skip at most a ragged tail — not enough
-/// to cover the compare/branch and norm-seed overhead.  Callers dispatch
-/// to the retained naive scan below this threshold — both paths are
-/// bit-identical, so where the line sits is purely a perf knob.
+/// at this width [`sq_dist_pruned`] enters the lane-order scan (bail
+/// check once per 8-lane block), and below it a bail could skip at most
+/// a ragged tail — not enough to cover the compare/branch and norm-seed
+/// overhead.  Callers dispatch to the retained naive scan below this
+/// threshold — both paths are bit-identical, so where the line sits is
+/// purely a perf knob.
 pub const PRUNE_MIN_D: usize = 8;
 
+/// The pruned-scan dispatch predicate: `d >= PRUNE_MIN_D`.  Every call
+/// site ([`crate::vq::Codebook::encode_nearest_with`], the staged
+/// encoder, the k-means assign sweep, the Euclid candidate sweep) gates
+/// on this helper, so the boundary is testable in one place — d = 7
+/// takes the naive scan, d = 8 the pruned one.
+#[inline]
+pub fn prunes_at(d: usize) -> bool {
+    d >= PRUNE_MIN_D
+}
+
 /// Partial-distance squared Euclidean scan: accumulates `(a[i]-b[i])^2`
-/// in exactly the index order of [`sq_dist`], checking the running
-/// prefix against `limit` every 4 lanes and bailing with `None` as soon
-/// as it exceeds `limit` **strictly**.
+/// in exactly the summation order of [`sq_dist`], bailing with `None`
+/// as soon as a running prefix exceeds `limit` **strictly** — so the
+/// result is `Some(full sq_dist)` iff that full sum is `<= limit`.
+///
+/// At `len >= vq::simd::LANES` this is the lane-order pruned scan of
+/// the dispatched arm (checks once per 8-lane block); below that, the
+/// sequential scan with checks every 4 lanes.
 ///
 /// Exactness: every term is nonnegative, and for nonnegative f32 `x, t`
 /// round-to-nearest gives `fl(x + t) >= fl(x) = x` (rounding is
-/// monotone), so the prefix sums never decrease — a prefix above `limit`
-/// proves the full sum is above it too.  Conversely a candidate whose
-/// full distance is `<= limit` never bails (all its prefixes are below
-/// the final sum), so `Some(v)` carries the bit-exact [`sq_dist`] value.
-/// The strict comparison keeps distance-equals-bound candidates alive,
+/// monotone), so the running sums never decrease — a prefix above
+/// `limit` proves the full sum is above it too.  Conversely a candidate
+/// whose full distance is `<= limit` never bails (all its prefixes are
+/// below the final sum), so `Some(v)` carries the bit-exact [`sq_dist`]
+/// value, and the observable result is a pure function of
+/// `(a, b, limit)` — independent of where the intermediate checks sit
+/// (see `vq::simd` for the lane-order version of the argument).  The
+/// strict comparison keeps distance-equals-bound candidates alive,
 /// which is what lets callers prove first-index tie-breaks unchanged.
 #[inline]
 pub fn sq_dist_pruned(a: &[f32], b: &[f32], limit: f32) -> Option<f32> {
+    sq_dist_pruned_at(simd::active(), a, b, limit)
+}
+
+/// [`sq_dist_pruned`] with an explicit dispatch arm.
+#[inline]
+fn sq_dist_pruned_at(level: simd::SimdLevel, a: &[f32], b: &[f32], limit: f32) -> Option<f32> {
     debug_assert_eq!(a.len(), b.len());
+    if a.len() >= simd::LANES {
+        return simd::sq_dist_pruned_lanes(level, a, b, limit);
+    }
     let n = a.len();
     let mut acc = 0.0f32;
     let mut i = 0;
@@ -152,6 +217,20 @@ pub fn sq_dist_pruned(a: &[f32], b: &[f32], limit: f32) -> Option<f32> {
 ///   semantics mean a candidate with distance exactly `limit` completes
 ///   and ties resolve exactly as in the naive scan.
 pub fn nearest_pruned(sub: &[f32], words: &[f32], norms: &[f32]) -> (usize, f32) {
+    nearest_pruned_at(simd::active(), sub, words, norms)
+}
+
+/// [`nearest_pruned`] with an explicit SIMD dispatch arm, threaded
+/// through every distance it computes.  The benches and property tests
+/// use this to pit a forced-scalar scan against the dispatched one in a
+/// single process; production call sites go through [`nearest_pruned`],
+/// which probes [`simd::active`] once per scan.
+pub fn nearest_pruned_at(
+    level: simd::SimdLevel,
+    sub: &[f32],
+    words: &[f32],
+    norms: &[f32],
+) -> (usize, f32) {
     let d = sub.len();
     let k = norms.len();
     debug_assert_eq!(words.len(), k * d);
@@ -166,12 +245,12 @@ pub fn nearest_pruned(sub: &[f32], words: &[f32], norms: &[f32]) -> (usize, f32)
             seed = c;
         }
     }
-    let bound = sq_dist(sub, &words[seed * d..(seed + 1) * d]);
+    let bound = sq_dist_at(level, sub, &words[seed * d..(seed + 1) * d]);
     let mut best = 0usize;
     let mut best_d = f32::INFINITY;
     for c in 0..k {
         let limit = if best_d < bound { best_d } else { bound };
-        if let Some(dist) = sq_dist_pruned(sub, &words[c * d..(c + 1) * d], limit) {
+        if let Some(dist) = sq_dist_pruned_at(level, sub, &words[c * d..(c + 1) * d], limit) {
             if dist < best_d {
                 best_d = dist;
                 best = c;
@@ -364,6 +443,56 @@ mod tests {
         assert_eq!(nearest_pruned(&sub, &words, &norms).0, 1, "first of the tie wins");
         let far = vec![-2.9f32; d];
         assert_eq!(nearest_pruned(&far, &words, &norms), naive(&far));
+    }
+
+    #[test]
+    fn prunes_at_boundary_is_exactly_prune_min_d() {
+        assert!(!prunes_at(PRUNE_MIN_D - 1), "d = 7 must take the naive scan");
+        assert!(prunes_at(PRUNE_MIN_D), "d = 8 must take the pruned scan");
+        assert!(!prunes_at(1));
+        assert!(prunes_at(16));
+    }
+
+    #[test]
+    fn sq_dist_uses_the_lane_order_at_and_above_lanes() {
+        let mut rng = crate::util::rng::Rng::new(0x5EED_0401);
+        for n in [8usize, 9, 12, 16, 23, 32] {
+            let mut a = vec![0.0f32; n];
+            let mut b = vec![0.0f32; n];
+            rng.fill_normal(&mut a);
+            rng.fill_normal(&mut b);
+            let want = simd::sq_dist_lanes_reference(&a, &b);
+            assert_eq!(
+                sq_dist(&a, &b).to_bits(),
+                want.to_bits(),
+                "sq_dist must be the canonical lane-tree sum at n = {n}"
+            );
+        }
+        // Below the threshold the sequential order stays in force.
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0];
+        let b = [0.25f32; 7];
+        assert_eq!(sq_dist(&a, &b).to_bits(), sq_dist_seq(&a, &b).to_bits());
+    }
+
+    #[test]
+    fn sq_dist_pruned_lane_path_is_exact_or_bails() {
+        let mut rng = crate::util::rng::Rng::new(0x5EED_0402);
+        let n = 12;
+        let mut a = vec![0.0f32; n];
+        let mut b = vec![0.0f32; n];
+        rng.fill_normal(&mut a);
+        rng.fill_normal(&mut b);
+        let full = sq_dist(&a, &b);
+        for level in simd::available_levels() {
+            let ok = sq_dist_pruned_at(level, &a, &b, f32::INFINITY).unwrap();
+            assert_eq!(ok.to_bits(), full.to_bits(), "{}", level.name());
+            // Limit exactly the full sum: strict bail keeps it alive.
+            let tie = sq_dist_pruned_at(level, &a, &b, full).unwrap();
+            assert_eq!(tie.to_bits(), full.to_bits(), "{}", level.name());
+            // Any limit strictly below the full sum rejects.
+            assert_eq!(sq_dist_pruned_at(level, &a, &b, full * 0.999), None);
+            assert_eq!(sq_dist_pruned_at(level, &a, &b, 0.0), None);
+        }
     }
 
     #[test]

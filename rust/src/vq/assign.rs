@@ -86,7 +86,7 @@ pub fn candidates_with(
     // distance-equals-bound candidates alive, so the output is
     // bit-identical to the naive scratch path retained below (proven on
     // adversarial near-tie codebooks in `rust/tests/prop_substrate.rs`).
-    let prune = init == AssignInit::Euclid && cb.d >= ops::PRUNE_MIN_D;
+    let prune = init == AssignInit::Euclid && ops::prunes_at(cb.d);
 
     let kernel = |start: usize, end: usize, assign_chunk: &mut [u32], dist_chunk: &mut [f32]| {
         let mut crng = Rng::chunk_stream(base, start / CHUNK);

@@ -11,9 +11,11 @@
 //! §Perf (specialized kernels): the fused streaming decode
 //! ([`Codebook::decode_packed_into`]) runs the word-level
 //! `vq::pack::unpack_range` and a small-`d` (1..=4) monomorphized
-//! gather; the nearest-codeword encode runs the norm-seeded
-//! partial-distance pruned scan (`tensor::ops::nearest_pruned`) at
-//! `d >= ops::PRUNE_MIN_D`.  Both keep their scalar originals —
+//! gather — or, at `d >= vq::simd::LANES`, the runtime-dispatched SIMD
+//! gather (`vq::simd::gather_rows`, AVX2/NEON/scalar); the
+//! nearest-codeword encode runs the norm-seeded partial-distance pruned
+//! scan (`tensor::ops::nearest_pruned`, itself lane-order SIMD at those
+//! widths) at `ops::prunes_at(d)`.  Both keep their scalar originals —
 //! [`Codebook::decode_packed_into_reference`] and
 //! [`Codebook::encode_nearest_reference`] — as property-test ground
 //! truth and as the legacy side of the `fused_decode` / `encode_pruned`
@@ -34,6 +36,7 @@
 use crate::tensor::ops;
 use crate::util::threadpool::{SyncPtr, ThreadPool};
 use crate::vq::assign::Utilization;
+use crate::vq::simd;
 use crate::vq::pack::{
     pack_codes, pack_codes_reference, unpack_range, unpack_range_reference, PackedCodes,
     StagedCodes,
@@ -136,8 +139,10 @@ impl Codebook {
 
     /// The gather half of every decode: `dst[i] = words[codes[i]]`, with
     /// dedicated small-`d` (1..=4) kernels that move a compile-time-sized
-    /// row instead of calling `copy_from_slice` with a runtime length —
-    /// pure copies either way, so the output is bit-identical to the
+    /// row instead of calling `copy_from_slice` with a runtime length,
+    /// and the runtime-dispatched SIMD row copy at `d >= simd::LANES`
+    /// (probed per call — one acquire-load per 128-code chunk) — pure
+    /// copies on every arm, so the output is bit-identical to the
     /// generic path.
     fn gather(&self, codes: &[u32], dst: &mut [f32]) {
         debug_assert_eq!(dst.len(), codes.len() * self.d);
@@ -150,6 +155,9 @@ impl Codebook {
             2 => gather_fixed::<2>(&self.words, codes, dst),
             3 => gather_fixed::<3>(&self.words, codes, dst),
             4 => gather_fixed::<4>(&self.words, codes, dst),
+            d if d >= simd::LANES => {
+                simd::gather_rows(simd::active(), &self.words, codes, d, dst)
+            }
             d => {
                 for (row, &c) in dst.chunks_exact_mut(d).zip(codes) {
                     row.copy_from_slice(&self.words[c as usize * d..(c as usize + 1) * d]);
@@ -220,9 +228,10 @@ impl Codebook {
 
     /// The accumulate twin of [`Codebook::gather`] for residual stages:
     /// `dst[i] += words[codes[i]]`, with the same small-`d` (1..=4)
-    /// monomorphized kernels.  Element adds run in `j` order exactly
-    /// like the scalar loop, so the staged sum is bit-identical to the
-    /// reference accumulation.
+    /// monomorphized kernels and the SIMD accumulate at
+    /// `d >= simd::LANES`.  Element adds stay independent per element
+    /// (lane-wise vector adds are exactly one f32 add each), so the
+    /// staged sum is bit-identical to the reference accumulation.
     fn gather_add(&self, codes: &[u32], dst: &mut [f32]) {
         debug_assert_eq!(dst.len(), codes.len() * self.d);
         match self.d {
@@ -234,6 +243,9 @@ impl Codebook {
             2 => gather_add_fixed::<2>(&self.words, codes, dst),
             3 => gather_add_fixed::<3>(&self.words, codes, dst),
             4 => gather_add_fixed::<4>(&self.words, codes, dst),
+            d if d >= simd::LANES => {
+                simd::gather_rows_add(simd::active(), &self.words, codes, d, dst)
+            }
             d => {
                 for (row, &c) in dst.chunks_exact_mut(d).zip(codes) {
                     let w = &self.words[c as usize * d..(c as usize + 1) * d];
@@ -414,7 +426,7 @@ impl Codebook {
         }
         let nchunks = s.div_ceil(CHUNK);
         let mut errs = vec![0.0f64; nchunks];
-        let prune = self.d >= ops::PRUNE_MIN_D;
+        let prune = ops::prunes_at(self.d);
 
         let kernel = |start: usize, end: usize, codes_chunk: &mut [u32]| -> f64 {
             let mut local = 0.0f64;
@@ -588,7 +600,7 @@ impl Codebook {
         }
         let nchunks = s.div_ceil(CHUNK);
         let mut errs = vec![0.0f64; nchunks];
-        let prune = self.d >= ops::PRUNE_MIN_D;
+        let prune = ops::prunes_at(self.d);
         let words = &self.words[..stage_k * self.d];
         let norms = &self.norms[..stage_k];
 
@@ -1055,6 +1067,87 @@ mod tests {
         let c2 = Codebook::new(65536, 8, vec![0.0; 65536 * 8]);
         assert_eq!(c2.bits_per_weight(), 2.0);
         assert_eq!(c2.index_bits(), 16);
+    }
+
+    /// The PRUNE_MIN_D boundary, pinned: d = 7 must take the naive scan
+    /// and d = 8 the pruned one, in both the single-stage and the staged
+    /// encode — and on both sides of the line the output must match the
+    /// brute-force references bit for bit (the boundary is a perf knob,
+    /// never a semantics knob).
+    #[test]
+    fn prune_boundary_d7_naive_d8_pruned_single_stage() {
+        assert!(!ops::prunes_at(7), "d = 7 must stay on the naive scan");
+        assert!(ops::prunes_at(8), "d = 8 must take the pruned scan");
+        let mut rng = Rng::new(61);
+        for d in [7usize, 8] {
+            let mut words = vec![0.0f32; 32 * d];
+            rng.fill_normal(&mut words);
+            let c = Codebook::new(32, d, words);
+            let mut flat = vec![0.0f32; 300 * d];
+            rng.fill_normal(&mut flat);
+            // Plant an exact codeword so a zero-distance tie occurs.
+            let w5: Vec<f32> = c.word(5).to_vec();
+            flat[40 * d..41 * d].copy_from_slice(&w5);
+            let (m_ref, c_ref) = c.encode_nearest_reference(&flat);
+            let (m_new, c_new) = c.encode_nearest_with(&flat, None);
+            assert_eq!(m_ref.to_bits(), m_new.to_bits(), "d={d} MSE diverged");
+            assert_eq!(c_ref, c_new, "d={d} codes diverged");
+        }
+    }
+
+    #[test]
+    fn prune_boundary_d7_naive_d8_pruned_staged() {
+        let mut rng = Rng::new(67);
+        for d in [7usize, 8] {
+            let mut words = vec![0.0f32; 64 * d];
+            rng.fill_normal(&mut words);
+            let c = Codebook::new(64, d, words);
+            let mut flat = vec![0.0f32; 260 * d];
+            rng.fill_normal(&mut flat);
+            let reference = c.encode_staged_reference(&flat, &[5, 4]);
+            let got = c.encode_staged(&flat, &[5, 4], None);
+            assert_eq!(reference.codes, got.codes, "d={d} staged codes diverged");
+            assert_eq!(reference.mse.to_bits(), got.mse.to_bits(), "d={d} staged MSE");
+            assert_eq!(reference.utilization, got.utilization, "d={d}");
+        }
+    }
+
+    /// Wide-d decode rides the runtime-dispatched SIMD gather (and the
+    /// staged decode its accumulate twin): both must stay bit-identical
+    /// to the scalar references across the 7/8 dispatch boundary and at
+    /// ragged widths (d % 8 != 0 exercises the tail lanes).
+    #[test]
+    fn wide_d_fused_and_staged_decode_match_references() {
+        use crate::vq::pack::{pack_codes, StagedCodes};
+        let mut rng = Rng::new(71);
+        for d in [8usize, 9, 12, 16, 19] {
+            let mut words = vec![0.0f32; 32 * d];
+            rng.fill_normal(&mut words);
+            let c = Codebook::new(32, d, words);
+            let codes: Vec<u32> = (0..300).map(|_| rng.below(32) as u32).collect();
+            let p = pack_codes(&codes, 5);
+            for (start, end) in [(0usize, 300usize), (17, 291), (297, 300)] {
+                let mut fast = vec![0.0f32; (end - start) * d];
+                let mut slow = vec![0.0f32; (end - start) * d];
+                c.decode_packed_into(&p, start, end, &mut fast);
+                c.decode_packed_into_reference(&p, start, end, &mut slow);
+                let b = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(b(&fast), b(&slow), "d={d} [{start}, {end})");
+            }
+            let streams: Vec<_> = (0..2)
+                .map(|_| {
+                    let codes: Vec<u32> = (0..300).map(|_| rng.below(32) as u32).collect();
+                    pack_codes(&codes, 5)
+                })
+                .collect();
+            let staged = StagedCodes::new(streams);
+            let mut fast = vec![0.0f32; 300 * d];
+            let mut slow = vec![0.0f32; 300 * d];
+            c.decode_staged_packed_into(&staged, 0, 300, &mut fast);
+            c.decode_staged_packed_into_reference(&staged, 0, 300, &mut slow);
+            let b = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(b(&fast), b(&slow), "staged d={d}");
+        }
     }
 
     /// The decode-side determinism contract: pooled encode/decode paths

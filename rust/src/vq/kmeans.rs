@@ -165,7 +165,7 @@ fn assign_sweep(
     }
     let nchunks = s.div_ceil(CHUNK);
     let mut errs = vec![0.0f64; nchunks];
-    let prune = d >= ops::PRUNE_MIN_D;
+    let prune = ops::prunes_at(d);
     let norms: Vec<f32> = if prune {
         centers.chunks_exact(d).map(|c| ops::dot(c, c)).collect()
     } else {

@@ -16,6 +16,10 @@
 //! * [`pack`]     — bit-packing of assignment streams into the compressed
 //!   on-disk/ROM format ([`pack::StagedCodes`]: one stream per residual
 //!   stage), with the compression-rate arithmetic of §3.1.
+//! * [`simd`]     — runtime-dispatched explicit-SIMD arms (AVX2 / NEON /
+//!   scalar, `VQ4ALL_SIMD` override) for the wide-row gather and the
+//!   lane-order pruned distance scan, with the exactness argument that
+//!   keeps every arm bit-identical to its scalar reference.
 
 pub mod assign;
 pub mod codebook;
@@ -23,6 +27,7 @@ pub mod kde;
 pub mod kmeans;
 pub mod pack;
 pub mod ratios;
+pub mod simd;
 
 pub use assign::{candidates, AssignInit, Utilization};
 pub use codebook::{Codebook, StagedEncode};
@@ -32,3 +37,4 @@ pub use pack::{
     pack_codes, pack_codes_reference, unpack_codes, unpack_codes_into, unpack_codes_with,
     unpack_one, unpack_range, PackedCodes, StagedCodes,
 };
+pub use simd::SimdLevel;

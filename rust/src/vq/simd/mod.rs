@@ -1,0 +1,494 @@
+//! Runtime-dispatched explicit-SIMD kernels for the two hottest serving
+//! cores (per VQ-LLM, arXiv 2503.02236 — codebook-centric kernel
+//! specialization): the wide-row (`d >= LANES`) gather / gather-accumulate
+//! behind `Codebook::decode_packed_into` / `decode_staged_packed_into`,
+//! and the lane-summed squared-distance scan behind
+//! `tensor::ops::sq_dist` / `sq_dist_pruned` / `nearest_pruned`.
+//!
+//! §Dispatch.  [`SimdLevel`] names the arms: `Scalar` (the portable
+//! lane-order kernels in this file — also the property-test references),
+//! `Avx2` (x86_64, 8 f32 lanes, gated on `is_x86_feature_detected!`) and
+//! `Neon` (aarch64 baseline, two 4-lane accumulators).  [`active`]
+//! resolves the process-wide default once: `VQ4ALL_SIMD=scalar|avx2|neon`
+//! forces an arm (panicking loudly if the host can't run it — CI uses
+//! this to prove which arm ran), `auto`/unset picks [`best`].  Every
+//! kernel also takes the level as an explicit argument so property tests
+//! and benches can exercise *all* available arms in one process; hot
+//! call sites probe once per sweep, not per element.
+//!
+//! §Exactness (the lane-tree summation order).  f32 addition is not
+//! associative, so a vectorized sum only stays bit-identical if scalar
+//! and vector code commit to the *same* association.  For slices with
+//! `len >= LANES` the canonical squared-distance accumulation is defined
+//! to be:
+//!
+//! * eight independent lane accumulators, `lane[j]` summing the squared
+//!   errors of elements `j, j+8, j+16, ...` in index order (a ragged
+//!   tail of `r < 8` elements adds into lanes `0..r`);
+//! * the fixed combine tree [`combine8`]:
+//!   `s_j = lane[j] + lane[j+4]` (j = 0..4), then
+//!   `(s_0 + s_2) + (s_1 + s_3)`.
+//!
+//! That order is exactly what the vector arms compute with plain
+//! mul+add: one 8-lane `vaddps` (or two 4-lane `vaddq_f32`) per block
+//! *is* the per-lane scalar recurrence, and the standard horizontal
+//! reduction (high half + low half, then pairwise) *is* the combine
+//! tree.  No FMA anywhere — a fused multiply-add rounds once where
+//! mul+add rounds twice, which would change bits.
+//!
+//! §Exactness (the pruned bail).  `sq_dist_pruned_lanes*` returns
+//! `Some(S)` iff the canonical full sum `S <= limit`, else `None` — the
+//! final check runs on the completed sum, so the *observable result is a
+//! pure function of `(a, b, limit)`, independent of where intermediate
+//! bail checks sit*.  Intermediate bails (after each 8-lane block) are
+//! sound because every term is nonnegative and f32 round-to-nearest is
+//! monotone: each lane accumulator is nondecreasing over blocks, and
+//! [`combine8`] is monotone in every argument, so a partial combined sum
+//! that already exceeds `limit` proves the final sum does too.
+//! Conversely a candidate whose full sum is `<= limit` can never bail
+//! early.  The scalar reference and both vector arms therefore agree on
+//! accepted/rejected *and* on the returned bits, whatever their check
+//! cadence — here all arms check once per block, which also preserves
+//! the pruning win.
+//!
+//! §Gather exactness is trivial: the gather is a pure row copy (vector
+//! loads/stores move the same bytes), and the gather-accumulate performs
+//! one independent f32 add per element — lane-wise `vaddps` is exactly
+//! the scalar per-element add, no reassociation anywhere.
+//!
+//! Audit: this module and its arch submodules are on the PR-6
+//! `UNSAFE_ALLOWLIST`; every `unsafe` carries a SAFETY justification,
+//! and the four `*_reference` kernels are manifest-mapped to the
+//! `simd_gather` / `simd_scan` bench rows.
+
+use std::sync::OnceLock;
+
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+/// f32 lanes per block — the width of the canonical lane-order
+/// accumulation and the minimum `d` for the wide-row gather arms.
+pub const LANES: usize = 8;
+
+/// One dispatch arm.  `Scalar` is always available; the vector arms are
+/// per-arch (see [`SimdLevel::available`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable lane-order kernels (the `*_reference` twins).
+    Scalar,
+    /// x86_64 AVX2: one 8-lane f32 accumulator.
+    Avx2,
+    /// aarch64 NEON: two 4-lane f32 accumulators.
+    Neon,
+}
+
+impl SimdLevel {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    /// Can this arm run on the current host?
+    pub fn available(self) -> bool {
+        match self {
+            SimdLevel::Scalar => true,
+            SimdLevel::Avx2 => avx2_detected(),
+            SimdLevel::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_detected() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_detected() -> bool {
+    false
+}
+
+/// The best arm this host can run: AVX2 > NEON > scalar.
+pub fn best() -> SimdLevel {
+    if SimdLevel::Avx2.available() {
+        SimdLevel::Avx2
+    } else if SimdLevel::Neon.available() {
+        SimdLevel::Neon
+    } else {
+        SimdLevel::Scalar
+    }
+}
+
+/// Parse a `VQ4ALL_SIMD` value: `Ok(None)` means auto (use [`best`]),
+/// `Ok(Some(level))` a forced arm, `Err` an unknown spelling.
+pub fn parse_level(s: &str) -> Result<Option<SimdLevel>, String> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "" | "auto" => Ok(None),
+        "scalar" => Ok(Some(SimdLevel::Scalar)),
+        "avx2" => Ok(Some(SimdLevel::Avx2)),
+        "neon" => Ok(Some(SimdLevel::Neon)),
+        other => Err(format!(
+            "unknown VQ4ALL_SIMD value {other:?} (want scalar|avx2|neon|auto)"
+        )),
+    }
+}
+
+/// The process-wide default arm, resolved once: `VQ4ALL_SIMD` forces an
+/// arm (panicking if the host can't run it or the value is unknown —
+/// a silent fallback would defeat the CI dispatch matrix), otherwise
+/// [`best`].  Hot sweeps probe this once and thread the level through
+/// their inner loops.
+pub fn active() -> SimdLevel {
+    static ACTIVE: OnceLock<SimdLevel> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        let raw = std::env::var("VQ4ALL_SIMD").unwrap_or_default();
+        match parse_level(&raw) {
+            Ok(None) => best(),
+            Ok(Some(level)) => {
+                assert!(
+                    level.available(),
+                    "VQ4ALL_SIMD={} forced, but this host cannot run that arm \
+                     (arch {}, avx2 {})",
+                    level.name(),
+                    std::env::consts::ARCH,
+                    SimdLevel::Avx2.available(),
+                );
+                level
+            }
+            Err(msg) => panic!("{msg}"),
+        }
+    })
+}
+
+/// One-line dispatch report — printed by the `simd_probe` binary and the
+/// serving engine at construction; the CI `simd-matrix` job greps it to
+/// prove which arm actually ran.
+pub fn probe_line() -> String {
+    format!(
+        "vq4all-simd: active={} best={} env={} avx2={} neon={} arch={}",
+        active().name(),
+        best().name(),
+        std::env::var("VQ4ALL_SIMD").unwrap_or_else(|_| "auto".to_string()),
+        SimdLevel::Avx2.available(),
+        SimdLevel::Neon.available(),
+        std::env::consts::ARCH,
+    )
+}
+
+/// The fixed combine tree of the canonical lane-order sum (see the
+/// module docs): monotone in every argument, and exactly the horizontal
+/// reduction the vector arms perform in-register.
+#[inline]
+fn combine8(l: &[f32; LANES]) -> f32 {
+    let s0 = l[0] + l[4];
+    let s1 = l[1] + l[5];
+    let s2 = l[2] + l[6];
+    let s3 = l[3] + l[7];
+    (s0 + s2) + (s1 + s3)
+}
+
+// ---------------------------------------------------------------------------
+// Scalar lane-order references (the canonical definitions)
+// ---------------------------------------------------------------------------
+
+/// Canonical lane-order squared distance (see module docs) — the scalar
+/// reference the vector arms are proven bit-identical to, and the
+/// definition `tensor::ops::sq_dist` dispatches to at `len >= LANES`.
+/// Legacy side of the `simd_scan` bench row.
+pub fn sq_dist_lanes_reference(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut lanes = [0.0f32; LANES];
+    let mut i = 0;
+    while i + LANES <= n {
+        for j in 0..LANES {
+            let e = a[i + j] - b[i + j];
+            lanes[j] += e * e;
+        }
+        i += LANES;
+    }
+    let mut j = 0;
+    while i + j < n {
+        let e = a[i + j] - b[i + j];
+        lanes[j] += e * e;
+        j += 1;
+    }
+    combine8(&lanes)
+}
+
+/// Canonical lane-order pruned squared distance: `Some(S)` iff the full
+/// canonical sum `S <= limit` (strict bail, matching
+/// `tensor::ops::sq_dist_pruned` semantics), checking the combined
+/// running sum after each 8-lane block.  The scalar reference of the
+/// `simd_scan` row; see the module docs for why the bail cadence cannot
+/// change the observable result.
+pub fn sq_dist_pruned_lanes_reference(a: &[f32], b: &[f32], limit: f32) -> Option<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut lanes = [0.0f32; LANES];
+    let mut i = 0;
+    while i + LANES <= n {
+        for j in 0..LANES {
+            let e = a[i + j] - b[i + j];
+            lanes[j] += e * e;
+        }
+        i += LANES;
+        if i + LANES <= n && combine8(&lanes) > limit {
+            return None;
+        }
+    }
+    let mut j = 0;
+    while i + j < n {
+        let e = a[i + j] - b[i + j];
+        lanes[j] += e * e;
+        j += 1;
+    }
+    let s = combine8(&lanes);
+    if s > limit {
+        None
+    } else {
+        Some(s)
+    }
+}
+
+/// Scalar wide-row gather: `dst[row] = words[codes[row]]` for rows of
+/// `d >= LANES` f32s — the reference twin of the vector copy arms and
+/// the legacy side of the `simd_gather` bench row.  (Small `d` keeps the
+/// monomorphized kernels in `vq::codebook`.)
+pub fn gather_rows_reference(words: &[f32], codes: &[u32], d: usize, dst: &mut [f32]) {
+    debug_assert!(d >= 1);
+    debug_assert_eq!(dst.len(), codes.len() * d);
+    for (row, &c) in dst.chunks_exact_mut(d).zip(codes) {
+        row.copy_from_slice(&words[c as usize * d..(c as usize + 1) * d]);
+    }
+}
+
+/// Scalar wide-row gather-accumulate: `dst[row] += words[codes[row]]`,
+/// one independent f32 add per element in `j` order — the reference twin
+/// of the vector accumulate arms (`simd_gather` row).
+pub fn gather_rows_add_reference(words: &[f32], codes: &[u32], d: usize, dst: &mut [f32]) {
+    debug_assert!(d >= 1);
+    debug_assert_eq!(dst.len(), codes.len() * d);
+    for (row, &c) in dst.chunks_exact_mut(d).zip(codes) {
+        let w = &words[c as usize * d..(c as usize + 1) * d];
+        for (slot, wj) in row.iter_mut().zip(w) {
+            *slot += wj;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatched entry points
+// ---------------------------------------------------------------------------
+//
+// Each wrapper re-checks availability in its match guard, so selecting a
+// vector arm is locally proven sound — an unavailable level silently
+// degrades to the scalar reference (unreachable from `active`/`best`,
+// which never hand out unavailable arms).
+
+/// Lane-order squared distance on the given arm.  Bit-identical to
+/// [`sq_dist_lanes_reference`] at every level (property-tested per arm).
+pub fn sq_dist_lanes(level: SimdLevel, a: &[f32], b: &[f32]) -> f32 {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the guard just confirmed AVX2 support on this host.
+        SimdLevel::Avx2 if SimdLevel::Avx2.available() => unsafe { x86::sq_dist_lanes_avx2(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64 targets.
+        SimdLevel::Neon => unsafe { neon::sq_dist_lanes_neon(a, b) },
+        _ => sq_dist_lanes_reference(a, b),
+    }
+}
+
+/// Lane-order pruned squared distance on the given arm.  Identical
+/// accepted/rejected decisions and `Some` bits as
+/// [`sq_dist_pruned_lanes_reference`] (see module docs).
+pub fn sq_dist_pruned_lanes(level: SimdLevel, a: &[f32], b: &[f32], limit: f32) -> Option<f32> {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the guard just confirmed AVX2 support on this host.
+        SimdLevel::Avx2 if SimdLevel::Avx2.available() => unsafe {
+            x86::sq_dist_pruned_lanes_avx2(a, b, limit)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64 targets.
+        SimdLevel::Neon => unsafe { neon::sq_dist_pruned_lanes_neon(a, b, limit) },
+        _ => sq_dist_pruned_lanes_reference(a, b, limit),
+    }
+}
+
+/// Wide-row gather on the given arm (pure row copies — trivially
+/// bit-identical to [`gather_rows_reference`]).
+pub fn gather_rows(level: SimdLevel, words: &[f32], codes: &[u32], d: usize, dst: &mut [f32]) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the guard just confirmed AVX2 support on this host.
+        SimdLevel::Avx2 if SimdLevel::Avx2.available() => unsafe {
+            x86::gather_rows_avx2(words, codes, d, dst)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64 targets.
+        SimdLevel::Neon => unsafe { neon::gather_rows_neon(words, codes, d, dst) },
+        _ => gather_rows_reference(words, codes, d, dst),
+    }
+}
+
+/// Wide-row gather-accumulate on the given arm (independent per-element
+/// f32 adds — bit-identical to [`gather_rows_add_reference`]).
+pub fn gather_rows_add(level: SimdLevel, words: &[f32], codes: &[u32], d: usize, dst: &mut [f32]) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the guard just confirmed AVX2 support on this host.
+        SimdLevel::Avx2 if SimdLevel::Avx2.available() => unsafe {
+            x86::gather_rows_add_avx2(words, codes, d, dst)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64 targets.
+        SimdLevel::Neon => unsafe { neon::gather_rows_add_neon(words, codes, d, dst) },
+        _ => gather_rows_add_reference(words, codes, d, dst),
+    }
+}
+
+/// Every arm the current host can run (scalar first) — the iteration
+/// set of the per-arm property tests and the audit of the dispatch
+/// matrix.
+pub fn available_levels() -> Vec<SimdLevel> {
+    let mut levels = vec![SimdLevel::Scalar];
+    for l in [SimdLevel::Avx2, SimdLevel::Neon] {
+        if l.available() {
+            levels.push(l);
+        }
+    }
+    levels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn combine8_is_the_documented_tree() {
+        // Values chosen so every alternative association changes bits.
+        let l = [1.0e8f32, 1.0, 3.0e-8, 7.5, 2.0e8, 0.25, 9.0e-8, 1.5];
+        let s0 = l[0] + l[4];
+        let s1 = l[1] + l[5];
+        let s2 = l[2] + l[6];
+        let s3 = l[3] + l[7];
+        let want = (s0 + s2) + (s1 + s3);
+        assert_eq!(combine8(&l).to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn parse_level_spellings() {
+        assert_eq!(parse_level("auto"), Ok(None));
+        assert_eq!(parse_level(""), Ok(None));
+        assert_eq!(parse_level("Scalar"), Ok(Some(SimdLevel::Scalar)));
+        assert_eq!(parse_level(" avx2 "), Ok(Some(SimdLevel::Avx2)));
+        assert_eq!(parse_level("NEON"), Ok(Some(SimdLevel::Neon)));
+        assert!(parse_level("sse9").is_err());
+    }
+
+    #[test]
+    fn probe_reports_an_available_active_arm() {
+        let a = active();
+        assert!(a.available(), "active arm must be runnable");
+        assert!(best().available());
+        let line = probe_line();
+        assert!(line.contains(&format!("active={}", a.name())), "{line}");
+    }
+
+    #[test]
+    fn scalar_lane_reference_handles_tails() {
+        let mut rng = Rng::new(11);
+        for n in [8usize, 9, 12, 15, 16, 17, 31, 32, 40] {
+            let mut a = vec![0.0f32; n];
+            let mut b = vec![0.0f32; n];
+            rng.fill_normal(&mut a);
+            rng.fill_normal(&mut b);
+            // Recompute by hand with explicit lane bookkeeping.
+            let mut lanes = [0.0f32; LANES];
+            for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                let e = x - y;
+                lanes[i % LANES] += e * e;
+            }
+            let want = combine8(&lanes);
+            assert_eq!(sq_dist_lanes_reference(&a, &b).to_bits(), want.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn pruned_lane_reference_is_a_pure_function_of_the_full_sum() {
+        let mut rng = Rng::new(13);
+        for n in [8usize, 12, 16, 24, 33] {
+            let mut a = vec![0.0f32; n];
+            let mut b = vec![0.0f32; n];
+            rng.fill_normal(&mut a);
+            rng.fill_normal(&mut b);
+            let full = sq_dist_lanes_reference(&a, &b);
+            // Generous limit: exact bits back.
+            let got = sq_dist_pruned_lanes_reference(&a, &b, f32::INFINITY).unwrap();
+            assert_eq!(got.to_bits(), full.to_bits(), "n={n}");
+            // Limit exactly the sum: strict bail keeps it alive.
+            let got = sq_dist_pruned_lanes_reference(&a, &b, full).unwrap();
+            assert_eq!(got.to_bits(), full.to_bits(), "n={n}");
+            // Any limit below the sum rejects.
+            assert_eq!(sq_dist_pruned_lanes_reference(&a, &b, full * 0.999), None);
+            assert_eq!(sq_dist_pruned_lanes_reference(&a, &b, 0.0), None);
+        }
+    }
+
+    #[test]
+    fn every_available_arm_matches_the_scalar_reference() {
+        let mut rng = Rng::new(17);
+        for level in available_levels() {
+            for n in [8usize, 9, 12, 16, 23, 32, 65] {
+                let mut a = vec![0.0f32; n];
+                let mut b = vec![0.0f32; n];
+                rng.fill_normal(&mut a);
+                rng.fill_normal(&mut b);
+                let want = sq_dist_lanes_reference(&a, &b);
+                let got = sq_dist_lanes(level, &a, &b);
+                assert_eq!(got.to_bits(), want.to_bits(), "{} n={n}", level.name());
+                for limit in [f32::INFINITY, want, want * 0.999, want * 0.25, 0.0] {
+                    let want_p = sq_dist_pruned_lanes_reference(&a, &b, limit);
+                    let got_p = sq_dist_pruned_lanes(level, &a, &b, limit);
+                    assert_eq!(
+                        got_p.map(f32::to_bits),
+                        want_p.map(f32::to_bits),
+                        "{} n={n} limit={limit}",
+                        level.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_arms_match_reference_on_ragged_widths() {
+        let mut rng = Rng::new(19);
+        for level in available_levels() {
+            for d in [8usize, 9, 12, 16, 19, 24] {
+                let k = 32;
+                let mut words = vec![0.0f32; k * d];
+                rng.fill_normal(&mut words);
+                let codes: Vec<u32> = (0..77).map(|_| rng.below(k) as u32).collect();
+                let mut want = vec![0.0f32; codes.len() * d];
+                let mut got = vec![0.0f32; codes.len() * d];
+                gather_rows_reference(&words, &codes, d, &mut want);
+                gather_rows(level, &words, &codes, d, &mut got);
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&got), bits(&want), "{} d={d}", level.name());
+                gather_rows_add_reference(&words, &codes, d, &mut want);
+                gather_rows_add(level, &words, &codes, d, &mut got);
+                assert_eq!(bits(&got), bits(&want), "{} d={d} (add)", level.name());
+            }
+        }
+    }
+}

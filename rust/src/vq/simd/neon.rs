@@ -1,0 +1,188 @@
+//! NEON arms of the `vq::simd` kernels (aarch64 only; NEON is baseline
+//! on every aarch64 target, so availability is a compile-time fact).
+//!
+//! Two 4-lane `float32x4_t` accumulators stand in for the eight scalar
+//! lane accumulators of the canonical order (`acc0` holds lanes 0..4,
+//! `acc1` lanes 4..8): per block, `vaddq_f32(acc, vmulq_f32(e, e))` is
+//! exactly the per-lane scalar recurrence (plain mul + add, never FMA —
+//! `vfmaq` would round once where the reference rounds twice).  The
+//! horizontal reduction [`hsum8`] is exactly the [`super::combine8`]
+//! tree: `vaddq(acc0, acc1)` gives `[s0, s1, s2, s3]`, low+high halves
+//! give `[s0+s2, s1+s3]`, and the pairwise add gives `t0 + t1`.  Ragged
+//! tails use the same scalar loops as the references.
+
+use std::arch::aarch64::{
+    float32x4_t, vadd_f32, vaddq_f32, vdupq_n_f32, vget_high_f32, vget_lane_f32, vget_low_f32,
+    vld1q_f32, vmulq_f32, vpadd_f32, vst1q_f32, vsubq_f32,
+};
+
+use super::{combine8, LANES};
+
+/// Half a block: the lane count of one NEON vector.
+const HALF: usize = 4;
+
+/// Horizontal sum of the two 4-lane accumulators in exactly the
+/// [`super::combine8`] association.
+///
+/// # Safety
+/// NEON is baseline on aarch64; this module only compiles there.
+#[inline]
+unsafe fn hsum8(acc0: float32x4_t, acc1: float32x4_t) -> f32 {
+    // Register-only NEON ops, no memory access (bare calls: the body of
+    // an unsafe fn, and safe intrinsics on toolchains that mark them so).
+    let s = vaddq_f32(acc0, acc1);
+    let t = vadd_f32(vget_low_f32(s), vget_high_f32(s));
+    vget_lane_f32::<0>(vpadd_f32(t, t))
+}
+
+/// Spill both accumulators to the scalar lane array (`acc0` -> lanes
+/// 0..4, `acc1` -> lanes 4..8) for tail handling and the final
+/// [`super::combine8`].
+///
+/// # Safety
+/// NEON is baseline on aarch64; this module only compiles there.
+#[inline]
+unsafe fn spill(acc0: float32x4_t, acc1: float32x4_t) -> [f32; LANES] {
+    let mut lanes = [0.0f32; LANES];
+    // SAFETY: `lanes` holds 8 f32s: both 4-f32 stores are in bounds.
+    unsafe {
+        vst1q_f32(lanes.as_mut_ptr(), acc0);
+        vst1q_f32(lanes.as_mut_ptr().add(HALF), acc1);
+    }
+    lanes
+}
+
+/// NEON twin of [`super::sq_dist_lanes_reference`] — bit-identical by
+/// the lane-order argument in the module docs.
+///
+/// # Safety
+/// NEON is baseline on aarch64 (the dispatch arm in
+/// [`super::sq_dist_lanes`] only exists for that target).
+pub unsafe fn sq_dist_lanes_neon(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    // Register-only initialization (bare call, see hsum8).
+    let (mut acc0, mut acc1) = (vdupq_n_f32(0.0), vdupq_n_f32(0.0));
+    let mut i = 0;
+    while i + LANES <= n {
+        // SAFETY: i + 8 <= n == a.len() == b.len(), so all four 4-f32
+        // loads are in bounds.
+        unsafe {
+            let e0 = vsubq_f32(vld1q_f32(a.as_ptr().add(i)), vld1q_f32(b.as_ptr().add(i)));
+            let e1 = vsubq_f32(
+                vld1q_f32(a.as_ptr().add(i + HALF)),
+                vld1q_f32(b.as_ptr().add(i + HALF)),
+            );
+            acc0 = vaddq_f32(acc0, vmulq_f32(e0, e0));
+            acc1 = vaddq_f32(acc1, vmulq_f32(e1, e1));
+        }
+        i += LANES;
+    }
+    // SAFETY: NEON is baseline on this target.
+    let mut lanes = unsafe { spill(acc0, acc1) };
+    let mut j = 0;
+    while i + j < n {
+        let e = a[i + j] - b[i + j];
+        lanes[j] += e * e;
+        j += 1;
+    }
+    combine8(&lanes)
+}
+
+/// NEON twin of [`super::sq_dist_pruned_lanes_reference`]: same final
+/// sum bits, same accepted/rejected decision, checking once per block
+/// like the reference (any cadence is sound — see the parent module).
+///
+/// # Safety
+/// NEON is baseline on aarch64 (see [`super::sq_dist_pruned_lanes`]).
+pub unsafe fn sq_dist_pruned_lanes_neon(a: &[f32], b: &[f32], limit: f32) -> Option<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    // Register-only initialization (bare call, see hsum8).
+    let (mut acc0, mut acc1) = (vdupq_n_f32(0.0), vdupq_n_f32(0.0));
+    let mut i = 0;
+    while i + LANES <= n {
+        // SAFETY: i + 8 <= n == a.len() == b.len().
+        unsafe {
+            let e0 = vsubq_f32(vld1q_f32(a.as_ptr().add(i)), vld1q_f32(b.as_ptr().add(i)));
+            let e1 = vsubq_f32(
+                vld1q_f32(a.as_ptr().add(i + HALF)),
+                vld1q_f32(b.as_ptr().add(i + HALF)),
+            );
+            acc0 = vaddq_f32(acc0, vmulq_f32(e0, e0));
+            acc1 = vaddq_f32(acc1, vmulq_f32(e1, e1));
+        }
+        i += LANES;
+        // SAFETY: register-only horizontal sum.
+        if i + LANES <= n && unsafe { hsum8(acc0, acc1) } > limit {
+            return None;
+        }
+    }
+    // SAFETY: NEON is baseline on this target.
+    let mut lanes = unsafe { spill(acc0, acc1) };
+    let mut j = 0;
+    while i + j < n {
+        let e = a[i + j] - b[i + j];
+        lanes[j] += e * e;
+        j += 1;
+    }
+    let s = combine8(&lanes);
+    if s > limit {
+        None
+    } else {
+        Some(s)
+    }
+}
+
+/// NEON twin of [`super::gather_rows_reference`]: 4-lane load/store row
+/// copies with a scalar ragged tail — byte-identical to the reference.
+///
+/// # Safety
+/// NEON is baseline on aarch64 (see [`super::gather_rows`]).
+pub unsafe fn gather_rows_neon(words: &[f32], codes: &[u32], d: usize, dst: &mut [f32]) {
+    debug_assert!(d >= LANES);
+    debug_assert_eq!(dst.len(), codes.len() * d);
+    for (row, &c) in dst.chunks_exact_mut(d).zip(codes) {
+        let w = &words[c as usize * d..(c as usize + 1) * d];
+        let mut j = 0;
+        while j + HALF <= d {
+            // SAFETY: j + 4 <= d == w.len() == row.len().
+            unsafe { vst1q_f32(row.as_mut_ptr().add(j), vld1q_f32(w.as_ptr().add(j))) };
+            j += HALF;
+        }
+        while j < d {
+            row[j] = w[j];
+            j += 1;
+        }
+    }
+}
+
+/// NEON twin of [`super::gather_rows_add_reference`]: lane-wise
+/// `vaddq_f32` is exactly one independent f32 add per element, so the
+/// result is bit-identical to the scalar accumulate loop.
+///
+/// # Safety
+/// NEON is baseline on aarch64 (see [`super::gather_rows_add`]).
+pub unsafe fn gather_rows_add_neon(words: &[f32], codes: &[u32], d: usize, dst: &mut [f32]) {
+    debug_assert!(d >= LANES);
+    debug_assert_eq!(dst.len(), codes.len() * d);
+    for (row, &c) in dst.chunks_exact_mut(d).zip(codes) {
+        let w = &words[c as usize * d..(c as usize + 1) * d];
+        let mut j = 0;
+        while j + HALF <= d {
+            // SAFETY: j + 4 <= d == w.len() == row.len().
+            unsafe {
+                let sum = vaddq_f32(
+                    vld1q_f32(row.as_ptr().add(j)),
+                    vld1q_f32(w.as_ptr().add(j)),
+                );
+                vst1q_f32(row.as_mut_ptr().add(j), sum);
+            }
+            j += HALF;
+        }
+        while j < d {
+            row[j] += w[j];
+            j += 1;
+        }
+    }
+}

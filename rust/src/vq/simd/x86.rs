@@ -1,0 +1,194 @@
+//! AVX2 arms of the `vq::simd` kernels (x86_64 only; selected at
+//! runtime by the [`super::SimdLevel::Avx2`] dispatch guards).
+//!
+//! Every kernel here implements the canonical lane-order semantics of
+//! the scalar references in the parent module, with plain `vmulps` +
+//! `vaddps` (never FMA — fusing the multiply-add would round once where
+//! the reference rounds twice and change bits).  One 8-lane `__m256`
+//! accumulator *is* the eight scalar lane accumulators; the horizontal
+//! reduction [`hsum8`] *is* the [`super::combine8`] tree.  Ragged tails
+//! (`len % 8`) are handled by the same scalar loops as the references,
+//! adding into lanes `0..r` after the vector blocks.
+//!
+//! All loads/stores are unaligned (`loadu`/`storeu`) on ranges proven
+//! in-bounds by slice indexing before the raw-pointer arithmetic.
+
+use std::arch::x86_64::{
+    __m256, _mm256_add_ps, _mm256_castps256_ps128, _mm256_extractf128_ps, _mm256_loadu_ps,
+    _mm256_mul_ps, _mm256_setzero_ps, _mm256_storeu_ps, _mm256_sub_ps, _mm_add_ps, _mm_add_ss,
+    _mm_cvtss_f32, _mm_movehl_ps, _mm_shuffle_ps,
+};
+
+use super::{combine8, LANES};
+
+/// Horizontal sum of an 8-lane accumulator in exactly the
+/// [`super::combine8`] association: `s = lo + hi` gives
+/// `[l0+l4, l1+l5, l2+l6, l3+l7]`, `t = s + movehl(s)` gives
+/// `[s0+s2, s1+s3, ..]`, and the final scalar add is `t0 + t1`.
+///
+/// # Safety
+/// Requires AVX2 (callers are themselves `target_feature(avx2)` fns).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum8(v: __m256) -> f32 {
+    let s = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps::<1>(v));
+    let t = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    _mm_cvtss_f32(_mm_add_ss(t, _mm_shuffle_ps::<0b01>(t, t)))
+}
+
+/// Spill the 8 lanes of `v` to a scalar array (for tail handling and the
+/// final [`super::combine8`], which must see the same values the scalar
+/// reference accumulates).
+///
+/// # Safety
+/// Requires AVX2 (callers are themselves `target_feature(avx2)` fns).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn spill(v: __m256) -> [f32; LANES] {
+    let mut lanes = [0.0f32; LANES];
+    // SAFETY: `lanes` is 8 f32s and `storeu` tolerates any alignment.
+    unsafe { _mm256_storeu_ps(lanes.as_mut_ptr(), v) };
+    lanes
+}
+
+/// AVX2 twin of [`super::sq_dist_lanes_reference`] — bit-identical by
+/// the lane-order argument in the module docs.
+///
+/// # Safety
+/// The CPU must support AVX2 (the dispatch guard in
+/// [`super::sq_dist_lanes`] checks `is_x86_feature_detected!`).
+#[target_feature(enable = "avx2")]
+pub unsafe fn sq_dist_lanes_avx2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + LANES <= n {
+        // SAFETY: i + 8 <= n == a.len() == b.len(), so both 8-f32 loads
+        // are in bounds.
+        let (va, vb) = unsafe {
+            (
+                _mm256_loadu_ps(a.as_ptr().add(i)),
+                _mm256_loadu_ps(b.as_ptr().add(i)),
+            )
+        };
+        let e = _mm256_sub_ps(va, vb);
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(e, e));
+        i += LANES;
+    }
+    // SAFETY: AVX2 is enabled for this fn.
+    let mut lanes = unsafe { spill(acc) };
+    let mut j = 0;
+    while i + j < n {
+        let e = a[i + j] - b[i + j];
+        lanes[j] += e * e;
+        j += 1;
+    }
+    combine8(&lanes)
+}
+
+/// AVX2 twin of [`super::sq_dist_pruned_lanes_reference`]: same final
+/// sum bits, same accepted/rejected decision (the bail is sound at any
+/// cadence — see the parent module's exactness argument — and this arm
+/// checks once per block like the reference).
+///
+/// # Safety
+/// The CPU must support AVX2 (checked by the dispatch guard in
+/// [`super::sq_dist_pruned_lanes`]).
+#[target_feature(enable = "avx2")]
+pub unsafe fn sq_dist_pruned_lanes_avx2(a: &[f32], b: &[f32], limit: f32) -> Option<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc = _mm256_setzero_ps();
+    let mut i = 0;
+    while i + LANES <= n {
+        // SAFETY: i + 8 <= n == a.len() == b.len().
+        let (va, vb) = unsafe {
+            (
+                _mm256_loadu_ps(a.as_ptr().add(i)),
+                _mm256_loadu_ps(b.as_ptr().add(i)),
+            )
+        };
+        let e = _mm256_sub_ps(va, vb);
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(e, e));
+        i += LANES;
+        // SAFETY: AVX2 is enabled for this fn.
+        if i + LANES <= n && unsafe { hsum8(acc) } > limit {
+            return None;
+        }
+    }
+    // SAFETY: AVX2 is enabled for this fn.
+    let mut lanes = unsafe { spill(acc) };
+    let mut j = 0;
+    while i + j < n {
+        let e = a[i + j] - b[i + j];
+        lanes[j] += e * e;
+        j += 1;
+    }
+    let s = combine8(&lanes);
+    if s > limit {
+        None
+    } else {
+        Some(s)
+    }
+}
+
+/// AVX2 twin of [`super::gather_rows_reference`]: 8-lane unaligned
+/// load/store row copies with a scalar ragged tail — byte-identical to
+/// the reference `copy_from_slice` by construction.
+///
+/// # Safety
+/// The CPU must support AVX2 (checked by the dispatch guard in
+/// [`super::gather_rows`]).
+#[target_feature(enable = "avx2")]
+pub unsafe fn gather_rows_avx2(words: &[f32], codes: &[u32], d: usize, dst: &mut [f32]) {
+    debug_assert!(d >= LANES);
+    debug_assert_eq!(dst.len(), codes.len() * d);
+    for (row, &c) in dst.chunks_exact_mut(d).zip(codes) {
+        let w = &words[c as usize * d..(c as usize + 1) * d];
+        let mut j = 0;
+        while j + LANES <= d {
+            // SAFETY: j + 8 <= d == w.len() == row.len().
+            unsafe {
+                _mm256_storeu_ps(row.as_mut_ptr().add(j), _mm256_loadu_ps(w.as_ptr().add(j)));
+            }
+            j += LANES;
+        }
+        while j < d {
+            row[j] = w[j];
+            j += 1;
+        }
+    }
+}
+
+/// AVX2 twin of [`super::gather_rows_add_reference`]: lane-wise
+/// `vaddps` is exactly one independent f32 add per element, so the
+/// result is bit-identical to the scalar accumulate loop.
+///
+/// # Safety
+/// The CPU must support AVX2 (checked by the dispatch guard in
+/// [`super::gather_rows_add`]).
+#[target_feature(enable = "avx2")]
+pub unsafe fn gather_rows_add_avx2(words: &[f32], codes: &[u32], d: usize, dst: &mut [f32]) {
+    debug_assert!(d >= LANES);
+    debug_assert_eq!(dst.len(), codes.len() * d);
+    for (row, &c) in dst.chunks_exact_mut(d).zip(codes) {
+        let w = &words[c as usize * d..(c as usize + 1) * d];
+        let mut j = 0;
+        while j + LANES <= d {
+            // SAFETY: j + 8 <= d == w.len() == row.len().
+            unsafe {
+                let sum = _mm256_add_ps(
+                    _mm256_loadu_ps(row.as_ptr().add(j)),
+                    _mm256_loadu_ps(w.as_ptr().add(j)),
+                );
+                _mm256_storeu_ps(row.as_mut_ptr().add(j), sum);
+            }
+            j += LANES;
+        }
+        while j < d {
+            row[j] += w[j];
+            j += 1;
+        }
+    }
+}

@@ -24,6 +24,7 @@ use vq4all::vq::pack::{
     pack_codes, pack_codes_reference, unpack_codes, unpack_codes_with, unpack_one, unpack_range,
     unpack_range_reference, StagedCodes,
 };
+use vq4all::vq::simd;
 use vq4all::vq::Codebook;
 use vq4all::{prop_assert, prop_assert_eq};
 
@@ -1339,6 +1340,152 @@ fn area_model_rom_always_denser_than_sram() {
         // Monotone in bytes.
         prop_assert!(m.rom_mm2(bytes * 2) > m.rom_mm2(bytes), "ROM not monotone");
         prop_assert!(m.sram_mm2(bytes * 2) > m.sram_mm2(bytes), "SRAM not monotone");
+        Ok(())
+    });
+}
+
+/// Tentpole (SIMD gather): the runtime-dispatched wide-row gather and
+/// gather-accumulate (`gather_rows_reference` /
+/// `gather_rows_add_reference` vs the AVX2/NEON arms) must be
+/// bit-identical on every arm this host can run — raw kernels at ragged
+/// widths across the 4/7/8/9 dispatch boundaries, and end-to-end through
+/// the fused / staged packed decode at pack widths 1..=32, serial and
+/// pooled.
+#[test]
+fn simd_gather_bit_identical_to_scalar_reference() {
+    let pool = ThreadPool::new(4);
+    proptest(|g| {
+        let fb = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        let d = [4usize, 7, 8, 9, 12, 16][g.usize_in(0, 5)];
+        let k = g.usize_in(2, 32);
+        let words = g.vec_normal((k * d)..=(k * d));
+        let len = g.usize_in(0, 300);
+        let codes: Vec<u32> = (0..len).map(|_| g.u32_below(k as u32)).collect();
+        for level in simd::available_levels() {
+            let mut want = vec![0.0f32; len * d];
+            let mut got = vec![0.0f32; len * d];
+            simd::gather_rows_reference(&words, &codes, d, &mut want);
+            simd::gather_rows(level, &words, &codes, d, &mut got);
+            prop_assert!(fb(&got) == fb(&want), "{} d={d} gather diverged", level.name());
+            // The accumulate twin, on non-zero destinations.
+            let base = g.vec_normal((len * d)..=(len * d));
+            want.copy_from_slice(&base);
+            got.copy_from_slice(&base);
+            simd::gather_rows_add_reference(&words, &codes, d, &mut want);
+            simd::gather_rows_add(level, &words, &codes, d, &mut got);
+            prop_assert!(fb(&got) == fb(&want), "{} d={d} gather_add diverged", level.name());
+        }
+        // End to end: the fused + staged decodes dispatch through the
+        // same kernels at d >= LANES; the pooled decode must stay
+        // bit-identical to serial with SIMD in the chunk kernel.
+        let cb = Codebook::new(k, d, words);
+        let idx_bits = (usize::BITS - (k - 1).leading_zeros()).max(1);
+        let bits = (g.usize_in(1, 32) as u32).max(idx_bits);
+        let p = pack_codes(&codes, bits);
+        let (start, end) = if len == 0 {
+            (0, 0)
+        } else {
+            let a = g.usize_in(0, len - 1);
+            (a, g.usize_in(a, len))
+        };
+        let mut fast = vec![0.0f32; (end - start) * d];
+        let mut slow = vec![0.0f32; (end - start) * d];
+        cb.decode_packed_into(&p, start, end, &mut fast);
+        cb.decode_packed_into_reference(&p, start, end, &mut slow);
+        prop_assert!(fb(&fast) == fb(&slow), "fused decode d={d} bits={bits} diverged");
+        let staged = StagedCodes::new(vec![p.clone(), pack_codes(&codes, bits)]);
+        let mut fast2 = vec![0.0f32; (end - start) * d];
+        let mut slow2 = vec![0.0f32; (end - start) * d];
+        cb.decode_staged_packed_into(&staged, start, end, &mut fast2);
+        cb.decode_staged_packed_into_reference(&staged, start, end, &mut slow2);
+        prop_assert!(fb(&fast2) == fb(&slow2), "staged decode d={d} diverged");
+        let mut o1 = vec![0.0f32; len * d];
+        let mut o2 = vec![0.0f32; len * d];
+        cb.decode_with(&codes, &mut o1, None);
+        cb.decode_with(&codes, &mut o2, Some(&pool));
+        prop_assert!(fb(&o1) == fb(&o2), "pooled decode d={d} diverged from serial");
+        Ok(())
+    });
+}
+
+/// Tentpole (SIMD pruned scan): every arm's lane-order distance kernels
+/// (`sq_dist_lanes_reference` / `sq_dist_pruned_lanes_reference` vs the
+/// AVX2/NEON arms) must match bit for bit — full sums, pruned
+/// accept/reject decisions at adversarial limits (exactly the sum, just
+/// below it, zero, randomized) — the level-threaded `nearest_pruned_at`
+/// must equal the naive first-min scan on every arm, and the pruned
+/// encode must match the brute reference serial and pooled on both sides
+/// of the d = 7 / d = 8 boundary.
+#[test]
+fn simd_pruned_scan_bit_identical_to_scalar_reference() {
+    let pool = ThreadPool::new(4);
+    proptest(|g| {
+        let n = g.usize_in(8, 40);
+        let a = g.vec_normal(n..=n);
+        let b = if g.bool() { a.clone() } else { g.vec_normal(n..=n) };
+        let want = simd::sq_dist_lanes_reference(&a, &b);
+        for level in simd::available_levels() {
+            let got = simd::sq_dist_lanes(level, &a, &b);
+            prop_assert!(got.to_bits() == want.to_bits(), "{} n={n} sum diverged", level.name());
+            for limit in [f32::INFINITY, want, want * 0.999, want * g.f32_in(0.0, 1.5), 0.0] {
+                let wp = simd::sq_dist_pruned_lanes_reference(&a, &b, limit);
+                let gp = simd::sq_dist_pruned_lanes(level, &a, &b, limit);
+                prop_assert!(
+                    gp.map(f32::to_bits) == wp.map(f32::to_bits),
+                    "{} n={n} limit={limit}: pruned scan diverged",
+                    level.name()
+                );
+            }
+        }
+        // The level-threaded scan vs the naive first-min reference, with
+        // planted exact ties, on every available arm.
+        let d = [7usize, 8, 12, 16][g.usize_in(0, 3)];
+        let k = g.usize_in(1, 32);
+        let mut words = g.vec_normal((k * d)..=(k * d));
+        if g.bool() && k >= 2 {
+            let src = g.usize_in(0, k - 1);
+            let dst = g.usize_in(0, k - 1);
+            let row: Vec<f32> = words[src * d..(src + 1) * d].to_vec();
+            words[dst * d..(dst + 1) * d].copy_from_slice(&row);
+        }
+        let sub: Vec<f32> = if g.bool() {
+            let c = g.usize_in(0, k - 1);
+            words[c * d..(c + 1) * d].to_vec()
+        } else {
+            g.vec_normal(d..=d)
+        };
+        let norms: Vec<f32> = words.chunks_exact(d).map(|w| ops::dot(w, w)).collect();
+        let mut naive_best = 0usize;
+        let mut naive_d = f32::INFINITY;
+        for c in 0..k {
+            let dist = ops::sq_dist(&sub, &words[c * d..(c + 1) * d]);
+            if dist < naive_d {
+                naive_d = dist;
+                naive_best = c;
+            }
+        }
+        for level in simd::available_levels() {
+            let (gi, gd) = ops::nearest_pruned_at(level, &sub, &words, &norms);
+            prop_assert!(gi == naive_best, "{} d={d} k={k}: argmin diverged", level.name());
+            prop_assert!(
+                gd.to_bits() == naive_d.to_bits(),
+                "{} d={d} k={k}: distance bits diverged",
+                level.name()
+            );
+        }
+        // End to end across the prune boundary: d = 7 takes the naive
+        // scan, d = 8+ the pruned lane scan — both must reproduce the
+        // brute-force reference, serial and pooled.
+        let cb = Codebook::new(k, d, words);
+        let s = g.usize_in(0, 200);
+        let flat = g.vec_normal((s * d)..=(s * d));
+        let (m_ref, c_ref) = cb.encode_nearest_reference(&flat);
+        let (m_ser, c_ser) = cb.encode_nearest_with(&flat, None);
+        prop_assert!(m_ref.to_bits() == m_ser.to_bits(), "serial MSE diverged d={d}");
+        prop_assert_eq!(c_ref.clone(), c_ser);
+        let (m_par, c_par) = cb.encode_nearest_with(&flat, Some(&pool));
+        prop_assert!(m_ref.to_bits() == m_par.to_bits(), "pooled MSE diverged d={d}");
+        prop_assert_eq!(c_ref, c_par);
         Ok(())
     });
 }

@@ -28,12 +28,18 @@
 # serving hot paths plus the serving-engine rows (cold-vs-warm decode
 # cache, 1-vs-N shards, bounded-vs-unbounded admission) and the
 # legacy-vs-specialized kernel rows (word-level unpack, word-level pack,
-# pruned encode, fused decode, staged residual encode/decode).  Gates:
+# pruned encode, fused decode, staged residual encode/decode, and the
+# scalar-reference-vs-dispatched SIMD rows simd_gather / simd_scan).
+# Gates:
 #   * any comparison row measured on >= 2 worker threads below 1.0x FAILS
 #   * the kernel rows (unpack_wordwise, encode_pruned, fused_decode,
-#     pack_wordwise, staged_encode, staged_decode) must
+#     pack_wordwise, staged_encode, staged_decode, simd_gather,
+#     simd_scan) must
 #     exist and hold >= 1.0x at ANY thread count (they compare two
-#     single-threaded kernels, so thread count is irrelevant)
+#     single-threaded kernels, so thread count is irrelevant; the simd
+#     rows additionally assert bit-identity in-bench, and pin the
+#     dispatched side to the scalar reference — exactly 1.0x — on hosts
+#     with no vector arm, so the row can never silently vanish)
 #   * the engine summary must exist with cache hit_rate > 0,
 #     engine_cache >= 1.0x (warm never slower than cold, any thread
 #     count), admission conservation
@@ -299,7 +305,8 @@ for name in ("engine_cache", "engine_shards", "engine_admission"):
         print(f"  {'ok':<10} {name:<22} {c['speedup']:.2f}x over {c['threads']} threads "
               "(gated by the generic >= 1.0x rule)")
 for name in ("unpack_wordwise", "encode_pruned", "fused_decode",
-             "pack_wordwise", "staged_encode", "staged_decode"):
+             "pack_wordwise", "staged_encode", "staged_decode",
+             "simd_gather", "simd_scan"):
     c = comps.get(name)
     if c is None:
         print(f"  REGRESSION kernel row {name!r} missing")
