@@ -1,19 +1,61 @@
-//! Load + compile every HLO artifact in the manifest — the fastest way
-//! to catch ops the xla_extension 0.5.1 text parser rejects (e.g. the
+//! Artifact health check: validate the manifest's code-stream integrity
+//! block, then load + compile every HLO artifact — the fastest way to
+//! catch ops the xla_extension 0.5.1 text parser rejects (e.g. the
 //! `topk` attribute newer jax emits) before a campaign trips over them.
 //!
 //! ```bash
 //! cargo run --release --example check_artifacts
+//! # manifest integrity only (no PJRT needed — what CI runs):
+//! cargo run --release --example check_artifacts -- --manifest-only
 //! ```
+//!
+//! The integrity pass runs first and needs no runtime: a manifest whose
+//! `code_checksums` block is malformed (non-hex entries fail the load
+//! itself) or inconsistent (checksum count != the manifest's residual
+//! stage count) fails the check before a single HLO is compiled.  The
+//! checksums' *values* are verified against the live packed streams at
+//! hosting time (`Engine::verify_hosted`), where the streams exist.
 
 use vq4all::runtime::{Manifest, Runtime};
 
 fn main() -> anyhow::Result<()> {
+    let manifest_only = std::env::args().any(|a| a == "--manifest-only");
     let dir = Manifest::default_dir();
     let manifest = Manifest::load(&dir)?;
+    let mut failed = Vec::new();
+
+    // Pass 1 — manifest integrity: the code_checksums block, when
+    // present, must agree with the manifest's own stage count.  (Hex
+    // parsing already happened inside Manifest::load — a corrupted
+    // entry never reaches this point.)
+    let mut stamped = 0usize;
+    for net in &manifest.networks {
+        if net.code_checksums.is_empty() {
+            println!("--   {}: no code checksums (legacy manifest; hosting verifies vacuously)", net.name);
+            continue;
+        }
+        if net.code_checksums.len() == manifest.config.stages {
+            println!("OK   {}: {} code-stream checksum(s) match the manifest's {} stage(s)",
+                net.name, net.code_checksums.len(), manifest.config.stages);
+            stamped += 1;
+        } else {
+            println!("FAIL {}: {} code-stream checksum(s) but the manifest declares {} stage(s)",
+                net.name, net.code_checksums.len(), manifest.config.stages);
+            failed.push(format!("{}::code_checksums", net.name));
+        }
+    }
+    println!("integrity: {stamped} net(s) carry checksums, {} inconsistent", failed.len());
+    if manifest_only {
+        if !failed.is_empty() {
+            anyhow::bail!("manifest integrity failures: {failed:?}");
+        }
+        println!("manifest-only mode: skipping HLO compilation");
+        return Ok(());
+    }
+
+    // Pass 2 — compile every HLO artifact against the live runtime.
     let rt = Runtime::cpu()?;
     let mut ok = 0usize;
-    let mut failed = Vec::new();
     for net in &manifest.networks {
         for (name, spec) in &net.executables {
             let path = manifest.path(&spec.hlo);

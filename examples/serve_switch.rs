@@ -19,7 +19,8 @@ use vq4all::serving::batcher::BatcherConfig;
 use vq4all::serving::obs::expose;
 use vq4all::serving::server::Server;
 use vq4all::serving::switchsim::{compare, SwitchWorkload};
-use vq4all::serving::{Admission, Engine, EngineConfig, HostedNet};
+use vq4all::serving::faults::ALL_SITES;
+use vq4all::serving::{Admission, Engine, EngineConfig, FaultPlan, FaultSite, HostedNet};
 use vq4all::util::cli::Cli;
 use vq4all::util::config::CampaignConfig;
 use vq4all::util::rng::Rng;
@@ -33,6 +34,9 @@ fn main() -> anyhow::Result<()> {
         .opt("nets", "mini_mlp,mini_resnet18,mini_mobilenet", "networks to serve")
         .opt("max-batch", "8", "batcher max batch")
         .opt("linger-us", "200", "batcher max linger (virtual microseconds)")
+        .opt("deadline-us", "0", "per-request deadline on the virtual clock (us, 0 = none)")
+        .opt("chaos", "0", "arm latency faults (slow-op + shard-wedge) at this permille rate")
+        .opt("chaos-seed", "42", "fault-plan seed for --chaos")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("config", "", "config TOML ([engine] shards / cache_kb / max_queue)")
         .engine_opts()
@@ -123,30 +127,60 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let mut server = Server::new(sess_refs, plane, args.parallelism()?.pool())?;
 
+    // Optional deterministic chaos: latency faults only (slow-op stalls
+    // the virtual clock, shard-wedge holds fires back a round), so the
+    // storm still serves every admitted request — the point is watching
+    // the conservation identity hold under injected turbulence.  The
+    // destructive sites (decode panic, corrupt window) are exercised by
+    // the chaos test suite, not this demo.
+    let chaos = args.usize_or("chaos", 0)?.min(1000) as u16;
+    if chaos > 0 {
+        let seed = args.usize_or("chaos-seed", 42)? as u64;
+        let plan = FaultPlan::new(seed)
+            .with_rate(FaultSite::SlowOp, chaos)
+            .with_rate(FaultSite::ShardWedge, chaos);
+        server.plane.arm_faults(&plan);
+        if cfg!(feature = "fault-inject") {
+            println!("chaos armed: slow-op + shard-wedge at {chaos}/1000, seed {seed}");
+        } else {
+            println!("--chaos set but the `fault-inject` feature is off; probes are no-ops");
+        }
+    }
+
     let total = args.usize_or("requests", 400)?;
+    let deadline_us = args.usize_or("deadline-us", 0)? as u64;
     let mut rng = Rng::new(7);
     let mut submitted = 0usize;
-    let mut shed = 0u64;
     while submitted < total {
         // bursts of 1..=6 requests to one network, then switch
         let net = &nets[rng.below(nets.len())];
         let burst = 1 + rng.below(6);
         for _ in 0..burst.min(total - submitted) {
             let row = rng.below(64);
+            // Deadlines live on the same virtual clock the batcher fires
+            // on; an expired request is shed at fire time, before decode.
+            let deadline = if deadline_us == 0 {
+                0
+            } else {
+                server.now_ns() + deadline_us * 1_000
+            };
             // Typed admission: over-budget bursts are shed (--max-queue)
-            // instead of queueing without bound.
-            if let Admission::Rejected { .. } = server.submit(net, row)? {
-                shed += 1;
-            }
+            // instead of queueing without bound; the plane ledgers the
+            // shed, so the report reads it back from `totals()`.
+            let _admission: Admission = server.submit_with_deadline(net, row, deadline)?;
             submitted += 1;
         }
         server.tick(20_000); // 20us virtual inter-burst gap
         while server.dispatch_one()? > 0 {}
     }
     let drained = server.drain_all()?;
+    let totals = server.plane.totals();
     println!(
-        "\nserved {} of {submitted} requests ({shed} shed at admission, {drained} drained at shutdown) across {} networks",
-        submitted as u64 - shed,
+        "\nserved {} of {submitted} requests ({} shed at admission, {} expired, {} failed, {drained} drained at shutdown) across {} networks",
+        totals.served,
+        totals.shed,
+        totals.expired,
+        totals.failed,
         nets.len()
     );
 
@@ -183,13 +217,25 @@ fn main() -> anyhow::Result<()> {
         cs.evictions
     );
     println!(
-        "  admission: accepted {} = dispatched {} + shed {} (peak shard depth {}, budget {})",
+        "  admission: accepted {} = dispatched {} + shed {} + expired {} + failed {} (peak shard depth {}, budget {})",
         t.accepted,
         t.served,
         t.shed,
+        t.expired,
+        t.failed,
         t.peak_depth,
         server.plane.cfg.max_queue_depth
     );
+    if chaos > 0 {
+        let fired: u64 = server
+            .plane
+            .shards()
+            .iter()
+            .filter_map(|s| s.faults.as_ref())
+            .map(|p| ALL_SITES.iter().map(|&site| p.fired(site)).sum::<u64>())
+            .sum();
+        println!("  chaos: {fired} fault(s) fired across {} shard(s)", server.plane.shard_count());
+    }
 
     // Final unified metrics snapshot — the same object the TCP
     // front-end serves as `/metrics` `"format": "json"`, dumped so

@@ -17,7 +17,9 @@ use std::sync::Arc;
 use vq4all::coordinator::{Campaign, NetSession};
 use vq4all::serving::batcher::BatcherConfig;
 use vq4all::serving::obs::expose;
-use vq4all::serving::tcp::{client_metrics, client_request, client_trace, Shutdown, TcpServer};
+use vq4all::serving::tcp::{
+    client_metrics, client_request_deadline, client_trace, Shutdown, TcpServer,
+};
 use vq4all::serving::{Engine, EngineConfig, HostedNet};
 use vq4all::util::cli::Cli;
 use vq4all::util::config::CampaignConfig;
@@ -79,7 +81,7 @@ fn build_server(args: &vq4all::util::cli::Args) -> anyhow::Result<TcpServer> {
     // plane's cache-miss decodes.  With --max-queue set, over-budget
     // requests backpressure the readers instead of queueing unbounded.
     let knobs = args.engine_knobs_from_config(args.get("config"))?;
-    let plane = Engine::new(
+    let mut plane = Engine::new(
         EngineConfig {
             shards: knobs.shards,
             cache_bytes: knobs.cache_bytes(),
@@ -89,28 +91,39 @@ fn build_server(args: &vq4all::util::cli::Args) -> anyhow::Result<TcpServer> {
         },
         hosted,
     )?;
+    // Hosting-time integrity: every packed code stream must still match
+    // the checksum captured when it was hosted, before a single request
+    // is served against it.
+    plane.verify_hosted()?;
     TcpServer::new(sessions, plane, args.parallelism()?.pool())
 }
 
-fn storm(addr: &str, nets: &[&str], n: usize) -> anyhow::Result<()> {
+fn storm(addr: &str, nets: &[&str], n: usize, deadline_ms: u64) -> anyhow::Result<()> {
     let mut rng = Rng::new(23);
     let mut conn = TcpStream::connect(addr)?;
     let mut ok = 0usize;
+    let mut expired = 0usize;
     let mut lat = Vec::new();
     for _ in 0..n {
         let net = nets[rng.below(nets.len())];
-        let resp = client_request(&mut conn, net, rng.below(64))?;
+        let resp = client_request_deadline(&mut conn, net, rng.below(64), deadline_ms)?;
         if resp.req_bool("ok").unwrap_or(false) {
             ok += 1;
             if let Ok(l) = resp.req_f64("latency_us") {
                 lat.push(l);
             }
+        } else if resp
+            .get("error")
+            .and_then(|e| e.as_str())
+            .is_some_and(|e| e.contains("deadline expired"))
+        {
+            expired += 1;
         }
     }
     lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pct = |p: f64| lat.get(((lat.len() - 1) as f64 * p) as usize).copied().unwrap_or(0.0);
     println!(
-        "client: {ok}/{n} ok | wall latency p50 {:.0}us p90 {:.0}us p99 {:.0}us",
+        "client: {ok}/{n} ok ({expired} deadline-expired) | wall latency p50 {:.0}us p90 {:.0}us p99 {:.0}us",
         pct(0.5),
         pct(0.9),
         pct(0.99)
@@ -140,6 +153,7 @@ fn main() -> anyhow::Result<()> {
         .opt("steps", "60", "construction steps per network")
         .opt("max-batch", "16", "batcher max batch")
         .opt("linger-us", "500", "batcher linger (us)")
+        .opt("deadline-ms", "0", "per-request deadline sent by the client (ms, 0 = none)")
         .opt("artifacts", "artifacts", "artifacts directory")
         .opt("config", "", "config TOML ([engine] shards / cache_kb / max_queue)")
         .flag("self-test", "spawn server in-process and storm it")
@@ -154,9 +168,10 @@ fn main() -> anyhow::Result<()> {
         .collect();
     let net_refs: Vec<&str> = nets.iter().map(|s| s.as_str()).collect();
     let requests = args.usize_or("requests", 50)?;
+    let deadline_ms = args.usize_or("deadline-ms", 0)? as u64;
 
     if let Some(addr) = args.get("client").filter(|s| !s.is_empty()) {
-        return storm(addr, &net_refs, requests);
+        return storm(addr, &net_refs, requests, deadline_ms);
     }
 
     if args.has("self-test") {
@@ -170,7 +185,7 @@ fn main() -> anyhow::Result<()> {
         let nets2: Vec<String> = nets.clone();
         let client = std::thread::spawn(move || {
             let refs: Vec<&str> = nets2.iter().map(|s| s.as_str()).collect();
-            let r = storm(&addr2, &refs, requests);
+            let r = storm(&addr2, &refs, requests, deadline_ms);
             sd.trigger();
             // Poke the acceptor so the dispatch loop notices shutdown.
             let _ = TcpStream::connect(&addr2);
@@ -201,10 +216,12 @@ fn main() -> anyhow::Result<()> {
             cs.hit_rate()
         );
         println!(
-            "  admission: accepted {} = dispatched {} + shed {} ({} deferrals, peak depth {}, budget {})",
+            "  admission: accepted {} = dispatched {} + shed {} + expired {} + failed {} ({} deferrals, peak depth {}, budget {})",
             t.accepted,
             t.served,
             t.shed,
+            t.expired,
+            t.failed,
             t.deferred,
             t.peak_depth,
             server.plane.cfg.max_queue_depth

@@ -37,7 +37,9 @@ use vq4all::coordinator::calib::CalibStream;
 use vq4all::tensor::ops;
 use vq4all::coordinator::{NetSession, PncScheduler};
 use vq4all::serving::switchsim::decode_batch;
-use vq4all::serving::{Batch, BatcherConfig, Engine, EngineConfig, HostedNet, Request, Router};
+use vq4all::serving::{
+    Batch, BatcherConfig, Engine, EngineConfig, FaultPlan, HostedNet, Request, Router,
+};
 use vq4all::util::json::Json;
 use vq4all::util::rng::Rng;
 use vq4all::util::threadpool::ThreadPool;
@@ -393,6 +395,7 @@ fn main() -> anyhow::Result<()> {
             net: "bench".into(),
             row: (i as usize * 7) % device_rows,
             arrived_ns: 0,
+            deadline_ns: 0,
         })
         .collect();
     let batch = Batch::form("bench", reqs, device_rows);
@@ -486,6 +489,30 @@ fn main() -> anyhow::Result<()> {
     });
     comparisons.push(Comparison::new("obs_overhead", &obs_off, &obs_on, 1));
 
+    // --- engine: fault-probe overhead ----------------------------------------
+    // The ISSUE-10 fault-tolerance contract: the injection probes and
+    // deadline checks threaded through the dispatch path must cost
+    // ~nothing when no plan fires.  Same warm stream_batch workload with
+    // no plan armed (baseline) vs an armed all-sites plan at rate 0 —
+    // every probe consults the plan, nothing ever fires.  Without the
+    // `fault-inject` feature both sides are no-ops and the row pins near
+    // 1.0x, proving release builds carry no residue.  Single-threaded so
+    // the row rides only its own >= 0.95x verify gate.
+    let mut eng_faults_off = Engine::new(engine_cfg(1, budget), vec![engine_net.clone()]).unwrap();
+    let mut eng_faults_on = Engine::new(engine_cfg(1, budget), vec![engine_net.clone()]).unwrap();
+    eng_faults_on.arm_faults(&FaultPlan::arm_all(0xFA17, 0));
+    eng_faults_off.stream_batch("bench", &all_rows, None).unwrap(); // prefill
+    eng_faults_on.stream_batch("bench", &all_rows, None).unwrap(); // prefill
+    let faults_off = b.bench("engine stream 64 rows warm [faults disarmed]", || {
+        let s = eng_faults_off.stream_batch("bench", &all_rows, None).unwrap();
+        std::hint::black_box(s);
+    });
+    let faults_on = b.bench("engine stream 64 rows warm [faults armed, rate 0]", || {
+        let s = eng_faults_on.stream_batch("bench", &all_rows, None).unwrap();
+        std::hint::black_box(s);
+    });
+    comparisons.push(Comparison::new("faults_overhead", &faults_off, &faults_on, 1));
+
     // --- engine: 1 shard serial vs N shards pooled ---------------------------
     // Four hosted nets, 128 requests round-robin; the serial run drives
     // one shard with no pool, the sharded run fans nets across shards on
@@ -568,6 +595,16 @@ fn main() -> anyhow::Result<()> {
     ] {
         let (acc, disp, shed) = eng.counters();
         assert_eq!(acc, disp + shed, "admission conservation violated ({tag})");
+        // Extended identity (fault plane): no deadlines and no faults in
+        // this run, so the expired/failed terms must stay zero and the
+        // full conservation equation must still balance.
+        let t = eng.totals();
+        assert_eq!(
+            t.accepted,
+            t.served + t.shed + t.expired + t.failed,
+            "extended conservation violated ({tag})"
+        );
+        assert_eq!((t.expired, t.failed), (0, 0), "fault-free run leaked expired/failed ({tag})");
         assert_eq!(eng.total_pending(), 0, "drained plane still pending ({tag})");
     }
     let admission = eng_adm_bounded.totals();
@@ -689,6 +726,11 @@ fn main() -> anyhow::Result<()> {
         ("admission_accepted", Json::num(admission.accepted as f64)),
         ("admission_dispatched", Json::num(admission.served as f64)),
         ("admission_shed", Json::num(admission.shed as f64)),
+        // Extended conservation terms (fault plane): both are zero in
+        // this fault-free bench, but the keys must exist so the baseline
+        // row-set diff catches a report that silently lost them.
+        ("admission_expired", Json::num(admission.expired as f64)),
+        ("admission_failed", Json::num(admission.failed as f64)),
         ("admission_peak_depth", Json::num(admission.peak_depth as f64)),
         // Observability reconciliation keys from the same bounded run —
         // verify.sh gates obs_queue_count == admission_dispatched (one

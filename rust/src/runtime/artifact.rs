@@ -73,6 +73,12 @@ pub struct NetworkManifest {
     pub float_loss: f64,
     pub float_metric: f64,
     pub layers: Vec<LayerSlice>,
+    /// Per-stage FNV-1a checksums of the net's packed code streams
+    /// (`vq::pack::StagedCodes::checksums`), recorded at build time as
+    /// hex strings (JSON numbers are f64-backed here and cannot carry
+    /// 64 bits losslessly).  Empty = manifest predates the key; nothing
+    /// to verify against.
+    pub code_checksums: Vec<u64>,
     pub others: Vec<TensorSpec>,
     pub state_specs: Vec<TensorSpec>,
     pub static_specs: Vec<TensorSpec>,
@@ -99,6 +105,30 @@ impl NetworkManifest {
     /// Total f32 weights in the compressed scope.
     pub fn compressed_weights(&self, d: usize) -> usize {
         self.s_total * d
+    }
+
+    /// Verify a loaded code stream against the manifest's recorded
+    /// per-stage checksums.  A manifest without the key verifies
+    /// vacuously (legacy builds); one with the key must match stage for
+    /// stage — a mismatch means the packed bytes on disk are not the
+    /// ones the build stamped, and the net must not be hosted.
+    pub fn verify_code_checksums(
+        &self,
+        staged: &crate::vq::pack::StagedCodes,
+    ) -> anyhow::Result<()> {
+        if self.code_checksums.is_empty() {
+            return Ok(());
+        }
+        anyhow::ensure!(
+            self.code_checksums.len() == staged.stages(),
+            "network {}: manifest records {} code checksum(s) but the stream has {} stage(s)",
+            self.name,
+            self.code_checksums.len(),
+            staged.stages()
+        );
+        staged.verify_checksums(&self.code_checksums).map_err(|e| {
+            anyhow::anyhow!("network {}: code-stream integrity failure: {e}", self.name)
+        })
     }
 }
 
@@ -219,6 +249,23 @@ fn parse_network(nj: &Json) -> anyhow::Result<NetworkManifest> {
             },
         );
     }
+    // Optional per-stage code-stream checksums (same optional-key
+    // pattern as `config.stages`: absent means a legacy manifest).
+    let code_checksums = match nj.get("code_checksums") {
+        None => Vec::new(),
+        Some(v) => v
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("code_checksums must be an array of hex strings"))?
+            .iter()
+            .map(|s| {
+                let h = s
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("each code checksum must be a hex string"))?;
+                u64::from_str_radix(h, 16)
+                    .map_err(|e| anyhow::anyhow!("bad code checksum {h:?}: {e}"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?,
+    };
     let mut data = BTreeMap::new();
     for (tag, f) in nj
         .req("data")?
@@ -249,6 +296,7 @@ fn parse_network(nj: &Json) -> anyhow::Result<NetworkManifest> {
         float_loss: nj.req_f64("float_loss")?,
         float_metric: nj.req_f64("float_metric")?,
         layers,
+        code_checksums,
         others: parse_specs(nj.req("others")?)?,
         state_specs: parse_specs(nj.req("state_specs")?)?,
         static_specs: parse_specs(nj.req("static_specs")?)?,
@@ -321,6 +369,60 @@ mod tests {
         std::fs::write(dir.join("manifest.json"), staged).unwrap();
         let m = Manifest::load(&dir).unwrap();
         assert_eq!(m.config.stages, 3);
+    }
+
+    #[test]
+    fn code_checksums_parse_and_verify() {
+        use crate::vq::pack::{pack_codes, StagedCodes};
+
+        let staged = StagedCodes::new(vec![
+            pack_codes(&[1u32, 2, 3, 0], 3),
+            pack_codes(&[0u32, 1, 0, 1], 1),
+        ]);
+        let sums = staged.checksums();
+        let hex = format!(
+            "\"code_checksums\": [\"{:x}\", \"{:x}\"], \"excluded_layers\"",
+            sums[0], sums[1]
+        );
+        let stamped = SAMPLE.replace("\"excluded_layers\"", &hex);
+
+        let dir = std::env::temp_dir().join("vq4all_manifest_checksum_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), &stamped).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let net = m.network("tiny").unwrap();
+        assert_eq!(net.code_checksums, sums);
+        net.verify_code_checksums(&staged).unwrap();
+
+        // A corrupted stream no longer matches, and the error names the
+        // network so an operator knows which artifact to rebuild.
+        let mut bad = StagedCodes::new(vec![
+            pack_codes(&[1u32, 2, 3, 4], 3),
+            pack_codes(&[0u32, 1, 0, 1], 1),
+        ]);
+        let err = net.verify_code_checksums(&bad).unwrap_err().to_string();
+        assert!(err.contains("tiny"), "err: {err}");
+        assert!(err.contains("integrity"), "err: {err}");
+        // Stage-count mismatch is its own loud error.
+        bad = StagedCodes::single(pack_codes(&[1u32, 2, 3, 0], 3));
+        assert!(net.verify_code_checksums(&bad).is_err());
+
+        // Legacy manifests (no key) verify vacuously; malformed keys do
+        // not parse at all.
+        let legacy_dir = std::env::temp_dir().join("vq4all_manifest_legacy_test");
+        std::fs::create_dir_all(&legacy_dir).unwrap();
+        std::fs::write(legacy_dir.join("manifest.json"), SAMPLE).unwrap();
+        let legacy = Manifest::load(&legacy_dir).unwrap();
+        let lnet = legacy.network("tiny").unwrap();
+        assert!(lnet.code_checksums.is_empty());
+        lnet.verify_code_checksums(&staged).unwrap();
+
+        let mangled = SAMPLE.replace(
+            "\"excluded_layers\"",
+            "\"code_checksums\": [\"not-hex\"], \"excluded_layers\"",
+        );
+        std::fs::write(dir.join("manifest.json"), mangled).unwrap();
+        assert!(Manifest::load(&dir).is_err());
     }
 
     #[test]

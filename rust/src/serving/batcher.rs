@@ -121,6 +121,7 @@ mod tests {
             net: "a".into(),
             row,
             arrived_ns: t,
+            deadline_ns: 0,
         }
     }
 

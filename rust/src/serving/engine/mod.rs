@@ -66,6 +66,7 @@ pub use stream::{decode_into, decode_rows_into, row_window_bytes, DecodeStats};
 use std::collections::BTreeMap;
 
 use crate::serving::batcher::{Batch, BatcherConfig};
+use crate::serving::faults::FaultPlan;
 use crate::serving::obs::{Event, EventKind, MetricsSnapshot, ObsConfig};
 use crate::util::threadpool::{SyncPtr, ThreadPool};
 
@@ -129,6 +130,12 @@ pub struct EngineTotals {
     pub served: u64,
     /// Submissions rejected at admission.
     pub shed: u64,
+    /// Requests whose deadline lapsed before their batch fired (shed at
+    /// fire time, before decode).
+    pub expired: u64,
+    /// Requests failed with a structured error by a shard or net
+    /// quarantine.
+    pub failed: u64,
     /// Front-end backpressure events (see [`Engine::note_deferral`]).
     pub deferred: u64,
     /// Deepest backlog any single shard ever held.
@@ -199,6 +206,14 @@ impl Engine {
         &self.shards
     }
 
+    /// Chaos hook (`fault-inject` builds only): mutable shard access so
+    /// the chaos suite can corrupt hosted bytes ([`Shard::corrupt_net_byte`])
+    /// and drive quarantine/recovery paths directly.
+    #[cfg(feature = "fault-inject")]
+    pub fn shards_mut(&mut self) -> &mut [Shard] {
+        &mut self.shards
+    }
+
     pub fn hosts(&self, net: &str) -> bool {
         self.placement.contains_key(net)
     }
@@ -242,23 +257,48 @@ impl Engine {
 
     /// Offer a request to the owning shard at the current clock under
     /// the [`EngineConfig::max_queue_depth`] admission budget.  Unknown
-    /// nets and out-of-range rows are *errors* (never counted — the
-    /// plane was never obligated to serve them); valid submissions
-    /// always count as accepted and resolve to exactly one of
-    /// [`Admission::Accepted`] (enqueued) or [`Admission::Rejected`]
-    /// (shed), so `accepted == dispatched + shed` holds once drained.
+    /// nets, out-of-range rows, and quarantined shards/nets are
+    /// *errors* (never counted — the plane was never obligated to serve
+    /// them); valid submissions always count as accepted and resolve to
+    /// exactly one of [`Admission::Accepted`] (enqueued) or
+    /// [`Admission::Rejected`] (shed), so
+    /// `accepted == dispatched + shed + expired + failed` holds once
+    /// drained.
     pub fn try_submit(&mut self, net: &str, row: usize) -> anyhow::Result<Admission> {
+        self.try_submit_deadline(net, row, 0)
+    }
+
+    /// [`Engine::try_submit`] with a request deadline on the engine
+    /// clock (`deadline_ns`, 0 = none).  The deadline is enforced at
+    /// fire time: a request whose deadline lapsed before its batch
+    /// fired is ledgered `expired` and shed before any decode work is
+    /// spent on it (a `DeadlineExpired` flight-recorder event per
+    /// request).
+    pub fn try_submit_deadline(
+        &mut self,
+        net: &str,
+        row: usize,
+        deadline_ns: u64,
+    ) -> anyhow::Result<Admission> {
         let &s = self
             .placement
             .get(net)
             .ok_or_else(|| anyhow::anyhow!("engine: unknown network {net:?}"))?;
         let shard = &mut self.shards[s];
+        anyhow::ensure!(
+            !shard.is_quarantined(),
+            "engine: shard {s} is quarantined (Engine::revive_shard restores it)"
+        );
+        anyhow::ensure!(
+            !shard.net_quarantined(net),
+            "engine: {net:?} is quarantined after a code-stream integrity failure"
+        );
         let stream_rows = shard.net(net).expect("placement without hosted net").stream_rows();
         anyhow::ensure!(
             row < stream_rows,
             "engine: row {row} out of range for {net:?} ({stream_rows} stream rows)"
         );
-        Ok(shard.admit(net, row, self.now_ns, self.cfg.max_queue_depth))
+        Ok(shard.admit(net, row, self.now_ns, deadline_ns, self.cfg.max_queue_depth))
     }
 
     /// [`Engine::try_submit`] for callers that treat shedding as an
@@ -285,6 +325,20 @@ impl Engine {
                 self.cfg.max_queue_depth == 0
                     || self.shards[s].router.total_pending() < self.cfg.max_queue_depth
             }
+            None => false,
+        }
+    }
+
+    /// Whether submissions for `net` would be refused by a quarantine —
+    /// either its owning shard (a dispatch-time failure; see
+    /// [`Engine::revive_shard`]) or the net itself (a code-stream
+    /// integrity failure).  `false` for unknown nets (they fail
+    /// admission with their own error).  Front-ends check this before
+    /// parking a request so nothing waits forever on a shard that will
+    /// never serve it.
+    pub fn quarantined(&self, net: &str) -> bool {
+        match self.placement.get(net) {
+            Some(&s) => self.shards[s].is_quarantined() || self.shards[s].net_quarantined(net),
             None => false,
         }
     }
@@ -387,7 +441,7 @@ impl Engine {
     pub fn dispatch_round(&mut self, pool: Option<&ThreadPool>) -> anyhow::Result<usize> {
         let now = self.now_ns;
         let cfg = self.cfg.batcher;
-        match pool {
+        let total = match pool {
             Some(tp) if tp.threads() > 1 && self.shards.len() > 1 => {
                 let n = self.shards.len();
                 let mut results: Vec<anyhow::Result<usize>> = (0..n).map(|_| Ok(0)).collect();
@@ -402,21 +456,38 @@ impl Engine {
                         *out = shard.dispatch_one(&cfg, now, None);
                     }
                 })
-                .expect("engine shard worker panicked");
+                .map_err(|e| anyhow::anyhow!("engine shard fan-out failed: {e}"))?;
                 let mut total = 0;
                 for r in results {
-                    total += r?;
+                    match r {
+                        Ok(served) => total += served,
+                        // The failing shard already quarantined itself
+                        // and ledgered every lost request as `failed`
+                        // (conservation closes); the round keeps the
+                        // healthy shards serving.
+                        Err(e) => crate::log_debug!("engine", "dispatch failure absorbed: {e}"),
+                    }
                 }
-                Ok(total)
+                total
             }
             _ => {
                 let mut total = 0;
                 for shard in &mut self.shards {
-                    total += shard.dispatch_one(&cfg, now, pool)?;
+                    match shard.dispatch_one(&cfg, now, pool) {
+                        Ok(served) => total += served,
+                        Err(e) => crate::log_debug!("engine", "dispatch failure absorbed: {e}"),
+                    }
                 }
-                Ok(total)
+                total
             }
+        };
+        // Injected slow-ops stall the engine clock — deterministically,
+        // because the per-shard stalls are summed in shard order.
+        let stall: u64 = self.shards.iter_mut().map(|s| s.take_stall_ns()).sum();
+        if stall > 0 {
+            self.tick(stall);
         }
+        Ok(total)
     }
 
     /// Dispatch until every queue is empty, force-firing partial batches
@@ -424,6 +495,7 @@ impl Engine {
     /// `server::drain_all`).
     pub fn drain(&mut self, pool: Option<&ThreadPool>) -> anyhow::Result<u64> {
         let mut total = 0u64;
+        let mut stalled_rounds = 0u32;
         loop {
             let before = self.total_pending();
             if before == 0 {
@@ -433,7 +505,15 @@ impl Engine {
             let served = self.dispatch_round(pool)?;
             total += served as u64;
             if served == 0 && self.total_pending() == before {
-                anyhow::bail!("engine wedged with {before} pending requests");
+                // Injected shard wedges stall single rounds; only a
+                // sustained run of zero-progress rounds is a real wedge.
+                stalled_rounds += 1;
+                anyhow::ensure!(
+                    stalled_rounds < 64,
+                    "engine wedged with {before} pending requests"
+                );
+            } else {
+                stalled_rounds = 0;
             }
         }
         Ok(total)
@@ -451,21 +531,105 @@ impl Engine {
         let n = self.shards.len();
         let now = self.now_ns;
         let cfg = self.cfg.batcher;
+        let mut fired = None;
         for off in 0..n {
             let s = (self.fire_cursor + off) % n;
             if let Some(batch) = self.shards[s].next_batch(&cfg, now) {
                 self.fire_cursor = (s + 1) % n;
-                return Some(batch);
+                fired = Some(batch);
+                break;
             }
         }
-        None
+        // Injected slow-ops stall the engine clock here too, so the
+        // front-end fire path sees the same latency as the standalone
+        // plane.
+        let stall: u64 = self.shards.iter_mut().map(|s| s.take_stall_ns()).sum();
+        if stall > 0 {
+            self.tick(stall);
+        }
+        fired
     }
 
     /// Conservation counters `(accepted, dispatched, shed)` —
-    /// `accepted == dispatched + shed` once the plane is drained.
+    /// `accepted == dispatched + shed` once a *fault-free* plane is
+    /// drained.  Under deadlines or quarantines use [`Engine::totals`]:
+    /// the full identity is
+    /// `accepted == dispatched + shed + expired + failed`.
     pub fn counters(&self) -> (u64, u64, u64) {
         let t = self.totals();
         (t.accepted, t.served, t.shed)
+    }
+
+    /// Arm a deterministic fault plan: each shard gets an independent
+    /// fork (`plan.fork(shard index)`), exactly like the chunked
+    /// per-shard RNG streams — so firing schedules replay identically
+    /// across runs and thread counts.  The probes are compiled in only
+    /// under the `fault-inject` feature; without it the armed plan is
+    /// inert (gated by the `faults_overhead` bench row).
+    pub fn arm_faults(&mut self, plan: &FaultPlan) {
+        for (i, s) in self.shards.iter_mut().enumerate() {
+            s.faults = Some(plan.fork(i as u64));
+        }
+    }
+
+    /// Drop every shard's fault plan.
+    pub fn disarm_faults(&mut self) {
+        for s in &mut self.shards {
+            s.faults = None;
+        }
+    }
+
+    /// Front-end failure path: a dispatched batch could not be decoded.
+    /// Mirrors the standalone plane ([`Shard::dispatch_one`]): the
+    /// batch's requests move from `served` to `failed`, and — unless
+    /// the failure was a per-net integrity quarantine — the owning
+    /// shard is quarantined, its queued requests failed and counted.
+    /// Unknown nets are ignored.
+    pub fn fail_batch(&mut self, batch: &Batch) {
+        let Some(&s) = self.placement.get(batch.net.as_str()) else {
+            return;
+        };
+        let now = self.now_ns;
+        let sh = &mut self.shards[s];
+        let in_flight = sh.fail_batch(batch, now);
+        if sh.net_quarantined(&batch.net) {
+            return;
+        }
+        let drained = sh.quarantine(now);
+        sh.obs
+            .note_event(EventKind::Quarantined, &batch.net, s as u64, in_flight + drained);
+    }
+
+    /// Clear a shard's quarantine flag so it admits and fires again.
+    /// Its ledgers are untouched — everything failed while quarantined
+    /// stays ledgered `failed`, so conservation still closes after
+    /// revival.  Nets quarantined for integrity failures stay down
+    /// (only re-hosting fixes corrupt streams).
+    pub fn revive_shard(&mut self, shard: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            shard < self.shards.len(),
+            "engine: no shard {shard} (plane has {})",
+            self.shards.len()
+        );
+        self.shards[shard].revive();
+        Ok(())
+    }
+
+    /// Re-verify every hosted net's packed streams against the
+    /// hosting-time checksums ([`Shard::verify_hosted`]).  Mismatching
+    /// nets are quarantined (queued requests failed, `HostingError`
+    /// events) and the call errors naming them — corrupted packed bytes
+    /// are always caught at hosting or here, never served.
+    pub fn verify_hosted(&mut self) -> anyhow::Result<()> {
+        let now = self.now_ns;
+        let mut bad = Vec::new();
+        for s in &mut self.shards {
+            if let Err(e) = s.verify_hosted(now) {
+                bad.push(e.to_string());
+            }
+        }
+        anyhow::ensure!(bad.is_empty(), "engine: {}", bad.join("; "));
+        Ok(())
     }
 
     /// Aggregate decode-cache counters across shards.
@@ -484,6 +648,8 @@ impl Engine {
             t.accepted += s.stats.accepted;
             t.served += s.stats.served;
             t.shed += s.stats.shed;
+            t.expired += s.stats.expired;
+            t.failed += s.stats.failed;
             t.deferred += s.stats.deferred;
             t.peak_depth = t.peak_depth.max(s.stats.peak_depth);
             t.batches += s.stats.batches;
@@ -496,11 +662,15 @@ impl Engine {
 
     /// One coherent observability snapshot, merged across shards.  Its
     /// totals are *defined* to reconcile with the engine's conservation
-    /// identities — `accepted == dispatched + shed` (and per net via
-    /// the ledgers), `cache_hits + cache_misses == cache_lookups`,
-    /// `queue_ns.count() == dispatched` — and, because every stamp uses
-    /// the engine clock, serial and pooled runs produce *equal*
-    /// snapshots (property-tested in `prop_substrate`).
+    /// identities — `accepted == dispatched + shed + expired + failed`
+    /// (and per net via the ledgers),
+    /// `cache_hits + cache_misses == cache_lookups`, and — in
+    /// fault-free operation — `queue_ns.count() == dispatched` (a
+    /// failed batch keeps its fire-time spans, so under faults the span
+    /// count exceeds `dispatched` by the in-flight failures) — and,
+    /// because every stamp uses the engine clock, serial and pooled
+    /// runs produce *equal* snapshots (property-tested in
+    /// `prop_substrate`).
     pub fn metrics_snapshot(&self) -> MetricsSnapshot {
         let t = self.totals();
         let c = self.cache_stats();
@@ -510,6 +680,8 @@ impl Engine {
             accepted: t.accepted,
             dispatched: t.served,
             shed: t.shed,
+            expired: t.expired,
+            failed: t.failed,
             deferred: t.deferred,
             batches: t.batches,
             padded_rows: t.padded_rows,
@@ -529,6 +701,8 @@ impl Engine {
                 dst.accepted += l.accepted;
                 dst.served += l.served;
                 dst.shed += l.shed;
+                dst.expired += l.expired;
+                dst.failed += l.failed;
             }
             for (net, depth) in sh.router.depths() {
                 if depth > 0 {
@@ -952,6 +1126,105 @@ mod tests {
             device_batch: 1,
         };
         assert!(Engine::new(cfg(1, 0), vec![bad_stage]).is_err());
+    }
+
+    #[test]
+    fn deadlines_expire_at_fire_time_and_conserve() {
+        let mut rng = Rng::new(31);
+        let cb = test_cb(&mut rng);
+        let mut e = Engine::new(cfg(1, 0), vec![hosted("a", 8, 2, &cb, &mut rng)]).unwrap();
+        // Two requests with deadlines that lapse before the linger
+        // fires, one without, one with a generous deadline.
+        e.try_submit_deadline("a", 0, 50).unwrap();
+        e.try_submit_deadline("a", 1, 0).unwrap();
+        e.try_submit_deadline("a", 2, 60).unwrap();
+        e.try_submit_deadline("a", 3, 1_000_000).unwrap();
+        let served = e.drain(None).unwrap();
+        assert_eq!(served, 2, "lapsed deadlines are shed before decode");
+        let t = e.totals();
+        assert_eq!((t.accepted, t.served, t.expired, t.failed), (4, 2, 2, 0));
+        assert_eq!(t.accepted, t.served + t.shed + t.expired + t.failed, "conservation");
+        let ledger = e.shards()[0].stats.by_net["a"];
+        assert_eq!((ledger.served, ledger.expired), (2, 2), "per-net ledger");
+        // One DeadlineExpired event per lapsed request, payload = (row,
+        // deadline).
+        let expired_evs: Vec<_> = e
+            .trace_events()
+            .into_iter()
+            .filter(|(_, ev)| ev.kind == EventKind::DeadlineExpired)
+            .collect();
+        assert_eq!(expired_evs.len(), 2);
+        assert_eq!((expired_evs[0].1.a, expired_evs[0].1.b), (0, 50));
+        assert_eq!((expired_evs[1].1.a, expired_evs[1].1.b), (2, 60));
+        let s = e.metrics_snapshot();
+        assert_eq!((s.expired, s.failed), (2, 0));
+        assert_eq!(s.per_net["a"].expired, 2);
+    }
+
+    #[test]
+    fn failed_batch_quarantines_counts_and_revives() {
+        let mut rng = Rng::new(33);
+        let cb = test_cb(&mut rng);
+        let mut e = Engine::new(cfg(1, 4096), vec![hosted("a", 8, 2, &cb, &mut rng)]).unwrap();
+        for i in 0..6 {
+            e.submit("a", i).unwrap();
+        }
+        // Fire one batch (4 of 6), then report its decode as failed —
+        // the front-end failure path.
+        let batch = {
+            e.tick(1_000);
+            e.next_batch().expect("full queue fires")
+        };
+        assert_eq!(batch.requests.len(), 4);
+        e.fail_batch(&batch);
+        // The in-flight 4 and the queued 2 are all ledgered failed; the
+        // shard is quarantined and refuses admissions and fires.
+        let t = e.totals();
+        assert_eq!((t.accepted, t.served, t.failed), (6, 0, 6));
+        assert_eq!(t.accepted, t.served + t.shed + t.expired + t.failed, "conservation");
+        assert_eq!(e.total_pending(), 0, "quarantine drained the queues");
+        assert!(e.shards()[0].is_quarantined());
+        assert!(e.try_submit("a", 0).is_err(), "quarantined shard refuses admission");
+        assert!(e.next_batch().is_none(), "quarantined shard never fires");
+        assert!(
+            e.stream_batch("a", &[0], None).is_err(),
+            "quarantined shard never serves a row"
+        );
+        // The loss is explainable: per-request failures + the
+        // quarantine marker.
+        let kinds: Vec<EventKind> = e.trace_events().iter().map(|(_, ev)| ev.kind).collect();
+        assert_eq!(kinds.iter().filter(|k| **k == EventKind::RequestFailed).count(), 6);
+        assert_eq!(kinds.iter().filter(|k| **k == EventKind::Quarantined).count(), 1);
+        let q = e
+            .trace_events()
+            .into_iter()
+            .find(|(_, ev)| ev.kind == EventKind::Quarantined)
+            .unwrap()
+            .1;
+        assert_eq!((q.a, q.b), (0, 6), "shard 0, 6 requests failed with it");
+        // Revival restores service without touching the ledgers.
+        assert!(e.revive_shard(7).is_err());
+        e.revive_shard(0).unwrap();
+        e.submit("a", 1).unwrap();
+        e.drain(None).unwrap();
+        let t = e.totals();
+        assert_eq!((t.accepted, t.served, t.failed), (7, 1, 6));
+        assert_eq!(t.accepted, t.served + t.shed + t.expired + t.failed);
+    }
+
+    #[test]
+    fn verify_hosted_passes_on_clean_streams() {
+        let mut rng = Rng::new(34);
+        let cb = test_cb(&mut rng);
+        let nets: Vec<HostedNet> = (0..3)
+            .map(|i| hosted(&format!("n{i}"), 6, 2, &cb, &mut rng))
+            .collect();
+        let mut e = Engine::new(cfg(2, 0), nets).unwrap();
+        e.verify_hosted().expect("unmodified streams re-verify");
+        // Hosting-time checksums are exposed per net and match a fresh
+        // recompute.
+        let sums = e.shards()[0].hosted_checksums("n0").unwrap().to_vec();
+        assert_eq!(sums, e.hosted("n0").unwrap().codes.checksums());
     }
 
     #[test]

@@ -22,6 +22,18 @@ pub struct Request {
     pub row: usize,
     /// Arrival timestamp (ns, monotonic) for latency accounting.
     pub arrived_ns: u64,
+    /// Optional deadline on the front-end clock (ns, same monotonic
+    /// clock as `arrived_ns`); `0` means none.  Checked at fire time:
+    /// a request whose deadline lapsed is counted `expired` and shed
+    /// before decode instead of burning a batch slot.
+    pub deadline_ns: u64,
+}
+
+impl Request {
+    /// Whether this request's deadline has lapsed at `now_ns`.
+    pub fn expired(&self, now_ns: u64) -> bool {
+        self.deadline_ns != 0 && now_ns > self.deadline_ns
+    }
 }
 
 /// Router over the hosted networks.
@@ -53,6 +65,19 @@ impl Router {
 
     /// Enqueue a request; returns its id, or an error for unknown nets.
     pub fn submit(&mut self, net: &str, row: usize, now_ns: u64) -> anyhow::Result<u64> {
+        self.submit_with_deadline(net, row, now_ns, 0)
+    }
+
+    /// [`Router::submit`] with an explicit deadline on the front-end
+    /// clock (`0` = none).  The deadline rides the queued [`Request`]
+    /// and is enforced at fire time by the shard.
+    pub fn submit_with_deadline(
+        &mut self,
+        net: &str,
+        row: usize,
+        now_ns: u64,
+        deadline_ns: u64,
+    ) -> anyhow::Result<u64> {
         let q = self
             .queues
             .iter_mut()
@@ -66,6 +91,7 @@ impl Router {
             net: net.to_string(),
             row,
             arrived_ns: now_ns,
+            deadline_ns,
         });
         Ok(id)
     }
@@ -137,6 +163,56 @@ impl Router {
             Some(i) => self.drain(i, max),
             None => Vec::new(),
         }
+    }
+
+    /// Remove every request in `net`'s queue whose deadline lapsed at
+    /// `now_ns`, preserving the order of the survivors.  The removed
+    /// requests do **not** count as dispatched — the caller ledgers
+    /// them `expired` (the fire path sheds them before decode).
+    pub fn expire_net(&mut self, net: &str, now_ns: u64) -> Vec<Request> {
+        let Some((_, q)) = self.queues.iter_mut().find(|(n, _)| n == net) else {
+            return Vec::new();
+        };
+        let mut out = Vec::new();
+        q.retain(|r| {
+            if r.expired(now_ns) {
+                out.push(r.clone());
+                false
+            } else {
+                true
+            }
+        });
+        out
+    }
+
+    /// Drain every queue wholesale (queue-declaration order).  Nothing
+    /// here counts as dispatched — the caller ledgers the requests
+    /// (`failed`, on shard quarantine) so conservation still closes.
+    pub fn take_all(&mut self) -> Vec<Request> {
+        let mut out = Vec::new();
+        for (_, q) in &mut self.queues {
+            out.extend(q.drain(..));
+        }
+        out
+    }
+
+    /// Drain one net's queue wholesale without counting dispatched —
+    /// the net-quarantine drain (the caller ledgers the requests
+    /// `failed`).  Unknown nets drain nothing.
+    pub fn take_net(&mut self, net: &str) -> Vec<Request> {
+        match self.queues.iter_mut().find(|(n, _)| n == net) {
+            Some((_, q)) => q.drain(..).collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Roll the dispatched counter back by `n`: a drained batch failed
+    /// before serving (quarantined dispatch), so its requests move from
+    /// `dispatched` to the caller's `failed` ledger — conservation
+    /// (`accepted == dispatched + shed + expired + failed`) still
+    /// closes.
+    pub fn undispatch(&mut self, n: u64) {
+        self.dispatched = self.dispatched.saturating_sub(n);
     }
 
     /// First queue (in declaration order) whose depth or linger says it
@@ -229,6 +305,59 @@ mod tests {
     fn empty_router_picks_none() {
         let mut r = Router::new(&["a"]);
         assert!(r.pick().is_none());
+    }
+
+    #[test]
+    fn expire_net_removes_only_lapsed_and_preserves_order() {
+        let mut r = Router::new(&["a"]);
+        r.submit_with_deadline("a", 0, 0, 50).unwrap(); // lapses at 51
+        r.submit("a", 1, 0).unwrap(); // no deadline, never expires
+        r.submit_with_deadline("a", 2, 0, 200).unwrap();
+        r.submit_with_deadline("a", 3, 0, 40).unwrap();
+        let expired = r.expire_net("a", 100);
+        assert_eq!(
+            expired.iter().map(|x| x.row).collect::<Vec<_>>(),
+            vec![0, 3],
+            "only lapsed deadlines removed, queue order"
+        );
+        assert_eq!(r.depth("a"), 2, "survivors stay queued");
+        let (acc, disp) = r.counters();
+        assert_eq!((acc, disp), (4, 0), "expiry never counts as dispatched");
+        // Deadline exactly == now is not yet expired (strict >).
+        assert!(r.expire_net("a", 200).is_empty());
+        assert_eq!(r.expire_net("a", 201).len(), 1);
+        assert!(r.expire_net("ghost", 1000).is_empty());
+    }
+
+    #[test]
+    fn take_all_empties_without_counting_dispatched() {
+        let mut r = Router::new(&["a", "b"]);
+        for i in 0..3 {
+            r.submit("a", i, 0).unwrap();
+        }
+        r.submit("b", 9, 0).unwrap();
+        let taken = r.take_all();
+        assert_eq!(taken.len(), 4);
+        assert_eq!(r.total_pending(), 0);
+        let (acc, disp) = r.counters();
+        assert_eq!((acc, disp), (4, 0), "quarantine drain bypasses dispatched");
+    }
+
+    #[test]
+    fn take_net_and_undispatch_keep_conservation_closable() {
+        let mut r = Router::new(&["a", "b"]);
+        r.submit("a", 0, 0).unwrap();
+        r.submit("a", 1, 0).unwrap();
+        r.submit("b", 2, 0).unwrap();
+        assert_eq!(r.take_net("a").len(), 2, "net quarantine drains its queue");
+        assert_eq!(r.depth("b"), 1, "other queues untouched");
+        assert!(r.take_net("ghost").is_empty());
+        assert_eq!(r.drain_net("b", 4).len(), 1);
+        assert_eq!(r.counters(), (3, 1));
+        r.undispatch(1);
+        assert_eq!(r.counters(), (3, 0), "failed batch rolls dispatched back");
+        r.undispatch(5);
+        assert_eq!(r.counters().1, 0, "rollback saturates at zero");
     }
 
     #[test]

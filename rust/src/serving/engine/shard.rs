@@ -5,10 +5,11 @@
 //! depends only on its own queues and the virtual clock, results and
 //! cache state are bit-identical at every thread count.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::Arc;
 
 use crate::serving::batcher::{Batch, BatcherConfig};
+use crate::serving::faults::{FaultPlan, FaultSite};
 use crate::serving::obs::{EventKind, ObsConfig, ShardObs};
 use crate::util::stats::Summary;
 use crate::util::threadpool::{SyncPtr, ThreadPool};
@@ -60,14 +61,21 @@ pub struct RowServe {
 
 /// Per-net conservation ledger: every validated submission lands in
 /// `accepted`, and then in exactly one of `served` (dispatched through a
-/// batch) or `shed` (rejected at admission) — so after a drain
-/// `accepted == served + shed` holds per net, per shard, and engine-wide
-/// (property-tested in `rust/tests/prop_substrate.rs`).
+/// batch), `shed` (rejected at admission), `expired` (deadline lapsed
+/// before its batch fired), or `failed` (lost to a quarantine) — so
+/// after a drain `accepted == served + shed + expired + failed` holds
+/// per net, per shard, and engine-wide (property-tested in
+/// `rust/tests/prop_substrate.rs`).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct NetLedger {
     pub accepted: u64,
     pub served: u64,
     pub shed: u64,
+    /// Requests whose deadline lapsed before their batch fired (shed at
+    /// fire time, pre-decode).
+    pub expired: u64,
+    /// Requests failed with a structured error by a quarantine.
+    pub failed: u64,
 }
 
 /// Per-shard serving statistics.
@@ -78,6 +86,13 @@ pub struct ShardStats {
     pub served: u64,
     /// Submissions rejected at admission (queue depth at budget).
     pub shed: u64,
+    /// Requests whose deadline lapsed before their batch fired — shed
+    /// at fire time, before any decode work was spent on them.
+    pub expired: u64,
+    /// Requests failed with a structured error: their dispatch
+    /// panicked (shard quarantine) or their net failed integrity
+    /// verification (net quarantine).
+    pub failed: u64,
     /// Backpressure events: a front-end held a request back because the
     /// shard would have shed it (see `Engine::note_deferral`).
     pub deferred: u64,
@@ -116,6 +131,30 @@ pub struct Shard {
     /// the flight recorder — plain fields, merged only at snapshot time
     /// (`Engine::metrics_snapshot`).
     pub obs: ShardObs,
+    /// True once a dispatch failure quarantined this shard: its queues
+    /// were drained into `failed`, it refuses admissions and never
+    /// fires, until `Engine::revive_shard` clears the flag.
+    quarantined: bool,
+    /// Hosted nets whose packed streams failed integrity verification
+    /// ([`Shard::verify_hosted`] or an injected
+    /// [`FaultSite::CorruptWindow`]): quarantined individually — they
+    /// refuse admissions and never serve a row — without taking the
+    /// shard's healthy nets down with them.
+    quarantined_nets: BTreeSet<String>,
+    /// Hosting-time FNV-1a checksums of every net's packed streams (one
+    /// per residual stage, `StagedCodes::checksums`) — the reference
+    /// [`Shard::verify_hosted`] re-verifies against on demand.
+    code_sums: BTreeMap<String, Vec<u64>>,
+    /// Armed fault schedule (`None` = no faults).  Only consulted when
+    /// the `fault-inject` feature is compiled in — without it every
+    /// probe is a constant `false` (gated by the `faults_overhead`
+    /// bench row).
+    pub faults: Option<FaultPlan>,
+    /// Virtual-clock stall accumulated by injected
+    /// [`FaultSite::SlowOp`] firings; the engine drains it with
+    /// [`Shard::take_stall_ns`] after each dispatch and advances its
+    /// clock, so slow-op faults surface as real queue latency.
+    stall_ns: u64,
 }
 
 impl Shard {
@@ -127,6 +166,7 @@ impl Shard {
     ) -> anyhow::Result<Self> {
         anyhow::ensure!(!nets.is_empty(), "shard {id} hosts no networks");
         let mut utilization: BTreeMap<String, Vec<Utilization>> = BTreeMap::new();
+        let mut code_sums: BTreeMap<String, Vec<u64>> = BTreeMap::new();
         for n in &nets {
             anyhow::ensure!(n.codes_per_row > 0, "{:?}: codes_per_row must be positive", n.name);
             anyhow::ensure!(n.device_batch > 0, "{:?}: device_batch must be positive", n.name);
@@ -167,6 +207,9 @@ impl Shard {
                 net_util.push(Utilization::from_counts(&counts));
             }
             utilization.insert(n.name.clone(), net_util);
+            // Hosting-time integrity reference: the per-stage stream
+            // checksums `verify_hosted` re-verifies against on demand.
+            code_sums.insert(n.name.clone(), n.codes.checksums());
         }
         let names: Vec<&str> = nets.iter().map(|n| n.name.as_str()).collect();
         let router = Router::new(&names);
@@ -187,6 +230,11 @@ impl Shard {
                 ..ShardStats::default()
             },
             obs: ShardObs::new(obs),
+            quarantined: false,
+            quarantined_nets: BTreeSet::new(),
+            code_sums,
+            faults: None,
+            stall_ns: 0,
         })
     }
 
@@ -209,17 +257,78 @@ impl Shard {
         self.nets.keys().map(|s| s.as_str())
     }
 
+    /// Whether a dispatch failure quarantined this shard.
+    pub fn is_quarantined(&self) -> bool {
+        self.quarantined
+    }
+
+    /// Whether `net` individually failed integrity verification.
+    pub fn net_quarantined(&self, net: &str) -> bool {
+        self.quarantined_nets.contains(net)
+    }
+
+    /// Hosting-time per-stage checksums of a hosted net's packed
+    /// streams (None if unknown).
+    pub fn hosted_checksums(&self, net: &str) -> Option<&[u64]> {
+        self.code_sums.get(net).map(|v| v.as_slice())
+    }
+
+    /// Clear the shard-level quarantine flag (`Engine::revive_shard`).
+    /// Nets quarantined for integrity failures stay quarantined — their
+    /// streams are still corrupt; only re-hosting fixes that.
+    pub fn revive(&mut self) {
+        self.quarantined = false;
+    }
+
+    /// Drain the virtual-clock stall accumulated by injected slow-op
+    /// faults since the last call; the engine advances its clock by the
+    /// returned amount.
+    pub fn take_stall_ns(&mut self) -> u64 {
+        std::mem::take(&mut self.stall_ns)
+    }
+
+    /// Consult the armed fault plan at `site`.  Compiled to a constant
+    /// `false` without the `fault-inject` feature, so the default build
+    /// never touches the plan on the hot path.
+    #[cfg(feature = "fault-inject")]
+    fn probe(&mut self, site: FaultSite) -> bool {
+        match self.faults.as_mut() {
+            Some(p) => p.should_fire(site),
+            None => false,
+        }
+    }
+
+    #[cfg(not(feature = "fault-inject"))]
+    fn probe(&mut self, _site: FaultSite) -> bool {
+        false
+    }
+
+    /// Record an injected firing on the flight recorder (`a` = site
+    /// discriminant, `b` = cumulative firings at that site).
+    fn note_fault(&mut self, site: FaultSite, net: &str, now_ns: u64) {
+        let fired = self.faults.as_ref().map(|p| p.fired(site)).unwrap_or(0);
+        self.obs.touch(now_ns);
+        self.obs
+            .note_event(EventKind::FaultInjected, net, site.index() as u64, fired);
+    }
+
     /// Admission control: offer a (validated) request to this shard at
     /// `now_ns` under a queue-depth budget (`0` = unbounded).  Every
     /// offer counts as `accepted`; a full queue sheds the request (typed
     /// [`Admission::Rejected`], never enqueued — so no batch, and no
     /// padded row, can ever carry it to a decode or `infer_hard` run),
     /// otherwise it is enqueued under a fresh shard-local id.
+    /// `deadline_ns` (0 = none) rides the queued request and is enforced
+    /// at fire time: a lapsed request is ledgered `expired` and shed
+    /// before decode.  The caller (`Engine::try_submit`) rejects
+    /// submissions to quarantined shards/nets *before* this — those are
+    /// errors, never accepted, so conservation is untouched.
     pub fn admit(
         &mut self,
         net: &str,
         row: usize,
         now_ns: u64,
+        deadline_ns: u64,
         max_queue_depth: usize,
     ) -> Admission {
         let depth = self.router.total_pending();
@@ -241,7 +350,7 @@ impl Shard {
         st.peak_depth = st.peak_depth.max(depth + 1);
         let id = self
             .router
-            .submit(net, row, now_ns)
+            .submit_with_deadline(net, row, now_ns, deadline_ns)
             .expect("admit called for a net this shard hosts");
         Admission::Accepted { id }
     }
@@ -254,32 +363,70 @@ impl Shard {
     /// through this shard's cache, the front-ends stream it and then run
     /// the `infer_hard` artifact — one shared fire path either way.
     pub fn next_batch(&mut self, cfg: &BatcherConfig, now_ns: u64) -> Option<Batch> {
-        let name = self.router.next_fireable(cfg, now_ns)?.to_string();
-        let device_batch = self
-            .nets
-            .get(&name)
-            .expect("router queue without hosted net")
-            .1
-            .device_batch;
-        // Never drain more than one device batch can carry — leftovers
-        // stay queued instead of being dropped.
-        let reqs = self.router.drain_net(&name, cfg.max_batch.min(device_batch));
-        let batch = Batch::form(&name, reqs, device_batch);
-        self.obs.touch(now_ns);
-        let st = &mut self.stats;
-        st.served += batch.requests.len() as u64;
-        st.batches += 1;
-        st.padded_rows += batch.padded as u64;
-        st.by_net.entry(name).or_default().served += batch.requests.len() as u64;
-        for r in &batch.requests {
-            // One admit→fire span sample per dispatched request, on the
-            // engine clock — so `queue_ns.count() == dispatched` is part
-            // of the snapshot reconciliation contract.
-            let wait = now_ns.saturating_sub(r.arrived_ns);
-            st.latency_ns.push(wait as f64);
-            self.obs.note_queue_wait(&batch.net, wait);
+        // A quarantined shard never fires — and never serves a row —
+        // until `Engine::revive_shard` clears it.
+        if self.quarantined {
+            return None;
         }
-        Some(batch)
+        if self.probe(FaultSite::ShardWedge) {
+            // Transient stall: refuse to fire this round.
+            self.note_fault(FaultSite::ShardWedge, "", now_ns);
+            return None;
+        }
+        loop {
+            let name = self.router.next_fireable(cfg, now_ns)?.to_string();
+            // Deadline check at fire time: lapsed requests are ledgered
+            // `expired` and shed *before* any decode work is spent on
+            // them — they never occupy a batch slot.
+            let lapsed = self.router.expire_net(&name, now_ns);
+            if !lapsed.is_empty() {
+                self.obs.touch(now_ns);
+                let st = &mut self.stats;
+                st.expired += lapsed.len() as u64;
+                st.by_net.entry(name.clone()).or_default().expired += lapsed.len() as u64;
+                for r in &lapsed {
+                    self.obs
+                        .note_event(EventKind::DeadlineExpired, &name, r.row as u64, r.deadline_ns);
+                }
+                if self.router.depth(&name) == 0 {
+                    // Expiry emptied the selected queue — rescan.
+                    continue;
+                }
+            }
+            if self.probe(FaultSite::SlowOp) {
+                // The fire still happens — slowly.  The stall surfaces on
+                // the engine clock (`take_stall_ns`) as real latency.
+                self.stall_ns += self.faults.as_ref().map(|p| p.slow_ns).unwrap_or(0);
+                self.note_fault(FaultSite::SlowOp, &name, now_ns);
+            }
+            let device_batch = self
+                .nets
+                .get(&name)
+                .expect("router queue without hosted net")
+                .1
+                .device_batch;
+            // Never drain more than one device batch can carry —
+            // leftovers stay queued instead of being dropped.
+            let reqs = self.router.drain_net(&name, cfg.max_batch.min(device_batch));
+            let batch = Batch::form(&name, reqs, device_batch);
+            self.obs.touch(now_ns);
+            let st = &mut self.stats;
+            st.served += batch.requests.len() as u64;
+            st.batches += 1;
+            st.padded_rows += batch.padded as u64;
+            st.by_net.entry(name).or_default().served += batch.requests.len() as u64;
+            for r in &batch.requests {
+                // One admit→fire span sample per dispatched request, on
+                // the engine clock — so `queue_ns.count() == dispatched`
+                // is part of the snapshot reconciliation contract in
+                // fault-free operation (a failed batch keeps its spans;
+                // see `Shard::fail_batch`).
+                let wait = now_ns.saturating_sub(r.arrived_ns);
+                st.latency_ns.push(wait as f64);
+                self.obs.note_queue_wait(&batch.net, wait);
+            }
+            return Some(batch);
+        }
     }
 
     /// Cache-aware streaming decode of `rows` of `net` into `dst`
@@ -293,11 +440,29 @@ impl Shard {
         dst: &mut [f32],
         pool: Option<&ThreadPool>,
     ) -> anyhow::Result<RowServe> {
+        self.ensure_serving(net)?;
         let (net_id, n) = self
             .nets
             .get(net)
             .ok_or_else(|| anyhow::anyhow!("shard {}: unknown network {net:?}", self.id))?;
         serve_rows_into(n, *net_id, &mut self.cache, rows, dst, pool)
+    }
+
+    /// The never-serves-a-row guard every decode entry point shares: a
+    /// quarantined shard or net refuses with a structured error instead
+    /// of serving (possibly corrupt) rows.
+    fn ensure_serving(&self, net: &str) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.quarantined,
+            "shard {}: quarantined after a dispatch failure (Engine::revive_shard restores it)",
+            self.id
+        );
+        anyhow::ensure!(
+            !self.quarantined_nets.contains(net),
+            "shard {}: {net:?} is quarantined after a code-stream integrity failure",
+            self.id
+        );
+        Ok(())
     }
 
     /// Cache-aware streaming decode of a dispatched batch's weight rows
@@ -312,6 +477,32 @@ impl Shard {
         rows: &[usize],
         pool: Option<&ThreadPool>,
     ) -> anyhow::Result<RowServe> {
+        self.ensure_serving(net)?;
+        if self.probe(FaultSite::CorruptWindow) {
+            // An injected integrity failure: exactly what a real
+            // checksum mismatch does — quarantine the net (hosting-error
+            // event) instead of serving garbage, and fail the batch.
+            self.note_fault(FaultSite::CorruptWindow, net, 0);
+            self.quarantine_net(net, 0, 0);
+            anyhow::bail!(
+                "shard {}: {net:?} code stream failed integrity verification",
+                self.id
+            );
+        }
+        if self.probe(FaultSite::DecodePanic) {
+            self.note_fault(FaultSite::DecodePanic, net, 0);
+            // The fire decision is taken here, *before* the parallel
+            // section, so serial and pooled runs fail identically.  With
+            // a real pool the panic rides a worker to exercise the
+            // ThreadPool recovery path end to end.
+            if let Some(tp) = pool {
+                if tp.threads() > 1 {
+                    let r = tp.parallel_for(1, 1, |_, _| panic!("injected decode panic"));
+                    debug_assert!(r.is_err(), "pool must surface the injected panic");
+                }
+            }
+            anyhow::bail!("shard {}: decode worker panicked serving {net:?}", self.id);
+        }
         let (net_id, n) = self
             .nets
             .get(net)
@@ -340,6 +531,15 @@ impl Shard {
     /// Fire at most one batch if any hosted queue should; returns the
     /// number of real requests served (0 if nothing fired).  The decode
     /// streams through the cache into the shard's staging buffer.
+    ///
+    /// Failure handling: a batch whose decode fails is moved from
+    /// `served` to `failed` ([`Shard::fail_batch`]), and — unless the
+    /// failure was a per-net integrity quarantine — the whole shard is
+    /// quarantined ([`Shard::quarantine`]): its remaining queued
+    /// requests are failed with a structured error and counted, so the
+    /// conservation identity
+    /// `accepted == dispatched + shed + expired + failed` closes even
+    /// through the failure.
     pub fn dispatch_one(
         &mut self,
         cfg: &BatcherConfig,
@@ -351,8 +551,147 @@ impl Shard {
         };
         // Submitted rows were validated < stream_rows, so the cyclic
         // mapping inside stream_batch is the identity here.
-        self.stream_batch(&batch.net, &batch.rows, pool)?;
-        Ok(batch.requests.len())
+        match self.stream_batch(&batch.net, &batch.rows, pool) {
+            Ok(_) => Ok(batch.requests.len()),
+            Err(err) => {
+                let in_flight = self.fail_batch(&batch, now_ns);
+                if self.net_quarantined(&batch.net) {
+                    // Integrity failure: only the net is down (the
+                    // HostingError event was already recorded); the
+                    // shard keeps serving its healthy nets.
+                    return Err(err);
+                }
+                let drained = self.quarantine(now_ns);
+                self.obs.note_event(
+                    EventKind::Quarantined,
+                    &batch.net,
+                    self.id as u64,
+                    in_flight + drained,
+                );
+                Err(err)
+            }
+        }
+    }
+
+    /// A dispatched batch failed before serving: roll its requests from
+    /// `served` into `failed` (and the router's dispatched counter back)
+    /// with one `RequestFailed` event each.  Returns how many.  Their
+    /// fire-time latency spans are retained — `queue_ns.count() ==
+    /// dispatched + failed-in-flight` under faults.
+    pub fn fail_batch(&mut self, batch: &Batch, now_ns: u64) -> u64 {
+        let n = batch.requests.len() as u64;
+        self.obs.touch(now_ns);
+        let st = &mut self.stats;
+        st.served = st.served.saturating_sub(n);
+        st.failed += n;
+        let ledger = st.by_net.entry(batch.net.clone()).or_default();
+        ledger.served = ledger.served.saturating_sub(n);
+        ledger.failed += n;
+        self.router.undispatch(n);
+        for r in &batch.requests {
+            self.obs
+                .note_event(EventKind::RequestFailed, &batch.net, r.row as u64, self.id as u64);
+        }
+        n
+    }
+
+    /// Enter quarantine: stop admitting and firing, and fail every
+    /// queued request with a structured error (counted per net, one
+    /// `RequestFailed` event each).  Returns how many were failed.
+    /// Idempotent; [`Shard::revive`] / `Engine::revive_shard` restores
+    /// service.
+    pub fn quarantine(&mut self, now_ns: u64) -> u64 {
+        if self.quarantined {
+            return 0;
+        }
+        self.quarantined = true;
+        self.obs.touch(now_ns);
+        let dropped = self.router.take_all();
+        for r in &dropped {
+            let st = &mut self.stats;
+            st.failed += 1;
+            st.by_net.entry(r.net.clone()).or_default().failed += 1;
+            self.obs
+                .note_event(EventKind::RequestFailed, &r.net, r.row as u64, self.id as u64);
+        }
+        dropped.len() as u64
+    }
+
+    /// Quarantine one net after a code-stream integrity failure: fail
+    /// its queued requests (counted, one `RequestFailed` event each) and
+    /// record a `HostingError` event (`a` = first mismatching stage,
+    /// `b` = requests failed).  The shard's other nets keep serving.
+    /// Idempotent per net; returns how many requests were failed.
+    pub fn quarantine_net(&mut self, net: &str, now_ns: u64, stage: u64) -> u64 {
+        if !self.quarantined_nets.insert(net.to_string()) {
+            return 0;
+        }
+        self.obs.touch(now_ns);
+        let dropped = self.router.take_net(net);
+        for r in &dropped {
+            let st = &mut self.stats;
+            st.failed += 1;
+            st.by_net.entry(net.to_string()).or_default().failed += 1;
+            self.obs
+                .note_event(EventKind::RequestFailed, net, r.row as u64, self.id as u64);
+        }
+        self.obs
+            .note_event(EventKind::HostingError, net, stage, dropped.len() as u64);
+        dropped.len() as u64
+    }
+
+    /// Re-verify every hosted net's packed streams against the
+    /// hosting-time checksums.  A mismatching net is quarantined (its
+    /// queued requests failed, `HostingError` event) and the call
+    /// errors naming every bad net — corrupted packed bytes are always
+    /// caught here or at hosting, never served.
+    pub fn verify_hosted(&mut self, now_ns: u64) -> anyhow::Result<()> {
+        let names: Vec<String> = self.nets.keys().cloned().collect();
+        let mut bad: Vec<String> = Vec::new();
+        for name in names {
+            if self.quarantined_nets.contains(&name) {
+                continue;
+            }
+            let expected = self.code_sums.get(&name).cloned().unwrap_or_default();
+            let verdict = self.nets[&name].1.codes.verify_checksums(&expected);
+            if let Err(e) = verdict {
+                let got = self.nets[&name].1.codes.checksums();
+                let stage = got
+                    .iter()
+                    .zip(&expected)
+                    .position(|(g, w)| g != w)
+                    .unwrap_or(0);
+                self.quarantine_net(&name, now_ns, stage as u64);
+                bad.push(format!("{name:?}: {e}"));
+            }
+        }
+        anyhow::ensure!(
+            bad.is_empty(),
+            "shard {}: integrity failure: {}",
+            self.id,
+            bad.join("; ")
+        );
+        Ok(())
+    }
+
+    /// Chaos hook (`fault-inject` builds only): flip one bit of a
+    /// hosted net's packed stage bytes so [`Shard::verify_hosted`] has
+    /// real corruption to catch.  Returns false for unknown
+    /// nets/stages/offsets.
+    #[cfg(feature = "fault-inject")]
+    pub fn corrupt_net_byte(&mut self, net: &str, stage: usize, byte: usize) -> bool {
+        match self.nets.get_mut(net) {
+            Some((_, n)) if stage < n.codes.stages() => {
+                let p = n.codes.stage_mut(stage);
+                if byte < p.data.len() {
+                    p.data[byte] ^= 1;
+                    true
+                } else {
+                    false
+                }
+            }
+            _ => false,
+        }
     }
 }
 
@@ -424,6 +763,9 @@ fn serve_rows_into(
     match pool {
         Some(tp) if tp.threads() > 1 && primary.len() > 1 => {
             let ptr = SyncPtr::new(dst);
+            // A panicking decode worker is a *failure*, not an abort:
+            // the pool recovers (util::threadpool) and the error
+            // propagates so the dispatch path can quarantine the shard.
             tp.parallel_for(primary.len(), 1, |start, end| {
                 for m in start..end {
                     let i = primary[m];
@@ -433,7 +775,9 @@ fn serve_rows_into(
                     kernel(i, out);
                 }
             })
-            .expect("shard decode worker panicked");
+            .map_err(|e| {
+                anyhow::anyhow!("shard decode pool failed serving {:?}: {e}", net.name)
+            })?;
         }
         _ => {
             for &i in &primary {

@@ -123,7 +123,7 @@ pub fn decode_rows_into(
                     kernel(i, out);
                 }
             })
-            .expect("streaming decode worker panicked");
+            .map_err(|e| anyhow::anyhow!("streaming decode pool failed: {e}"))?;
         }
         _ => {
             for i in 0..rows.len() {
@@ -148,6 +148,7 @@ mod tests {
             net: "a".into(),
             row,
             arrived_ns: 0,
+            deadline_ns: 0,
         }
     }
 

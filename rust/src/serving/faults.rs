@@ -1,0 +1,292 @@
+//! Deterministic fault injection for the serving plane.
+//!
+//! A [`FaultPlan`] is a seeded, replayable schedule of failures: every
+//! fire decision is a pure function of `(seed, site, probe index)` —
+//! never of wall time or thread interleaving — so the same plan drives
+//! bit-identical failure sequences serial vs pooled, and the same seed
+//! reproduces the same ledgers and flight-recorder events across runs.
+//!
+//! The plan is armed on an [`crate::serving::Engine`] (which forks one
+//! deterministic sub-plan per shard, exactly like the chunked RNG
+//! streams in the construction paths) and consulted at the existing
+//! choke points:
+//!
+//! * [`FaultSite::DecodePanic`]   — a dispatch's decode job panics on
+//!   the worker pool (exercising ThreadPool recovery + shard
+//!   quarantine);
+//! * [`FaultSite::SlowOp`]        — the fire path stalls the virtual
+//!   clock by [`FaultPlan::slow_ns`] before forming the batch;
+//! * [`FaultSite::CorruptWindow`] — a hosted net's packed stream is
+//!   treated as failing its integrity check (the checksum path), so the
+//!   batch fails and the net is quarantined instead of serving garbage;
+//! * [`FaultSite::ShardWedge`]    — the shard refuses to fire this
+//!   round (a transient stall);
+//! * [`FaultSite::SocketDrop`]    — the TCP reader (or a client helper
+//!   under test) drops the connection mid-request.
+//!
+//! The probes live behind the `fault-inject` cargo feature; without it
+//! they compile to a constant `false` and the plan is never consulted
+//! (the `faults_overhead` bench row gates that this stays free).
+
+use crate::util::rng::Rng;
+
+/// Where a fault can fire.  The discriminant doubles as the `a` payload
+/// of the [`crate::serving::EventKind::FaultInjected`] flight-recorder
+/// event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Decode job panics on the worker pool during dispatch.
+    DecodePanic,
+    /// Fire path stalls the virtual clock before forming a batch.
+    SlowOp,
+    /// A packed code window fails its integrity check.
+    CorruptWindow,
+    /// The shard refuses to fire this round.
+    ShardWedge,
+    /// A TCP connection drops mid-request.
+    SocketDrop,
+}
+
+/// Every site, in discriminant order (index == [`FaultSite::index`]).
+pub const ALL_SITES: [FaultSite; 5] = [
+    FaultSite::DecodePanic,
+    FaultSite::SlowOp,
+    FaultSite::CorruptWindow,
+    FaultSite::ShardWedge,
+    FaultSite::SocketDrop,
+];
+
+impl FaultSite {
+    /// Stable index (and event payload / wire discriminant).
+    pub fn index(&self) -> usize {
+        match self {
+            FaultSite::DecodePanic => 0,
+            FaultSite::SlowOp => 1,
+            FaultSite::CorruptWindow => 2,
+            FaultSite::ShardWedge => 3,
+            FaultSite::SocketDrop => 4,
+        }
+    }
+
+    /// Stable wire name (the fault-plan format in README and the
+    /// `/trace` explanation of `fault_injected` events).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultSite::DecodePanic => "decode_panic",
+            FaultSite::SlowOp => "slow_op",
+            FaultSite::CorruptWindow => "corrupt_window",
+            FaultSite::ShardWedge => "shard_wedge",
+            FaultSite::SocketDrop => "socket_drop",
+        }
+    }
+}
+
+/// A seeded, deterministic fault schedule.
+///
+/// Each site carries a firing rate in permille (0 = never, 1000 =
+/// every probe).  The decision for the `i`-th probe of a site is a pure
+/// function of `(seed, site, i)`; per-site probe counters are the only
+/// mutable state, so a plan forked per shard stays deterministic as
+/// long as each shard's probe sequence is deterministic — which it is,
+/// because every probe site runs on the single-threaded dispatch path
+/// (the pooled decode keys its faults off a decision taken *before*
+/// the parallel section).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FaultPlan {
+    seed: u64,
+    rates: [u16; 5],
+    probes: [u64; 5],
+    fired: [u64; 5],
+    /// Virtual-clock stall injected when [`FaultSite::SlowOp`] fires.
+    pub slow_ns: u64,
+}
+
+impl FaultPlan {
+    /// A plan that never fires (all rates zero).
+    pub fn new(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            rates: [0; 5],
+            probes: [0; 5],
+            fired: [0; 5],
+            slow_ns: 1_000_000,
+        }
+    }
+
+    /// Set one site's firing rate in permille (clamped to 1000).
+    pub fn with_rate(mut self, site: FaultSite, permille: u16) -> Self {
+        self.rates[site.index()] = permille.min(1000);
+        self
+    }
+
+    /// Arm every site at the same permille rate.
+    pub fn arm_all(seed: u64, permille: u16) -> Self {
+        let mut p = FaultPlan::new(seed);
+        for s in ALL_SITES {
+            p = p.with_rate(s, permille);
+        }
+        p
+    }
+
+    /// Set the [`FaultSite::SlowOp`] stall.
+    pub fn with_slow_ns(mut self, ns: u64) -> Self {
+        self.slow_ns = ns;
+        self
+    }
+
+    /// Derive an independent sub-plan (per shard / per connection) with
+    /// the same rates and fresh counters.  Deterministic in `(self.seed,
+    /// tag)` — the same fork of the same plan replays identically.
+    pub fn fork(&self, tag: u64) -> Self {
+        FaultPlan {
+            seed: self.seed ^ tag.wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            rates: self.rates,
+            probes: [0; 5],
+            fired: [0; 5],
+            slow_ns: self.slow_ns,
+        }
+    }
+
+    /// Configured rate for a site (permille).
+    pub fn rate(&self, site: FaultSite) -> u16 {
+        self.rates[site.index()]
+    }
+
+    /// Probes taken at a site so far.
+    pub fn probes(&self, site: FaultSite) -> u64 {
+        self.probes[site.index()]
+    }
+
+    /// Faults fired at a site so far.
+    pub fn fired(&self, site: FaultSite) -> u64 {
+        self.fired[site.index()]
+    }
+
+    /// Take the next probe at `site`: advance the site's counter and
+    /// decide — purely from `(seed, site, probe index)` — whether the
+    /// fault fires.
+    pub fn should_fire(&mut self, site: FaultSite) -> bool {
+        let idx = site.index();
+        let i = self.probes[idx];
+        self.probes[idx] += 1;
+        let rate = self.rates[idx];
+        if rate == 0 {
+            return false;
+        }
+        let mut r = Rng::new(
+            self.seed
+                ^ ((idx as u64 + 1).wrapping_mul(0xD6E8_FEB8_6659_FD93))
+                ^ i.wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let fire = r.below(1000) < rate as usize;
+        if fire {
+            self.fired[idx] += 1;
+        }
+        fire
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_plan_never_fires() {
+        let mut p = FaultPlan::new(7);
+        for _ in 0..1000 {
+            for s in ALL_SITES {
+                assert!(!p.should_fire(s));
+            }
+        }
+        for s in ALL_SITES {
+            assert_eq!(p.fired(s), 0);
+            assert_eq!(p.probes(s), 1000, "probes counted even when unarmed");
+        }
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let mut a = FaultPlan::arm_all(42, 250);
+        let mut b = FaultPlan::arm_all(42, 250);
+        for _ in 0..500 {
+            for s in ALL_SITES {
+                assert_eq!(a.should_fire(s), b.should_fire(s));
+            }
+        }
+        for s in ALL_SITES {
+            assert_eq!(a.fired(s), b.fired(s));
+            assert!(a.fired(s) > 0, "site {:?} should fire at 250 permille", s);
+        }
+    }
+
+    #[test]
+    fn schedule_is_probe_indexed_not_order_dependent() {
+        // Interleaving probes across sites must not change any site's
+        // own schedule: decisions depend only on (seed, site, index).
+        let mut interleaved = FaultPlan::arm_all(9, 300);
+        let mut sequential = FaultPlan::arm_all(9, 300);
+        let mut got_inter = vec![];
+        for _ in 0..200 {
+            for s in ALL_SITES {
+                got_inter.push((s, interleaved.should_fire(s)));
+            }
+        }
+        let mut got_seq = vec![];
+        for s in ALL_SITES {
+            for _ in 0..200 {
+                got_seq.push((s, sequential.should_fire(s)));
+            }
+        }
+        for s in ALL_SITES {
+            let a: Vec<bool> = got_inter
+                .iter()
+                .filter(|(x, _)| *x == s)
+                .map(|(_, f)| *f)
+                .collect();
+            let b: Vec<bool> = got_seq
+                .iter()
+                .filter(|(x, _)| *x == s)
+                .map(|(_, f)| *f)
+                .collect();
+            assert_eq!(a, b, "site {:?} schedule shifted under interleaving", s);
+        }
+    }
+
+    #[test]
+    fn forks_are_deterministic_and_distinct() {
+        let base = FaultPlan::arm_all(5, 500);
+        let mut f0a = base.fork(0);
+        let mut f0b = base.fork(0);
+        let mut f1 = base.fork(1);
+        let a: Vec<bool> = (0..100).map(|_| f0a.should_fire(FaultSite::SlowOp)).collect();
+        let b: Vec<bool> = (0..100).map(|_| f0b.should_fire(FaultSite::SlowOp)).collect();
+        let c: Vec<bool> = (0..100).map(|_| f1.should_fire(FaultSite::SlowOp)).collect();
+        assert_eq!(a, b, "same fork tag replays identically");
+        assert_ne!(a, c, "different tags give unrelated schedules");
+    }
+
+    #[test]
+    fn rate_extremes() {
+        let mut never = FaultPlan::new(1).with_rate(FaultSite::DecodePanic, 0);
+        let mut always = FaultPlan::new(1).with_rate(FaultSite::DecodePanic, 1000);
+        for _ in 0..100 {
+            assert!(!never.should_fire(FaultSite::DecodePanic));
+            assert!(always.should_fire(FaultSite::DecodePanic));
+        }
+    }
+
+    #[test]
+    fn site_names_and_indices_are_stable() {
+        let names = [
+            "decode_panic",
+            "slow_op",
+            "corrupt_window",
+            "shard_wedge",
+            "socket_drop",
+        ];
+        for (i, s) in ALL_SITES.iter().enumerate() {
+            assert_eq!(s.index(), i);
+            assert_eq!(s.as_str(), names[i]);
+        }
+    }
+}

@@ -38,6 +38,10 @@
 //!   LRU decode cache keyed on `(net, row window)` with byte-budget
 //!   eviction, and the streaming decode path ([`engine::decode_into`])
 //!   that unpacks + decodes straight into `infer_hard` staging buffers.
+//! * [`faults`]    — deterministic fault-injection harness: a seeded
+//!   [`FaultPlan`] (decode panic, slow op, corrupted code window, shard
+//!   wedge, socket drop) consulted at the plane's choke points when the
+//!   `fault-inject` feature is on; firings land in the flight recorder.
 //! * [`obs`]       — unified observability plane: per-shard metrics
 //!   registry (log2 latency histograms, counters, gauges) merged into
 //!   one [`MetricsSnapshot`] by [`Engine::metrics_snapshot`],
@@ -58,6 +62,7 @@
 //!   backpressure the clients.
 pub mod batcher;
 pub mod engine;
+pub mod faults;
 pub mod obs;
 pub mod server;
 pub mod switchsim;
@@ -67,5 +72,6 @@ pub use batcher::{Batch, BatcherConfig};
 pub use engine::{
     Admission, DecodeCache, Engine, EngineConfig, HostedNet, NetLedger, Request, Router,
 };
+pub use faults::{FaultPlan, FaultSite};
 pub use obs::{Event, EventKind, FlightRecorder, MetricsSnapshot, ObsConfig, ShardObs};
 pub use switchsim::{decode_batch, BatchDecode};

@@ -22,6 +22,8 @@ pub const REQUIRED_FAMILIES: &[&str] = &[
     "vq4all_requests_accepted_total",
     "vq4all_requests_dispatched_total",
     "vq4all_requests_shed_total",
+    "vq4all_requests_expired_total",
+    "vq4all_requests_failed_total",
     "vq4all_requests_deferred_total",
     "vq4all_batches_total",
     "vq4all_padded_rows_total",
@@ -94,6 +96,8 @@ pub fn prometheus_text(s: &MetricsSnapshot) -> String {
     counter(&mut out, "vq4all_requests_accepted_total", "Requests admitted by the plane", s.accepted);
     counter(&mut out, "vq4all_requests_dispatched_total", "Requests fired into batches", s.dispatched);
     counter(&mut out, "vq4all_requests_shed_total", "Requests rejected at the admission budget", s.shed);
+    counter(&mut out, "vq4all_requests_expired_total", "Requests whose deadline lapsed before their batch fired", s.expired);
+    counter(&mut out, "vq4all_requests_failed_total", "Requests failed by a shard or net quarantine", s.failed);
     counter(&mut out, "vq4all_requests_deferred_total", "Requests deferred by front-end backpressure", s.deferred);
     counter(&mut out, "vq4all_batches_total", "Batches formed and served", s.batches);
     counter(&mut out, "vq4all_padded_rows_total", "Padding rows added to fill device batches", s.padded_rows);
@@ -128,6 +132,8 @@ pub fn prometheus_text(s: &MetricsSnapshot) -> String {
         labeled(&mut out, "vq4all_net_accepted_total", "Requests admitted per net", "counter", &|n| n.accepted);
         labeled(&mut out, "vq4all_net_served_total", "Requests served per net", "counter", &|n| n.served);
         labeled(&mut out, "vq4all_net_shed_total", "Requests shed per net", "counter", &|n| n.shed);
+        labeled(&mut out, "vq4all_net_expired_total", "Deadline-expired requests per net", "counter", &|n| n.expired);
+        labeled(&mut out, "vq4all_net_failed_total", "Quarantine-failed requests per net", "counter", &|n| n.failed);
         labeled(&mut out, "vq4all_net_pending", "Requests queued per net", "gauge", &|n| n.pending);
         labeled(&mut out, "vq4all_net_batches_total", "Batches streamed per net", "counter", &|n| n.batches);
         labeled(&mut out, "vq4all_net_rows_hit_total", "Cache-hit weight rows per net", "counter", &|n| n.rows_hit);
@@ -267,6 +273,8 @@ pub fn snapshot_json(s: &MetricsSnapshot) -> Json {
                     ("accepted", Json::num(n.accepted as f64)),
                     ("served", Json::num(n.served as f64)),
                     ("shed", Json::num(n.shed as f64)),
+                    ("expired", Json::num(n.expired as f64)),
+                    ("failed", Json::num(n.failed as f64)),
                     ("pending", Json::num(n.pending as f64)),
                     ("batches", Json::num(n.batches as f64)),
                     ("rows_hit", Json::num(n.rows_hit as f64)),
@@ -282,6 +290,8 @@ pub fn snapshot_json(s: &MetricsSnapshot) -> Json {
         ("accepted", Json::num(s.accepted as f64)),
         ("dispatched", Json::num(s.dispatched as f64)),
         ("shed", Json::num(s.shed as f64)),
+        ("expired", Json::num(s.expired as f64)),
+        ("failed", Json::num(s.failed as f64)),
         ("deferred", Json::num(s.deferred as f64)),
         ("batches", Json::num(s.batches as f64)),
         ("padded_rows", Json::num(s.padded_rows as f64)),

@@ -27,11 +27,12 @@
 //!
 //! **Reconciliation contract:** [`MetricsSnapshot`] totals are
 //! *defined* to equal the engine's existing conservation counters —
-//! `accepted == dispatched + shed`, per-net ledger sums, cache
-//! `hits + misses == lookups`, and `queue_ns.count() == dispatched`
-//! (one queue-wait sample per dispatched request).  The `obs_overhead`
-//! bench row gates the instrumentation cost of the `stream_batch` path
-//! at ≤ ~5% (`scripts/verify.sh`).
+//! `accepted == dispatched + shed + expired + failed`, per-net ledger
+//! sums, cache `hits + misses == lookups`, and (in fault-free
+//! operation) `queue_ns.count() == dispatched` — one queue-wait sample
+//! per dispatched request; a failed batch keeps its fire-time spans.
+//! The `obs_overhead` bench row gates the instrumentation cost of the
+//! `stream_batch` path at ≤ ~5% (`scripts/verify.sh`).
 
 pub mod expose;
 pub mod recorder;
@@ -206,6 +207,10 @@ pub struct NetSnapshot {
     pub accepted: u64,
     pub served: u64,
     pub shed: u64,
+    /// Requests whose deadline lapsed before their batch fired.
+    pub expired: u64,
+    /// Requests failed with a structured error by a quarantine.
+    pub failed: u64,
     /// Requests sitting in this net's queue right now (gauge).
     pub pending: u64,
     pub queue_ns: Log2Hist,
@@ -221,10 +226,16 @@ pub struct NetSnapshot {
 pub struct MetricsSnapshot {
     pub shards: u64,
     pub hosted_nets: u64,
-    // Admission conservation: accepted == dispatched + shed.
+    // Admission conservation:
+    // accepted == dispatched + shed + expired + failed.
     pub accepted: u64,
     pub dispatched: u64,
     pub shed: u64,
+    /// Requests whose deadline lapsed before their batch fired.
+    pub expired: u64,
+    /// Requests failed with a structured error by a shard or net
+    /// quarantine.
+    pub failed: u64,
     pub deferred: u64,
     pub batches: u64,
     pub padded_rows: u64,

@@ -30,6 +30,18 @@ pub enum EventKind {
     /// A request failed structural validation before admission
     /// (`a`/`b` free-form).
     ValidationError,
+    /// A request's deadline lapsed before its batch fired; the work was
+    /// shed pre-decode (`a` = row, `b` = deadline_ns).
+    DeadlineExpired,
+    /// A shard entered quarantine after a dispatch failure
+    /// (`a` = shard id, `b` = requests failed with it).
+    Quarantined,
+    /// A queued request was failed with a structured error because its
+    /// shard was quarantined (`a` = row, `b` = shard id).
+    RequestFailed,
+    /// An armed fault fired at an instrumented choke point
+    /// (`a` = fault-site discriminant, `b` = firing index).
+    FaultInjected,
 }
 
 impl EventKind {
@@ -41,6 +53,10 @@ impl EventKind {
             EventKind::HostingError => "hosting_error",
             EventKind::OutOfRangeRow => "out_of_range_row",
             EventKind::ValidationError => "validation_error",
+            EventKind::DeadlineExpired => "deadline_expired",
+            EventKind::Quarantined => "quarantined",
+            EventKind::RequestFailed => "request_failed",
+            EventKind::FaultInjected => "fault_injected",
         }
     }
 }
@@ -165,6 +181,10 @@ mod tests {
             (EventKind::HostingError, "hosting_error"),
             (EventKind::OutOfRangeRow, "out_of_range_row"),
             (EventKind::ValidationError, "validation_error"),
+            (EventKind::DeadlineExpired, "deadline_expired"),
+            (EventKind::Quarantined, "quarantined"),
+            (EventKind::RequestFailed, "request_failed"),
+            (EventKind::FaultInjected, "fault_injected"),
         ] {
             assert_eq!(k.as_str(), s);
         }

@@ -101,6 +101,19 @@ impl<'a> Server<'a> {
         self.plane.try_submit(net, row)
     }
 
+    /// [`Server::submit`] with a deadline on the plane's virtual clock
+    /// (`0` = none).  A request whose deadline lapses before its batch
+    /// fires is counted `expired` and shed before decode — see
+    /// [`Engine::try_submit_deadline`].
+    pub fn submit_with_deadline(
+        &mut self,
+        net: &str,
+        row: usize,
+        deadline_ns: u64,
+    ) -> anyhow::Result<Admission> {
+        self.plane.try_submit_deadline(net, row, deadline_ns)
+    }
+
     /// Advance virtual time.
     pub fn tick(&mut self, ns: u64) {
         self.plane.tick(ns);
@@ -123,10 +136,19 @@ impl<'a> Server<'a> {
         // virtual clock advances by the *sum*, so latency accounting
         // sees the full host-side cost of the batch as before.
         let t_decode = std::time::Instant::now();
-        let row_serve = self
-            .plane
-            .stream_batch(&name, &batch.rows, self.plane_pool.as_ref())?
-            .ok_or_else(|| anyhow::anyhow!("plane fired a batch for unhosted net {name:?}"))?;
+        // A decode failure (worker panic, integrity quarantine) must not
+        // leave the batch's requests counted `dispatched` forever: hand
+        // the batch back to the plane so the owning shard rolls the
+        // rows into `failed` and quarantines, then surface the error.
+        let row_serve = match self.plane.stream_batch(&name, &batch.rows, self.plane_pool.as_ref())
+        {
+            Ok(rs) => rs
+                .ok_or_else(|| anyhow::anyhow!("plane fired a batch for unhosted net {name:?}"))?,
+            Err(e) => {
+                self.plane.fail_batch(&batch);
+                return Err(e);
+            }
+        };
         let decode_ns = t_decode.elapsed().as_nanos() as u64;
 
         let (sess, codes) = self
@@ -158,9 +180,13 @@ impl<'a> Server<'a> {
         Ok(batch.requests.len())
     }
 
-    /// Drain everything still queued on the plane.
+    /// Drain everything still queued on the plane.  Tolerates bounded
+    /// stalls (an injected shard wedge holds a fire back for a round or
+    /// two) but still fails loudly if no progress happens for 64
+    /// consecutive rounds.
     pub fn drain_all(&mut self) -> anyhow::Result<u64> {
         let mut total = 0u64;
+        let mut stalled_rounds = 0u32;
         loop {
             // Force-fire partial batches once queues stop growing.
             let before = self.plane.total_pending();
@@ -171,7 +197,13 @@ impl<'a> Server<'a> {
             let served = self.dispatch_one()?;
             total += served as u64;
             if served == 0 && self.plane.total_pending() == before {
-                anyhow::bail!("server wedged with {before} pending requests");
+                stalled_rounds += 1;
+                anyhow::ensure!(
+                    stalled_rounds < 64,
+                    "server wedged with {before} pending requests"
+                );
+            } else {
+                stalled_rounds = 0;
             }
         }
         Ok(total)

@@ -168,6 +168,7 @@ mod tests {
             net: "a".into(),
             row,
             arrived_ns: 0,
+            deadline_ns: 0,
         }
     }
 

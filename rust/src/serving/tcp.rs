@@ -4,10 +4,12 @@
 //!
 //! ```text
 //! -> {"net": "mini_mlp", "row": 5}
+//! -> {"net": "mini_mlp", "row": 6, "deadline_ms": 250}
 //! <- {"ok": true, "net": "mini_mlp", "row": 5, "argmax": 3,
 //!     "batch": 4, "latency_us": 812.0}
 //! <- {"ok": false, "error": "unknown network \"ghost\""}
 //! <- {"ok": false, "error": "row 999 out of range: \"mini_mlp\" serves rows 0..64"}
+//! <- {"ok": false, "error": "deadline expired after 250 ms before the batch fired"}
 //! -> {"stats": true}
 //! <- {"ok": true, "stats": true, "accepted": 10, "dispatched": 10,
 //!     "shed": 0, "deferred": 0, "peak_depth": 4, "rows_decoded": 40,
@@ -49,6 +51,20 @@
 //! [`Engine`] plane as [`super::server`], driven by a wall clock
 //! ([`Engine::set_now`]) instead of virtual time.
 //!
+//! **Framing:** one frame is one `\n`-terminated line, hard-capped at
+//! [`MAX_FRAME_BYTES`].  An oversized frame, a stream that ends
+//! mid-frame, and non-UTF-8 bytes are all answered with a structured
+//! error instead of silently killing the reader thread; only the
+//! errors that lose framing (oversized, truncated) close the
+//! connection.
+//!
+//! **Deadlines:** a row request may carry `"deadline_ms"` (relative,
+//! from arrival at the dispatcher).  The engine enforces it at fire
+//! time — an expired request is ledgered `expired` and shed before any
+//! decode — and the dispatcher answers the waiting connection with a
+//! structured error so no client hangs on a request that will never
+//! fire.
+//!
 //! **Backpressure (wall-clock admission policy):** where the
 //! virtual-clock front-end sheds over-budget submissions, the TCP
 //! dispatcher *defers* — it probes [`Engine::would_admit`], parks the
@@ -72,12 +88,78 @@ use crate::coordinator::calib::gather_rows;
 use crate::coordinator::session::NetSession;
 use crate::tensor::Tensor;
 use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 use crate::util::threadpool::ThreadPool;
 
 use super::batcher::Batch;
 use super::engine::{Admission, Engine};
+use super::faults::{FaultPlan, FaultSite};
 use super::obs::{expose, EventKind};
+
+/// Hard cap on one newline-delimited frame.  A peer that streams more
+/// than this without a `\n` gets a structured error and loses the
+/// connection (framing is unrecoverable) instead of growing an
+/// unbounded line buffer on the reader thread.
+pub const MAX_FRAME_BYTES: usize = 64 * 1024;
+
+/// Outcome of pulling one frame off the wire — every way a read can
+/// end, so the reader loop can answer each with a structured error
+/// rather than dying silently.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Frame {
+    /// A complete line, newline stripped.
+    Line(String),
+    /// Peer closed cleanly at a frame boundary.
+    Eof,
+    /// The frame exceeded the cap before its newline arrived.
+    Oversized { read: usize },
+    /// The stream ended mid-frame (bytes but no trailing newline).
+    Truncated { read: usize },
+    /// A complete line that was not valid UTF-8.  Framing is intact
+    /// (the newline was consumed), so the connection can continue.
+    BadUtf8,
+}
+
+/// Read one bounded frame.  Never allocates more than `max + one
+/// BufRead chunk`; consumes through the terminating newline on
+/// success and on `BadUtf8`, and stops consuming as soon as the cap
+/// is exceeded on `Oversized`.
+pub fn read_frame<R: BufRead>(r: &mut R, max: usize) -> std::io::Result<Frame> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let (done, used) = {
+            let chunk = r.fill_buf()?;
+            if chunk.is_empty() {
+                return Ok(if buf.is_empty() {
+                    Frame::Eof
+                } else {
+                    Frame::Truncated { read: buf.len() }
+                });
+            }
+            match chunk.iter().position(|&b| b == b'\n') {
+                Some(pos) => {
+                    buf.extend_from_slice(&chunk[..pos]);
+                    (true, pos + 1)
+                }
+                None => {
+                    buf.extend_from_slice(chunk);
+                    (false, chunk.len())
+                }
+            }
+        };
+        r.consume(used);
+        if buf.len() > max {
+            return Ok(Frame::Oversized { read: buf.len() });
+        }
+        if done {
+            return Ok(match String::from_utf8(buf) {
+                Ok(s) => Frame::Line(s),
+                Err(_) => Frame::BadUtf8,
+            });
+        }
+    }
+}
 
 /// One parsed in-flight request.
 struct InFlight {
@@ -85,6 +167,9 @@ struct InFlight {
     net: String,
     row: usize,
     arrived: Instant,
+    /// Relative deadline in ms (0 = none), converted onto the engine
+    /// clock at enqueue time.
+    deadline_ms: u64,
 }
 
 /// One line pulled off a reader channel: a row request, or a control
@@ -106,10 +191,13 @@ enum Inbound {
 /// Per-connection writer handles the dispatch thread answers through.
 type Writers = Arc<Mutex<BTreeMap<u64, TcpStream>>>;
 
-/// (conn, arrival) for every enqueued request, keyed by (net,
-/// shard-local request id) — ids are unique per net because a net lives
-/// on exactly one shard router.
-type InFlightMap = BTreeMap<(String, u64), (u64, Instant)>;
+/// (conn, arrival, engine-clock deadline_ns) for every enqueued
+/// request, keyed by (net, shard-local request id) — ids are unique per
+/// net because a net lives on exactly one shard router.  The deadline
+/// rides along so the dispatcher can answer a connection whose request
+/// the engine expired (the engine sheds it from the queue; the client
+/// still needs a response line).
+type InFlightMap = BTreeMap<(String, u64), (u64, Instant, u64)>;
 
 /// Per-network serving statistics (mirrors `server::ServeStats`,
 /// including the bounded wall-clock latency summary).
@@ -151,8 +239,10 @@ impl Shutdown {
 /// One parsed inbound line of the wire protocol.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Verb {
-    /// `{"net": ..., "row": ...}` — serve one row.
-    Infer { net: String, row: usize },
+    /// `{"net": ..., "row": ...}` — serve one row.  The optional
+    /// `"deadline_ms"` key (relative, 0 = none) bounds how long the
+    /// request may wait for its batch to fire.
+    Infer { net: String, row: usize, deadline_ms: u64 },
     /// `{"stats": true}` — report the plane's admission and decode
     /// throughput counters (ROADMAP: surfacing the admission counters
     /// over a `/stats` TCP verb).
@@ -199,14 +289,21 @@ pub fn parse_verb(line: &str) -> anyhow::Result<Verb> {
     }
     let net = v.req_str("net")?.to_string();
     let row = v.req_usize("row")?;
-    Ok(Verb::Infer { net, row })
+    let deadline_ms = match v.get("deadline_ms") {
+        None => 0,
+        Some(d) => d
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("\"deadline_ms\" must be a nonnegative integer"))?
+            as u64,
+    };
+    Ok(Verb::Infer { net, row, deadline_ms })
 }
 
 /// Parse one request line. Returns (net, row).  Row-request-only wrapper
 /// around [`parse_verb`], kept for callers that never speak verbs.
 pub fn parse_request(line: &str) -> anyhow::Result<(String, usize)> {
     match parse_verb(line)? {
-        Verb::Infer { net, row } => Ok((net, row)),
+        Verb::Infer { net, row, .. } => Ok((net, row)),
         Verb::Stats | Verb::Metrics { .. } | Verb::Trace => {
             anyhow::bail!("expected a row request, got a control verb")
         }
@@ -236,7 +333,8 @@ pub fn err_response(msg: &str) -> String {
 }
 
 /// Render the `/stats` verb response: the plane's admission counters
-/// (accepted / dispatched / shed / deferred / peak queue depth), decode
+/// (accepted / dispatched / shed / expired / failed / deferred / peak
+/// queue depth, plus the quarantined-shard gauge), decode
 /// throughput counters (rows decoded fresh vs served from cache, cache
 /// hit rate and evictions), and per-net serve counts plus the hosting
 /// audit's per-stage codeword utilization (fraction of the universal
@@ -297,6 +395,12 @@ pub fn stats_response(plane: &Engine, stats: &BTreeMap<String, TcpStats>) -> Str
         ("accepted", Json::num(t.accepted as f64)),
         ("dispatched", Json::num(t.served as f64)),
         ("shed", Json::num(t.shed as f64)),
+        ("expired", Json::num(t.expired as f64)),
+        ("failed", Json::num(t.failed as f64)),
+        (
+            "quarantined_shards",
+            Json::num(plane.shards().iter().filter(|s| s.is_quarantined()).count() as f64),
+        ),
         ("deferred", Json::num(t.deferred as f64)),
         ("peak_depth", Json::num(t.peak_depth as f64)),
         ("pending", Json::num(plane.total_pending() as f64)),
@@ -383,6 +487,12 @@ pub struct TcpServer {
     pub plane: Engine,
     /// Worker pool the plane's miss-decodes run on (None = serial).
     plane_pool: Option<ThreadPool>,
+    /// Chaos-suite socket faults: when armed (and the `fault-inject`
+    /// feature is on), every reader thread probes
+    /// [`FaultSite::SocketDrop`] per frame and severs its connection
+    /// when the plan fires — the fault the client retry helpers are
+    /// tested against.  `None` (the default) never drops anything.
+    pub socket_faults: Option<FaultPlan>,
 }
 
 impl TcpServer {
@@ -413,6 +523,7 @@ impl TcpServer {
             stats,
             plane,
             plane_pool: pool,
+            socket_faults: None,
         })
     }
 
@@ -443,6 +554,16 @@ impl TcpServer {
         // Writers: dispatch thread sends rendered lines per connection.
         let writers: Writers = Arc::new(Mutex::new(BTreeMap::new()));
 
+        // Chaos-suite socket faults: consulted per frame by every reader
+        // thread, but only when the `fault-inject` feature armed them —
+        // the `cfg!` keeps both paths compiled so the release build
+        // carries no dead cfg branches.
+        let socket_faults: Option<FaultPlan> = if cfg!(feature = "fault-inject") {
+            self.socket_faults.clone()
+        } else {
+            None
+        };
+
         // Accept loop on a helper thread.
         let accept_shutdown = shutdown.clone();
         let accept_writers = writers.clone();
@@ -457,15 +578,77 @@ impl TcpServer {
                         accept_writers.lock().unwrap().insert(id, ws);
                         let tx2 = accept_tx.clone();
                         let wmap = accept_writers.clone();
+                        // Each connection forks the plan by its id, so a
+                        // seeded run drops the same connections at the
+                        // same frames every time.
+                        let mut plan = socket_faults.clone().map(|p| p.fork(id));
                         std::thread::spawn(move || {
-                            let reader = BufReader::new(stream);
-                            for line in reader.lines() {
-                                let Ok(line) = line else { break };
+                            let mut reader = BufReader::new(stream);
+                            loop {
+                                if let Some(p) = plan.as_mut() {
+                                    if p.should_fire(FaultSite::SocketDrop) {
+                                        crate::log_debug!(
+                                            "serving::tcp",
+                                            "conn {id}: injected socket drop"
+                                        );
+                                        break;
+                                    }
+                                }
+                                let frame = match read_frame(&mut reader, MAX_FRAME_BYTES) {
+                                    Ok(f) => f,
+                                    Err(_) => break,
+                                };
+                                let line = match frame {
+                                    Frame::Eof => break,
+                                    Frame::Oversized { read } => {
+                                        // Framing is lost: answer, then
+                                        // close rather than guess where
+                                        // the next frame starts.
+                                        if let Some(w) = wmap.lock().unwrap().get_mut(&id) {
+                                            let _ = writeln!(
+                                                w,
+                                                "{}",
+                                                err_response(&format!(
+                                                    "frame exceeds {MAX_FRAME_BYTES} bytes \
+                                                     ({read} read with no newline); closing \
+                                                     connection"
+                                                ))
+                                            );
+                                        }
+                                        break;
+                                    }
+                                    Frame::Truncated { read } => {
+                                        if let Some(w) = wmap.lock().unwrap().get_mut(&id) {
+                                            let _ = writeln!(
+                                                w,
+                                                "{}",
+                                                err_response(&format!(
+                                                    "connection closed mid-frame after {read} \
+                                                     bytes (missing trailing newline)"
+                                                ))
+                                            );
+                                        }
+                                        break;
+                                    }
+                                    Frame::BadUtf8 => {
+                                        // The newline was consumed, so the
+                                        // framing survives this one.
+                                        if let Some(w) = wmap.lock().unwrap().get_mut(&id) {
+                                            let _ = writeln!(
+                                                w,
+                                                "{}",
+                                                err_response("frame is not valid UTF-8")
+                                            );
+                                        }
+                                        continue;
+                                    }
+                                    Frame::Line(l) => l,
+                                };
                                 if line.trim().is_empty() {
                                     continue;
                                 }
                                 match parse_verb(&line) {
-                                    Ok(Verb::Infer { net, row }) => {
+                                    Ok(Verb::Infer { net, row, deadline_ms }) => {
                                         // Blocks when the channel is full
                                         // — the backpressure edge.
                                         if tx2
@@ -474,6 +657,7 @@ impl TcpServer {
                                                 net,
                                                 row,
                                                 arrived: Instant::now(),
+                                                deadline_ms,
                                             }))
                                             .is_err()
                                         {
@@ -532,9 +716,17 @@ impl TcpServer {
             self.plane.set_now(elapsed_ns(&t0));
 
             // Re-admit the parked request first — its shard may have
-            // drained since it was deferred.
+            // drained since it was deferred.  Re-validate too: a
+            // quarantine may have hit while it waited, and a request
+            // parked on a shard that will never serve it must be
+            // answered, not held forever.
             if let Some(req) = parked.take() {
-                if self.plane.would_admit(&req.net) {
+                if let Some(err) = self.reject_reason(&req) {
+                    if let Some(w) = writers.lock().unwrap().get_mut(&req.conn) {
+                        let _ = writeln!(w, "{}", err_response(&err));
+                    }
+                    self.stats.entry(req.net.clone()).or_default().errors += 1;
+                } else if self.plane.would_admit(&req.net) {
                     self.enqueue(req, &mut inflight)?;
                 } else {
                     parked = Some(req);
@@ -596,6 +788,35 @@ impl TcpServer {
                 let Some(batch) = self.plane.next_batch() else { break };
                 served += self.dispatch(batch, &mut inflight, &writers)?;
             }
+
+            // Answer the connections whose requests expired.  The
+            // engine sheds expired requests from its queues at fire
+            // time (ledgered `expired`), but the waiting client still
+            // needs a response line; both sides compare the same
+            // engine-clock deadline, so a request answered here is
+            // never also served later (the clock only advances).
+            if !inflight.is_empty() {
+                let now = elapsed_ns(&t0);
+                let lapsed: Vec<(String, u64)> = inflight
+                    .iter()
+                    .filter(|(_, &(_, _, dl))| dl != 0 && now > dl)
+                    .map(|(k, _)| k.clone())
+                    .collect();
+                for key in lapsed {
+                    let Some((conn, arrived, _)) = inflight.remove(&key) else { continue };
+                    self.stats.entry(key.0.clone()).or_default().errors += 1;
+                    if let Some(w) = writers.lock().unwrap().get_mut(&conn) {
+                        let _ = writeln!(
+                            w,
+                            "{}",
+                            err_response(&format!(
+                                "deadline expired after {} ms before the batch fired",
+                                arrived.elapsed().as_millis()
+                            ))
+                        );
+                    }
+                }
+            }
             if max_requests > 0 && served >= max_requests {
                 shutdown.trigger();
             }
@@ -623,6 +844,18 @@ impl TcpServer {
                 .note_rejected(&req.net, EventKind::HostingError, req.row as u64, 0);
             return Some(format!("unknown network {:?}", req.net));
         };
+        // A quarantined shard/net refuses submissions outright —
+        // answering here keeps the request out of the defer slot, where
+        // it would otherwise park forever behind a shard that will
+        // never drain.
+        if self.plane.quarantined(&req.net) {
+            self.plane
+                .note_rejected(&req.net, EventKind::RequestFailed, req.row as u64, 0);
+            return Some(format!(
+                "{:?} is quarantined (shard fault or code-stream integrity failure)",
+                req.net
+            ));
+        }
         let (sess, _) = self
             .sessions
             .get(&req.net)
@@ -645,10 +878,16 @@ impl TcpServer {
 
     /// Enqueue a validated, admissible request on the plane and record
     /// it in-flight so the dispatch can answer the right connection.
+    /// A relative `deadline_ms` lands on the engine clock here, where
+    /// submission time is known.
     fn enqueue(&mut self, req: InFlight, inflight: &mut InFlightMap) -> anyhow::Result<()> {
-        match self.plane.try_submit(&req.net, req.row)? {
+        let deadline_ns = match req.deadline_ms {
+            0 => 0,
+            ms => self.plane.now_ns.saturating_add(ms.saturating_mul(1_000_000)),
+        };
+        match self.plane.try_submit_deadline(&req.net, req.row, deadline_ns)? {
             Admission::Accepted { id } => {
-                inflight.insert((req.net, id), (req.conn, req.arrived));
+                inflight.insert((req.net, id), (req.conn, req.arrived, deadline_ns));
                 Ok(())
             }
             // Both call sites gate on would_admit and this thread is the
@@ -678,10 +917,32 @@ impl TcpServer {
         // feeds the decode/infer/respond stage histograms and the
         // decode-hidden ratio.
         let t_decode = Instant::now();
-        let row_serve = self
-            .plane
-            .stream_batch(&name, &batch.rows, self.plane_pool.as_ref())?
-            .ok_or_else(|| anyhow::anyhow!("plane fired a batch for unhosted net {name:?}"))?;
+        // A decode failure (injected panic, integrity quarantine) takes
+        // out this batch, not the server: hand the batch back to the
+        // plane so the owning shard ledgers its rows `failed` and
+        // quarantines, answer every waiting connection with a
+        // structured error, and keep dispatching for the healthy
+        // shards.
+        let row_serve = match self.plane.stream_batch(&name, &batch.rows, self.plane_pool.as_ref())
+        {
+            Ok(rs) => rs
+                .ok_or_else(|| anyhow::anyhow!("plane fired a batch for unhosted net {name:?}"))?,
+            Err(e) => {
+                self.plane.fail_batch(&batch);
+                let msg = err_response(&format!("request failed: {e}"));
+                let st = self.stats.entry(name.clone()).or_default();
+                let mut w = writers.lock().unwrap();
+                for r in &batch.requests {
+                    st.errors += 1;
+                    if let Some((conn, _, _)) = inflight.remove(&(name.clone(), r.id)) {
+                        if let Some(ws) = w.get_mut(&conn) {
+                            let _ = writeln!(ws, "{msg}");
+                        }
+                    }
+                }
+                return Ok(0);
+            }
+        };
         let decode_ns = t_decode.elapsed().as_nanos() as u64;
 
         let (sess, codes) = self
@@ -712,7 +973,7 @@ impl TcpServer {
                 .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
                 .map(|(j, _)| j)
                 .unwrap_or(0);
-            let Some((conn, arrived)) = inflight.remove(&(name.clone(), r.id)) else {
+            let Some((conn, arrived, _)) = inflight.remove(&(name.clone(), r.id)) else {
                 continue;
             };
             let latency = arrived.elapsed().as_micros() as f64;
@@ -734,11 +995,28 @@ impl TcpServer {
 /// Blocking client helper (examples + tests): send one request, read
 /// one response line.
 pub fn client_request(stream: &mut TcpStream, net: &str, row: usize) -> anyhow::Result<Json> {
-    let req = Json::obj(vec![
+    client_request_deadline(stream, net, row, 0)
+}
+
+/// [`client_request`] with a relative deadline (`deadline_ms`, 0 =
+/// none): the request carries `"deadline_ms"`, and a request that
+/// cannot fire in time comes back as a structured
+/// `{"ok": false, "error": "deadline expired ..."}` line instead of
+/// hanging the reader.
+pub fn client_request_deadline(
+    stream: &mut TcpStream,
+    net: &str,
+    row: usize,
+    deadline_ms: u64,
+) -> anyhow::Result<Json> {
+    let mut req = vec![
         ("net", Json::str(net.to_string())),
         ("row", Json::num(row as f64)),
-    ]);
-    writeln!(stream, "{req}")?;
+    ];
+    if deadline_ms > 0 {
+        req.push(("deadline_ms", Json::num(deadline_ms as f64)));
+    }
+    writeln!(stream, "{}", Json::obj(req))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut line = String::new();
     reader.read_line(&mut line)?;
@@ -780,6 +1058,109 @@ pub fn client_trace(stream: &mut TcpStream) -> anyhow::Result<Json> {
     json::parse(&line)
 }
 
+/// Client-side retry policy: exponential backoff with deterministic
+/// jitter (seeded through [`Rng`], so a test run retries on the same
+/// schedule every time), capped per delay and — optionally — by a
+/// wall-clock deadline across all attempts.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Total tries, the first included.  Must be at least 1.
+    pub max_attempts: u32,
+    /// Delay before the first retry; doubles per subsequent retry.
+    pub base_backoff: Duration,
+    /// Per-delay cap (before jitter).
+    pub max_backoff: Duration,
+    /// Wall-clock budget across every attempt and delay; `None` means
+    /// only `max_attempts` bounds the loop.
+    pub deadline: Option<Duration>,
+    /// Seed for the jitter sequence — same seed, same schedule.
+    pub jitter_seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            base_backoff: Duration::from_millis(5),
+            max_backoff: Duration::from_millis(200),
+            deadline: Some(Duration::from_secs(5)),
+            jitter_seed: 0x7C15,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The full delay schedule (`max_attempts - 1` entries), computed
+    /// up front so it is a pure function of the policy: exponential
+    /// doubling from `base_backoff`, capped at `max_backoff`, plus up
+    /// to 25% deterministic jitter so synchronized clients spread out.
+    pub fn backoff_schedule(&self) -> Vec<Duration> {
+        let mut rng = Rng::new(self.jitter_seed);
+        (1..self.max_attempts)
+            .map(|a| {
+                let exp = self.base_backoff.saturating_mul(1u32 << (a - 1).min(16));
+                let capped = exp.min(self.max_backoff);
+                let jitter_span = (capped.as_nanos() as u64 / 4).max(1) as usize;
+                capped + Duration::from_nanos(rng.below(jitter_span) as u64)
+            })
+            .collect()
+    }
+}
+
+/// Run `op` under `policy`: retry on `Err`, sleeping the scheduled
+/// backoff between attempts, until it succeeds, attempts run out, or
+/// the next delay would cross the deadline.  `op` receives the
+/// zero-based attempt index.
+pub fn with_retry<T>(
+    policy: &RetryPolicy,
+    mut op: impl FnMut(u32) -> anyhow::Result<T>,
+) -> anyhow::Result<T> {
+    anyhow::ensure!(policy.max_attempts > 0, "retry policy allows zero attempts");
+    let schedule = policy.backoff_schedule();
+    let t0 = Instant::now();
+    let mut last: Option<anyhow::Error> = None;
+    for attempt in 0..policy.max_attempts {
+        if attempt > 0 {
+            let delay = schedule[(attempt - 1) as usize];
+            if let Some(cap) = policy.deadline {
+                if t0.elapsed() + delay >= cap {
+                    let e = last.take().expect("a retry always follows a failure");
+                    return Err(anyhow::anyhow!(
+                        "gave up after {attempt} attempt(s): the next backoff would cross the \
+                         {cap:?} deadline: {e}"
+                    ));
+                }
+            }
+            std::thread::sleep(delay);
+        }
+        match op(attempt) {
+            Ok(v) => return Ok(v),
+            Err(e) => {
+                crate::log_debug!("serving::tcp", "attempt {attempt} failed: {e}");
+                last = Some(e);
+            }
+        }
+    }
+    let e = last.expect("loop ran at least once");
+    Err(anyhow::anyhow!("all {} attempt(s) failed: {e}", policy.max_attempts))
+}
+
+/// [`client_request`] with reconnect-and-retry under `policy` — a
+/// dropped socket (the injected [`FaultSite::SocketDrop`], a restarting
+/// server) fails one attempt, not the request.  Each attempt dials a
+/// fresh connection: after a drop the old stream is unusable.
+pub fn client_request_with_retry(
+    addr: &str,
+    net: &str,
+    row: usize,
+    policy: &RetryPolicy,
+) -> anyhow::Result<Json> {
+    with_retry(policy, |_| {
+        let mut stream = TcpStream::connect(addr)?;
+        client_request(&mut stream, net, row)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -798,12 +1179,171 @@ mod tests {
         assert_eq!(parse_verb(r#"{"stats": true}"#).unwrap(), Verb::Stats);
         assert_eq!(
             parse_verb(r#"{"net": "a", "row": 3}"#).unwrap(),
-            Verb::Infer { net: "a".into(), row: 3 }
+            Verb::Infer { net: "a".into(), row: 3, deadline_ms: 0 }
         );
         assert!(parse_verb(r#"{"stats": false}"#).is_err());
         assert!(parse_verb(r#"{"stats": 1}"#).is_err());
         // The request-only wrapper refuses the verb.
         assert!(parse_request(r#"{"stats": true}"#).is_err());
+    }
+
+    #[test]
+    fn verb_parses_optional_deadline() {
+        assert_eq!(
+            parse_verb(r#"{"net": "a", "row": 3, "deadline_ms": 250}"#).unwrap(),
+            Verb::Infer { net: "a".into(), row: 3, deadline_ms: 250 }
+        );
+        // Absent means none; malformed is a loud error, not a silent 0.
+        assert_eq!(
+            parse_verb(r#"{"net": "a", "row": 3}"#).unwrap(),
+            Verb::Infer { net: "a".into(), row: 3, deadline_ms: 0 }
+        );
+        assert!(parse_verb(r#"{"net": "a", "row": 3, "deadline_ms": "soon"}"#).is_err());
+        assert!(parse_verb(r#"{"net": "a", "row": 3, "deadline_ms": true}"#).is_err());
+        // The request-only wrapper still strips it down to (net, row).
+        assert_eq!(
+            parse_request(r#"{"net": "a", "row": 3, "deadline_ms": 9}"#).unwrap(),
+            ("a".to_string(), 3)
+        );
+    }
+
+    #[test]
+    fn read_frame_bounds_and_classifies_every_ending() {
+        use std::io::Cursor;
+        let mut c = Cursor::new(b"{\"stats\": true}\nrest\n".to_vec());
+        assert_eq!(
+            read_frame(&mut c, 64).unwrap(),
+            Frame::Line("{\"stats\": true}".into())
+        );
+        assert_eq!(read_frame(&mut c, 64).unwrap(), Frame::Line("rest".into()));
+        assert_eq!(read_frame(&mut c, 64).unwrap(), Frame::Eof);
+
+        // Oversized: the cap triggers even before any newline shows up.
+        let big = vec![b'x'; 200];
+        let mut c = Cursor::new(big);
+        assert!(matches!(
+            read_frame(&mut c, 64).unwrap(),
+            Frame::Oversized { read } if read > 64
+        ));
+
+        // Truncated: bytes, then EOF with no newline.
+        let mut c = Cursor::new(b"{\"net\": \"a\"".to_vec());
+        assert_eq!(
+            read_frame(&mut c, 64).unwrap(),
+            Frame::Truncated { read: 11 }
+        );
+
+        // Bad UTF-8 inside a complete line: framing survives, the next
+        // frame still parses.
+        let mut bytes = vec![0xff, 0xfe, b'\n'];
+        bytes.extend_from_slice(b"ok\n");
+        let mut c = Cursor::new(bytes);
+        assert_eq!(read_frame(&mut c, 64).unwrap(), Frame::BadUtf8);
+        assert_eq!(read_frame(&mut c, 64).unwrap(), Frame::Line("ok".into()));
+    }
+
+    #[test]
+    fn retry_schedule_is_deterministic_and_capped() {
+        let policy = RetryPolicy {
+            max_attempts: 6,
+            base_backoff: Duration::from_micros(100),
+            max_backoff: Duration::from_micros(800),
+            deadline: None,
+            jitter_seed: 11,
+        };
+        let a = policy.backoff_schedule();
+        let b = policy.backoff_schedule();
+        assert_eq!(a, b, "same policy, same schedule");
+        assert_eq!(a.len(), 5);
+        for (i, d) in a.iter().enumerate() {
+            // Exponential base, +25% jitter ceiling, hard cap.
+            let base = Duration::from_micros(100 * (1 << i)).min(Duration::from_micros(800));
+            assert!(*d >= base, "delay {i} below its base: {d:?} < {base:?}");
+            assert!(*d < base + base / 4 + Duration::from_nanos(1), "delay {i} over-jittered");
+        }
+        // A different seed shifts the jitter.
+        let other = RetryPolicy { jitter_seed: 12, ..policy.clone() };
+        assert_ne!(a, other.backoff_schedule());
+    }
+
+    #[test]
+    fn with_retry_returns_first_success_and_gives_up_loudly() {
+        let policy = RetryPolicy {
+            max_attempts: 5,
+            base_backoff: Duration::from_micros(10),
+            max_backoff: Duration::from_micros(40),
+            deadline: None,
+            jitter_seed: 3,
+        };
+        let mut calls = 0u32;
+        let v = with_retry(&policy, |attempt| {
+            calls += 1;
+            anyhow::ensure!(attempt >= 2, "injected failure");
+            Ok(attempt)
+        })
+        .unwrap();
+        assert_eq!(v, 2);
+        assert_eq!(calls, 3);
+
+        let res: anyhow::Result<u32> = with_retry(&policy, |_| anyhow::bail!("always down"));
+        let err = res.unwrap_err().to_string();
+        assert!(err.contains("5 attempt(s)"), "err: {err}");
+        assert!(err.contains("always down"), "err: {err}");
+
+        // A zero deadline stops the loop at the first retry boundary.
+        let strict = RetryPolicy { deadline: Some(Duration::ZERO), ..policy };
+        let mut tries = 0u32;
+        let res: anyhow::Result<u32> = with_retry(&strict, |_| {
+            tries += 1;
+            anyhow::bail!("down")
+        });
+        let err = res.unwrap_err().to_string();
+        assert_eq!(tries, 1, "no retry once the deadline is spent");
+        assert!(err.contains("deadline"), "err: {err}");
+    }
+
+    /// End-to-end client resilience against the injected socket-drop
+    /// fault: a listener severs the first two connections exactly as a
+    /// seeded [`FaultPlan`] dictates, and the retry helper dials until
+    /// it gets a real answer.
+    #[test]
+    fn retry_recovers_from_injected_socket_drops() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            // Rate 1000 = every probe fires; the loop stops consulting
+            // the plan after two drops so the third dial is served.
+            let mut plan = FaultPlan::new(9).with_rate(FaultSite::SocketDrop, 1000);
+            let mut drops = 0u64;
+            for stream in listener.incoming() {
+                let Ok(mut s) = stream else { break };
+                if drops < 2 && plan.should_fire(FaultSite::SocketDrop) {
+                    drops += 1;
+                    drop(s); // sever before answering — the injected fault
+                    continue;
+                }
+                let mut r = BufReader::new(s.try_clone().unwrap());
+                let mut line = String::new();
+                let _ = r.read_line(&mut line);
+                let (net, row) = parse_request(line.trim()).unwrap();
+                let _ = writeln!(s, "{}", ok_response(&net, row, 1, 1, 5.0));
+                break;
+            }
+            (drops, plan.fired(FaultSite::SocketDrop))
+        });
+        let policy = RetryPolicy {
+            max_attempts: 8,
+            base_backoff: Duration::from_micros(200),
+            max_backoff: Duration::from_millis(5),
+            deadline: Some(Duration::from_secs(10)),
+            jitter_seed: 17,
+        };
+        let resp = client_request_with_retry(&addr, "a", 3, &policy).unwrap();
+        assert!(resp.req_bool("ok").unwrap());
+        assert_eq!(resp.req_usize("row").unwrap(), 3);
+        let (drops, fired) = server.join().unwrap();
+        assert_eq!(drops, 2, "the plan dropped the first two connections");
+        assert_eq!(fired, 2, "the plan's own firing counter agrees");
     }
 
     #[test]
@@ -879,6 +1419,9 @@ mod tests {
         assert_eq!(parsed.req_usize("accepted").unwrap(), 3);
         assert_eq!(parsed.req_usize("dispatched").unwrap(), 3);
         assert_eq!(parsed.req_usize("shed").unwrap(), 0);
+        assert_eq!(parsed.req_usize("expired").unwrap(), 0);
+        assert_eq!(parsed.req_usize("failed").unwrap(), 0);
+        assert_eq!(parsed.req_usize("quarantined_shards").unwrap(), 0);
         assert_eq!(parsed.req_usize("pending").unwrap(), 0);
         assert_eq!(parsed.req_usize("max_queue_depth").unwrap(), 5);
         let t = plane.totals();

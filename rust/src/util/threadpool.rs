@@ -4,7 +4,18 @@
 //! a `scope`-style `parallel_for` used by the pure-Rust hot paths
 //! (k-means assignment sweeps, Table-1 MSE scans) and the serving
 //! batcher tests.  Shutdown is explicit and panic-safe: a panicking job
-//! poisons the pool and surfaces as an error on `join`.
+//! surfaces as an error on `join`.
+//!
+//! # Panic recovery
+//!
+//! A panicking job is caught on the worker (`catch_unwind`), the poison
+//! flag is set, and the next join reports `Err` — then, by default, the
+//! pool **recovers**: the flag is cleared after it is reported, any
+//! worker thread that actually died is respawned, and subsequent runs
+//! proceed normally.  A long-lived engine can therefore quarantine the
+//! failing shard and keep serving on the same pool.  Tests that want
+//! the old poisoned-until-acknowledged semantics opt in via
+//! [`ThreadPool::set_sticky_poison`] + [`ThreadPool::acknowledge_panic`].
 //!
 //! # `race-audit` feature
 //!
@@ -34,11 +45,43 @@ enum Msg {
 /// Fixed-size worker pool.
 pub struct ThreadPool {
     tx: mpsc::Sender<Msg>,
-    handles: Vec<thread::JoinHandle<()>>,
+    /// Behind a mutex so a `&self` join can respawn dead workers.
+    handles: Mutex<Vec<thread::JoinHandle<()>>>,
+    /// Target worker count (== handles.len(); cached lock-free for the
+    /// `parallel_for` inline-path decision).
+    threads: usize,
+    /// Receiver end kept for respawning replacement workers.
+    rx: Arc<Mutex<mpsc::Receiver<Msg>>>,
     panicked: Arc<AtomicBool>,
     in_flight: Arc<AtomicUsize>,
+    /// When true, a reported panic is NOT cleared at the join — the pool
+    /// stays poisoned until [`ThreadPool::acknowledge_panic`].
+    sticky_poison: AtomicBool,
     #[cfg(feature = "race-audit")]
     audit: Arc<race_audit::AuditState>,
+}
+
+fn spawn_worker(
+    i: usize,
+    rx: Arc<Mutex<mpsc::Receiver<Msg>>>,
+    panicked: Arc<AtomicBool>,
+    in_flight: Arc<AtomicUsize>,
+) -> thread::JoinHandle<()> {
+    thread::Builder::new()
+        .name(format!("vq4all-worker-{i}"))
+        .spawn(move || loop {
+            let msg = { rx.lock().unwrap().recv() };
+            match msg {
+                Ok(Msg::Run(job)) => {
+                    if catch_unwind(AssertUnwindSafe(job)).is_err() {
+                        panicked.store(true, Ordering::SeqCst);
+                    }
+                    in_flight.fetch_sub(1, Ordering::SeqCst);
+                }
+                Ok(Msg::Stop) | Err(_) => break,
+            }
+        })
+        .expect("spawn worker")
 }
 
 impl ThreadPool {
@@ -55,39 +98,65 @@ impl ThreadPool {
         let in_flight = Arc::new(AtomicUsize::new(0));
         let mut handles = Vec::with_capacity(threads);
         for i in 0..threads {
-            let rx = Arc::clone(&rx);
-            let panicked = Arc::clone(&panicked);
-            let in_flight = Arc::clone(&in_flight);
-            handles.push(
-                thread::Builder::new()
-                    .name(format!("vq4all-worker-{i}"))
-                    .spawn(move || loop {
-                        let msg = { rx.lock().unwrap().recv() };
-                        match msg {
-                            Ok(Msg::Run(job)) => {
-                                if catch_unwind(AssertUnwindSafe(job)).is_err() {
-                                    panicked.store(true, Ordering::SeqCst);
-                                }
-                                in_flight.fetch_sub(1, Ordering::SeqCst);
-                            }
-                            Ok(Msg::Stop) | Err(_) => break,
-                        }
-                    })
-                    .expect("spawn worker"),
-            );
+            handles.push(spawn_worker(
+                i,
+                Arc::clone(&rx),
+                Arc::clone(&panicked),
+                Arc::clone(&in_flight),
+            ));
         }
         ThreadPool {
             tx,
-            handles,
+            handles: Mutex::new(handles),
+            threads,
+            rx,
             panicked,
             in_flight,
+            sticky_poison: AtomicBool::new(false),
             #[cfg(feature = "race-audit")]
             audit: Arc::new(race_audit::AuditState::default()),
         }
     }
 
     pub fn threads(&self) -> usize {
-        self.handles.len()
+        self.threads
+    }
+
+    /// Opt into poisoned-until-acknowledged semantics: after a panic is
+    /// reported, every subsequent join keeps failing until
+    /// [`ThreadPool::acknowledge_panic`] clears the flag.  Off by
+    /// default (the pool recovers at the reporting join).
+    pub fn set_sticky_poison(&self, sticky: bool) {
+        self.sticky_poison.store(sticky, Ordering::SeqCst);
+    }
+
+    /// Clear the poison flag; returns whether it was set.  Only needed
+    /// under [`ThreadPool::set_sticky_poison`] — the default mode clears
+    /// the flag itself when the failing join reports.
+    pub fn acknowledge_panic(&self) -> bool {
+        self.panicked.swap(false, Ordering::SeqCst)
+    }
+
+    /// Join + respawn any worker threads that actually died.  The worker
+    /// loop catches job panics, so in practice workers survive — this
+    /// guards the pathological exits (e.g. a poisoned queue mutex) so a
+    /// recovered pool is guaranteed its full complement of workers.
+    fn respawn_dead_workers(&self) {
+        let mut handles = self.handles.lock().unwrap();
+        for i in 0..handles.len() {
+            if handles[i].is_finished() {
+                let dead = std::mem::replace(
+                    &mut handles[i],
+                    spawn_worker(
+                        i,
+                        Arc::clone(&self.rx),
+                        Arc::clone(&self.panicked),
+                        Arc::clone(&self.in_flight),
+                    ),
+                );
+                let _ = dead.join();
+            }
+        }
     }
 
     /// Enqueue a job.
@@ -96,12 +165,22 @@ impl ThreadPool {
         self.tx.send(Msg::Run(Box::new(f))).expect("pool closed");
     }
 
-    /// Busy-wait (with yields) until all enqueued jobs finished.
+    /// Busy-wait (with yields) until all enqueued jobs finished.  A
+    /// panicked job surfaces as `Err` here; by default the pool then
+    /// recovers (flag cleared, dead workers respawned) so the next run
+    /// starts clean — under sticky poisoning the flag stays set until
+    /// [`ThreadPool::acknowledge_panic`].
     pub fn wait_idle(&self) -> anyhow::Result<()> {
         while self.in_flight.load(Ordering::SeqCst) != 0 {
             thread::yield_now();
         }
-        if self.panicked.load(Ordering::SeqCst) {
+        let poisoned = if self.sticky_poison.load(Ordering::SeqCst) {
+            self.panicked.load(Ordering::SeqCst)
+        } else {
+            self.panicked.swap(false, Ordering::SeqCst)
+        };
+        if poisoned {
+            self.respawn_dead_workers();
             anyhow::bail!("a pool job panicked");
         }
         Ok(())
@@ -139,10 +218,11 @@ impl ThreadPool {
 
 impl Drop for ThreadPool {
     fn drop(&mut self) {
-        for _ in &self.handles {
+        let mut handles = self.handles.lock().unwrap();
+        for _ in handles.iter() {
             let _ = self.tx.send(Msg::Stop);
         }
-        for h in self.handles.drain(..) {
+        for h in handles.drain(..) {
             let _ = h.join();
         }
     }
@@ -161,9 +241,10 @@ impl ThreadPool {
     /// results at every thread count, including the serial `threads = 1`
     /// path.  Every parallelized hot path in `vq::` relies on this.
     ///
-    /// A panicking chunk poisons the pool and surfaces as `Err` from the
-    /// final join instead of hanging (the worker's `catch_unwind` always
-    /// decrements the in-flight count).
+    /// A panicking chunk surfaces as `Err` from the final join instead
+    /// of hanging (the worker's `catch_unwind` always decrements the
+    /// in-flight count); the pool recovers at that join unless sticky
+    /// poisoning is on — see the module docs.
     pub fn parallel_for<F>(&self, n: usize, chunk: usize, f: F) -> anyhow::Result<()>
     where
         F: Fn(usize, usize) + Send + Sync,
@@ -561,8 +642,47 @@ mod tests {
             })
             .unwrap_err();
         assert!(err.to_string().contains("panicked"), "got: {err}");
-        // The pool stays poisoned: later joins keep reporting the failure.
+        // Recovery: the failure is reported exactly once, then the pool
+        // is clean — the next run succeeds and actually does its work.
+        let ran = AtomicU64::new(0);
+        pool.parallel_for(8, 4, |_, _| {
+            ran.fetch_add(1, Ordering::SeqCst);
+        })
+        .unwrap();
+        assert_eq!(ran.load(Ordering::SeqCst), 2, "recovered pool runs all chunks");
+        assert_eq!(pool.threads(), 3, "full worker complement after recovery");
+    }
+
+    #[test]
+    fn sticky_poison_holds_until_acknowledged() {
+        let pool = ThreadPool::new(2);
+        pool.set_sticky_poison(true);
+        assert!(pool
+            .parallel_for(8, 2, |s, _| {
+                if s == 2 {
+                    panic!("sticky bomb");
+                }
+            })
+            .is_err());
+        // Sticky mode: later joins keep reporting the old failure.
         assert!(pool.parallel_for(4, 4, |_, _| {}).is_err());
+        assert!(pool.acknowledge_panic(), "flag was set");
+        assert!(!pool.acknowledge_panic(), "ack clears it");
+        pool.parallel_for(4, 4, |_, _| {}).unwrap();
+    }
+
+    #[test]
+    fn execute_after_recovered_panic_runs() {
+        let pool = ThreadPool::new(2);
+        pool.execute(|| panic!("boom"));
+        assert!(pool.wait_idle().is_err());
+        let c = Arc::new(AtomicU64::new(0));
+        let c2 = Arc::clone(&c);
+        pool.execute(move || {
+            c2.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.wait_idle().unwrap();
+        assert_eq!(c.load(Ordering::SeqCst), 1);
     }
 
     #[test]

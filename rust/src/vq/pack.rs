@@ -317,9 +317,35 @@ pub fn unpack_one(p: &PackedCodes, i: usize) -> u32 {
     ((w >> (bitpos & 7)) & mask) as u32
 }
 
+/// FNV-1a, 64-bit — the repo-native integrity hash for packed code
+/// streams.  Dependency-free, byte-order independent (the caller feeds
+/// little-endian encodings), and fast enough to verify a hosted net's
+/// streams on demand.
+fn fnv1a64(seed: u64, bytes: &[u8]) -> u64 {
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01B3;
+    let mut h = seed;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a offset basis (the standard 64-bit seed).
+const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+
 impl PackedCodes {
     pub fn bytes(&self) -> usize {
         self.data.len()
+    }
+
+    /// Integrity checksum of this stream: FNV-1a over the width, the
+    /// code count, and every packed byte (all little-endian), so a
+    /// flipped bit anywhere — header or payload — changes the sum.
+    pub fn checksum(&self) -> u64 {
+        let h = fnv1a64(FNV_OFFSET, &self.bits.to_le_bytes());
+        let h = fnv1a64(h, &(self.count as u64).to_le_bytes());
+        fnv1a64(h, &self.data)
     }
 }
 
@@ -370,6 +396,14 @@ impl StagedCodes {
         &self.stages[s]
     }
 
+    /// Mutable per-stage access — the chaos-suite corruption hook
+    /// (`Shard::corrupt_net_byte`), compiled only under `fault-inject`
+    /// so the default API keeps the streams immutable after packing.
+    #[cfg(feature = "fault-inject")]
+    pub fn stage_mut(&mut self, s: usize) -> &mut PackedCodes {
+        &mut self.stages[s]
+    }
+
     /// All per-stage streams, stage-major.
     pub fn stage_streams(&self) -> &[PackedCodes] {
         &self.stages
@@ -390,6 +424,35 @@ impl StagedCodes {
     /// axis of the stages sweep.
     pub fn total_bits(&self) -> u32 {
         self.stages.iter().map(|p| p.bits).sum()
+    }
+
+    /// Per-stage integrity checksums ([`PackedCodes::checksum`], stage
+    /// order).  Stamped into artifact manifests at pack time and into
+    /// the serving plane at hosting time; re-verified on demand by
+    /// [`StagedCodes::verify_checksums`] / `Engine::verify_hosted`.
+    pub fn checksums(&self) -> Vec<u64> {
+        self.stages.iter().map(|p| p.checksum()).collect()
+    }
+
+    /// Recompute every stage's checksum and compare against `expected`
+    /// (stage order).  A mismatch names the stage and both sums — the
+    /// caller quarantines the net instead of serving garbage.
+    pub fn verify_checksums(&self, expected: &[u64]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            expected.len() == self.stages.len(),
+            "checksum count {} != {} stages",
+            expected.len(),
+            self.stages.len()
+        );
+        for (s, (p, &want)) in self.stages.iter().zip(expected).enumerate() {
+            let got = p.checksum();
+            anyhow::ensure!(
+                got == want,
+                "stage {s} checksum mismatch: stream {got:#018x} != expected {want:#018x} \
+                 (corrupted packed bytes)"
+            );
+        }
+        Ok(())
     }
 }
 
@@ -634,6 +697,48 @@ mod tests {
     #[should_panic(expected = "count mismatch")]
     fn staged_rejects_mismatched_counts() {
         StagedCodes::new(vec![pack_codes(&[1u32, 2], 3), pack_codes(&[1u32], 3)]);
+    }
+
+    #[test]
+    fn checksum_detects_any_corruption() {
+        let codes = vec![3u32, 1, 4, 1, 5, 9, 2, 6];
+        let p = pack_codes(&codes, 5);
+        let base = p.checksum();
+        assert_eq!(p.checksum(), base, "checksum is deterministic");
+        // Every single-bit flip in the payload changes the sum.
+        for byte in 0..p.data.len() {
+            for bit in 0..8 {
+                let mut bad = p.clone();
+                bad.data[byte] ^= 1 << bit;
+                assert_ne!(bad.checksum(), base, "flip at {byte}:{bit} undetected");
+            }
+        }
+        // Header fields are covered too.
+        let mut bad = p.clone();
+        bad.bits = 6;
+        assert_ne!(bad.checksum(), base);
+        let mut bad = p.clone();
+        bad.count = 7;
+        assert_ne!(bad.checksum(), base);
+    }
+
+    #[test]
+    fn staged_checksums_verify_and_name_the_bad_stage() {
+        let s0 = pack_codes(&[1u32, 2, 3], 5);
+        let s1 = pack_codes(&[0u32, 1, 0], 2);
+        let staged = StagedCodes::new(vec![s0, s1]);
+        let sums = staged.checksums();
+        assert_eq!(sums.len(), 2);
+        staged.verify_checksums(&sums).unwrap();
+        // Wrong stage-1 sum is caught and attributed.
+        let mut bad = sums.clone();
+        bad[1] ^= 1;
+        let err = staged.verify_checksums(&bad).unwrap_err().to_string();
+        assert!(err.contains("stage 1"), "got: {err}");
+        assert!(err.contains("mismatch"), "got: {err}");
+        // Wrong cardinality is caught before any comparison.
+        let err = staged.verify_checksums(&sums[..1]).unwrap_err().to_string();
+        assert!(err.contains("checksum count"), "got: {err}");
     }
 
     #[test]

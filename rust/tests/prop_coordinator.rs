@@ -197,6 +197,7 @@ fn batch_form_preserves_requests_and_pads_with_real_rows() {
                 net: "x".into(),
                 row: g.usize_in(0, 99),
                 arrived_ns: i as u64,
+                deadline_ns: 0,
             })
             .collect();
         let rows: Vec<usize> = reqs.iter().map(|r| r.row).collect();

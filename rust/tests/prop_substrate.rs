@@ -680,6 +680,7 @@ fn batched_packed_decode_parallel_identical_and_rows_correct() {
                 net: "n".into(),
                 row: g.usize_in(0, device_rows - 1),
                 arrived_ns: 0,
+                deadline_ns: 0,
             })
             .collect();
         let batch = Batch::form("n", reqs, device_rows);
@@ -1224,6 +1225,7 @@ fn decode_cache_any_interleaving_bit_identical_to_fresh_decode() {
                     net: "n".into(),
                     row: r,
                     arrived_ns: 0,
+                    deadline_ns: 0,
                 })
                 .collect();
             let batch = Batch::form("n", reqs, nrows);
@@ -1511,4 +1513,268 @@ fn race_audit_detector_is_armed() {
         })
         .unwrap_err();
     assert!(err.to_string().contains("race-audit"), "got: {err}");
+}
+
+/// Chaos conservation (the fault-plane tentpole property): under an
+/// *arbitrary* seeded fault plan — decode panics, corrupt windows,
+/// slow-ops, shard wedges at any rates — and arbitrary deadlines, the
+/// extended identity `accepted == dispatched + shed + expired + failed`
+/// holds engine-wide and per net once drained; a pooled plane stays
+/// bit-identical to a serial one (same admissions, same ledgers, same
+/// cache counters, same flight-recorder event sequence, same firing
+/// schedule); and replaying the same seed + plan reproduces the run
+/// exactly.  ShardWedge is capped below always-fire so the 64-round
+/// wedge tolerance in `Engine::drain` can never trip by construction.
+#[cfg(feature = "fault-inject")]
+#[test]
+fn chaos_conservation_holds_and_replays_bit_identically() {
+    use vq4all::serving::engine::EngineTotals;
+    use vq4all::serving::faults::{FaultPlan, FaultSite, ALL_SITES};
+    let pool = ThreadPool::new(4);
+    proptest(|g| {
+        let nnets = g.usize_in(1, 4);
+        let shards = g.usize_in(1, 3);
+        let d = [1usize, 2][g.usize_in(0, 1)];
+        let k = g.usize_in(2, 8);
+        let cb = Arc::new(Codebook::new(k, d, g.vec_normal((k * d)..=(k * d))));
+        let bits = (usize::BITS - (k - 1).leading_zeros()).max(1);
+        let mut nets = Vec::new();
+        for i in 0..nnets {
+            let cpr = g.usize_in(1, 4);
+            let rows = g.usize_in(1, 8);
+            let codes: Vec<u32> = (0..rows * cpr).map(|_| g.u32_below(k as u32)).collect();
+            nets.push(HostedNet {
+                name: format!("n{i}"),
+                codes: StagedCodes::single(pack_codes(&codes, bits)),
+                codebook: cb.clone(),
+                codes_per_row: cpr,
+                device_batch: g.usize_in(1, 4),
+            });
+        }
+        let cfg = EngineConfig {
+            shards,
+            cache_bytes: [0, g.usize_in(64, 4096)][g.usize_in(0, 1)],
+            max_queue_depth: g.usize_in(0, 4),
+            batcher: BatcherConfig {
+                max_batch: g.usize_in(1, 4),
+                max_linger_ns: 10,
+            },
+            obs: Default::default(),
+        };
+        let mut plan = FaultPlan::new(g.usize_in(0, 1 << 30) as u64);
+        for site in ALL_SITES {
+            let r = g.usize_in(0, 1000) as u16;
+            let r = if site == FaultSite::ShardWedge { r.min(500) } else { r };
+            plan = plan.with_rate(site, r);
+        }
+        // Pre-recorded schedule so the exact scenario replays:
+        // (net, row, deadline, dispatch-after?).  Deadline 0 = none, a
+        // tiny one lapses before any fire, a huge one never lapses.
+        let total = g.usize_in(1, 60);
+        let mut sched = Vec::with_capacity(total);
+        for _ in 0..total {
+            let i = g.usize_in(0, nnets - 1);
+            let srows = nets[i].codes.count() / nets[i].codes_per_row;
+            let row = g.usize_in(0, srows - 1);
+            let deadline = [0u64, g.usize_in(1, 40) as u64, 1 << 40][g.usize_in(0, 2)];
+            sched.push((i, row, deadline, g.bool()));
+        }
+        type PerNet = Vec<(String, [u64; 5])>;
+        let run = |pool: Option<&ThreadPool>| -> Result<(String, EngineTotals, PerNet), String> {
+            let mut eng = Engine::new(cfg, nets.clone()).map_err(|e| e.to_string())?;
+            eng.arm_faults(&plan);
+            let mut log = String::new();
+            for &(i, row, deadline, disp) in &sched {
+                // Quarantines turn later submissions into errors — part
+                // of the fingerprint, so serial/pooled/replay must agree
+                // on exactly which offers were refused.
+                match eng.try_submit_deadline(&format!("n{i}"), row, deadline) {
+                    Ok(a) => log.push_str(&format!("{a:?};")),
+                    Err(e) => log.push_str(&format!("E({e});")),
+                }
+                if disp {
+                    eng.tick(50);
+                    let n = eng.dispatch_round(pool).map_err(|e| e.to_string())?;
+                    log.push_str(&format!("d{n};"));
+                }
+            }
+            let drained = eng.drain(pool).map_err(|e| e.to_string())?;
+            let mut fired = Vec::new();
+            for s in eng.shards() {
+                for site in ALL_SITES {
+                    fired.push(s.faults.as_ref().map(|p| p.fired(site)).unwrap_or(0));
+                }
+            }
+            let mut per_net: PerNet = Vec::new();
+            for i in 0..nnets {
+                let name = format!("n{i}");
+                let mut sums = [0u64; 5];
+                for s in eng.shards() {
+                    if let Some(l) = s.stats.by_net.get(&name) {
+                        sums[0] += l.accepted;
+                        sums[1] += l.served;
+                        sums[2] += l.shed;
+                        sums[3] += l.expired;
+                        sums[4] += l.failed;
+                    }
+                }
+                per_net.push((name, sums));
+            }
+            let fingerprint = format!(
+                "{log}|drained={drained}|totals={:?}|cache={:?}|events={:?}|fired={fired:?}",
+                eng.totals(),
+                eng.cache_stats(),
+                eng.trace_events(),
+            );
+            Ok((fingerprint, eng.totals(), per_net))
+        };
+        let (fp_serial, t, per_net) = run(None)?;
+        let (fp_pooled, _, _) = run(Some(&pool))?;
+        let (fp_replay, _, _) = run(Some(&pool))?;
+        // (a) pooled bit-identical to serial under the same armed plan.
+        prop_assert_eq!(fp_serial.clone(), fp_pooled);
+        // (b) same seed + plan => the run replays exactly (ledgers,
+        // events, firing schedule).
+        prop_assert_eq!(fp_serial, fp_replay);
+        // (c) extended conservation, engine-wide and per net, with no
+        // request left queued.
+        prop_assert!(
+            t.accepted == t.served + t.shed + t.expired + t.failed,
+            "extended conservation violated: {t:?}"
+        );
+        for (name, s) in &per_net {
+            prop_assert!(
+                s[0] == s[1] + s[2] + s[3] + s[4],
+                "{name}: per-net conservation violated: {s:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+/// Code-stream integrity + quarantine lifecycle (fault-plane tentpole):
+/// flipping any single bit of any hosted net's packed stage is always
+/// caught by `Engine::verify_hosted`, which quarantines exactly the
+/// corrupted net — its rows are never served again (admission refuses,
+/// every decode entry point refuses) while sibling nets keep serving.
+/// A decode panic quarantines the whole owning shard (queued work failed
+/// with structured errors, conservation intact) and
+/// `Engine::revive_shard` restores service — but never un-quarantines a
+/// net whose stream is still corrupt.
+#[cfg(feature = "fault-inject")]
+#[test]
+fn chaos_corruption_always_caught_and_quarantine_never_serves() {
+    use vq4all::serving::faults::{FaultPlan, FaultSite};
+    let pool = ThreadPool::new(2);
+    proptest(|g| {
+        let nnets = g.usize_in(2, 4);
+        let shards = g.usize_in(1, 3);
+        let d = [1usize, 2][g.usize_in(0, 1)];
+        let k = g.usize_in(2, 8);
+        let cb = Arc::new(Codebook::new(k, d, g.vec_normal((k * d)..=(k * d))));
+        let bits = (usize::BITS - (k - 1).leading_zeros()).max(1);
+        let mut nets = Vec::new();
+        for i in 0..nnets {
+            let cpr = g.usize_in(1, 4);
+            let rows = g.usize_in(1, 8);
+            let codes: Vec<u32> = (0..rows * cpr).map(|_| g.u32_below(k as u32)).collect();
+            nets.push(HostedNet {
+                name: format!("n{i}"),
+                codes: StagedCodes::single(pack_codes(&codes, bits)),
+                codebook: cb.clone(),
+                codes_per_row: cpr,
+                device_batch: g.usize_in(1, 4),
+            });
+        }
+        let cfg = EngineConfig {
+            shards,
+            cache_bytes: 1 << 16,
+            max_queue_depth: 0,
+            batcher: BatcherConfig {
+                max_batch: g.usize_in(1, 4),
+                max_linger_ns: 10,
+            },
+            obs: Default::default(),
+        };
+        let mut eng = Engine::new(cfg, nets.clone()).map_err(|e| e.to_string())?;
+        // Pristine streams re-verify clean against the hosting-time sums.
+        eng.verify_hosted().map_err(|e| e.to_string())?;
+
+        // Flip one arbitrary bit of one arbitrary net's packed stage.
+        let victim = g.usize_in(0, nnets - 1);
+        let vname = format!("n{victim}");
+        let vshard = eng
+            .shards()
+            .iter()
+            .position(|s| s.hosts(&vname))
+            .expect("hosted net has a shard");
+        let nbytes = nets[victim].codes.stage(0).data.len();
+        let byte = g.usize_in(0, nbytes - 1);
+        prop_assert!(
+            eng.shards_mut()[vshard].corrupt_net_byte(&vname, 0, byte),
+            "corrupt_net_byte missed {vname} byte {byte}"
+        );
+
+        // Re-verification always catches it and names the net.
+        let err = eng.verify_hosted().unwrap_err().to_string();
+        prop_assert!(
+            err.contains(&vname),
+            "verify_hosted error {err:?} does not name {vname}"
+        );
+        prop_assert!(eng.quarantined(&vname), "corrupted net not quarantined");
+        // The quarantined net never serves a row: admission refuses ...
+        prop_assert!(
+            eng.try_submit(&vname, 0).is_err(),
+            "quarantined net accepted a request"
+        );
+        // ... and so does the raw decode plane.
+        let stride = nets[victim].codes_per_row * d;
+        let mut buf = vec![0.0f32; stride];
+        let derr = eng.shards_mut()[vshard]
+            .decode_rows_into(&vname, &[0], &mut buf, None)
+            .unwrap_err()
+            .to_string();
+        prop_assert!(derr.contains("quarantined"), "decode refused without naming quarantine: {derr}");
+        // Sibling nets keep serving through the same plane.
+        for i in 0..nnets {
+            if i != victim {
+                eng.submit(&format!("n{i}"), 0).map_err(|e| e.to_string())?;
+            }
+        }
+        eng.drain(Some(&pool)).map_err(|e| e.to_string())?;
+
+        // A decode panic takes the whole owning shard down ...
+        let healthy = (0..nnets)
+            .map(|i| format!("n{i}"))
+            .find(|n| !eng.quarantined(n))
+            .expect("nnets >= 2 leaves a healthy net");
+        let hshard = eng
+            .shards()
+            .iter()
+            .position(|s| s.hosts(&healthy))
+            .expect("hosted net has a shard");
+        eng.arm_faults(&FaultPlan::new(g.usize_in(0, 1000) as u64).with_rate(FaultSite::DecodePanic, 1000));
+        eng.submit(&healthy, 0).map_err(|e| e.to_string())?;
+        eng.tick(1_000);
+        eng.dispatch_round(Some(&pool)).map_err(|e| e.to_string())?;
+        prop_assert!(eng.shards()[hshard].is_quarantined(), "panicked shard not quarantined");
+        prop_assert!(
+            eng.try_submit(&healthy, 0).is_err(),
+            "quarantined shard accepted a request"
+        );
+        let t = eng.totals();
+        prop_assert!(
+            t.accepted == t.served + t.shed + t.expired + t.failed && t.failed > 0,
+            "conservation through quarantine violated: {t:?}"
+        );
+
+        // ... and revival restores the shard, but never the corrupt net.
+        eng.disarm_faults();
+        eng.revive_shard(hshard).map_err(|e| e.to_string())?;
+        eng.submit(&healthy, 0).map_err(|e| e.to_string())?;
+        let served = eng.drain(Some(&pool)).map_err(|e| e.to_string())?;
+        prop_assert!(served >= 1, "revived shard served nothing");
+        prop_assert!(eng.quarantined(&vname), "revive must not clear an integrity quarantine");
+        Ok(())
+    });
 }

@@ -42,8 +42,10 @@
 #     with no vector arm, so the row can never silently vanish)
 #   * the engine summary must exist with cache hit_rate > 0,
 #     engine_cache >= 1.0x (warm never slower than cold, any thread
-#     count), admission conservation
-#     (admission_accepted == admission_dispatched + admission_shed > 0),
+#     count), extended admission conservation
+#     (admission_accepted == admission_dispatched + admission_shed
+#      + admission_expired + admission_failed, with shed > 0 and the
+#      expired/failed terms zero in the fault-free bench),
 #     and absolute throughput keys rows_per_sec / codes_per_sec > 0
 #   * the obs_overhead row (uninstrumented vs instrumented warm
 #     stream_batch, single-threaded so the generic rule skips it) must
@@ -52,6 +54,10 @@
 #     reconcile (obs_queue_count == admission_dispatched, obs_events
 #     > 0 with obs_events_dropped reported, obs_decode_hidden_ratio
 #     present)
+#   * the faults_overhead row (fault plan disarmed vs armed at rate 0,
+#     single-threaded) must exist and hold >= 0.95x — the injection
+#     probes and deadline checks threaded through the dispatch path may
+#     cost at most 5% of warm stream_batch throughput
 #   * --check-json additionally FAILS if the fresh report lost any
 #     comparison row or engine-summary key the committed baseline lists
 # Exit-code contract (the PR-4 bugfix): once the bench has PASSed, the
@@ -232,7 +238,7 @@ EOF
     # per dispatched request) and the bounded run must have recorded
     # its sheds on the flight recorder (obs_events > 0).
     echo
-    echo "== engine + kernel smoke: decode cache + shards + admission + specialized kernels + obs =="
+    echo "== engine + kernel smoke: decode cache + shards + admission + specialized kernels + obs + faults =="
     if VQ4ALL_GATE_JSON="$bench_json" python3 - <<'EOF'
 import json, os, sys
 doc = json.load(open(os.environ["VQ4ALL_GATE_JSON"]))
@@ -252,16 +258,22 @@ else:
     acc = eng.get("admission_accepted")
     disp = eng.get("admission_dispatched")
     shed = eng.get("admission_shed")
-    if acc is None or disp is None or shed is None:
-        print("  REGRESSION admission counters missing from the engine summary")
+    exp = eng.get("admission_expired")
+    flr = eng.get("admission_failed")
+    if acc is None or disp is None or shed is None or exp is None or flr is None:
+        print("  REGRESSION admission counters missing from the engine summary "
+              "(accepted/dispatched/shed/expired/failed must all be present)")
         bad = True
     else:
-        conserves = int(acc) == int(disp) + int(shed)
+        conserves = int(acc) == int(disp) + int(shed) + int(exp) + int(flr)
         nonzero = int(shed) > 0
-        tag = "ok" if (conserves and nonzero) else "REGRESSION"
-        bad = bad or not (conserves and nonzero)
+        clean = int(exp) == 0 and int(flr) == 0
+        tag = "ok" if (conserves and nonzero and clean) else "REGRESSION"
+        bad = bad or not (conserves and nonzero and clean)
         print(f"  {tag:<10} admission {int(acc)} accepted == {int(disp)} dispatched "
-              f"+ {int(shed)} shed (conservation; bounded run must shed)")
+              f"+ {int(shed)} shed + {int(exp)} expired + {int(flr)} failed "
+              "(extended conservation; bounded run must shed; fault-free bench "
+              "must not expire or fail)")
     for key in ("rows_per_sec", "codes_per_sec"):
         v = eng.get(key)
         if v is None or v <= 0:
@@ -327,6 +339,16 @@ else:
     bad = bad or not ok
     print(f"  {tag:<10} {'obs_overhead':<22} obs-off/obs-on {c['speedup']:.2f}x "
           "(instrumentation may cost at most 5% of warm stream_batch)")
+c = comps.get("faults_overhead")
+if c is None:
+    print("  REGRESSION comparison row 'faults_overhead' missing")
+    bad = True
+else:
+    ok = c["speedup"] >= 0.95
+    tag = "ok" if ok else "REGRESSION"
+    bad = bad or not ok
+    print(f"  {tag:<10} {'faults_overhead':<22} disarmed/armed-at-0 {c['speedup']:.2f}x "
+          "(fault probes + deadline checks may cost at most 5% of warm stream_batch)")
 sys.exit(1 if bad else 0)
 EOF
     then engine_status=PASS; else engine_status=FAIL; fi
@@ -372,7 +394,7 @@ echo
 echo "== summary (mode: $mode; tier-1 last) =="
 echo "  perf smoke (hotpath bench):   $bench_status"
 echo "  speedup >= 1.0x gate:         $speedup_status"
-echo "  engine+kernel smoke (cache+shards+admission+specialized+obs): $engine_status"
+echo "  engine+kernel smoke (cache+shards+admission+specialized+obs+faults): $engine_status"
 echo "  check-json baseline diff:     $diff_status"
 echo "  tier-1: cargo build:          $build_status"
 echo "  tier-1: cargo test:           $test_status"
